@@ -1,0 +1,51 @@
+//! Method-comparison example (Table 3 in miniature): train every 4-bit
+//! method for a fixed small budget with identical data/seed and print the
+//! resulting losses side by side — the quickest way to see Quartet's
+//! ordering emerge without the full sweep.
+//!
+//! ```bash
+//! cargo run --release --example method_comparison [steps]
+//! ```
+
+use quartet::bench::artifacts_root;
+use quartet::coordinator::trainer::{train_artifact, TrainOptions};
+
+const METHODS: [&str; 5] = ["bf16", "fp8", "quartet", "luq_int4", "halo_fp4"];
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(96);
+    let root = artifacts_root();
+    println!("training n20k-* for {steps} steps each (identical seed/data)\n");
+
+    let mut rows = Vec::new();
+    for m in METHODS {
+        let name = format!("n20k-{m}");
+        if !root.join(&name).join("manifest.json").exists() {
+            println!("{name}: artifact missing (build with `python -m compile.aot --set table3`)");
+            continue;
+        }
+        let rec = train_artifact(
+            &root,
+            &name,
+            TrainOptions { steps, seed: 0, log_every: steps, ..TrainOptions::default() },
+        )?;
+        println!(
+            "{:<14} val loss {:.4}{}",
+            m,
+            rec.final_val_loss,
+            if rec.diverged { "  [DIVERGED]" } else { "" }
+        );
+        rows.push((m, rec.final_val_loss, rec.diverged));
+    }
+
+    if let (Some(q), Some(b)) = (
+        rows.iter().find(|r| r.0 == "quartet"),
+        rows.iter().find(|r| r.0 == "bf16"),
+    ) {
+        println!(
+            "\nquartet-vs-bf16 gap: {:+.4} (paper: small; baselines degrade much more)",
+            q.1 - b.1
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): pre-train the
+//! largest default model with Quartet for several hundred steps on the
+//! synthetic corpus, log the loss curve, validate, and compare against
+//! an FP8 twin trained with identical data/seed — the Fig 3(c) protocol
+//! at testbed scale.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pretrain_e2e [steps]
+//! ```
+
+use quartet::coordinator::trainer::{train_artifact, TrainOptions};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let root = quartet::bench::artifacts_root();
+
+    let mut records = Vec::new();
+    for name in ["n80k-quartet", "n80k-fp8"] {
+        println!("== pretraining {name} for {steps} steps ==");
+        let opts = TrainOptions {
+            steps,
+            eval_every: (steps / 4).max(1),
+            eval_batches: 8,
+            log_every: (steps / 16).max(1),
+            verbose: true,
+            ..TrainOptions::default()
+        };
+        let rec = train_artifact(&root, name, opts)?;
+        println!(
+            "{name}: final val loss {:.4}, {:.0} tok/s, wall {:.1}s",
+            rec.final_val_loss, rec.tokens_per_sec, rec.wall_secs
+        );
+        records.push(rec);
+    }
+
+    println!("\n== loss curves (train) ==");
+    println!("{:>8} {:>12} {:>12}", "step", "quartet", "fp8");
+    let (q, f) = (&records[0], &records[1]);
+    for (i, (s, lq)) in q.train_curve.iter().enumerate() {
+        let lf = f.train_curve.get(i).map(|p| p.1).unwrap_or(f64::NAN);
+        println!("{s:>8} {lq:>12.4} {lf:>12.4}");
+    }
+
+    let gap = q.final_val_loss - f.final_val_loss;
+    println!("\nquartet-vs-fp8 validation gap: {gap:+.4} (paper Fig 3c: small, stable)");
+    anyhow::ensure!(!q.diverged && !f.diverged, "a run diverged");
+    anyhow::ensure!(gap < 0.35, "quartet gap vs fp8 too large: {gap}");
+
+    // persist for EXPERIMENTS.md / fig3c bench
+    let out = quartet::bench::runs_root().join("e2e");
+    for r in &records {
+        let p = r.save(&out)?;
+        println!("record: {}", p.display());
+    }
+    Ok(())
+}

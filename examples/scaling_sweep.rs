@@ -1,0 +1,37 @@
+//! Scaling-law workflow example: run (or reuse) a small training grid,
+//! fit the precision scaling law, and print per-method efficiencies —
+//! Ingredient 1 end to end on the testbed.
+//!
+//! ```bash
+//! cargo run --release --example scaling_sweep [preset]   # default: reduced
+//! ```
+
+use quartet::bench::{artifacts_root, runs_root};
+use quartet::coordinator::sweep::{run_sweep, sweep_presets};
+use quartet::scaling::fit::{fit_base_law, fit_efficiencies, FitOptions};
+use quartet::scaling::law::Run;
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::args().nth(1).unwrap_or_else(|| "reduced".into());
+    let jobs = sweep_presets(&preset)?;
+    println!("sweep preset {preset:?}: {} jobs (cached runs are reused)", jobs.len());
+    let recs = run_sweep(&artifacts_root(), &runs_root(), &jobs, 6000, true)?;
+
+    let runs: Vec<Run> = recs.iter().filter(|r| !r.diverged).map(|r| r.to_fit_run()).collect();
+    let base: Vec<Run> = runs.iter().filter(|r| r.method == "bf16").cloned().collect();
+    anyhow::ensure!(base.len() >= 4, "need ≥4 bf16 baseline runs, got {}", base.len());
+
+    let (law, obj) = fit_base_law(&base, &FitOptions::default());
+    println!("\nstage-1 base law (Huber obj {obj:.3e}):");
+    println!("  A={:.3e} α={:.3}  B={:.3e} β={:.3}  E={:.3}  γ={:.3}",
+             law.a, law.alpha, law.b, law.beta, law.e, law.gamma);
+
+    let eff = fit_efficiencies(&law, &runs, &FitOptions::default());
+    println!("\nstage-2 efficiencies (paper Table 3: quartet 0.64/0.94):");
+    println!("{:<12} {:>8} {:>8} {:>6}", "method", "eff_N", "eff_D", "runs");
+    for (m, e) in &eff {
+        let n = runs.iter().filter(|r| &r.method == m).count();
+        println!("{:<12} {:>8.3} {:>8.3} {:>6}", m, e.eff_n, e.eff_d, n);
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Serving example: batched prefill through a Quartet `forward` artifact
+//! — the Fig 6 workload. Reports per-batch latency and throughput while
+//! draining a bursty queue (the dynamic-batching behaviour of the
+//! engine: full batches while the queue is deep, a padded tail batch).
+//!
+//! ```bash
+//! cargo run --release --example serve_prefill [n_requests]
+//! ```
+
+use quartet::runtime::engine::Engine;
+use quartet::serve::{PrefillEngine, Request};
+use quartet::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let root = quartet::bench::artifacts_root();
+    let engine = Engine::cpu()?;
+    // prefer the serve-set artifact; fall back to the quickstart model
+    let art = engine
+        .load_named(&root, "n330k-quartet")
+        .or_else(|_| engine.load_named(&root, "n80k-quartet"))?;
+    println!(
+        "serving {} ({} params, batch={}, seq={})",
+        art.manifest.name,
+        art.manifest.non_embedding_params,
+        art.manifest.entrypoint("forward")?.inputs[0].shape[0],
+        art.manifest.model.seq_len
+    );
+
+    let mut eng = PrefillEngine::new(&art, 0)?;
+    let mut rng = Rng::new(42);
+    let vocab = art.manifest.model.vocab;
+    for id in 0..n_requests as u64 {
+        let tokens: Vec<i32> = (0..eng.seq).map(|_| rng.below(vocab) as i32).collect();
+        eng.submit(Request { id, tokens });
+    }
+
+    println!("\n{:>8} {:>10} {:>14} {:>14}", "batch#", "size", "latency", "tok/s");
+    let mut i = 0;
+    let mut total_tokens = 0usize;
+    let t0 = std::time::Instant::now();
+    while eng.pending() > 0 {
+        let done = eng.step()?;
+        let lat = done[0].batch_latency_s;
+        let size = done[0].batch_size;
+        total_tokens += size * eng.seq;
+        println!(
+            "{:>8} {:>10} {:>12.2}ms {:>14.0}",
+            i, size, lat * 1e3,
+            (size * eng.seq) as f64 / lat
+        );
+        i += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\nserved {n_requests} requests in {wall:.2}s — {:.0} prefill tokens/s end-to-end",
+        total_tokens as f64 / wall
+    );
+    println!("(Fig 6 sweeps compiled batch sizes 1..128; build with `--set serve`)");
+    Ok(())
+}

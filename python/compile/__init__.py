@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Never imported at runtime — the rust coordinator only consumes the HLO
+text + manifest.json artifacts this package emits.
+"""

@@ -1,0 +1,326 @@
+"""AOT lowering: JAX entrypoints → HLO *text* + manifest.json (build time).
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos or ``.serialize()`` —
+is the interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 rust crate links) rejects; the text parser reassigns ids and
+round-trips cleanly.
+
+One artifact directory per (model config, method):
+
+    artifacts/<cfg>-<method>/
+        manifest.json          # config, flat param table, entrypoint sigs
+        train_step.hlo.txt     # 1 optimizer step
+        train_segment.hlo.txt  # K steps under one PJRT call (fori_loop)
+        eval_loss.hlo.txt      # validation loss on one batch
+        forward.hlo.txt        # prefill logits (serving)
+
+Artifact *sets* group what the rust experiments need:
+  default  — quickstart (n80k-quartet, n80k-fp8, n80k-bf16) + n20k smokes
+             + the pallas-lowered variant (kernel-composition proof)
+  table3   — all Table 3 methods at nano scale
+  sweep    — the scaling-law model-size grid (quartet/fp8/bf16 + ablations)
+  serve    — forward-only artifacts at batch 1..128 for Fig 6
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .formats import QUEST_ALPHA_E2M1
+from .model import (
+    ModelConfig,
+    eval_loss,
+    forward,
+    param_shapes,
+    train_segment,
+    train_step,
+)
+
+# ---------------------------------------------------------------------------
+# model-size registry (nano series; see EXPERIMENTS.md for the mapping to the
+# paper's 30M–200M grid — the scaling-law machinery is scale-free)
+# ---------------------------------------------------------------------------
+
+SIZES = {
+    #        d_model layers heads d_ff   ~non-emb params
+    "n20k": (32, 2, 2, 64),  #      20.6k
+    "n40k": (32, 4, 2, 64),  #      41.2k
+    "n80k": (64, 2, 2, 128),  #     82.2k
+    "n160k": (64, 4, 2, 128),  #   164.2k
+    "n330k": (96, 4, 3, 192),  #   369.8k
+    "n1m": (128, 6, 4, 256),  #    984.6k
+    "n8m": (320, 8, 5, 640),  #    8.20M  ("large" run, Fig 3c)
+}
+
+VOCAB = 512
+SEQ_LEN = 64
+BATCH = 8
+SEGMENT_K = 8
+
+
+def base_lr(n_nonemb: int) -> float:
+    """Paper A.1 scales LR inverse-proportionally to non-embedding params
+    from a tuned small-model anchor; we anchor 2e-3 at 20k params with
+    sqrt scaling (tuned on the unquantized nano baseline, then reused for
+    every quantization scheme — same protocol as the paper)."""
+    return float(2e-3 * np.sqrt(20_480.0 / n_nonemb))
+
+
+def make_config(size: str, method: str, batch: int = BATCH,
+                seq_len: int = SEQ_LEN, vocab: int = VOCAB) -> ModelConfig:
+    d, layers, heads, ff = SIZES[size]
+    cfg = ModelConfig(
+        name=size, d_model=d, n_layers=layers, n_heads=heads, d_ff=ff,
+        vocab=vocab, seq_len=seq_len, batch=batch, method=method,
+    )
+    return dataclasses.replace(cfg, lr=base_lr(cfg.non_embedding_params()))
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _flat_state_specs(cfg: ModelConfig):
+    """Flattened (params ‖ m ‖ v) input/output table, sorted-name order."""
+    shapes = param_shapes(cfg)
+    out = []
+    for group in ("param", "m", "v"):
+        for name, shape in shapes.items():
+            out.append({"name": f"{group}:{name}", **_spec(shape)})
+    return out
+
+
+def _state_structs(cfg: ModelConfig):
+    shapes = param_shapes(cfg)
+    one = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes.values()]
+    return one * 3  # params, m, v
+
+
+def _pack(cfg: ModelConfig, flat):
+    """flat list (params‖m‖v) → three name→array dicts."""
+    names = list(param_shapes(cfg).keys())
+    n = len(names)
+    params = dict(zip(names, flat[:n]))
+    m = dict(zip(names, flat[n : 2 * n]))
+    v = dict(zip(names, flat[2 * n :]))
+    return params, m, v
+
+
+def _unpack(cfg: ModelConfig, params, m, v):
+    names = list(param_shapes(cfg).keys())
+    return [params[k] for k in names] + [m[k] for k in names] + [v[k] for k in names]
+
+
+def lower_artifact(cfg: ModelConfig, out_dir: str, segment_k: int = SEGMENT_K,
+                   entrypoints=("train_step", "train_segment", "eval_loss", "forward"),
+                   forward_batch: int | None = None, quiet: bool = False,
+                   suffix: str = ""):
+    """Lower all entrypoints for one (config, method) and write the manifest."""
+    name = f"{cfg.name}-{cfg.method}{suffix}"
+    adir = os.path.join(out_dir, name)
+    os.makedirs(adir, exist_ok=True)
+
+    B, S, K = cfg.batch, cfg.seq_len, segment_k
+    fb = forward_batch or B
+    i32 = jnp.int32
+    scalar_i = jax.ShapeDtypeStruct((), i32)
+    scalar_f = jax.ShapeDtypeStruct((), jnp.float32)
+    state = _state_structs(cfg)
+
+    def ts_fn(step, seed, lr, total, tokens, *flat):
+        p, m, v = _pack(cfg, flat)
+        loss, p, m, v = train_step(step, seed, lr, total, tokens, p, m, v, cfg)
+        return (loss, *_unpack(cfg, p, m, v))
+
+    def seg_fn(step, seed, lr, total, tokens, *flat):
+        p, m, v = _pack(cfg, flat)
+        mean_l, last_l, p, m, v = train_segment(
+            step, seed, lr, total, tokens, p, m, v, cfg
+        )
+        return (mean_l, last_l, *_unpack(cfg, p, m, v))
+
+    def eval_fn(tokens, *flat_params):
+        names = list(param_shapes(cfg).keys())
+        return (eval_loss(tokens, dict(zip(names, flat_params)), cfg),)
+
+    def fwd_fn(tokens, *flat_params):
+        names = list(param_shapes(cfg).keys())
+        return (forward(tokens, dict(zip(names, flat_params)), cfg),)
+
+    manifest_eps = {}
+
+    def lower(fname, fn, in_specs, in_names, out_names):
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(adir, f"{fname}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_eps[fname] = {
+            "file": f"{fname}.hlo.txt",
+            "inputs": in_names,
+            "outputs": out_names,
+        }
+        if not quiet:
+            print(f"  {name}/{fname}: {len(text)/1e6:.2f} MB HLO text")
+
+    flat_specs = _flat_state_specs(cfg)
+    params_only = [s for s in flat_specs if s["name"].startswith("param:")]
+    scalars = [
+        {"name": "step", **_spec((), "i32")},
+        {"name": "seed", **_spec((), "i32")},
+        {"name": "lr", **_spec((), "f32")},
+        {"name": "total_steps", **_spec((), "f32")},
+    ]
+
+    if "train_step" in entrypoints:
+        lower(
+            "train_step", ts_fn,
+            [scalar_i, scalar_i, scalar_f, scalar_f,
+             jax.ShapeDtypeStruct((B, S + 1), i32), *state],
+            scalars + [{"name": "tokens", **_spec((B, S + 1), "i32")}] + flat_specs,
+            [{"name": "loss", **_spec(())}] + flat_specs,
+        )
+    if "train_segment" in entrypoints:
+        lower(
+            "train_segment", seg_fn,
+            [scalar_i, scalar_i, scalar_f, scalar_f,
+             jax.ShapeDtypeStruct((K, B, S + 1), i32), *state],
+            scalars + [{"name": "tokens", **_spec((K, B, S + 1), "i32")}] + flat_specs,
+            [{"name": "mean_loss", **_spec(())}, {"name": "last_loss", **_spec(())}]
+            + flat_specs,
+        )
+    if "eval_loss" in entrypoints:
+        lower(
+            "eval_loss", eval_fn,
+            [jax.ShapeDtypeStruct((B, S + 1), i32), *_state_structs(cfg)[: len(params_only)]],
+            [{"name": "tokens", **_spec((B, S + 1), "i32")}] + params_only,
+            [{"name": "loss", **_spec(())}],
+        )
+    if "forward" in entrypoints:
+        lower(
+            "forward", fwd_fn,
+            [jax.ShapeDtypeStruct((fb, S), i32), *_state_structs(cfg)[: len(params_only)]],
+            [{"name": "tokens", **_spec((fb, S), "i32")}] + params_only,
+            [{"name": "logits", **_spec((fb, S, cfg.vocab))}],
+        )
+
+    manifest = {
+        "version": 1,
+        "name": name,
+        "config": dataclasses.asdict(cfg),
+        "non_embedding_params": cfg.non_embedding_params(),
+        "embedding_params": cfg.embedding_params(),
+        "segment_k": K,
+        "quest_alpha": QUEST_ALPHA_E2M1,
+        "params": [
+            {"name": n, **_spec(s)} for n, s in param_shapes(cfg).items()
+        ],
+        "entrypoints": manifest_eps,
+    }
+    with open(os.path.join(adir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return adir
+
+
+# ---------------------------------------------------------------------------
+# artifact sets
+# ---------------------------------------------------------------------------
+
+TABLE3_METHODS = ["quartet", "luq_int4", "luq_fp4", "jetfire_fp4", "halo_fp4",
+                  "lss_int4", "fp8", "bf16"]
+ABLATION_METHODS = ["quest_fwd", "rtn_fwd", "sr_fwd", "sr_bwd", "rtn_bwd",
+                    "rtn_pma_bwd", "rtn", "sr"]
+
+
+def build_set(which: str, out_dir: str, quiet: bool = False):
+    jobs = []  # (cfg, kwargs)
+    if which in ("default", "all"):
+        jobs += [(make_config("n80k", m), {}) for m in ("quartet", "fp8", "bf16")]
+        jobs += [(make_config("n20k", "quartet"), {})]
+        # kernel-composition proof: pallas-lowered train_step only
+        jobs += [(make_config("n20k", "quartet_pallas"),
+                  {"entrypoints": ("train_step",)})]
+    if which in ("table3", "all"):
+        jobs += [
+            (make_config("n20k", m), {})
+            for m in TABLE3_METHODS if m != "bf16"  # bf16/fp8 shared with sweep
+        ] + [(make_config("n20k", "bf16"), {})]
+    if which in ("sweep", "all"):
+        for size in ("n20k", "n40k", "n80k", "n160k"):
+            for m in ("quartet", "fp8", "bf16"):
+                jobs.append((make_config(size, m), {}))
+        for m in ABLATION_METHODS:
+            jobs.append((make_config("n20k", m), {}))
+    if which in ("dynamics", "all"):
+        jobs += [(make_config("n1m", m), {}) for m in ("quartet", "fp8")]
+    if which in ("serve", "all"):
+        for b in (1, 2, 4, 8, 16, 32, 64, 128):
+            jobs.append(
+                (make_config("n330k", "quartet", batch=b),
+                 {"entrypoints": ("forward",), "forward_batch": b,
+                  "suffix": f"-b{b}"})
+            )
+            jobs.append(
+                (make_config("n330k", "fp8", batch=b),
+                 {"entrypoints": ("forward",), "forward_batch": b,
+                  "suffix": f"-b{b}"})
+            )
+    if not jobs:
+        raise SystemExit(f"unknown artifact set {which!r}")
+
+    seen = set()
+    for cfg, kw in jobs:
+        key = (cfg.name, cfg.method, cfg.batch, kw.get("forward_batch"))
+        if key in seen:
+            continue
+        seen.add(key)
+        lower_artifact(cfg, out_dir, quiet=quiet, **kw)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", dest="which", default=None,
+                    help="default|table3|sweep|dynamics|serve|all")
+    ap.add_argument("--size", default=None, help="single size, e.g. n80k")
+    ap.add_argument("--method", default="quartet")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    ap.add_argument("--segment-k", type=int, default=SEGMENT_K)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    if args.which:
+        build_set(args.which, args.out_dir, quiet=args.quiet)
+    elif args.size:
+        cfg = make_config(args.size, args.method, batch=args.batch)
+        lower_artifact(cfg, args.out_dir, segment_k=args.segment_k, quiet=args.quiet)
+    else:
+        raise SystemExit("pass --set or --size")
+
+
+if __name__ == "__main__":
+    main()

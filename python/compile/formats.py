@@ -1,0 +1,330 @@
+"""Numeric-format substrate (L2, build-time only).
+
+Bit-accurate simulations of the micro-scaling formats the paper trains in:
+
+* **MXFP4** — E2M1 element values ``{0, .5, 1, 1.5, 2, 3, 4, 6}`` (signed)
+  sharing one **E8M0** power-of-two scale per 1-D group of 32 elements
+  (OCP MX spec v1.0, adopted by Blackwell tcgen05.mma).
+* **MXFP8 / E4M3** — the paper's "lossless" baseline precision.
+* **INT4** — symmetric integer grid for the LSS / LUQ-INT4 baselines.
+
+All functions are quantize-*dequantize* ("fake quant"): they return f32
+tensors whose values lie exactly on the target grid, i.e. exactly the
+values a Blackwell tensor core would consume. The rust substrate
+(`rust/src/quant`) implements the same formats with real nibble packing;
+`python/tests/test_formats.py` and `rust quant::tests` pin both to the
+same reference vectors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Grids
+# ---------------------------------------------------------------------------
+
+#: Non-negative magnitudes representable by FP4 E2M1 (1 sign, 2 exp, 1 mant).
+E2M1_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+E2M1_MAX = 6.0
+
+#: Group size shared by MXFP4 and MXFP8 (OCP MX spec: 1x32 blocks).
+MX_GROUP = 32
+
+#: E8M0 scale exponent range (bias 127, value 0xFF = NaN per spec).
+E8M0_MIN_EXP = -98  # spec says -127, but XLA CPU flushes f32 subnormals to
+# zero (FTZ) — exp2(-126) already rounds into the flushed range, turning 0/s
+# into 0/0=NaN on all-zero groups. 2^-98 ≈ 3e-30 is far below any gradient
+# magnitude that matters, so clamping the shared-scale exponent here is
+# numerically free while keeping the scale a normal f32.
+E8M0_MAX_EXP = 127
+
+E4M3_MAX = 448.0
+INT4_MAX = 7.0  # symmetric [-7, 7]
+
+
+def _round_half_away(x):
+    """round-to-nearest, ties away from zero (matches the rust substrate)."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+# ---------------------------------------------------------------------------
+# E2M1 element rounding
+# ---------------------------------------------------------------------------
+
+def e2m1_rtn(x):
+    """Round values (already divided by their group scale) to the E2M1 grid,
+    round-to-nearest with ties away from zero, clamping to ±6."""
+    a = jnp.abs(x)
+    # Spacing of the E2M1 grid is 0.5 below 2, 1.0 in [2,4), 2.0 in [4,6].
+    step = jnp.where(a < 2.0, 0.5, jnp.where(a < 4.0, 1.0, 2.0))
+    q = _round_half_away(a / step) * step
+    q = jnp.minimum(q, E2M1_MAX)
+    return jnp.sign(x) * q
+
+
+def e2m1_sr(x, u):
+    """Stochastic rounding to the E2M1 grid.
+
+    ``u`` is uniform(0,1) noise of the same shape. Rounds to one of the two
+    neighbouring grid points with probability proportional to proximity,
+    which makes ``E[e2m1_sr(x,U)] == clip(x, -6, 6)`` exactly — the property
+    Quartet's backward pass relies on. Inputs must satisfy |x| <= 6 for the
+    estimator to be unbiased (the 3/4 pre-scaling in Algorithm 1 guarantees
+    this).
+    """
+    a = jnp.clip(jnp.abs(x), 0.0, E2M1_MAX)
+    step = jnp.where(a < 2.0, 0.5, jnp.where(a < 4.0, 1.0, 2.0))
+    lo = jnp.floor(a / step) * step
+    # Step size of the interval we actually landed in (handles the 2.0 / 4.0
+    # boundaries where spacing changes: interval is [lo, lo+step_of_lo)).
+    step_lo = jnp.where(lo < 2.0, 0.5, jnp.where(lo < 4.0, 1.0, 2.0))
+    hi = jnp.minimum(lo + step_lo, E2M1_MAX)
+    frac = jnp.where(hi > lo, (a - lo) / (hi - lo), 0.0)
+    q = jnp.where(u < frac, hi, lo)
+    return jnp.sign(x) * q
+
+
+# ---------------------------------------------------------------------------
+# E8M0 group scales
+# ---------------------------------------------------------------------------
+
+def e8m0_scale(group_absmax, target_max=E2M1_MAX):
+    """Power-of-two scale s = 2^ceil(log2(absmax/target_max)).
+
+    Guarantees absmax/s <= target_max (no clipping), matching the OCP MX
+    "shared scale computed from the largest magnitude" rule with ceil
+    rounding, and clamps the exponent to the E8M0 range.
+    """
+    safe = jnp.maximum(group_absmax, 2.0 ** (E8M0_MIN_EXP))
+    exp = jnp.ceil(jnp.log2(safe / target_max))
+    exp = jnp.clip(exp, E8M0_MIN_EXP, E8M0_MAX_EXP)
+    return jnp.exp2(exp)
+
+
+def _group_reshape(x, group=MX_GROUP):
+    """[..., d] -> [..., d/group, group]; d must divide by group."""
+    d = x.shape[-1]
+    if d % group != 0:
+        raise ValueError(f"last dim {d} not divisible by MX group {group}")
+    return x.reshape(*x.shape[:-1], d // group, group)
+
+
+def _group_unreshape(xg):
+    return xg.reshape(*xg.shape[:-2], xg.shape[-2] * xg.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# MXFP4 quantize-dequantize
+# ---------------------------------------------------------------------------
+
+def mxfp4_rtn(x, group=MX_GROUP):
+    """AbsMax MXFP4 with deterministic round-to-nearest (per 1x32 group)."""
+    xg = _group_reshape(x, group)
+    s = e8m0_scale(jnp.max(jnp.abs(xg), axis=-1, keepdims=True))
+    q = e2m1_rtn(xg / s) * s
+    return _group_unreshape(q)
+
+
+def mxfp4_sr(x, u, group=MX_GROUP, prescale=0.75):
+    """Unbiased stochastic MXFP4: Algorithm 1's ``SR(3/4 · x)``.
+
+    The e8m0 absmax scale maps the group into [-6, 6]; the extra 3/4
+    pre-scale keeps every value strictly inside the grid so stochastic
+    rounding never clips, making the quantizer exactly unbiased up to the
+    known 4/3 factor, which the caller compensates (16/9 on a product of
+    two such tensors).
+
+    Returns values on the grid *including* the 3/4 shrinkage — i.e. this is
+    the tensor the GEMM consumes; multiply the GEMM output by (1/prescale)^2.
+    """
+    xg = _group_reshape(x, group)
+    ug = _group_reshape(u, group)
+    s = e8m0_scale(jnp.max(jnp.abs(xg), axis=-1, keepdims=True))
+    q = e2m1_sr(prescale * xg / s, ug) * s
+    return _group_unreshape(q)
+
+
+# ---------------------------------------------------------------------------
+# QuEST projection (forward-pass quantizer of Quartet)
+# ---------------------------------------------------------------------------
+
+# MSE-optimal clip multiplier for RTN-E2M1 on unit Gaussian data, i.e. the
+# alpha minimising E[(X - rtn(clip(X, a)) * ...)^2]. Computed once
+# numerically (seeded) — see _fit_quest_alpha below; value pinned so the
+# artifact stream is deterministic and the rust substrate can share it.
+QUEST_ALPHA_E2M1 = 2.925
+
+
+def _fit_quest_alpha(n=1 << 22, seed=0):
+    """Numerically refit QUEST_ALPHA_E2M1 (used by tests, not at trace time)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    alphas = np.linspace(1.5, 4.5, 121)
+    best, best_mse = None, np.inf
+    for a in alphas:
+        s = a / E2M1_MAX
+        q = np.asarray(e2m1_rtn(jnp.asarray(x / s))) * s
+        mse = float(np.mean((x - q) ** 2))
+        if mse < best_mse:
+            best, best_mse = a, mse
+    return float(best)
+
+
+def quest_quantize(x, group=MX_GROUP):
+    """QuEST projection to MXFP4 (Panferov et al., 2025, adapted to E2M1).
+
+    The caller applies the Hadamard transform first (which normalises the
+    per-group distribution towards Gaussian); here we pick the RMSE-optimal
+    clip ``alpha * rms(group)`` instead of absmax, snap it to the E8M0
+    power-of-two grid, RTN-quantize, and emit the *trust mask* — 1 where the
+    value was representable (|x| <= clip), 0 where it was clipped — used by
+    the backward pass as the clipping-aware STE.
+
+    Returns ``(q, mask)`` with q dequantized f32 on the MXFP4 grid.
+    """
+    xg = _group_reshape(x, group)
+    rms = jnp.sqrt(jnp.mean(xg * xg, axis=-1, keepdims=True) + 1e-20)
+    clip = QUEST_ALPHA_E2M1 * rms
+    # The RMSE-optimal scale clip/6 rarely lands on the E8M0 power-of-two
+    # grid; evaluate both neighbouring binades against the *actual* group
+    # and keep the lower-MSE one ("more precise MSE fitting", QuEST §3).
+    e = jnp.log2(jnp.maximum(clip / E2M1_MAX, 2.0 ** E8M0_MIN_EXP))
+    s_lo = jnp.exp2(jnp.clip(jnp.floor(e), E8M0_MIN_EXP, E8M0_MAX_EXP))
+    s_hi = jnp.exp2(jnp.clip(jnp.ceil(e), E8M0_MIN_EXP, E8M0_MAX_EXP))
+    q_lo = e2m1_rtn(xg / s_lo) * s_lo
+    q_hi = e2m1_rtn(xg / s_hi) * s_hi
+    mse_lo = jnp.mean((q_lo - xg) ** 2, axis=-1, keepdims=True)
+    mse_hi = jnp.mean((q_hi - xg) ** 2, axis=-1, keepdims=True)
+    use_lo = mse_lo <= mse_hi
+    q = jnp.where(use_lo, q_lo, q_hi)
+    s = jnp.where(use_lo, s_lo, s_hi)
+    mask = (jnp.abs(xg) <= s * E2M1_MAX).astype(x.dtype)
+    return _group_unreshape(q), _group_unreshape(mask)
+
+
+# ---------------------------------------------------------------------------
+# Generic small-float rounding (FP8 baseline)
+# ---------------------------------------------------------------------------
+
+def round_to_float(x, ebits, mbits, max_val):
+    """Round f32 to a small float format (nearest), flush subnormals-ish.
+
+    Used for E4M3 (ebits=4, mbits=3, max=448) and E5M2. Implements
+    round-to-nearest on the mantissa at the value's own binade, clamping to
+    ±max_val; magnitudes below the smallest normal round on the subnormal
+    grid of the smallest binade.
+    """
+    bias = 2 ** (ebits - 1) - 1
+    min_exp = 1 - bias  # smallest normal exponent
+    a = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.maximum(a, 1e-38)))
+    e = jnp.maximum(e, float(min_exp))
+    ulp = jnp.exp2(e - mbits)
+    q = _round_half_away(a / ulp) * ulp
+    q = jnp.minimum(q, max_val)
+    q = jnp.where(a == 0.0, 0.0, q)
+    return jnp.sign(x) * q
+
+
+def e4m3(x):
+    return round_to_float(x, 4, 3, E4M3_MAX)
+
+
+def mxfp8_rtn(x, group=MX_GROUP):
+    """MXFP8: E4M3 elements + shared E8M0 group scale — the FP8 baseline."""
+    xg = _group_reshape(x, group)
+    s = e8m0_scale(jnp.max(jnp.abs(xg), axis=-1, keepdims=True), target_max=E4M3_MAX)
+    q = e4m3(xg / s) * s
+    return _group_unreshape(q)
+
+
+# ---------------------------------------------------------------------------
+# INT4 (LSS / LUQ baselines)
+# ---------------------------------------------------------------------------
+
+def int4_rtn(x, group=MX_GROUP):
+    xg = _group_reshape(x, group)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    s = jnp.maximum(amax, 1e-20) / INT4_MAX
+    q = jnp.clip(_round_half_away(xg / s), -INT4_MAX, INT4_MAX) * s
+    return _group_unreshape(q)
+
+
+def int4_sr(x, u, group=MX_GROUP):
+    xg = _group_reshape(x, group)
+    ug = _group_reshape(u, group)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    s = jnp.maximum(amax, 1e-20) / INT4_MAX
+    y = jnp.clip(xg / s, -INT4_MAX, INT4_MAX)
+    lo = jnp.floor(y)
+    q = jnp.where(ug < (y - lo), lo + 1.0, lo) * s
+    return _group_unreshape(q)
+
+
+# ---------------------------------------------------------------------------
+# LUQ: logarithmic unbiased quantization (Chmiel et al., 2023)
+# ---------------------------------------------------------------------------
+
+def luq_fp4(x, u, group=MX_GROUP):
+    """LUQ mapped onto an FP4-style log grid.
+
+    Per group: threshold t = absmax / 2^(levels-1); magnitudes below t are
+    *stochastically pruned* (to 0 or t, unbiased "stochastic underflow");
+    the rest are stochastically rounded between neighbouring powers of two
+    (unbiased in expectation on the log grid).
+    """
+    levels = 7  # power-of-two levels between t and absmax (4-bit-ish)
+    xg = _group_reshape(x, group)
+    ug = _group_reshape(u, group)
+    amax = jnp.maximum(jnp.max(jnp.abs(xg), axis=-1, keepdims=True), 1e-20)
+    t = amax / (2.0 ** (levels - 1))
+    a = jnp.abs(xg)
+    # stochastic underflow below t
+    under = a < t
+    a_under = jnp.where(ug * t < a, t, 0.0)
+    # unbiased SR between log2 neighbours at/above t
+    la = jnp.log2(jnp.maximum(a, t) / t)
+    lo = jnp.floor(la)
+    frac = (2.0 ** la - 2.0 ** lo) / (2.0 ** lo)  # position within [2^lo, 2^(lo+1)]
+    a_log = jnp.where(ug < frac, 2.0 ** (lo + 1.0), 2.0 ** lo) * t
+    q = jnp.where(under, a_under, a_log)
+    return _group_unreshape(jnp.sign(xg) * q)
+
+
+def luq_int4(x, u, group=MX_GROUP):
+    """LUQ's INT4 variant: stochastic underflow + SR on the integer grid."""
+    return int4_sr(x, u, group)
+
+
+# ---------------------------------------------------------------------------
+# Jetfire: 2-D block quantization (Xi et al., 2024), ported to FP4
+# ---------------------------------------------------------------------------
+
+def jetfire_fp4(x, block=32):
+    """Per-(32x32)-block absmax RTN to E2M1. x must be 2-D [rows, cols]."""
+    r, c = x.shape
+    if r % block or c % block:
+        raise ValueError(f"jetfire block {block} must divide {x.shape}")
+    xb = x.reshape(r // block, block, c // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=(1, 3), keepdims=True)
+    s = jnp.maximum(amax, 1e-20) / E2M1_MAX
+    q = e2m1_rtn(xb / s) * s
+    return q.reshape(r, c)
+
+
+# ---------------------------------------------------------------------------
+# HALO-style: Hadamard + per-tensor scale RTN FP4
+# ---------------------------------------------------------------------------
+
+def halo_fp4(x):
+    """HALO-2-like quantizer: (block) Hadamard already applied by the
+    caller; per-*tensor* absmax scale + RTN E2M1 (coarser than MXFP4's
+    group scales — the source of HALO's FP4 instability in Table 3)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20)
+    s = amax / E2M1_MAX
+    return e2m1_rtn(x / s) * s

@@ -1,0 +1,48 @@
+"""Emit cross-language golden vectors pinning the python (L1/L2) and rust
+(L3) numeric-format substrates to identical deterministic quantization.
+
+Usage: ``python -m compile.gen_vectors [out.json]`` (default writes
+``rust/tests/data/quant_vectors.json``). Regenerate whenever the grid,
+scale rule or QuEST alpha changes; `rust prop_quant::golden_vectors_match_python`
+consumes the file.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from .formats import mxfp4_rtn, quest_quantize
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "data",
+        "quant_vectors.json")
+    rng = np.random.default_rng(20250710)
+    cases = []
+    for cols, scale in [(32, 1.0), (64, 0.01), (96, 100.0), (32, 1e-6), (64, 1.0)]:
+        x = (rng.standard_normal(cols) * scale).astype(np.float32)
+        # exercise exact zeros and an outlier
+        x[0] = 0.0
+        if cols >= 64:
+            x[33] = 8.0 * scale
+        q_rtn = np.asarray(mxfp4_rtn(x.reshape(1, -1))).reshape(-1)
+        q_quest, mask = quest_quantize(x.reshape(1, -1))
+        cases.append({
+            "x": [float(v) for v in x],
+            "mxfp4_rtn": [float(v) for v in q_rtn],
+            "quest_q": [float(v) for v in np.asarray(q_quest).reshape(-1)],
+            "quest_mask": [float(v) for v in np.asarray(mask).reshape(-1)],
+        })
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"seed": 20250710, "cases": cases}, f)
+    print(f"wrote {len(cases)} cases to {out}")
+
+
+if __name__ == "__main__":
+    main()

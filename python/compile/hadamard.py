@@ -1,0 +1,72 @@
+"""Block Hadamard transforms (L2, build-time only).
+
+Quartet applies the Hadamard transform at the *same* granularity as the
+MXFP4 scale groups (g = 32): the forward pass uses the fixed normalized
+H_32, the backward pass the *randomized* block Hadamard — a Rademacher
+sign diagonal followed by H_32 — with the same randomness on both GEMM
+operands so the rotation cancels in the contraction while decorrelating
+quantization errors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import MX_GROUP
+
+
+@functools.lru_cache(maxsize=None)
+def hadamard_matrix(g: int = MX_GROUP) -> np.ndarray:
+    """Normalized Sylvester Hadamard matrix H_g (g a power of two).
+
+    H_g @ H_g.T == I, so the inverse transform is the transpose (H is
+    symmetric for Sylvester construction, hence also self-inverse).
+    """
+    if g & (g - 1) or g <= 0:
+        raise ValueError(f"Hadamard size must be a power of two, got {g}")
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < g:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(g)).astype(np.float32)
+
+
+def block_hadamard(x, g: int = MX_GROUP):
+    """Apply H_g to each contiguous group of g elements along the last axis.
+
+    The g x g matmul shape is exactly what the Pallas kernel feeds the MXU;
+    here it constant-folds into the lowered HLO.
+    """
+    hm = jnp.asarray(hadamard_matrix(g))
+    xg = x.reshape(*x.shape[:-1], x.shape[-1] // g, g)
+    return (xg @ hm).reshape(x.shape)
+
+
+def block_hadamard_inv(x, g: int = MX_GROUP):
+    """Inverse block transform (H_g is orthogonal; Sylvester H is symmetric,
+    so this equals the forward transform — kept separate for readability)."""
+    hm = jnp.asarray(hadamard_matrix(g)).T
+    xg = x.reshape(*x.shape[:-1], x.shape[-1] // g, g)
+    return (xg @ hm).reshape(x.shape)
+
+
+def rademacher_signs(key, d: int):
+    """±1 sign vector for the randomized transform (shared per GEMM pair)."""
+    return jnp.where(jax.random.bernoulli(key, 0.5, (d,)), 1.0, -1.0).astype(jnp.float32)
+
+
+def randomized_block_hadamard(x, signs, g: int = MX_GROUP):
+    """Ĥ_g(x, ξ) = H_g · diag(ξ) · x per block along the last axis.
+
+    ``signs`` has length x.shape[-1]. Applying the same signs to both GEMM
+    operands keeps the contraction exact: (H D g)·(H D w) = g·w per block.
+    """
+    return block_hadamard(x * signs, g)
+
+
+def randomized_block_hadamard_inv(y, signs, g: int = MX_GROUP):
+    """Inverse of the randomized transform: diag(ξ) · H_g^{-1} · y."""
+    return block_hadamard_inv(y, g) * signs

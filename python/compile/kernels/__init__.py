@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for Quartet (compiled under ``interpret=True`` on CPU).
+
+Hardware adaptation (see DESIGN.md §3): the paper's Stage-1 CUDA kernel
+(Hadamard-as-GEMM in SMEM + quantize epilogue in registers) becomes a
+Pallas kernel whose BlockSpec stages (tile_rows, 32·k) tiles through VMEM,
+runs the 32×32 Hadamard matmul on the MXU and the quantize/scale/mask
+epilogue on the VPU without returning to HBM; the paper's Stage-2
+tcgen05.mma block-scaled GEMM becomes a tiled Pallas matmul whose operands
+are MXFP4 grid values (scales folded — bit-identical contraction).
+"""
+
+from .hadamard import block_hadamard_pallas
+from .quantize import quest_fused_pallas, sr_fused_pallas
+from .gemm import mxfp4_matmul_pallas

@@ -1,0 +1,53 @@
+"""Block-scaled MXFP4 GEMM kernel (L1) — the paper's "Stage 2".
+
+Blackwell's ``tcgen05.mma`` computes ``D = (A·SFA)(B·SFB)`` with one scale
+per 32 elements along K. Our operands arrive as exact MXFP4 grid values
+with the E8M0 scales already folded (mathematically identical: the scale
+is per-K-group, so folding commutes with the contraction). The kernel is
+a classic VMEM-tiled matmul: grid (M/tm, N/tn, K/tk) with an f32
+accumulator tile revisited across the K loop — the Pallas rendering of
+the tensor-core pipeline, with dequantization in the MAC loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...].T
+
+
+def mxfp4_matmul_pallas(a, b, tile_m: int = 128, tile_n: int = 128,
+                        tile_k: int = 128):
+    """C = A @ B.T for A:[M,K], B:[N,K] (both MXFP4 grid values), f32 accum.
+
+    B is taken in [N, K] layout — the layout tcgen05.mma block-scaled GEMM
+    expects for the second operand (scales along K for both operands).
+    """
+    m, k = a.shape
+    n, kb = b.shape
+    if k != kb:
+        raise ValueError(f"contraction mismatch {a.shape} vs {b.shape}")
+    tm, tn, tk = min(tile_m, m), min(tile_n, n), min(tile_k, k)
+    if m % tm or n % tn or k % tk:
+        raise ValueError(f"{(m, n, k)} not divisible by tiles {(tm, tn, tk)}")
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // tm, n // tn, k // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((tn, tk), lambda i, j, l: (j, l)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

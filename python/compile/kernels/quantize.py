@@ -1,0 +1,158 @@
+"""Fused quantization kernels (L1) — the paper's "Stage 1".
+
+Two kernels, mirroring Algorithm 1:
+
+* ``quest_fused_pallas`` — forward path: fixed block Hadamard → QuEST
+  RMSE-clipped RTN projection to MXFP4 → clip ("trust") mask. One fused
+  pass: values make a single HBM→VMEM→HBM round trip.
+* ``sr_fused_pallas`` — backward path: Rademacher sign flip → block
+  Hadamard → absmax E8M0 scales → unbiased SR of (3/4)·x to E2M1.
+
+Both consume/produce f32; quantized outputs are exact MXFP4 grid values
+(scale folded in). The pure-jnp oracle lives in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import (
+    E2M1_MAX,
+    E8M0_MAX_EXP,
+    E8M0_MIN_EXP,
+    MX_GROUP,
+    QUEST_ALPHA_E2M1,
+)
+from ..hadamard import hadamard_matrix
+
+# --------------------------------------------------------------------------
+# element-wise helpers shared by the kernel bodies (VPU epilogue ops)
+# --------------------------------------------------------------------------
+
+
+def _round_half_away(x):
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def _e2m1_rtn(x):
+    a = jnp.abs(x)
+    step = jnp.where(a < 2.0, 0.5, jnp.where(a < 4.0, 1.0, 2.0))
+    q = jnp.minimum(_round_half_away(a / step) * step, E2M1_MAX)
+    return jnp.sign(x) * q
+
+
+def _e2m1_sr(x, u):
+    a = jnp.clip(jnp.abs(x), 0.0, E2M1_MAX)
+    step = jnp.where(a < 2.0, 0.5, jnp.where(a < 4.0, 1.0, 2.0))
+    lo = jnp.floor(a / step) * step
+    step_lo = jnp.where(lo < 2.0, 0.5, jnp.where(lo < 4.0, 1.0, 2.0))
+    hi = jnp.minimum(lo + step_lo, E2M1_MAX)
+    frac = jnp.where(hi > lo, (a - lo) / (hi - lo), 0.0)
+    return jnp.sign(x) * jnp.where(u < frac, hi, lo)
+
+
+def _e8m0(amax, target=E2M1_MAX):
+    exp = jnp.ceil(jnp.log2(jnp.maximum(amax, 2.0 ** E8M0_MIN_EXP) / target))
+    return jnp.exp2(jnp.clip(exp, E8M0_MIN_EXP, E8M0_MAX_EXP))
+
+
+# --------------------------------------------------------------------------
+# QuEST forward kernel: Hadamard ∘ RMSE-clip ∘ RTN ∘ mask, fused
+# --------------------------------------------------------------------------
+
+
+def _quest_kernel(x_ref, h_ref, q_ref, m_ref, *, g: int):
+    x = x_ref[...]
+    rows, d = x.shape
+    # Stage-1a: Hadamard as a direct (rows·d/g, g) @ (g, g) GEMM (MXU path).
+    xg = (x.reshape(rows * (d // g), g) @ h_ref[...])
+    # Stage-1b: epilogue in-register — RMSE-optimal clip, then pick the
+    # lower-MSE of the two neighbouring E8M0 binades per group (matches
+    # formats.quest_quantize bit for bit).
+    rms = jnp.sqrt(jnp.mean(xg * xg, axis=-1, keepdims=True) + 1e-20)
+    e = jnp.log2(jnp.maximum(QUEST_ALPHA_E2M1 * rms / E2M1_MAX, 2.0 ** E8M0_MIN_EXP))
+    s_lo = jnp.exp2(jnp.clip(jnp.floor(e), E8M0_MIN_EXP, E8M0_MAX_EXP))
+    s_hi = jnp.exp2(jnp.clip(jnp.ceil(e), E8M0_MIN_EXP, E8M0_MAX_EXP))
+    q_lo = _e2m1_rtn(xg / s_lo) * s_lo
+    q_hi = _e2m1_rtn(xg / s_hi) * s_hi
+    mse_lo = jnp.mean((q_lo - xg) ** 2, axis=-1, keepdims=True)
+    mse_hi = jnp.mean((q_hi - xg) ** 2, axis=-1, keepdims=True)
+    use_lo = mse_lo <= mse_hi
+    q = jnp.where(use_lo, q_lo, q_hi)
+    s = jnp.where(use_lo, s_lo, s_hi)
+    mask = (jnp.abs(xg) <= s * E2M1_MAX).astype(x.dtype)
+    q_ref[...] = q.reshape(rows, d)
+    m_ref[...] = mask.reshape(rows, d)
+
+
+def quest_fused_pallas(x, g: int = MX_GROUP, tile_rows: int = 128):
+    """Fused forward-path quantizer. x: [rows, d] f32 → (q, mask)."""
+    rows, d = x.shape
+    tr = min(tile_rows, rows)
+    if rows % tr or d % g:
+        raise ValueError(f"shape {x.shape} incompatible with tile {tr}/group {g}")
+    hm = jnp.asarray(hadamard_matrix(g))
+    return pl.pallas_call(
+        functools.partial(_quest_kernel, g=g),
+        grid=(rows // tr,),
+        in_specs=[
+            pl.BlockSpec((tr, d), lambda i: (i, 0)),
+            pl.BlockSpec((g, g), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tr, d), lambda i: (i, 0)),
+            pl.BlockSpec((tr, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d), x.dtype),
+            jax.ShapeDtypeStruct((rows, d), x.dtype),
+        ],
+        interpret=True,
+    )(x, hm)
+
+
+# --------------------------------------------------------------------------
+# SR backward kernel: sign-flip ∘ Hadamard ∘ absmax scale ∘ SR(3/4 ·), fused
+# --------------------------------------------------------------------------
+
+
+def _sr_kernel(x_ref, signs_ref, u_ref, h_ref, q_ref, *, g: int, prescale: float):
+    x = x_ref[...] * signs_ref[...]  # Rademacher diagonal of Ĥ_g
+    rows, d = x.shape
+    xg = (x.reshape(rows * (d // g), g) @ h_ref[...])
+    s = _e8m0(jnp.max(jnp.abs(xg), axis=-1, keepdims=True))
+    u = u_ref[...].reshape(rows * (d // g), g)
+    q = _e2m1_sr(prescale * xg / s, u) * s
+    q_ref[...] = q.reshape(rows, d)
+
+
+def sr_fused_pallas(x, signs, u, g: int = MX_GROUP, tile_rows: int = 128,
+                    prescale: float = 0.75):
+    """Fused backward-path quantizer.
+
+    x: [rows, d], signs: [d] (±1), u: [rows, d] uniform(0,1).
+    Output values include the 3/4 shrinkage; the GEMM output is rescaled
+    by 16/9 downstream (Algorithm 1 lines 4/6 and 9/11).
+    """
+    rows, d = x.shape
+    tr = min(tile_rows, rows)
+    if rows % tr or d % g:
+        raise ValueError(f"shape {x.shape} incompatible with tile {tr}/group {g}")
+    hm = jnp.asarray(hadamard_matrix(g))
+    return pl.pallas_call(
+        functools.partial(_sr_kernel, g=g, prescale=prescale),
+        grid=(rows // tr,),
+        in_specs=[
+            pl.BlockSpec((tr, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((tr, d), lambda i: (i, 0)),
+            pl.BlockSpec((g, g), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, signs.reshape(1, d), u, hm)

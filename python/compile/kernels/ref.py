@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every L1 kernel — the CORE correctness reference.
+
+Each function matches the signature of its Pallas counterpart exactly;
+``python/tests/test_kernels.py`` pins them equal. Training artifacts are
+lowered through this path by default (identical numerics, cheaper HLO);
+the Pallas path is lowered for the `quickstart-pallas` artifact to prove
+the kernels compose into the same pipeline.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..formats import MX_GROUP, mxfp4_sr, quest_quantize
+from ..hadamard import block_hadamard, randomized_block_hadamard
+
+
+def block_hadamard_ref(x, g: int = MX_GROUP):
+    return block_hadamard(x, g)
+
+
+def quest_fused_ref(x, g: int = MX_GROUP):
+    """Hadamard → QuEST RTN projection → trust mask (Algorithm 1, fwd)."""
+    xh = block_hadamard(x, g)
+    return quest_quantize(xh, g)
+
+
+def sr_fused_ref(x, signs, u, g: int = MX_GROUP, prescale: float = 0.75):
+    """Ĥ_g sign-flip+Hadamard → absmax E8M0 → SR(3/4·x) (Algorithm 1, bwd)."""
+    xh = randomized_block_hadamard(x, signs, g)
+    return mxfp4_sr(xh, u, g, prescale)
+
+
+def mxfp4_matmul_ref(a, b):
+    """C = A @ B.T in f32 over MXFP4 grid-valued operands."""
+    return a @ b.T

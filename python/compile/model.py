@@ -1,0 +1,319 @@
+"""L2 — Llama-2-style transformer with Quartet quantized linears (build time).
+
+Defines the model forward/backward, the AdamW-with-cosine-schedule update
+*inside the graph*, and the entrypoints the rust coordinator loads:
+
+* ``train_step``     — one optimizer step.
+* ``train_segment``  — K optimizer steps in one ``lax.fori_loop`` (amortizes
+                       the host↔device round trip PJRT tuple outputs force).
+* ``forward`` / ``eval_loss`` — inference logits / validation loss.
+
+All linear layers (QKV/O + SwiGLU gate/up/down) go through
+``quartet.quant_linear`` with the configured method; embeddings, the tied
+LM head, norms and attention internals stay in full precision, matching
+the paper's setup (only the three linear-layer GEMMs are low precision).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quartet import METHODS, Method, quant_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Model + schedule hyper-parameters; all dims multiples of 32 (MX group)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+    batch: int
+    method: str = "quartet"
+    lr: float = 1e-3
+    warmup_frac: float = 0.1
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+
+    def __post_init__(self):
+        for nm, v in (("d_model", self.d_model), ("d_ff", self.d_ff)):
+            if v % 32:
+                raise ValueError(f"{nm}={v} must be a multiple of 32 (MX group)")
+        if (self.batch * self.seq_len) % 32:
+            raise ValueError("batch*seq_len must be a multiple of 32 for the dW GEMM")
+        if self.d_model % self.n_heads:
+            raise ValueError("d_model % n_heads != 0")
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def non_embedding_params(self) -> int:
+        per_layer = 4 * self.d_model * self.d_model + 3 * self.d_model * self.d_ff
+        norms = self.n_layers * 2 * self.d_model + self.d_model
+        return self.n_layers * per_layer + norms
+
+    def embedding_params(self) -> int:
+        return self.vocab * self.d_model
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Name → shape, in the sorted-key order jax flattens dicts with.
+
+    Per-layer weights are *stacked* along a leading L axis and the model
+    scans over them (`lax.scan`): layer code appears once in the lowered
+    HLO regardless of depth, which keeps XLA-CPU AOT compile time flat in
+    n_layers (the §Perf L2 fix — unrolled layers made the 2021-era XLA
+    backend spend minutes per artifact)."""
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    shapes = {
+        "tok_emb": (cfg.vocab, d),
+        "final_norm": (d,),
+        "layers.attn_norm": (L, d),
+        "layers.wq": (L, d, d),
+        "layers.wk": (L, d, d),
+        "layers.wv": (L, d, d),
+        "layers.wo": (L, d, d),
+        "layers.mlp_norm": (L, d),
+        "layers.w_gate": (L, ff, d),
+        "layers.w_up": (L, ff, d),
+        "layers.w_down": (L, d, ff),
+    }
+    return dict(sorted(shapes.items()))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic init (numpy RNG, seeded): scaled-normal linears,
+    GPT-2-style 1/sqrt(2L) down-scaling on residual-writing projections.
+    Stacked-layer tensors draw one normal per element, so every layer gets
+    independent weights."""
+    rng = np.random.default_rng(seed)
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    resid = 1.0 / np.sqrt(2 * L)
+
+    def scale_for(name: str) -> float:
+        leaf = name.split(".")[-1]
+        if leaf == "tok_emb":
+            return 0.02
+        if leaf in ("wq", "wk", "wv"):
+            return 1.0 / np.sqrt(d)
+        if leaf == "wo":
+            return resid / np.sqrt(d)
+        if leaf in ("w_gate", "w_up"):
+            return 1.0 / np.sqrt(d)
+        if leaf == "w_down":
+            return resid / np.sqrt(ff)
+        return 0.0  # norms handled below
+
+    p = {}
+    for name, shape in param_shapes(cfg).items():
+        if name.endswith("norm"):
+            p[name] = jnp.ones(shape, jnp.float32)
+        else:
+            p[name] = jnp.asarray(
+                rng.standard_normal(shape).astype(np.float32) * scale_for(name)
+            )
+    return p
+
+
+def _is_linear(name: str) -> bool:
+    """Parameters that are quantized linear weights (get weight decay)."""
+    leaf = name.rsplit(".", 1)[-1]
+    return leaf in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+# ---------------------------------------------------------------------------
+# model forward
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+@functools.lru_cache(maxsize=None)
+def _rope_tables(seq_len: int, head_dim: int):
+    # numpy outputs (not jnp) so the lru_cache never captures tracers.
+    pos = np.arange(seq_len, dtype=np.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+    ang = pos * inv[None, :]
+    return np.cos(ang), np.sin(ang)
+
+
+def _rope(x, cos, sin):
+    """x: [B, S, H, hd]; rotate (even, odd) pairs."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c, s = cos[None, :, None, :], sin[None, :, None, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def model_forward(params, tokens, cfg: ModelConfig, key):
+    """tokens: int32 [B, S] → logits f32 [B, S, vocab]."""
+    method = METHODS[cfg.method]
+    B, S = tokens.shape
+    d = cfg.d_model
+    h = params["tok_emb"][tokens]  # [B, S, d]
+    cos_np, sin_np = _rope_tables(S, cfg.head_dim)
+    cos, sin = jnp.asarray(cos_np), jnp.asarray(sin_np)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    causal = jnp.tril(jnp.ones((S, S), jnp.bool_))
+
+    def layer(h, xs):
+        """One transformer block (scanned: lowers once for all layers)."""
+        lp, idx = xs
+        lk = jax.random.fold_in(key, idx)
+
+        def qlin(x2d, name, slot):
+            return quant_linear(x2d, lp[name], jax.random.fold_in(lk, slot), method)
+
+        x2 = _rmsnorm(h, lp["attn_norm"]).reshape(B * S, d)
+        q = qlin(x2, "wq", 0)
+        k = qlin(x2, "wk", 1)
+        v = qlin(x2, "wv", 2)
+        q = _rope(q.reshape(B, S, cfg.n_heads, cfg.head_dim), cos, sin)
+        k = _rope(k.reshape(B, S, cfg.n_heads, cfg.head_dim), cos, sin)
+        v = v.reshape(B, S, cfg.n_heads, cfg.head_dim)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B * S, d)
+        o = qlin(o, "wo", 3)
+        h = h + o.reshape(B, S, d)
+
+        x2 = _rmsnorm(h, lp["mlp_norm"]).reshape(B * S, d)
+        g = qlin(x2, "w_gate", 4)
+        u = qlin(x2, "w_up", 5)
+        mid = jax.nn.silu(g) * u
+        dn = qlin(mid, "w_down", 6)
+        h = h + dn.reshape(B, S, d)
+        return h, None
+
+    stacked = {
+        name.split(".", 1)[1]: params[name]
+        for name in params
+        if name.startswith("layers.")
+    }
+    h, _ = jax.lax.scan(layer, h, (stacked, jnp.arange(cfg.n_layers)))
+
+    h = _rmsnorm(h, params["final_norm"])
+    # tied LM head in full precision (paper keeps embeddings/head high-prec)
+    return h @ params["tok_emb"].T
+
+
+def loss_fn(params, tokens_in, targets, cfg: ModelConfig, key):
+    logits = model_forward(params, tokens_in, cfg, key)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# ---------------------------------------------------------------------------
+# AdamW + cosine schedule, in-graph
+# ---------------------------------------------------------------------------
+
+
+def lr_at(step, base_lr, total_steps, cfg: ModelConfig):
+    """Cosine decay with 10% linear warmup (paper Appendix A.1).
+
+    ``base_lr``/``total_steps`` are *runtime inputs* (traced scalars) so one
+    AOT artifact serves every token-budget point of a sweep — the rust
+    coordinator picks the schedule per run.
+    """
+    step_f = jnp.asarray(step, jnp.float32)
+    total_f = jnp.asarray(total_steps, jnp.float32)
+    warm = jnp.maximum(total_f * cfg.warmup_frac, 1.0)
+    warm_lr = base_lr * (step_f + 1.0) / warm
+    prog = jnp.clip((step_f - warm) / jnp.maximum(total_f - warm, 1.0), 0.0, 1.0)
+    cos_lr = base_lr * 0.5 * (1.0 + jnp.cos(np.pi * prog))
+    return jnp.where(step_f < warm, warm_lr, cos_lr)
+
+
+def adamw_update(params, grads, m, v, step, lr, cfg: ModelConfig):
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    b1, b2 = cfg.adam_b1, cfg.adam_b2
+
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads)) + 1e-12
+    )
+    clip = jnp.minimum(1.0, cfg.grad_clip / gnorm)
+
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        g = grads[name] * clip
+        nm = b1 * m[name] + (1 - b1) * g
+        nv = b2 * v[name] + (1 - b2) * g * g
+        mhat = nm / (1 - b1**t)
+        vhat = nv / (1 - b2**t)
+        upd = mhat / (jnp.sqrt(vhat) + cfg.adam_eps)
+        if _is_linear(name):
+            upd = upd + cfg.weight_decay * params[name]
+        new_p[name] = params[name] - lr * upd
+        new_m[name] = nm
+        new_v[name] = nv
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# entrypoints (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def train_step(step, seed, lr, total_steps, tokens, params, m, v, cfg: ModelConfig):
+    """One optimizer step. tokens: i32[B, S+1] (positions 0..S-1 are inputs,
+    1..S the shifted targets); lr/total_steps are runtime scalars."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    tokens_in, targets = tokens[:, :-1], tokens[:, 1:]
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens_in, targets, cfg, key)
+    step_lr = lr_at(step, lr, total_steps, cfg)
+    new_p, new_m, new_v = adamw_update(params, grads, m, v, step, step_lr, cfg)
+    return loss, new_p, new_m, new_v
+
+
+def train_segment(step0, seed, lr, total_steps, tokens_k, params, m, v, cfg: ModelConfig):
+    """K optimizer steps under one PJRT call. tokens_k: i32[K, B, S+1]."""
+    K = tokens_k.shape[0]
+
+    def body(k, carry):
+        params, m, v, loss_sum, _ = carry
+        loss, params, m, v = train_step(
+            step0 + k, seed, lr, total_steps, tokens_k[k], params, m, v, cfg
+        )
+        return params, m, v, loss_sum + loss, loss
+
+    params, m, v, loss_sum, last = jax.lax.fori_loop(
+        0, K, body, (params, m, v, jnp.float32(0.0), jnp.float32(0.0))
+    )
+    return loss_sum / K, last, params, m, v
+
+
+def eval_loss(tokens, params, cfg: ModelConfig):
+    """Validation loss. The forward quantizer is deterministic for Quartet
+    (QuEST RTN), so a fixed key is exact; SR-forward methods eval with the
+    same fixed key for reproducibility."""
+    key = jax.random.PRNGKey(0)
+    return loss_fn(params, tokens[:, :-1], tokens[:, 1:], cfg, key)
+
+
+def forward(tokens, params, cfg: ModelConfig):
+    """Serving entrypoint: prefill logits."""
+    return model_forward(params, tokens, cfg, jax.random.PRNGKey(0))

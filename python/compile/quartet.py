@@ -1,0 +1,272 @@
+"""Quartet quantized linear layer (Algorithm 1) + the baseline method zoo.
+
+One ``custom_vjp`` primitive, ``quant_linear``, parameterized by a static
+``Method`` (forward-quantizer id, backward-quantizer id). All three GEMMs
+of a linear layer — forward ``y = XqWq^T``, input-gradient ``dX = G Wq``
+and weight-gradient ``dW = G^T Xq`` — run on quantized operands.
+
+Methods (Table 3 of the paper):
+
+==============  =====================================  =========================
+id              forward                                backward
+==============  =====================================  =========================
+``bf16``        none                                   exact
+``fp8``         MXFP8 E4M3 (g=32)                      MXFP8 E4M3
+``quartet``     H32 + QuEST RTN MXFP4 + trust mask     Ĥ32 + SR(3/4·) MXFP4,
+                                                       16/9 rescale, masks
+``rtn``         H32 + AbsMax RTN MXFP4                 H32 + AbsMax RTN MXFP4
+``sr``          H32 + AbsMax SR MXFP4                  Ĥ32 + SR(3/4·) MXFP4
+``rtn_pma``     as ``rtn``                             RTN with E[S] PMA scale
+``luq_int4``    AbsMax RTN INT4                        LUQ stochastic INT4
+``luq_fp4``     AbsMax RTN MXFP4 (no Hadamard)         LUQ log-grid FP4
+``jetfire_fp4`` 32x32 2-D block RTN FP4                32x32 2-D block RTN FP4
+``halo_fp4``    H32 + per-tensor RTN FP4               H32 + per-tensor RTN FP4
+``lss_int4``    H32 + INT4 RTN (LSQ-calibrated)        leverage-score sampled
+                                                       2-component INT4 SR
+==============  =====================================  =========================
+
+Shapes: ``x: [T, din]`` (callers flatten batch·seq into T), ``w: [dout,
+din]``, output ``[T, dout]``. T, din, dout must all be multiples of 32 —
+the MX group size; the model configs guarantee this.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import formats as F
+from .hadamard import (
+    block_hadamard,
+    block_hadamard_inv,
+    rademacher_signs,
+    randomized_block_hadamard,
+)
+
+# PMA correction constant E[S] for RTN-AbsMax MXFP4 over Hadamard-rotated
+# Gaussian groups of 32 (the "RTN AbsMax PMA" row of Table 2); measured by
+# rust `analysis::pma` and pinned here (see rust/src/analysis/alignment.rs).
+RTN_PMA_SCALE = 1.0090
+
+
+class Method(NamedTuple):
+    """Static (hashable) quantization configuration for quant_linear."""
+
+    fwd: str
+    bwd: str
+    use_pallas: bool = False
+
+
+METHODS = {
+    "bf16": Method("none", "exact"),
+    "fp8": Method("fp8", "fp8"),
+    "quartet": Method("quest", "quartet_sr"),
+    "quartet_pallas": Method("quest", "quartet_sr", use_pallas=True),
+    "rtn": Method("rtn", "rtn"),
+    "sr": Method("sr", "quartet_sr"),
+    "rtn_pma": Method("rtn", "rtn_pma"),
+    # forward-only (QAT) ablations: quantized forward, exact backward
+    "quest_fwd": Method("quest", "exact"),
+    "rtn_fwd": Method("rtn", "exact"),
+    "sr_fwd": Method("sr", "exact"),
+    # backward-only ablations: exact forward, quantized backward
+    "sr_bwd": Method("none", "quartet_sr"),
+    "rtn_bwd": Method("none", "rtn"),
+    "rtn_pma_bwd": Method("none", "rtn_pma"),
+    # Table 3 baselines
+    "luq_int4": Method("int4", "luq_int4"),
+    "luq_fp4": Method("fp4_plain", "luq_fp4"),
+    "jetfire_fp4": Method("jetfire", "jetfire"),
+    "halo_fp4": Method("halo", "halo"),
+    "lss_int4": Method("lss", "lss"),
+}
+
+
+# ---------------------------------------------------------------------------
+# forward quantizers: x -> (q, trust_mask, hadamard_domain?)
+# ---------------------------------------------------------------------------
+
+
+def _fwd_quant(t, method: Method, key):
+    """Quantize one forward operand. Returns (q, mask, in_h_domain)."""
+    fid = method.fwd
+    if fid == "none":
+        return t, None, False
+    if fid == "fp8":
+        return F.mxfp8_rtn(t), None, False
+    if fid == "quest":
+        if method.use_pallas:
+            from .kernels.quantize import quest_fused_pallas
+
+            q, m = quest_fused_pallas(t)
+        else:
+            q, m = F.quest_quantize(block_hadamard(t))
+        return q, m, True
+    if fid == "rtn":
+        return F.mxfp4_rtn(block_hadamard(t)), None, True
+    if fid == "sr":
+        u = jax.random.uniform(key, t.shape)
+        # The paper's SR-AbsMax *forward* keeps plain absmax scaling with SR
+        # on the grid (prescale=1; the absmax e8m0 scale already prevents
+        # clipping, so SR stays unbiased without range compensation).
+        return F.mxfp4_sr(block_hadamard(t), u, prescale=1.0), None, True
+    if fid == "int4":
+        return F.int4_rtn(t), None, False
+    if fid == "fp4_plain":
+        return F.mxfp4_rtn(t), None, False
+    if fid == "jetfire":
+        return F.jetfire_fp4(t), None, False
+    if fid == "halo":
+        return F.halo_fp4(block_hadamard(t)), None, True
+    if fid == "lss":
+        return F.int4_rtn(block_hadamard(t)), None, True
+    raise ValueError(f"unknown forward quantizer {fid!r}")
+
+
+# ---------------------------------------------------------------------------
+# backward GEMM helper: quantize (g, op) along the contraction axis, multiply
+# ---------------------------------------------------------------------------
+
+
+def _bwd_gemm(g2d, op2d, method: Method, key):
+    """Compute ``g2d @ op2d.T`` with both operands quantized per method.bwd.
+
+    ``g2d: [R, C]``, ``op2d: [S, C]`` — contraction along C (the axis that
+    carries the MX groups / Hadamard blocks). Returns ``[R, S]``.
+    """
+    bid = method.bwd
+    if bid == "exact":
+        return g2d @ op2d.T
+    if bid == "fp8":
+        return F.mxfp8_rtn(g2d) @ F.mxfp8_rtn(op2d).T
+    if bid == "quartet_sr":
+        c = g2d.shape[-1]
+        ks, kg, ko = jax.random.split(key, 3)
+        signs = rademacher_signs(ks, c)
+        if method.use_pallas:
+            from .kernels.gemm import mxfp4_matmul_pallas
+            from .kernels.quantize import sr_fused_pallas
+
+            gq = sr_fused_pallas(g2d, signs, jax.random.uniform(kg, g2d.shape))
+            oq = sr_fused_pallas(op2d, signs, jax.random.uniform(ko, op2d.shape))
+            return (16.0 / 9.0) * mxfp4_matmul_pallas(gq, oq)
+        gh = randomized_block_hadamard(g2d, signs)
+        oh = randomized_block_hadamard(op2d, signs)
+        gq = F.mxfp4_sr(gh, jax.random.uniform(kg, g2d.shape))
+        oq = F.mxfp4_sr(oh, jax.random.uniform(ko, op2d.shape))
+        return (16.0 / 9.0) * (gq @ oq.T)
+    if bid in ("rtn", "rtn_pma"):
+        gq = F.mxfp4_rtn(block_hadamard(g2d))
+        oq = F.mxfp4_rtn(block_hadamard(op2d))
+        out = gq @ oq.T
+        if bid == "rtn_pma":
+            out = out * (RTN_PMA_SCALE ** 2)
+        return out
+    if bid == "luq_int4":
+        kg, ko = jax.random.split(key)
+        gq = F.luq_int4(g2d, jax.random.uniform(kg, g2d.shape))
+        oq = F.int4_rtn(op2d)
+        return gq @ oq.T
+    if bid == "luq_fp4":
+        kg, ko = jax.random.split(key)
+        gq = F.luq_fp4(g2d, jax.random.uniform(kg, g2d.shape))
+        oq = F.mxfp4_rtn(op2d)
+        return gq @ oq.T
+    if bid == "jetfire":
+        return F.jetfire_fp4(g2d) @ F.jetfire_fp4(op2d).T
+    if bid == "halo":
+        return F.halo_fp4(block_hadamard(g2d)) @ F.halo_fp4(block_hadamard(op2d)).T
+    if bid == "lss":
+        return _lss_bwd_gemm(g2d, op2d, key)
+    raise ValueError(f"unknown backward quantizer {bid!r}")
+
+
+def _lss_bwd_gemm(g2d, op2d, key):
+    """LSS (Xi et al. 2023) INT4 backward, simplified.
+
+    Bit-splitting: G ≈ Q1 + Q2 with Q1 = SR-INT4(G) and Q2 = SR-INT4 of the
+    residual, where the residual pass is only applied to the half of the
+    rows with the largest leverage scores (row norms) — the "leverage score
+    sampled" structured-sparsity trick. Unbiasedness holds per component;
+    the variance blow-up on small rows is what destabilizes long runs
+    (observed in Table 3 as NaNs).
+    """
+    kg1, kg2, ko = jax.random.split(key, 3)
+    q1 = F.int4_sr(g2d, jax.random.uniform(kg1, g2d.shape))
+    resid = g2d - q1
+    norms = jnp.sum(resid * resid, axis=-1)
+    med = jnp.median(norms)
+    keep = (norms >= med).astype(g2d.dtype)[:, None]
+    q2 = F.int4_sr(resid * keep * 2.0, jax.random.uniform(kg2, g2d.shape)) * 0.5
+    gq = q1 + q2
+    oq = F.int4_rtn(op2d)
+    return gq @ oq.T
+
+
+# ---------------------------------------------------------------------------
+# the custom_vjp primitive
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def quant_linear(x, w, key, method: Method):
+    """y = quant(x) @ quant(w).T with quantized backward — Algorithm 1."""
+    y, _ = _qlin_fwd(x, w, key, method)
+    return y
+
+
+def _qlin_fwd(x, w, key, method: Method):
+    kx, kw, kb = jax.random.split(key, 3)
+    xq, mx, _ = _fwd_quant(x, method, kx)
+    wq, mw, _ = _fwd_quant(w, method, kw)
+    if method.use_pallas and method.fwd == "quest":
+        from .kernels.gemm import mxfp4_matmul_pallas
+
+        y = mxfp4_matmul_pallas(xq, wq)
+    else:
+        y = xq @ wq.T
+    # Residuals: quantized operands (what the backward GEMMs consume per
+    # Algorithm 1 — W_q and X_q, not the full-precision tensors), the trust
+    # masks, and the backward randomness key.
+    return y, (xq, wq, mx, mw, kb)
+
+
+def _qlin_bwd(method: Method, res, dy):
+    xq, wq, mx, mw, key = res
+    kdx, kdw = jax.random.split(key)
+
+    # dX = dy @ Wq — contraction over dout (last axis of both operands).
+    dxh = _bwd_gemm(dy, wq.T, method, kdx)  # [T, din(_h)]
+    # dW = dy^T @ Xq — contraction over tokens T.
+    dwh = _bwd_gemm(dy.T, xq.T, method, kdw)  # [dout, din(_h)]
+
+    if method.fwd == "quest":
+        # Clip-aware STE: mask in the Hadamard domain, then invert H_g.
+        dx = block_hadamard_inv(dxh * mx)
+        dw = block_hadamard_inv(dwh * mw)
+    elif method.fwd in ("rtn", "sr", "halo", "lss"):
+        # Forward used a Hadamard rotation (no trust mask): plain STE in the
+        # rotated space, then rotate back.
+        dx = block_hadamard_inv(dxh)
+        dw = block_hadamard_inv(dwh)
+    else:
+        dx, dw = dxh, dwh
+
+    return dx, dw, np.zeros(key.shape, jax.dtypes.float0)
+
+
+def _qlin_fwd_rule(x, w, key, method: Method):
+    y, res = _qlin_fwd(x, w, key, method)
+    return y, res
+
+
+quant_linear.defvjp(_qlin_fwd_rule, _qlin_bwd)
+
+
+def quartet_linear(x, w, key):
+    """Convenience wrapper: the paper's headline configuration."""
+    return quant_linear(x, w, key, METHODS["quartet"])

@@ -1,0 +1,93 @@
+"""AOT pipeline: artifacts lower, manifests are consistent, HLO text parses."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import (
+    SIZES,
+    base_lr,
+    lower_artifact,
+    make_config,
+    to_hlo_text,
+)
+from compile.model import param_shapes
+
+
+@pytest.fixture(scope="module")
+def artifact(tmp_path_factory):
+    out = tmp_path_factory.mktemp("art")
+    cfg = make_config("n20k", "quartet")
+    adir = lower_artifact(cfg, str(out), quiet=True)
+    return cfg, adir
+
+
+def test_sizes_param_counts_ascending():
+    counts = [make_config(s, "bf16").non_embedding_params() for s in SIZES]
+    assert counts == sorted(counts)
+    # labels roughly match the count they advertise
+    assert 18_000 < make_config("n20k", "bf16").non_embedding_params() < 23_000
+    assert 7e6 < make_config("n8m", "bf16").non_embedding_params() < 9e6
+
+
+def test_base_lr_monotone_decreasing():
+    lrs = [base_lr(make_config(s, "bf16").non_embedding_params()) for s in SIZES]
+    assert lrs == sorted(lrs, reverse=True)
+
+
+def test_manifest_consistent(artifact):
+    cfg, adir = artifact
+    man = json.load(open(os.path.join(adir, "manifest.json")))
+    shapes = param_shapes(cfg)
+    assert [p["name"] for p in man["params"]] == list(shapes.keys())
+    for p in man["params"]:
+        assert tuple(p["shape"]) == tuple(shapes[p["name"]])
+    ts = man["entrypoints"]["train_step"]
+    # inputs: 4 scalars + tokens + 3*len(params)
+    assert len(ts["inputs"]) == 5 + 3 * len(shapes)
+    assert ts["inputs"][0]["name"] == "step"
+    assert ts["inputs"][4]["name"] == "tokens"
+    assert ts["outputs"][0]["name"] == "loss"
+    assert man["non_embedding_params"] == cfg.non_embedding_params()
+
+
+def test_hlo_text_parses_structurally(artifact):
+    _, adir = artifact
+    for f in ("train_step", "train_segment", "eval_loss", "forward"):
+        text = open(os.path.join(adir, f + ".hlo.txt")).read()
+        assert "ENTRY" in text and "ROOT" in text, f
+        # tuple-rooted (return_tuple=True) so the rust side can decompose
+        assert "tuple(" in text or "tuple " in text, f
+
+
+def test_hlo_text_stable_across_lowerings(artifact):
+    """Lowering the same config twice yields identical HLO text — the
+    determinism the artifact cache (Makefile stamp) relies on."""
+    cfg, adir = artifact
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        adir2 = lower_artifact(cfg, td, entrypoints=("eval_loss",), quiet=True)
+        t1 = open(os.path.join(adir, "eval_loss.hlo.txt")).read()
+        t2 = open(os.path.join(adir2, "eval_loss.hlo.txt")).read()
+    assert t1 == t2
+
+
+def test_forward_batch_override(tmp_path):
+    cfg = make_config("n20k", "quartet", batch=2)
+    adir = lower_artifact(cfg, str(tmp_path), entrypoints=("forward",),
+                          forward_batch=2, quiet=True)
+    man = json.load(open(os.path.join(adir, "manifest.json")))
+    assert man["entrypoints"]["forward"]["inputs"][0]["shape"][0] == 2
+    assert "train_step" not in man["entrypoints"]
+
+
+def test_to_hlo_text_simple_fn():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text

@@ -1,0 +1,226 @@
+"""Format substrate tests: grids, scales, rounding — incl. hypothesis sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.formats as F
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# E2M1 grid
+# ---------------------------------------------------------------------------
+
+FULL_GRID = np.concatenate([-F.E2M1_GRID[::-1], F.E2M1_GRID])
+
+
+def test_e2m1_rtn_is_nearest_gridpoint():
+    x = np.linspace(-8, 8, 4001).astype(np.float32)
+    got = np.asarray(F.e2m1_rtn(jnp.asarray(x)))
+    # brute force nearest (ties away from zero)
+    d = np.abs(x[:, None] - FULL_GRID[None, :])
+    best = d.min(axis=1)
+    assert np.all(np.abs(np.abs(got) - np.abs(x).clip(max=6)) <= best + 1e-6)
+    for g in got:
+        assert np.any(np.isclose(np.abs(g), F.E2M1_GRID)), g
+
+
+def test_e2m1_rtn_ties_away_from_zero():
+    # midpoints: 0.25 -> 0.5, 1.25 -> 1.5, 2.5 -> 3, 5.0 -> 6
+    x = jnp.asarray([0.25, 1.25, 2.5, 5.0, -0.25, -2.5])
+    got = np.asarray(F.e2m1_rtn(x))
+    assert np.allclose(got, [0.5, 1.5, 3.0, 6.0, -0.5, -3.0])
+
+
+def test_e2m1_rtn_clamps():
+    assert float(F.e2m1_rtn(jnp.float32(100.0))) == 6.0
+    assert float(F.e2m1_rtn(jnp.float32(-100.0))) == -6.0
+
+
+def test_e2m1_sr_outputs_on_grid():
+    x = _rand((1024,), 3.0)
+    u = jnp.asarray(RNG.random(1024).astype(np.float32))
+    q = np.asarray(F.e2m1_sr(x, u))
+    for v in q:
+        assert np.any(np.isclose(np.abs(v), F.E2M1_GRID)), v
+
+
+def test_e2m1_sr_unbiased():
+    """E[SR(x)] == clip(x) to statistical precision."""
+    x = jnp.full((200_000,), 1.7, jnp.float32)
+    u = jnp.asarray(RNG.random(200_000).astype(np.float32))
+    q = np.asarray(F.e2m1_sr(x, u))
+    assert set(np.round(np.unique(q), 3)).issubset({1.5, 2.0})
+    assert abs(q.mean() - 1.7) < 5e-3
+
+
+@given(st.floats(min_value=-6.0, max_value=6.0, allow_nan=False, width=32))
+@settings(max_examples=200, deadline=None)
+def test_e2m1_sr_unbiased_pointwise(xval):
+    n = 4096
+    x = jnp.full((n,), np.float32(xval))
+    u = jnp.asarray(np.random.default_rng(abs(hash(xval)) % 2**31).random(n).astype(np.float32))
+    q = np.asarray(F.e2m1_sr(x, u))
+    lo, hi = q.min(), q.max()
+    assert lo <= xval <= hi or np.isclose(lo, hi)
+    assert abs(q.mean() - xval) < 0.15  # between-gridpoint gap is <= 2.0
+
+
+# ---------------------------------------------------------------------------
+# E8M0 scales
+# ---------------------------------------------------------------------------
+
+def test_e8m0_is_power_of_two_and_covers():
+    amax = jnp.asarray(np.abs(RNG.standard_normal(1000)).astype(np.float32) * 10 + 1e-6)
+    s = np.asarray(F.e8m0_scale(amax))
+    exp = np.log2(s)
+    assert np.allclose(exp, np.round(exp))  # powers of two
+    assert np.all(amax / s <= F.E2M1_MAX + 1e-6)  # no clipping
+    assert np.all(amax / s > F.E2M1_MAX / 2 - 1e-6)  # tight (within one binade)
+
+
+def test_e8m0_zero_group_safe():
+    q = np.asarray(F.mxfp4_rtn(jnp.zeros((4, 32))))
+    assert np.all(q == 0) and np.all(np.isfinite(q))
+    q = np.asarray(F.mxfp4_sr(jnp.zeros((4, 32)), jnp.full((4, 32), 0.5)))
+    assert np.all(q == 0) and np.all(np.isfinite(q))
+
+
+# ---------------------------------------------------------------------------
+# MXFP4 / MXFP8 quant-dequant
+# ---------------------------------------------------------------------------
+
+@given(rows=st.sampled_from([1, 2, 8]), groups=st.sampled_from([1, 2, 4]),
+       scale=st.floats(min_value=1e-3, max_value=1e3))
+@settings(max_examples=50, deadline=None)
+def test_mxfp4_rtn_hypothesis(rows, groups, scale):
+    x = _rand((rows, groups * 32), scale)
+    q = np.asarray(F.mxfp4_rtn(x))
+    assert q.shape == x.shape and np.all(np.isfinite(q))
+    # every dequant value = grid value * that group's power-of-two scale
+    xg = np.asarray(x).reshape(rows, groups, 32)
+    qg = q.reshape(rows, groups, 32)
+    for r in range(rows):
+        for g in range(groups):
+            s = np.asarray(F.e8m0_scale(jnp.float32(np.abs(xg[r, g]).max())))
+            ratio = qg[r, g] / s
+            for v in ratio:
+                assert np.any(np.isclose(np.abs(v), F.E2M1_GRID, atol=1e-5)), v
+
+
+def test_mxfp4_rtn_relative_error_bounded():
+    x = _rand((64, 128))
+    q = np.asarray(F.mxfp4_rtn(x))
+    # grid spacing <= 2 at scale; absmax scaling keeps |err| <= s <= absmax/3
+    err = np.abs(q - np.asarray(x))
+    gmax = np.abs(np.asarray(x)).reshape(64, 4, 32).max(-1, keepdims=True)
+    assert np.all(err.reshape(64, 4, 32) <= gmax / 3 + 1e-6)
+
+
+def test_mxfp4_sr_unbiased_with_compensation():
+    """(4/3)·E[SR(3/4 x)] == x — the Algorithm 1 identity."""
+    x = _rand((1, 32), 2.0)
+    acc = np.zeros((1, 32), np.float64)
+    trials = 3000
+    for i in range(trials):
+        u = jnp.asarray(np.random.default_rng(i).random((1, 32)).astype(np.float32))
+        acc += np.asarray(F.mxfp4_sr(x, u))
+    est = (4.0 / 3.0) * acc / trials
+    assert np.allclose(est, np.asarray(x), atol=0.05)
+
+
+def test_mxfp4_sr_never_exceeds_grid_after_prescale():
+    x = _rand((16, 64), 100.0)
+    u = jnp.asarray(RNG.random((16, 64)).astype(np.float32))
+    xg = np.asarray(x).reshape(16, 2, 32)
+    q = np.asarray(F.mxfp4_sr(x, u)).reshape(16, 2, 32)
+    for r in range(16):
+        for g in range(2):
+            s = np.asarray(F.e8m0_scale(jnp.float32(np.abs(xg[r, g]).max())))
+            assert np.all(np.abs(q[r, g] / s) <= 6.0 + 1e-5)
+
+
+def test_mxfp8_much_tighter_than_mxfp4():
+    x = _rand((256, 128))
+    e4 = float(jnp.mean((F.mxfp4_rtn(x) - x) ** 2))
+    e8 = float(jnp.mean((F.mxfp8_rtn(x) - x) ** 2))
+    assert e8 < e4 / 10  # E4M3 vs E2M1: ~19x on Gaussian data
+
+
+def test_e4m3_representable_values():
+    # spot values exactly representable in E4M3
+    for v in [1.0, 1.125, 240.0, 448.0, 0.015625]:
+        assert float(F.e4m3(jnp.float32(v))) == v
+    assert float(F.e4m3(jnp.float32(1e6))) == F.E4M3_MAX
+
+
+# ---------------------------------------------------------------------------
+# QuEST
+# ---------------------------------------------------------------------------
+
+def test_quest_alpha_matches_numeric_fit():
+    assert abs(F._fit_quest_alpha(1 << 20) - F.QUEST_ALPHA_E2M1) < 0.15
+
+
+def test_quest_lower_mse_than_absmax_on_gaussian():
+    x = _rand((512, 128))
+    q_quest, _ = F.quest_quantize(x)
+    q_absmax = F.mxfp4_rtn(x)
+    mse_q = float(jnp.mean((q_quest - x) ** 2))
+    mse_a = float(jnp.mean((q_absmax - x) ** 2))
+    assert mse_q < mse_a  # Table 2: QuEST 1.35e-2 < RTN AbsMax 1.40e-2
+
+
+def test_quest_mask_marks_clipped():
+    x = _rand((32, 32))
+    x = x.at[0, 0].set(50.0)  # gross outlier
+    q, mask = F.quest_quantize(x)
+    assert float(mask[0, 0]) == 0.0
+    assert float(jnp.mean(mask)) > 0.9
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def test_int4_sr_unbiased():
+    x = jnp.full((100_000, 32), 0.33, jnp.float32) * jnp.asarray(
+        RNG.choice([-1.0, 1.0], (100_000, 32)).astype(np.float32))
+    u = jnp.asarray(RNG.random((100_000, 32)).astype(np.float32))
+    q = np.asarray(F.int4_sr(x, u))
+    assert abs(np.abs(q).mean() - 0.33) < 5e-3
+
+
+def test_luq_fp4_unbiased():
+    x = _rand((1, 32), 1.0)
+    acc = np.zeros((1, 32), np.float64)
+    trials = 4000
+    for i in range(trials):
+        u = jnp.asarray(np.random.default_rng(10_000 + i).random((1, 32)).astype(np.float32))
+        acc += np.asarray(F.luq_fp4(x, u))
+    est = acc / trials
+    # unbiased to statistical precision (coarse log grid → bigger tolerance)
+    assert np.allclose(est, np.asarray(x), atol=0.08)
+
+
+def test_jetfire_blocks_independent():
+    x = np.ones((64, 64), np.float32)
+    x[:32, :32] *= 1000.0  # huge block shouldn't affect others' scales
+    q = np.asarray(F.jetfire_fp4(jnp.asarray(x)))
+    assert np.allclose(q[32:, 32:], 1.0, atol=0.26)
+
+
+def test_halo_per_tensor_scale_coarser_than_mxfp4():
+    x = _rand((256, 128))
+    x = x.at[0, 0].set(500.0)  # single outlier wrecks the whole tensor
+    mse_halo = float(jnp.mean((F.halo_fp4(x) - x) ** 2))
+    mse_mx = float(jnp.mean((F.mxfp4_rtn(x) - x) ** 2))
+    assert mse_halo > mse_mx * 5

@@ -1,0 +1,86 @@
+"""Hadamard transform invariants used throughout Algorithm 1."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.hadamard import (
+    block_hadamard,
+    block_hadamard_inv,
+    hadamard_matrix,
+    rademacher_signs,
+    randomized_block_hadamard,
+    randomized_block_hadamard_inv,
+)
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("g", [2, 4, 8, 16, 32, 64])
+def test_hadamard_orthogonal(g):
+    h = hadamard_matrix(g)
+    assert np.allclose(h @ h.T, np.eye(g), atol=1e-5)
+    assert set(np.round(np.unique(np.abs(h * np.sqrt(g))), 5)) == {1.0}
+
+
+def test_hadamard_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        hadamard_matrix(24)
+
+
+@given(rows=st.sampled_from([1, 4, 32]), groups=st.sampled_from([1, 2, 5]))
+@settings(max_examples=30, deadline=None)
+def test_block_hadamard_roundtrip(rows, groups):
+    x = jnp.asarray(RNG.standard_normal((rows, groups * 32)).astype(np.float32))
+    y = block_hadamard_inv(block_hadamard(x))
+    assert np.allclose(y, x, atol=1e-5)
+
+
+def test_block_hadamard_preserves_norm():
+    x = jnp.asarray(RNG.standard_normal((16, 128)).astype(np.float32))
+    assert np.isclose(float(jnp.linalg.norm(block_hadamard(x))),
+                      float(jnp.linalg.norm(x)), rtol=1e-5)
+
+
+def test_block_hadamard_preserves_group_inner_products():
+    """(H x)·(H w) == x·w per 32-block — why the forward GEMM stays exact."""
+    x = jnp.asarray(RNG.standard_normal((8, 64)).astype(np.float32))
+    w = jnp.asarray(RNG.standard_normal((8, 64)).astype(np.float32))
+    lhs = jnp.sum(block_hadamard(x) * block_hadamard(w), axis=-1)
+    rhs = jnp.sum(x * w, axis=-1)
+    assert np.allclose(lhs, rhs, atol=1e-4)
+
+
+def test_randomized_hadamard_cancels_in_contraction():
+    """Ĥ(g,ξ)·Ĥ(w,ξ) == g·w — why the backward GEMMs stay exact pre-quant."""
+    key = jax.random.PRNGKey(3)
+    signs = rademacher_signs(key, 96)
+    g = jnp.asarray(RNG.standard_normal((16, 96)).astype(np.float32))
+    w = jnp.asarray(RNG.standard_normal((20, 96)).astype(np.float32))
+    lhs = randomized_block_hadamard(g, signs) @ randomized_block_hadamard(w, signs).T
+    assert np.allclose(lhs, g @ w.T, atol=1e-3)
+
+
+def test_randomized_hadamard_roundtrip():
+    key = jax.random.PRNGKey(5)
+    signs = rademacher_signs(key, 64)
+    x = jnp.asarray(RNG.standard_normal((8, 64)).astype(np.float32))
+    y = randomized_block_hadamard_inv(randomized_block_hadamard(x, signs), signs)
+    assert np.allclose(y, x, atol=1e-5)
+
+
+def test_rademacher_signs_are_pm_one():
+    s = np.asarray(rademacher_signs(jax.random.PRNGKey(0), 256))
+    assert set(np.unique(s)) == {-1.0, 1.0}
+    assert abs(s.mean()) < 0.25  # balanced-ish
+
+
+def test_hadamard_spreads_outliers():
+    """A single spike becomes ±1/√32 spread over its group — the outlier
+    mitigation that makes MXFP4 grids usable (paper §3)."""
+    x = np.zeros((1, 32), np.float32)
+    x[0, 5] = 32.0
+    y = np.asarray(block_hadamard(jnp.asarray(x)))
+    assert np.allclose(np.abs(y), 32.0 / np.sqrt(32), atol=1e-4)

@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes; equality is exact-or-nearly (same op sequence on
+the same data — only the tiling differs, which XLA CPU evaluates
+deterministically).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    block_hadamard_pallas,
+    mxfp4_matmul_pallas,
+    quest_fused_pallas,
+    sr_fused_pallas,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(99)
+
+
+def _rand(shape, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32) * scale)
+
+
+ROWS = st.sampled_from([32, 64, 128, 256])
+GROUPS = st.sampled_from([1, 2, 4])
+
+
+@given(rows=ROWS, groups=GROUPS)
+@settings(max_examples=12, deadline=None)
+def test_hadamard_kernel_matches_ref(rows, groups):
+    x = _rand((rows, groups * 32))
+    got = block_hadamard_pallas(x, tile_rows=32)
+    want = ref.block_hadamard_ref(x)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@given(rows=ROWS, groups=GROUPS, scale=st.sampled_from([0.01, 1.0, 100.0]))
+@settings(max_examples=12, deadline=None)
+def test_quest_kernel_matches_ref(rows, groups, scale):
+    x = _rand((rows, groups * 32), scale)
+    q1, m1 = quest_fused_pallas(x, tile_rows=32)
+    q2, m2 = ref.quest_fused_ref(x)
+    np.testing.assert_allclose(q1, q2, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+@given(rows=ROWS, groups=GROUPS)
+@settings(max_examples=12, deadline=None)
+def test_sr_kernel_matches_ref(rows, groups):
+    d = groups * 32
+    x = _rand((rows, d))
+    signs = jnp.asarray(RNG.choice([-1.0, 1.0], d).astype(np.float32))
+    u = jnp.asarray(RNG.random((rows, d)).astype(np.float32))
+    got = sr_fused_pallas(x, signs, u, tile_rows=32)
+    want = ref.sr_fused_ref(x, signs, u)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@given(m=st.sampled_from([32, 128]), n=st.sampled_from([32, 64]),
+       k=st.sampled_from([32, 128, 256]))
+@settings(max_examples=12, deadline=None)
+def test_gemm_kernel_matches_ref(m, n, k):
+    a, b = _rand((m, k)), _rand((n, k))
+    got = mxfp4_matmul_pallas(a, b, tile_m=32, tile_n=32, tile_k=32)
+    want = ref.mxfp4_matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_multi_k_tile_accumulation():
+    """K-loop accumulation across grid steps (the tcgen05 pipeline analog)."""
+    a, b = _rand((64, 512)), _rand((64, 512))
+    got = mxfp4_matmul_pallas(a, b, tile_m=32, tile_n=32, tile_k=64)
+    np.testing.assert_allclose(got, a @ b.T, rtol=1e-4, atol=1e-4)
+
+
+def test_kernels_jit_compile():
+    """Kernels must lower inside jit (what aot.py relies on)."""
+    x = _rand((64, 64))
+
+    @jax.jit
+    def f(x):
+        q, m = quest_fused_pallas(x)
+        return jnp.sum(q) + jnp.sum(m)
+
+    assert np.isfinite(float(f(x)))
+
+
+def test_sr_kernel_error_masked_by_16_9_identity():
+    """Full Algorithm-1 backward identity through the kernels:
+    E[(16/9)·SR(¾Ĥg)·SR(¾Ĥw)ᵀ] ≈ g·wᵀ."""
+    d = 64
+    g2 = _rand((32, d))
+    w2 = _rand((16, d))
+    signs = jnp.asarray(RNG.choice([-1.0, 1.0], d).astype(np.float32))
+    acc = np.zeros((32, 16), np.float64)
+    trials = 200
+    for i in range(trials):
+        r = np.random.default_rng(i)
+        ug = jnp.asarray(r.random((32, d)).astype(np.float32))
+        uw = jnp.asarray(r.random((16, d)).astype(np.float32))
+        gq = sr_fused_pallas(g2, signs, ug, tile_rows=32)
+        wq = sr_fused_pallas(w2, signs, uw, tile_rows=16)
+        acc += (16.0 / 9.0) * np.asarray(mxfp4_matmul_pallas(gq, wq, tile_m=32, tile_n=16, tile_k=32))
+    est = acc / trials
+    want = np.asarray(g2 @ w2.T)
+    denom = np.abs(want).mean()
+    assert np.abs(est - want).mean() / denom < 0.1

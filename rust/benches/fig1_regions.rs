@@ -1,0 +1,63 @@
+//! Fig 1(b,c): precision-optimality regions under the compute-budget
+//! substitution of §4.2, at paper scale (paper law + Table 3 eff factors
+//! + the paper's measured Blackwell speedups).
+
+use quartet::scaling::law::PAPER_LAW;
+use quartet::scaling::regions::{optimal_precision, region_grid, render_ascii, Precision};
+use quartet::scaling::speedup::{Speedups, PAPER_MEASURED_FP4};
+
+fn candidates(fp4_backward: bool) -> Vec<Precision> {
+    let eff_d = if fp4_backward { 0.94 } else { 0.99 };
+    vec![
+        Precision {
+            label: "8:fp8-fwd".into(),
+            eff_n: 0.93,
+            eff_d,
+            speedups: Speedups { forward: 1.0, backward: if fp4_backward { 1.6 } else { 1.0 } },
+        },
+        Precision {
+            label: "4:fp4-fwd".into(),
+            eff_n: 0.64,
+            eff_d,
+            speedups: if fp4_backward {
+                PAPER_MEASURED_FP4
+            } else {
+                Speedups { forward: 2.4, backward: 1.0 }
+            },
+        },
+    ]
+}
+
+fn main() {
+    quartet::util::bench::print_header("Fig 1(b,c) — forward-precision optimality regions");
+    let steps = 28;
+    for (title, fp4_bwd) in [
+        ("Fig 1(b): backward in FP8", false),
+        ("Fig 1(c): backward in FP4 (Quartet)", true),
+    ] {
+        let cands = candidates(fp4_bwd);
+        let grid = region_grid(&PAPER_LAW, &cands, (30e6, 400e9), (10.0, 10_000.0), steps);
+        let fp4_share = grid.iter().filter(|p| p.winner.starts_with('4')).count() as f64
+            / grid.len() as f64;
+        println!("\n{title} — '4' cell = FP4-forward optimal ({:.0}% of grid)", fp4_share * 100.0);
+        println!("           cols: D/N from 10 to 10000 (log)");
+        print!("{}", render_ascii(&grid, steps));
+    }
+
+    // the paper's observation: Llama-3-8B (~15T tokens ⇒ D/N ≈ 1900) and
+    // Qwen-2.5-7B (~18T ⇒ D/N ≈ 2500) land inside the FP4 region of (c)
+    println!("\n[named models under Fig 1(c) assumptions]");
+    let cands = candidates(true);
+    for (name, n, ratio) in [
+        ("Llama-3-8B", 8e9, 1875.0),
+        ("Qwen-2.5-7B", 7e9, 2570.0),
+        ("Chinchilla-opt 70B", 70e9, 20.0),
+    ] {
+        let (win, losses) = optimal_precision(&PAPER_LAW, &cands, n, ratio);
+        let detail: Vec<String> =
+            losses.iter().map(|(l, v)| format!("{l}={v:.4}")).collect();
+        println!("  {name:<20} D/N={ratio:>6.0}  optimal: {:<10} ({})",
+                 win.label, detail.join("  "));
+    }
+    println!("\npaper claim: popular models fall in the FP4-optimal region — training them in FP4 might have been optimal.");
+}

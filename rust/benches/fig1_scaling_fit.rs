@@ -1,0 +1,71 @@
+//! Fig 1(a) + Table 6: fit the precision scaling law.
+//!
+//! Stage 1 fits the base law on bf16 baseline runs, stage 2 fits
+//! per-method (eff_N, eff_D). Uses real run records from `runs/` when
+//! present (`make runs`), and always also runs a paper-constant recovery
+//! pass so the fitter itself is validated against Table 6.
+
+use quartet::bench::runs_root;
+use quartet::coordinator::runrecord::RunRecord;
+use quartet::scaling::fit::{fit_base_law, fit_efficiencies, FitOptions};
+use quartet::scaling::law::{Run, PAPER_LAW};
+
+fn main() {
+    quartet::util::bench::print_header("Fig 1(a) / Table 6 — scaling-law fit");
+
+    // --- paper-recovery validation pass -------------------------------
+    let mut synth = Vec::new();
+    for &n in &[30e6, 50e6, 100e6, 200e6] {
+        for &r in &[25.0, 50.0, 100.0, 200.0, 400.0, 800.0] {
+            synth.push(Run::new(n, r * n, PAPER_LAW.loss(n, r * n), "bf16"));
+            synth.push(Run::new(n, r * n,
+                PAPER_LAW.loss_with_eff(n, r * n, 0.64, 0.94), "quartet"));
+        }
+    }
+    let base_synth: Vec<Run> = synth.iter().filter(|r| r.method == "bf16").cloned().collect();
+    let (law, obj) = fit_base_law(&base_synth, &FitOptions::default());
+    println!("\n[validation on paper-generated grid]");
+    println!("paper Table 6:  A=1.52e5 α=0.589 B=5.25e5 β=0.544 E=1.35 γ=0.274");
+    println!(
+        "refit:          A={:.3e} α={:.3} B={:.3e} β={:.3} E={:.3} γ={:.3}  (huber obj {obj:.2e})",
+        law.a, law.alpha, law.b, law.beta, law.e, law.gamma
+    );
+    let eff = fit_efficiencies(&law, &synth, &FitOptions::default());
+    println!(
+        "recovered quartet eff:  eff_N={:.3} (true 0.64)  eff_D={:.3} (true 0.94)",
+        eff["quartet"].eff_n, eff["quartet"].eff_d
+    );
+
+    // --- fit on real testbed runs --------------------------------------
+    let recs = RunRecord::load_dir(&runs_root()).unwrap_or_default();
+    let runs: Vec<Run> = recs.iter().filter(|r| !r.diverged).map(|r| r.to_fit_run()).collect();
+    let base: Vec<Run> = runs.iter().filter(|r| r.method == "bf16").cloned().collect();
+    if base.len() < 4 {
+        println!("\n[testbed runs] only {} bf16 records in {} — run `make runs` for the real fit",
+                 base.len(), runs_root().display());
+        return;
+    }
+    println!("\n[testbed fit over {} runs ({} baseline)]", runs.len(), base.len());
+    let (tlaw, tobj) = fit_base_law(&base, &FitOptions::default());
+    println!(
+        "base law: A={:.3e} α={:.3} B={:.3e} β={:.3} E={:.3} γ={:.3}  (obj {tobj:.2e})",
+        tlaw.a, tlaw.alpha, tlaw.b, tlaw.beta, tlaw.e, tlaw.gamma
+    );
+    println!("{:<14} {:>10} {:>12} {:>12} {:>10}", "size", "ratio", "observed", "predicted", "err%");
+    for r in &base {
+        let pred = tlaw.loss(r.n, r.d);
+        println!(
+            "{:<14} {:>10.0} {:>12.4} {:>12.4} {:>9.1}%",
+            format!("N={:.0}k", r.n / 1e3),
+            r.d / r.n,
+            r.loss,
+            pred,
+            100.0 * (pred / r.loss - 1.0)
+        );
+    }
+    let teff = fit_efficiencies(&tlaw, &runs, &FitOptions::default());
+    println!("\n{:<12} {:>8} {:>8}   (paper: quartet 0.64/0.94, fp8 ≈ 1/1)", "method", "eff_N", "eff_D");
+    for (m, e) in &teff {
+        println!("{:<12} {:>8.3} {:>8.3}", m, e.eff_n, e.eff_d);
+    }
+}

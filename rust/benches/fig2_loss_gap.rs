@@ -1,0 +1,59 @@
+//! Fig 2(c): final-loss gap vs the unquantized baseline as a function of
+//! data-to-parameter ratio, for backward-only quantization schemes.
+//! Reads run records produced by `repro sweep --preset fig2c`.
+
+use std::collections::BTreeMap;
+
+use quartet::bench::runs_root;
+use quartet::coordinator::runrecord::RunRecord;
+
+fn main() {
+    quartet::util::bench::print_header("Fig 2(c) — loss gap vs D/N for backward-only quantization");
+    let recs = RunRecord::load_dir(&runs_root()).unwrap_or_default();
+
+    let methods = ["bf16", "sr_bwd", "rtn_bwd", "rtn_pma_bwd"];
+    // (method, ratio-bucket) → final val loss
+    let mut table: BTreeMap<(String, u64), f64> = BTreeMap::new();
+    for r in &recs {
+        if methods.contains(&r.method.as_str()) && !r.diverged {
+            table.insert((r.method.clone(), r.ratio.round() as u64), r.final_val_loss);
+        }
+    }
+    let baseline: BTreeMap<u64, f64> = table
+        .iter()
+        .filter(|((m, _), _)| m == "bf16")
+        .map(|((_, r), &l)| (*r, l))
+        .collect();
+    if baseline.is_empty() {
+        println!(
+            "no fig2c records in {} — run:\n  python -m compile.aot --out-dir artifacts --set sweep\n  ./target/release/repro sweep --preset fig2c --out runs",
+            runs_root().display()
+        );
+        return;
+    }
+
+    println!("{:>8} {:>14} {:>14} {:>14}", "D/N", "SR bwd", "RTN bwd", "RTN-PMA bwd");
+    let mut ratios: Vec<u64> = baseline.keys().cloned().collect();
+    ratios.sort_unstable();
+    for r in ratios {
+        let gap = |m: &str| {
+            table
+                .get(&(m.to_string(), r))
+                .map(|l| format!("{:+.4}", l - baseline[&r]))
+                .unwrap_or_else(|| "-".into())
+        };
+        println!(
+            "{:>8} {:>14} {:>14} {:>14}",
+            r,
+            gap("sr_bwd"),
+            gap("rtn_bwd"),
+            gap("rtn_pma_bwd")
+        );
+    }
+    println!(
+        "\npaper shape: RTN's gap *grows* with D/N (bias dominates long runs); \
+         SR's stays flat (unbiased, noise averages out); PMA tracks RTN at \
+         large D/N because S–Q correlations survive the constant fix. \
+         Paper inflection ≈ D/N 400 at 30M scale."
+    );
+}

@@ -1,0 +1,50 @@
+//! Fig 3(c): training dynamics of Quartet vs FP8 at the largest testbed
+//! size — loss-vs-step curves from saved run records (`repro sweep
+//! --preset dynamics` or examples/pretrain_e2e).
+
+use quartet::bench::runs_root;
+use quartet::coordinator::runrecord::RunRecord;
+
+fn main() {
+    quartet::util::bench::print_header("Fig 3(c) — Quartet vs FP8 training dynamics");
+    let mut recs = RunRecord::load_dir(&runs_root()).unwrap_or_default();
+    recs.extend(RunRecord::load_dir(&runs_root().join("e2e")).unwrap_or_default());
+
+    // pick the largest size that has both methods
+    let mut best: Option<(&RunRecord, &RunRecord)> = None;
+    for q in recs.iter().filter(|r| r.method == "quartet") {
+        if let Some(f) = recs
+            .iter()
+            .find(|r| r.method == "fp8" && r.size == q.size && r.steps == q.steps)
+        {
+            if best.map(|(b, _)| q.non_embedding_params > b.non_embedding_params)
+                .unwrap_or(true)
+            {
+                best = Some((q, f));
+            }
+        }
+    }
+    let Some((q, f)) = best else {
+        println!(
+            "need matching quartet+fp8 records — run `cargo run --release --example pretrain_e2e`"
+        );
+        return;
+    };
+
+    println!("size {} ({} non-emb params), {} steps\n", q.size, q.non_embedding_params, q.steps);
+    println!("{:>8} {:>12} {:>12} {:>10}", "step", "quartet", "fp8", "gap");
+    for (i, &(s, lq)) in q.train_curve.iter().enumerate() {
+        if let Some(&(_, lf)) = f.train_curve.get(i) {
+            println!("{s:>8} {lq:>12.4} {lf:>12.4} {:>+10.4}", lq - lf);
+        }
+    }
+    println!(
+        "\nfinal val: quartet {:.4} vs fp8 {:.4} (gap {:+.4})",
+        q.final_val_loss,
+        f.final_val_loss,
+        q.final_val_loss - f.final_val_loss
+    );
+    println!("paper claim: stable FP4 training tracking FP8 closely at 7B — \
+              the testbed twin must show a small, non-growing gap and no divergence.");
+    assert!(!q.diverged, "quartet diverged");
+}

@@ -1,0 +1,34 @@
+//! Table 2: the error–bias trade-off. MSE over Gaussian data and the PMA
+//! misalignment metric per quantizer, printed against the paper's values.
+
+use quartet::analysis::alignment::{gaussian_mse, measure_rtn_pma_constant, pma_misalignment};
+use quartet::bench::paper::TABLE2;
+use quartet::quant::methods::table2_rows;
+use quartet::util::rng::Rng;
+
+fn main() {
+    quartet::util::bench::print_header("Table 2 — error–bias trade-off (Gaussian data, g=32)");
+    let fast = std::env::var("QUARTET_BENCH_FAST").is_ok();
+    let trials = if fast { 150 } else { 1200 };
+    let mut rng = Rng::new(0x7AB1E2);
+
+    println!(
+        "{:<20} {:>12} {:>12} {:>14} {:>14}",
+        "method", "MSE", "paper MSE", "misalign", "paper misalign"
+    );
+    for (q, (pname, _eff_n, pmse, _eff_d, pmis)) in table2_rows().iter().zip(TABLE2) {
+        let mse = gaussian_mse(q.as_ref(), 512, 128, &mut rng);
+        let mis = pma_misalignment(q.as_ref(), 16, 64, trials, &mut rng);
+        println!(
+            "{:<20} {:>12.3e} {:>12.3e} {:>14.3e} {:>14.3e}",
+            q.name(), mse, pmse, mis, pmis
+        );
+        assert_eq!(q.name().split('-').next().is_some(), pname.split('-').next().is_some());
+    }
+
+    let s = measure_rtn_pma_constant(trials, &mut rng);
+    println!("\nmeasured E[S] for RTN-AbsMax(+H): {s:.5} (pinned RTN_PMA_SCALE = {})",
+             quartet::quant::methods::RTN_PMA_SCALE);
+    println!("\npaper ordering check: MSE  SR > RTN > QuEST ; misalignment  SR ≈ 0 < PMA << RTN < QuEST");
+    println!("(eff_N / eff_D* columns of Table 2 come from training fits — see table3_methods bench)");
+}

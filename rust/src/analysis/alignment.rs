@@ -1,0 +1,155 @@
+//! Error/bias statistics behind Ingredient 3 (Table 2, Figure 2).
+//!
+//! * **MSE on Gaussian data** — proxies forward parameter efficiency
+//!   (`eff_N`), Table 2 column 3.
+//! * **PMA misalignment** `1 − E[1/S]` with
+//!   `1/S = ⟨X, Q(X)⟩ / ⟨X, X⟩` — the paper's projection-magnitude
+//!   alignment metric for backward bias, Table 2 column 5. (The rotation
+//!   inside each quantizer preserves inner products, so measuring in the
+//!   original space equals measuring after Ĥ, as the paper defines it.)
+//! * **alignment-vs-depth** — Figure 2(a,b): propagate an activation
+//!   gradient through a deep random linear chain with the backward GEMM
+//!   operands quantized per scheme, tracking cosine similarity and PMA
+//!   against the exact gradient at every depth.
+
+use crate::quant::methods::Quantizer;
+use crate::quant::mxfp4::f32_gemm;
+use crate::util::rng::Rng;
+use crate::util::stats::{cosine, projection_coeff};
+
+/// MSE of quantizing i.i.d. N(0,1) data, matching Table 2's protocol.
+pub fn gaussian_mse(q: &dyn Quantizer, rows: usize, cols: usize, rng: &mut Rng) -> f64 {
+    let x = rng.gaussian_vec(rows * cols, 1.0);
+    let y = q.quantize(&x, rows, cols, rng);
+    crate::util::stats::mse(&y, &x)
+}
+
+/// PMA misalignment `1 − E[⟨X, Q(X)⟩/⟨X, X⟩]` over Gaussian inputs.
+pub fn pma_misalignment(q: &dyn Quantizer, rows: usize, cols: usize, trials: usize,
+                        rng: &mut Rng) -> f64 {
+    let mut acc = 0.0f64;
+    for _ in 0..trials {
+        let x = rng.gaussian_vec(rows * cols, 1.0);
+        let y = q.quantize(&x, rows, cols, rng);
+        acc += projection_coeff(&y, &x);
+    }
+    1.0 - acc / trials as f64
+}
+
+/// E[S] for RTN-AbsMax(+H): the constant that defines the "RTN AbsMax
+/// PMA" pseudo-unbiased scheme. `methods::RTN_PMA_SCALE` pins the result.
+pub fn measure_rtn_pma_constant(trials: usize, rng: &mut Rng) -> f64 {
+    let q = crate::quant::methods::RtnAbsMax { hadamard: true };
+    let (rows, cols) = (16, 64);
+    let mut acc = 0.0f64;
+    for _ in 0..trials {
+        let x = rng.gaussian_vec(rows * cols, 1.0);
+        let y = q.quantize(&x, rows, cols, rng);
+        // S = ⟨X,X⟩ / ⟨X,Q(X)⟩
+        acc += 1.0 / projection_coeff(&y, &x);
+    }
+    acc / trials as f64
+}
+
+/// One depth step of Figure 2's measurement.
+#[derive(Debug, Clone)]
+pub struct DepthAlignment {
+    pub depth: usize,
+    pub cosine: f64,
+    pub pma: f64,
+}
+
+/// Figure 2(a,b): cosine similarity and PMA of inter-layer activation
+/// gradients vs back-propagation depth.
+///
+/// The substrate is a depth-`layers` random linear chain (weights
+/// N(0, 1/d), the variance-preserving regime of a residual-free
+/// backward): the reference gradient propagates exactly,
+/// `g_{l+1} = g_l · W_l`, while the quantized path applies `q` to both
+/// GEMM operands, `ĝ_{l+1} = q(ĝ_l) · q(W_l)` — the same operand-level
+/// quantization the backward pass of a transformer performs at every
+/// linear layer.
+pub fn alignment_vs_depth(q: &dyn Quantizer, layers: usize, batch: usize, dim: usize,
+                          rng: &mut Rng) -> Vec<DepthAlignment> {
+    let scale = 1.0 / (dim as f32).sqrt();
+    let mut g_ref = rng.gaussian_vec(batch * dim, 1.0);
+    let mut g_q = g_ref.clone();
+    let mut out = Vec::with_capacity(layers);
+    for depth in 1..=layers {
+        let w = rng.gaussian_vec(dim * dim, scale);
+        // exact path
+        g_ref = f32_gemm(&g_ref, &w, batch, dim, dim);
+        // quantized path: quantize the (already noisy) gradient and the
+        // weights, multiply in "low precision" (grid values, f32 accum)
+        let gq = q.quantize(&g_q, batch, dim, rng);
+        let wq = q.quantize(&w, dim, dim, rng);
+        g_q = f32_gemm(&gq, &wq, batch, dim, dim);
+        out.push(DepthAlignment {
+            depth,
+            cosine: cosine(&g_q, &g_ref),
+            pma: projection_coeff(&g_q, &g_ref),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::methods::*;
+
+    #[test]
+    fn sr_has_near_zero_misalignment_rtn_does_not() {
+        let mut rng = Rng::new(1);
+        // Quartet-SR is unbiased → misalignment ≈ 0 (Table 2 row 1)
+        let mis_sr = pma_misalignment(&QuartetSr, 16, 64, 300, &mut rng);
+        let mis_rtn = pma_misalignment(&RtnAbsMax { hadamard: true }, 16, 64, 300, &mut rng);
+        assert!(mis_sr.abs() < 3e-3, "SR misalignment {mis_sr}");
+        assert!(mis_rtn > 3e-3, "RTN misalignment {mis_rtn}");
+        assert!(mis_rtn < 5e-2);
+    }
+
+    #[test]
+    fn pma_scheme_repairs_average_alignment() {
+        let mut rng = Rng::new(2);
+        let mis_pma = pma_misalignment(&RtnPma, 16, 64, 400, &mut rng);
+        let mis_rtn = pma_misalignment(&RtnAbsMax { hadamard: true }, 16, 64, 400, &mut rng);
+        assert!(mis_pma.abs() < mis_rtn.abs(), "pma {mis_pma} rtn {mis_rtn}");
+    }
+
+    #[test]
+    fn measured_pma_constant_matches_pinned() {
+        let mut rng = Rng::new(3);
+        let s = measure_rtn_pma_constant(400, &mut rng);
+        assert!(
+            (s - RTN_PMA_SCALE as f64).abs() < 5e-3,
+            "measured {s}, pinned {RTN_PMA_SCALE}"
+        );
+    }
+
+    #[test]
+    fn mse_table2_ordering() {
+        let mut rng = Rng::new(4);
+        let sr = gaussian_mse(&SrAbsMax { hadamard: true }, 128, 128, &mut rng);
+        let rtn = gaussian_mse(&RtnAbsMax { hadamard: true }, 128, 128, &mut rng);
+        let quest = gaussian_mse(&QuestQuantizer, 128, 128, &mut rng);
+        // paper: 2.84e-2 / 1.40e-2 / 1.35e-2
+        assert!(sr > rtn && rtn > quest);
+        assert!((rtn - 1.4e-2).abs() < 6e-3, "rtn {rtn}");
+        assert!((sr - 2.84e-2).abs() < 1.2e-2, "sr {sr}");
+    }
+
+    #[test]
+    fn depth_alignment_decays_and_sr_keeps_magnitude() {
+        let mut rng = Rng::new(5);
+        let sr = alignment_vs_depth(&QuartetSr, 8, 16, 128, &mut rng);
+        let rtn = alignment_vs_depth(&RtnAbsMax { hadamard: true }, 8, 16, 128, &mut rng);
+        // cosine decays with depth for both
+        assert!(sr.last().unwrap().cosine < sr.first().unwrap().cosine);
+        // RTN cosine stays higher (lower error) ...
+        assert!(rtn.last().unwrap().cosine > sr.last().unwrap().cosine);
+        // ... but its magnitude drifts further from 1 than SR's (bias)
+        let drift = |v: &Vec<DepthAlignment>| (v.last().unwrap().pma - 1.0).abs();
+        assert!(drift(&sr) < drift(&rtn) + 0.5, "sanity");
+    }
+}

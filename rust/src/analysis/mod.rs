@@ -1,0 +1,11 @@
+//! Statistical analysis of quantizers: Table 2 (error–bias trade-off),
+//! Figure 2 (gradient alignment vs back-propagation depth), and the
+//! GPTQ/QuaRot post-training-quantization pipeline of Table 7.
+
+pub mod alignment;
+pub mod ptq;
+
+pub use alignment::{
+    alignment_vs_depth, gaussian_mse, measure_rtn_pma_constant, pma_misalignment,
+    DepthAlignment,
+};

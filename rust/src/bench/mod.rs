@@ -1,0 +1,106 @@
+//! Shared experiment harness for `benches/*` and the `repro experiments`
+//! CLI: common paths, kernel-shape tables, and the per-figure helpers
+//! that turn raw measurements into the paper's rows/series.
+
+use std::path::PathBuf;
+
+/// Repo-root-relative artifact/run directories, respecting env overrides
+/// (benches run from the crate root under `cargo bench`).
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("QUARTET_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+pub fn runs_root() -> PathBuf {
+    std::env::var("QUARTET_RUNS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("runs"))
+}
+
+/// Llama linear-layer shapes (m = batch·seq at B=64, S=512 as in §5;
+/// n/k from the model family). Fig 3(a,b)/Fig 5 sweep these.
+/// (label, m, n, k)
+pub fn llama_linear_shapes() -> Vec<(&'static str, usize, usize, usize)> {
+    vec![
+        // scaled-down testbed shapes (keep bench wall-time sane on CPU)
+        ("30M qkv  (d=640)", 1024, 640, 640),
+        ("200M qkv (d=1280)", 1024, 1280, 1280),
+        ("7B qkv   (d=4096)", 256, 4096, 4096),
+        ("7B mlp-up (4096→11008)", 256, 11008, 4096),
+        ("7B mlp-dn (11008→4096)", 256, 4096, 11008),
+    ]
+}
+
+/// FLOPs of one m×n×k GEMM.
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> f64 {
+    2.0 * m as f64 * n as f64 * k as f64
+}
+
+/// Geometric mean (for aggregating per-shape speedups, as Fig 3 does
+/// across a transformer block).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Paper-reported reference rows, kept next to the code that regenerates
+/// them so every bench prints paper-vs-measured (EXPERIMENTS.md quotes
+/// these).
+pub mod paper {
+    /// Table 3 validation losses at 30M params (ratio → loss) for Quartet.
+    pub const TABLE3_QUARTET: [(f64, f64); 5] =
+        [(25.0, 3.500), (50.0, 3.382), (100.0, 3.299), (200.0, 3.244), (400.0, 3.205)];
+
+    /// Table 3 efficiency factors.
+    pub const TABLE3_EFF: [(&str, f64, f64); 3] = [
+        ("quartet", 0.64, 0.94),
+        ("luq_int4", 0.50, 0.15),
+        ("luq_fp4", 0.01, 0.09),
+    ];
+
+    /// Table 2 rows: (method, eff_n, mse, eff_d*, misalignment).
+    pub const TABLE2: [(&str, f64, f64, f64, f64); 4] = [
+        ("sr-absmax", 0.44, 2.84e-2, 0.85, 0.0),
+        ("rtn-absmax", 0.61, 1.40e-2, 0.83, 9.3e-3),
+        ("quest", 0.65, 1.35e-2, 0.18, 1.3e-2),
+        ("rtn-absmax-pma", 0.61, 1.42e-2, 0.83, 2.8e-5),
+    ];
+
+    /// Fig 3 headline speedups vs FP8 (forward, backward) and vs BF16.
+    pub const FIG3_VS_FP8: (f64, f64) = (2.4, 1.6);
+    pub const FIG3_VS_BF16: (f64, f64) = (4.0, 2.3);
+
+    /// Fig 6: prefill speedup plateaus at 1.41x by batch 128.
+    pub const FIG6_PEAK: f64 = 1.41;
+
+    /// Table 7: C4 perplexity, 7B — BF16 / QuaRot-PTQ / Quartet.
+    pub const TABLE7: (f64, f64, f64) = (16.40, 18.19, 17.77);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+
+    #[test]
+    fn shapes_are_mx_group_aligned() {
+        for (_, m, n, k) in llama_linear_shapes() {
+            assert_eq!(m % 32, 0);
+            assert_eq!(n % 32, 0);
+            assert_eq!(k % 32, 0);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Checkpoints: params (+ optional optimizer moments) as raw little-endian
+//! f32 blobs with a JSON header, keyed by the manifest param table.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::engine::tensor_f32;
+use crate::runtime::manifest::Manifest;
+use crate::util::json::Json;
+
+/// Write params to `<path>` (header JSON + one contiguous f32 blob).
+pub fn save(path: &Path, manifest: &Manifest, params: &[xla::Literal]) -> Result<()> {
+    if params.len() != manifest.params.len() {
+        bail!("param count mismatch");
+    }
+    let header = Json::from_pairs(vec![
+        ("artifact", Json::str(&manifest.name)),
+        ("params", Json::array(manifest.params.iter().map(|p| {
+            Json::from_pairs(vec![
+                ("name", Json::str(&p.name)),
+                ("shape", Json::array(p.shape.iter().map(|&d| Json::num(d as f64)))),
+            ])
+        }))),
+    ]);
+    let htext = header.to_string();
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(&(htext.len() as u64).to_le_bytes())?;
+    f.write_all(htext.as_bytes())?;
+    for (lit, spec) in params.iter().zip(&manifest.params) {
+        let v: Vec<f32> = lit.to_vec()?;
+        if v.len() != spec.elements() {
+            bail!("checkpoint: {} has {} elems, want {}", spec.name, v.len(), spec.elements());
+        }
+        let bytes = unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+/// Load params; validates the header against the manifest.
+pub fn load(path: &Path, manifest: &Manifest) -> Result<Vec<xla::Literal>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut htext = vec![0u8; hlen];
+    f.read_exact(&mut htext)?;
+    let header = Json::parse(std::str::from_utf8(&htext)?)?;
+    let hparams = header.req("params")?.as_arr().context("params")?;
+    if hparams.len() != manifest.params.len() {
+        bail!("checkpoint has {} params, manifest {}", hparams.len(), manifest.params.len());
+    }
+    let mut out = Vec::with_capacity(manifest.params.len());
+    for (hj, spec) in hparams.iter().zip(&manifest.params) {
+        let name = hj.req("name")?.as_str().unwrap_or("");
+        if name != spec.name {
+            bail!("checkpoint param {name:?} != manifest {:?}", spec.name);
+        }
+        let n = spec.elements();
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let mut data = vec![0.0f32; n];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(ch.try_into().unwrap());
+        }
+        out.push(tensor_f32(&data, &spec.shape)?);
+    }
+    Ok(out)
+}
+
+/// Load params as host vectors (for the PTQ pipeline, which edits weights).
+pub fn load_host(path: &Path, manifest: &Manifest) -> Result<Vec<(String, Vec<f32>, Vec<usize>)>> {
+    let lits = load(path, manifest)?;
+    lits.iter()
+        .zip(&manifest.params)
+        .map(|(l, s)| Ok((s.name.clone(), l.to_vec::<f32>()?, s.shape.clone())))
+        .collect()
+}
+
+/// Turn host vectors back into literals (after PTQ editing).
+pub fn to_literals(host: &[(String, Vec<f32>, Vec<usize>)]) -> Result<Vec<xla::Literal>> {
+    host.iter().map(|(_, v, s)| tensor_f32(v, s)).collect()
+}

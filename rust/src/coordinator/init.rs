@@ -1,0 +1,54 @@
+//! Parameter initialization from manifest metadata (the rust twin of
+//! `model.init_params`: scaled-normal linears, ones for norms, 0.02 for
+//! embeddings, 1/√(2L) residual down-scaling on `wo`/`w_down`).
+
+use anyhow::Result;
+
+use crate::runtime::engine::{tensor_f32, zeros_like};
+use crate::runtime::manifest::Manifest;
+use crate::util::rng::Rng;
+
+fn init_scale(name: &str, shape: &[usize], n_layers: usize) -> f32 {
+    let leaf = name.rsplit('.').next().unwrap_or(name);
+    let fan_in = *shape.last().unwrap_or(&1) as f32;
+    let resid = 1.0 / (2.0 * n_layers as f32).sqrt();
+    match leaf {
+        "tok_emb" => 0.02,
+        "wq" | "wk" | "wv" | "w_gate" | "w_up" => 1.0 / fan_in.sqrt(),
+        "wo" | "w_down" => resid / fan_in.sqrt(),
+        _ => 0.0, // norms: handled as ones
+    }
+}
+
+/// Initial (params, m, v) literal vectors in manifest order.
+pub fn init_state(manifest: &Manifest, seed: u64)
+                  -> Result<(Vec<xla::Literal>, Vec<xla::Literal>, Vec<xla::Literal>)> {
+    let mut rng = Rng::new(seed);
+    let mut params = Vec::with_capacity(manifest.params.len());
+    for spec in &manifest.params {
+        let data = if spec.name.ends_with("norm") {
+            vec![1.0f32; spec.elements()]
+        } else {
+            let scale = init_scale(&spec.name, &spec.shape, manifest.model.n_layers);
+            rng.gaussian_vec(spec.elements(), scale)
+        };
+        params.push(tensor_f32(&data, &spec.shape)?);
+    }
+    let m = manifest.params.iter().map(zeros_like).collect::<Result<Vec<_>>>()?;
+    let v = manifest.params.iter().map(zeros_like).collect::<Result<Vec<_>>>()?;
+    Ok((params, m, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_follow_fan_in() {
+        assert_eq!(init_scale("layer_00.attn_norm", &[64], 2), 0.0);
+        assert!((init_scale("layer_00.wq", &[64, 64], 2) - 0.125).abs() < 1e-6);
+        let wo = init_scale("layer_00.wo", &[64, 64], 2);
+        assert!(wo < 0.125 && wo > 0.0);
+        assert_eq!(init_scale("tok_emb", &[512, 64], 2), 0.02);
+    }
+}

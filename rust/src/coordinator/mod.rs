@@ -1,0 +1,14 @@
+//! Layer-3 coordinator: parameter initialization, the training loop
+//! (segment scheduling, eval, metrics), checkpointing, run records and
+//! the sweep runner that produces the scaling-law grids.
+
+pub mod checkpoint;
+pub mod init;
+pub mod runrecord;
+pub mod sweep;
+pub mod trainer;
+
+pub use init::init_state;
+pub use runrecord::RunRecord;
+pub use sweep::{sweep_presets, SweepJob};
+pub use trainer::{TrainOptions, Trainer};

@@ -1,0 +1,169 @@
+//! Run records: the JSON files `repro sweep` writes and the scaling-law
+//! benches re-fit from.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Everything the fitters need about one completed training run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub artifact: String,
+    pub size: String,
+    pub method: String,
+    pub non_embedding_params: usize,
+    pub tokens: usize,
+    pub steps: usize,
+    pub ratio: f64,
+    pub seed: u64,
+    /// (step, train loss) samples
+    pub train_curve: Vec<(usize, f64)>,
+    /// (step, val loss) samples
+    pub val_curve: Vec<(usize, f64)>,
+    pub final_val_loss: f64,
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+    pub diverged: bool,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        let curve = |c: &Vec<(usize, f64)>| {
+            Json::array(c.iter().map(|&(s, l)| Json::f64s(&[s as f64, l])))
+        };
+        Json::from_pairs(vec![
+            ("artifact", Json::str(&self.artifact)),
+            ("size", Json::str(&self.size)),
+            ("method", Json::str(&self.method)),
+            ("non_embedding_params", Json::num(self.non_embedding_params as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("ratio", Json::num(self.ratio)),
+            ("seed", Json::num(self.seed as f64)),
+            ("train_curve", curve(&self.train_curve)),
+            ("val_curve", curve(&self.val_curve)),
+            ("final_val_loss", Json::num(self.final_val_loss)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec)),
+            ("diverged", Json::Bool(self.diverged)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        let curve = |key: &str| -> Result<Vec<(usize, f64)>> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not array"))?
+                .iter()
+                .map(|p| {
+                    let a = p.as_arr().ok_or_else(|| anyhow!("curve point"))?;
+                    Ok((a[0].as_usize().unwrap_or(0), a[1].as_f64().unwrap_or(f64::NAN)))
+                })
+                .collect()
+        };
+        Ok(RunRecord {
+            artifact: j.req("artifact")?.as_str().unwrap_or("").into(),
+            size: j.req("size")?.as_str().unwrap_or("").into(),
+            method: j.req("method")?.as_str().unwrap_or("").into(),
+            non_embedding_params: j.req("non_embedding_params")?.as_usize().unwrap_or(0),
+            tokens: j.req("tokens")?.as_usize().unwrap_or(0),
+            steps: j.req("steps")?.as_usize().unwrap_or(0),
+            ratio: j.req("ratio")?.as_f64().unwrap_or(0.0),
+            seed: j.req("seed")?.as_usize().unwrap_or(0) as u64,
+            train_curve: curve("train_curve")?,
+            val_curve: curve("val_curve")?,
+            final_val_loss: j.req("final_val_loss")?.as_f64().unwrap_or(f64::NAN),
+            wall_secs: j.req("wall_secs")?.as_f64().unwrap_or(0.0),
+            tokens_per_sec: j.req("tokens_per_sec")?.as_f64().unwrap_or(0.0),
+            diverged: j.req("diverged")?.as_bool().unwrap_or(false),
+        })
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!(
+            "{}_r{}_s{}.json",
+            self.artifact, self.ratio as usize, self.seed
+        ));
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load every run record in a directory.
+    pub fn load_dir(dir: &Path) -> Result<Vec<RunRecord>> {
+        let mut out = Vec::new();
+        if !dir.exists() {
+            return Ok(out);
+        }
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("json") {
+                let j = Json::parse(&std::fs::read_to_string(&path)?)
+                    .with_context(|| format!("parsing {}", path.display()))?;
+                out.push(RunRecord::from_json(&j)?);
+            }
+        }
+        out.sort_by(|a, b| (a.artifact.clone(), a.ratio as u64)
+            .cmp(&(b.artifact.clone(), b.ratio as u64)));
+        Ok(out)
+    }
+
+    /// Into a scaling-law fit point.
+    pub fn to_fit_run(&self) -> crate::scaling::law::Run {
+        crate::scaling::law::Run::new(
+            self.non_embedding_params as f64,
+            self.tokens as f64,
+            self.final_val_loss,
+            &self.method,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunRecord {
+        RunRecord {
+            artifact: "n20k-quartet".into(),
+            size: "n20k".into(),
+            method: "quartet".into(),
+            non_embedding_params: 20480,
+            tokens: 512_000,
+            steps: 1000,
+            ratio: 25.0,
+            seed: 0,
+            train_curve: vec![(0, 6.2), (500, 4.0), (999, 3.5)],
+            val_curve: vec![(999, 3.6)],
+            final_val_loss: 3.6,
+            wall_secs: 12.5,
+            tokens_per_sec: 40_960.0,
+            diverged: false,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = sample();
+        let j = r.to_json();
+        let r2 = RunRecord::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(r2.artifact, r.artifact);
+        assert_eq!(r2.train_curve, r.train_curve);
+        assert_eq!(r2.final_val_loss, r.final_val_loss);
+        assert_eq!(r2.diverged, false);
+    }
+
+    #[test]
+    fn save_load_dir() {
+        let dir = std::env::temp_dir().join(format!("qr_runs_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        sample().save(&dir).unwrap();
+        let loaded = RunRecord::load_dir(&dir).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].steps, 1000);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

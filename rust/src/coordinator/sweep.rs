@@ -1,0 +1,162 @@
+//! Sweep runner: the training grids behind Fig 1 / Fig 2(c) / Table 3,
+//! sized for the CPU testbed (see EXPERIMENTS.md for the paper mapping).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::runrecord::RunRecord;
+use crate::coordinator::trainer::{TrainOptions, Trainer};
+use crate::runtime::engine::Engine;
+
+/// One grid cell: artifact name + token ratio.
+#[derive(Debug, Clone)]
+pub struct SweepJob {
+    pub artifact: String,
+    pub ratio: f64,
+    pub seed: u64,
+}
+
+/// Named presets. `reduced` is what `make runs` executes; `full` extends
+/// ratios/sizes when more wall-clock is available.
+pub fn sweep_presets(name: &str) -> Result<Vec<SweepJob>> {
+    let mut jobs = Vec::new();
+    let mut add = |artifact: &str, ratios: &[f64]| {
+        for &r in ratios {
+            jobs.push(SweepJob { artifact: artifact.into(), ratio: r, seed: 0 });
+        }
+    };
+    match name {
+        // scaling-law grid: baseline across sizes (stage 1) + quartet/fp8
+        // efficiency points (stage 2), sized for the CPU testbed
+        "reduced" => {
+            add("n20k-bf16", &[25.0, 50.0, 100.0]);
+            add("n40k-bf16", &[25.0, 50.0]);
+            add("n80k-bf16", &[25.0]);
+            for m in ["fp8", "quartet"] {
+                add(&format!("n20k-{m}"), &[25.0, 50.0, 100.0]);
+                add(&format!("n40k-{m}"), &[25.0]);
+            }
+        }
+        "full" => {
+            for m in ["bf16", "fp8", "quartet"] {
+                for s in ["n20k", "n40k", "n80k", "n160k"] {
+                    add(&format!("{s}-{m}"), &[25.0, 50.0, 100.0, 200.0]);
+                }
+            }
+        }
+        // Table 3: all methods at the smallest size across ratios
+        "table3" => {
+            for m in ["quartet", "luq_int4", "luq_fp4", "jetfire_fp4", "halo_fp4",
+                      "lss_int4", "fp8", "bf16"] {
+                add(&format!("n20k-{m}"), &[25.0, 50.0, 100.0]);
+            }
+        }
+        // Fig 2(c): backward-only ablations vs data ratio
+        "fig2c" => {
+            for m in ["bf16", "sr_bwd", "rtn_bwd", "rtn_pma_bwd"] {
+                add(&format!("n20k-{m}"), &[25.0, 50.0, 100.0, 200.0]);
+            }
+        }
+        // Fig 3(c): quartet vs fp8 dynamics at the largest size
+        "dynamics" => {
+            add("n1m-quartet", &[4.0]);
+            add("n1m-fp8", &[4.0]);
+        }
+        other => anyhow::bail!("unknown sweep preset {other:?}"),
+    }
+    Ok(jobs)
+}
+
+/// Steps for a (ratio, manifest) pair: ratio·N / (B·S).
+pub fn steps_for_ratio(ratio: f64, non_emb: usize, tokens_per_step: usize) -> usize {
+    ((ratio * non_emb as f64) / tokens_per_step as f64).ceil().max(1.0) as usize
+}
+
+/// Execute a sweep, writing run records into `out_dir`. Skips jobs whose
+/// record already exists (resumable), and jobs whose artifact is missing
+/// (reported at the end) so partial artifact sets still make progress.
+pub fn run_sweep(artifacts_root: &Path, out_dir: &Path, jobs: &[SweepJob],
+                 max_steps: usize, verbose: bool) -> Result<Vec<RunRecord>> {
+    let engine = Engine::cpu()?;
+    let mut records = Vec::new();
+    let mut missing = Vec::new();
+    // cache loaded artifacts across jobs: XLA re-compilation is the
+    // dominant fixed cost (~75s for a quartet train_segment)
+    let mut cache: std::collections::BTreeMap<String, crate::runtime::engine::Artifact> =
+        std::collections::BTreeMap::new();
+    for job in jobs {
+        let rec_path = out_dir.join(format!(
+            "{}_r{}_s{}.json", job.artifact, job.ratio as usize, job.seed
+        ));
+        if rec_path.exists() {
+            let j = crate::util::json::Json::parse(&std::fs::read_to_string(&rec_path)?)?;
+            records.push(RunRecord::from_json(&j).context("cached record")?);
+            if verbose {
+                eprintln!("[sweep] cached {}", rec_path.display());
+            }
+            continue;
+        }
+        let dir = artifacts_root.join(&job.artifact);
+        if !dir.join("manifest.json").exists() {
+            missing.push(job.artifact.clone());
+            continue;
+        }
+        if !cache.contains_key(&job.artifact) {
+            cache.insert(job.artifact.clone(), engine.load_artifact(&dir)?);
+        }
+        let artifact = &cache[&job.artifact];
+        let steps = steps_for_ratio(
+            job.ratio,
+            artifact.manifest.non_embedding_params,
+            artifact.manifest.tokens_per_step(),
+        )
+        .min(max_steps);
+        if verbose {
+            eprintln!(
+                "[sweep] {} ratio {} -> {} steps",
+                job.artifact, job.ratio, steps
+            );
+        }
+        let opts = TrainOptions {
+            steps,
+            seed: job.seed,
+            verbose,
+            ..TrainOptions::default()
+        };
+        let rec = Trainer::new(artifact, opts).train()?;
+        rec.save(out_dir)?;
+        records.push(rec);
+    }
+    if !missing.is_empty() {
+        missing.sort();
+        missing.dedup();
+        eprintln!(
+            "[sweep] skipped {} jobs with missing artifacts: {} \
+             (build with `python -m compile.aot --set <set>`)",
+            missing.len(),
+            missing.join(", ")
+        );
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_nonempty_and_known() {
+        for p in ["reduced", "full", "table3", "fig2c", "dynamics"] {
+            assert!(!sweep_presets(p).unwrap().is_empty(), "{p}");
+        }
+        assert!(sweep_presets("nope").is_err());
+    }
+
+    #[test]
+    fn steps_math() {
+        // 25x tokens on 20480 params at 512 tokens/step = 1000 steps
+        assert_eq!(steps_for_ratio(25.0, 20_480, 512), 1000);
+        assert_eq!(steps_for_ratio(0.001, 20_480, 512), 1);
+    }
+}

@@ -1,0 +1,216 @@
+//! The training loop: segment-scheduled optimizer steps over the AOT
+//! train artifacts, with periodic validation, divergence detection and
+//! run-record emission. This is where L3 owns the event loop.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::init::init_state;
+use crate::coordinator::runrecord::RunRecord;
+use crate::data::corpus::{Corpus, CorpusConfig, Split};
+use crate::data::loader::Batcher;
+use crate::runtime::engine::{
+    literal_scalar_f32, scalar_f32, scalar_i32, tensor_i32, Artifact, Engine,
+};
+
+/// Training options (the run-level knobs; model/schedule shape lives in
+/// the artifact manifest).
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: usize,
+    /// override the manifest LR (None = use manifest)
+    pub lr: Option<f64>,
+    pub seed: u64,
+    /// validate every N steps (0 = only at the end)
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// log train loss every N steps
+    pub log_every: usize,
+    /// use the K-step segment entrypoint when possible
+    pub use_segments: bool,
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 200,
+            lr: None,
+            seed: 0,
+            eval_every: 0,
+            eval_batches: 4,
+            log_every: 25,
+            use_segments: true,
+            verbose: false,
+        }
+    }
+}
+
+/// Trainer over one artifact.
+pub struct Trainer<'a> {
+    pub artifact: &'a Artifact,
+    pub corpus: Corpus,
+    opts: TrainOptions,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(artifact: &'a Artifact, opts: TrainOptions) -> Trainer<'a> {
+        let corpus = Corpus::new(CorpusConfig {
+            vocab: artifact.manifest.model.vocab,
+            ..CorpusConfig::default()
+        });
+        Trainer { artifact, corpus, opts }
+    }
+
+    /// Run the configured number of optimizer steps; returns the record.
+    pub fn train(&mut self) -> Result<RunRecord> {
+        self.train_with_params().map(|(rec, _)| rec)
+    }
+
+    /// As [`Trainer::train`], additionally returning the final parameter
+    /// literals (checkpointing, PTQ pipelines).
+    pub fn train_with_params(&mut self) -> Result<(RunRecord, Vec<xla::Literal>)> {
+        let man = &self.artifact.manifest;
+        let model = &man.model;
+        let lr = self.opts.lr.unwrap_or(model.lr) as f32;
+        let total_steps = self.opts.steps;
+        let seg_k = man.segment_k;
+        let has_segment = man.entrypoints.contains_key("train_segment");
+        let use_segments = self.opts.use_segments && has_segment;
+
+        let mut batcher =
+            Batcher::new(&self.corpus, Split::Train, model.batch, model.seq_len);
+        let (mut params, mut m, mut v) = init_state(man, self.opts.seed)?;
+
+        let mut train_curve = Vec::new();
+        let mut val_curve = Vec::new();
+        let mut diverged = false;
+        let t0 = Instant::now();
+        let mut step = 0usize;
+
+        while step < total_steps && !diverged {
+            let (loss, n_done) = if use_segments && step + seg_k <= total_steps {
+                let tokens = batcher.next_segment(seg_k);
+                let lit_tokens = tensor_i32(
+                    &tokens,
+                    &[seg_k, model.batch, model.seq_len + 1],
+                )?;
+                let mut inputs = vec![
+                    scalar_i32(step as i32)?,
+                    scalar_i32(self.opts.seed as i32)?,
+                    scalar_f32(lr)?,
+                    scalar_f32(total_steps as f32)?,
+                    lit_tokens,
+                ];
+                inputs.extend(params);
+                inputs.extend(m);
+                inputs.extend(v);
+                let mut out = self.artifact.run("train_segment", &inputs)?;
+                // outputs: mean_loss, last_loss, params…, m…, v…
+                let rest = out.split_off(2);
+                let last_loss = literal_scalar_f32(&out[1])?;
+                let n = man.params.len();
+                let mut it = rest.into_iter();
+                params = it.by_ref().take(n).collect();
+                m = it.by_ref().take(n).collect();
+                v = it.collect();
+                (last_loss, seg_k)
+            } else {
+                let tokens = batcher.next_batch();
+                let lit_tokens =
+                    tensor_i32(&tokens, &[model.batch, model.seq_len + 1])?;
+                let mut inputs = vec![
+                    scalar_i32(step as i32)?,
+                    scalar_i32(self.opts.seed as i32)?,
+                    scalar_f32(lr)?,
+                    scalar_f32(total_steps as f32)?,
+                    lit_tokens,
+                ];
+                inputs.extend(params);
+                inputs.extend(m);
+                inputs.extend(v);
+                let mut out = self.artifact.run("train_step", &inputs)?;
+                let rest = out.split_off(1);
+                let loss = literal_scalar_f32(&out[0])?;
+                let n = man.params.len();
+                let mut it = rest.into_iter();
+                params = it.by_ref().take(n).collect();
+                m = it.by_ref().take(n).collect();
+                v = it.collect();
+                (loss, 1)
+            };
+            step += n_done;
+
+            if !loss.is_finite() || loss > 20.0 {
+                diverged = true;
+            }
+            if step % self.opts.log_every.max(1) < n_done || step >= total_steps {
+                train_curve.push((step, loss as f64));
+                if self.opts.verbose {
+                    eprintln!("[train {}] step {step}/{total_steps} loss {loss:.4}", man.name);
+                }
+            }
+            if self.opts.eval_every > 0 && step % self.opts.eval_every < n_done
+                && step < total_steps
+            {
+                let vl = self.validate(&params)?;
+                val_curve.push((step, vl));
+            }
+        }
+
+        let final_val = if diverged { f64::NAN } else { self.validate(&params)? };
+        val_curve.push((step, final_val));
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens_done = step * man.tokens_per_step();
+
+        let rec = RunRecord {
+            artifact: man.name.clone(),
+            size: model.size.clone(),
+            method: model.method.clone(),
+            non_embedding_params: man.non_embedding_params,
+            tokens: tokens_done,
+            steps: step,
+            ratio: tokens_done as f64 / man.non_embedding_params as f64,
+            seed: self.opts.seed,
+            train_curve,
+            val_curve,
+            final_val_loss: final_val,
+            wall_secs: wall,
+            tokens_per_sec: tokens_done as f64 / wall.max(1e-9),
+            diverged,
+        };
+        Ok((rec, params))
+    }
+
+    /// Mean validation loss over `eval_batches` held-out batches.
+    pub fn validate(&self, params: &[xla::Literal]) -> Result<f64> {
+        let man = &self.artifact.manifest;
+        if !man.entrypoints.contains_key("eval_loss") {
+            bail!("artifact {} has no eval_loss entrypoint", man.name);
+        }
+        let model = &man.model;
+        let mut batcher = Batcher::new(&self.corpus, Split::Val, model.batch, model.seq_len);
+        let mut acc = 0.0f64;
+        for _ in 0..self.opts.eval_batches.max(1) {
+            let tokens = batcher.next_batch();
+            let mut inputs =
+                vec![tensor_i32(&tokens, &[model.batch, model.seq_len + 1])?];
+            inputs.extend(params.iter().cloned());
+            let out = self.artifact.run("eval_loss", &inputs)?;
+            acc += literal_scalar_f32(&out[0])? as f64;
+        }
+        Ok(acc / self.opts.eval_batches.max(1) as f64)
+    }
+}
+
+/// Convenience: open engine + artifact + train in one call (used by
+/// examples and the CLI).
+pub fn train_artifact(root: &Path, name: &str, opts: TrainOptions) -> Result<RunRecord> {
+    let engine = Engine::cpu()?;
+    let artifact = engine
+        .load_named(root, name)
+        .with_context(|| format!("loading artifact {name} (run `make artifacts`?)"))?;
+    Trainer::new(&artifact, opts).train()
+}

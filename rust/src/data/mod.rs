@@ -1,0 +1,13 @@
+//! Data pipeline: the synthetic C4 stand-in and batching.
+//!
+//! The paper trains on C4 and reports C4 validation loss; the scaling-law
+//! machinery only needs a *learnable distribution with a controlled
+//! entropy floor* (DESIGN.md §1). [`corpus`] provides that: a Zipfian
+//! unigram mixture with order-2 Markov structure. [`loader`] cuts the
+//! stream into the `[K, B, S+1]` segment tensors the train artifacts eat.
+
+pub mod corpus;
+pub mod loader;
+
+pub use corpus::{Corpus, CorpusConfig, Split};
+pub use loader::Batcher;

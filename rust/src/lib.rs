@@ -1,0 +1,47 @@
+//! # quartet-repro
+//!
+//! Reproduction of *"Quartet: Native FP4 Training Can Be Optimal for Large
+//! Language Models"* (Castro, Panferov et al., 2025) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! This crate is **Layer 3**: the coordinator that owns the event loop,
+//! data pipeline, training orchestration, experiment registry and every
+//! substrate the paper's evaluation needs. The compute graphs (Layer 2:
+//! Llama fwd/bwd + AdamW; Layer 1: fused Pallas quantization kernels) are
+//! AOT-compiled once by `python/compile/aot.py` into HLO-text artifacts
+//! which [`runtime`] loads and executes through the PJRT C API. Python is
+//! never on the training or serving path.
+//!
+//! Module map (see DESIGN.md §4 for the full system inventory):
+//!
+//! * [`util`]        — offline-environment substrates: JSON, RNG, CLI,
+//!                     bench harness, mini property-testing.
+//! * [`quant`]       — bit-exact numeric formats (packed MXFP4, E8M0
+//!                     scales, FP8, INT4), Hadamard transforms and the
+//!                     quantizer zoo (QuEST, SR, LUQ, Jetfire, HALO, LSS).
+//! * [`analysis`]    — MSE / PMA / gradient-alignment metrics (Table 2,
+//!                     Fig 2) and the GPTQ/QuaRot PTQ pipeline (Table 7).
+//! * [`scaling`]     — the precision scaling law, Huber+Nelder–Mead
+//!                     fitter, BOPS speedup model, optimality regions
+//!                     (Fig 1, Fig 4, Table 1/6).
+//! * [`data`]        — synthetic Zipf–Markov corpus, tokenizer, batcher
+//!                     (the C4 stand-in; DESIGN.md §1).
+//! * [`runtime`]     — PJRT client wrapper, artifact manifests,
+//!                     executable cache, literal pools.
+//! * [`coordinator`] — trainer (segment scheduling, metrics, checkpoints),
+//!                     sweep runner, run records.
+//! * [`serve`]       — batched prefill engine (Fig 6).
+//! * [`bench`]       — shared experiment harness used by `benches/*`.
+
+pub mod analysis;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod quant;
+pub mod runtime;
+pub mod scaling;
+pub mod serve;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

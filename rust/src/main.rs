@@ -1,0 +1,207 @@
+//! `repro` — the Quartet reproduction CLI (Layer-3 leader entrypoint).
+//!
+//! ```text
+//! repro info                          # engine + artifact inventory
+//! repro train   --artifact n80k-quartet --steps 200 [--lr 2e-3] [--seed 0]
+//! repro eval    --artifact n80k-quartet --checkpoint ck.bin
+//! repro sweep   --preset reduced --out runs [--max-steps 4000]
+//! repro serve   --artifact n330k-quartet --requests 256
+//! repro regions [--paper]             # Fig 1(b,c) optimality maps
+//! repro table2                        # error-bias statistics
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use quartet::coordinator::sweep::{run_sweep, sweep_presets};
+use quartet::coordinator::trainer::{train_artifact, TrainOptions};
+use quartet::runtime::engine::Engine;
+use quartet::util::cli::Args;
+
+fn artifacts_root(args: &mut Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env()?;
+    match args.subcommand().map(str::to_string).as_deref() {
+        Some("info") => cmd_info(&mut args),
+        Some("train") => cmd_train(&mut args),
+        Some("sweep") => cmd_sweep(&mut args),
+        Some("serve") => cmd_serve(&mut args),
+        Some("regions") => cmd_regions(&mut args),
+        Some("table2") => cmd_table2(&mut args),
+        Some(other) => bail!("unknown subcommand {other:?} (see --help in README)"),
+        None => {
+            println!("usage: repro <info|train|sweep|serve|regions|table2> [flags]");
+            println!("see README.md for the full command reference");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info(args: &mut Args) -> Result<()> {
+    let root = artifacts_root(args);
+    args.finish()?;
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts root: {}", root.display());
+    if let Ok(read) = std::fs::read_dir(&root) {
+        for e in read.flatten() {
+            let dir = e.path();
+            if dir.join("manifest.json").exists() {
+                match engine.load_artifact(&dir) {
+                    Ok(a) => {
+                        let m = &a.manifest;
+                        println!(
+                            "  {:<24} {:>10} non-emb params  d={} L={} method={} eps=[{}]",
+                            m.name,
+                            m.non_embedding_params,
+                            m.model.d_model,
+                            m.model.n_layers,
+                            m.model.method,
+                            m.entrypoints.keys().cloned().collect::<Vec<_>>().join(",")
+                        );
+                    }
+                    Err(e) => println!("  {:<24} INVALID: {e:#}", dir.display()),
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &mut Args) -> Result<()> {
+    let root = artifacts_root(args);
+    let artifact = args.required("artifact")?;
+    let opts = TrainOptions {
+        steps: args.parse_or("steps", 200usize)?,
+        lr: args.get("lr").map(|v| v.parse()).transpose()?,
+        seed: args.parse_or("seed", 0u64)?,
+        eval_every: args.parse_or("eval-every", 0usize)?,
+        eval_batches: args.parse_or("eval-batches", 4usize)?,
+        log_every: args.parse_or("log-every", 25usize)?,
+        use_segments: !args.flag("no-segments"),
+        verbose: true,
+    };
+    let out = args.get("out").map(PathBuf::from);
+    args.finish()?;
+
+    let rec = train_artifact(&root, &artifact, opts)?;
+    println!(
+        "trained {}: steps={} tokens={} final val loss={:.4} ({:.1} tok/s, {:.1}s){}",
+        rec.artifact,
+        rec.steps,
+        rec.tokens,
+        rec.final_val_loss,
+        rec.tokens_per_sec,
+        rec.wall_secs,
+        if rec.diverged { "  [DIVERGED]" } else { "" }
+    );
+    if let Some(dir) = out {
+        let path = rec.save(&dir)?;
+        println!("record: {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &mut Args) -> Result<()> {
+    let root = artifacts_root(args);
+    let preset = args.str_or("preset", "reduced");
+    let out = PathBuf::from(args.str_or("out", "runs"));
+    let max_steps = args.parse_or("max-steps", 6000usize)?;
+    let verbose = !args.flag("quiet");
+    args.finish()?;
+
+    let jobs = sweep_presets(&preset)?;
+    println!("sweep {preset:?}: {} jobs -> {}", jobs.len(), out.display());
+    let recs = run_sweep(&root, &out, &jobs, max_steps, verbose)?;
+    println!("{:<22} {:>8} {:>10} {:>10}", "artifact", "ratio", "val loss", "tok/s");
+    for r in &recs {
+        println!(
+            "{:<22} {:>8.0} {:>10.4} {:>10.0}{}",
+            r.artifact, r.ratio, r.final_val_loss, r.tokens_per_sec,
+            if r.diverged { "  [DIVERGED]" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    let root = artifacts_root(args);
+    let artifact = args.required("artifact")?;
+    let n_requests = args.parse_or("requests", 64usize)?;
+    let seed = args.parse_or("seed", 0u64)?;
+    args.finish()?;
+
+    let engine = Engine::cpu()?;
+    let art = engine.load_named(&root, &artifact)?;
+    let mut eng = quartet::serve::PrefillEngine::new(&art, seed)?;
+    let mut rng = quartet::util::rng::Rng::new(seed);
+    let vocab = art.manifest.model.vocab;
+    for id in 0..n_requests as u64 {
+        let tokens: Vec<i32> = (0..eng.seq).map(|_| rng.below(vocab) as i32).collect();
+        eng.submit(quartet::serve::Request { id, tokens });
+    }
+    let (done, wall, tps) = eng.drain()?;
+    println!(
+        "served {} requests (batch={}, seq={}): {:.3}s wall, {:.0} prefill tokens/s",
+        done.len(),
+        eng.batch,
+        eng.seq,
+        wall,
+        tps
+    );
+    Ok(())
+}
+
+fn cmd_regions(args: &mut Args) -> Result<()> {
+    let steps = args.parse_or("steps", 24usize)?;
+    args.finish()?;
+    use quartet::scaling::law::PAPER_LAW;
+    use quartet::scaling::regions::{region_grid, render_ascii, Precision};
+    use quartet::scaling::speedup::{Speedups, PAPER_MEASURED_FP4};
+
+    for (title, fp4_bwd) in [("Fig 1(b): FP8 backward", false), ("Fig 1(c): FP4 backward", true)] {
+        let cands = vec![
+            Precision {
+                label: "8 (fp8 fwd)".into(),
+                eff_n: 0.93,
+                eff_d: if fp4_bwd { 0.94 } else { 0.99 },
+                speedups: Speedups { forward: 1.0, backward: if fp4_bwd { 1.6 } else { 1.0 } },
+            },
+            Precision {
+                label: "4 (fp4 fwd)".into(),
+                eff_n: 0.64,
+                eff_d: if fp4_bwd { 0.94 } else { 0.99 },
+                speedups: if fp4_bwd {
+                    PAPER_MEASURED_FP4
+                } else {
+                    Speedups { forward: 2.4, backward: 1.0 }
+                },
+            },
+        ];
+        let grid = region_grid(&PAPER_LAW, &cands, (30e6, 100e9), (10.0, 10_000.0), steps);
+        println!("\n{title} (rows: model size desc, cols: D/N 10→10k)");
+        print!("{}", render_ascii(&grid, steps));
+    }
+    Ok(())
+}
+
+fn cmd_table2(args: &mut Args) -> Result<()> {
+    let trials = args.parse_or("trials", 400usize)?;
+    args.finish()?;
+    use quartet::analysis::alignment::{gaussian_mse, pma_misalignment};
+    use quartet::quant::methods::table2_rows;
+    use quartet::util::rng::Rng;
+
+    let mut rng = Rng::new(0x7AB2u64);
+    println!("{:<20} {:>12} {:>16}", "method", "MSE", "misalignment");
+    for q in table2_rows() {
+        let mse = gaussian_mse(q.as_ref(), 256, 128, &mut rng);
+        let mis = pma_misalignment(q.as_ref(), 16, 64, trials, &mut rng);
+        println!("{:<20} {:>12.4e} {:>16.3e}", q.name(), mse, mis);
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! FP4 E2M1 element format: 1 sign, 2 exponent, 1 mantissa bit.
+//!
+//! Representable magnitudes: 0, 0.5, 1, 1.5, 2, 3, 4, 6 — the value grid
+//! Blackwell's tensor cores consume for MXFP4/NVFP4 operands.
+
+/// Non-negative E2M1 magnitudes, indexed by the low 3 bits of the code.
+pub const E2M1_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+pub const E2M1_MAX: f32 = 6.0;
+
+/// Deterministic round-to-nearest on the E2M1 grid (ties away from zero),
+/// clamping to ±6. Bit-identical to `formats.e2m1_rtn` in python.
+pub fn e2m1_rtn(x: f32) -> f32 {
+    let a = x.abs();
+    let step = if a < 2.0 {
+        0.5
+    } else if a < 4.0 {
+        1.0
+    } else {
+        2.0
+    };
+    let q = ((a / step) + 0.5).floor() * step;
+    let q = q.min(E2M1_MAX);
+    if x.is_sign_negative() {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Stochastic rounding on the grid given uniform noise `u ∈ [0,1)`.
+/// For |x| ≤ 6, `E_u[e2m1_sr(x, U)] == x` exactly (the Quartet backward
+/// relies on this; the 3/4 pre-scaling guarantees the domain).
+pub fn e2m1_sr(x: f32, u: f32) -> f32 {
+    let a = x.abs().clamp(0.0, E2M1_MAX);
+    let step = if a < 2.0 {
+        0.5
+    } else if a < 4.0 {
+        1.0
+    } else {
+        2.0
+    };
+    let lo = (a / step).floor() * step;
+    let step_lo = if lo < 2.0 {
+        0.5
+    } else if lo < 4.0 {
+        1.0
+    } else {
+        2.0
+    };
+    let hi = (lo + step_lo).min(E2M1_MAX);
+    let frac = if hi > lo { (a - lo) / (hi - lo) } else { 0.0 };
+    let q = if u < frac { hi } else { lo };
+    if x.is_sign_negative() {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Grid value → 3-bit index, arithmetically (2·q is 0,1,2,3,4,6,8,12 →
+/// codes 0..7; §Perf: replaces the 8-entry linear scan that dominated the
+/// quantize stage profile).
+#[inline]
+fn grid_index(mag: f32) -> u8 {
+    let twice = (2.0 * mag) as u32;
+    match twice {
+        0..=4 => twice as u8,
+        6 => 5,
+        8 => 6,
+        _ => 7, // 12 (=6.0)
+    }
+}
+
+/// Encode a (pre-scaled) value to its 4-bit code: bit 3 = sign, bits 0..2
+/// index [`E2M1_GRID`]. Uses RTN.
+#[inline]
+pub fn e2m1_encode_rtn(x: f32) -> u8 {
+    let q = e2m1_rtn(x);
+    let sign = if q.is_sign_negative() || (q == 0.0 && x < 0.0) { 8u8 } else { 0 };
+    sign | grid_index(q.abs())
+}
+
+/// Encode with stochastic rounding (value must already be |x| ≤ 6).
+#[inline]
+pub fn e2m1_encode_sr(x: f32, u: f32) -> u8 {
+    let q = e2m1_sr(x, u);
+    let sign = if q.is_sign_negative() || (q == 0.0 && x < 0.0) { 8u8 } else { 0 };
+    sign | grid_index(q.abs())
+}
+
+/// Decode a 4-bit code back to f32.
+#[inline]
+pub fn e2m1_decode(code: u8) -> f32 {
+    let mag = E2M1_GRID[(code & 7) as usize];
+    if code & 8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Two-values-per-byte decode LUT (low nibble first): the packed-GEMM hot
+/// path decodes a whole byte with one table lookup.
+pub fn byte_decode_lut() -> [(f32, f32); 256] {
+    let mut lut = [(0.0f32, 0.0f32); 256];
+    for (b, entry) in lut.iter_mut().enumerate() {
+        *entry = (e2m1_decode((b & 0xf) as u8), e2m1_decode((b >> 4) as u8));
+    }
+    lut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtn_nearest_and_ties() {
+        assert_eq!(e2m1_rtn(0.26), 0.5);
+        assert_eq!(e2m1_rtn(0.24), 0.0);
+        assert_eq!(e2m1_rtn(0.25), 0.5); // tie away from zero
+        assert_eq!(e2m1_rtn(2.5), 3.0);
+        assert_eq!(e2m1_rtn(-2.5), -3.0);
+        assert_eq!(e2m1_rtn(5.0), 6.0);
+        assert_eq!(e2m1_rtn(100.0), 6.0);
+        assert_eq!(e2m1_rtn(-100.0), -6.0);
+    }
+
+    #[test]
+    fn sr_bounds_and_unbiasedness() {
+        // value 1.7 lies between 1.5 and 2.0
+        let mut ups = 0usize;
+        let n = 100_000;
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..n {
+            let q = e2m1_sr(1.7, rng.uniform_f32());
+            assert!(q == 1.5 || q == 2.0);
+            if q == 2.0 {
+                ups += 1;
+            }
+        }
+        let mean = (ups as f64 * 2.0 + (n - ups) as f64 * 1.5) / n as f64;
+        assert!((mean - 1.7).abs() < 5e-3, "{mean}");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_codes() {
+        for code in 0u8..16 {
+            let v = e2m1_decode(code);
+            let back = e2m1_encode_rtn(v);
+            // -0.0 and +0.0 decode equal; compare by value
+            assert_eq!(e2m1_decode(back), v);
+        }
+    }
+
+    #[test]
+    fn encode_matches_rtn() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        for _ in 0..10_000 {
+            let x = rng.gaussian_f32() * 3.0;
+            assert_eq!(e2m1_decode(e2m1_encode_rtn(x)), e2m1_rtn(x));
+        }
+    }
+
+    #[test]
+    fn byte_lut_consistent() {
+        let lut = byte_decode_lut();
+        assert_eq!(lut[0x10].0, 0.0); // low nibble 0 -> 0.0
+        assert_eq!(lut[0x10].1, 0.5); // high nibble 1 -> grid[1] = 0.5
+        assert_eq!(lut[0x9f].0, -6.0); // low nibble 0xf -> sign|grid[7]... 0xf = -6
+        assert_eq!(lut[0x9f].1, -0.5); // high nibble 0x9 -> -grid[1]
+    }
+
+    #[test]
+    fn byte_lut_values() {
+        let lut = byte_decode_lut();
+        for b in 0..256usize {
+            assert_eq!(lut[b].0, e2m1_decode((b & 0xf) as u8));
+            assert_eq!(lut[b].1, e2m1_decode((b >> 4) as u8));
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! E8M0 shared-scale format: 8 exponent bits, no mantissa (power-of-two
+//! scales), bias 127 — one scale byte per 32-element MX group.
+
+/// An E8M0 scale byte. Stored value is the biased exponent; 0xFF is NaN
+/// per the OCP spec and never produced here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct E8m0(pub u8);
+
+/// Smallest exponent we emit. The spec floor is -127, but the f32 twin
+/// (python formats.py) clamps at -98 because XLA CPU flushes subnormals;
+/// the rust side matches so both substrates quantize identically.
+pub const MIN_EXP: i32 = -98;
+pub const MAX_EXP: i32 = 127;
+
+impl E8m0 {
+    /// Scale covering `absmax` into ±target_max: 2^ceil(log2(amax/target)).
+    pub fn from_absmax(absmax: f32, target_max: f32) -> E8m0 {
+        let safe = absmax.max((MIN_EXP as f32).exp2());
+        let exp = (safe / target_max).log2().ceil() as i32;
+        E8m0::from_exp(exp)
+    }
+
+    pub fn from_exp(exp: i32) -> E8m0 {
+        let e = exp.clamp(MIN_EXP, MAX_EXP);
+        E8m0((e + 127) as u8)
+    }
+
+    #[inline]
+    pub fn exp(self) -> i32 {
+        self.0 as i32 - 127
+    }
+
+    /// The scale value as f32 (always exact: power of two in range).
+    #[inline]
+    pub fn value(self) -> f32 {
+        (self.exp() as f32).exp2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_without_clipping() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..10_000 {
+            let amax = rng.uniform_f32() * 100.0 + 1e-5;
+            let s = E8m0::from_absmax(amax, 6.0).value();
+            assert!(amax / s <= 6.0 + 1e-4, "amax={amax} s={s}");
+            assert!(amax / s > 3.0 - 1e-4, "scale too coarse: amax={amax} s={s}");
+        }
+    }
+
+    #[test]
+    fn power_of_two() {
+        for amax in [0.01f32, 0.5, 1.0, 7.3, 512.0] {
+            let v = E8m0::from_absmax(amax, 6.0).value();
+            assert_eq!(v.log2().fract(), 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_absmax_safe() {
+        let s = E8m0::from_absmax(0.0, 6.0);
+        assert!(s.value() > 0.0 && s.value().is_finite());
+        assert_eq!(s.exp(), MIN_EXP);
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        for e in MIN_EXP..=MAX_EXP {
+            assert_eq!(E8m0::from_exp(e).exp(), e);
+        }
+    }
+}

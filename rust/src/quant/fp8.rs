@@ -1,0 +1,81 @@
+//! FP8 (E4M3) element format + MXFP8 group quantization — the paper's
+//! "lossless" baseline precision.
+
+use crate::quant::e8m0::E8m0;
+use crate::quant::mxfp4::MX_GROUP;
+
+pub const E4M3_MAX: f32 = 448.0;
+
+/// Round f32 to E4M3, nearest (ties away from zero), clamping to ±448.
+/// Matches `formats.e4m3` in python (same min-normal handling).
+pub fn e4m3(x: f32) -> f32 {
+    if x == 0.0 {
+        return 0.0;
+    }
+    let a = x.abs();
+    let bias = 7;
+    let min_exp = 1 - bias; // -6
+    let e = a.max(1e-38).log2().floor().max(min_exp as f32);
+    let ulp = (e - 3.0).exp2();
+    let q = ((a / ulp) + 0.5).floor() * ulp;
+    let q = q.min(E4M3_MAX);
+    if x < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+/// MXFP8: E4M3 elements + shared E8M0 scale per 32-group (quant-dequant).
+pub fn mxfp8_rtn(data: &[f32]) -> Vec<f32> {
+    assert_eq!(data.len() % MX_GROUP, 0);
+    let mut out = vec![0.0f32; data.len()];
+    for (g, chunk) in data.chunks(MX_GROUP).enumerate() {
+        let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = E8m0::from_absmax(amax, E4M3_MAX).value();
+        for (i, &v) in chunk.iter().enumerate() {
+            out[g * MX_GROUP + i] = e4m3(v / s) * s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn representable_values_exact() {
+        for v in [1.0f32, 1.125, 240.0, 448.0, 0.015625, -3.5] {
+            assert_eq!(e4m3(v), v);
+        }
+    }
+
+    #[test]
+    fn clamps_at_max() {
+        assert_eq!(e4m3(1e6), E4M3_MAX);
+        assert_eq!(e4m3(-1e6), -E4M3_MAX);
+    }
+
+    #[test]
+    fn rounding_to_nearest() {
+        // at binade [1,2): ulp = 1/8
+        assert_eq!(e4m3(1.0 + 1.0 / 32.0), 1.0);
+        assert_eq!(e4m3(1.0 + 3.0 / 32.0), 1.125);
+    }
+
+    #[test]
+    fn mxfp8_error_much_smaller_than_fp4() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let x = rng.gaussian_vec(32 * 128, 1.0);
+        let q8 = mxfp8_rtn(&x);
+        let mut rng2 = crate::util::rng::Rng::new(2);
+        let q4 = crate::quant::mxfp4::Mxfp4Tensor::quantize(
+            &x, 128, 32, crate::quant::QuantMode::Rtn, &mut rng2,
+        )
+        .dequantize();
+        let e8 = crate::util::stats::mse(&q8, &x);
+        let e4 = crate::util::stats::mse(&q4, &x);
+        assert!(e8 < e4 / 10.0, "fp8 {e8} vs fp4 {e4}");
+    }
+}

@@ -1,0 +1,226 @@
+//! Block Hadamard transforms (rust twin of `python/compile/hadamard.py`).
+//!
+//! Two execution strategies, both exercised by the Fig 3/Fig 5 benches:
+//!
+//! * **matmul form** — multiply each 32-group by the dense normalized H₃₂
+//!   (what the GPU kernel and the Pallas kernel do: Hadamard as a GEMM);
+//! * **FWHT form** — in-place O(g log g) butterflies, the fast CPU path
+//!   the coordinator actually uses on the hot loop.
+//!
+//! Both are bit-comparable up to f32 reassociation; tests pin them equal
+//! within 1e-5 and pin FWHT against the dense definition.
+
+use crate::util::rng::Rng;
+
+/// Dense normalized Sylvester Hadamard matrix H_g (g a power of two),
+/// row-major.
+pub fn hadamard_matrix(g: usize) -> Vec<f32> {
+    assert!(g.is_power_of_two() && g > 0, "g must be a power of two");
+    let mut h = vec![1.0f32];
+    let mut size = 1;
+    while size < g {
+        let mut next = vec![0.0f32; 4 * size * size];
+        for r in 0..size {
+            for c in 0..size {
+                let v = h[r * size + c];
+                next[r * 2 * size + c] = v;
+                next[r * 2 * size + size + c] = v;
+                next[(size + r) * 2 * size + c] = v;
+                next[(size + r) * 2 * size + size + c] = -v;
+            }
+        }
+        h = next;
+        size *= 2;
+    }
+    let norm = 1.0 / (g as f32).sqrt();
+    h.iter_mut().for_each(|v| *v *= norm);
+    h
+}
+
+/// In-place fast Walsh–Hadamard transform of one g-length block
+/// (normalized). O(g log g).
+pub fn fwht(block: &mut [f32]) {
+    let g = block.len();
+    debug_assert!(g.is_power_of_two());
+    let mut h = 1;
+    while h < g {
+        let mut i = 0;
+        while i < g {
+            for j in i..i + h {
+                let (x, y) = (block[j], block[j + h]);
+                block[j] = x + y;
+                block[j + h] = x - y;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (g as f32).sqrt();
+    block.iter_mut().for_each(|v| *v *= norm);
+}
+
+/// Apply H_g to each contiguous g-group along the last axis (FWHT path).
+pub fn block_hadamard(data: &mut [f32], g: usize) {
+    assert_eq!(data.len() % g, 0);
+    for chunk in data.chunks_mut(g) {
+        fwht(chunk);
+    }
+}
+
+/// Inverse block transform. Sylvester H is symmetric and orthogonal, so
+/// H⁻¹ = H — provided for readability at call sites.
+pub fn block_hadamard_inv(data: &mut [f32], g: usize) {
+    block_hadamard(data, g);
+}
+
+/// Reusable transform plan: caches the dense matrix for the matmul path
+/// and carries the group size (mirrors the Pallas kernel's BlockSpec).
+pub struct BlockHadamard {
+    pub g: usize,
+    dense: Vec<f32>,
+}
+
+impl BlockHadamard {
+    pub fn new(g: usize) -> BlockHadamard {
+        BlockHadamard { g, dense: hadamard_matrix(g) }
+    }
+
+    /// Matmul-form transform (out-of-place): per group, y = x · H.
+    /// This is the arithmetic the GPU Stage-1 kernel performs on the MXU.
+    pub fn apply_matmul(&self, data: &[f32]) -> Vec<f32> {
+        assert_eq!(data.len() % self.g, 0);
+        let g = self.g;
+        let mut out = vec![0.0f32; data.len()];
+        for (i, chunk) in data.chunks(g).enumerate() {
+            let dst = &mut out[i * g..(i + 1) * g];
+            for c in 0..g {
+                let mut acc = 0.0f32;
+                for r in 0..g {
+                    acc += chunk[r] * self.dense[r * g + c];
+                }
+                dst[c] = acc;
+            }
+        }
+        out
+    }
+
+    /// FWHT-form transform (in-place) — the coordinator's fast path.
+    pub fn apply_fwht(&self, data: &mut [f32]) {
+        block_hadamard(data, self.g);
+    }
+}
+
+/// Rademacher sign vector of length d for the randomized transform Ĥ.
+pub fn rademacher(rng: &mut Rng, d: usize) -> Vec<f32> {
+    (0..d).map(|_| rng.rademacher()).collect()
+}
+
+/// Randomized block Hadamard Ĥ(x, ξ) = H·diag(ξ)·x applied per g-group
+/// along rows of a [rows, d] row-major matrix (in place).
+pub fn randomized_block_hadamard(data: &mut [f32], signs: &[f32], g: usize) {
+    let d = signs.len();
+    assert_eq!(data.len() % d, 0);
+    for row in data.chunks_mut(d) {
+        for (v, s) in row.iter_mut().zip(signs) {
+            *v *= s;
+        }
+        block_hadamard(row, g);
+    }
+}
+
+/// Inverse of the randomized transform: diag(ξ)·H⁻¹·y.
+pub fn randomized_block_hadamard_inv(data: &mut [f32], signs: &[f32], g: usize) {
+    let d = signs.len();
+    assert_eq!(data.len() % d, 0);
+    for row in data.chunks_mut(d) {
+        block_hadamard(row, g);
+        for (v, s) in row.iter_mut().zip(signs) {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_orthogonal() {
+        for g in [2usize, 8, 32] {
+            let h = hadamard_matrix(g);
+            for i in 0..g {
+                for j in 0..g {
+                    let dot: f32 = (0..g).map(|k| h[i * g + k] * h[j * g + k]).sum();
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((dot - want).abs() < 1e-5, "g={g} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_matches_dense() {
+        let mut rng = Rng::new(3);
+        for g in [4usize, 32, 64] {
+            let x = rng.gaussian_vec(g, 1.0);
+            let plan = BlockHadamard::new(g);
+            let dense = plan.apply_matmul(&x);
+            let mut fast = x.clone();
+            fwht(&mut fast);
+            for (a, b) in dense.iter().zip(&fast) {
+                assert!((a - b).abs() < 1e-4, "g={g}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn self_inverse() {
+        let mut rng = Rng::new(4);
+        let x = rng.gaussian_vec(128, 1.0);
+        let mut y = x.clone();
+        block_hadamard(&mut y, 32);
+        block_hadamard_inv(&mut y, 32);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn randomized_cancels_in_contraction() {
+        let mut rng = Rng::new(5);
+        let d = 64;
+        let signs = rademacher(&mut rng, d);
+        let g = rng.gaussian_vec(d, 1.0);
+        let w = rng.gaussian_vec(d, 1.0);
+        let want: f32 = g.iter().zip(&w).map(|(a, b)| a * b).sum();
+        let (mut gh, mut wh) = (g.clone(), w.clone());
+        randomized_block_hadamard(&mut gh, &signs, 32);
+        randomized_block_hadamard(&mut wh, &signs, 32);
+        let got: f32 = gh.iter().zip(&wh).map(|(a, b)| a * b).sum();
+        assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+    }
+
+    #[test]
+    fn randomized_roundtrip() {
+        let mut rng = Rng::new(6);
+        let signs = rademacher(&mut rng, 64);
+        let x = rng.gaussian_vec(2 * 64, 1.0);
+        let mut y = x.clone();
+        randomized_block_hadamard(&mut y, &signs, 32);
+        randomized_block_hadamard_inv(&mut y, &signs, 32);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn spreads_outliers() {
+        let mut x = vec![0.0f32; 32];
+        x[5] = 32.0;
+        block_hadamard(&mut x, 32);
+        let expect = 32.0 / (32.0f32).sqrt();
+        for v in &x {
+            assert!((v.abs() - expect).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Symmetric INT4 quantization (LSS / LUQ-INT4 baselines).
+
+use crate::quant::mxfp4::MX_GROUP;
+use crate::util::rng::Rng;
+
+pub const INT4_MAX: f32 = 7.0;
+
+/// AbsMax RTN INT4 per 32-group (quant-dequant).
+pub fn int4_rtn(data: &[f32]) -> Vec<f32> {
+    assert_eq!(data.len() % MX_GROUP, 0);
+    let mut out = vec![0.0f32; data.len()];
+    for (g, chunk) in data.chunks(MX_GROUP).enumerate() {
+        let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = amax.max(1e-20) / INT4_MAX;
+        for (i, &v) in chunk.iter().enumerate() {
+            let q = (v / s).clamp(-INT4_MAX, INT4_MAX);
+            let r = (q.abs() + 0.5).floor().copysign(q);
+            out[g * MX_GROUP + i] = r * s;
+        }
+    }
+    out
+}
+
+/// AbsMax stochastic-rounding INT4 per 32-group (unbiased inside range).
+pub fn int4_sr(data: &[f32], rng: &mut Rng) -> Vec<f32> {
+    assert_eq!(data.len() % MX_GROUP, 0);
+    let mut out = vec![0.0f32; data.len()];
+    for (g, chunk) in data.chunks(MX_GROUP).enumerate() {
+        let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = amax.max(1e-20) / INT4_MAX;
+        for (i, &v) in chunk.iter().enumerate() {
+            let y = (v / s).clamp(-INT4_MAX, INT4_MAX);
+            let lo = y.floor();
+            let q = if rng.uniform_f32() < y - lo { lo + 1.0 } else { lo };
+            out[g * MX_GROUP + i] = q * s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtn_on_integer_grid() {
+        let mut rng = Rng::new(1);
+        let x = rng.gaussian_vec(128, 1.0);
+        let q = int4_rtn(&x);
+        for (g, chunk) in x.chunks(32).enumerate() {
+            let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let s = amax.max(1e-20) / INT4_MAX;
+            for i in 0..32 {
+                let level = q[g * 32 + i] / s;
+                assert!((level - level.round()).abs() < 1e-4);
+                assert!(level.abs() <= INT4_MAX + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn sr_unbiased() {
+        let mut rng = Rng::new(2);
+        let x = vec![0.33f32; 32];
+        let mut acc = 0.0f64;
+        let trials = 20_000;
+        for _ in 0..trials {
+            let q = int4_sr(&x, &mut rng);
+            acc += q.iter().map(|&v| v as f64).sum::<f64>() / 32.0;
+        }
+        assert!((acc / trials as f64 - 0.33).abs() < 3e-3);
+    }
+}

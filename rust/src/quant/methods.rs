@@ -1,0 +1,473 @@
+//! The quantizer zoo: every scheme Table 2 / Table 3 / Fig 2 compare.
+//!
+//! A [`Quantizer`] maps a dense `[rows, cols]` f32 matrix to its
+//! quantize-dequantize image (the values the low-precision GEMM would
+//! consume). Rotation-based schemes own their Hadamard step so the
+//! analysis code can treat every method as a black box, exactly like the
+//! paper's Table 2 protocol ("for fairness, the Hadamard transform is
+//! applied for each scheme before quantization").
+
+use crate::quant::hadamard::{
+    block_hadamard, block_hadamard_inv, rademacher, randomized_block_hadamard,
+    randomized_block_hadamard_inv,
+};
+use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::quant::{e2m1_rtn, fp8, intq, E2M1_MAX};
+use crate::util::rng::Rng;
+
+/// Pseudo-unbiased PMA correction for RTN-AbsMax MXFP4 over rotated
+/// Gaussian groups: the constant E[S] of Table 2's "RTN AbsMax PMA" row.
+/// Measured by `analysis::alignment::measure_rtn_pma_constant` (test-pinned).
+pub const RTN_PMA_SCALE: f32 = 1.0090;
+
+/// A quantization scheme applied to a 2-D tensor.
+pub trait Quantizer {
+    fn name(&self) -> &'static str;
+
+    /// Quantize-dequantize `x` ([rows, cols] row-major, cols % 32 == 0).
+    fn quantize(&self, x: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> Vec<f32>;
+
+    /// Whether repeated calls differ (stochastic rounding inside).
+    fn stochastic(&self) -> bool {
+        false
+    }
+}
+
+// -------------------------------------------------------------------------
+// MXFP4 family
+// -------------------------------------------------------------------------
+
+/// AbsMax + deterministic RTN, optional fixed block Hadamard.
+pub struct RtnAbsMax {
+    pub hadamard: bool,
+}
+
+impl Quantizer for RtnAbsMax {
+    fn name(&self) -> &'static str {
+        if self.hadamard {
+            "rtn-absmax+H"
+        } else {
+            "rtn-absmax"
+        }
+    }
+
+    fn quantize(&self, x: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut work = x.to_vec();
+        if self.hadamard {
+            block_hadamard(&mut work, MX_GROUP);
+        }
+        let t = Mxfp4Tensor::quantize(&work, rows, cols, QuantMode::Rtn, rng);
+        let mut dq = t.dequantize();
+        if self.hadamard {
+            block_hadamard_inv(&mut dq, MX_GROUP);
+        }
+        dq
+    }
+}
+
+/// AbsMax + plain stochastic rounding (unbiased inside the grid), with the
+/// *randomized* block Hadamard (fresh signs per call).
+pub struct SrAbsMax {
+    pub hadamard: bool,
+}
+
+impl Quantizer for SrAbsMax {
+    fn name(&self) -> &'static str {
+        if self.hadamard {
+            "sr-absmax+RH"
+        } else {
+            "sr-absmax"
+        }
+    }
+
+    fn quantize(&self, x: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut work = x.to_vec();
+        let signs = if self.hadamard {
+            let s = rademacher(rng, cols);
+            randomized_block_hadamard(&mut work, &s, MX_GROUP);
+            Some(s)
+        } else {
+            None
+        };
+        let t = Mxfp4Tensor::quantize(&work, rows, cols, QuantMode::Sr, rng);
+        let mut dq = t.dequantize();
+        if let Some(s) = signs {
+            randomized_block_hadamard_inv(&mut dq, &s, MX_GROUP);
+        }
+        dq
+    }
+
+    fn stochastic(&self) -> bool {
+        true
+    }
+}
+
+/// Quartet's backward quantizer: randomized Hadamard + SR(3/4·x) with the
+/// (4/3) per-tensor compensation folded into the dequantized output, so
+/// the scheme is unbiased end to end.
+pub struct QuartetSr;
+
+impl Quantizer for QuartetSr {
+    fn name(&self) -> &'static str {
+        "quartet-sr"
+    }
+
+    fn quantize(&self, x: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut work = x.to_vec();
+        let signs = rademacher(rng, cols);
+        randomized_block_hadamard(&mut work, &signs, MX_GROUP);
+        let t = Mxfp4Tensor::quantize(&work, rows, cols, QuantMode::SrPrescaled, rng);
+        let mut dq = t.dequantize();
+        dq.iter_mut().for_each(|v| *v *= 4.0 / 3.0);
+        randomized_block_hadamard_inv(&mut dq, &signs, MX_GROUP);
+        dq
+    }
+
+    fn stochastic(&self) -> bool {
+        true
+    }
+}
+
+/// QuEST projection (fixed Hadamard + RMSE clip + RTN).
+pub struct QuestQuantizer;
+
+impl Quantizer for QuestQuantizer {
+    fn name(&self) -> &'static str {
+        "quest"
+    }
+
+    fn quantize(&self, x: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut work = x.to_vec();
+        block_hadamard(&mut work, MX_GROUP);
+        let t = Mxfp4Tensor::quantize(&work, rows, cols, QuantMode::Quest, rng);
+        let mut dq = t.dequantize();
+        block_hadamard_inv(&mut dq, MX_GROUP);
+        dq
+    }
+}
+
+/// "RTN AbsMax PMA": RTN with a constant E[S] rescale that repairs the
+/// *average* projection magnitude but not the per-input correlation —
+/// Table 2's pseudo-unbiased row.
+pub struct RtnPma;
+
+impl Quantizer for RtnPma {
+    fn name(&self) -> &'static str {
+        "rtn-absmax-pma"
+    }
+
+    fn quantize(&self, x: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> Vec<f32> {
+        let base = RtnAbsMax { hadamard: true }.quantize(x, rows, cols, rng);
+        base.into_iter().map(|v| v * RTN_PMA_SCALE).collect()
+    }
+}
+
+/// LSQ at convergence: per-tensor MSE-optimal scale (golden-section over
+/// the clip range) + RTN on the E2M1 grid. The learnable-scale dynamics
+/// are irrelevant for Table 2's static statistics; what matters is the
+/// MSE-optimal fixed point.
+pub struct LsqE2m1;
+
+impl Quantizer for LsqE2m1 {
+    fn name(&self) -> &'static str {
+        "lsq-e2m1"
+    }
+
+    fn quantize(&self, x: &[f32], _rows: usize, _cols: usize, _rng: &mut Rng) -> Vec<f32> {
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-20);
+        let mut best = (f64::INFINITY, amax / E2M1_MAX);
+        // scan clip fractions; 64 points is plenty for a smooth 1-D MSE
+        for i in 1..=64 {
+            let clip = amax * i as f32 / 64.0;
+            let s = clip / E2M1_MAX;
+            let mse: f64 = x
+                .iter()
+                .map(|&v| {
+                    let q = e2m1_rtn(v / s) * s;
+                    ((q - v) as f64).powi(2)
+                })
+                .sum();
+            if mse < best.0 {
+                best = (mse, s);
+            }
+        }
+        let s = best.1;
+        x.iter().map(|&v| e2m1_rtn(v / s) * s).collect()
+    }
+}
+
+// -------------------------------------------------------------------------
+// baseline families (Table 3)
+// -------------------------------------------------------------------------
+
+/// LUQ (Chmiel et al.): log-grid SR + stochastic underflow, per 32-group.
+pub struct LuqFp4;
+
+impl Quantizer for LuqFp4 {
+    fn name(&self) -> &'static str {
+        "luq-fp4"
+    }
+
+    fn quantize(&self, x: &[f32], _rows: usize, _cols: usize, rng: &mut Rng) -> Vec<f32> {
+        let levels = 7i32;
+        let mut out = vec![0.0f32; x.len()];
+        for (g, chunk) in x.chunks(MX_GROUP).enumerate() {
+            let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-20);
+            let t = amax / (2.0f32).powi(levels - 1);
+            for (i, &v) in chunk.iter().enumerate() {
+                let a = v.abs();
+                let q = if a < t {
+                    // stochastic underflow: E[q] = a
+                    if rng.uniform_f32() * t < a {
+                        t
+                    } else {
+                        0.0
+                    }
+                } else {
+                    // SR between neighbouring powers of two (unbiased)
+                    let la = (a / t).log2();
+                    let lo = la.floor();
+                    let plo = (2.0f32).powf(lo);
+                    let frac = ((2.0f32).powf(la) - plo) / plo;
+                    if rng.uniform_f32() < frac {
+                        (2.0f32).powf(lo + 1.0) * t
+                    } else {
+                        plo * t
+                    }
+                };
+                out[g * MX_GROUP + i] = q.copysign(v);
+            }
+        }
+        out
+    }
+
+    fn stochastic(&self) -> bool {
+        true
+    }
+}
+
+/// LUQ on the INT4 grid (SR, stochastic underflow implicit in SR-to-zero).
+pub struct LuqInt4;
+
+impl Quantizer for LuqInt4 {
+    fn name(&self) -> &'static str {
+        "luq-int4"
+    }
+
+    fn quantize(&self, x: &[f32], _rows: usize, _cols: usize, rng: &mut Rng) -> Vec<f32> {
+        intq::int4_sr(x, rng)
+    }
+
+    fn stochastic(&self) -> bool {
+        true
+    }
+}
+
+/// Jetfire ported to FP4: 32×32 2-D blocks, per-block absmax, RTN E2M1.
+pub struct JetfireFp4;
+
+impl Quantizer for JetfireFp4 {
+    fn name(&self) -> &'static str {
+        "jetfire-fp4"
+    }
+
+    fn quantize(&self, x: &[f32], rows: usize, cols: usize, _rng: &mut Rng) -> Vec<f32> {
+        assert!(rows % 32 == 0 && cols % 32 == 0, "jetfire needs 32x32 blocks");
+        let mut out = vec![0.0f32; x.len()];
+        for br in (0..rows).step_by(32) {
+            for bc in (0..cols).step_by(32) {
+                let mut amax = 0.0f32;
+                for r in 0..32 {
+                    for c in 0..32 {
+                        amax = amax.max(x[(br + r) * cols + bc + c].abs());
+                    }
+                }
+                let s = amax.max(1e-20) / E2M1_MAX;
+                for r in 0..32 {
+                    for c in 0..32 {
+                        let idx = (br + r) * cols + bc + c;
+                        out[idx] = e2m1_rtn(x[idx] / s) * s;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// HALO-style FP4: fixed block Hadamard + per-*tensor* absmax scale RTN —
+/// the coarse scale is what destabilizes it at 4 bits (Table 3).
+pub struct HaloFp4;
+
+impl Quantizer for HaloFp4 {
+    fn name(&self) -> &'static str {
+        "halo-fp4"
+    }
+
+    fn quantize(&self, x: &[f32], _rows: usize, _cols: usize, _rng: &mut Rng) -> Vec<f32> {
+        let mut work = x.to_vec();
+        block_hadamard(&mut work, MX_GROUP);
+        let amax = work.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-20);
+        let s = amax / E2M1_MAX;
+        let mut dq: Vec<f32> = work.iter().map(|&v| e2m1_rtn(v / s) * s).collect();
+        block_hadamard_inv(&mut dq, MX_GROUP);
+        dq
+    }
+}
+
+/// LSS-style INT4: two-component bit-split SR with leverage-score row
+/// selection for the residual pass (simplified per DESIGN.md §1).
+pub struct LssInt4;
+
+impl Quantizer for LssInt4 {
+    fn name(&self) -> &'static str {
+        "lss-int4"
+    }
+
+    fn quantize(&self, x: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> Vec<f32> {
+        let q1 = intq::int4_sr(x, rng);
+        let resid: Vec<f32> = x.iter().zip(&q1).map(|(a, b)| a - b).collect();
+        // leverage scores = row norms of the residual; keep the top half
+        let mut norms: Vec<(usize, f64)> = (0..rows)
+            .map(|r| {
+                let row = &resid[r * cols..(r + 1) * cols];
+                (r, row.iter().map(|&v| (v as f64).powi(2)).sum())
+            })
+            .collect();
+        norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let keep: std::collections::BTreeSet<usize> =
+            norms[..rows / 2].iter().map(|&(r, _)| r).collect();
+        let mut boosted = vec![0.0f32; x.len()];
+        for r in &keep {
+            for c in 0..cols {
+                // 2x importance-sampling boost on kept rows keeps E[q2] = resid
+                boosted[r * cols + c] = resid[r * cols + c] * 2.0;
+            }
+        }
+        let q2 = intq::int4_sr(&boosted, rng);
+        q1.iter()
+            .zip(&q2)
+            .map(|(a, b)| a + b * 0.5)
+            .collect()
+    }
+
+    fn stochastic(&self) -> bool {
+        true
+    }
+}
+
+/// MXFP8 (E4M3) — the lossless-baseline "quantizer".
+pub struct Mxfp8;
+
+impl Quantizer for Mxfp8 {
+    fn name(&self) -> &'static str {
+        "mxfp8"
+    }
+
+    fn quantize(&self, x: &[f32], _rows: usize, _cols: usize, _rng: &mut Rng) -> Vec<f32> {
+        fp8::mxfp8_rtn(x)
+    }
+}
+
+/// Table 2 row set, in paper order.
+pub fn table2_rows() -> Vec<Box<dyn Quantizer>> {
+    vec![
+        Box::new(SrAbsMax { hadamard: true }),
+        Box::new(RtnAbsMax { hadamard: true }),
+        Box::new(QuestQuantizer),
+        Box::new(RtnPma),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mse;
+
+    fn gauss(rng: &mut Rng, n: usize) -> Vec<f32> {
+        rng.gaussian_vec(n, 1.0)
+    }
+
+    #[test]
+    fn all_quantizers_preserve_shape_and_finiteness() {
+        let mut rng = Rng::new(1);
+        let (rows, cols) = (64, 64);
+        let x = gauss(&mut rng, rows * cols);
+        let zoo: Vec<Box<dyn Quantizer>> = vec![
+            Box::new(RtnAbsMax { hadamard: false }),
+            Box::new(RtnAbsMax { hadamard: true }),
+            Box::new(SrAbsMax { hadamard: true }),
+            Box::new(QuartetSr),
+            Box::new(QuestQuantizer),
+            Box::new(RtnPma),
+            Box::new(LsqE2m1),
+            Box::new(LuqFp4),
+            Box::new(LuqInt4),
+            Box::new(JetfireFp4),
+            Box::new(HaloFp4),
+            Box::new(LssInt4),
+            Box::new(Mxfp8),
+        ];
+        for q in zoo {
+            let y = q.quantize(&x, rows, cols, &mut rng);
+            assert_eq!(y.len(), x.len(), "{}", q.name());
+            assert!(y.iter().all(|v| v.is_finite()), "{}", q.name());
+            assert!(mse(&y, &x) < 1.0, "{} too lossy", q.name());
+        }
+    }
+
+    #[test]
+    fn quartet_sr_unbiased() {
+        let mut rng = Rng::new(2);
+        let x = gauss(&mut rng, 32);
+        let q = QuartetSr;
+        let mut acc = vec![0.0f64; 32];
+        let trials = 3000;
+        for _ in 0..trials {
+            for (a, v) in acc.iter_mut().zip(q.quantize(&x, 1, 32, &mut rng)) {
+                *a += v as f64;
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            assert!((a / trials as f64 - x[i] as f64).abs() < 0.08, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn mse_ordering_matches_table2() {
+        // Table 2 (MSE over Gaussian): SR >> RTN ≈ PMA > QuEST
+        let mut rng = Rng::new(3);
+        let (rows, cols) = (256, 128);
+        let x = gauss(&mut rng, rows * cols);
+        let mut m = |q: &dyn Quantizer| {
+            let y = q.quantize(&x, rows, cols, &mut rng);
+            mse(&y, &x)
+        };
+        let sr = m(&SrAbsMax { hadamard: true });
+        let rtn = m(&RtnAbsMax { hadamard: true });
+        let quest = m(&QuestQuantizer);
+        assert!(sr > 1.5 * rtn, "SR {sr} vs RTN {rtn}");
+        assert!(quest < rtn, "QuEST {quest} vs RTN {rtn}");
+    }
+
+    #[test]
+    fn lsq_beats_absmax_per_tensor() {
+        let mut rng = Rng::new(4);
+        let x = gauss(&mut rng, 64 * 32);
+        let lsq = LsqE2m1.quantize(&x, 64, 32, &mut rng);
+        // compare with per-tensor absmax (halo without hadamard): reuse HaloFp4
+        // minus rotation by constructing it manually
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = amax / E2M1_MAX;
+        let absmax: Vec<f32> = x.iter().map(|&v| e2m1_rtn(v / s) * s).collect();
+        assert!(mse(&lsq, &x) < mse(&absmax, &x));
+    }
+
+    #[test]
+    fn jetfire_requires_32_blocks() {
+        let mut rng = Rng::new(5);
+        let x = gauss(&mut rng, 64 * 64);
+        let y = JetfireFp4.quantize(&x, 64, 64, &mut rng);
+        assert_eq!(y.len(), x.len());
+    }
+}

@@ -1,0 +1,367 @@
+//! Packed MXFP4 tensors: E2M1 nibbles (2 per byte) + one E8M0 scale byte
+//! per 32-element group, plus the quantizers that produce them and the
+//! packed GEMM that consumes them (the measured stand-in for Blackwell's
+//! `tcgen05.mma` block-scaled matmul — Fig 3 / Fig 5).
+
+use crate::quant::e2m1::{
+    byte_decode_lut, e2m1_decode, e2m1_encode_rtn, e2m1_encode_sr, E2M1_MAX,
+};
+use crate::quant::e8m0::E8m0;
+use crate::util::rng::Rng;
+
+/// MX group size (OCP spec: 1-D blocks of 32).
+pub const MX_GROUP: usize = 32;
+
+/// QuEST RMSE-optimal clip multiplier for E2M1 on unit-Gaussian groups —
+/// pinned to the value fitted in `python/compile/formats.py`.
+pub const QUEST_ALPHA_E2M1: f32 = 2.925;
+
+/// How element codes are produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    /// AbsMax group scale, round-to-nearest.
+    Rtn,
+    /// AbsMax group scale, stochastic rounding of (3/4)·x (Algorithm 1
+    /// backward; dequantized values include the 3/4 shrinkage).
+    SrPrescaled,
+    /// AbsMax group scale, plain stochastic rounding (no prescale).
+    Sr,
+    /// QuEST: RMSE-optimal clip snapped to the better of the two
+    /// neighbouring E8M0 binades + trust mask.
+    Quest,
+}
+
+/// A 2-D row-major MXFP4 tensor: `rows x cols` with cols % 32 == 0.
+#[derive(Debug, Clone)]
+pub struct Mxfp4Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    /// packed element codes, low nibble = even column; rows*cols/2 bytes
+    pub codes: Vec<u8>,
+    /// per-group scales, rows * cols/32 entries, row-major
+    pub scales: Vec<E8m0>,
+    /// QuEST trust mask (bit per element, row-major), only for Quest mode
+    pub mask: Option<Vec<u64>>,
+}
+
+impl Mxfp4Tensor {
+    pub fn groups_per_row(&self) -> usize {
+        self.cols / MX_GROUP
+    }
+
+    /// Bytes of real storage (what HBM traffic would be on Blackwell).
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len()
+    }
+
+    /// Quantize a dense f32 tensor.
+    pub fn quantize(data: &[f32], rows: usize, cols: usize, mode: QuantMode,
+                    rng: &mut Rng) -> Mxfp4Tensor {
+        assert_eq!(data.len(), rows * cols);
+        assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
+        let gpr = cols / MX_GROUP;
+        let mut codes = vec![0u8; rows * cols / 2];
+        let mut scales = Vec::with_capacity(rows * gpr);
+        let mut mask = if mode == QuantMode::Quest {
+            Some(vec![0u64; (rows * cols + 63) / 64])
+        } else {
+            None
+        };
+
+        for r in 0..rows {
+            for g in 0..gpr {
+                let base = r * cols + g * MX_GROUP;
+                let group = &data[base..base + MX_GROUP];
+                let (scale, clip_ok) = match mode {
+                    QuantMode::Quest => quest_scale(group),
+                    _ => {
+                        let amax = group.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                        (E8m0::from_absmax(amax, E2M1_MAX), None)
+                    }
+                };
+                scales.push(scale);
+                let inv = 1.0 / scale.value();
+                for i in 0..MX_GROUP {
+                    let x = group[i] * inv;
+                    let code = match mode {
+                        QuantMode::Rtn | QuantMode::Quest => e2m1_encode_rtn(x),
+                        QuantMode::SrPrescaled => e2m1_encode_sr(0.75 * x, rng.uniform_f32()),
+                        QuantMode::Sr => e2m1_encode_sr(x.clamp(-E2M1_MAX, E2M1_MAX),
+                                                        rng.uniform_f32()),
+                    };
+                    let flat = base + i;
+                    if flat & 1 == 0 {
+                        codes[flat / 2] = code;
+                    } else {
+                        codes[flat / 2] |= code << 4;
+                    }
+                    if let Some(m) = mask.as_mut() {
+                        let ok = clip_ok
+                            .map(|c| group[i].abs() <= c)
+                            .unwrap_or(true);
+                        if ok {
+                            m[flat / 64] |= 1u64 << (flat % 64);
+                        }
+                    }
+                }
+            }
+        }
+        Mxfp4Tensor { rows, cols, codes, scales, mask }
+    }
+
+    /// Dequantize back to dense f32 (exactly the values a tensor core
+    /// would consume: code value × group scale).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let gpr = self.groups_per_row();
+        for r in 0..self.rows {
+            for g in 0..gpr {
+                let s = self.scales[r * gpr + g].value();
+                let base = r * self.cols + g * MX_GROUP;
+                for i in 0..MX_GROUP {
+                    let flat = base + i;
+                    let byte = self.codes[flat / 2];
+                    let code = if flat & 1 == 0 { byte & 0xf } else { byte >> 4 };
+                    out[flat] = e2m1_decode(code) * s;
+                }
+            }
+        }
+        out
+    }
+
+    /// Trust-mask lookup (Quest mode); true = gradient passes.
+    pub fn mask_at(&self, flat: usize) -> bool {
+        match &self.mask {
+            Some(m) => m[flat / 64] & (1u64 << (flat % 64)) != 0,
+            None => true,
+        }
+    }
+}
+
+/// QuEST scale selection: clip = α·rms; evaluate both neighbouring E8M0
+/// binades against the group and keep the lower-MSE one. Returns the
+/// scale and the clip threshold (for the trust mask).
+fn quest_scale(group: &[f32]) -> (E8m0, Option<f32>) {
+    let rms = (group.iter().map(|&v| v * v).sum::<f32>() / group.len() as f32
+        + 1e-20)
+        .sqrt();
+    let clip = QUEST_ALPHA_E2M1 * rms;
+    let e = (clip / E2M1_MAX)
+        .max((crate::quant::e8m0::MIN_EXP as f32).exp2())
+        .log2();
+    let lo = E8m0::from_exp(e.floor() as i32);
+    let hi = E8m0::from_exp(e.ceil() as i32);
+    let mse = |s: E8m0| -> f64 {
+        let inv = 1.0 / s.value();
+        group
+            .iter()
+            .map(|&v| {
+                let q = crate::quant::e2m1::e2m1_rtn(v * inv) * s.value();
+                ((q - v) as f64).powi(2)
+            })
+            .sum::<f64>()
+    };
+    let s = if mse(lo) <= mse(hi) { lo } else { hi };
+    (s, Some(s.value() * E2M1_MAX))
+}
+
+// ---------------------------------------------------------------------------
+// packed block-scaled GEMM — the tcgen05.mma stand-in
+// ---------------------------------------------------------------------------
+
+/// C = A · Bᵀ over packed MXFP4 operands, f32 accumulation.
+///
+/// A: [M, K], B: [N, K], both with per-32-group scales along K — exactly
+/// the layout `tcgen05.mma` block-scaled GEMM expects. The inner loop
+/// decodes two elements per byte via a 256-entry LUT, accumulates a
+/// per-group dot product in f32 and applies `sa·sb` once per group (the
+/// hardware applies scales along K the same way).
+pub fn mxfp4_gemm(a: &Mxfp4Tensor, b: &Mxfp4Tensor) -> Vec<f32> {
+    assert_eq!(a.cols, b.cols, "contraction mismatch");
+    let (m, n, k) = (a.rows, b.rows, a.cols);
+    let lut = byte_decode_lut();
+    // §Perf: decode each operand row once into an f32 scratch with the
+    // group scale folded ((m+n)·k/2 LUT reads total instead of m·n·k/2 in
+    // the MAC loop), then run the vectorizable multi-accumulator dot —
+    // the CPU rendering of the tensor-core pipeline, where dequantization
+    // happens once per operand tile on the way into the MAC array.
+    let mut a_dec = vec![0.0f32; m * k];
+    decode_rows(a, &lut, &mut a_dec);
+    let mut b_row = vec![0.0f32; k];
+    let mut c = vec![0.0f32; m * n];
+    for j in 0..n {
+        decode_row(b, j, &lut, &mut b_row);
+        for i in 0..m {
+            c[i * n + j] = dot_f32(&a_dec[i * k..(i + 1) * k], &b_row);
+        }
+    }
+    c
+}
+
+/// Decode one packed row (scales folded) into `out[0..k]`.
+fn decode_row(t: &Mxfp4Tensor, row: usize, lut: &[(f32, f32); 256], out: &mut [f32]) {
+    let k = t.cols;
+    let gpr = k / MX_GROUP;
+    for g in 0..gpr {
+        let s = t.scales[row * gpr + g].value();
+        let base = (row * k + g * MX_GROUP) / 2;
+        let dst = &mut out[g * MX_GROUP..(g + 1) * MX_GROUP];
+        for (bi, pair) in dst.chunks_exact_mut(2).enumerate() {
+            let (lo, hi) = lut[t.codes[base + bi] as usize];
+            pair[0] = lo * s;
+            pair[1] = hi * s;
+        }
+    }
+}
+
+fn decode_rows(t: &Mxfp4Tensor, lut: &[(f32, f32); 256], out: &mut [f32]) {
+    let k = t.cols;
+    for r in 0..t.rows {
+        decode_row(t, r, lut, &mut out[r * k..(r + 1) * k]);
+    }
+}
+
+/// 8-accumulator dot product (breaks the FMA dependency chain so LLVM
+/// auto-vectorizes; the single-accumulator form runs ~8x slower).
+#[inline]
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let (ra, rb) = (&a[c * 8..c * 8 + 8], &b[c * 8..c * 8 + 8]);
+        for u in 0..8 {
+            acc[u] += ra[u] * rb[u];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Dense f32 GEMM C = A·Bᵀ (naive; baseline for the kernel benches).
+pub fn f32_gemm(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let ra = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            c[i * n + j] = dot_f32(ra, &b[j * k..(j + 1) * k]);
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+        rng.gaussian_vec(rows * cols, 1.0)
+    }
+
+    #[test]
+    fn quantize_dequantize_on_grid() {
+        let mut rng = Rng::new(1);
+        let x = rand_mat(&mut rng, 4, 64);
+        let t = Mxfp4Tensor::quantize(&x, 4, 64, QuantMode::Rtn, &mut rng);
+        let dq = t.dequantize();
+        let gpr = 2;
+        for r in 0..4 {
+            for g in 0..gpr {
+                let s = t.scales[r * gpr + g].value();
+                for i in 0..MX_GROUP {
+                    let v = dq[r * 64 + g * MX_GROUP + i] / s;
+                    assert!(
+                        crate::quant::e2m1::E2M1_GRID
+                            .iter()
+                            .any(|&gv| (gv - v.abs()).abs() < 1e-6),
+                        "{v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rtn_error_bounded_by_half_step() {
+        let mut rng = Rng::new(2);
+        let x = rand_mat(&mut rng, 8, 128);
+        let t = Mxfp4Tensor::quantize(&x, 8, 128, QuantMode::Rtn, &mut rng);
+        let dq = t.dequantize();
+        let gpr = 4;
+        for r in 0..8 {
+            for g in 0..gpr {
+                let s = t.scales[r * gpr + g].value();
+                for i in 0..MX_GROUP {
+                    let idx = r * 128 + g * MX_GROUP + i;
+                    assert!((dq[idx] - x[idx]).abs() <= s + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn storage_is_4_25_bits_per_value() {
+        let mut rng = Rng::new(3);
+        let x = rand_mat(&mut rng, 32, 512);
+        let t = Mxfp4Tensor::quantize(&x, 32, 512, QuantMode::Rtn, &mut rng);
+        let bits = t.storage_bytes() as f64 * 8.0 / (32.0 * 512.0);
+        assert!((bits - 4.25).abs() < 1e-9, "{bits}"); // 4 + 8/32
+    }
+
+    #[test]
+    fn gemm_matches_dequantized_reference() {
+        let mut rng = Rng::new(4);
+        let (m, n, k) = (16, 8, 96);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, n, k);
+        let ta = Mxfp4Tensor::quantize(&a, m, k, QuantMode::Rtn, &mut rng);
+        let tb = Mxfp4Tensor::quantize(&b, n, k, QuantMode::Rtn, &mut rng);
+        let got = mxfp4_gemm(&ta, &tb);
+        let want = f32_gemm(&ta.dequantize(), &tb.dequantize(), m, n, k);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn sr_prescaled_unbiased_with_16_9() {
+        let mut rng = Rng::new(5);
+        let x = rand_mat(&mut rng, 1, 32);
+        let mut acc = vec![0.0f64; 32];
+        let trials = 4000;
+        for _ in 0..trials {
+            let t = Mxfp4Tensor::quantize(&x, 1, 32, QuantMode::SrPrescaled, &mut rng);
+            for (a, v) in acc.iter_mut().zip(t.dequantize()) {
+                *a += v as f64;
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let est = (4.0 / 3.0) * a / trials as f64;
+            assert!((est - x[i] as f64).abs() < 0.06, "{i}: {est} vs {}", x[i]);
+        }
+    }
+
+    #[test]
+    fn quest_mask_flags_outliers() {
+        let mut rng = Rng::new(6);
+        let mut x = rand_mat(&mut rng, 1, 32);
+        x[3] = 100.0;
+        let t = Mxfp4Tensor::quantize(&x, 1, 32, QuantMode::Quest, &mut rng);
+        assert!(!t.mask_at(3));
+        let kept: usize = (0..32).filter(|&i| t.mask_at(i)).count();
+        assert!(kept >= 28);
+    }
+
+    #[test]
+    fn quest_mse_beats_absmax_on_gaussian() {
+        let mut rng = Rng::new(7);
+        let x = rand_mat(&mut rng, 64, 512);
+        let q = Mxfp4Tensor::quantize(&x, 64, 512, QuantMode::Quest, &mut rng).dequantize();
+        let a = Mxfp4Tensor::quantize(&x, 64, 512, QuantMode::Rtn, &mut rng).dequantize();
+        let mse_q = crate::util::stats::mse(&q, &x);
+        let mse_a = crate::util::stats::mse(&a, &x);
+        assert!(mse_q < mse_a, "quest {mse_q} vs absmax {mse_a}");
+    }
+}

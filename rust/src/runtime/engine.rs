@@ -1,0 +1,203 @@
+//! PJRT execution engine: compile HLO text once per entrypoint, cache the
+//! executables, validate shapes at the boundary, execute with host
+//! literals.
+//!
+//! xla-rs 0.1.6 returns tuple outputs as a single host literal; we
+//! decompose it into per-output literals that can be fed straight back as
+//! the next call's inputs (no f32 round-trip for the train state — the
+//! segment entrypoint amortizes the host↔device copies; see DESIGN.md §2).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{Dtype, Entrypoint, Manifest, TensorSpec};
+
+/// Process-wide PJRT client wrapper.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// CPU client (the testbed device; see DESIGN.md §1 for the hardware
+    /// substitution rationale).
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an artifact directory (manifest + lazily-compiled entrypoints).
+    pub fn load_artifact(&self, dir: &Path) -> Result<Artifact> {
+        let manifest = Manifest::load(dir)?;
+        Ok(Artifact { client: self.client.clone(), manifest, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Convenience: `artifacts/<name>` under a root.
+    pub fn load_named(&self, root: &Path, name: &str) -> Result<Artifact> {
+        self.load_artifact(&root.join(name))
+    }
+
+    /// Compile a free-standing HLO text file (no manifest) — used by
+    /// smoke tests.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// A loaded artifact: manifest + compiled-executable cache.
+pub struct Artifact {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Artifact {
+    /// Compile (or fetch cached) an entrypoint executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let ep = self.manifest.entrypoint(name)?;
+        let path = self.manifest.dir.join(&ep.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of {}", ep.name))?,
+        );
+        eprintln!(
+            "[runtime] compiled {}/{} in {:.2}s",
+            self.manifest.name,
+            name,
+            t0.elapsed().as_secs_f64()
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entrypoint with positional literal inputs; returns the
+    /// decomposed output tuple.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let ep = self.manifest.entrypoint(name)?;
+        self.check_inputs(ep, inputs)?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        if parts.len() != ep.outputs.len() {
+            bail!(
+                "{}: output arity {} != manifest {}",
+                ep.name,
+                parts.len(),
+                ep.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    fn check_inputs(&self, ep: &Entrypoint, inputs: &[xla::Literal]) -> Result<()> {
+        if inputs.len() != ep.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest wants {}",
+                ep.name,
+                inputs.len(),
+                ep.inputs.len()
+            );
+        }
+        for (lit, spec) in inputs.iter().zip(&ep.inputs) {
+            let n = lit.element_count();
+            if n != spec.elements() {
+                bail!(
+                    "{}: input {:?} has {} elements, expected {} (shape {:?})",
+                    ep.name,
+                    spec.name,
+                    n,
+                    spec.elements(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// host-literal constructors / extractors
+// ---------------------------------------------------------------------------
+
+fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+    }
+}
+
+pub fn scalar_i32(v: i32) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[],
+        bytes_of(&[v]),
+    )?)
+}
+
+pub fn scalar_f32(v: f32) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[],
+        bytes_of(&[v]),
+    )?)
+}
+
+pub fn tensor_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes_of(data),
+    )?)
+}
+
+pub fn tensor_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes_of(data),
+    )?)
+}
+
+/// Extract an f32 scalar from a literal.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}
+
+/// Build the flat input literal list for a train entrypoint.
+pub fn build_inputs(scalars: Vec<xla::Literal>, tokens: xla::Literal,
+                    state: Vec<xla::Literal>) -> Vec<xla::Literal> {
+    let mut v = scalars;
+    v.push(tokens);
+    v.extend(state);
+    v
+}
+
+/// Zero-initialized f32 literal of a spec's shape (optimizer moments).
+pub fn zeros_like(spec: &TensorSpec) -> Result<xla::Literal> {
+    match spec.dtype {
+        Dtype::F32 => tensor_f32(&vec![0.0; spec.elements()], &spec.shape),
+        Dtype::I32 => tensor_i32(&vec![0; spec.elements()], &spec.shape),
+    }
+}

@@ -1,0 +1,251 @@
+//! Artifact manifest parsing + validation (the L2→L3 contract).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element dtypes the artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// Shape+dtype of one named tensor.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("shape"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("shape elem")))
+                .collect::<Result<_>>()?,
+            dtype: Dtype::parse(j.req("dtype")?.as_str().unwrap_or("f32"))?,
+        })
+    }
+}
+
+/// One lowered function: HLO file + input/output signatures.
+#[derive(Debug, Clone)]
+pub struct Entrypoint {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model-config subset the coordinator needs.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub size: String,
+    pub method: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub lr: f64,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub non_embedding_params: usize,
+    pub embedding_params: usize,
+    pub segment_k: usize,
+    pub params: Vec<TensorSpec>,
+    pub entrypoints: BTreeMap<String, Entrypoint>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let version = j.req("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+
+        let cfg = j.req("config")?;
+        let model = ModelMeta {
+            size: cfg.req("name")?.as_str().unwrap_or("?").to_string(),
+            method: cfg.req("method")?.as_str().unwrap_or("?").to_string(),
+            d_model: cfg.req("d_model")?.as_usize().unwrap_or(0),
+            n_layers: cfg.req("n_layers")?.as_usize().unwrap_or(0),
+            vocab: cfg.req("vocab")?.as_usize().unwrap_or(0),
+            seq_len: cfg.req("seq_len")?.as_usize().unwrap_or(0),
+            batch: cfg.req("batch")?.as_usize().unwrap_or(0),
+            lr: cfg.req("lr")?.as_f64().unwrap_or(1e-3),
+        };
+
+        let params = j
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params must be an array"))?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut entrypoints = BTreeMap::new();
+        for (name, ep) in j
+            .req("entrypoints")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("entrypoints must be an object"))?
+        {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                ep.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} must be an array"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entrypoints.insert(
+                name.clone(),
+                Entrypoint {
+                    name: name.clone(),
+                    file: ep.req("file")?.as_str().unwrap_or("").to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+
+        let m = Manifest {
+            name: j.req("name")?.as_str().unwrap_or("?").to_string(),
+            dir: dir.to_path_buf(),
+            model,
+            non_embedding_params: j.req("non_embedding_params")?.as_usize().unwrap_or(0),
+            embedding_params: j.req("embedding_params")?.as_usize().unwrap_or(0),
+            segment_k: j.req("segment_k")?.as_usize().unwrap_or(1),
+            params,
+            entrypoints,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural invariants the coordinator relies on.
+    pub fn validate(&self) -> Result<()> {
+        if self.params.is_empty() {
+            bail!("manifest {} has no params", self.name);
+        }
+        let n_params = self.params.len();
+        if let Some(ts) = self.entrypoints.get("train_step") {
+            let want = 5 + 3 * n_params;
+            if ts.inputs.len() != want {
+                bail!("train_step inputs {} != {want}", ts.inputs.len());
+            }
+            if ts.outputs.len() != 1 + 3 * n_params {
+                bail!("train_step outputs {}", ts.outputs.len());
+            }
+            // flat state segments must mirror the param table
+            for (i, p) in self.params.iter().enumerate() {
+                let inp = &ts.inputs[5 + i];
+                if inp.name != format!("param:{}", p.name) || inp.shape != p.shape {
+                    bail!("train_step input {} mismatches param table ({})", inp.name, p.name);
+                }
+            }
+        }
+        for ep in self.entrypoints.values() {
+            if !self.dir.join(&ep.file).exists() {
+                bail!("missing HLO file {} for {}", ep.file, ep.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Parameter count check: sum of non-`tok_emb` param elements must
+    /// equal the advertised non-embedding count.
+    pub fn check_param_accounting(&self) -> Result<()> {
+        let non_emb: usize = self
+            .params
+            .iter()
+            .filter(|p| p.name != "tok_emb")
+            .map(|p| p.elements())
+            .sum();
+        if non_emb != self.non_embedding_params {
+            bail!("non-embedding params {} != advertised {}", non_emb,
+                  self.non_embedding_params);
+        }
+        Ok(())
+    }
+
+    pub fn entrypoint(&self, name: &str) -> Result<&Entrypoint> {
+        self.entrypoints
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {} has no entrypoint {name:?}", self.name))
+    }
+
+    /// Tokens trained per optimizer step.
+    pub fn tokens_per_step(&self) -> usize {
+        self.model.batch * self.model.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/n20k-quartet");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = art_dir() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.method, "quartet");
+        assert_eq!(m.model.d_model % 32, 0);
+        m.check_param_accounting().unwrap();
+        let ts = m.entrypoint("train_step").unwrap();
+        assert_eq!(ts.inputs[0].name, "step");
+        assert_eq!(ts.outputs[0].name, "loss");
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

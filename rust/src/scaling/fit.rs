@@ -1,0 +1,278 @@
+//! Scaling-law fitting (Appendix A.2): Huber-on-log objective minimized
+//! with Nelder–Mead, two stages — base law on full-precision runs, then
+//! per-method `eff_N`/`eff_D` with the base frozen.
+
+use std::collections::BTreeMap;
+
+use crate::scaling::law::{huber_log_residual, LawParams, Run};
+
+/// Fit configuration.
+#[derive(Debug, Clone)]
+pub struct FitOptions {
+    pub delta: f64,
+    /// fix γ = 1 (Hoffmann form) — Fig 4 alternative
+    pub fix_gamma: bool,
+    /// fix β = 1 (Kaplan form) — Fig 4 alternative
+    pub fix_beta: bool,
+    pub max_iters: usize,
+    pub restarts: usize,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        FitOptions { delta: 1e-4, fix_gamma: false, fix_beta: false,
+                     max_iters: 4000, restarts: 4 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Nelder–Mead simplex minimizer
+// ---------------------------------------------------------------------------
+
+/// Minimize `f` from `x0` (standard NM coefficients; deterministic).
+pub fn nelder_mead<F: FnMut(&[f64]) -> f64>(
+    mut f: F, x0: &[f64], step: f64, max_iters: usize,
+) -> (Vec<f64>, f64) {
+    let n = x0.len();
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+    // initial simplex
+    let mut pts: Vec<Vec<f64>> = vec![x0.to_vec()];
+    for i in 0..n {
+        let mut p = x0.to_vec();
+        p[i] += if p[i].abs() > 1e-12 { step * p[i].abs() } else { step };
+        pts.push(p);
+    }
+    let mut vals: Vec<f64> = pts.iter().map(|p| f(p)).collect();
+
+    for _ in 0..max_iters {
+        // sort simplex by value
+        let mut idx: Vec<usize> = (0..pts.len()).collect();
+        idx.sort_by(|&i, &j| vals[i].partial_cmp(&vals[j]).unwrap());
+        let pts2: Vec<Vec<f64>> = idx.iter().map(|&i| pts[i].clone()).collect();
+        let vals2: Vec<f64> = idx.iter().map(|&i| vals[i]).collect();
+        pts = pts2;
+        vals = vals2;
+
+        if (vals[n] - vals[0]).abs() < 1e-12 * (1.0 + vals[0].abs()) {
+            break;
+        }
+
+        // centroid of best n
+        let mut cen = vec![0.0; n];
+        for p in &pts[..n] {
+            for (c, v) in cen.iter_mut().zip(p) {
+                *c += v / n as f64;
+            }
+        }
+        let reflect: Vec<f64> =
+            cen.iter().zip(&pts[n]).map(|(c, w)| c + alpha * (c - w)).collect();
+        let fr = f(&reflect);
+        if fr < vals[0] {
+            let expand: Vec<f64> =
+                cen.iter().zip(&pts[n]).map(|(c, w)| c + gamma * (c - w)).collect();
+            let fe = f(&expand);
+            if fe < fr {
+                pts[n] = expand;
+                vals[n] = fe;
+            } else {
+                pts[n] = reflect;
+                vals[n] = fr;
+            }
+        } else if fr < vals[n - 1] {
+            pts[n] = reflect;
+            vals[n] = fr;
+        } else {
+            let contract: Vec<f64> =
+                cen.iter().zip(&pts[n]).map(|(c, w)| c + rho * (w - c)).collect();
+            let fc = f(&contract);
+            if fc < vals[n] {
+                pts[n] = contract;
+                vals[n] = fc;
+            } else {
+                // shrink towards best
+                let best = pts[0].clone();
+                for i in 1..=n {
+                    for (p, b) in pts[i].iter_mut().zip(&best) {
+                        *p = b + sigma * (*p - b);
+                    }
+                    vals[i] = f(&pts[i]);
+                }
+            }
+        }
+    }
+    let mut best = 0;
+    for i in 1..pts.len() {
+        if vals[i] < vals[best] {
+            best = i;
+        }
+    }
+    (pts[best].clone(), vals[best])
+}
+
+// ---------------------------------------------------------------------------
+// Stage 1: base law
+// ---------------------------------------------------------------------------
+
+fn unpack(theta: &[f64], opt: &FitOptions) -> LawParams {
+    LawParams {
+        a: theta[0].exp(),
+        alpha: theta[1].exp(),
+        b: theta[2].exp(),
+        beta: if opt.fix_beta { 1.0 } else { theta[3].exp() },
+        e: theta[4].exp(),
+        gamma: if opt.fix_gamma { 1.0 } else { theta[5].exp() },
+    }
+}
+
+/// Total Huber-on-log objective for a candidate law over baseline runs.
+fn base_objective(p: &LawParams, runs: &[Run], delta: f64) -> f64 {
+    runs.iter()
+        .map(|r| huber_log_residual(p.loss(r.n, r.d), r.loss, delta))
+        .sum()
+}
+
+/// Stage-1 fit on full-precision (baseline) runs. Returns the fitted law
+/// and the final objective value.
+pub fn fit_base_law(runs: &[Run], opt: &FitOptions) -> (LawParams, f64) {
+    assert!(!runs.is_empty(), "no baseline runs to fit");
+    // multi-start: loss-surface has flat valleys; seed from a few
+    // physically-plausible corners (deterministic)
+    let e_floor = runs.iter().map(|r| r.loss).fold(f64::INFINITY, f64::min);
+    let starts: Vec<Vec<f64>> = (0..opt.restarts)
+        .map(|k| {
+            let s = 0.35 + 0.15 * k as f64;
+            vec![
+                (8.0 + 2.0 * k as f64),       // ln A
+                s.ln(),                       // ln α
+                (9.0 + 2.0 * k as f64),       // ln B
+                s.ln(),                       // ln β
+                (e_floor * 0.7 + 1e-3).ln(),  // ln E
+                (0.3 + 0.2 * k as f64).ln(),  // ln γ
+            ]
+        })
+        .collect();
+
+    let mut best: Option<(LawParams, f64)> = None;
+    for x0 in starts {
+        let (theta, val) = nelder_mead(
+            |t| base_objective(&unpack(t, opt), runs, opt.delta),
+            &x0,
+            0.3,
+            opt.max_iters,
+        );
+        let p = unpack(&theta, opt);
+        if best.as_ref().map(|(_, v)| val < *v).unwrap_or(true) {
+            best = Some((p, val));
+        }
+    }
+    best.unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Stage 2: per-method efficiencies
+// ---------------------------------------------------------------------------
+
+/// Fitted efficiencies for one method.
+#[derive(Debug, Clone, Copy)]
+pub struct Efficiencies {
+    pub eff_n: f64,
+    pub eff_d: f64,
+}
+
+/// Stage-2 fit: with the base law frozen, fit (eff_N, eff_D) per method
+/// over that method's runs. Efficiencies are constrained to (0, 1] via a
+/// sigmoid reparameterization.
+pub fn fit_efficiencies(base: &LawParams, runs: &[Run], opt: &FitOptions)
+                        -> BTreeMap<String, Efficiencies> {
+    let mut by_method: BTreeMap<String, Vec<&Run>> = BTreeMap::new();
+    for r in runs {
+        by_method.entry(r.method.clone()).or_default().push(r);
+    }
+
+    let sigmoid = |t: f64| 1.0 / (1.0 + (-t).exp());
+    let mut out = BTreeMap::new();
+    for (method, mruns) in by_method {
+        let obj = |t: &[f64]| -> f64 {
+            let (en, ed) = (sigmoid(t[0]), sigmoid(t[1]));
+            mruns
+                .iter()
+                .map(|r| {
+                    huber_log_residual(
+                        base.loss_with_eff(r.n, r.d, en, ed),
+                        r.loss,
+                        opt.delta,
+                    )
+                })
+                .sum()
+        };
+        let mut best: Option<(Vec<f64>, f64)> = None;
+        for x0 in [[2.0, 2.0], [0.0, 0.0], [-1.0, 2.0], [2.0, -1.0]] {
+            let (t, v) = nelder_mead(obj, &x0, 0.5, opt.max_iters);
+            if best.as_ref().map(|(_, bv)| v < *bv).unwrap_or(true) {
+                best = Some((t, v));
+            }
+        }
+        let (t, _) = best.unwrap();
+        out.insert(method, Efficiencies { eff_n: sigmoid(t[0]), eff_d: sigmoid(t[1]) });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::law::PAPER_LAW;
+
+    fn synth_runs(law: &LawParams, eff_n: f64, eff_d: f64, method: &str) -> Vec<Run> {
+        let mut runs = Vec::new();
+        for &n in &[30e6, 50e6, 100e6, 200e6] {
+            for &ratio in &[25.0, 50.0, 100.0, 200.0, 400.0, 800.0] {
+                let d = ratio * n;
+                runs.push(Run::new(n, d, law.loss_with_eff(n, d, eff_n, eff_d), method));
+            }
+        }
+        runs
+    }
+
+    #[test]
+    fn nelder_mead_minimizes_quadratic() {
+        let (x, v) = nelder_mead(
+            |t| (t[0] - 3.0).powi(2) + (t[1] + 1.0).powi(2),
+            &[0.0, 0.0],
+            0.5,
+            2000,
+        );
+        assert!((x[0] - 3.0).abs() < 1e-4 && (x[1] + 1.0).abs() < 1e-4, "{x:?} {v}");
+    }
+
+    #[test]
+    fn base_fit_recovers_paper_losses() {
+        let runs = synth_runs(&PAPER_LAW, 1.0, 1.0, "bf16");
+        let (fit, obj) = fit_base_law(&runs, &FitOptions::default());
+        assert!(obj < 1e-4, "objective {obj}");
+        // the law is overparameterized; check *predictions* not params
+        for r in &runs {
+            let pred = fit.loss(r.n, r.d);
+            assert!((pred / r.loss - 1.0).abs() < 0.02, "{pred} vs {}", r.loss);
+        }
+    }
+
+    #[test]
+    fn stage2_recovers_known_efficiencies() {
+        let base = PAPER_LAW;
+        let runs = synth_runs(&base, 0.64, 0.94, "quartet");
+        let eff = fit_efficiencies(&base, &runs, &FitOptions::default());
+        let q = eff["quartet"];
+        assert!((q.eff_n - 0.64).abs() < 0.05, "eff_n {}", q.eff_n);
+        assert!((q.eff_d - 0.94).abs() < 0.06, "eff_d {}", q.eff_d);
+    }
+
+    #[test]
+    fn alt_forms_fit_worse_or_equal() {
+        let runs = synth_runs(&PAPER_LAW, 1.0, 1.0, "bf16");
+        let (_, free) = fit_base_law(&runs, &FitOptions::default());
+        let (_, g1) = fit_base_law(&runs, &FitOptions { fix_gamma: true, ..Default::default() });
+        // free γ must fit at least as well as γ=1 on data generated with γ=0.274
+        assert!(free <= g1 + 1e-9, "free {free} vs γ=1 {g1}");
+    }
+}

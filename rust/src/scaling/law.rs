@@ -1,0 +1,116 @@
+//! The precision scaling law (Eq. 1):
+//!
+//! ```text
+//! L(N, D, Pf, Pb) = ( A/(N·eff_N(Pf))^α + B/(D·eff_D(Pb))^β )^γ + E
+//! ```
+//!
+//! `eff_N ∈ (0,1]` is the parameter efficiency of the forward precision,
+//! `eff_D ∈ (0,1]` the data efficiency of the backward precision; both
+//! are 1 at full precision by construction.
+
+/// Chinchilla-style base parameters (Stage-1 fit, Table 6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LawParams {
+    pub a: f64,
+    pub alpha: f64,
+    pub b: f64,
+    pub beta: f64,
+    pub e: f64,
+    pub gamma: f64,
+}
+
+/// The paper's fitted coefficients (Table 6) — used to validate the
+/// fitter (recovery test) and to regenerate Fig 1(b,c) at paper scale.
+pub const PAPER_LAW: LawParams = LawParams {
+    a: 1.52e5,
+    alpha: 0.589,
+    b: 5.25e5,
+    beta: 0.544,
+    e: 1.35,
+    gamma: 0.274,
+};
+
+impl LawParams {
+    /// Evaluate Eq. 1 with efficiency factors folded into N and D.
+    pub fn loss(&self, n_eff: f64, d_eff: f64) -> f64 {
+        let inner = self.a / n_eff.powf(self.alpha) + self.b / d_eff.powf(self.beta);
+        inner.powf(self.gamma) + self.e
+    }
+
+    /// Evaluate with explicit efficiencies.
+    pub fn loss_with_eff(&self, n: f64, d: f64, eff_n: f64, eff_d: f64) -> f64 {
+        self.loss(n * eff_n, d * eff_d)
+    }
+}
+
+/// One training run's record for fitting.
+#[derive(Debug, Clone)]
+pub struct Run {
+    /// non-embedding parameter count
+    pub n: f64,
+    /// training tokens
+    pub d: f64,
+    /// final validation loss
+    pub loss: f64,
+    /// method id ("bf16", "fp8", "quartet", …) — selects eff factors
+    pub method: String,
+}
+
+impl Run {
+    pub fn new(n: f64, d: f64, loss: f64, method: &str) -> Run {
+        Run { n, d, loss, method: method.to_string() }
+    }
+}
+
+/// Huber loss on log-residuals, the paper's Appendix A.2 objective
+/// (δ = 1e-4 on log L).
+pub fn huber_log_residual(pred: f64, obs: f64, delta: f64) -> f64 {
+    if pred <= 0.0 || obs <= 0.0 {
+        return 1e12; // infeasible region
+    }
+    let r = pred.ln() - obs.ln();
+    if r.abs() <= delta {
+        0.5 * r * r
+    } else {
+        delta * (r.abs() - 0.5 * delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_law_sane_values() {
+        // 30M params at D/N = 100 should land in the mid-3s (cf. Table 3)
+        let n = 30e6;
+        let l = PAPER_LAW.loss(n, 100.0 * n);
+        assert!((3.0..4.0).contains(&l), "{l}");
+        // more data → lower loss
+        assert!(PAPER_LAW.loss(n, 800.0 * n) < l);
+        // bigger model → lower loss
+        assert!(PAPER_LAW.loss(4.0 * n, 100.0 * n) < l);
+        // floor: loss > E always
+        assert!(PAPER_LAW.loss(1e12, 1e15) > PAPER_LAW.e);
+    }
+
+    #[test]
+    fn efficiency_degrades_loss() {
+        let n = 30e6;
+        let d = 100.0 * n;
+        let full = PAPER_LAW.loss_with_eff(n, d, 1.0, 1.0);
+        let degraded = PAPER_LAW.loss_with_eff(n, d, 0.64, 0.94);
+        assert!(degraded > full);
+    }
+
+    #[test]
+    fn huber_quadratic_then_linear() {
+        let d = 1e-2;
+        let small = huber_log_residual(1.0001, 1.0, d);
+        assert!((small - 0.5 * (1.0001f64.ln()).powi(2)).abs() < 1e-12);
+        let big1 = huber_log_residual(2.0, 1.0, d);
+        let big2 = huber_log_residual(4.0, 1.0, d);
+        // linear growth in log-space beyond delta
+        assert!((big2 - big1 - d * (4.0f64.ln() - 2.0f64.ln())).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Ingredients 1 & 2: the precision-aware scaling law, its fitter, the
+//! BOPS speedup model and the precision-optimality regions.
+
+pub mod fit;
+pub mod law;
+pub mod regions;
+pub mod speedup;
+
+pub use fit::{fit_base_law, fit_efficiencies, FitOptions};
+pub use law::{LawParams, Run, PAPER_LAW};
+pub use regions::{optimal_precision, region_grid, RegionPoint};
+pub use speedup::{bops_speedups, Speedups, PAPER_TABLE1};

@@ -1,0 +1,68 @@
+//! Ingredient 2's speedup model (Table 1) plus the measured-kernel
+//! variant used for the green-thatched region of Fig 1.
+
+/// Speedups of a (P_forward, P_backward) configuration relative to the
+/// FP8:FP8 baseline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Speedups {
+    pub forward: f64,
+    pub backward: f64,
+}
+
+impl Speedups {
+    /// Training speedup: harmonic mean of fwd/bwd with weights 1/3, 2/3
+    /// (forward is ~a third of training compute).
+    pub fn training(&self) -> f64 {
+        1.0 / ((1.0 / 3.0) / self.forward + (2.0 / 3.0) / self.backward)
+    }
+}
+
+/// Hardware-agnostic BOPS model: throughput inversely proportional to
+/// bit-width, FP8 = 1.0.
+pub fn bops_speedups(fwd_bits: u32, bwd_bits: u32) -> Speedups {
+    Speedups {
+        forward: 8.0 / fwd_bits as f64,
+        backward: 8.0 / bwd_bits as f64,
+    }
+}
+
+/// Table 1 of the paper, as (label, speedups).
+pub const PAPER_TABLE1: [(&str, Speedups); 3] = [
+    ("FP4:FP8", Speedups { forward: 2.0, backward: 1.0 }),
+    ("FP8:FP4", Speedups { forward: 1.0, backward: 2.0 }),
+    ("FP4:FP4", Speedups { forward: 2.0, backward: 2.0 }),
+];
+
+/// The paper's *measured* Blackwell speedups (§5: up to 2.4× fwd, 1.6×
+/// bwd over FP8) — the green-thatched achievable region in Fig 1(b,c).
+pub const PAPER_MEASURED_FP4: Speedups = Speedups { forward: 2.4, backward: 1.6 };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_training_column_reproduced() {
+        // paper Table 1: sptr = 1.2 / 1.5 / 2.0
+        let tr: Vec<f64> = PAPER_TABLE1.iter().map(|(_, s)| s.training()).collect();
+        assert!((tr[0] - 1.2).abs() < 1e-9, "{tr:?}");
+        assert!((tr[1] - 1.5).abs() < 1e-9);
+        assert!((tr[2] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bops_model_matches_table1() {
+        assert_eq!(bops_speedups(4, 8), PAPER_TABLE1[0].1);
+        assert_eq!(bops_speedups(8, 4), PAPER_TABLE1[1].1);
+        assert_eq!(bops_speedups(4, 4), PAPER_TABLE1[2].1);
+        // FP8 baseline is identity
+        assert_eq!(bops_speedups(8, 8).training(), 1.0);
+    }
+
+    #[test]
+    fn measured_training_speedup_near_paper_claim() {
+        // paper §5: overall training speedup up to ~1.8x
+        let t = PAPER_MEASURED_FP4.training();
+        assert!((1.6..2.0).contains(&t), "{t}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Batched prefill serving engine (Fig 6 and the serving example).
+//!
+//! A minimal vLLM-style front: requests arrive in a FIFO, the batcher
+//! groups up to the artifact's compiled batch size (padding the tail),
+//! and each group runs one `forward` prefill. Latency/throughput are
+//! measured per batch; Fig 6 sweeps compiled batch sizes 1..128.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::init::init_state;
+use crate::runtime::engine::{tensor_i32, Artifact};
+
+/// One prefill request: a token sequence of exactly the artifact's seq_len
+/// (the serving example handles padding/truncation upstream).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+/// Result of serving one request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    /// argmax next-token prediction at the last position
+    pub next_token: i32,
+    /// wall time of the batch this request rode in
+    pub batch_latency_s: f64,
+    pub batch_size: usize,
+}
+
+/// Batched prefill engine over a `forward` artifact.
+pub struct PrefillEngine<'a> {
+    pub artifact: &'a Artifact,
+    params: Vec<xla::Literal>,
+    queue: VecDeque<Request>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl<'a> PrefillEngine<'a> {
+    /// Engine with freshly-initialized weights (benchmarks) — use
+    /// [`PrefillEngine::with_params`] to serve trained checkpoints.
+    pub fn new(artifact: &'a Artifact, seed: u64) -> Result<PrefillEngine<'a>> {
+        let (params, _, _) = init_state(&artifact.manifest, seed)?;
+        Self::with_params(artifact, params)
+    }
+
+    pub fn with_params(artifact: &'a Artifact, params: Vec<xla::Literal>)
+                       -> Result<PrefillEngine<'a>> {
+        let ep = artifact.manifest.entrypoint("forward")?;
+        let shape = &ep.inputs[0].shape;
+        if shape.len() != 2 {
+            bail!("forward tokens must be 2-D, got {shape:?}");
+        }
+        Ok(PrefillEngine {
+            artifact,
+            params,
+            queue: VecDeque::new(),
+            batch: shape[0],
+            seq: shape[1],
+            vocab: artifact.manifest.model.vocab,
+        })
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Serve one batch from the queue (pads the tail batch with zeros);
+    /// returns completions in submission order.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        if self.queue.is_empty() {
+            return Ok(Vec::new());
+        }
+        let take = self.queue.len().min(self.batch);
+        let reqs: Vec<Request> = self.queue.drain(..take).collect();
+        let mut tokens = vec![0i32; self.batch * self.seq];
+        for (i, r) in reqs.iter().enumerate() {
+            if r.tokens.len() != self.seq {
+                bail!("request {} has {} tokens, engine seq is {}", r.id,
+                      r.tokens.len(), self.seq);
+            }
+            tokens[i * self.seq..(i + 1) * self.seq].copy_from_slice(&r.tokens);
+        }
+        let mut inputs = vec![tensor_i32(&tokens, &[self.batch, self.seq])?];
+        inputs.extend(self.params.iter().cloned());
+        let t0 = Instant::now();
+        let out = self.artifact.run("forward", &inputs)?;
+        let latency = t0.elapsed().as_secs_f64();
+        let logits: Vec<f32> = out[0].to_vec()?;
+
+        let mut done = Vec::with_capacity(reqs.len());
+        for (i, r) in reqs.iter().enumerate() {
+            let base = (i * self.seq + (self.seq - 1)) * self.vocab;
+            let row = &logits[base..base + self.vocab];
+            let next = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j as i32)
+                .unwrap_or(0);
+            done.push(Completion {
+                id: r.id,
+                next_token: next,
+                batch_latency_s: latency,
+                batch_size: take,
+            });
+        }
+        Ok(done)
+    }
+
+    /// Drain the whole queue; returns (completions, total wall seconds,
+    /// prefill tokens/sec over *useful* rows).
+    pub fn drain(&mut self) -> Result<(Vec<Completion>, f64, f64)> {
+        let mut all = Vec::new();
+        let t0 = Instant::now();
+        while !self.queue.is_empty() {
+            all.extend(self.step()?);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens = all.len() * self.seq;
+        Ok((all, wall, tokens as f64 / wall.max(1e-12)))
+    }
+}

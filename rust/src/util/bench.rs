@@ -1,0 +1,205 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations with mean/σ/median/p10/p90 reporting and throughput
+//! derivation. `benches/*.rs` are plain `harness = false` binaries that
+//! drive this.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One measured benchmark: per-iteration wall times in seconds.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+    /// optional work-per-iteration for throughput lines (e.g. FLOPs, bytes)
+    pub work_per_iter: Option<f64>,
+    pub work_unit: &'static str,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn std(&self) -> f64 {
+        stats::std(&self.samples)
+    }
+
+    /// work/sec using the median iteration time.
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.median())
+    }
+
+    pub fn report_line(&self) -> String {
+        let unit_time = fmt_time(self.median());
+        let spread = fmt_time(self.std());
+        let mut line = format!(
+            "{:<44} {:>12}/iter  (±{}, n={})",
+            self.name,
+            unit_time,
+            spread,
+            self.samples.len()
+        );
+        if let Some(tp) = self.throughput() {
+            line.push_str(&format!("  {:>10}/s {}", fmt_si(tp), self.work_unit));
+        }
+        line
+    }
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+fn fmt_si(v: f64) -> String {
+    if v >= 1e12 {
+        format!("{:.2}T", v / 1e12)
+    } else if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Bench runner with a time budget per measurement.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for CI-ish runs (used when QUARTET_BENCH_FAST is set).
+    pub fn fast() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 1_000,
+        }
+    }
+
+    pub fn from_env() -> Bencher {
+        if std::env::var("QUARTET_BENCH_FAST").is_ok() {
+            Bencher::fast()
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Measure `f`, preventing dead-code elimination via the returned value.
+    pub fn bench<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Measurement {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while (b0.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        Measurement {
+            name: name.to_string(),
+            samples,
+            work_per_iter: None,
+            work_unit: "",
+        }
+    }
+
+    pub fn bench_with_work<T, F: FnMut() -> T>(
+        &self,
+        name: &str,
+        work_per_iter: f64,
+        unit: &'static str,
+        f: F,
+    ) -> Measurement {
+        let mut m = self.bench(name, f);
+        m.work_per_iter = Some(work_per_iter);
+        m.work_unit = unit;
+        m
+    }
+}
+
+/// Pretty table header used by all bench binaries for consistent output.
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 100,
+        };
+        let m = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(m.samples.len() >= 3);
+        assert!(m.mean() > 0.0);
+        assert!(m.median() > 0.0);
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let m = Measurement {
+            name: "x".into(),
+            samples: vec![0.5, 0.5, 0.5],
+            work_per_iter: Some(1000.0),
+            work_unit: "items",
+        };
+        assert_eq!(m.throughput(), Some(2000.0));
+        assert!(m.report_line().contains("items"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).contains("s"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).contains("ns"));
+    }
+}

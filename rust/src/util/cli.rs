@@ -1,0 +1,164 @@
+//! Flag-style CLI argument parser (no clap in the offline registry).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated keys,
+//! and positional arguments; unknown-flag detection is the caller's choice
+//! via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: subcommand-style positionals + `--flag` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    consumed: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` separator: rest is positional
+                    args.positional.extend(it);
+                    break;
+                }
+                let (key, val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => {
+                        // value is the next token unless it is another flag
+                        let next_is_val =
+                            it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                        if next_is_val {
+                            (body.to_string(), Some(it.next().unwrap()))
+                        } else {
+                            (body.to_string(), None)
+                        }
+                    }
+                };
+                args.flags
+                    .entry(key)
+                    .or_default()
+                    .push(val.unwrap_or_else(|| "true".to_string()));
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).and_then(|v| v.last().cloned())
+    }
+
+    pub fn get_all(&mut self, key: &str) -> Vec<String> {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).cloned().unwrap_or_default()
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn required(&mut self, key: &str) -> Result<String> {
+        self.get(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    /// Error on any flag never consumed — catches typos.
+    pub fn finish(&self) -> Result<()> {
+        for k in self.flags.keys() {
+            if !self.consumed.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Comma-separated list convenience (`--sizes n20k,n40k`).
+    pub fn list_or(&mut self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn basic_forms() {
+        let mut a = Args::parse(argv("train --size n80k --steps=200 --verbose --out runs")).unwrap();
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("size").as_deref(), Some("n80k"));
+        assert_eq!(a.parse_or("steps", 0usize).unwrap(), 200);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out").as_deref(), Some("runs"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let mut a = Args::parse(argv("x --good 1 --typo 2")).unwrap();
+        let _ = a.get("good");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn repeated_and_lists() {
+        let mut a = Args::parse(argv("x --m a --m b --sizes n20k,n40k")).unwrap();
+        assert_eq!(a.get_all("m"), vec!["a", "b"]);
+        assert_eq!(a.list_or("sizes", &[]), vec!["n20k", "n40k"]);
+    }
+
+    #[test]
+    fn bool_flag_before_positional() {
+        let a = Args::parse(argv("--check run")).unwrap();
+        // "run" becomes the flag value (documented --key value behaviour)
+        assert_eq!(a.positional.len(), 0);
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = Args::parse(argv("cmd -- --not-a-flag")).unwrap();
+        assert_eq!(a.positional, vec!["cmd", "--not-a-flag"]);
+    }
+
+    #[test]
+    fn parse_or_error_message() {
+        let mut a = Args::parse(argv("x --steps abc")).unwrap();
+        let e = a.parse_or("steps", 1usize).unwrap_err().to_string();
+        assert!(e.contains("steps"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Offline-environment substrates.
+//!
+//! The baked cargo registry carries no serde/clap/criterion/proptest, so
+//! this module provides the small, well-tested pieces the rest of the
+//! crate needs: a JSON reader/writer ([`json`]), a deterministic RNG with
+//! Gaussian sampling ([`rng`]), a flag-style CLI parser ([`cli`]), a
+//! warmup/iteration bench harness ([`bench`]), a mini property-testing
+//! loop ([`prop`]) and shared statistics helpers ([`stats`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,112 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over N seeded cases; on failure it *shrinks*
+//! by retrying with smaller size hints and reports the failing seed so the
+//! case can be replayed deterministically (`QUARTET_PROP_SEED=…`).
+
+use crate::util::rng::Rng;
+
+/// Generation context: seeded RNG + a size hint that shrinking lowers.
+pub struct GenCtx<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> GenCtx<'a> {
+    /// random dimension that is a multiple of `quantum`, in [quantum, size]
+    pub fn dim(&mut self, quantum: usize) -> usize {
+        let max_mult = (self.size / quantum).max(1);
+        (self.rng.below(max_mult) + 1) * quantum
+    }
+
+    pub fn vec_gaussian(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        self.rng.gaussian_vec(n, scale)
+    }
+
+    pub fn scale(&mut self) -> f32 {
+        // log-uniform in [1e-3, 1e3]
+        (10.0f64.powf(self.rng.uniform() * 6.0 - 3.0)) as f32
+    }
+}
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` seeded cases at descending sizes on failure.
+///
+/// Panics with the failing seed + message (test-friendly).
+pub fn check<F: FnMut(&mut GenCtx) -> PropResult>(name: &str, cases: usize, mut prop: F) {
+    let base_seed = std::env::var("QUARTET_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let mut ctx = GenCtx { rng: &mut rng, size: 8 };
+        if let Err(msg) = prop(&mut ctx) {
+            // shrink: retry same seed with smaller size hints to find a
+            // minimal-ish failing configuration
+            let mut min_fail = (8usize, msg.clone());
+            for size in [4usize, 2, 1] {
+                let mut rng = Rng::new(seed);
+                let mut ctx = GenCtx { rng: &mut rng, size };
+                if let Err(m) = prop(&mut ctx) {
+                    min_fail = (size, m);
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed={seed}, size={}): {}\n\
+                 replay with QUARTET_PROP_SEED={seed}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// assert-style helpers for property bodies
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 25, |ctx| {
+            n += 1;
+            ensure(ctx.dim(32) % 32 == 0, "dim quantum")
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed")]
+    fn failing_property_reports_seed() {
+        check("fails", 5, |_ctx| ensure(false, "always"));
+    }
+
+    #[test]
+    fn dims_respect_quantum_and_size() {
+        check("dims", 50, |ctx| {
+            let d = ctx.dim(32);
+            ensure(d % 32 == 0 && d <= 32 * 8, format!("d={d}"))
+        });
+    }
+}

@@ -1,0 +1,205 @@
+//! Integration over the experiment machinery: scaling-law fits on
+//! synthetic + real run records, optimality regions, Table 2 statistics,
+//! alignment-vs-depth, PTQ — everything that doesn't need PJRT.
+
+use quartet::analysis::alignment::{alignment_vs_depth, gaussian_mse, pma_misalignment};
+use quartet::analysis::ptq::{gptq, rtn_ptq, PtqOptions};
+use quartet::quant::methods::*;
+use quartet::scaling::fit::{fit_base_law, fit_efficiencies, FitOptions};
+use quartet::scaling::law::{Run, PAPER_LAW};
+use quartet::scaling::regions::{optimal_precision, Precision};
+use quartet::scaling::speedup::{bops_speedups, Speedups, PAPER_MEASURED_FP4, PAPER_TABLE1};
+use quartet::util::rng::Rng;
+
+#[test]
+fn full_fit_pipeline_recovers_paper_table3_efficiencies() {
+    // generate a grid from the paper law with Table 3's quartet factors,
+    // push it through the two-stage fitter end to end
+    let mut runs = Vec::new();
+    for &n in &[30e6, 50e6, 100e6, 200e6] {
+        for &r in &[25.0, 50.0, 100.0, 200.0, 400.0] {
+            runs.push(Run::new(n, r * n, PAPER_LAW.loss(n, r * n), "bf16"));
+            runs.push(Run::new(
+                n,
+                r * n,
+                PAPER_LAW.loss_with_eff(n, r * n, 0.64, 0.94),
+                "quartet",
+            ));
+            runs.push(Run::new(
+                n,
+                r * n,
+                PAPER_LAW.loss_with_eff(n, r * n, 0.50, 0.15),
+                "luq_int4",
+            ));
+        }
+    }
+    let base_runs: Vec<Run> = runs.iter().filter(|r| r.method == "bf16").cloned().collect();
+    let (base, obj) = fit_base_law(&base_runs, &FitOptions::default());
+    assert!(obj < 1e-3, "stage-1 objective {obj}");
+    let eff = fit_efficiencies(&base, &runs, &FitOptions::default());
+    let q = eff["quartet"];
+    let l = eff["luq_int4"];
+    assert!((q.eff_n - 0.64).abs() < 0.08, "quartet eff_n {}", q.eff_n);
+    assert!((q.eff_d - 0.94).abs() < 0.08, "quartet eff_d {}", q.eff_d);
+    assert!(l.eff_d < 0.35, "luq eff_d should collapse, got {}", l.eff_d);
+    // ordering: quartet dominates luq on both axes (the paper's headline)
+    assert!(q.eff_n > l.eff_n && q.eff_d > l.eff_d);
+}
+
+#[test]
+fn real_run_records_fit_when_present() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("runs");
+    let recs = quartet::coordinator::runrecord::RunRecord::load_dir(&dir).unwrap();
+    let base: Vec<Run> = recs
+        .iter()
+        .filter(|r| r.method == "bf16" && !r.diverged)
+        .map(|r| r.to_fit_run())
+        .collect();
+    if base.len() < 4 {
+        eprintln!("SKIP: only {} bf16 runs in runs/ — run `make runs`", base.len());
+        return;
+    }
+    let (law, obj) = fit_base_law(&base, &FitOptions::default());
+    assert!(obj.is_finite());
+    // law must interpolate the observed losses within a loose band
+    for r in &base {
+        let pred = law.loss(r.n, r.d);
+        assert!(
+            (pred / r.loss - 1.0).abs() < 0.2,
+            "poor fit: pred {pred} vs {} at n={}, d={}",
+            r.loss,
+            r.n,
+            r.d
+        );
+    }
+}
+
+#[test]
+fn table2_statistics_reproduce_paper_ordering() {
+    let mut rng = Rng::new(0x7AB1E2);
+    // MSE ordering (Table 2 col 3): SR > RTN > QuEST
+    let mse_sr = gaussian_mse(&SrAbsMax { hadamard: true }, 256, 128, &mut rng);
+    let mse_rtn = gaussian_mse(&RtnAbsMax { hadamard: true }, 256, 128, &mut rng);
+    let mse_quest = gaussian_mse(&QuestQuantizer, 256, 128, &mut rng);
+    assert!(mse_sr > mse_rtn && mse_rtn > mse_quest,
+            "{mse_sr} / {mse_rtn} / {mse_quest}");
+    // misalignment ordering (col 5): SR ≈ 0, PMA small, RTN/QuEST large
+    let mis_sr = pma_misalignment(&QuartetSr, 16, 64, 400, &mut rng).abs();
+    let mis_rtn = pma_misalignment(&RtnAbsMax { hadamard: true }, 16, 64, 400, &mut rng);
+    let mis_pma = pma_misalignment(&RtnPma, 16, 64, 400, &mut rng).abs();
+    let mis_quest = pma_misalignment(&QuestQuantizer, 16, 64, 400, &mut rng);
+    assert!(mis_sr < 3e-3, "SR {mis_sr}");
+    assert!(mis_pma < mis_rtn, "PMA {mis_pma} vs RTN {mis_rtn}");
+    assert!(mis_quest > mis_rtn * 0.8, "QuEST {mis_quest} vs RTN {mis_rtn}");
+}
+
+#[test]
+fn figure2_depth_curves_have_paper_shape() {
+    let mut rng = Rng::new(42);
+    let sr = alignment_vs_depth(&QuartetSr, 12, 16, 128, &mut rng);
+    let rtn = alignment_vs_depth(&RtnAbsMax { hadamard: true }, 12, 16, 128, &mut rng);
+    // (a) cosine decays with depth; RTN (lower error) decays slower
+    assert!(sr[11].cosine < sr[0].cosine);
+    assert!(rtn[11].cosine > sr[11].cosine);
+    // (b) SR keeps |PMA−1| bounded relative to its own noise; RTN drifts
+    // monotonically-ish — compare *systematic* drift via mean over depth
+    let mean_pma = |v: &[quartet::analysis::alignment::DepthAlignment]| {
+        v.iter().map(|p| p.pma).sum::<f64>() / v.len() as f64
+    };
+    let sr_drift = (mean_pma(&sr) - 1.0).abs();
+    let rtn_drift = (mean_pma(&rtn) - 1.0).abs();
+    assert!(sr_drift < rtn_drift + 0.05, "sr {sr_drift} vs rtn {rtn_drift}");
+}
+
+#[test]
+fn speedup_model_reproduces_table1_exactly() {
+    for (label, s) in PAPER_TABLE1 {
+        let (fb, bb) = match label {
+            "FP4:FP8" => (4, 8),
+            "FP8:FP4" => (8, 4),
+            _ => (4, 4),
+        };
+        assert_eq!(bops_speedups(fb, bb), s);
+    }
+    assert!((PAPER_TABLE1[2].1.training() - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn fp4_optimality_region_grows_with_fp4_backward() {
+    // Fig 1(b) vs (c): the FP4-forward-optimal share of the grid grows
+    // when the backward also runs in FP4 (it buys extra data throughput)
+    let count_fp4 = |bwd_fp4: bool| -> usize {
+        let cands = vec![
+            Precision {
+                label: "fp8".into(),
+                eff_n: 0.93,
+                eff_d: if bwd_fp4 { 0.94 } else { 0.99 },
+                speedups: Speedups { forward: 1.0, backward: if bwd_fp4 { 1.6 } else { 1.0 } },
+            },
+            Precision {
+                label: "fp4".into(),
+                eff_n: 0.64,
+                eff_d: if bwd_fp4 { 0.94 } else { 0.99 },
+                speedups: if bwd_fp4 {
+                    PAPER_MEASURED_FP4
+                } else {
+                    Speedups { forward: 2.4, backward: 1.0 }
+                },
+            },
+        ];
+        let mut wins = 0;
+        for i in 0..16 {
+            for j in 0..16 {
+                let n = 30e6 * (3000.0f64).powf(i as f64 / 15.0);
+                let ratio = 10.0 * (1000.0f64).powf(j as f64 / 15.0);
+                let (w, _) = optimal_precision(&PAPER_LAW, &cands, n, ratio);
+                if w.label == "fp4" {
+                    wins += 1;
+                }
+            }
+        }
+        wins
+    };
+    let with_fp8_bwd = count_fp4(false);
+    let with_fp4_bwd = count_fp4(true);
+    assert!(
+        with_fp4_bwd >= with_fp8_bwd,
+        "fp4 region must not shrink: {with_fp8_bwd} -> {with_fp4_bwd}"
+    );
+    assert!(with_fp4_bwd > 0, "fp4 never optimal — region collapsed");
+}
+
+#[test]
+fn ptq_pipeline_table7_ordering() {
+    // GPTQ < RTN in layer-output error on correlated activations — the
+    // Table 7 mechanism (QuaRot+GPTQ beats naive PTQ, QAT beats both;
+    // the QAT leg runs in benches/table7_ptq.rs against trained weights)
+    let mut rng = Rng::new(3);
+    let (dout, din, n) = (64, 96, 384);
+    let mut x = vec![0.0f32; n * din];
+    for row in x.chunks_mut(din) {
+        let shared = rng.gaussian_f32();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = shared * ((i % 7) as f32 * 0.3 - 1.0) + rng.gaussian_f32() * 0.5;
+        }
+    }
+    let w = rng.gaussian_vec(dout * din, 0.4);
+    let err = |wq: &[f32]| -> f64 {
+        let mut acc = 0.0;
+        for row in x.chunks(din).take(64) {
+            for r in 0..dout {
+                let mut d = 0.0f64;
+                for c in 0..din {
+                    d += row[c] as f64 * (w[r * din + c] - wq[r * din + c]) as f64;
+                }
+                acc += d * d;
+            }
+        }
+        acc
+    };
+    let mut w_rtn = w.clone();
+    rtn_ptq(&mut w_rtn, dout, din, true);
+    let mut w_gptq = w.clone();
+    gptq(&mut w_gptq, dout, din, &x, n, &PtqOptions::default());
+    assert!(err(&w_gptq) < err(&w_rtn), "gptq must beat rtn ptq");
+}

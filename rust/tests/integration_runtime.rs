@@ -1,0 +1,134 @@
+//! Integration: PJRT engine × AOT artifacts. Skips gracefully (with a
+//! loud note) when `make artifacts` hasn't been run.
+
+use std::path::PathBuf;
+
+use quartet::coordinator::init::init_state;
+use quartet::runtime::engine::{
+    literal_scalar_f32, scalar_f32, scalar_i32, tensor_i32, Engine,
+};
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(name: &str) -> bool {
+    let ok = root().join(name).join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifact {name} missing — run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn manifest_accounting_all_artifacts() {
+    let Ok(read) = std::fs::read_dir(root()) else {
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    for e in read.flatten() {
+        if !e.path().join("manifest.json").exists() {
+            continue;
+        }
+        let art = engine.load_artifact(&e.path()).unwrap();
+        art.manifest.check_param_accounting().unwrap();
+    }
+}
+
+#[test]
+fn forward_runs_and_is_causal_shape() {
+    if !have("n20k-quartet") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let art = engine.load_named(&root(), "n20k-quartet").unwrap();
+    let m = &art.manifest;
+    let (params, _, _) = init_state(m, 7).unwrap();
+    let (b, s, v) = (m.model.batch, m.model.seq_len, m.model.vocab);
+    let tokens: Vec<i32> = (0..b * s).map(|i| (i % v) as i32).collect();
+    let mut inputs = vec![tensor_i32(&tokens, &[b, s]).unwrap()];
+    inputs.extend(params.iter().cloned());
+    let out = art.run("forward", &inputs).unwrap();
+    let logits: Vec<f32> = out[0].to_vec().unwrap();
+    assert_eq!(logits.len(), b * s * v);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn eval_loss_near_log_vocab_at_init() {
+    if !have("n20k-quartet") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let art = engine.load_named(&root(), "n20k-quartet").unwrap();
+    let m = &art.manifest;
+    let (params, _, _) = init_state(m, 3).unwrap();
+    let (b, s, v) = (m.model.batch, m.model.seq_len, m.model.vocab);
+    let tokens: Vec<i32> = (0..b * (s + 1)).map(|i| ((i * 7) % v) as i32).collect();
+    let mut inputs = vec![tensor_i32(&tokens, &[b, s + 1]).unwrap()];
+    inputs.extend(params.iter().cloned());
+    let out = art.run("eval_loss", &inputs).unwrap();
+    let loss = literal_scalar_f32(&out[0]).unwrap();
+    let expect = (v as f32).ln();
+    assert!(
+        (loss - expect).abs() < 0.6,
+        "init loss {loss} vs ln(V) {expect}"
+    );
+}
+
+#[test]
+fn input_arity_and_shape_validation() {
+    if !have("n20k-quartet") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let art = engine.load_named(&root(), "n20k-quartet").unwrap();
+    // wrong arity
+    assert!(art.run("eval_loss", &[]).is_err());
+    // wrong shape: tokens with the wrong element count
+    let m = &art.manifest;
+    let (params, _, _) = init_state(m, 0).unwrap();
+    let mut inputs = vec![tensor_i32(&[1, 2, 3], &[1, 3]).unwrap()];
+    inputs.extend(params);
+    assert!(art.run("eval_loss", &inputs).is_err());
+}
+
+#[test]
+fn pallas_lowered_train_step_matches_jnp_path() {
+    // The kernel-composition proof: the Pallas-lowered artifact and the
+    // jnp-reference artifact implement identical numerics, so one train
+    // step from identical state must produce (nearly) identical loss.
+    if !have("n20k-quartet") || !have("n20k-quartet_pallas") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let a_ref = engine.load_named(&root(), "n20k-quartet").unwrap();
+    let a_pal = engine.load_named(&root(), "n20k-quartet_pallas").unwrap();
+
+    let m = &a_ref.manifest.model;
+    let tokens: Vec<i32> = (0..m.batch * (m.seq_len + 1))
+        .map(|i| ((i * 13 + 5) % m.vocab) as i32)
+        .collect();
+
+    let mut losses = Vec::new();
+    for art in [&a_ref, &a_pal] {
+        let (params, mm, vv) = init_state(&art.manifest, 11).unwrap();
+        let mut inputs = vec![
+            scalar_i32(0).unwrap(),
+            scalar_i32(99).unwrap(),
+            scalar_f32(1e-3).unwrap(),
+            scalar_f32(100.0).unwrap(),
+            tensor_i32(&tokens, &[m.batch, m.seq_len + 1]).unwrap(),
+        ];
+        inputs.extend(params);
+        inputs.extend(mm);
+        inputs.extend(vv);
+        let out = art.run("train_step", &inputs).unwrap();
+        losses.push(literal_scalar_f32(&out[0]).unwrap());
+    }
+    let (l_ref, l_pal) = (losses[0], losses[1]);
+    assert!(
+        (l_ref - l_pal).abs() < 1e-3 * (1.0 + l_ref.abs()),
+        "pallas {l_pal} vs ref {l_ref}"
+    );
+}

@@ -1,0 +1,134 @@
+//! Integration: full training loop over the PJRT runtime (one compiled
+//! artifact reused across assertions to keep XLA compile cost bounded),
+//! checkpointing, and the serving engine.
+
+use std::path::PathBuf;
+
+use quartet::coordinator::checkpoint;
+use quartet::coordinator::init::init_state;
+use quartet::coordinator::trainer::{TrainOptions, Trainer};
+use quartet::runtime::engine::Engine;
+use quartet::serve::{PrefillEngine, Request};
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(name: &str) -> bool {
+    let ok = root().join(name).join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifact {name} missing — run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn training_loop_end_to_end() {
+    if !have("n20k-quartet") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let art = engine.load_named(&root(), "n20k-quartet").unwrap();
+
+    let opts = TrainOptions {
+        steps: 48,
+        eval_every: 24,
+        eval_batches: 2,
+        log_every: 8,
+        seed: 1,
+        ..TrainOptions::default()
+    };
+    let rec = Trainer::new(&art, opts.clone()).train().unwrap();
+
+    // basic shape of the record
+    assert_eq!(rec.steps, 48);
+    assert_eq!(rec.tokens, 48 * art.manifest.tokens_per_step());
+    assert!(!rec.diverged, "diverged");
+    assert!(rec.final_val_loss.is_finite());
+    assert!(!rec.train_curve.is_empty());
+    assert!(rec.val_curve.len() >= 2, "periodic + final eval");
+
+    // loss statistically decreases from ln(V) over 48 steps
+    let first = rec.train_curve.first().unwrap().1;
+    let last = rec.train_curve.last().unwrap().1;
+    assert!(last < first + 0.02, "train loss rose: {first} -> {last}");
+
+    // determinism: same seed → identical record
+    let rec2 = Trainer::new(&art, opts).train().unwrap();
+    assert_eq!(rec.train_curve, rec2.train_curve, "seeded training not deterministic");
+    assert_eq!(rec.final_val_loss, rec2.final_val_loss);
+
+    // different seed → different trajectory
+    let rec3 = Trainer::new(
+        &art,
+        TrainOptions { steps: 48, seed: 2, log_every: 8, ..TrainOptions::default() },
+    )
+    .train()
+    .unwrap();
+    assert_ne!(rec.train_curve, rec3.train_curve);
+}
+
+#[test]
+fn checkpoint_roundtrip() {
+    if !have("n20k-quartet") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let art = engine.load_named(&root(), "n20k-quartet").unwrap();
+    let (params, _, _) = init_state(&art.manifest, 42).unwrap();
+    let path = std::env::temp_dir().join(format!("qr_ck_{}.bin", std::process::id()));
+    checkpoint::save(&path, &art.manifest, &params).unwrap();
+    let back = checkpoint::load(&path, &art.manifest).unwrap();
+    for ((a, b), spec) in params.iter().zip(&back).zip(&art.manifest.params) {
+        let va: Vec<f32> = a.to_vec().unwrap();
+        let vb: Vec<f32> = b.to_vec().unwrap();
+        assert_eq!(va, vb, "{}", spec.name);
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn serve_prefill_batches_and_completes() {
+    if !have("n20k-quartet") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let art = engine.load_named(&root(), "n20k-quartet").unwrap();
+    let mut eng = PrefillEngine::new(&art, 5).unwrap();
+    let vocab = art.manifest.model.vocab as i32;
+    let n_req = eng.batch * 2 + 3; // forces a padded tail batch
+    for id in 0..n_req as u64 {
+        let tokens: Vec<i32> = (0..eng.seq).map(|i| (i as i32 * 31 + id as i32) % vocab).collect();
+        eng.submit(Request { id, tokens });
+    }
+    let (done, wall, tps) = eng.drain().unwrap();
+    assert_eq!(done.len(), n_req);
+    assert_eq!(eng.pending(), 0);
+    assert!(wall > 0.0 && tps > 0.0);
+    // ids preserved, in order
+    for (i, c) in done.iter().enumerate() {
+        assert_eq!(c.id, i as u64);
+        assert!((0..vocab).contains(&c.next_token));
+        assert!(c.batch_size <= eng.batch);
+    }
+    // identical params + identical tokens → deterministic prediction
+    let mut eng2 = PrefillEngine::new(&art, 5).unwrap();
+    let tokens: Vec<i32> = (0..eng2.seq).map(|i| (i as i32 * 31) % vocab).collect();
+    eng2.submit(Request { id: 0, tokens: tokens.clone() });
+    let first = eng2.step().unwrap()[0].next_token;
+    eng2.submit(Request { id: 1, tokens });
+    let second = eng2.step().unwrap()[0].next_token;
+    assert_eq!(first, second);
+}
+
+#[test]
+fn rejects_malformed_requests() {
+    if !have("n20k-quartet") {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let art = engine.load_named(&root(), "n20k-quartet").unwrap();
+    let mut eng = PrefillEngine::new(&art, 0).unwrap();
+    eng.submit(Request { id: 0, tokens: vec![1, 2, 3] }); // wrong length
+    assert!(eng.step().is_err());
+}

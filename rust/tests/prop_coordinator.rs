@@ -1,0 +1,138 @@
+//! Property tests on coordinator invariants: batching, run records,
+//! sweep math, JSON round-trips, CLI parsing — no PJRT needed.
+
+use quartet::coordinator::runrecord::RunRecord;
+use quartet::coordinator::sweep::steps_for_ratio;
+use quartet::data::corpus::{Corpus, CorpusConfig, Split};
+use quartet::data::loader::Batcher;
+use quartet::util::cli::Args;
+use quartet::util::json::Json;
+use quartet::util::prop::{check, ensure};
+
+#[test]
+fn prop_batcher_shapes_range_determinism() {
+    check("batcher invariants", 25, |ctx| {
+        let vocab = 32 * (1 + ctx.rng.below(16));
+        let batch = 1 + ctx.rng.below(8);
+        let seq = 8 * (1 + ctx.rng.below(8));
+        let k = 1 + ctx.rng.below(4);
+        let corpus = Corpus::new(CorpusConfig { vocab, seed: ctx.rng.next_u64(), ..Default::default() });
+        let seg1 = Batcher::new(&corpus, Split::Train, batch, seq).next_segment(k);
+        let seg2 = Batcher::new(&corpus, Split::Train, batch, seq).next_segment(k);
+        ensure(seg1.len() == k * batch * (seq + 1), "segment length")?;
+        ensure(seg1 == seg2, "determinism")?;
+        ensure(
+            seg1.iter().all(|&t| (t as usize) < vocab && t >= 0),
+            "token range",
+        )
+    });
+}
+
+#[test]
+fn prop_steps_for_ratio_monotone_and_consistent() {
+    check("steps math", 40, |ctx| {
+        let n = 1000 + ctx.rng.below(1_000_000);
+        let tps = 32 * (1 + ctx.rng.below(64));
+        let r1 = 1.0 + ctx.rng.uniform() * 100.0;
+        let r2 = r1 * (1.0 + ctx.rng.uniform());
+        let s1 = steps_for_ratio(r1, n, tps);
+        let s2 = steps_for_ratio(r2, n, tps);
+        ensure(s2 >= s1, "monotone in ratio")?;
+        ensure(s1 >= 1, "at least one step")?;
+        // steps·tps covers the requested token budget (ceil semantics)
+        ensure(s1 * tps >= (r1 * n as f64) as usize, "token budget covered")
+    });
+}
+
+#[test]
+fn prop_runrecord_roundtrip() {
+    check("run record JSON roundtrip", 20, |ctx| {
+        let n_pts = ctx.rng.below(20);
+        let rec = RunRecord {
+            artifact: format!("a{}", ctx.rng.below(10)),
+            size: "n20k".into(),
+            method: "quartet".into(),
+            non_embedding_params: ctx.rng.below(1_000_000),
+            tokens: ctx.rng.below(10_000_000),
+            steps: ctx.rng.below(10_000),
+            ratio: ctx.rng.uniform() * 800.0,
+            seed: ctx.rng.next_u64() % 1_000_000,
+            train_curve: (0..n_pts).map(|i| (i, ctx.rng.uniform() * 10.0)).collect(),
+            val_curve: vec![(n_pts, 3.5)],
+            final_val_loss: ctx.rng.uniform() * 10.0,
+            wall_secs: ctx.rng.uniform() * 100.0,
+            tokens_per_sec: ctx.rng.uniform() * 1e6,
+            diverged: ctx.rng.below(2) == 0,
+        };
+        let j = Json::parse(&rec.to_json().to_string()).map_err(|e| e.to_string())?;
+        let back = RunRecord::from_json(&j).map_err(|e| e.to_string())?;
+        ensure(back.artifact == rec.artifact, "artifact")?;
+        ensure(back.train_curve == rec.train_curve, "curve")?;
+        ensure(back.diverged == rec.diverged, "diverged")?;
+        ensure((back.ratio - rec.ratio).abs() < 1e-9, "ratio")
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn random_json(rng: &mut quartet::util::rng::Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.gaussian() * 1e3).round() / 8.0),
+            3 => Json::Str(format!("s{}-\"x\"\n{}", rng.below(100), rng.below(100))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(4) {
+                    o.set(&format!("k{i}"), random_json(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    check("json fuzz roundtrip", 60, |ctx| {
+        let v = random_json(ctx.rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).map_err(|e| format!("{e} on {s}"))?;
+        ensure(back == v, format!("mismatch on {s}"))?;
+        let pretty = v.to_string_pretty();
+        let back2 = Json::parse(&pretty).map_err(|e| e.to_string())?;
+        ensure(back2 == v, "pretty mismatch")
+    });
+}
+
+#[test]
+fn prop_cli_random_flags() {
+    check("cli parse stability", 40, |ctx| {
+        let n = ctx.rng.below(6);
+        let mut argv = vec!["cmd".to_string()];
+        let mut expect = Vec::new();
+        for i in 0..n {
+            let key = format!("key{i}");
+            let val = format!("v{}", ctx.rng.below(1000));
+            if ctx.rng.below(2) == 0 {
+                argv.push(format!("--{key}={val}"));
+            } else {
+                argv.push(format!("--{key}"));
+                argv.push(val.clone());
+            }
+            expect.push((key, val));
+        }
+        let mut args = Args::parse(argv).map_err(|e| e.to_string())?;
+        ensure(args.subcommand() == Some("cmd"), "subcommand")?;
+        for (k, v) in expect {
+            ensure(args.get(&k).as_deref() == Some(v.as_str()), format!("flag {k}"))?;
+        }
+        args.finish().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn corpus_entropy_floor_reflected_in_losses() {
+    // sanity link between the corpus floor and the scaling law's E: a
+    // perfect order-2 predictor cannot beat (1-structure)·H_unigram
+    let c = Corpus::new(CorpusConfig::default());
+    let floor = c.entropy_floor();
+    assert!(floor > 0.3 && floor < (512f64).ln(), "floor {floor}");
+}

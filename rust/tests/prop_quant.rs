@@ -1,0 +1,189 @@
+//! Property tests over the quant substrate (util::prop harness), plus the
+//! cross-language golden-vector pinning against python/compile/formats.py.
+
+use quartet::quant::e2m1::{e2m1_decode, e2m1_encode_rtn, e2m1_rtn, E2M1_GRID};
+use quartet::quant::hadamard::{
+    block_hadamard, block_hadamard_inv, rademacher, randomized_block_hadamard,
+    randomized_block_hadamard_inv,
+};
+use quartet::quant::mxfp4::{f32_gemm, mxfp4_gemm, Mxfp4Tensor, QuantMode, MX_GROUP};
+use quartet::util::prop::{check, ensure, ensure_close};
+use quartet::util::rng::Rng;
+use quartet::util::stats::mse;
+
+#[test]
+fn prop_quantize_dequantize_values_on_grid() {
+    check("dequant values on E2M1 grid", 40, |ctx| {
+        let rows = ctx.dim(1).min(8);
+        let cols = ctx.dim(32);
+        let scale = ctx.scale();
+        let x = ctx.vec_gaussian(rows * cols, scale);
+        let t = Mxfp4Tensor::quantize(&x, rows, cols, QuantMode::Rtn, ctx.rng);
+        let dq = t.dequantize();
+        let gpr = cols / MX_GROUP;
+        for r in 0..rows {
+            for g in 0..gpr {
+                let s = t.scales[r * gpr + g].value();
+                for i in 0..MX_GROUP {
+                    let v = dq[r * cols + g * MX_GROUP + i] / s;
+                    ensure(
+                        E2M1_GRID.iter().any(|&gv| (gv - v.abs()).abs() < 1e-6),
+                        format!("off-grid value {v} (scale {s})"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rtn_idempotent() {
+    check("RTN quantization is idempotent", 30, |ctx| {
+        let cols = ctx.dim(32);
+        let scale = ctx.scale();
+        let x = ctx.vec_gaussian(cols, scale);
+        let q1 = Mxfp4Tensor::quantize(&x, 1, cols, QuantMode::Rtn, ctx.rng).dequantize();
+        let q2 = Mxfp4Tensor::quantize(&q1, 1, cols, QuantMode::Rtn, ctx.rng).dequantize();
+        for (a, b) in q1.iter().zip(&q2) {
+            ensure((a - b).abs() < 1e-6, format!("{a} -> {b}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_gemm_matches_dense_reference() {
+    check("packed GEMM == dense over dequantized", 20, |ctx| {
+        let m = ctx.dim(1).min(6);
+        let n = ctx.dim(1).min(6);
+        let k = ctx.dim(32);
+        let a = ctx.vec_gaussian(m * k, 1.0);
+        let b = ctx.vec_gaussian(n * k, 1.0);
+        let ta = Mxfp4Tensor::quantize(&a, m, k, QuantMode::Rtn, ctx.rng);
+        let tb = Mxfp4Tensor::quantize(&b, n, k, QuantMode::Rtn, ctx.rng);
+        let got = mxfp4_gemm(&ta, &tb);
+        let want = f32_gemm(&ta.dequantize(), &tb.dequantize(), m, n, k);
+        for (g, w) in got.iter().zip(&want) {
+            ensure((g - w).abs() <= 1e-3 * (1.0 + w.abs()), format!("{g} vs {w}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hadamard_roundtrip_and_norm() {
+    check("H then H^-1 is identity; norm preserved", 30, |ctx| {
+        let d = ctx.dim(32);
+        let scale = ctx.scale();
+        let x = ctx.vec_gaussian(d, scale);
+        let n0: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        let mut y = x.clone();
+        block_hadamard(&mut y, 32);
+        let n1: f64 = y.iter().map(|&v| (v as f64).powi(2)).sum();
+        ensure_close(n1, n0, 1e-3 * (1.0 + n0), "norm preservation")?;
+        block_hadamard_inv(&mut y, 32);
+        for (a, b) in x.iter().zip(&y) {
+            ensure((a - b).abs() < 1e-4 * (1.0 + a.abs()), format!("{a} vs {b}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_randomized_hadamard_preserves_contraction() {
+    check("Ĥ(g,ξ)·Ĥ(w,ξ) == g·w", 25, |ctx| {
+        let d = ctx.dim(32);
+        let g = ctx.vec_gaussian(d, 1.0);
+        let w = ctx.vec_gaussian(d, 1.0);
+        let want: f64 = g.iter().zip(&w).map(|(a, b)| (a * b) as f64).sum();
+        let signs = rademacher(ctx.rng, d);
+        let (mut gh, mut wh) = (g.clone(), w.clone());
+        randomized_block_hadamard(&mut gh, &signs, 32);
+        randomized_block_hadamard(&mut wh, &signs, 32);
+        let got: f64 = gh.iter().zip(&wh).map(|(a, b)| (a * b) as f64).sum();
+        ensure_close(got, want, 1e-3 * (1.0 + want.abs()), "contraction")?;
+        // and the inverse restores
+        randomized_block_hadamard_inv(&mut gh, &signs, 32);
+        for (a, b) in g.iter().zip(&gh) {
+            ensure((a - b).abs() < 1e-4, "roundtrip")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sr_mean_preserving() {
+    // statistical unbiasedness of the Algorithm-1 backward quantizer at
+    // the tensor level, over random inputs
+    check("E[(4/3)·SR(3/4·Ĥx)] == Ĥx", 4, |ctx| {
+        let cols = 32 * (1 + ctx.rng.below(2));
+        let x = ctx.vec_gaussian(cols, 1.0);
+        let trials = 1500;
+        let mut acc = vec![0.0f64; cols];
+        for _ in 0..trials {
+            let t = Mxfp4Tensor::quantize(&x, 1, cols, QuantMode::SrPrescaled, ctx.rng);
+            for (a, v) in acc.iter_mut().zip(t.dequantize()) {
+                *a += v as f64 * (4.0 / 3.0);
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            ensure_close(a / trials as f64, x[i] as f64, 0.1, &format!("coord {i}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quest_never_worse_than_double_absmax_mse() {
+    check("QuEST MSE sane vs AbsMax", 15, |ctx| {
+        let rows = 16;
+        let cols = ctx.dim(32);
+        let x = ctx.vec_gaussian(rows * cols, 1.0);
+        let q = Mxfp4Tensor::quantize(&x, rows, cols, QuantMode::Quest, ctx.rng).dequantize();
+        let a = Mxfp4Tensor::quantize(&x, rows, cols, QuantMode::Rtn, ctx.rng).dequantize();
+        ensure(mse(&q, &x) <= 2.0 * mse(&a, &x) + 1e-9, "quest blew up vs absmax")
+    });
+}
+
+#[test]
+fn golden_vectors_match_python() {
+    // generated by `python -m compile.gen_vectors` — pins the rust and
+    // python substrates to identical RTN/QuEST numerics
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data/quant_vectors.json");
+    if !path.exists() {
+        eprintln!("golden vectors missing ({}) — run make vectors", path.display());
+        return;
+    }
+    let j = quartet::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let cases = j.req("cases").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    let mut rng = Rng::new(0);
+    for case in cases {
+        let x: Vec<f32> = case.req("x").unwrap().as_arr().unwrap()
+            .iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        let cols = x.len();
+        let rtn_want: Vec<f32> = case.req("mxfp4_rtn").unwrap().as_arr().unwrap()
+            .iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        let got = Mxfp4Tensor::quantize(&x, 1, cols, QuantMode::Rtn, &mut rng).dequantize();
+        for (i, (g, w)) in got.iter().zip(&rtn_want).enumerate() {
+            assert!((g - w).abs() < 1e-6, "rtn[{i}]: rust {g} vs python {w}");
+        }
+        let quest_want: Vec<f32> = case.req("quest_q").unwrap().as_arr().unwrap()
+            .iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        let gq = Mxfp4Tensor::quantize(&x, 1, cols, QuantMode::Quest, &mut rng).dequantize();
+        for (i, (g, w)) in gq.iter().zip(&quest_want).enumerate() {
+            assert!((g - w).abs() < 1e-5, "quest[{i}]: rust {g} vs python {w}");
+        }
+    }
+}
+
+#[test]
+fn encode_decode_exhaustive() {
+    for code in 0u8..16 {
+        let v = e2m1_decode(code);
+        assert_eq!(e2m1_decode(e2m1_encode_rtn(v)), v);
+        assert_eq!(e2m1_rtn(v), v); // grid points are fixed points
+    }
+}
