@@ -1,60 +1,103 @@
-//! Fig 3(a,b): quantized-kernel speedups across Llama linear shapes.
+//! Fig 3(a,b): quantized-kernel speedups across Llama linear shapes,
+//! per compute backend.
 //!
 //! Hardware substitution (DESIGN.md §1): no Blackwell tensor cores here,
-//! so three rows are reported per shape —
+//! so rows are reported per (shape, backend) —
 //!   measured : packed-MXFP4 GEMM (LUT dequant, 4.25 bits/val of traffic)
 //!              vs f32 GEMM on this CPU,
 //!   model    : the BOPS bit-width model of §4.2 (Table 1),
 //!   paper    : the RTX5090 measurements (§5).
 //! The *shape* claim being checked: speedup grows with arithmetic
-//! intensity and the quantize stage amortizes at large d.
+//! intensity and the quantize stage amortizes at large d. The backend
+//! axis (`--backend scalar|parallel|both`, default both) additionally
+//! measures how much the tiled `ParallelBackend` buys over the scalar
+//! reference — the CPU rendering of Fig 3's "kernels engineered for the
+//! hardware's parallelism" claim.
 
 use quartet::bench::{gemm_flops, geomean, llama_linear_shapes};
-use quartet::quant::mxfp4::{f32_gemm, mxfp4_gemm, Mxfp4Tensor, QuantMode};
+use quartet::quant::mxfp4::QuantMode;
 use quartet::util::bench::Bencher;
+use quartet::util::cli::{backends_flag, Args};
 use quartet::util::rng::Rng;
 
 fn main() {
     quartet::util::bench::print_header("Fig 3(a,b) — linear-layer kernel speedups");
+    let mut args = Args::from_env().unwrap_or_default();
+    let _ = args.flag("bench"); // passed through by `cargo bench`
+    let backends = backends_flag(&mut args).expect("--backend");
     let b = Bencher::from_env();
-    let mut rng = Rng::new(0xF163);
     let fast = std::env::var("QUARTET_BENCH_FAST").is_ok();
 
-    let mut speedups = Vec::new();
-    println!(
-        "{:<26} {:>12} {:>12} {:>12} {:>10}",
-        "shape (m,n,k)", "f32 GEMM", "mxfp4 GEMM", "quantize", "speedup"
-    );
-    for (label, m, n, k) in llama_linear_shapes() {
-        if fast && m * n * k > 512 * 1024 * 1024 {
-            continue;
-        }
-        let a = rng.gaussian_vec(m * k, 1.0);
-        let w = rng.gaussian_vec(n * k, 0.3);
-        let ta = Mxfp4Tensor::quantize(&a, m, k, QuantMode::Rtn, &mut rng);
-        let tw = Mxfp4Tensor::quantize(&w, n, k, QuantMode::Rtn, &mut rng);
+    // (backend, shape label) -> median mxfp4 GEMM seconds
+    let mut mx_medians: Vec<(&'static str, &'static str, f64)> = Vec::new();
 
-        let m_f32 = b.bench_with_work("f32", gemm_flops(m, n, k), "FLOP",
-                                      || f32_gemm(&a, &w, m, n, k));
-        let m_mx = b.bench_with_work("mxfp4", gemm_flops(m, n, k), "FLOP",
-                                     || mxfp4_gemm(&ta, &tw));
-        let m_q = b.bench("quant", || {
-            Mxfp4Tensor::quantize(&a, m, k, QuantMode::Rtn, &mut Rng::new(1))
-        });
-
-        let sp = m_f32.median() / (m_mx.median() + m_q.median());
-        speedups.push(sp);
+    for be in &backends {
+        let mut rng = Rng::new(0xF163);
+        let mut speedups = Vec::new();
+        println!("\n[backend: {}]", be.name());
         println!(
-            "{:<26} {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>9.2}x",
-            label,
-            m_f32.median() * 1e3,
-            m_mx.median() * 1e3,
-            m_q.median() * 1e3,
-            sp
+            "{:<26} {:>12} {:>12} {:>12} {:>10}",
+            "shape (m,n,k)", "f32 GEMM", "mxfp4 GEMM", "quantize", "speedup"
+        );
+        for (label, m, n, k) in llama_linear_shapes() {
+            if fast && m * n * k > 512 * 1024 * 1024 {
+                continue;
+            }
+            let a = rng.gaussian_vec(m * k, 1.0);
+            let w = rng.gaussian_vec(n * k, 0.3);
+            let ta = be.quantize_mxfp4(&a, m, k, QuantMode::Rtn, &mut rng);
+            let tw = be.quantize_mxfp4(&w, n, k, QuantMode::Rtn, &mut rng);
+
+            let m_f32 = b.bench_with_work("f32", gemm_flops(m, n, k), "FLOP",
+                                          || be.gemm_f32(&a, &w, m, n, k));
+            let m_mx = b.bench_with_work("mxfp4", gemm_flops(m, n, k), "FLOP",
+                                         || be.gemm_mxfp4(&ta, &tw));
+            let m_q = b.bench("quant", || {
+                be.quantize_mxfp4(&a, m, k, QuantMode::Rtn, &mut Rng::new(1))
+            });
+
+            let sp = m_f32.median() / (m_mx.median() + m_q.median());
+            speedups.push(sp);
+            mx_medians.push((be.name(), label, m_mx.median()));
+            println!(
+                "{:<26} {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>9.2}x",
+                label,
+                m_f32.median() * 1e3,
+                m_mx.median() * 1e3,
+                m_q.median() * 1e3,
+                sp
+            );
+        }
+        println!(
+            "measured geomean ({}, end-to-end incl. quantize): {:.2}x",
+            be.name(),
+            geomean(&speedups)
         );
     }
-    println!("\nmeasured geomean (this CPU, end-to-end incl. quantize): {:.2}x", geomean(&speedups));
-    println!("BOPS model (§4.2 Table 1): fwd 2.0x vs FP8 / 4.0x vs BF16");
+
+    // cross-backend speedup (the refactor's own Fig 3 row)
+    if backends.len() == 2 {
+        println!("\n[parallel vs scalar, mxfp4 GEMM]");
+        let mut ratios = Vec::new();
+        for (label, _m, _n, _k) in llama_linear_shapes() {
+            let find = |bname: &str| {
+                mx_medians
+                    .iter()
+                    .find(|(b, l, _)| *b == bname && *l == label)
+                    .map(|(_, _, t)| *t)
+            };
+            if let (Some(s), Some(p)) = (find("scalar"), find("parallel")) {
+                let r = s / p;
+                ratios.push(r);
+                println!("{label:<26} {r:>9.2}x");
+            }
+        }
+        if !ratios.is_empty() {
+            println!("geomean: {:.2}x", geomean(&ratios));
+        }
+    }
+
+    println!("\nBOPS model (§4.2 Table 1): fwd 2.0x vs FP8 / 4.0x vs BF16");
     println!("paper measured (RTX5090):  fwd up to 2.4x vs FP8, 4x vs BF16;");
     println!("                           bwd up to 1.6x vs FP8, 2.3x vs BF16");
     println!("shape check: speedup should GROW with m·n·k (arithmetic intensity) — see rows above.");

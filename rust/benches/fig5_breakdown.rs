@@ -1,14 +1,18 @@
 //! Fig 5 / Appendix A.3: runtime composition of the MXFP4 forward path —
 //! % of time in (1) quantize-related ops (Hadamard+scale+round+mask),
 //! (2) scale-factor rearrangement for the GEMM's layout, (3) the GEMM —
-//! across linear shapes and two quantize-stage "tile" strategies:
-//!   small-tile  = Hadamard as per-group dense matmul (the 32×32 tile),
-//!   fused-large = in-place FWHT over large row panels (the 128×32 analog).
+//! across linear shapes, two quantize-stage "tile" strategies and both
+//! compute backends (`--backend scalar|parallel|both`):
+//!   small-tile  = Hadamard as per-group dense matmul (the 32×32 tile,
+//!                 using the cached `kernels::hadamard_plan`),
+//!   fused-large = in-place FWHT over large row panels (the 128×32
+//!                 analog), routed through the backend.
 
 use quartet::bench::llama_linear_shapes;
-use quartet::quant::hadamard::BlockHadamard;
-use quartet::quant::mxfp4::{mxfp4_gemm, Mxfp4Tensor, QuantMode, MX_GROUP};
+use quartet::kernels::hadamard_plan;
+use quartet::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
 use quartet::util::bench::Bencher;
+use quartet::util::cli::{backends_flag, Args};
 use quartet::util::rng::Rng;
 
 /// The scale-rearrangement stage: tcgen05.mma wants scales in a swizzled
@@ -30,49 +34,55 @@ fn rearrange_scales(t: &Mxfp4Tensor) -> Vec<u8> {
 
 fn main() {
     quartet::util::bench::print_header("Fig 5 — MXFP4 forward runtime composition");
+    let mut args = Args::from_env().unwrap_or_default();
+    let _ = args.flag("bench");
+    let backends = backends_flag(&mut args).expect("--backend");
     let b = Bencher::from_env();
-    let mut rng = Rng::new(0xF165);
     let fast = std::env::var("QUARTET_BENCH_FAST").is_ok();
 
-    for (label, m, n, k) in llama_linear_shapes().into_iter().take(3) {
-        if fast && m * n * k > 512 * 1024 * 1024 {
-            continue;
-        }
-        let x = rng.gaussian_vec(m * k, 1.0);
-        let w = rng.gaussian_vec(n * k, 0.3);
-        let tw = Mxfp4Tensor::quantize(&w, n, k, QuantMode::Rtn, &mut rng);
-        let plan = BlockHadamard::new(MX_GROUP);
+    for be in &backends {
+        let mut rng = Rng::new(0xF165);
+        println!("\n[backend: {}]", be.name());
+        for (label, m, n, k) in llama_linear_shapes().into_iter().take(3) {
+            if fast && m * n * k > 512 * 1024 * 1024 {
+                continue;
+            }
+            let x = rng.gaussian_vec(m * k, 1.0);
+            let w = rng.gaussian_vec(n * k, 0.3);
+            let tw = be.quantize_mxfp4(&w, n, k, QuantMode::Rtn, &mut rng);
+            let plan = hadamard_plan(MX_GROUP);
 
-        // quantize stage, two tile strategies
-        let q_small = b.bench("q-small", || {
-            let xh = plan.apply_matmul(&x); // dense 32x32 matmul per group
-            Mxfp4Tensor::quantize(&xh, m, k, QuantMode::Quest, &mut Rng::new(1))
-        });
-        let q_large = b.bench("q-large", || {
-            let mut xh = x.clone(); // fused large-panel FWHT
-            plan.apply_fwht(&mut xh);
-            Mxfp4Tensor::quantize(&xh, m, k, QuantMode::Quest, &mut Rng::new(1))
-        });
-        let tx = {
-            let mut xh = x.clone();
-            plan.apply_fwht(&mut xh);
-            Mxfp4Tensor::quantize(&xh, m, k, QuantMode::Quest, &mut rng)
-        };
-        let rearr = b.bench("rearrange", || rearrange_scales(&tx));
-        let gemm = b.bench("gemm", || mxfp4_gemm(&tx, &tw));
+            // quantize stage, two tile strategies
+            let q_small = b.bench("q-small", || {
+                let xh = plan.apply_matmul(&x); // dense 32x32 matmul per group
+                be.quantize_mxfp4(&xh, m, k, QuantMode::Quest, &mut Rng::new(1))
+            });
+            let q_large = b.bench("q-large", || {
+                let mut xh = x.clone(); // fused large-panel FWHT
+                be.block_hadamard(&mut xh, MX_GROUP);
+                be.quantize_mxfp4(&xh, m, k, QuantMode::Quest, &mut Rng::new(1))
+            });
+            let tx = {
+                let mut xh = x.clone();
+                be.block_hadamard(&mut xh, MX_GROUP);
+                be.quantize_mxfp4(&xh, m, k, QuantMode::Quest, &mut rng)
+            };
+            let rearr = b.bench("rearrange", || rearrange_scales(&tx));
+            let gemm = b.bench("gemm", || be.gemm_mxfp4(&tx, &tw));
 
-        for (cfg, q) in [("32x32 tile", &q_small), ("128x32 fused", &q_large)] {
-            let total = q.median() + rearr.median() + gemm.median();
-            println!(
-                "\n{label} [{cfg}]  total {:.2} ms",
-                total * 1e3
-            );
-            println!(
-                "  quantize   {:>5.1}%   rearrange {:>5.1}%   matmul {:>5.1}%",
-                100.0 * q.median() / total,
-                100.0 * rearr.median() / total,
-                100.0 * gemm.median() / total
-            );
+            for (cfg, q) in [("32x32 tile", &q_small), ("128x32 fused", &q_large)] {
+                let total = q.median() + rearr.median() + gemm.median();
+                println!(
+                    "\n{label} [{cfg}]  total {:.2} ms",
+                    total * 1e3
+                );
+                println!(
+                    "  quantize   {:>5.1}%   rearrange {:>5.1}%   matmul {:>5.1}%",
+                    100.0 * q.median() / total,
+                    100.0 * rearr.median() / total,
+                    100.0 * gemm.median() / total
+                );
+            }
         }
     }
     println!(

@@ -1,21 +1,24 @@
 //! Fig 6 / Appendix A.4: end-to-end prefill speedup of MXFP4 vs FP8 as a
 //! function of batch size.
 //!
-//! Two legs: (1) measured wall-clock through the serving engine over the
-//! batch-compiled `forward` artifacts when the `serve` artifact set is
-//! built; (2) the analytic leg — forward FLOPs × the BOPS/measured
+//! Three legs: (1) the analytic leg — forward FLOPs × the BOPS/measured
 //! speedup model — which reproduces the paper's curve shape (speedup
-//! grows with batch until compute-bound, plateauing ≈1.41x).
+//! grows with batch until compute-bound, plateauing ≈1.41x); (2) the CPU
+//! serving leg — the pure-Rust `CpuPrefillEngine` racing the scalar and
+//! parallel kernels backends across batch sizes (`--backend` narrows it);
+//! (3) measured wall-clock through the PJRT serving engine over the
+//! batch-compiled `forward` artifacts, when built with `--features xla`
+//! and the `serve` artifact set exists.
 
-use quartet::runtime::engine::Engine;
-use quartet::serve::{PrefillEngine, Request};
+use quartet::serve::{CpuPrefillEngine, CpuServeConfig, Request};
+use quartet::util::cli::{backends_flag, Args};
 use quartet::util::rng::Rng;
 
 fn main() {
     quartet::util::bench::print_header("Fig 6 — prefill speedup vs batch size");
-    let root = quartet::bench::artifacts_root();
-    let engine = Engine::cpu().expect("pjrt cpu");
-    let mut rng = Rng::new(0xF166);
+    let mut args = Args::from_env().unwrap_or_default();
+    let _ = args.flag("bench");
+    let backends = backends_flag(&mut args).expect("--backend");
 
     // ---- analytic leg (always available) ------------------------------
     println!("\n[analytic: BOPS + paper-measured kernel speedups]");
@@ -30,16 +33,68 @@ fn main() {
     }
     println!("paper: monotone rise, plateau 1.41x at batch 128 (7B, seq 256, RTX5090)");
 
-    // ---- measured leg (needs --set serve artifacts) --------------------
+    // ---- CPU serving leg (kernels::Backend race) -----------------------
+    let fast = std::env::var("QUARTET_BENCH_FAST").is_ok();
+    let batches: &[usize] = if fast { &[1, 4, 16] } else { &[1, 2, 4, 8, 16, 32] };
+    println!("\n[CPU serving engine: quantized linear stack over kernels::Backend]");
+    println!("{:>8} {:>18} {:>18} {:>10}", "batch", "scalar tok/s", "parallel tok/s", "ratio");
+    for &bs in batches {
+        let mut tps = vec![0.0f64; backends.len()];
+        for (slot, be) in backends.iter().enumerate() {
+            let backend = quartet::kernels::backend_from_name(be.name()).unwrap();
+            let cfg = CpuServeConfig { batch: bs, ..CpuServeConfig::default() };
+            let seq = cfg.seq;
+            let vocab = cfg.vocab;
+            let mut eng = CpuPrefillEngine::new(cfg, backend, 1);
+            let mut rng = Rng::new(0xF166 + bs as u64);
+            for id in 0..(bs * 3) as u64 {
+                let tokens: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+                eng.submit(Request { id, tokens });
+            }
+            if let Ok((_done, _wall, t)) = eng.drain() {
+                tps[slot] = t;
+            }
+        }
+        match tps.as_slice() {
+            [s, p] if *s > 0.0 && *p > 0.0 => {
+                println!("{bs:>8} {s:>18.0} {p:>18.0} {:>9.2}x", p / s)
+            }
+            [only] => println!("{bs:>8} {:>18.0} ({})", only, backends[0].name()),
+            _ => {}
+        }
+    }
+    println!("expected shape: the parallel backend's advantage grows with batch \
+              (more rows to tile) — the CPU analog of Fig 6's rise to the plateau.");
+
+    xla_leg();
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_leg() {
+    println!(
+        "\n[PJRT measured leg skipped — build with `--features xla` and the serve \
+         artifact set (`python -m compile.aot --out-dir ../artifacts --set serve`)]"
+    );
+}
+
+#[cfg(feature = "xla")]
+fn xla_leg() {
+    use quartet::runtime::engine::Engine;
+    use quartet::serve::PrefillEngine;
+
+    let root = quartet::bench::artifacts_root();
+    let engine = Engine::cpu().expect("pjrt cpu");
+    let mut rng = Rng::new(0xF166);
+
     let batches = [1usize, 2, 4, 8, 16, 32, 64, 128];
     if !root.join("n330k-quartet-b1/manifest.json").exists() {
         println!(
-            "\n[measured leg skipped — build serve artifacts first:\n  \
+            "\n[PJRT measured leg skipped — build serve artifacts first:\n  \
              cd python && python -m compile.aot --out-dir ../artifacts --set serve]"
         );
         return;
     }
-    println!("\n[measured on this CPU via the serving engine]");
+    println!("\n[measured on this CPU via the PJRT serving engine]");
     println!("{:>8} {:>16} {:>16} {:>10}", "batch", "quartet tok/s", "fp8 tok/s", "ratio");
     for &bs in &batches {
         let mut tps = [0.0f64; 2];

@@ -1,23 +1,60 @@
 //! Table 3: end-to-end 4-bit training-method comparison — validation loss
 //! per D/N ratio, with fitted efficiency factors. Reads run records from
 //! `repro sweep --preset table3` (+ `reduced` for the baseline grid).
+//! Also times each method's quantizer on a standard shape under the
+//! selected kernels backend (`--backend scalar|parallel`), since the
+//! per-step quantize cost is what Table 3's wall-clock column hides.
 
 use std::collections::BTreeMap;
 
 use quartet::bench::paper::TABLE3_EFF;
 use quartet::bench::runs_root;
 use quartet::coordinator::runrecord::RunRecord;
+use quartet::quant::methods::*;
 use quartet::scaling::fit::{fit_base_law, fit_efficiencies, FitOptions};
 use quartet::scaling::law::Run;
+use quartet::util::bench::Bencher;
+use quartet::util::cli::Args;
+use quartet::util::rng::Rng;
 
 const METHODS: [&str; 7] =
     ["quartet", "luq_int4", "luq_fp4", "jetfire_fp4", "halo_fp4", "lss_int4", "fp8"];
 
+/// Time each training method's quantizer on one [rows, cols] activation
+/// tile through the active backend.
+fn bench_quantizer_zoo() {
+    let zoo: Vec<Box<dyn Quantizer>> = vec![
+        Box::new(QuartetSr),
+        Box::new(LuqInt4),
+        Box::new(LuqFp4),
+        Box::new(JetfireFp4),
+        Box::new(HaloFp4),
+        Box::new(LssInt4),
+        Box::new(QuestQuantizer),
+    ];
+    let (rows, cols) = (128, 1024);
+    let b = Bencher::from_env();
+    let mut rng = Rng::new(0x7AB13);
+    let x = rng.gaussian_vec(rows * cols, 1.0);
+    println!(
+        "\n[method quantize cost, {rows}x{cols}, backend = {}]",
+        quartet::kernels::active().name()
+    );
+    for q in &zoo {
+        let m = b.bench(q.name(), || q.quantize(&x, rows, cols, &mut Rng::new(3)));
+        println!("{:<14} {:>10.3} ms/iter", q.name(), m.median() * 1e3);
+    }
+}
+
 fn main() {
     quartet::util::bench::print_header("Table 3 — fully-quantized training methods (nano scale)");
+    let mut args = Args::from_env().unwrap_or_default();
+    let _ = args.flag("bench");
+    quartet::util::cli::apply_backend_flag(&mut args).expect("--backend");
+    bench_quantizer_zoo();
     let recs = RunRecord::load_dir(&runs_root()).unwrap_or_default();
     if recs.is_empty() {
-        println!("no runs in {} — run `make runs` and `repro sweep --preset table3`",
+        println!("\nno runs in {} — run `make runs` and `repro sweep --preset table3`",
                  runs_root().display());
         return;
     }

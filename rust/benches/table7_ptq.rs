@@ -8,19 +8,97 @@
 //! artifact (weights already on the MXFP4 grid); train the same budget
 //! with Quartet and evaluate through its own activation-quantizing
 //! artifact. Paper: BF16 16.40 < Quartet 17.77 < QuaRot 18.19.
+//!
+//! Two legs: the synthetic-weights PTQ comparison (pure Rust, honours the
+//! `--backend scalar|parallel` axis through the kernels layer) always
+//! runs; the trained-model leg needs the `xla` feature + artifacts.
 
 use quartet::analysis::ptq::{gptq, rtn_ptq, PtqOptions};
-use quartet::coordinator::trainer::{TrainOptions, Trainer};
-use quartet::runtime::engine::{tensor_f32, Engine};
+use quartet::util::cli::Args;
 use quartet::util::rng::Rng;
+
+/// Mean squared output error of y = x·Wᵀ under weight quantization.
+fn layer_output_err(w_q: &[f32], w: &[f32], x: &[f32], n: usize, dout: usize,
+                    din: usize) -> f64 {
+    let mut err = 0.0f64;
+    for row in x.chunks(din).take(n) {
+        for r in 0..dout {
+            let (mut y, mut yq) = (0.0f64, 0.0f64);
+            for c in 0..din {
+                y += row[c] as f64 * w[r * din + c] as f64;
+                yq += row[c] as f64 * w_q[r * din + c] as f64;
+            }
+            err += (y - yq).powi(2);
+        }
+    }
+    err / (n * dout) as f64
+}
+
+/// Correlated calibration activations (shared factor + noise) — where
+/// GPTQ's error compensation matters.
+fn calib(rng: &mut Rng, n: usize, din: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; n * din];
+    for row in x.chunks_mut(din) {
+        let shared = rng.gaussian_f32();
+        for (i, vv) in row.iter_mut().enumerate() {
+            *vv = shared * (1.0 + (i % 5) as f32 * 0.2) + rng.gaussian_f32() * 0.6;
+        }
+    }
+    x
+}
+
+/// Leg 1 — synthetic weights: the PTQ pipeline end to end without PJRT.
+fn synthetic_leg() {
+    let fast = std::env::var("QUARTET_BENCH_FAST").is_ok();
+    let (dout, din, n_cal) = if fast { (32, 64, 128) } else { (64, 128, 256) };
+    let mut rng = Rng::new(0x7AB7);
+    let w: Vec<f32> = rng.gaussian_vec(dout * din, 0.5);
+    let x = calib(&mut rng, n_cal, din);
+
+    let mut w_rtn = w.clone();
+    rtn_ptq(&mut w_rtn, dout, din, true);
+    let mut w_gptq = w.clone();
+    let proxy = gptq(&mut w_gptq, dout, din, &x, n_cal, &PtqOptions::default());
+
+    let e_rtn = layer_output_err(&w_rtn, &w, &x, n_cal.min(64), dout, din);
+    let e_gptq = layer_output_err(&w_gptq, &w, &x, n_cal.min(64), dout, din);
+    println!(
+        "\n[synthetic {dout}x{din} layer, {n_cal} calib rows, backend = {}]",
+        quartet::kernels::active().name()
+    );
+    println!("RTN-MXFP4 (+rot)  output MSE {e_rtn:.3e}");
+    println!("QuaRot+GPTQ       output MSE {e_gptq:.3e}   (Hessian proxy {proxy:.3e})");
+    println!("shape check: GPTQ ≤ RTN on correlated inputs (ratio {:.2})",
+             e_rtn / e_gptq.max(1e-300));
+}
 
 fn main() {
     quartet::util::bench::print_header("Table 7 — PTQ (QuaRot/GPTQ) vs Quartet QAT");
+    let mut args = Args::from_env().unwrap_or_default();
+    let _ = args.flag("bench");
+    quartet::util::cli::apply_backend_flag(&mut args).expect("--backend");
+    synthetic_leg();
+    trained_leg();
+}
+
+#[cfg(not(feature = "xla"))]
+fn trained_leg() {
+    println!(
+        "\n[trained-model leg skipped — build with `--features xla` and the \
+         n20k-bf16 / n20k-quartet artifacts to reproduce the full Table 7 row]"
+    );
+}
+
+#[cfg(feature = "xla")]
+fn trained_leg() {
+    use quartet::coordinator::trainer::{TrainOptions, Trainer};
+    use quartet::runtime::engine::{tensor_f32, Engine};
+
     let root = quartet::bench::artifacts_root();
     if !root.join("n20k-bf16/manifest.json").exists()
         || !root.join("n20k-quartet/manifest.json").exists()
     {
-        println!("needs n20k-bf16 + n20k-quartet artifacts — run \
+        println!("\nneeds n20k-bf16 + n20k-quartet artifacts — run \
                   `python -m compile.aot --out-dir artifacts --set sweep`");
         return;
     }
@@ -75,15 +153,7 @@ fn main() {
         if is_linear(name) {
             let (l, dout, din) = (shape[0], shape[1], shape[2]);
             for li in 0..l {
-                // correlated calibration activations (shared factor + noise)
-                let mut x = vec![0.0f32; din_calib * din];
-                for row in x.chunks_mut(din) {
-                    let shared = rng.gaussian_f32();
-                    for (i, vv) in row.iter_mut().enumerate() {
-                        *vv = shared * (1.0 + (i % 5) as f32 * 0.2)
-                            + rng.gaussian_f32() * 0.6;
-                    }
-                }
+                let x = calib(&mut rng, din_calib, din);
                 gptq(
                     &mut w[li * dout * din..(li + 1) * dout * din],
                     dout, din, &x, din_calib,

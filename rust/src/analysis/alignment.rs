@@ -12,8 +12,8 @@
 //!   operands quantized per scheme, tracking cosine similarity and PMA
 //!   against the exact gradient at every depth.
 
+use crate::kernels::active;
 use crate::quant::methods::Quantizer;
-use crate::quant::mxfp4::f32_gemm;
 use crate::util::rng::Rng;
 use crate::util::stats::{cosine, projection_coeff};
 
@@ -71,6 +71,7 @@ pub struct DepthAlignment {
 /// linear layer.
 pub fn alignment_vs_depth(q: &dyn Quantizer, layers: usize, batch: usize, dim: usize,
                           rng: &mut Rng) -> Vec<DepthAlignment> {
+    let be = active();
     let scale = 1.0 / (dim as f32).sqrt();
     let mut g_ref = rng.gaussian_vec(batch * dim, 1.0);
     let mut g_q = g_ref.clone();
@@ -78,12 +79,12 @@ pub fn alignment_vs_depth(q: &dyn Quantizer, layers: usize, batch: usize, dim: u
     for depth in 1..=layers {
         let w = rng.gaussian_vec(dim * dim, scale);
         // exact path
-        g_ref = f32_gemm(&g_ref, &w, batch, dim, dim);
+        g_ref = be.gemm_f32(&g_ref, &w, batch, dim, dim);
         // quantized path: quantize the (already noisy) gradient and the
         // weights, multiply in "low precision" (grid values, f32 accum)
         let gq = q.quantize(&g_q, batch, dim, rng);
         let wq = q.quantize(&w, dim, dim, rng);
-        g_q = f32_gemm(&gq, &wq, batch, dim, dim);
+        g_q = be.gemm_f32(&gq, &wq, batch, dim, dim);
         out.push(DepthAlignment {
             depth,
             cosine: cosine(&g_q, &g_ref),

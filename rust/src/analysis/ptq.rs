@@ -14,11 +14,12 @@
 //! 4. rotate the quantized weights back so the unmodified model consumes
 //!    them (`y = x·(QHᵀ)ᵀ = (xH)·Qᵀ` — the rotation pair cancels).
 
+use crate::kernels::active;
 use crate::quant::e2m1::e2m1_rtn;
 use crate::quant::e8m0::E8m0;
-use crate::quant::hadamard::{block_hadamard, block_hadamard_inv};
-use crate::quant::mxfp4::MX_GROUP;
+use crate::quant::mxfp4::{QuantMode, MX_GROUP};
 use crate::quant::E2M1_MAX;
+use crate::util::rng::Rng;
 
 /// PTQ options.
 #[derive(Debug, Clone)]
@@ -36,25 +37,20 @@ impl Default for PtqOptions {
 }
 
 /// Plain RTN MXFP4 PTQ of a weight matrix (rows = dout, cols = din),
-/// optional rotation. The baseline GPTQ improves on.
+/// optional rotation. The baseline GPTQ improves on. Routed through the
+/// active [`crate::kernels::Backend`]: per-group absmax + RTN through the
+/// packed quantizer is bit-identical to the old in-place loop (the E8M0
+/// scale is a power of two, so `v / s == v * (1/s)` exactly).
 pub fn rtn_ptq(w: &mut [f32], dout: usize, din: usize, rotate: bool) {
     assert_eq!(w.len(), dout * din);
+    let be = active();
     if rotate {
-        block_hadamard(w, MX_GROUP);
+        be.block_hadamard(w, MX_GROUP);
     }
-    for r in 0..dout {
-        let row = &mut w[r * din..(r + 1) * din];
-        for g in 0..din / MX_GROUP {
-            let grp = &mut row[g * MX_GROUP..(g + 1) * MX_GROUP];
-            let amax = grp.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let s = E8m0::from_absmax(amax, E2M1_MAX).value();
-            for v in grp.iter_mut() {
-                *v = e2m1_rtn(*v / s) * s;
-            }
-        }
-    }
+    let q = be.quantize_mxfp4(w, dout, din, QuantMode::Rtn, &mut Rng::new(0));
+    w.copy_from_slice(&q.dequantize());
     if rotate {
-        block_hadamard_inv(w, MX_GROUP);
+        be.block_hadamard_inv(w, MX_GROUP);
     }
 }
 
@@ -67,10 +63,11 @@ pub fn gptq(w: &mut [f32], dout: usize, din: usize, x_cal: &[f32], n_cal: usize,
     assert_eq!(x_cal.len(), n_cal * din);
 
     // working copies in the rotated domain
+    let be = active();
     let mut x = x_cal.to_vec();
     if opts.rotate {
-        block_hadamard(w, MX_GROUP);
-        block_hadamard(&mut x, MX_GROUP);
+        be.block_hadamard(w, MX_GROUP);
+        be.block_hadamard(&mut x, MX_GROUP);
     }
 
     // H = XᵀX / n + λ I
@@ -152,7 +149,7 @@ pub fn gptq(w: &mut [f32], dout: usize, din: usize, x_cal: &[f32], n_cal: usize,
     }
 
     if opts.rotate {
-        block_hadamard_inv(w, MX_GROUP);
+        be.block_hadamard_inv(w, MX_GROUP);
     }
     total_err / (dout * din) as f64
 }

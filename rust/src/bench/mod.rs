@@ -2,20 +2,38 @@
 //! CLI: common paths, kernel-shape tables, and the per-figure helpers
 //! that turn raw measurements into the paper's rows/series.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-/// Repo-root-relative artifact/run directories, respecting env overrides
-/// (benches run from the crate root under `cargo bench`).
-pub fn artifacts_root() -> PathBuf {
-    std::env::var("QUARTET_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+/// Resolve an artifact/run directory: env override first, then the crate
+/// dir (`rust/<leaf>`), then the workspace root (`<repo>/<leaf>`), and
+/// finally a cwd-relative `./<leaf>` so benches and binaries still work
+/// outside `cargo bench` contexts (installed binaries, CI checkouts).
+fn resolve_root(env_key: &str, leaf: &str) -> PathBuf {
+    if let Ok(p) = std::env::var(env_key) {
+        return PathBuf::from(p);
+    }
+    let crate_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let in_crate = crate_dir.join(leaf);
+    if in_crate.exists() {
+        return in_crate;
+    }
+    if let Some(ws) = crate_dir.parent() {
+        let in_ws = ws.join(leaf);
+        if in_ws.exists() {
+            return in_ws;
+        }
+    }
+    PathBuf::from(".").join(leaf)
 }
 
+/// Artifact directory (`QUARTET_ARTIFACTS` env override).
+pub fn artifacts_root() -> PathBuf {
+    resolve_root("QUARTET_ARTIFACTS", "artifacts")
+}
+
+/// Run-record directory (`QUARTET_RUNS` env override).
 pub fn runs_root() -> PathBuf {
-    std::env::var("QUARTET_RUNS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("runs"))
+    resolve_root("QUARTET_RUNS", "runs")
 }
 
 /// Llama linear-layer shapes (m = batch·seq at B=64, S=512 as in §5;

@@ -1,14 +1,23 @@
 //! Layer-3 coordinator: parameter initialization, the training loop
 //! (segment scheduling, eval, metrics), checkpointing, run records and
 //! the sweep runner that produces the scaling-law grids.
+//!
+//! The training-execution half (init, trainer, checkpoint, the sweep
+//! *runner*) drives PJRT and needs the `xla` feature; run records, sweep
+//! presets and the step math are pure Rust.
 
+#[cfg(feature = "xla")]
 pub mod checkpoint;
+#[cfg(feature = "xla")]
 pub mod init;
 pub mod runrecord;
 pub mod sweep;
+#[cfg(feature = "xla")]
 pub mod trainer;
 
+#[cfg(feature = "xla")]
 pub use init::init_state;
 pub use runrecord::RunRecord;
 pub use sweep::{sweep_presets, SweepJob};
+#[cfg(feature = "xla")]
 pub use trainer::{TrainOptions, Trainer};

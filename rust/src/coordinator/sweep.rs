@@ -1,12 +1,18 @@
 //! Sweep runner: the training grids behind Fig 1 / Fig 2(c) / Table 3,
 //! sized for the CPU testbed (see EXPERIMENTS.md for the paper mapping).
 
+#[cfg(feature = "xla")]
 use std::path::Path;
 
-use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::Result;
 
+#[cfg(feature = "xla")]
 use crate::coordinator::runrecord::RunRecord;
+#[cfg(feature = "xla")]
 use crate::coordinator::trainer::{TrainOptions, Trainer};
+#[cfg(feature = "xla")]
 use crate::runtime::engine::Engine;
 
 /// One grid cell: artifact name + token ratio.
@@ -76,6 +82,7 @@ pub fn steps_for_ratio(ratio: f64, non_emb: usize, tokens_per_step: usize) -> us
 /// Execute a sweep, writing run records into `out_dir`. Skips jobs whose
 /// record already exists (resumable), and jobs whose artifact is missing
 /// (reported at the end) so partial artifact sets still make progress.
+#[cfg(feature = "xla")]
 pub fn run_sweep(artifacts_root: &Path, out_dir: &Path, jobs: &[SweepJob],
                  max_steps: usize, verbose: bool) -> Result<Vec<RunRecord>> {
     let engine = Engine::cpu()?;

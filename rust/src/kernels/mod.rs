@@ -1,0 +1,158 @@
+//! Pluggable compute backends for every hot-loop kernel in the crate.
+//!
+//! The paper's throughput claim (Fig 3/5) lives or dies on kernel
+//! engineering, so the CPU stand-ins for Blackwell's block-scaled GEMM and
+//! the fused quantize/Hadamard stages are isolated here behind the
+//! [`Backend`] trait instead of being hard-wired into their callers:
+//!
+//! * [`ScalarBackend`] — the original single-threaded reference kernels,
+//!   moved verbatim from `quant::mxfp4` / `quant::hadamard`. Bit-exact
+//!   twin of `python/compile/formats.py`; every other backend is pinned
+//!   against it.
+//! * [`ParallelBackend`] — row/tile-parallel kernels on `std::thread`
+//!   scoped threads (the offline registry carries no rayon): cache-blocked
+//!   decode-once GEMM tiles, chunked group quantization, and per-row
+//!   splittable RNG streams so stochastic rounding is reproducible under
+//!   any thread count.
+//!
+//! Consumers never pick a concrete type: they either take a `&dyn Backend`
+//! or call [`active`], which resolves the process-wide backend once from
+//! the `QUARTET_BACKEND` env var (or the `--backend` CLI flag via
+//! `util::cli::apply_backend_flag`, which calls [`select`]). The default
+//! is `scalar`, keeping every seed experiment bit-for-bit reproducible;
+//! `parallel` is the opt-in fast path the Fig 3/5/6 benches sweep.
+
+pub mod parallel;
+pub mod scalar;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::quant::hadamard::BlockHadamard;
+use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode};
+use crate::util::rng::Rng;
+
+pub use parallel::ParallelBackend;
+pub use scalar::ScalarBackend;
+
+/// A compute backend: owns every hot loop the quantized training/serving
+/// paths execute. Implementations must be bit-identical to
+/// [`ScalarBackend`] for all deterministic entry points (RTN/QuEST
+/// quantization, both GEMMs, the Hadamard transforms); stochastic-rounding
+/// quantization may use its own RNG stream discipline but must be
+/// deterministic for a fixed input RNG state regardless of thread count.
+pub trait Backend: Send + Sync {
+    /// Stable name used by `QUARTET_BACKEND` / `--backend`.
+    fn name(&self) -> &'static str;
+
+    /// Quantize a dense row-major `[rows, cols]` f32 tensor to packed
+    /// MXFP4 (cols % 32 == 0).
+    fn quantize_mxfp4(
+        &self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        mode: QuantMode,
+        rng: &mut Rng,
+    ) -> Mxfp4Tensor;
+
+    /// C = A · Bᵀ over packed MXFP4 operands (A `[M,K]`, B `[N,K]`),
+    /// f32 accumulation — the `tcgen05.mma` stand-in.
+    fn gemm_mxfp4(&self, a: &Mxfp4Tensor, b: &Mxfp4Tensor) -> Vec<f32>;
+
+    /// Dense f32 GEMM C = A·Bᵀ (the full-precision baseline).
+    fn gemm_f32(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32>;
+
+    /// Apply H_g to each contiguous g-group along the last axis, in place.
+    fn block_hadamard(&self, data: &mut [f32], g: usize);
+
+    /// Inverse block transform (H is symmetric orthogonal: H⁻¹ = H).
+    fn block_hadamard_inv(&self, data: &mut [f32], g: usize) {
+        self.block_hadamard(data, g);
+    }
+}
+
+/// Instantiate a backend by name (`scalar` | `parallel`).
+pub fn backend_from_name(name: &str) -> Result<Box<dyn Backend>> {
+    match name {
+        "scalar" => Ok(Box::new(ScalarBackend)),
+        "parallel" => Ok(Box::new(ParallelBackend::new())),
+        other => Err(anyhow!(
+            "unknown backend {other:?} (expected \"scalar\" or \"parallel\")"
+        )),
+    }
+}
+
+static ACTIVE: OnceLock<Box<dyn Backend>> = OnceLock::new();
+
+/// Select the process-wide backend by name. Must run before the first
+/// [`active`] call; selecting the already-active backend again is a no-op,
+/// anything else is an error (kernels would silently mix streams).
+pub fn select(name: &str) -> Result<()> {
+    let backend = backend_from_name(name)?;
+    let wanted = backend.name();
+    if ACTIVE.set(backend).is_err() {
+        let current = ACTIVE.get().map(|b| b.name()).unwrap_or("?");
+        if current != wanted {
+            return Err(anyhow!(
+                "kernel backend already locked to {current:?}; cannot switch to {wanted:?}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The process-wide backend: resolved once from `QUARTET_BACKEND`
+/// (falling back to `scalar`) unless [`select`] ran first.
+pub fn active() -> &'static dyn Backend {
+    let boxed = ACTIVE.get_or_init(|| match std::env::var("QUARTET_BACKEND") {
+        Ok(name) => backend_from_name(&name).unwrap_or_else(|e| panic!("QUARTET_BACKEND: {e}")),
+        Err(_) => Box::new(ScalarBackend),
+    });
+    &**boxed
+}
+
+static PLANS: OnceLock<Mutex<BTreeMap<usize, Arc<BlockHadamard>>>> = OnceLock::new();
+
+/// Process-wide cache of dense Hadamard plans keyed by group size: the
+/// H₃₂ matrix is rebuilt on every `BlockHadamard::new`, which dominated
+/// the matmul-form quantize stage of the Fig 5 bench.
+pub fn hadamard_plan(g: usize) -> Arc<BlockHadamard> {
+    let plans = PLANS.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let mut map = plans.lock().unwrap();
+    map.entry(g)
+        .or_insert_with(|| Arc::new(BlockHadamard::new(g)))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_resolve() {
+        assert_eq!(backend_from_name("scalar").unwrap().name(), "scalar");
+        assert_eq!(backend_from_name("parallel").unwrap().name(), "parallel");
+        assert!(backend_from_name("cuda").is_err());
+    }
+
+    #[test]
+    fn plan_cache_returns_shared_instance() {
+        let a = hadamard_plan(32);
+        let b = hadamard_plan(32);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.g, 32);
+    }
+
+    #[test]
+    fn active_backend_is_usable() {
+        // default (no env in tests): scalar; just exercise the dispatch
+        let be = active();
+        let mut rng = Rng::new(1);
+        let x = rng.gaussian_vec(64, 1.0);
+        let t = be.quantize_mxfp4(&x, 2, 32, QuantMode::Rtn, &mut rng);
+        assert_eq!(t.codes.len(), 32);
+    }
+}

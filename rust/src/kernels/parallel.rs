@@ -1,0 +1,310 @@
+//! Thread-parallel backend: the same numerics as [`ScalarBackend`], tiled
+//! across `std::thread::scope` workers (the offline registry carries no
+//! rayon, so work-splitting is hand-rolled on scoped threads).
+//!
+//! Determinism contract:
+//!
+//! * RTN / QuEST quantization, both GEMMs and the Hadamard transforms are
+//!   **bit-identical** to the scalar backend — work is only partitioned,
+//!   never reassociated (the per-dot accumulation order is unchanged).
+//! * Stochastic rounding draws one salt from the caller's RNG, then gives
+//!   every row its own splittable stream derived from `(salt, row)`. The
+//!   output depends only on the input RNG state — not on the thread
+//!   count — so SR runs are reproducible on any machine, while repeated
+//!   calls still see fresh noise (the salt advances the caller's RNG).
+
+use crate::kernels::{scalar, Backend, ScalarBackend};
+use crate::quant::e2m1::byte_decode_lut;
+use crate::quant::e8m0::E8m0;
+use crate::quant::hadamard::fwht;
+use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::util::rng::Rng;
+
+/// Rows of B decoded per cache-blocked GEMM tile: 64 rows × k ≤ 11008
+/// f32 ≈ 2.7 MB worst case, sized to stay L2/L3-resident while amortizing
+/// the LUT decode over every A-row in the worker's chunk.
+const TILE_N: usize = 64;
+
+/// Below this element count the scoped-thread setup costs more than the
+/// kernel; deterministic entry points fall back to the scalar path
+/// (bit-identical, so the fallback is unobservable).
+const SMALL_WORK: usize = 1 << 14;
+
+/// Row/tile-parallel kernels.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelBackend {
+    /// worker count; 0 = `QUARTET_THREADS` env or available parallelism
+    pub threads: usize,
+}
+
+impl ParallelBackend {
+    pub fn new() -> ParallelBackend {
+        ParallelBackend { threads: 0 }
+    }
+
+    /// Fixed worker count (tests pin this to prove thread-count
+    /// independence).
+    pub fn with_threads(threads: usize) -> ParallelBackend {
+        ParallelBackend { threads }
+    }
+
+    fn pool_size(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        if let Ok(v) = std::env::var("QUARTET_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+impl Default for ParallelBackend {
+    fn default() -> Self {
+        ParallelBackend::new()
+    }
+}
+
+/// Per-row RNG stream for stochastic rounding: splitmix-style fold of the
+/// call salt and the row index. Rows never share a stream, and the stream
+/// set is a pure function of (salt, row) — thread-count independent.
+fn row_stream(salt: u64, row: usize) -> Rng {
+    Rng::new(salt ^ (row as u64 + 1).wrapping_mul(0x9e3779b97f4a7c15))
+}
+
+impl Backend for ParallelBackend {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn quantize_mxfp4(
+        &self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        mode: QuantMode,
+        rng: &mut Rng,
+    ) -> Mxfp4Tensor {
+        assert_eq!(data.len(), rows * cols);
+        assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
+        let stochastic = matches!(mode, QuantMode::Sr | QuantMode::SrPrescaled);
+        let threads = self.pool_size().min(rows.max(1));
+        if !stochastic && (threads <= 1 || rows * cols < SMALL_WORK) {
+            return ScalarBackend.quantize_mxfp4(data, rows, cols, mode, rng);
+        }
+
+        let gpr = cols / MX_GROUP;
+        let mut codes = vec![0u8; rows * cols / 2];
+        let mut scales = vec![E8m0(0); rows * gpr];
+        let mut mask = if mode == QuantMode::Quest {
+            Some(vec![0u64; (rows * cols + 63) / 64])
+        } else {
+            None
+        };
+        // SR advances the caller RNG by exactly one draw per call: the salt
+        // seeding the per-row streams.
+        let salt = if stochastic { rng.next_u64() } else { 0 };
+
+        let mut rows_per = (rows + threads - 1) / threads;
+        // QuEST packs a trust bit per element into shared u64 words; when a
+        // row is half a word (cols ≡ 32 mod 64) an odd chunk start would
+        // split a word across workers, so chunk starts stay even.
+        if mask.is_some() && cols % 64 != 0 && rows_per % 2 == 1 {
+            rows_per += 1;
+        }
+
+        std::thread::scope(|s| {
+            let mut codes_rest: &mut [u8] = &mut codes;
+            let mut scales_rest: &mut [E8m0] = &mut scales;
+            let mut mask_rest: Option<&mut [u64]> = mask.as_deref_mut();
+            let mut r0 = 0usize;
+            while r0 < rows {
+                let nr = rows_per.min(rows - r0);
+                let (codes_chunk, codes_next) = {
+                    let tmp = codes_rest;
+                    tmp.split_at_mut(nr * cols / 2)
+                };
+                codes_rest = codes_next;
+                let (scales_chunk, scales_next) = {
+                    let tmp = scales_rest;
+                    tmp.split_at_mut(nr * gpr)
+                };
+                scales_rest = scales_next;
+                let mask_chunk = match mask_rest.take() {
+                    Some(m) => {
+                        let words = if r0 + nr >= rows { m.len() } else { nr * cols / 64 };
+                        let (mc, mn) = m.split_at_mut(words);
+                        mask_rest = Some(mn);
+                        Some(mc)
+                    }
+                    None => None,
+                };
+                let data_chunk = &data[r0 * cols..(r0 + nr) * cols];
+                s.spawn(move || {
+                    if stochastic {
+                        for i in 0..nr {
+                            let mut row_rng = row_stream(salt, r0 + i);
+                            scalar::quantize_rows(
+                                &data_chunk[i * cols..(i + 1) * cols],
+                                1,
+                                cols,
+                                mode,
+                                &mut row_rng,
+                                &mut codes_chunk[i * cols / 2..(i + 1) * cols / 2],
+                                &mut scales_chunk[i * gpr..(i + 1) * gpr],
+                                None,
+                            );
+                        }
+                    } else {
+                        scalar::quantize_rows(
+                            data_chunk,
+                            nr,
+                            cols,
+                            mode,
+                            &mut Rng::new(0),
+                            codes_chunk,
+                            scales_chunk,
+                            mask_chunk,
+                        );
+                    }
+                });
+                r0 += nr;
+            }
+        });
+        Mxfp4Tensor { rows, cols, codes, scales, mask }
+    }
+
+    fn gemm_mxfp4(&self, a: &Mxfp4Tensor, b: &Mxfp4Tensor) -> Vec<f32> {
+        assert_eq!(a.cols, b.cols, "contraction mismatch");
+        let (m, n, k) = (a.rows, b.rows, a.cols);
+        let threads = self.pool_size().min(m.max(1));
+        if threads <= 1 || m * n * k < SMALL_WORK {
+            return ScalarBackend.gemm_mxfp4(a, b);
+        }
+        let lut = byte_decode_lut();
+        let rows_per = (m + threads - 1) / threads;
+
+        // decode A once, row blocks in parallel
+        let mut a_dec = vec![0.0f32; m * k];
+        std::thread::scope(|s| {
+            for (ci, chunk) in a_dec.chunks_mut(rows_per * k).enumerate() {
+                let r0 = ci * rows_per;
+                let lut = &lut;
+                s.spawn(move || {
+                    for (i, out) in chunk.chunks_mut(k).enumerate() {
+                        scalar::decode_row(a, r0 + i, lut, out);
+                    }
+                });
+            }
+        });
+
+        // each worker owns a contiguous block of C rows; within it, B is
+        // decoded once per TILE_N tile into a thread-local scratch and
+        // reused across every A row of the block (cache-blocked
+        // decode-once — the CPU analog of staging a weight tile in SMEM)
+        let mut c = vec![0.0f32; m * n];
+        std::thread::scope(|s| {
+            for (ci, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+                let r0 = ci * rows_per;
+                let a_dec = &a_dec;
+                let lut = &lut;
+                s.spawn(move || {
+                    let tile_rows = TILE_N.min(n);
+                    let mut b_tile = vec![0.0f32; tile_rows * k];
+                    let mut jb = 0usize;
+                    while jb < n {
+                        let nb = TILE_N.min(n - jb);
+                        for jj in 0..nb {
+                            scalar::decode_row(
+                                b,
+                                jb + jj,
+                                lut,
+                                &mut b_tile[jj * k..(jj + 1) * k],
+                            );
+                        }
+                        for (i, c_row) in c_chunk.chunks_mut(n).enumerate() {
+                            let ra = &a_dec[(r0 + i) * k..(r0 + i + 1) * k];
+                            for jj in 0..nb {
+                                c_row[jb + jj] =
+                                    scalar::dot_f32(ra, &b_tile[jj * k..(jj + 1) * k]);
+                            }
+                        }
+                        jb += nb;
+                    }
+                });
+            }
+        });
+        c
+    }
+
+    fn gemm_f32(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let threads = self.pool_size().min(m.max(1));
+        if threads <= 1 || m * n * k < SMALL_WORK {
+            return ScalarBackend.gemm_f32(a, b, m, n, k);
+        }
+        let rows_per = (m + threads - 1) / threads;
+        let mut c = vec![0.0f32; m * n];
+        std::thread::scope(|s| {
+            for (ci, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+                let r0 = ci * rows_per;
+                s.spawn(move || {
+                    for (i, c_row) in c_chunk.chunks_mut(n).enumerate() {
+                        let ra = &a[(r0 + i) * k..(r0 + i + 1) * k];
+                        for (j, out) in c_row.iter_mut().enumerate() {
+                            *out = scalar::dot_f32(ra, &b[j * k..(j + 1) * k]);
+                        }
+                    }
+                });
+            }
+        });
+        c
+    }
+
+    fn block_hadamard(&self, data: &mut [f32], g: usize) {
+        assert_eq!(data.len() % g, 0);
+        let n_groups = data.len() / g;
+        let threads = self.pool_size().min(n_groups.max(1));
+        if threads <= 1 || data.len() < SMALL_WORK {
+            ScalarBackend.block_hadamard(data, g);
+            return;
+        }
+        let per = ((n_groups + threads - 1) / threads) * g;
+        std::thread::scope(|s| {
+            for chunk in data.chunks_mut(per) {
+                s.spawn(move || {
+                    for grp in chunk.chunks_mut(g) {
+                        fwht(grp);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_streams_distinct_and_stable() {
+        let mut a = row_stream(42, 0);
+        let mut b = row_stream(42, 1);
+        assert_ne!(a.next_u64(), b.next_u64());
+        assert_eq!(row_stream(42, 3).next_u64(), row_stream(42, 3).next_u64());
+    }
+
+    #[test]
+    fn small_inputs_fall_back_bit_identical() {
+        let mut rng = Rng::new(5);
+        let x = rng.gaussian_vec(4 * 32, 1.0);
+        let p = ParallelBackend::with_threads(4)
+            .quantize_mxfp4(&x, 4, 32, QuantMode::Rtn, &mut Rng::new(0));
+        let s = ScalarBackend.quantize_mxfp4(&x, 4, 32, QuantMode::Rtn, &mut Rng::new(0));
+        assert_eq!(p.codes, s.codes);
+        assert_eq!(p.scales, s.scales);
+    }
+}

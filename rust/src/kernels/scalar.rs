@@ -1,0 +1,195 @@
+//! The reference backend: the seed's single-threaded kernels, moved here
+//! bit-for-bit from `quant::mxfp4` / `quant::hadamard`. This is the
+//! numerics contract — `python/tests/test_formats.py` and the golden
+//! vectors pin it, and `tests/backend_equivalence.rs` pins every other
+//! backend against it.
+
+use crate::kernels::Backend;
+use crate::quant::e2m1::{byte_decode_lut, e2m1_encode_rtn, e2m1_encode_sr, E2M1_MAX};
+use crate::quant::e8m0::E8m0;
+use crate::quant::mxfp4::{quest_scale, Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::util::rng::Rng;
+
+/// Single-threaded reference kernels.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarBackend;
+
+impl Backend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn quantize_mxfp4(
+        &self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        mode: QuantMode,
+        rng: &mut Rng,
+    ) -> Mxfp4Tensor {
+        assert_eq!(data.len(), rows * cols);
+        assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
+        let gpr = cols / MX_GROUP;
+        let mut codes = vec![0u8; rows * cols / 2];
+        let mut scales = vec![E8m0(0); rows * gpr];
+        let mut mask = if mode == QuantMode::Quest {
+            Some(vec![0u64; (rows * cols + 63) / 64])
+        } else {
+            None
+        };
+        quantize_rows(
+            data,
+            rows,
+            cols,
+            mode,
+            rng,
+            &mut codes,
+            &mut scales,
+            mask.as_deref_mut(),
+        );
+        Mxfp4Tensor { rows, cols, codes, scales, mask }
+    }
+
+    fn gemm_mxfp4(&self, a: &Mxfp4Tensor, b: &Mxfp4Tensor) -> Vec<f32> {
+        assert_eq!(a.cols, b.cols, "contraction mismatch");
+        let (m, n, k) = (a.rows, b.rows, a.cols);
+        let lut = byte_decode_lut();
+        // §Perf: decode each operand row once into an f32 scratch with the
+        // group scale folded ((m+n)·k/2 LUT reads total instead of m·n·k/2
+        // in the MAC loop), then run the vectorizable multi-accumulator
+        // dot — the CPU rendering of the tensor-core pipeline, where
+        // dequantization happens once per operand tile on the way into the
+        // MAC array.
+        let mut a_dec = vec![0.0f32; m * k];
+        decode_rows(a, &lut, &mut a_dec);
+        let mut b_row = vec![0.0f32; k];
+        let mut c = vec![0.0f32; m * n];
+        for j in 0..n {
+            decode_row(b, j, &lut, &mut b_row);
+            for i in 0..m {
+                c[i * n + j] = dot_f32(&a_dec[i * k..(i + 1) * k], &b_row);
+            }
+        }
+        c
+    }
+
+    fn gemm_f32(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let ra = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                c[i * n + j] = dot_f32(ra, &b[j * k..(j + 1) * k]);
+            }
+        }
+        c
+    }
+
+    fn block_hadamard(&self, data: &mut [f32], g: usize) {
+        crate::quant::hadamard::block_hadamard(data, g);
+    }
+}
+
+/// Quantize `rows` consecutive rows of `data` into pre-sized output
+/// slices. Flat indexing is chunk-local: callers handing in a sub-range of
+/// a larger tensor must align chunk starts so `codes`/`mask` word
+/// boundaries coincide with row boundaries (see `ParallelBackend`).
+///
+/// This is the seed `Mxfp4Tensor::quantize` loop, verbatim except that
+/// scales write into a slice instead of pushing to a Vec.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn quantize_rows(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    mode: QuantMode,
+    rng: &mut Rng,
+    codes: &mut [u8],
+    scales: &mut [E8m0],
+    mut mask: Option<&mut [u64]>,
+) {
+    let gpr = cols / MX_GROUP;
+    for r in 0..rows {
+        for g in 0..gpr {
+            let base = r * cols + g * MX_GROUP;
+            let group = &data[base..base + MX_GROUP];
+            let (scale, clip_ok) = match mode {
+                QuantMode::Quest => quest_scale(group),
+                _ => {
+                    let amax = group.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    (E8m0::from_absmax(amax, E2M1_MAX), None)
+                }
+            };
+            scales[r * gpr + g] = scale;
+            let inv = 1.0 / scale.value();
+            for i in 0..MX_GROUP {
+                let x = group[i] * inv;
+                let code = match mode {
+                    QuantMode::Rtn | QuantMode::Quest => e2m1_encode_rtn(x),
+                    QuantMode::SrPrescaled => e2m1_encode_sr(0.75 * x, rng.uniform_f32()),
+                    QuantMode::Sr => {
+                        e2m1_encode_sr(x.clamp(-E2M1_MAX, E2M1_MAX), rng.uniform_f32())
+                    }
+                };
+                let flat = base + i;
+                if flat & 1 == 0 {
+                    codes[flat / 2] = code;
+                } else {
+                    codes[flat / 2] |= code << 4;
+                }
+                if let Some(m) = mask.as_mut() {
+                    let ok = clip_ok.map(|c| group[i].abs() <= c).unwrap_or(true);
+                    if ok {
+                        m[flat / 64] |= 1u64 << (flat % 64);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Decode one packed row (scales folded) into `out[0..k]`.
+pub(crate) fn decode_row(
+    t: &Mxfp4Tensor,
+    row: usize,
+    lut: &[(f32, f32); 256],
+    out: &mut [f32],
+) {
+    let k = t.cols;
+    let gpr = k / MX_GROUP;
+    for g in 0..gpr {
+        let s = t.scales[row * gpr + g].value();
+        let base = (row * k + g * MX_GROUP) / 2;
+        let dst = &mut out[g * MX_GROUP..(g + 1) * MX_GROUP];
+        for (bi, pair) in dst.chunks_exact_mut(2).enumerate() {
+            let (lo, hi) = lut[t.codes[base + bi] as usize];
+            pair[0] = lo * s;
+            pair[1] = hi * s;
+        }
+    }
+}
+
+pub(crate) fn decode_rows(t: &Mxfp4Tensor, lut: &[(f32, f32); 256], out: &mut [f32]) {
+    let k = t.cols;
+    for r in 0..t.rows {
+        decode_row(t, r, lut, &mut out[r * k..(r + 1) * k]);
+    }
+}
+
+/// 8-accumulator dot product (breaks the FMA dependency chain so LLVM
+/// auto-vectorizes; the single-accumulator form runs ~8x slower).
+#[inline]
+pub(crate) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let (ra, rb) = (&a[c * 8..c * 8 + 8], &b[c * 8..c * 8 + 8]);
+        for u in 0..8 {
+            acc[u] += ra[u] * rb[u];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    acc.iter().sum::<f32>() + tail
+}

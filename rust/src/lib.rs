@@ -19,6 +19,10 @@
 //! * [`quant`]       — bit-exact numeric formats (packed MXFP4, E8M0
 //!                     scales, FP8, INT4), Hadamard transforms and the
 //!                     quantizer zoo (QuEST, SR, LUQ, Jetfire, HALO, LSS).
+//! * [`kernels`]     — the pluggable compute-backend layer: every hot
+//!                     loop (packed GEMM, group quantize, Hadamard)
+//!                     behind the `Backend` trait, with a scalar
+//!                     reference and a thread-parallel implementation.
 //! * [`analysis`]    — MSE / PMA / gradient-alignment metrics (Table 2,
 //!                     Fig 2) and the GPTQ/QuaRot PTQ pipeline (Table 7).
 //! * [`scaling`]     — the precision scaling law, Huber+Nelder–Mead
@@ -26,17 +30,23 @@
 //!                     (Fig 1, Fig 4, Table 1/6).
 //! * [`data`]        — synthetic Zipf–Markov corpus, tokenizer, batcher
 //!                     (the C4 stand-in; DESIGN.md §1).
-//! * [`runtime`]     — PJRT client wrapper, artifact manifests,
-//!                     executable cache, literal pools.
-//! * [`coordinator`] — trainer (segment scheduling, metrics, checkpoints),
-//!                     sweep runner, run records.
-//! * [`serve`]       — batched prefill engine (Fig 6).
+//! * [`runtime`]     — PJRT client wrapper (`xla` feature), artifact
+//!                     manifests, executable cache, literal pools.
+//! * [`coordinator`] — trainer (segment scheduling, metrics, checkpoints;
+//!                     `xla` feature), sweep runner, run records.
+//! * [`serve`]       — batched prefill engines (Fig 6): the pure-Rust
+//!                     CPU engine over [`kernels`], plus the PJRT one
+//!                     under the `xla` feature.
 //! * [`bench`]       — shared experiment harness used by `benches/*`.
+//!
+//! The PJRT execution paths (~37 `xla::` call sites) are compiled only
+//! with `--features xla`; the pure-Rust core builds and tests anywhere.
 
 pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod kernels;
 pub mod quant;
 pub mod runtime;
 pub mod scaling;

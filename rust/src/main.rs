@@ -1,30 +1,42 @@
 //! `repro` — the Quartet reproduction CLI (Layer-3 leader entrypoint).
 //!
 //! ```text
-//! repro info                          # engine + artifact inventory
+//! repro info                          # engine + artifact inventory (xla)
 //! repro train   --artifact n80k-quartet --steps 200 [--lr 2e-3] [--seed 0]
-//! repro eval    --artifact n80k-quartet --checkpoint ck.bin
 //! repro sweep   --preset reduced --out runs [--max-steps 4000]
 //! repro serve   --artifact n330k-quartet --requests 256
 //! repro regions [--paper]             # Fig 1(b,c) optimality maps
 //! repro table2                        # error-bias statistics
+//! repro kernels [--m 256 --n 11008 --k 4096]   # backend speedup check
 //! ```
-
-use std::path::PathBuf;
+//!
+//! Every subcommand honours the global `--backend scalar|parallel` flag
+//! (or the `QUARTET_BACKEND` env var) selecting the kernels backend.
+//! `train`/`sweep`/`serve`/`info` execute through PJRT and need the crate
+//! built with `--features xla`; the rest are pure Rust.
 
 use anyhow::{bail, Result};
 
-use quartet::coordinator::sweep::{run_sweep, sweep_presets};
-use quartet::coordinator::trainer::{train_artifact, TrainOptions};
-use quartet::runtime::engine::Engine;
 use quartet::util::cli::Args;
 
+#[cfg(feature = "xla")]
+use std::path::PathBuf;
+
+#[cfg(feature = "xla")]
+use quartet::coordinator::sweep::{run_sweep, sweep_presets};
+#[cfg(feature = "xla")]
+use quartet::coordinator::trainer::{train_artifact, TrainOptions};
+#[cfg(feature = "xla")]
+use quartet::runtime::engine::Engine;
+
+#[cfg(feature = "xla")]
 fn artifacts_root(args: &mut Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
 }
 
 fn main() -> Result<()> {
     let mut args = Args::from_env()?;
+    quartet::util::cli::apply_backend_flag(&mut args)?;
     match args.subcommand().map(str::to_string).as_deref() {
         Some("info") => cmd_info(&mut args),
         Some("train") => cmd_train(&mut args),
@@ -32,20 +44,32 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&mut args),
         Some("regions") => cmd_regions(&mut args),
         Some("table2") => cmd_table2(&mut args),
+        Some("kernels") => cmd_kernels(&mut args),
         Some(other) => bail!("unknown subcommand {other:?} (see --help in README)"),
         None => {
-            println!("usage: repro <info|train|sweep|serve|regions|table2> [flags]");
+            println!("usage: repro <info|train|sweep|serve|regions|table2|kernels> [flags]");
+            println!("global: --backend scalar|parallel (or QUARTET_BACKEND env)");
             println!("see README.md for the full command reference");
             Ok(())
         }
     }
 }
 
+#[cfg(not(feature = "xla"))]
+fn no_xla(what: &str) -> Result<()> {
+    bail!(
+        "`{what}` executes through the PJRT runtime, which this binary was \
+         built without — rebuild with `cargo build --features xla` (see README.md)"
+    )
+}
+
+#[cfg(feature = "xla")]
 fn cmd_info(args: &mut Args) -> Result<()> {
     let root = artifacts_root(args);
     args.finish()?;
     let engine = Engine::cpu()?;
     println!("platform: {}", engine.platform());
+    println!("kernels backend: {}", quartet::kernels::active().name());
     println!("artifacts root: {}", root.display());
     if let Ok(read) = std::fs::read_dir(&root) {
         for e in read.flatten() {
@@ -72,6 +96,12 @@ fn cmd_info(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_info(_args: &mut Args) -> Result<()> {
+    no_xla("info")
+}
+
+#[cfg(feature = "xla")]
 fn cmd_train(args: &mut Args) -> Result<()> {
     let root = artifacts_root(args);
     let artifact = args.required("artifact")?;
@@ -106,6 +136,12 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &mut Args) -> Result<()> {
+    no_xla("train")
+}
+
+#[cfg(feature = "xla")]
 fn cmd_sweep(args: &mut Args) -> Result<()> {
     let root = artifacts_root(args);
     let preset = args.str_or("preset", "reduced");
@@ -128,6 +164,12 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_sweep(_args: &mut Args) -> Result<()> {
+    no_xla("sweep")
+}
+
+#[cfg(feature = "xla")]
 fn cmd_serve(args: &mut Args) -> Result<()> {
     let root = artifacts_root(args);
     let artifact = args.required("artifact")?;
@@ -154,6 +196,11 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
         tps
     );
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_serve(_args: &mut Args) -> Result<()> {
+    no_xla("serve")
 }
 
 fn cmd_regions(args: &mut Args) -> Result<()> {
@@ -197,11 +244,56 @@ fn cmd_table2(args: &mut Args) -> Result<()> {
     use quartet::util::rng::Rng;
 
     let mut rng = Rng::new(0x7AB2u64);
+    println!("backend: {}", quartet::kernels::active().name());
     println!("{:<20} {:>12} {:>16}", "method", "MSE", "misalignment");
     for q in table2_rows() {
         let mse = gaussian_mse(q.as_ref(), 256, 128, &mut rng);
         let mis = pma_misalignment(q.as_ref(), 16, 64, trials, &mut rng);
         println!("{:<20} {:>12.4e} {:>16.3e}", q.name(), mse, mis);
+    }
+    Ok(())
+}
+
+/// Quick scalar-vs-parallel kernel race on one GEMM shape — the smallest
+/// end-to-end check that the backend layer delivers (Fig 3's CPU story).
+fn cmd_kernels(args: &mut Args) -> Result<()> {
+    let m = args.parse_or("m", 256usize)?;
+    let n = args.parse_or("n", 11008usize)?;
+    let k = args.parse_or("k", 4096usize)?;
+    args.finish()?;
+    use quartet::kernels::{Backend, ParallelBackend, ScalarBackend};
+    use quartet::quant::mxfp4::QuantMode;
+    use quartet::util::bench::Bencher;
+    use quartet::util::rng::Rng;
+
+    anyhow::ensure!(k % 32 == 0, "--k must be a multiple of 32");
+    let b = Bencher::from_env();
+    let mut rng = Rng::new(0xBEEF);
+    let x = rng.gaussian_vec(m * k, 1.0);
+    let w = rng.gaussian_vec(n * k, 0.3);
+
+    println!("GEMM shape m={m} n={n} k={k}");
+    let mut medians = Vec::new();
+    for be in [
+        Box::new(ScalarBackend) as Box<dyn Backend>,
+        Box::new(ParallelBackend::new()),
+    ] {
+        let tx = be.quantize_mxfp4(&x, m, k, QuantMode::Rtn, &mut Rng::new(1));
+        let tw = be.quantize_mxfp4(&w, n, k, QuantMode::Rtn, &mut Rng::new(2));
+        let gemm = b.bench("gemm", || be.gemm_mxfp4(&tx, &tw));
+        let quant = b.bench("quant", || {
+            be.quantize_mxfp4(&x, m, k, QuantMode::Rtn, &mut Rng::new(1))
+        });
+        println!(
+            "  {:<9} mxfp4 gemm {:>9.2} ms   quantize {:>9.2} ms",
+            be.name(),
+            gemm.median() * 1e3,
+            quant.median() * 1e3
+        );
+        medians.push(gemm.median());
+    }
+    if medians.len() == 2 && medians[1] > 0.0 {
+        println!("  parallel speedup: {:.2}x", medians[0] / medians[1]);
     }
     Ok(())
 }

@@ -116,7 +116,9 @@ pub fn rademacher(rng: &mut Rng, d: usize) -> Vec<f32> {
 }
 
 /// Randomized block Hadamard Ĥ(x, ξ) = H·diag(ξ)·x applied per g-group
-/// along rows of a [rows, d] row-major matrix (in place).
+/// along rows of a [rows, d] row-major matrix (in place). The sign flip
+/// is applied row-wise here; the transform itself goes through the active
+/// [`crate::kernels::Backend`] so the hot path parallelizes.
 pub fn randomized_block_hadamard(data: &mut [f32], signs: &[f32], g: usize) {
     let d = signs.len();
     assert_eq!(data.len() % d, 0);
@@ -124,16 +126,16 @@ pub fn randomized_block_hadamard(data: &mut [f32], signs: &[f32], g: usize) {
         for (v, s) in row.iter_mut().zip(signs) {
             *v *= s;
         }
-        block_hadamard(row, g);
     }
+    crate::kernels::active().block_hadamard(data, g);
 }
 
 /// Inverse of the randomized transform: diag(ξ)·H⁻¹·y.
 pub fn randomized_block_hadamard_inv(data: &mut [f32], signs: &[f32], g: usize) {
     let d = signs.len();
     assert_eq!(data.len() % d, 0);
+    crate::kernels::active().block_hadamard(data, g);
     for row in data.chunks_mut(d) {
-        block_hadamard(row, g);
         for (v, s) in row.iter_mut().zip(signs) {
             *v *= s;
         }

@@ -7,11 +7,11 @@
 //! paper's Table 2 protocol ("for fairness, the Hadamard transform is
 //! applied for each scheme before quantization").
 
+use crate::kernels::active;
 use crate::quant::hadamard::{
-    block_hadamard, block_hadamard_inv, rademacher, randomized_block_hadamard,
-    randomized_block_hadamard_inv,
+    rademacher, randomized_block_hadamard, randomized_block_hadamard_inv,
 };
-use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::quant::mxfp4::{QuantMode, MX_GROUP};
 use crate::quant::{e2m1_rtn, fp8, intq, E2M1_MAX};
 use crate::util::rng::Rng;
 
@@ -52,14 +52,15 @@ impl Quantizer for RtnAbsMax {
     }
 
     fn quantize(&self, x: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> Vec<f32> {
+        let be = active();
         let mut work = x.to_vec();
         if self.hadamard {
-            block_hadamard(&mut work, MX_GROUP);
+            be.block_hadamard(&mut work, MX_GROUP);
         }
-        let t = Mxfp4Tensor::quantize(&work, rows, cols, QuantMode::Rtn, rng);
+        let t = be.quantize_mxfp4(&work, rows, cols, QuantMode::Rtn, rng);
         let mut dq = t.dequantize();
         if self.hadamard {
-            block_hadamard_inv(&mut dq, MX_GROUP);
+            be.block_hadamard_inv(&mut dq, MX_GROUP);
         }
         dq
     }
@@ -89,7 +90,7 @@ impl Quantizer for SrAbsMax {
         } else {
             None
         };
-        let t = Mxfp4Tensor::quantize(&work, rows, cols, QuantMode::Sr, rng);
+        let t = active().quantize_mxfp4(&work, rows, cols, QuantMode::Sr, rng);
         let mut dq = t.dequantize();
         if let Some(s) = signs {
             randomized_block_hadamard_inv(&mut dq, &s, MX_GROUP);
@@ -116,7 +117,7 @@ impl Quantizer for QuartetSr {
         let mut work = x.to_vec();
         let signs = rademacher(rng, cols);
         randomized_block_hadamard(&mut work, &signs, MX_GROUP);
-        let t = Mxfp4Tensor::quantize(&work, rows, cols, QuantMode::SrPrescaled, rng);
+        let t = active().quantize_mxfp4(&work, rows, cols, QuantMode::SrPrescaled, rng);
         let mut dq = t.dequantize();
         dq.iter_mut().for_each(|v| *v *= 4.0 / 3.0);
         randomized_block_hadamard_inv(&mut dq, &signs, MX_GROUP);
@@ -137,11 +138,12 @@ impl Quantizer for QuestQuantizer {
     }
 
     fn quantize(&self, x: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> Vec<f32> {
+        let be = active();
         let mut work = x.to_vec();
-        block_hadamard(&mut work, MX_GROUP);
-        let t = Mxfp4Tensor::quantize(&work, rows, cols, QuantMode::Quest, rng);
+        be.block_hadamard(&mut work, MX_GROUP);
+        let t = be.quantize_mxfp4(&work, rows, cols, QuantMode::Quest, rng);
         let mut dq = t.dequantize();
-        block_hadamard_inv(&mut dq, MX_GROUP);
+        be.block_hadamard_inv(&mut dq, MX_GROUP);
         dq
     }
 }
@@ -305,12 +307,13 @@ impl Quantizer for HaloFp4 {
     }
 
     fn quantize(&self, x: &[f32], _rows: usize, _cols: usize, _rng: &mut Rng) -> Vec<f32> {
+        let be = active();
         let mut work = x.to_vec();
-        block_hadamard(&mut work, MX_GROUP);
+        be.block_hadamard(&mut work, MX_GROUP);
         let amax = work.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-20);
         let s = amax / E2M1_MAX;
         let mut dq: Vec<f32> = work.iter().map(|&v| e2m1_rtn(v / s) * s).collect();
-        block_hadamard_inv(&mut dq, MX_GROUP);
+        be.block_hadamard_inv(&mut dq, MX_GROUP);
         dq
     }
 }

@@ -1,11 +1,15 @@
 //! Packed MXFP4 tensors: E2M1 nibbles (2 per byte) + one E8M0 scale byte
-//! per 32-element group, plus the quantizers that produce them and the
-//! packed GEMM that consumes them (the measured stand-in for Blackwell's
-//! `tcgen05.mma` block-scaled matmul — Fig 3 / Fig 5).
+//! per 32-element group (the storage format Blackwell's `tcgen05.mma`
+//! block-scaled matmul consumes — Fig 3 / Fig 5).
+//!
+//! The hot loops that produce and consume these tensors live in
+//! [`crate::kernels`] behind the `Backend` trait; the `quantize` /
+//! `mxfp4_gemm` / `f32_gemm` entry points below are kept as thin
+//! forwarding shims for API stability and route through the selected
+//! backend (`kernels::active()` — scalar unless `QUARTET_BACKEND` /
+//! `--backend` says otherwise).
 
-use crate::quant::e2m1::{
-    byte_decode_lut, e2m1_decode, e2m1_encode_rtn, e2m1_encode_sr, E2M1_MAX,
-};
+use crate::quant::e2m1::{e2m1_decode, E2M1_MAX};
 use crate::quant::e8m0::E8m0;
 use crate::util::rng::Rng;
 
@@ -54,59 +58,11 @@ impl Mxfp4Tensor {
         self.codes.len() + self.scales.len()
     }
 
-    /// Quantize a dense f32 tensor.
+    /// Quantize a dense f32 tensor through the active
+    /// [`crate::kernels::Backend`].
     pub fn quantize(data: &[f32], rows: usize, cols: usize, mode: QuantMode,
                     rng: &mut Rng) -> Mxfp4Tensor {
-        assert_eq!(data.len(), rows * cols);
-        assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
-        let gpr = cols / MX_GROUP;
-        let mut codes = vec![0u8; rows * cols / 2];
-        let mut scales = Vec::with_capacity(rows * gpr);
-        let mut mask = if mode == QuantMode::Quest {
-            Some(vec![0u64; (rows * cols + 63) / 64])
-        } else {
-            None
-        };
-
-        for r in 0..rows {
-            for g in 0..gpr {
-                let base = r * cols + g * MX_GROUP;
-                let group = &data[base..base + MX_GROUP];
-                let (scale, clip_ok) = match mode {
-                    QuantMode::Quest => quest_scale(group),
-                    _ => {
-                        let amax = group.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-                        (E8m0::from_absmax(amax, E2M1_MAX), None)
-                    }
-                };
-                scales.push(scale);
-                let inv = 1.0 / scale.value();
-                for i in 0..MX_GROUP {
-                    let x = group[i] * inv;
-                    let code = match mode {
-                        QuantMode::Rtn | QuantMode::Quest => e2m1_encode_rtn(x),
-                        QuantMode::SrPrescaled => e2m1_encode_sr(0.75 * x, rng.uniform_f32()),
-                        QuantMode::Sr => e2m1_encode_sr(x.clamp(-E2M1_MAX, E2M1_MAX),
-                                                        rng.uniform_f32()),
-                    };
-                    let flat = base + i;
-                    if flat & 1 == 0 {
-                        codes[flat / 2] = code;
-                    } else {
-                        codes[flat / 2] |= code << 4;
-                    }
-                    if let Some(m) = mask.as_mut() {
-                        let ok = clip_ok
-                            .map(|c| group[i].abs() <= c)
-                            .unwrap_or(true);
-                        if ok {
-                            m[flat / 64] |= 1u64 << (flat % 64);
-                        }
-                    }
-                }
-            }
-        }
-        Mxfp4Tensor { rows, cols, codes, scales, mask }
+        crate::kernels::active().quantize_mxfp4(data, rows, cols, mode, rng)
     }
 
     /// Dequantize back to dense f32 (exactly the values a tensor core
@@ -140,8 +96,9 @@ impl Mxfp4Tensor {
 
 /// QuEST scale selection: clip = α·rms; evaluate both neighbouring E8M0
 /// binades against the group and keep the lower-MSE one. Returns the
-/// scale and the clip threshold (for the trust mask).
-fn quest_scale(group: &[f32]) -> (E8m0, Option<f32>) {
+/// scale and the clip threshold (for the trust mask). Shared by every
+/// backend so the QuEST numerics are written exactly once.
+pub(crate) fn quest_scale(group: &[f32]) -> (E8m0, Option<f32>) {
     let rms = (group.iter().map(|&v| v * v).sum::<f32>() / group.len() as f32
         + 1e-20)
         .sqrt();
@@ -172,84 +129,19 @@ fn quest_scale(group: &[f32]) -> (E8m0, Option<f32>) {
 /// C = A · Bᵀ over packed MXFP4 operands, f32 accumulation.
 ///
 /// A: [M, K], B: [N, K], both with per-32-group scales along K — exactly
-/// the layout `tcgen05.mma` block-scaled GEMM expects. The inner loop
-/// decodes two elements per byte via a 256-entry LUT, accumulates a
-/// per-group dot product in f32 and applies `sa·sb` once per group (the
-/// hardware applies scales along K the same way).
+/// the layout `tcgen05.mma` block-scaled GEMM expects. Forwards to the
+/// active [`crate::kernels::Backend`]; the scalar reference decodes two
+/// elements per byte via a 256-entry LUT, accumulates a per-group dot
+/// product in f32 and applies `sa·sb` once per group (the hardware
+/// applies scales along K the same way).
 pub fn mxfp4_gemm(a: &Mxfp4Tensor, b: &Mxfp4Tensor) -> Vec<f32> {
-    assert_eq!(a.cols, b.cols, "contraction mismatch");
-    let (m, n, k) = (a.rows, b.rows, a.cols);
-    let lut = byte_decode_lut();
-    // §Perf: decode each operand row once into an f32 scratch with the
-    // group scale folded ((m+n)·k/2 LUT reads total instead of m·n·k/2 in
-    // the MAC loop), then run the vectorizable multi-accumulator dot —
-    // the CPU rendering of the tensor-core pipeline, where dequantization
-    // happens once per operand tile on the way into the MAC array.
-    let mut a_dec = vec![0.0f32; m * k];
-    decode_rows(a, &lut, &mut a_dec);
-    let mut b_row = vec![0.0f32; k];
-    let mut c = vec![0.0f32; m * n];
-    for j in 0..n {
-        decode_row(b, j, &lut, &mut b_row);
-        for i in 0..m {
-            c[i * n + j] = dot_f32(&a_dec[i * k..(i + 1) * k], &b_row);
-        }
-    }
-    c
+    crate::kernels::active().gemm_mxfp4(a, b)
 }
 
-/// Decode one packed row (scales folded) into `out[0..k]`.
-fn decode_row(t: &Mxfp4Tensor, row: usize, lut: &[(f32, f32); 256], out: &mut [f32]) {
-    let k = t.cols;
-    let gpr = k / MX_GROUP;
-    for g in 0..gpr {
-        let s = t.scales[row * gpr + g].value();
-        let base = (row * k + g * MX_GROUP) / 2;
-        let dst = &mut out[g * MX_GROUP..(g + 1) * MX_GROUP];
-        for (bi, pair) in dst.chunks_exact_mut(2).enumerate() {
-            let (lo, hi) = lut[t.codes[base + bi] as usize];
-            pair[0] = lo * s;
-            pair[1] = hi * s;
-        }
-    }
-}
-
-fn decode_rows(t: &Mxfp4Tensor, lut: &[(f32, f32); 256], out: &mut [f32]) {
-    let k = t.cols;
-    for r in 0..t.rows {
-        decode_row(t, r, lut, &mut out[r * k..(r + 1) * k]);
-    }
-}
-
-/// 8-accumulator dot product (breaks the FMA dependency chain so LLVM
-/// auto-vectorizes; the single-accumulator form runs ~8x slower).
-#[inline]
-fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
-    let mut acc = [0.0f32; 8];
-    let chunks = a.len() / 8;
-    for c in 0..chunks {
-        let (ra, rb) = (&a[c * 8..c * 8 + 8], &b[c * 8..c * 8 + 8]);
-        for u in 0..8 {
-            acc[u] += ra[u] * rb[u];
-        }
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 8..a.len() {
-        tail += a[i] * b[i];
-    }
-    acc.iter().sum::<f32>() + tail
-}
-
-/// Dense f32 GEMM C = A·Bᵀ (naive; baseline for the kernel benches).
+/// Dense f32 GEMM C = A·Bᵀ (baseline for the kernel benches), routed
+/// through the active [`crate::kernels::Backend`].
 pub fn f32_gemm(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        let ra = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            c[i * n + j] = dot_f32(ra, &b[j * k..(j + 1) * k]);
-        }
-    }
-    c
+    crate::kernels::active().gemm_f32(a, b, m, n, k)
 }
 
 #[cfg(test)]

@@ -1,10 +1,14 @@
 //! PJRT runtime: loads the HLO-text artifacts `python/compile/aot.py`
 //! emitted and executes them on the XLA CPU client. The only place in the
 //! crate that talks to the `xla` crate — everything above works with
-//! [`manifest::Manifest`] metadata and host tensors.
+//! [`manifest::Manifest`] metadata and host tensors. The [`engine`]
+//! half needs the `xla` feature (PJRT client + native XLA libs); the
+//! manifest half is pure Rust and always available.
 
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
 
+#[cfg(feature = "xla")]
 pub use engine::{scalar_f32, scalar_i32, tensor_f32, tensor_i32, Artifact, Engine};
 pub use manifest::{Dtype, Entrypoint, Manifest, TensorSpec};

@@ -109,6 +109,29 @@ impl Args {
     }
 }
 
+/// Consume the shared `--backend scalar|parallel` flag and lock in the
+/// process-wide [`crate::kernels`] backend (the `QUARTET_BACKEND` env var
+/// is the flag-less equivalent). Call before any kernel work runs.
+pub fn apply_backend_flag(args: &mut Args) -> Result<()> {
+    if let Some(name) = args.get("backend") {
+        crate::kernels::select(&name)?;
+    }
+    Ok(())
+}
+
+/// Consume `--backend scalar|parallel|both` (default `both`) into concrete
+/// backend instances — the shared axis of the kernel benches. Unknown
+/// names are an error, not a silent fallback.
+pub fn backends_flag(args: &mut Args) -> Result<Vec<Box<dyn crate::kernels::Backend>>> {
+    match args.str_or("backend", "both").as_str() {
+        "both" => Ok(vec![
+            crate::kernels::backend_from_name("scalar")?,
+            crate::kernels::backend_from_name("parallel")?,
+        ]),
+        name => Ok(vec![crate::kernels::backend_from_name(name)?]),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -48,7 +48,7 @@ fn full_fit_pipeline_recovers_paper_table3_efficiencies() {
 
 #[test]
 fn real_run_records_fit_when_present() {
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("runs");
+    let dir = quartet::bench::runs_root();
     let recs = quartet::coordinator::runrecord::RunRecord::load_dir(&dir).unwrap();
     let base: Vec<Run> = recs
         .iter()

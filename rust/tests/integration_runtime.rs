@@ -1,5 +1,7 @@
-//! Integration: PJRT engine × AOT artifacts. Skips gracefully (with a
-//! loud note) when `make artifacts` hasn't been run.
+//! Integration: PJRT engine × AOT artifacts. Needs the `xla` feature;
+//! skips gracefully (with a loud note) when `make artifacts` hasn't been
+//! run.
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 
@@ -9,7 +11,7 @@ use quartet::runtime::engine::{
 };
 
 fn root() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    quartet::bench::artifacts_root()
 }
 
 fn have(name: &str) -> bool {

@@ -1,6 +1,7 @@
 //! Integration: full training loop over the PJRT runtime (one compiled
 //! artifact reused across assertions to keep XLA compile cost bounded),
-//! checkpointing, and the serving engine.
+//! checkpointing, and the serving engine. Needs the `xla` feature.
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 
@@ -11,7 +12,7 @@ use quartet::runtime::engine::Engine;
 use quartet::serve::{PrefillEngine, Request};
 
 fn root() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    quartet::bench::artifacts_root()
 }
 
 fn have(name: &str) -> bool {

@@ -149,14 +149,18 @@ fn prop_quest_never_worse_than_double_absmax_mse() {
 #[test]
 fn golden_vectors_match_python() {
     // generated by `python -m compile.gen_vectors` — pins the rust and
-    // python substrates to identical RTN/QuEST numerics
+    // python substrates to identical RTN/QuEST numerics. The file is
+    // checked in so this runs from a clean clone.
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("rust/tests/data/quant_vectors.json");
-    if !path.exists() {
-        eprintln!("golden vectors missing ({}) — run make vectors", path.display());
-        return;
-    }
-    let j = quartet::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        .join("tests/data/quant_vectors.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "golden vectors missing at {} ({e}); regenerate them with \
+             `cd python && python -m compile.gen_vectors` and re-run",
+            path.display()
+        )
+    });
+    let j = quartet::util::json::Json::parse(&text).unwrap();
     let cases = j.req("cases").unwrap().as_arr().unwrap();
     assert!(!cases.is_empty());
     let mut rng = Rng::new(0);
