@@ -1,0 +1,116 @@
+//! Fig 1 (native testbed): loss-vs-size sweep through the pure-Rust
+//! Quartet trainer, across both kernel backends and the Table 3 method
+//! axis, with the run records handed straight to `scaling::fit` — the
+//! proof that native runs are fit-consumable exactly like PJRT sweeps.
+//!
+//! Flags: `--backend scalar|parallel|both`, `--sizes 64,128,256`
+//! (d_hidden values), `--methods f32,mxfp8,quartet,rtn`, `--steps N`,
+//! `--batch N`, `--out DIR` (save the RunRecords).
+
+use std::path::PathBuf;
+
+use quartet::coordinator::runrecord::RunRecord;
+use quartet::scaling::fit::{fit_base_law, fit_efficiencies, FitOptions};
+use quartet::scaling::law::Run;
+use quartet::train::{train_native, ModelConfig, NativeTrainOptions};
+use quartet::util::cli::{backends_flag, methods_flag, Args};
+
+fn main() {
+    quartet::util::bench::print_header("Fig 1 (native) — pure-Rust training sweep");
+    let mut args = Args::from_env().unwrap_or_default();
+    let _ = args.flag("bench");
+    let backends = backends_flag(&mut args).expect("--backend");
+    let methods = methods_flag(&mut args).expect("--methods");
+    let steps = args.parse_or("steps", 120usize).expect("--steps");
+    let batch = args.parse_or("batch", 32usize).expect("--batch");
+    let sizes: Vec<usize> = args
+        .list_or("sizes", &["64", "128", "256"])
+        .iter()
+        .map(|s| s.parse().expect("--sizes"))
+        .collect();
+    let out = args.get("out").map(PathBuf::from);
+
+    // all records are saved (artifact names carry the backend so the
+    // files never collide); the fit uses the first backend's runs only —
+    // the second backend trains the same problem, its run is the perf race
+    let mut records: Vec<RunRecord> = Vec::new();
+    let mut fit_runs: Vec<Run> = Vec::new();
+    println!(
+        "\n{:<10} {:>8} {:>9} {:>10} {:>10} {:>10} {:>10}",
+        "backend", "d_hidden", "method", "params", "init", "final", "tok/s"
+    );
+    for (bi, be) in backends.iter().enumerate() {
+        for &d_hidden in &sizes {
+            for &method in &methods {
+                let cfg = ModelConfig {
+                    vocab: 128,
+                    d_emb: 32,
+                    d_hidden,
+                    n_hidden: 1,
+                    method,
+                };
+                let opts = NativeTrainOptions {
+                    steps,
+                    batch,
+                    seed: 1,
+                    ..NativeTrainOptions::default()
+                };
+                let (mut rec, _model) =
+                    train_native(&cfg, &opts, be.as_ref()).expect("native training");
+                println!(
+                    "{:<10} {:>8} {:>9} {:>10} {:>10.4} {:>10.4} {:>10.0}{}",
+                    be.name(),
+                    d_hidden,
+                    method.name(),
+                    rec.non_embedding_params,
+                    rec.val_curve.first().map(|&(_, l)| l).unwrap_or(f64::NAN),
+                    rec.final_val_loss,
+                    rec.tokens_per_sec,
+                    if rec.diverged { "  [DIVERGED]" } else { "" }
+                );
+                if bi == 0 && !rec.diverged {
+                    fit_runs.push(rec.to_fit_run());
+                }
+                rec.artifact = format!("{}-{}", rec.artifact, be.name());
+                records.push(rec);
+            }
+        }
+    }
+
+    // ---- scaling::fit consumes the native records ----------------------
+    let runs: Vec<Run> = fit_runs;
+    let base: Vec<Run> = runs.iter().filter(|r| r.method == "f32").cloned().collect();
+    if base.len() >= 3 {
+        let fit_opts = FitOptions { max_iters: 1500, restarts: 2, ..FitOptions::default() };
+        let (law, obj) = fit_base_law(&base, &fit_opts);
+        println!(
+            "\n[scaling::fit over {} native runs ({} f32 baseline)]  huber obj {obj:.3e}",
+            runs.len(),
+            base.len()
+        );
+        println!(
+            "base law: A={:.3e} α={:.3} B={:.3e} β={:.3} E={:.3} γ={:.3}",
+            law.a, law.alpha, law.b, law.beta, law.e, law.gamma
+        );
+        let eff = fit_efficiencies(&law, &runs, &fit_opts);
+        println!("{:<10} {:>8} {:>8}   (paper scale: quartet 0.64/0.94)", "method", "eff_N", "eff_D");
+        for (m, e) in &eff {
+            println!("{:<10} {:>8.3} {:>8.3}", m, e.eff_n, e.eff_d);
+        }
+        println!(
+            "(smoke-scale runs — the point is the pipeline: native RunRecords \
+             flow through the same fitter as the PJRT sweeps)"
+        );
+    } else {
+        println!("\n[fit skipped — include `f32` in --methods and ≥3 sizes for a base fit]");
+    }
+
+    if let Some(dir) = out {
+        for rec in &records {
+            match rec.save(&dir) {
+                Ok(p) => println!("saved {}", p.display()),
+                Err(e) => eprintln!("save failed: {e:#}"),
+            }
+        }
+    }
+}

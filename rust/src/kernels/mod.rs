@@ -65,6 +65,23 @@ pub trait Backend: Send + Sync {
     /// Dense f32 GEMM C = A·Bᵀ (the full-precision baseline).
     fn gemm_f32(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32>;
 
+    /// Masked gradient GEMM: C = A·Bᵀ with an optional output-side trust
+    /// mask (bit per element of C, row-major) fused into the kernel —
+    /// masked elements are written as 0.0 and their dot products skipped.
+    /// This is the backward half of QuEST's straight-through estimator:
+    /// the mask produced by `quantize_mxfp4(.., Quest, ..)` gates the
+    /// gradient of the tensor it was computed from. `mask == None`
+    /// degrades to [`Backend::gemm_f32`] exactly.
+    fn gemm_f32_masked(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        mask: Option<&[u64]>,
+    ) -> Vec<f32>;
+
     /// Apply H_g to each contiguous g-group along the last axis, in place.
     fn block_hadamard(&self, data: &mut [f32], g: usize);
 

@@ -109,6 +109,26 @@ impl Backend for ParallelBackend {
         // seeding the per-row streams.
         let salt = if stochastic { rng.next_u64() } else { 0 };
 
+        if stochastic && (threads <= 1 || rows * cols < SMALL_WORK) {
+            // same per-row streams as the threaded path (output identical
+            // at any thread count), run inline: on tiny gradient tensors
+            // the scoped-thread setup costs more than the quantization
+            for r in 0..rows {
+                let mut row_rng = row_stream(salt, r);
+                scalar::quantize_rows(
+                    &data[r * cols..(r + 1) * cols],
+                    1,
+                    cols,
+                    mode,
+                    &mut row_rng,
+                    &mut codes[r * cols / 2..(r + 1) * cols / 2],
+                    &mut scales[r * gpr..(r + 1) * gpr],
+                    None,
+                );
+            }
+            return Mxfp4Tensor { rows, cols, codes, scales, mask };
+        }
+
         let mut rows_per = (rows + threads - 1) / threads;
         // QuEST packs a trust bit per element into shared u64 words; when a
         // row is half a word (cols ≡ 32 mod 64) an odd chunk start would
@@ -264,6 +284,47 @@ impl Backend for ParallelBackend {
         c
     }
 
+    fn gemm_f32_masked(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        mask: Option<&[u64]>,
+    ) -> Vec<f32> {
+        let Some(mask) = mask else {
+            return self.gemm_f32(a, b, m, n, k);
+        };
+        let threads = self.pool_size().min(m.max(1));
+        if threads <= 1 || m * n * k < SMALL_WORK {
+            return ScalarBackend.gemm_f32_masked(a, b, m, n, k, Some(mask));
+        }
+        assert!(mask.len() * 64 >= m * n, "trust mask too short for [{m}, {n}]");
+        let rows_per = (m + threads - 1) / threads;
+        let mut c = vec![0.0f32; m * n];
+        // workers own disjoint C row blocks and only *read* the shared
+        // mask; the flat mask index is global, so partitioning cannot
+        // change which elements are gated — bit-identical to scalar
+        std::thread::scope(|s| {
+            for (ci, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+                let r0 = ci * rows_per;
+                s.spawn(move || {
+                    for (i, c_row) in c_chunk.chunks_mut(n).enumerate() {
+                        let ra = &a[(r0 + i) * k..(r0 + i + 1) * k];
+                        for (j, out) in c_row.iter_mut().enumerate() {
+                            let flat = (r0 + i) * n + j;
+                            if mask[flat / 64] & (1u64 << (flat % 64)) != 0 {
+                                *out = scalar::dot_f32(ra, &b[j * k..(j + 1) * k]);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        c
+    }
+
     fn block_hadamard(&self, data: &mut [f32], g: usize) {
         assert_eq!(data.len() % g, 0);
         let n_groups = data.len() / g;
@@ -295,6 +356,58 @@ mod tests {
         let mut b = row_stream(42, 1);
         assert_ne!(a.next_u64(), b.next_u64());
         assert_eq!(row_stream(42, 3).next_u64(), row_stream(42, 3).next_u64());
+    }
+
+    #[test]
+    fn sr_small_input_runs_inline_with_row_streams() {
+        // below SMALL_WORK the stochastic path must skip thread setup but
+        // keep the exact per-row stream discipline of the threaded path
+        let mut rng = Rng::new(6);
+        let x = rng.gaussian_vec(4 * 32, 1.0);
+        for mode in [QuantMode::Sr, QuantMode::SrPrescaled] {
+            let got = ParallelBackend::with_threads(4)
+                .quantize_mxfp4(&x, 4, 32, mode, &mut Rng::new(9));
+            let salt = Rng::new(9).next_u64();
+            let mut codes = vec![0u8; 4 * 32 / 2];
+            let mut scales = vec![E8m0(0); 4];
+            for r in 0..4 {
+                let mut rr = row_stream(salt, r);
+                scalar::quantize_rows(
+                    &x[r * 32..(r + 1) * 32],
+                    1,
+                    32,
+                    mode,
+                    &mut rr,
+                    &mut codes[r * 16..(r + 1) * 16],
+                    &mut scales[r..r + 1],
+                    None,
+                );
+            }
+            assert_eq!(got.codes, codes, "{mode:?}");
+            assert_eq!(got.scales, scales, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn masked_gemm_zeroes_gated_outputs() {
+        let mut rng = Rng::new(8);
+        let (m, n, k) = (5, 7, 64);
+        let a = rng.gaussian_vec(m * k, 1.0);
+        let b = rng.gaussian_vec(n * k, 1.0);
+        let mut mask = vec![u64::MAX; (m * n + 63) / 64];
+        mask[0] &= !0b1010u64; // gate flat elements 1 and 3
+        let be = ParallelBackend::with_threads(3);
+        let got = be.gemm_f32_masked(&a, &b, m, n, k, Some(&mask));
+        let full = be.gemm_f32(&a, &b, m, n, k);
+        for (flat, (g, f)) in got.iter().zip(&full).enumerate() {
+            if flat == 1 || flat == 3 {
+                assert_eq!(*g, 0.0, "gated element {flat} computed");
+            } else {
+                assert_eq!(g, f, "ungated element {flat} differs");
+            }
+        }
+        // None mask degrades to the plain GEMM
+        assert_eq!(be.gemm_f32_masked(&a, &b, m, n, k, None), full);
     }
 
     #[test]

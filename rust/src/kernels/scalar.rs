@@ -84,6 +84,32 @@ impl Backend for ScalarBackend {
         c
     }
 
+    fn gemm_f32_masked(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        mask: Option<&[u64]>,
+    ) -> Vec<f32> {
+        let Some(mask) = mask else {
+            return self.gemm_f32(a, b, m, n, k);
+        };
+        assert!(mask.len() * 64 >= m * n, "trust mask too short for [{m}, {n}]");
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let ra = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let flat = i * n + j;
+                if mask[flat / 64] & (1u64 << (flat % 64)) != 0 {
+                    c[flat] = dot_f32(ra, &b[j * k..(j + 1) * k]);
+                }
+            }
+        }
+        c
+    }
+
     fn block_hadamard(&self, data: &mut [f32], g: usize) {
         crate::quant::hadamard::block_hadamard(data, g);
     }

@@ -34,9 +34,15 @@
 //!                     manifests, executable cache, literal pools.
 //! * [`coordinator`] — trainer (segment scheduling, metrics, checkpoints;
 //!                     `xla` feature), sweep runner, run records.
+//! * [`train`]       — the native pure-Rust Quartet trainer (Algorithm 1
+//!                     over [`kernels`]): QuantLinear layers, the MLP
+//!                     language model, Adam, and a training loop that
+//!                     emits run records and servable checkpoints — no
+//!                     PJRT required.
 //! * [`serve`]       — batched prefill engines (Fig 6): the pure-Rust
-//!                     CPU engine over [`kernels`], plus the PJRT one
-//!                     under the `xla` feature.
+//!                     CPU engine over [`kernels`] serving native trained
+//!                     checkpoints, plus the PJRT one under the `xla`
+//!                     feature.
 //! * [`bench`]       — shared experiment harness used by `benches/*`.
 //!
 //! The PJRT execution paths (~37 `xla::` call sites) are compiled only
@@ -51,6 +57,7 @@ pub mod quant;
 pub mod runtime;
 pub mod scaling;
 pub mod serve;
+pub mod train;
 pub mod util;
 
 /// Crate-wide result type.

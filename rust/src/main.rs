@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! repro info                          # engine + artifact inventory (xla)
+//! repro train   --native --method quartet [--steps 400] [--d-hidden 128]
+//!               [--checkpoint ckpt.json] [--out runs]    # pure Rust
 //! repro train   --artifact n80k-quartet --steps 200 [--lr 2e-3] [--seed 0]
 //! repro sweep   --preset reduced --out runs [--max-steps 4000]
 //! repro serve   --artifact n330k-quartet --requests 256
@@ -12,14 +14,15 @@
 //!
 //! Every subcommand honours the global `--backend scalar|parallel` flag
 //! (or the `QUARTET_BACKEND` env var) selecting the kernels backend.
-//! `train`/`sweep`/`serve`/`info` execute through PJRT and need the crate
-//! built with `--features xla`; the rest are pure Rust.
+//! `train --native` runs the pure-Rust Quartet trainer (no PJRT; method
+//! axis `f32|mxfp8|quartet|rtn`); artifact-based `train`/`sweep`/`serve`/
+//! `info` execute through PJRT and need `--features xla`; the rest are
+//! pure Rust.
 
 use anyhow::{bail, Result};
 
 use quartet::util::cli::Args;
 
-#[cfg(feature = "xla")]
 use std::path::PathBuf;
 
 #[cfg(feature = "xla")]
@@ -48,6 +51,7 @@ fn main() -> Result<()> {
         Some(other) => bail!("unknown subcommand {other:?} (see --help in README)"),
         None => {
             println!("usage: repro <info|train|sweep|serve|regions|table2|kernels> [flags]");
+            println!("       repro train --native --method f32|mxfp8|quartet|rtn  (pure Rust)");
             println!("global: --backend scalar|parallel (or QUARTET_BACKEND env)");
             println!("see README.md for the full command reference");
             Ok(())
@@ -101,8 +105,79 @@ fn cmd_info(_args: &mut Args) -> Result<()> {
     no_xla("info")
 }
 
-#[cfg(feature = "xla")]
+/// `train` front door: `--native` runs the pure-Rust trainer, otherwise
+/// the PJRT artifact trainer (xla feature).
 fn cmd_train(args: &mut Args) -> Result<()> {
+    if args.flag("native") {
+        return cmd_train_native(args);
+    }
+    cmd_train_xla(args)
+}
+
+/// Pure-Rust Quartet training (Algorithm 1 on the kernels backends):
+/// trains the native MLP LM on the synthetic corpus, optionally writing a
+/// RunRecord (`--out`) and a servable checkpoint (`--checkpoint`).
+fn cmd_train_native(args: &mut Args) -> Result<()> {
+    use quartet::train::{train_native, ModelConfig, NativeTrainOptions, TrainMethod};
+
+    let cfg = ModelConfig {
+        vocab: args.parse_or("vocab", 256usize)?,
+        d_emb: args.parse_or("d-emb", 32usize)?,
+        d_hidden: args.parse_or("d-hidden", 128usize)?,
+        n_hidden: args.parse_or("n-hidden", 1usize)?,
+        method: TrainMethod::parse(&args.str_or("method", "quartet"))?,
+    };
+    let opts = NativeTrainOptions {
+        steps: args.parse_or("steps", 400usize)?,
+        batch: args.parse_or("batch", 32usize)?,
+        lr: args.parse_or("lr", 8e-3f32)?,
+        seed: args.parse_or("seed", 0u64)?,
+        eval_every: args.parse_or("eval-every", 0usize)?,
+        eval_batches: args.parse_or("eval-batches", 8usize)?,
+        log_every: args.parse_or("log-every", 50usize)?,
+        verbose: true,
+        ..NativeTrainOptions::default()
+    };
+    let out = args.get("out").map(PathBuf::from);
+    let ckpt = args.get("checkpoint").map(PathBuf::from);
+    args.finish()?;
+
+    let be = quartet::kernels::active();
+    let (rec, model) = train_native(&cfg, &opts, be)?;
+    println!(
+        "trained {} [{} backend]: steps={} tokens={} init val loss={:.4} \
+         final val loss={:.4} ({:.0} tok/s, {:.2}s){}",
+        rec.artifact,
+        be.name(),
+        rec.steps,
+        rec.tokens,
+        rec.val_curve.first().map(|&(_, l)| l).unwrap_or(f64::NAN),
+        rec.final_val_loss,
+        rec.tokens_per_sec,
+        rec.wall_secs,
+        if rec.diverged { "  [DIVERGED]" } else { "" }
+    );
+    if let Some(dir) = out {
+        let path = rec.save(&dir)?;
+        println!("record: {}", path.display());
+    }
+    if let Some(path) = ckpt {
+        if rec.diverged {
+            bail!(
+                "run diverged — refusing to write checkpoint {} (the weights are garbage; \
+                 lower --lr or change --seed)",
+                path.display()
+            );
+        }
+        model.save(&path)?;
+        println!("checkpoint: {} (serve it with CpuPrefillEngine::from_checkpoint)",
+                 path.display());
+    }
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn cmd_train_xla(args: &mut Args) -> Result<()> {
     let root = artifacts_root(args);
     let artifact = args.required("artifact")?;
     let opts = TrainOptions {
@@ -137,8 +212,8 @@ fn cmd_train(args: &mut Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "xla"))]
-fn cmd_train(_args: &mut Args) -> Result<()> {
-    no_xla("train")
+fn cmd_train_xla(_args: &mut Args) -> Result<()> {
+    no_xla("train (artifact mode; `train --native` is pure Rust)")
 }
 
 #[cfg(feature = "xla")]

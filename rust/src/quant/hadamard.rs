@@ -116,10 +116,16 @@ pub fn rademacher(rng: &mut Rng, d: usize) -> Vec<f32> {
 }
 
 /// Randomized block Hadamard Ĥ(x, ξ) = H·diag(ξ)·x applied per g-group
-/// along rows of a [rows, d] row-major matrix (in place). The sign flip
-/// is applied row-wise here; the transform itself goes through the active
-/// [`crate::kernels::Backend`] so the hot path parallelizes.
-pub fn randomized_block_hadamard(data: &mut [f32], signs: &[f32], g: usize) {
+/// along rows of a [rows, d] row-major matrix (in place), on an explicit
+/// [`crate::kernels::Backend`] — the native trainer passes its own; the
+/// `randomized_block_hadamard` free function below routes through the
+/// process-wide backend.
+pub fn randomized_block_hadamard_on(
+    be: &dyn crate::kernels::Backend,
+    data: &mut [f32],
+    signs: &[f32],
+    g: usize,
+) {
     let d = signs.len();
     assert_eq!(data.len() % d, 0);
     for row in data.chunks_mut(d) {
@@ -127,19 +133,35 @@ pub fn randomized_block_hadamard(data: &mut [f32], signs: &[f32], g: usize) {
             *v *= s;
         }
     }
-    crate::kernels::active().block_hadamard(data, g);
+    be.block_hadamard(data, g);
 }
 
-/// Inverse of the randomized transform: diag(ξ)·H⁻¹·y.
-pub fn randomized_block_hadamard_inv(data: &mut [f32], signs: &[f32], g: usize) {
+/// Inverse of the randomized transform on an explicit backend:
+/// diag(ξ)·H⁻¹·y.
+pub fn randomized_block_hadamard_inv_on(
+    be: &dyn crate::kernels::Backend,
+    data: &mut [f32],
+    signs: &[f32],
+    g: usize,
+) {
     let d = signs.len();
     assert_eq!(data.len() % d, 0);
-    crate::kernels::active().block_hadamard(data, g);
+    be.block_hadamard(data, g);
     for row in data.chunks_mut(d) {
         for (v, s) in row.iter_mut().zip(signs) {
             *v *= s;
         }
     }
+}
+
+/// [`randomized_block_hadamard_on`] through the active backend.
+pub fn randomized_block_hadamard(data: &mut [f32], signs: &[f32], g: usize) {
+    randomized_block_hadamard_on(crate::kernels::active(), data, signs, g);
+}
+
+/// [`randomized_block_hadamard_inv_on`] through the active backend.
+pub fn randomized_block_hadamard_inv(data: &mut [f32], signs: &[f32], g: usize) {
+    randomized_block_hadamard_inv_on(crate::kernels::active(), data, signs, g);
 }
 
 #[cfg(test)]

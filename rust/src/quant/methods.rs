@@ -7,13 +7,37 @@
 //! paper's Table 2 protocol ("for fairness, the Hadamard transform is
 //! applied for each scheme before quantization").
 
-use crate::kernels::active;
+use crate::kernels::{active, Backend};
 use crate::quant::hadamard::{
     rademacher, randomized_block_hadamard, randomized_block_hadamard_inv,
+    randomized_block_hadamard_inv_on, randomized_block_hadamard_on,
 };
 use crate::quant::mxfp4::{QuantMode, MX_GROUP};
 use crate::quant::{e2m1_rtn, fp8, intq, E2M1_MAX};
 use crate::util::rng::Rng;
+
+/// Quartet's backward quantizer on an explicit backend: randomized block
+/// Hadamard (fresh Rademacher signs), SR of (3/4)·x on the MXFP4 grid,
+/// the 4/3 compensation, inverse transform. Unbiased end to end —
+/// `E[out] = x`. This is the single home of the 3/4·x / 4/3 numerics,
+/// shared by the [`QuartetSr`] zoo entry (process-wide backend) and the
+/// native trainer's backward pass (its own backend).
+pub fn quartet_sr_dequant(
+    be: &dyn Backend,
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let signs = rademacher(rng, cols);
+    let mut work = x.to_vec();
+    randomized_block_hadamard_on(be, &mut work, &signs, MX_GROUP);
+    let t = be.quantize_mxfp4(&work, rows, cols, QuantMode::SrPrescaled, rng);
+    let mut dq = t.dequantize();
+    dq.iter_mut().for_each(|v| *v *= 4.0 / 3.0);
+    randomized_block_hadamard_inv_on(be, &mut dq, &signs, MX_GROUP);
+    dq
+}
 
 /// Pseudo-unbiased PMA correction for RTN-AbsMax MXFP4 over rotated
 /// Gaussian groups: the constant E[S] of Table 2's "RTN AbsMax PMA" row.
@@ -105,7 +129,8 @@ impl Quantizer for SrAbsMax {
 
 /// Quartet's backward quantizer: randomized Hadamard + SR(3/4·x) with the
 /// (4/3) per-tensor compensation folded into the dequantized output, so
-/// the scheme is unbiased end to end.
+/// the scheme is unbiased end to end ([`quartet_sr_dequant`] through the
+/// process-wide backend).
 pub struct QuartetSr;
 
 impl Quantizer for QuartetSr {
@@ -114,14 +139,7 @@ impl Quantizer for QuartetSr {
     }
 
     fn quantize(&self, x: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> Vec<f32> {
-        let mut work = x.to_vec();
-        let signs = rademacher(rng, cols);
-        randomized_block_hadamard(&mut work, &signs, MX_GROUP);
-        let t = active().quantize_mxfp4(&work, rows, cols, QuantMode::SrPrescaled, rng);
-        let mut dq = t.dequantize();
-        dq.iter_mut().for_each(|v| *v *= 4.0 / 3.0);
-        randomized_block_hadamard_inv(&mut dq, &signs, MX_GROUP);
-        dq
+        quartet_sr_dequant(active(), x, rows, cols, rng)
     }
 
     fn stochastic(&self) -> bool {

@@ -53,9 +53,20 @@ impl Mxfp4Tensor {
         self.cols / MX_GROUP
     }
 
-    /// Bytes of real storage (what HBM traffic would be on Blackwell).
+    /// Bytes of real storage (what HBM traffic would be on Blackwell):
+    /// packed nibbles + one scale byte per group, plus — for Quest-mode
+    /// tensors — the trust mask the backward pass reads, counted at its
+    /// exact payload of one bit per element (the in-memory u64 packing's
+    /// tail padding is not traffic, so bits/value stays shape-independent).
+    /// Omitting the mask understated the Fig 5 traffic for QuEST tensors
+    /// by a full bit per value.
     pub fn storage_bytes(&self) -> usize {
-        self.codes.len() + self.scales.len()
+        let mask_bytes = if self.mask.is_some() {
+            (self.rows * self.cols + 7) / 8
+        } else {
+            0
+        };
+        self.codes.len() + self.scales.len() + mask_bytes
     }
 
     /// Quantize a dense f32 tensor through the active
@@ -200,6 +211,31 @@ mod tests {
         let t = Mxfp4Tensor::quantize(&x, 32, 512, QuantMode::Rtn, &mut rng);
         let bits = t.storage_bytes() as f64 * 8.0 / (32.0 * 512.0);
         assert!((bits - 4.25).abs() < 1e-9, "{bits}"); // 4 + 8/32
+    }
+
+    #[test]
+    fn quest_storage_includes_trust_mask_bit() {
+        // the maskless formats stay at 4 + 8/32 = 4.25 bits/value; the
+        // QuEST trust mask (bit per element) adds exactly one more bit —
+        // the storage split the Fig 5 traffic accounting must reflect
+        let mut rng = Rng::new(3);
+        let x = rand_mat(&mut rng, 32, 512);
+        let rtn = Mxfp4Tensor::quantize(&x, 32, 512, QuantMode::Rtn, &mut rng);
+        let quest = Mxfp4Tensor::quantize(&x, 32, 512, QuantMode::Quest, &mut rng);
+        let bits = |t: &Mxfp4Tensor| t.storage_bytes() as f64 * 8.0 / (32.0 * 512.0);
+        assert!((bits(&rtn) - 4.25).abs() < 1e-9, "{}", bits(&rtn));
+        assert!((bits(&quest) - 5.25).abs() < 1e-9, "{}", bits(&quest));
+        assert_eq!(
+            quest.storage_bytes() - rtn.storage_bytes(),
+            32 * 512 / 8,
+            "mask must cost one bit per element"
+        );
+        // shape-independent: an odd-row tensor whose mask payload is not
+        // u64-aligned still accounts at exactly one bit per element
+        let y = rand_mat(&mut rng, 5, 32);
+        let q = Mxfp4Tensor::quantize(&y, 5, 32, QuantMode::Quest, &mut rng);
+        let q_bits = q.storage_bytes() as f64 * 8.0 / (5.0 * 32.0);
+        assert!((q_bits - 5.25).abs() < 1e-9, "{q_bits}");
     }
 
     #[test]

@@ -2,25 +2,33 @@
 //!
 //! Two fronts share the [`Request`]/[`Completion`] protocol:
 //!
-//! * [`CpuPrefillEngine`] — pure Rust, always available: a batched
-//!   quantized linear stack driven through the [`crate::kernels::Backend`]
-//!   layer (fixed-Hadamard → RTN MXFP4 activations × pre-quantized MXFP4
-//!   weights). It is the measurable CPU stand-in for the Fig 6 serving
-//!   curve and the harness that lets backends race on an end-to-end
-//!   serving workload.
+//! * [`CpuPrefillEngine`] — pure Rust, always available: batched prefill
+//!   over the native MLP language model, driven through the
+//!   [`crate::kernels::Backend`] layer (fixed Hadamard → RTN MXFP4
+//!   activations × weights quantized once at load, exactly like a
+//!   deployed MXFP4 checkpoint). It serves **trained checkpoints**
+//!   written by `repro train --native` / [`crate::train::MlpLm::save`]
+//!   via [`CpuPrefillEngine::from_checkpoint`], and random weights of the
+//!   same architecture for benchmarking ([`CpuPrefillEngine::new`]). It
+//!   is the measurable CPU stand-in for the Fig 6 serving curve and the
+//!   harness that lets backends race on an end-to-end serving workload.
 //! * [`PrefillEngine`] (`xla` feature) — the PJRT front: requests arrive
 //!   in a FIFO, the batcher groups up to the artifact's compiled batch
 //!   size (padding the tail), and each group runs one `forward` prefill.
 //!
 //! Latency/throughput are measured per batch; Fig 6 sweeps batch sizes.
+//! Tail batches compute only their own rows — a short final batch is not
+//! billed for padding work.
 
 use std::collections::VecDeque;
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::kernels::Backend;
 use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::train::{MlpLm, ModelConfig, TrainMethod};
 use crate::util::rng::Rng;
 
 #[cfg(feature = "xla")]
@@ -47,15 +55,34 @@ pub struct Completion {
     pub batch_size: usize,
 }
 
+/// NaN-safe argmax readout: NaN logits are skipped (a stray quantization
+/// NaN must not be served as "the" prediction — `total_cmp` alone would
+/// rank +NaN above every finite logit) and the remaining comparison uses
+/// `f32::total_cmp`, so the readout can never panic the serving loop the
+/// way the historical `partial_cmp(..).unwrap()` did. An all-NaN row
+/// degrades to token 0.
+pub(crate) fn argmax_logit(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(j, _)| j as i32)
+        .unwrap_or(0)
+}
+
 // ---------------------------------------------------------------------------
 // CPU engine — kernels::Backend consumer, no PJRT
 // ---------------------------------------------------------------------------
 
-/// Shape of the CPU serving stand-in model.
+/// Shape of the CPU serving model (the native MLP architecture: token-pair
+/// embedding → hidden stack → vocab logits).
 #[derive(Debug, Clone)]
 pub struct CpuServeConfig {
-    pub d_model: usize,
-    pub n_layers: usize,
+    /// per-token embedding width; each position's features are 2·d_emb
+    pub d_emb: usize,
+    pub d_hidden: usize,
+    /// extra d_hidden → d_hidden layers between input and output
+    pub n_hidden: usize,
     pub seq: usize,
     pub batch: usize,
     pub vocab: usize,
@@ -63,38 +90,85 @@ pub struct CpuServeConfig {
 
 impl Default for CpuServeConfig {
     fn default() -> Self {
-        CpuServeConfig { d_model: 256, n_layers: 4, seq: 64, batch: 8, vocab: 512 }
+        CpuServeConfig { d_emb: 64, d_hidden: 256, n_hidden: 2, seq: 64, batch: 8, vocab: 512 }
     }
 }
 
-/// Batched prefill over a stack of pre-quantized MXFP4 linear layers —
-/// the forward arithmetic of the paper's serving path (Hadamard →
-/// quantize → block-scaled GEMM per layer), with weights quantized once
-/// at engine build, exactly like a deployed MXFP4 checkpoint.
+/// Batched prefill over the quantized MLP stack — the forward arithmetic
+/// of the paper's serving path (Hadamard → RTN quantize → block-scaled
+/// GEMM per layer), with weights quantized once at engine build.
 pub struct CpuPrefillEngine {
     backend: Box<dyn Backend>,
     pub cfg: CpuServeConfig,
-    /// token embedding, `[vocab, d_model]` row-major
+    /// token embedding, `[vocab, d_emb]` row-major (f32, like the model)
     tok_emb: Vec<f32>,
-    /// pre-quantized per-layer weights, each `[d_model, d_model]`
+    /// pre-quantized Hadamard-space weights: input layer
+    /// `[d_hidden, 2·d_emb]`, hidden layers `[d_hidden, d_hidden]`, and
+    /// the vocab projection `[vocab, d_hidden]` last
     layers: Vec<Mxfp4Tensor>,
     queue: VecDeque<Request>,
 }
 
 impl CpuPrefillEngine {
+    /// Engine with freshly-initialized weights (benchmarks) — use
+    /// [`CpuPrefillEngine::from_checkpoint`] to serve trained models.
     pub fn new(cfg: CpuServeConfig, backend: Box<dyn Backend>, seed: u64) -> CpuPrefillEngine {
-        assert_eq!(cfg.d_model % MX_GROUP, 0, "d_model must be a multiple of 32");
-        let d = cfg.d_model;
-        let mut rng = Rng::new(seed);
-        let tok_emb = rng.gaussian_vec(cfg.vocab * d, 1.0);
-        let scale = 1.0 / (d as f32).sqrt();
-        let mut layers = Vec::with_capacity(cfg.n_layers);
-        for _ in 0..cfg.n_layers {
-            let mut w = rng.gaussian_vec(d * d, scale);
-            backend.block_hadamard(&mut w, MX_GROUP);
-            layers.push(backend.quantize_mxfp4(&w, d, d, QuantMode::Rtn, &mut rng));
+        let mcfg = ModelConfig {
+            vocab: cfg.vocab,
+            d_emb: cfg.d_emb,
+            d_hidden: cfg.d_hidden,
+            n_hidden: cfg.n_hidden,
+            method: TrainMethod::Rtn,
+        };
+        let model = MlpLm::init(mcfg, seed).expect("invalid CpuServeConfig shape");
+        Self::from_model(&model, cfg.seq, cfg.batch, backend)
+    }
+
+    /// Deploy a trained model: Hadamard + RTN-quantize every linear once
+    /// (the MXFP4 checkpoint form), keep embeddings f32.
+    pub fn from_model(
+        model: &MlpLm,
+        seq: usize,
+        batch: usize,
+        backend: Box<dyn Backend>,
+    ) -> CpuPrefillEngine {
+        let mc = &model.cfg;
+        let cfg = CpuServeConfig {
+            d_emb: mc.d_emb,
+            d_hidden: mc.d_hidden,
+            n_hidden: mc.n_hidden,
+            seq,
+            batch,
+            vocab: mc.vocab,
+        };
+        let mut rng = Rng::new(0);
+        let layers = model
+            .layers
+            .iter()
+            .map(|l| {
+                let mut wh = l.w.clone();
+                backend.block_hadamard(&mut wh, MX_GROUP);
+                backend.quantize_mxfp4(&wh, l.d_out, l.d_in, QuantMode::Rtn, &mut rng)
+            })
+            .collect();
+        CpuPrefillEngine {
+            backend,
+            cfg,
+            tok_emb: model.tok_emb.clone(),
+            layers,
+            queue: VecDeque::new(),
         }
-        CpuPrefillEngine { backend, cfg, tok_emb, layers, queue: VecDeque::new() }
+    }
+
+    /// Load a `repro train --native` checkpoint and serve it.
+    pub fn from_checkpoint(
+        path: &Path,
+        seq: usize,
+        batch: usize,
+        backend: Box<dyn Backend>,
+    ) -> Result<CpuPrefillEngine> {
+        let model = MlpLm::load(path)?;
+        Ok(Self::from_model(&model, seq, batch, backend))
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -109,13 +183,15 @@ impl CpuPrefillEngine {
         self.queue.len()
     }
 
-    /// Serve one batch from the queue (pads the tail batch with zeros);
-    /// returns completions in submission order.
+    /// Serve one batch from the queue; returns completions in submission
+    /// order. A tail batch computes only `take·seq` rows — no padding
+    /// work, so its latency reflects the requests it actually carries.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         if self.queue.is_empty() {
             return Ok(Vec::new());
         }
-        let (d, seq, vocab) = (self.cfg.d_model, self.cfg.seq, self.cfg.vocab);
+        let (d_emb, seq, vocab) = (self.cfg.d_emb, self.cfg.seq, self.cfg.vocab);
+        let d_in = 2 * d_emb;
         let take = self.queue.len().min(self.cfg.batch);
         // validate before draining so a malformed request doesn't discard
         // the valid ones sharing its batch
@@ -126,46 +202,56 @@ impl CpuPrefillEngine {
             }
         }
         let reqs: Vec<Request> = self.queue.drain(..take).collect();
+        let be = &*self.backend;
 
         let t0 = Instant::now();
-        // embed: [batch*seq, d] (padded rows stay token 0)
-        let rows = self.cfg.batch * seq;
-        let mut x = vec![0.0f32; rows * d];
+        // per-position features: concat(emb[t-1], emb[t]) — the same
+        // order-2 contexts the native trainer fits (position 0 sees a
+        // zero-token left pad)
+        let rows = take * seq;
+        let mut x = vec![0.0f32; rows * d_in];
         for (i, r) in reqs.iter().enumerate() {
-            for (p, &tok) in r.tokens.iter().enumerate() {
-                let t = (tok as usize) % vocab;
-                x[(i * seq + p) * d..(i * seq + p + 1) * d]
-                    .copy_from_slice(&self.tok_emb[t * d..(t + 1) * d]);
+            for p in 0..seq {
+                let prev2 = if p == 0 { 0 } else { r.tokens[p - 1] as usize };
+                // layout shared with MlpLm::features — serving can never
+                // drift from the layout the checkpoint was trained with
+                crate::train::model::write_pair_features(
+                    &self.tok_emb,
+                    d_emb,
+                    vocab,
+                    prev2,
+                    r.tokens[p] as usize,
+                    &mut x[(i * seq + p) * d_in..(i * seq + p + 1) * d_in],
+                );
             }
         }
-        // forward through the quantized stack: the per-layer arithmetic of
-        // Quartet's forward pass (fixed Hadamard, RTN activations, packed
-        // block-scaled GEMM); the 1/√d weight init keeps activation
-        // magnitudes stationary across depth
+        // hidden stack over every position (the prefill workload): fixed
+        // Hadamard, RTN activations, packed block-scaled GEMM, ReLU
         let mut rtn_rng = Rng::new(0);
-        for w in &self.layers {
-            self.backend.block_hadamard(&mut x, MX_GROUP);
-            let xq = self.backend.quantize_mxfp4(&x, rows, d, QuantMode::Rtn, &mut rtn_rng);
-            x = self.backend.gemm_mxfp4(&xq, w);
+        let n_stack = self.layers.len() - 1;
+        for w in &self.layers[..n_stack] {
+            debug_assert_eq!(x.len(), rows * w.cols);
+            be.block_hadamard(&mut x, MX_GROUP);
+            let xq = be.quantize_mxfp4(&x, rows, w.cols, QuantMode::Rtn, &mut rtn_rng);
+            x = be.gemm_mxfp4(&xq, w);
+            crate::train::model::relu(&mut x);
         }
-        // logits at the last position only (prefill next-token readout)
-        let mut last = vec![0.0f32; take * d];
+        // vocab projection at the last position only (next-token readout)
+        let d_h = self.cfg.d_hidden;
+        let mut last = vec![0.0f32; take * d_h];
         for i in 0..take {
-            let src = ((i * seq) + seq - 1) * d;
-            last[i * d..(i + 1) * d].copy_from_slice(&x[src..src + d]);
+            let src = ((i * seq) + seq - 1) * d_h;
+            last[i * d_h..(i + 1) * d_h].copy_from_slice(&x[src..src + d_h]);
         }
-        let logits = self.backend.gemm_f32(&last, &self.tok_emb, take, vocab, d);
+        let w_out = self.layers.last().expect("engine has layers");
+        be.block_hadamard(&mut last, MX_GROUP);
+        let lq = be.quantize_mxfp4(&last, take, d_h, QuantMode::Rtn, &mut rtn_rng);
+        let logits = be.gemm_mxfp4(&lq, w_out);
         let latency = t0.elapsed().as_secs_f64();
 
         let mut done = Vec::with_capacity(take);
         for (i, r) in reqs.iter().enumerate() {
-            let row = &logits[i * vocab..(i + 1) * vocab];
-            let next = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j as i32)
-                .unwrap_or(0);
+            let next = argmax_logit(&logits[i * vocab..(i + 1) * vocab]);
             done.push(Completion {
                 id: r.id,
                 next_token: next,
@@ -239,8 +325,9 @@ impl<'a> PrefillEngine<'a> {
         self.queue.len()
     }
 
-    /// Serve one batch from the queue (pads the tail batch with zeros);
-    /// returns completions in submission order.
+    /// Serve one batch from the queue (pads the tail batch with zeros —
+    /// the artifact's batch is compiled in); returns completions in
+    /// submission order.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         if self.queue.is_empty() {
             return Ok(Vec::new());
@@ -265,13 +352,7 @@ impl<'a> PrefillEngine<'a> {
         let mut done = Vec::with_capacity(reqs.len());
         for (i, r) in reqs.iter().enumerate() {
             let base = (i * self.seq + (self.seq - 1)) * self.vocab;
-            let row = &logits[base..base + self.vocab];
-            let next = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j as i32)
-                .unwrap_or(0);
+            let next = argmax_logit(&logits[base..base + self.vocab]);
             done.push(Completion {
                 id: r.id,
                 next_token: next,
@@ -311,9 +392,14 @@ mod tests {
             .collect()
     }
 
+    fn small_cfg() -> CpuServeConfig {
+        CpuServeConfig { d_emb: 32, d_hidden: 64, n_hidden: 1, vocab: 128,
+                         ..CpuServeConfig::default() }
+    }
+
     #[test]
     fn cpu_engine_serves_all_requests_in_order() {
-        let cfg = CpuServeConfig { batch: 4, seq: 16, ..CpuServeConfig::default() };
+        let cfg = CpuServeConfig { batch: 4, seq: 16, ..small_cfg() };
         let mut eng = CpuPrefillEngine::new(cfg.clone(), Box::new(ScalarBackend), 3);
         for r in requests(10, cfg.seq, cfg.vocab, 9) {
             eng.submit(r);
@@ -330,7 +416,7 @@ mod tests {
 
     #[test]
     fn cpu_engine_rejects_wrong_seq() {
-        let cfg = CpuServeConfig::default();
+        let cfg = small_cfg();
         let mut eng = CpuPrefillEngine::new(cfg, Box::new(ScalarBackend), 3);
         eng.submit(Request { id: 0, tokens: vec![1, 2, 3] });
         assert!(eng.step().is_err());
@@ -340,7 +426,7 @@ mod tests {
     fn cpu_engine_backends_agree_on_completions() {
         // RTN end to end is deterministic and bit-identical across
         // backends, so the served tokens must match exactly.
-        let cfg = CpuServeConfig { batch: 3, seq: 16, ..CpuServeConfig::default() };
+        let cfg = CpuServeConfig { batch: 3, seq: 16, ..small_cfg() };
         let mut next = Vec::new();
         for be in [
             Box::new(ScalarBackend) as Box<dyn Backend>,
@@ -354,5 +440,67 @@ mod tests {
             next.push(done.iter().map(|c| c.next_token).collect::<Vec<_>>());
         }
         assert_eq!(next[0], next[1]);
+    }
+
+    #[test]
+    fn tail_batch_predictions_independent_of_batch_capacity() {
+        // §bugfix regression: a request's readout must not depend on how
+        // much padding its batch *would* have carried — serving 5
+        // requests at capacity 8 (one short batch) and at capacity 5
+        // (one exact batch) must agree token for token.
+        let reqs = requests(5, 16, 128, 33);
+        let mut outs = Vec::new();
+        for capacity in [8usize, 5] {
+            let cfg = CpuServeConfig { batch: capacity, seq: 16, ..small_cfg() };
+            let mut eng = CpuPrefillEngine::new(cfg, Box::new(ScalarBackend), 11);
+            for r in reqs.clone() {
+                eng.submit(r);
+            }
+            let (done, _, _) = eng.drain().unwrap();
+            assert_eq!(done[0].batch_size, 5.min(capacity));
+            outs.push(done.iter().map(|c| c.next_token).collect::<Vec<_>>());
+        }
+        assert_eq!(outs[0], outs[1]);
+    }
+
+    #[test]
+    fn argmax_survives_nan_logits() {
+        // §bugfix regression: the old partial_cmp(..).unwrap() readout
+        // panicked on any NaN logit; the new one skips NaNs and serves
+        // the best *real* logit.
+        assert_eq!(argmax_logit(&[0.5, 3.0, -1.0]), 1);
+        assert_eq!(argmax_logit(&[1.0, f32::NAN, 3.0, f32::NEG_INFINITY]), 2);
+        assert_eq!(argmax_logit(&[f32::NAN, 7.0]), 1);
+        assert_eq!(argmax_logit(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_logit(&[]), 0);
+    }
+
+    #[test]
+    fn engine_roundtrips_a_trained_model() {
+        use crate::train::{MlpLm, ModelConfig, TrainMethod};
+        let cfg = ModelConfig {
+            vocab: 128, d_emb: 32, d_hidden: 64, n_hidden: 1,
+            method: TrainMethod::Quartet,
+        };
+        let model = MlpLm::init(cfg, 5).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("serve_ckpt_{}.json", std::process::id()));
+        model.save(&path).unwrap();
+        let from_ckpt =
+            CpuPrefillEngine::from_checkpoint(&path, 16, 4, Box::new(ScalarBackend)).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        let from_model = CpuPrefillEngine::from_model(&model, 16, 4, Box::new(ScalarBackend));
+        assert_eq!(from_ckpt.cfg.vocab, 128);
+        assert_eq!(from_ckpt.cfg.d_hidden, 64);
+        // both engines must serve the identical function
+        let mut outs = Vec::new();
+        for mut eng in [from_ckpt, from_model] {
+            for r in requests(6, 16, 128, 77) {
+                eng.submit(r);
+            }
+            let (done, _, _) = eng.drain().unwrap();
+            outs.push(done.iter().map(|c| c.next_token).collect::<Vec<_>>());
+        }
+        assert_eq!(outs[0], outs[1]);
     }
 }

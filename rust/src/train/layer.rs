@@ -1,0 +1,326 @@
+//! Quantized linear layers: Quartet Algorithm 1's forward/backward on the
+//! [`crate::kernels::Backend`] layer.
+//!
+//! Forward (quartet): `y = Q(H·x) · Q(H·w)ᵀ` through the packed
+//! block-scaled GEMM — the per-group Hadamard cancels in the contraction,
+//! so `y ≈ x·wᵀ` while both operands are genuine MXFP4 tensors.
+//!
+//! Backward (quartet): the incoming gradient is quantized with the
+//! randomized-Hadamard + SR(3/4·x) scheme (unbiased end to end, the
+//! `QuartetSr` path), the two gradient GEMMs run against the *quantized*
+//! forward operands (straight-through), and the QuEST trust masks gate
+//! the Hadamard-space gradients through the backend's fused masked GEMM
+//! before rotating back.
+
+use crate::kernels::Backend;
+use crate::quant::fp8::mxfp8_rtn;
+use crate::quant::methods::quartet_sr_dequant;
+use crate::quant::mxfp4::{QuantMode, MX_GROUP};
+use crate::train::TrainMethod;
+use crate::util::rng::Rng;
+
+/// One weight matrix `[d_out, d_in]` (row-major), master copy in f32 —
+/// quantization happens on the way into every GEMM, QAT-style.
+#[derive(Debug, Clone)]
+pub struct QuantLinear {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub w: Vec<f32>,
+}
+
+/// Forward-pass residue the backward consumes.
+pub struct LinearCache {
+    /// layer input in original space, `[rows, d_in]` (ReLU gate upstream,
+    /// f32 weight-gradient contraction)
+    pub x: Vec<f32>,
+    /// quantize-dequantized input as the forward GEMM consumed it
+    /// (Hadamard space for quartet/rtn, original space for mxfp8)
+    pub xq: Option<Vec<f32>>,
+    /// quantize-dequantized weight, same space as `xq`
+    pub wq: Option<Vec<f32>>,
+    /// QuEST trust mask over the (Hadamard-space) input, bit per element
+    pub mask_x: Option<Vec<u64>>,
+    /// QuEST trust mask over the (Hadamard-space) weight
+    pub mask_w: Option<Vec<u64>>,
+}
+
+impl QuantLinear {
+    /// 1/√d_in Gaussian init (activation variance stationary with depth).
+    pub fn init(d_out: usize, d_in: usize, rng: &mut Rng) -> QuantLinear {
+        let scale = 1.0 / (d_in as f32).sqrt();
+        QuantLinear { d_out, d_in, w: rng.gaussian_vec(d_out * d_in, scale) }
+    }
+
+    pub fn from_weights(d_out: usize, d_in: usize, w: Vec<f32>) -> QuantLinear {
+        assert_eq!(w.len(), d_out * d_in, "weight shape mismatch");
+        QuantLinear { d_out, d_in, w }
+    }
+
+    /// `y = x·wᵀ` under the method's forward precision; returns the
+    /// `[rows, d_out]` output and the backward cache.
+    pub fn forward(
+        &self,
+        x: &[f32],
+        rows: usize,
+        method: TrainMethod,
+        be: &dyn Backend,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, LinearCache) {
+        assert_eq!(x.len(), rows * self.d_in);
+        match method {
+            TrainMethod::F32 => {
+                let y = be.gemm_f32(x, &self.w, rows, self.d_out, self.d_in);
+                (y, LinearCache { x: x.to_vec(), xq: None, wq: None, mask_x: None, mask_w: None })
+            }
+            TrainMethod::Mxfp8 => {
+                let xq = mxfp8_rtn(x);
+                let wq = mxfp8_rtn(&self.w);
+                let y = be.gemm_f32(&xq, &wq, rows, self.d_out, self.d_in);
+                (y, LinearCache {
+                    x: x.to_vec(),
+                    xq: Some(xq),
+                    wq: Some(wq),
+                    mask_x: None,
+                    mask_w: None,
+                })
+            }
+            TrainMethod::Quartet => {
+                let mut xh = x.to_vec();
+                be.block_hadamard(&mut xh, MX_GROUP);
+                let xt = be.quantize_mxfp4(&xh, rows, self.d_in, QuantMode::Quest, rng);
+                let mut wh = self.w.clone();
+                be.block_hadamard(&mut wh, MX_GROUP);
+                let wt = be.quantize_mxfp4(&wh, self.d_out, self.d_in, QuantMode::Quest, rng);
+                let y = be.gemm_mxfp4(&xt, &wt);
+                let cache = LinearCache {
+                    x: x.to_vec(),
+                    xq: Some(xt.dequantize()),
+                    wq: Some(wt.dequantize()),
+                    mask_x: xt.mask,
+                    mask_w: wt.mask,
+                };
+                (y, cache)
+            }
+            TrainMethod::Rtn => {
+                // naive MXFP4: no rotation anywhere — absmax RTN straight
+                // on the raw tensors. Heavy-tailed activations/gradients
+                // are exactly what this baseline cannot survive (Table 2's
+                // misalignment story), which is why it loses the ordering.
+                let xt = be.quantize_mxfp4(x, rows, self.d_in, QuantMode::Rtn, rng);
+                let wt = be.quantize_mxfp4(&self.w, self.d_out, self.d_in, QuantMode::Rtn, rng);
+                let y = be.gemm_mxfp4(&xt, &wt);
+                let cache = LinearCache {
+                    x: x.to_vec(),
+                    xq: Some(xt.dequantize()),
+                    wq: Some(wt.dequantize()),
+                    mask_x: None,
+                    mask_w: None,
+                };
+                (y, cache)
+            }
+        }
+    }
+
+    /// Gradient step: from `dy [rows, d_out]` produce
+    /// `(dx [rows, d_in], dw [d_out, d_in])` under the method's backward
+    /// precision (straight-through estimator through the forward
+    /// quantizers; quartet additionally gates by the trust masks).
+    pub fn backward(
+        &self,
+        dy: &[f32],
+        cache: &LinearCache,
+        rows: usize,
+        method: TrainMethod,
+        be: &dyn Backend,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(dy.len(), rows * self.d_out);
+        let (d_out, d_in) = (self.d_out, self.d_in);
+        match method {
+            TrainMethod::F32 => {
+                let wt = transpose(&self.w, d_out, d_in);
+                let dx = be.gemm_f32(dy, &wt, rows, d_in, d_out);
+                let dyt = transpose(dy, rows, d_out);
+                let xt = transpose(&cache.x, rows, d_in);
+                let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
+                (dx, dw)
+            }
+            TrainMethod::Mxfp8 => {
+                let dyq = mxfp8_rtn(dy);
+                let wq = cache.wq.as_ref().expect("mxfp8 cache");
+                let xq = cache.xq.as_ref().expect("mxfp8 cache");
+                let wt = transpose(wq, d_out, d_in);
+                let dx = be.gemm_f32(&dyq, &wt, rows, d_in, d_out);
+                let dyt = transpose(&dyq, rows, d_out);
+                let xt = transpose(xq, rows, d_in);
+                let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
+                (dx, dw)
+            }
+            TrainMethod::Quartet => {
+                // Algorithm 1 backward: unbiased SR(3/4·x) gradient
+                // quantization, both gradient GEMMs against the quantized
+                // forward operands — in Hadamard space, where the trust
+                // masks live — then rotate back.
+                let dyq = quartet_sr_dequant(be, dy, rows, d_out, rng);
+                let wq = cache.wq.as_ref().expect("quartet cache");
+                let xq = cache.xq.as_ref().expect("quartet cache");
+                // dL/d(Hx) = mask_x ⊙ (dyq · Q(Hw)); then dx = H·dL/d(Hx)
+                let wt = transpose(wq, d_out, d_in);
+                let mut dxh =
+                    be.gemm_f32_masked(&dyq, &wt, rows, d_in, d_out, cache.mask_x.as_deref());
+                be.block_hadamard_inv(&mut dxh, MX_GROUP);
+                // dL/d(Hw) = mask_w ⊙ (dyqᵀ · Q(Hx)); then dw = H·dL/d(Hw)
+                let dyt = transpose(&dyq, rows, d_out);
+                let xt = transpose(xq, rows, d_in);
+                let mut dwh =
+                    be.gemm_f32_masked(&dyt, &xt, d_out, d_in, rows, cache.mask_w.as_deref());
+                be.block_hadamard_inv(&mut dwh, MX_GROUP);
+                (dxh, dwh)
+            }
+            TrainMethod::Rtn => {
+                // naive backward: deterministic RTN on the raw gradient
+                // (biased — the bulk of a softmax gradient's small entries
+                // rounds to zero against the group absmax), straight
+                // GEMMs, no masks, no rotation
+                let dyq = rtn_dequant(be, dy, rows, d_out, rng);
+                let wq = cache.wq.as_ref().expect("rtn cache");
+                let xq = cache.xq.as_ref().expect("rtn cache");
+                let wt = transpose(wq, d_out, d_in);
+                let dx = be.gemm_f32(&dyq, &wt, rows, d_in, d_out);
+                let dyt = transpose(&dyq, rows, d_out);
+                let xt = transpose(xq, rows, d_in);
+                let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
+                (dx, dw)
+            }
+        }
+    }
+}
+
+/// The naive baseline's gradient quantizer: plain absmax RTN quant-dequant,
+/// no rotation (biased — small gradient coordinates round to zero against
+/// the group absmax, and without the Hadamard there is nothing to spread
+/// the heavy tail).
+pub fn rtn_dequant(
+    be: &dyn Backend,
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    be.quantize_mxfp4(x, rows, cols, QuantMode::Rtn, rng).dequantize()
+}
+
+/// Row-major `[rows, cols]` → `[cols, rows]` (the gradient GEMMs contract
+/// over rows; `Backend::gemm_f32*` contracts over the last axis).
+pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(src.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = src[r * cols + c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ScalarBackend;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let x = rng.gaussian_vec(6 * 4, 1.0);
+        let t = transpose(&x, 6, 4);
+        assert_eq!(transpose(&t, 4, 6), x);
+        // t[c, r] == x[r, c]
+        assert_eq!(t[2], x[2 * 4]);
+        assert_eq!(t[3 * 6 + 5], x[5 * 4 + 3]);
+    }
+
+    /// f32 backward must match the numerical gradient of the quadratic
+    /// probe L = ½‖y‖² (whose dL/dy = y) — pins the transpose plumbing.
+    #[test]
+    fn f32_backward_matches_finite_difference() {
+        let be = ScalarBackend;
+        let mut rng = Rng::new(2);
+        let (rows, d_in, d_out) = (4, 32, 32);
+        let layer = QuantLinear::init(d_out, d_in, &mut rng);
+        let x = rng.gaussian_vec(rows * d_in, 1.0);
+        let loss = |layer: &QuantLinear, x: &[f32]| -> f64 {
+            let (y, _) = layer.forward(x, rows, TrainMethod::F32, &be, &mut Rng::new(0));
+            y.iter().map(|&v| 0.5 * (v as f64) * (v as f64)).sum()
+        };
+        let (y, cache) = layer.forward(&x, rows, TrainMethod::F32, &be, &mut Rng::new(0));
+        let (dx, dw) = layer.backward(&y, &cache, rows, TrainMethod::F32, &be, &mut Rng::new(0));
+
+        // the probe loss is exactly quadratic, so the central difference
+        // is exact up to f32 rounding — a generous eps keeps the rounding
+        // noise far below the tolerance
+        let eps = 5e-2f32;
+        for &idx in &[0usize, 7, 63, rows * d_in - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let num = (loss(&layer, &xp) - loss(&layer, &xm)) / (2.0 * eps as f64);
+            assert!(
+                (num - dx[idx] as f64).abs() < 1e-2 * (1.0 + num.abs()),
+                "dx[{idx}]: {num} vs {}",
+                dx[idx]
+            );
+        }
+        for &idx in &[0usize, 33, d_out * d_in - 1] {
+            let mut lp = layer.clone();
+            lp.w[idx] += eps;
+            let mut lm = layer.clone();
+            lm.w[idx] -= eps;
+            let num = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps as f64);
+            assert!(
+                (num - dw[idx] as f64).abs() < 1e-2 * (1.0 + num.abs()),
+                "dw[{idx}]: {num} vs {}",
+                dw[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn quartet_forward_approximates_f32() {
+        let be = ScalarBackend;
+        let mut rng = Rng::new(4);
+        let (rows, d_in, d_out) = (8, 64, 32);
+        let layer = QuantLinear::init(d_out, d_in, &mut rng);
+        let x = rng.gaussian_vec(rows * d_in, 1.0);
+        let (exact, _) = layer.forward(&x, rows, TrainMethod::F32, &be, &mut Rng::new(0));
+        let (q, _) = layer.forward(&x, rows, TrainMethod::Quartet, &be, &mut Rng::new(0));
+        let scale = (exact.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / exact.len() as f64)
+            .sqrt();
+        let err = (exact
+            .iter()
+            .zip(&q)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / exact.len() as f64)
+            .sqrt();
+        assert!(err < 0.35 * scale, "relative fp4 error {err} vs rms {scale}");
+    }
+
+    #[test]
+    fn quartet_backward_carries_trust_mask() {
+        // QuEST forward must hand its trust mask to the backward, and the
+        // masked gradient path must stay finite under extreme inputs.
+        let be = ScalarBackend;
+        let mut rng = Rng::new(5);
+        let (rows, d_in, d_out) = (1, 32, 32);
+        let layer = QuantLinear::init(d_out, d_in, &mut rng);
+        let mut x = rng.gaussian_vec(rows * d_in, 1.0);
+        x[3] = 1000.0;
+        let (y, cache) = layer.forward(&x, rows, TrainMethod::Quartet, &be, &mut Rng::new(6));
+        assert!(cache.mask_x.is_some(), "quest forward must carry a mask");
+        let dy: Vec<f32> = y.iter().map(|_| 1.0).collect();
+        let (dx, _) = layer.backward(&dy, &cache, rows, TrainMethod::Quartet, &be, &mut Rng::new(7));
+        assert!(dx.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,202 @@
+//! Native pure-Rust Quartet training (Algorithm 1 on the CPU backends).
+//!
+//! PR 1 gated the PJRT trainer behind the `xla` feature, which left the
+//! default build able to quantize and serve but not *train* — the paper's
+//! headline claim. This subsystem closes that gap with a training loop
+//! driven entirely through the [`crate::kernels::Backend`] layer:
+//!
+//! * [`layer`] — [`QuantLinear`]: forward = fixed block Hadamard + QuEST
+//!   MXFP4 quantization + the packed `gemm_mxfp4`; backward = randomized
+//!   Hadamard + SR(3/4·x) gradient quantization (the `QuartetSr` path)
+//!   with the QuEST trust mask applied as a straight-through gradient
+//!   gate via the backend's fused masked gradient GEMM.
+//! * [`model`] — [`MlpLm`]: an order-2 MLP language model over the
+//!   Zipf–Markov corpus (token-pair embedding → quantized linear stack →
+//!   vocab logits), with JSON checkpoints `serve::CpuPrefillEngine`
+//!   consumes.
+//! * [`optim`] — [`Adam`] with bias correction.
+//! * [`trainer`] — [`train_native`]: the loop (batching, eval, divergence
+//!   detection) emitting [`crate::coordinator::runrecord::RunRecord`]s so
+//!   `scaling::fit` consumes native runs exactly like PJRT sweeps.
+//!
+//! The method axis reproduces Table 3's ordering on CPU:
+//! `f32` (exact) ≤ `mxfp8` (lossless baseline) ≤ `quartet` (QuEST fwd +
+//! unbiased SR bwd) < `rtn` (naive unrotated RTN fwd+bwd, biased
+//! gradients). Training uses Adam under a cosine learning-rate decay, so
+//! the unbiased methods' late-run quantization noise averages out while
+//! the naive baseline's bias floor persists.
+
+pub mod layer;
+pub mod model;
+pub mod optim;
+pub mod trainer;
+
+use anyhow::{anyhow, ensure, Result};
+
+pub use layer::QuantLinear;
+pub use model::MlpLm;
+pub use optim::Adam;
+pub use trainer::{train_native, NativeTrainOptions};
+
+use crate::quant::mxfp4::MX_GROUP;
+
+/// Precision recipe for the linear layers — the Table 3 method axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMethod {
+    /// Exact f32 GEMMs forward and backward (the bf16-stand-in baseline).
+    F32,
+    /// MXFP8 (E4M3 + E8M0 group scale) quant-dequant on every GEMM
+    /// operand — the paper's "lossless" low-precision baseline.
+    Mxfp8,
+    /// Quartet Algorithm 1: QuEST MXFP4 forward (fixed Hadamard, RMSE
+    /// clip, trust mask) + unbiased SR(3/4·x) backward with the trust
+    /// mask as straight-through gradient gate.
+    Quartet,
+    /// Naive MXFP4: absmax RTN straight on the raw tensors, forward *and*
+    /// backward, with no Hadamard rotation anywhere — biased gradients
+    /// over heavy-tailed distributions, the ordering's reliable loser
+    /// (the rotation being the difference is exactly the paper's point).
+    Rtn,
+}
+
+impl TrainMethod {
+    /// Every method, in the order the loss comparison quotes them.
+    pub const ALL: [TrainMethod; 4] = [
+        TrainMethod::F32,
+        TrainMethod::Mxfp8,
+        TrainMethod::Quartet,
+        TrainMethod::Rtn,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrainMethod::F32 => "f32",
+            TrainMethod::Mxfp8 => "mxfp8",
+            TrainMethod::Quartet => "quartet",
+            TrainMethod::Rtn => "rtn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TrainMethod> {
+        match s {
+            "f32" => Ok(TrainMethod::F32),
+            "mxfp8" => Ok(TrainMethod::Mxfp8),
+            "quartet" => Ok(TrainMethod::Quartet),
+            "rtn" => Ok(TrainMethod::Rtn),
+            other => Err(anyhow!(
+                "unknown method {other:?} (expected f32|mxfp8|quartet|rtn)"
+            )),
+        }
+    }
+}
+
+/// Shape of the native MLP language model. The model predicts token t+1
+/// from the embeddings of tokens (t-1, t) — exactly the order-2 structure
+/// the synthetic corpus carries.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    /// per-token embedding width; the first linear consumes 2·d_emb
+    pub d_emb: usize,
+    pub d_hidden: usize,
+    /// extra d_hidden → d_hidden layers between the input and output
+    /// projections (0 = two-layer MLP)
+    pub n_hidden: usize,
+    pub method: TrainMethod,
+}
+
+impl ModelConfig {
+    /// MX-group alignment of the *forward* contraction axes — what the
+    /// model structurally needs to run (serving included). Training
+    /// additionally requires `vocab % 32 == 0` (the backward quantizes
+    /// dy `[rows, vocab]`); `train_native` enforces that separately so a
+    /// serving engine can carry any vocab.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            (2 * self.d_emb) % MX_GROUP == 0,
+            "2*d_emb must be a multiple of {MX_GROUP} (d_emb {})",
+            self.d_emb
+        );
+        ensure!(
+            self.d_hidden % MX_GROUP == 0,
+            "d_hidden must be a multiple of {MX_GROUP} (got {})",
+            self.d_hidden
+        );
+        ensure!(self.d_emb > 0 && self.d_hidden > 0 && self.vocab > 1, "degenerate shape");
+        Ok(())
+    }
+
+    /// The extra trainability constraint on top of [`ModelConfig::validate`].
+    pub fn validate_for_training(&self) -> Result<()> {
+        self.validate()?;
+        ensure!(
+            self.vocab % MX_GROUP == 0,
+            "training quantizes the logit gradient [rows, vocab], so vocab must be a \
+             multiple of {MX_GROUP} (got {})",
+            self.vocab
+        );
+        Ok(())
+    }
+
+    /// (d_out, d_in) of every linear layer, input → output order.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = vec![(self.d_hidden, 2 * self.d_emb)];
+        dims.extend(std::iter::repeat((self.d_hidden, self.d_hidden)).take(self.n_hidden));
+        dims.push((self.vocab, self.d_hidden));
+        dims
+    }
+
+    /// Linear-layer parameter count (the N of the scaling law; embeddings
+    /// excluded, matching the PJRT manifests).
+    pub fn non_embedding_params(&self) -> usize {
+        self.layer_dims().iter().map(|&(o, i)| o * i).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in TrainMethod::ALL {
+            assert_eq!(TrainMethod::parse(m.name()).unwrap(), m);
+        }
+        assert!(TrainMethod::parse("bf16").is_err());
+    }
+
+    #[test]
+    fn config_validation_catches_misalignment() {
+        let ok = ModelConfig {
+            vocab: 64,
+            d_emb: 16,
+            d_hidden: 128,
+            n_hidden: 1,
+            method: TrainMethod::Quartet,
+        };
+        ok.validate().unwrap();
+        assert!(ModelConfig { d_emb: 8, ..ok.clone() }.validate().is_err());
+        assert!(ModelConfig { d_hidden: 100, ..ok.clone() }.validate().is_err());
+        // unaligned vocab is servable but not trainable
+        let odd_vocab = ModelConfig { vocab: 100, ..ok.clone() };
+        odd_vocab.validate().unwrap();
+        assert!(odd_vocab.validate_for_training().is_err());
+    }
+
+    #[test]
+    fn layer_dims_and_param_accounting() {
+        let cfg = ModelConfig {
+            vocab: 64,
+            d_emb: 16,
+            d_hidden: 128,
+            n_hidden: 2,
+            method: TrainMethod::F32,
+        };
+        let dims = cfg.layer_dims();
+        assert_eq!(dims, vec![(128, 32), (128, 128), (128, 128), (64, 128)]);
+        assert_eq!(
+            cfg.non_embedding_params(),
+            128 * 32 + 128 * 128 + 128 * 128 + 64 * 128
+        );
+    }
+}

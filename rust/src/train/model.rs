@@ -1,0 +1,395 @@
+//! The native MLP language model: order-2 next-token prediction over the
+//! Zipf–Markov corpus.
+//!
+//! Architecture: `concat(emb[t-1], emb[t])` → QuantLinear stack (ReLU
+//! between layers) → vocab logits → softmax cross-entropy. Embeddings
+//! stay f32 (the paper quantizes only the linear layers); every linear
+//! runs under the model's [`TrainMethod`].
+//!
+//! Checkpoints are single JSON files (`kind: "native-mlp-lm"`) holding
+//! the config and raw f32 weights — `serve::CpuPrefillEngine` loads them
+//! and re-quantizes the weights once into deployed MXFP4 form.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::kernels::Backend;
+use crate::train::layer::{LinearCache, QuantLinear};
+use crate::train::{ModelConfig, TrainMethod};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Per-tensor gradients of one loss evaluation, same layout as the params.
+pub struct Grads {
+    pub tok_emb: Vec<f32>,
+    pub layers: Vec<Vec<f32>>,
+}
+
+/// The model: f32 token embedding + quantized linear stack.
+#[derive(Debug, Clone)]
+pub struct MlpLm {
+    pub cfg: ModelConfig,
+    /// `[vocab, d_emb]` row-major
+    pub tok_emb: Vec<f32>,
+    pub layers: Vec<QuantLinear>,
+}
+
+impl MlpLm {
+    pub fn init(cfg: ModelConfig, seed: u64) -> Result<MlpLm> {
+        cfg.validate()?;
+        let mut rng = Rng::new(seed);
+        let tok_emb = rng.gaussian_vec(cfg.vocab * cfg.d_emb, 1.0);
+        let layers = cfg
+            .layer_dims()
+            .into_iter()
+            .map(|(o, i)| QuantLinear::init(o, i, &mut rng))
+            .collect();
+        Ok(MlpLm { cfg, tok_emb, layers })
+    }
+
+    /// Gather `[B, 2·d_emb]` features for a batch of (t-1, t) contexts.
+    pub fn features(&self, ctx: &[(u32, u32)]) -> Vec<f32> {
+        let d = self.cfg.d_emb;
+        let mut x = vec![0.0f32; ctx.len() * 2 * d];
+        for (s, &(a, b)) in ctx.iter().enumerate() {
+            write_pair_features(
+                &self.tok_emb,
+                d,
+                self.cfg.vocab,
+                a as usize,
+                b as usize,
+                &mut x[s * 2 * d..(s + 1) * 2 * d],
+            );
+        }
+        x
+    }
+
+    /// Inference logits `[B, vocab]` (no caches; forward precision only —
+    /// every method's forward is deterministic, so this is eval-stable).
+    pub fn logits(&self, ctx: &[(u32, u32)], be: &dyn Backend) -> Vec<f32> {
+        let b = ctx.len();
+        let mut rng = Rng::new(0);
+        let mut x = self.features(ctx);
+        let last = self.layers.len() - 1;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (mut y, _) = layer.forward(&x, b, self.cfg.method, be, &mut rng);
+            if li < last {
+                relu(&mut y);
+            }
+            x = y;
+        }
+        x
+    }
+
+    /// Mean cross-entropy of a batch under the forward precision.
+    pub fn eval_loss(&self, ctx: &[(u32, u32)], targets: &[u32], be: &dyn Backend) -> f64 {
+        let logits = self.logits(ctx, be);
+        let (loss, _) = softmax_xent(&logits, targets, self.cfg.vocab, false);
+        loss
+    }
+
+    /// One full forward/backward: returns the mean training loss and the
+    /// gradients of every parameter tensor.
+    pub fn loss_and_grads(
+        &self,
+        ctx: &[(u32, u32)],
+        targets: &[u32],
+        be: &dyn Backend,
+        rng: &mut Rng,
+    ) -> (f64, Grads) {
+        let b = ctx.len();
+        assert_eq!(b, targets.len());
+        let last = self.layers.len() - 1;
+
+        let mut x = self.features(ctx);
+        let mut caches: Vec<LinearCache> = Vec::with_capacity(self.layers.len());
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (mut y, cache) = layer.forward(&x, b, self.cfg.method, be, rng);
+            caches.push(cache);
+            if li < last {
+                relu(&mut y);
+            }
+            x = y;
+        }
+        let (loss, dlogits) = softmax_xent(&x, targets, self.cfg.vocab, true);
+        let mut dcur = dlogits.expect("grad requested");
+
+        let mut grads = Grads {
+            tok_emb: vec![0.0f32; self.tok_emb.len()],
+            layers: vec![Vec::new(); self.layers.len()],
+        };
+        for li in (0..self.layers.len()).rev() {
+            let (dx, dw) =
+                self.layers[li].backward(&dcur, &caches[li], b, self.cfg.method, be, rng);
+            grads.layers[li] = dw;
+            if li > 0 {
+                // the input to layer li was ReLU(previous output): gate
+                let gate = &caches[li].x;
+                dcur = dx
+                    .iter()
+                    .zip(gate)
+                    .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
+                    .collect();
+            } else {
+                // scatter the feature gradient into the two embedding rows
+                let d = self.cfg.d_emb;
+                let v = self.cfg.vocab;
+                for (s, &(a, p)) in ctx.iter().enumerate() {
+                    let row = &dx[s * 2 * d..(s + 1) * 2 * d];
+                    let ea = (a as usize % v) * d;
+                    let ep = (p as usize % v) * d;
+                    for i in 0..d {
+                        grads.tok_emb[ea + i] += row[i];
+                        grads.tok_emb[ep + i] += row[d + i];
+                    }
+                }
+            }
+        }
+        (loss, grads)
+    }
+
+    // ---- checkpointing ----------------------------------------------------
+
+    /// Write the checkpoint JSON (compact form; weight arrays dominate).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let c = &self.cfg;
+        let j = Json::from_pairs(vec![
+            ("version", Json::num(1.0)),
+            ("kind", Json::str("native-mlp-lm")),
+            ("method", Json::str(c.method.name())),
+            ("vocab", Json::num(c.vocab as f64)),
+            ("d_emb", Json::num(c.d_emb as f64)),
+            ("d_hidden", Json::num(c.d_hidden as f64)),
+            ("n_hidden", Json::num(c.n_hidden as f64)),
+            ("tok_emb", Json::f32s(&self.tok_emb)),
+            (
+                "layers",
+                Json::array(self.layers.iter().map(|l| Json::f32s(&l.w))),
+            ),
+        ]);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, j.to_string())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Load and shape-check a checkpoint written by [`MlpLm::save`].
+    pub fn load(path: &Path) -> Result<MlpLm> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let kind = j.req("kind")?.as_str().unwrap_or("");
+        if kind != "native-mlp-lm" {
+            bail!("{}: not a native checkpoint (kind {kind:?})", path.display());
+        }
+        let cfg = ModelConfig {
+            vocab: j.req("vocab")?.as_usize().unwrap_or(0),
+            d_emb: j.req("d_emb")?.as_usize().unwrap_or(0),
+            d_hidden: j.req("d_hidden")?.as_usize().unwrap_or(0),
+            n_hidden: j.req("n_hidden")?.as_usize().unwrap_or(0),
+            method: TrainMethod::parse(j.req("method")?.as_str().unwrap_or(""))?,
+        };
+        cfg.validate()?;
+        let f32s = |v: &Json, what: &str| -> Result<Vec<f32>> {
+            v.as_arr()
+                .ok_or_else(|| anyhow!("{what} not an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|f| f as f32)
+                        .ok_or_else(|| anyhow!("{what}: non-numeric entry"))
+                })
+                .collect()
+        };
+        let tok_emb = f32s(j.req("tok_emb")?, "tok_emb")?;
+        if tok_emb.len() != cfg.vocab * cfg.d_emb {
+            bail!("tok_emb has {} values, config wants {}", tok_emb.len(),
+                  cfg.vocab * cfg.d_emb);
+        }
+        let raw = j.req("layers")?.as_arr().ok_or_else(|| anyhow!("layers not an array"))?;
+        let dims = cfg.layer_dims();
+        if raw.len() != dims.len() {
+            bail!("checkpoint has {} layers, config wants {}", raw.len(), dims.len());
+        }
+        let mut layers = Vec::with_capacity(dims.len());
+        for (li, ((o, i), v)) in dims.into_iter().zip(raw).enumerate() {
+            let w = f32s(v, "layer weight")?;
+            if w.len() != o * i {
+                bail!("layer {li} has {} values, wants {}x{}", w.len(), o, i);
+            }
+            layers.push(QuantLinear::from_weights(o, i, w));
+        }
+        Ok(MlpLm { cfg, tok_emb, layers })
+    }
+}
+
+/// The model's per-position input layout, shared with the serving engine
+/// so training and inference can never drift apart: one feature row is
+/// `concat(emb[prev2], emb[prev])`.
+pub(crate) fn write_pair_features(
+    tok_emb: &[f32],
+    d_emb: usize,
+    vocab: usize,
+    prev2: usize,
+    prev: usize,
+    dst: &mut [f32],
+) {
+    let a = (prev2 % vocab) * d_emb;
+    let b = (prev % vocab) * d_emb;
+    dst[..d_emb].copy_from_slice(&tok_emb[a..a + d_emb]);
+    dst[d_emb..2 * d_emb].copy_from_slice(&tok_emb[b..b + d_emb]);
+}
+
+#[inline]
+pub(crate) fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Mean softmax cross-entropy over a `[B, vocab]` logit batch; when
+/// `want_grad`, also dL/dlogits (already divided by B).
+pub fn softmax_xent(
+    logits: &[f32],
+    targets: &[u32],
+    vocab: usize,
+    want_grad: bool,
+) -> (f64, Option<Vec<f32>>) {
+    let b = targets.len();
+    assert_eq!(logits.len(), b * vocab);
+    let mut grad = if want_grad { Some(vec![0.0f32; b * vocab]) } else { None };
+    let mut loss = 0.0f64;
+    for s in 0..b {
+        let row = &logits[s * vocab..(s + 1) * vocab];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut z = 0.0f64;
+        for &l in row {
+            z += ((l - max) as f64).exp();
+        }
+        let t = targets[s] as usize % vocab;
+        loss += z.ln() - (row[t] - max) as f64;
+        if let Some(g) = grad.as_mut() {
+            let grow = &mut g[s * vocab..(s + 1) * vocab];
+            for (j, &l) in row.iter().enumerate() {
+                let p = (((l - max) as f64).exp() / z) as f32;
+                grow[j] = (p - if j == t { 1.0 } else { 0.0 }) / b as f32;
+            }
+        }
+    }
+    (loss / b as f64, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ScalarBackend;
+
+    fn cfg(method: TrainMethod) -> ModelConfig {
+        ModelConfig { vocab: 32, d_emb: 16, d_hidden: 64, n_hidden: 1, method }
+    }
+
+    fn batch(n: usize, vocab: u32, seed: u64) -> (Vec<(u32, u32)>, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let ctx = (0..n)
+            .map(|_| (rng.below(vocab as usize) as u32, rng.below(vocab as usize) as u32))
+            .collect();
+        let tgt = (0..n).map(|_| rng.below(vocab as usize) as u32).collect();
+        (ctx, tgt)
+    }
+
+    #[test]
+    fn init_loss_near_log_vocab() {
+        for method in TrainMethod::ALL {
+            let m = MlpLm::init(cfg(method), 1).unwrap();
+            let (ctx, tgt) = batch(64, 32, 2);
+            let loss = m.eval_loss(&ctx, &tgt, &ScalarBackend);
+            let expect = (32f64).ln();
+            assert!(
+                (loss - expect).abs() < 1.2,
+                "{}: init loss {loss} vs ln(V) {expect}",
+                method.name()
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_grad_sums_to_zero_rowwise() {
+        let logits = vec![0.1f32, 2.0, -1.0, 0.5, 1.0, 0.0, 0.0, -2.0];
+        let (_, g) = softmax_xent(&logits, &[1, 3], 4, true);
+        let g = g.unwrap();
+        for s in 0..2 {
+            let sum: f32 = g[s * 4..(s + 1) * 4].iter().sum();
+            assert!(sum.abs() < 1e-6, "row {s} grad sum {sum}");
+        }
+        // target coordinate is negative (pulls probability up)
+        assert!(g[1] < 0.0 && g[4 + 3] < 0.0);
+    }
+
+    #[test]
+    fn grads_have_param_shapes() {
+        let m = MlpLm::init(cfg(TrainMethod::Quartet), 3).unwrap();
+        let (ctx, tgt) = batch(16, 32, 4);
+        let (loss, grads) =
+            m.loss_and_grads(&ctx, &tgt, &ScalarBackend, &mut Rng::new(5));
+        assert!(loss.is_finite());
+        assert_eq!(grads.tok_emb.len(), m.tok_emb.len());
+        assert_eq!(grads.layers.len(), m.layers.len());
+        for (g, l) in grads.layers.iter().zip(&m.layers) {
+            assert_eq!(g.len(), l.w.len());
+        }
+        // the embedding rows of unseen tokens got no gradient
+        let seen: std::collections::BTreeSet<usize> = ctx
+            .iter()
+            .flat_map(|&(a, b)| [a as usize, b as usize])
+            .collect();
+        let d = m.cfg.d_emb;
+        for t in 0..m.cfg.vocab {
+            let row_norm: f32 = grads.tok_emb[t * d..(t + 1) * d]
+                .iter()
+                .map(|v| v.abs())
+                .sum();
+            if !seen.contains(&t) {
+                assert_eq!(row_norm, 0.0, "unseen token {t} has gradient");
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_bit_exact() {
+        let m = MlpLm::init(cfg(TrainMethod::Quartet), 7).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("native_ckpt_{}.json", std::process::id()));
+        m.save(&path).unwrap();
+        let back = MlpLm::load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(back.cfg.vocab, m.cfg.vocab);
+        assert_eq!(back.cfg.method, m.cfg.method);
+        assert_eq!(back.tok_emb, m.tok_emb);
+        for (a, b) in back.layers.iter().zip(&m.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!((a.d_out, a.d_in), (b.d_out, b.d_in));
+        }
+    }
+
+    #[test]
+    fn load_rejects_shape_mismatch() {
+        let m = MlpLm::init(cfg(TrainMethod::F32), 9).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("native_ckpt_bad_{}.json", std::process::id()));
+        m.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // corrupt the declared hidden width (keep it MX-aligned so the
+        // failure is the shape check, not validate())
+        let bad = text.replace("\"d_hidden\":64", "\"d_hidden\":128");
+        std::fs::write(&path, bad).unwrap();
+        assert!(MlpLm::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,92 @@
+//! Adam with bias correction — the optimizer of every run in the paper's
+//! testbed (β₁ 0.9, β₂ 0.999, ε 1e-8; weight decay is off, matching the
+//! small-scale PJRT artifacts).
+
+/// Adam over a fixed set of parameter tensors ("slots"); slot order is
+/// the caller's contract (slot 0 = embeddings, then one per layer).
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(sizes: &[usize], lr: f32) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: sizes.iter().map(|&n| vec![0.0f32; n]).collect(),
+            v: sizes.iter().map(|&n| vec![0.0f32; n]).collect(),
+        }
+    }
+
+    /// Advance the shared step counter; call once per optimizer step,
+    /// before the slot updates.
+    pub fn begin_step(&mut self) {
+        self.t += 1;
+    }
+
+    /// Apply one Adam update to a slot's parameters in place.
+    pub fn update(&mut self, slot: usize, w: &mut [f32], g: &[f32]) {
+        assert!(self.t > 0, "call begin_step first");
+        let (m, v) = (&mut self.m[slot], &mut self.v[slot]);
+        assert_eq!(w.len(), m.len(), "slot {slot} size mismatch");
+        assert_eq!(w.len(), g.len(), "slot {slot} grad mismatch");
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..w.len() {
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            w[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // L = ½‖w − target‖², gradient w − target
+        let target = [3.0f32, -1.5, 0.25, 8.0];
+        let mut w = [0.0f32; 4];
+        let mut adam = Adam::new(&[4], 0.05);
+        for _ in 0..2000 {
+            let g: Vec<f32> = w.iter().zip(&target).map(|(a, b)| a - b).collect();
+            adam.begin_step();
+            adam.update(0, &mut w, &g);
+        }
+        for (a, b) in w.iter().zip(&target) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // bias correction makes the first update ≈ lr · sign(g)
+        let mut w = [0.0f32; 2];
+        let mut adam = Adam::new(&[2], 0.1);
+        adam.begin_step();
+        adam.update(0, &mut w, &[0.5, -2.0]);
+        assert!((w[0] + 0.1).abs() < 1e-3, "{}", w[0]);
+        assert!((w[1] - 0.1).abs() < 1e-3, "{}", w[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_step")]
+    fn update_without_step_panics() {
+        let mut adam = Adam::new(&[1], 0.1);
+        adam.update(0, &mut [0.0], &[1.0]);
+    }
+}

@@ -1,0 +1,263 @@
+//! The native training loop: pure-Rust Quartet pre-training on the
+//! synthetic corpus, emitting the same [`RunRecord`]s the PJRT sweeps
+//! write so `scaling::fit` (and the fig1 benches) consume native runs
+//! without knowing which trainer produced them.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::runrecord::RunRecord;
+use crate::data::corpus::{Corpus, CorpusConfig, CorpusStream, Split};
+use crate::kernels::Backend;
+use crate::train::model::MlpLm;
+use crate::train::optim::Adam;
+use crate::train::ModelConfig;
+use crate::util::rng::Rng;
+
+/// Run-level knobs of a native training run.
+#[derive(Debug, Clone)]
+pub struct NativeTrainOptions {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// validate every N steps (0 = only at the start and end)
+    pub eval_every: usize,
+    /// batches per validation pass
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub verbose: bool,
+    /// corpus knobs; `vocab` is overridden by the model config
+    pub corpus: CorpusConfig,
+}
+
+impl Default for NativeTrainOptions {
+    fn default() -> Self {
+        NativeTrainOptions {
+            steps: 400,
+            batch: 32,
+            lr: 8e-3,
+            seed: 0,
+            eval_every: 0,
+            eval_batches: 8,
+            log_every: 50,
+            verbose: false,
+            corpus: CorpusConfig::default(),
+        }
+    }
+}
+
+/// Streaming (t-1, t) → t+1 sample source over a corpus split — the
+/// native model's batcher (each predicted token is one training token in
+/// the scaling-law D accounting).
+pub struct Triples<'a> {
+    stream: CorpusStream<'a>,
+    prev2: u32,
+    prev: u32,
+}
+
+impl<'a> Triples<'a> {
+    pub fn new(corpus: &'a Corpus, split: Split) -> Triples<'a> {
+        let mut stream = corpus.stream(split, 0);
+        let prev2 = stream.next_token();
+        let prev = stream.next_token();
+        Triples { stream, prev2, prev }
+    }
+
+    /// Next `n` overlapping samples: contexts and their target tokens.
+    pub fn next_batch(&mut self, n: usize) -> (Vec<(u32, u32)>, Vec<u32>) {
+        let mut ctx = Vec::with_capacity(n);
+        let mut tgt = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = self.stream.next_token();
+            ctx.push((self.prev2, self.prev));
+            tgt.push(t);
+            self.prev2 = self.prev;
+            self.prev = t;
+        }
+        (ctx, tgt)
+    }
+}
+
+/// Mean validation loss over a fresh val-split sample (deterministic:
+/// every forward precision on the method axis is noise-free at eval).
+/// All `batches·batch` samples run as one forward so the frozen weights
+/// are Hadamard-transformed and quantized exactly once per eval pass.
+pub fn eval_val_loss(
+    model: &MlpLm,
+    corpus: &Corpus,
+    be: &dyn Backend,
+    batches: usize,
+    batch: usize,
+) -> f64 {
+    let mut triples = Triples::new(corpus, Split::Val);
+    let (ctx, tgt) = triples.next_batch(batches.max(1) * batch.max(1));
+    model.eval_loss(&ctx, &tgt, be)
+}
+
+/// Train a native model from scratch; returns the run record (val_curve
+/// starts with the step-0 loss, so convergence is checkable from the
+/// record alone) and the trained model for checkpointing/serving.
+pub fn train_native(
+    cfg: &ModelConfig,
+    opts: &NativeTrainOptions,
+    be: &dyn Backend,
+) -> Result<(RunRecord, MlpLm)> {
+    cfg.validate_for_training()?;
+    let corpus = Corpus::new(CorpusConfig { vocab: cfg.vocab, ..opts.corpus.clone() });
+    let mut model = MlpLm::init(cfg.clone(), opts.seed)?;
+    let mut sizes = vec![model.tok_emb.len()];
+    sizes.extend(model.layers.iter().map(|l| l.w.len()));
+    let mut adam = Adam::new(&sizes, opts.lr);
+    let mut rng = Rng::new(opts.seed ^ 0xD1CE_5EED);
+    let mut triples = Triples::new(&corpus, Split::Train);
+
+    let name = format!("native-h{}-{}", cfg.d_hidden, cfg.method.name());
+    let mut train_curve = Vec::new();
+    let mut val_curve = Vec::new();
+    let init_val = eval_val_loss(&model, &corpus, be, opts.eval_batches, opts.batch);
+    val_curve.push((0, init_val));
+    if opts.verbose {
+        eprintln!("[{name}] step 0/{} val loss {init_val:.4}", opts.steps);
+    }
+
+    let t0 = Instant::now();
+    // wall/throughput accounting covers *training* work only: periodic
+    // eval time is subtracted and the final eval happens after the clock
+    // is read, so tok/s comparisons between backends stay honest
+    let mut eval_secs = 0.0f64;
+    let mut diverged = false;
+    let mut steps_done = 0usize;
+    for step in 1..=opts.steps {
+        let (ctx, tgt) = triples.next_batch(opts.batch);
+        let (loss, grads) = model.loss_and_grads(&ctx, &tgt, be, &mut rng);
+        // the diverged step still consumed its batch: count it, so the
+        // record's steps/tokens agree with the curves
+        steps_done = step;
+        if !loss.is_finite() || loss > 20.0 {
+            diverged = true;
+            train_curve.push((step, loss));
+            break;
+        }
+        // cosine decay to ~0: late-run SR noise averages out, so the
+        // unbiased methods converge to the full-precision fixed point
+        // while RTN's bias floor stays — the separation Table 3 measures
+        let progress = (step - 1) as f32 / opts.steps as f32;
+        adam.lr = opts.lr * 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        adam.begin_step();
+        adam.update(0, &mut model.tok_emb, &grads.tok_emb);
+        for (i, layer) in model.layers.iter_mut().enumerate() {
+            adam.update(i + 1, &mut layer.w, &grads.layers[i]);
+        }
+
+        if step % opts.log_every.max(1) == 0 || step == opts.steps {
+            train_curve.push((step, loss));
+            if opts.verbose {
+                eprintln!("[{name}] step {step}/{} train loss {loss:.4}", opts.steps);
+            }
+        }
+        if opts.eval_every > 0 && step % opts.eval_every == 0 && step < opts.steps {
+            let e0 = Instant::now();
+            let vl = eval_val_loss(&model, &corpus, be, opts.eval_batches, opts.batch);
+            eval_secs += e0.elapsed().as_secs_f64();
+            val_curve.push((step, vl));
+            if opts.verbose {
+                eprintln!("[{name}] step {step}/{} val loss {vl:.4}", opts.steps);
+            }
+        }
+    }
+    let wall = (t0.elapsed().as_secs_f64() - eval_secs).max(0.0);
+
+    let final_val = if diverged {
+        f64::NAN
+    } else {
+        eval_val_loss(&model, &corpus, be, opts.eval_batches, opts.batch)
+    };
+    val_curve.push((steps_done, final_val));
+    let tokens = steps_done * opts.batch;
+    let params = cfg.non_embedding_params();
+
+    let rec = RunRecord {
+        artifact: name,
+        size: format!("h{}", cfg.d_hidden),
+        method: cfg.method.name().to_string(),
+        non_embedding_params: params,
+        tokens,
+        steps: steps_done,
+        ratio: tokens as f64 / params.max(1) as f64,
+        seed: opts.seed,
+        train_curve,
+        val_curve,
+        final_val_loss: final_val,
+        wall_secs: wall,
+        tokens_per_sec: tokens as f64 / wall.max(1e-9),
+        diverged,
+    };
+    Ok((rec, model))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ScalarBackend;
+    use crate::train::TrainMethod;
+
+    fn small_cfg(method: TrainMethod) -> ModelConfig {
+        ModelConfig { vocab: 32, d_emb: 16, d_hidden: 64, n_hidden: 0, method }
+    }
+
+    fn small_opts() -> NativeTrainOptions {
+        NativeTrainOptions {
+            steps: 60,
+            batch: 16,
+            lr: 1e-2,
+            seed: 3,
+            eval_every: 30,
+            eval_batches: 4,
+            log_every: 20,
+            ..NativeTrainOptions::default()
+        }
+    }
+
+    #[test]
+    fn triples_are_consistent_windows() {
+        let corpus = Corpus::new(CorpusConfig { vocab: 32, ..CorpusConfig::default() });
+        let mut a = Triples::new(&corpus, Split::Train);
+        let (ctx, tgt) = a.next_batch(32);
+        // consecutive samples overlap: ctx[i+1] = (ctx[i].1, tgt[i])
+        for i in 0..31 {
+            assert_eq!(ctx[i + 1], (ctx[i].1, tgt[i]));
+        }
+        // deterministic
+        let mut b = Triples::new(&corpus, Split::Train);
+        assert_eq!(b.next_batch(32), (ctx, tgt));
+    }
+
+    #[test]
+    fn f32_run_drops_loss_and_fills_record() {
+        let (rec, model) =
+            train_native(&small_cfg(TrainMethod::F32), &small_opts(), &ScalarBackend).unwrap();
+        assert!(!rec.diverged);
+        assert_eq!(rec.steps, 60);
+        assert_eq!(rec.tokens, 60 * 16);
+        assert_eq!(rec.method, "f32");
+        assert!(rec.val_curve.len() >= 3, "init + periodic + final evals");
+        let init = rec.val_curve[0].1;
+        assert!(rec.final_val_loss < init, "no progress: {init} -> {}", rec.final_val_loss);
+        assert_eq!(model.cfg.vocab, 32);
+        // record is fit-consumable
+        let run = rec.to_fit_run();
+        assert!(run.n > 0.0 && run.d > 0.0 && run.loss.is_finite());
+    }
+
+    #[test]
+    fn seeded_runs_are_reproducible() {
+        let cfg = small_cfg(TrainMethod::Quartet);
+        let opts = small_opts();
+        let (a, _) = train_native(&cfg, &opts, &ScalarBackend).unwrap();
+        let (b, _) = train_native(&cfg, &opts, &ScalarBackend).unwrap();
+        assert_eq!(a.train_curve, b.train_curve, "stochastic rounding ignored the seed");
+        assert_eq!(a.final_val_loss, b.final_val_loss);
+    }
+}

@@ -119,6 +119,16 @@ pub fn apply_backend_flag(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Consume `--methods f32,mxfp8,quartet,rtn` (default: the full axis) —
+/// the Table 3 method sweep shared by `train --native` tooling and the
+/// native-training benches.
+pub fn methods_flag(args: &mut Args) -> Result<Vec<crate::train::TrainMethod>> {
+    args.list_or("methods", &["f32", "mxfp8", "quartet", "rtn"])
+        .iter()
+        .map(|s| crate::train::TrainMethod::parse(s))
+        .collect()
+}
+
 /// Consume `--backend scalar|parallel|both` (default `both`) into concrete
 /// backend instances — the shared axis of the kernel benches. Unknown
 /// names are an error, not a silent fallback.

@@ -86,6 +86,67 @@ fn gemms_bit_identical_across_backends() {
 }
 
 #[test]
+fn masked_gradient_gemm_bit_identical_across_backends() {
+    // the QuEST straight-through backward: C = A·Bᵀ with an output-side
+    // trust mask fused in; the mask index is global, so row partitioning
+    // must be unobservable
+    let scalar = ScalarBackend;
+    for (m, n, k) in gemm_shapes() {
+        let mut rng = Rng::new(m as u64 + (n as u64) * 131 + (k as u64) * 17);
+        let a = rng.gaussian_vec(m * k, 1.0);
+        let b = rng.gaussian_vec(n * k, 0.5);
+        // roughly half the output gated, pseudo-randomly
+        let mask: Vec<u64> = (0..(m * n + 63) / 64).map(|_| rng.next_u64()).collect();
+        let want = scalar.gemm_f32_masked(&a, &b, m, n, k, Some(&mask));
+        // gated elements are exactly zero, ungated match the plain GEMM
+        let plain = scalar.gemm_f32(&a, &b, m, n, k);
+        for (flat, (w, p)) in want.iter().zip(&plain).enumerate() {
+            if mask[flat / 64] & (1u64 << (flat % 64)) == 0 {
+                assert_eq!(*w, 0.0, "gated element {flat} computed ({m}x{n}x{k})");
+            } else {
+                assert_eq!(w, p, "ungated element {flat} differs ({m}x{n}x{k})");
+            }
+        }
+        for t in THREAD_COUNTS {
+            let be = ParallelBackend::with_threads(t);
+            assert_eq!(
+                want,
+                be.gemm_f32_masked(&a, &b, m, n, k, Some(&mask)),
+                "masked gemm {m}x{n}x{k} threads={t}"
+            );
+            // None mask must degrade to the plain GEMM on every backend
+            assert_eq!(
+                plain,
+                be.gemm_f32_masked(&a, &b, m, n, k, None),
+                "unmasked degrade {m}x{n}x{k} threads={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sr_backward_quantize_reproducible_on_small_gradients() {
+    // gradient-sized tensors sit below the parallel backend's SMALL_WORK
+    // threshold: the inline per-row-stream path must produce exactly what
+    // any thread count produces, and repeated calls with the same caller
+    // RNG state must be bit-identical
+    for (rows, cols) in [(4usize, 32usize), (16, 64), (31, 96)] {
+        let mut rng = Rng::new(rows as u64 * 7 + cols as u64);
+        let x = rng.gaussian_vec(rows * cols, 1e-3); // gradient-scale values
+        for mode in [QuantMode::Sr, QuantMode::SrPrescaled] {
+            let want = ParallelBackend::with_threads(1)
+                .quantize_mxfp4(&x, rows, cols, mode, &mut Rng::new(19));
+            for t in THREAD_COUNTS {
+                let got = ParallelBackend::with_threads(t)
+                    .quantize_mxfp4(&x, rows, cols, mode, &mut Rng::new(19));
+                assert_tensors_equal(&want, &got,
+                                     &format!("small {mode:?} {rows}x{cols} threads={t}"));
+            }
+        }
+    }
+}
+
+#[test]
 fn block_hadamard_bit_identical() {
     let scalar = ScalarBackend;
     // 999 groups: odd, no thread count divides it

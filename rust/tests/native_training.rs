@@ -1,0 +1,220 @@
+//! End-to-end smoke tests of the native pure-Rust Quartet trainer: the
+//! quartet run must genuinely converge, the Table 3 method ordering
+//! `f32 ≤ mxfp8 ≤ quartet < rtn` must hold on both kernel backends, and
+//! the produced checkpoint must load into `serve::CpuPrefillEngine` and
+//! predict the corpus better than chance.
+
+use quartet::data::corpus::{Corpus, CorpusConfig, Split};
+use quartet::kernels::{Backend, ParallelBackend, ScalarBackend};
+use quartet::serve::{CpuPrefillEngine, Request};
+use quartet::train::{train_native, MlpLm, ModelConfig, NativeTrainOptions, TrainMethod};
+
+/// Small enough to run in seconds, structured enough (85% deterministic
+/// order-2 transitions over a 32-token vocab) that 500 steps separate the
+/// methods cleanly: the unbiased-vs-biased backward gap dominates near
+/// the loss plateau.
+fn smoke_cfg(method: TrainMethod) -> ModelConfig {
+    ModelConfig { vocab: 32, d_emb: 16, d_hidden: 128, n_hidden: 1, method }
+}
+
+fn smoke_opts() -> NativeTrainOptions {
+    NativeTrainOptions {
+        steps: 500,
+        batch: 32,
+        lr: 8e-3,
+        seed: 7,
+        eval_every: 0,
+        eval_batches: 8,
+        log_every: 100,
+        verbose: false,
+        corpus: CorpusConfig { vocab: 32, structure: 0.85, ..CorpusConfig::default() },
+    }
+}
+
+/// Final val loss with divergence folded in (a diverged run must lose
+/// every ordering comparison).
+fn final_loss(rec: &quartet::coordinator::runrecord::RunRecord) -> f64 {
+    if rec.diverged || !rec.final_val_loss.is_finite() {
+        f64::INFINITY
+    } else {
+        rec.final_val_loss
+    }
+}
+
+fn method_losses(be: &dyn Backend) -> (f64, [f64; 4]) {
+    let opts = smoke_opts();
+    let mut quartet_init = f64::NAN;
+    let mut finals = [0.0f64; 4];
+    for (slot, method) in TrainMethod::ALL.into_iter().enumerate() {
+        let (rec, _) = train_native(&smoke_cfg(method), &opts, be).unwrap();
+        if method == TrainMethod::Quartet {
+            quartet_init = rec.val_curve.first().unwrap().1;
+        }
+        finals[slot] = final_loss(&rec);
+    }
+    (quartet_init, finals)
+}
+
+/// The acceptance gate: quartet converges (≥20% below its init loss) and
+/// the method axis orders as Table 3 predicts. The ≤ comparisons carry a
+/// small slack (f32 vs mxfp8 differ by sub-percent quantization noise);
+/// quartet < rtn is strict — biased RTN gradients must lose.
+fn assert_ordering(be: &dyn Backend) {
+    let (quartet_init, finals) = method_losses(be);
+    let [f32_l, mxfp8_l, quartet_l, rtn_l] = finals;
+    let name = be.name();
+    assert!(
+        quartet_l < 0.8 * quartet_init,
+        "[{name}] quartet did not converge: init {quartet_init}, final {quartet_l}"
+    );
+    // the ≤ methods sit within a few hundredths of each other at the
+    // cosine-decayed plateau; rtn loses by whole nats (prototype-validated
+    // across seeds), so slack here cannot mask a real inversion
+    let slack = 0.08;
+    assert!(
+        f32_l <= mxfp8_l + slack,
+        "[{name}] f32 {f32_l} should be ≤ mxfp8 {mxfp8_l}"
+    );
+    assert!(
+        mxfp8_l <= quartet_l + slack,
+        "[{name}] mxfp8 {mxfp8_l} should be ≤ quartet {quartet_l}"
+    );
+    assert!(
+        quartet_l < rtn_l,
+        "[{name}] quartet {quartet_l} must strictly beat rtn {rtn_l}"
+    );
+}
+
+#[test]
+fn method_ordering_holds_on_scalar_backend() {
+    assert_ordering(&ScalarBackend);
+}
+
+#[test]
+fn method_ordering_holds_on_parallel_backend() {
+    assert_ordering(&ParallelBackend::with_threads(3));
+}
+
+#[test]
+fn trained_checkpoint_serves_better_than_chance() {
+    let (rec, model) =
+        train_native(&smoke_cfg(TrainMethod::Quartet), &smoke_opts(), &ScalarBackend).unwrap();
+    assert!(!rec.diverged);
+
+    // write + load the checkpoint through the serving engine
+    let path = std::env::temp_dir()
+        .join(format!("native_train_serve_{}.json", std::process::id()));
+    model.save(&path).unwrap();
+    let seq = 16usize;
+    let mut eng =
+        CpuPrefillEngine::from_checkpoint(&path, seq, 8, Box::new(ScalarBackend)).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(eng.cfg.vocab, 32);
+    assert_eq!(eng.cfg.d_hidden, 128);
+
+    // build requests from held-out val windows where the true next token
+    // is known, and check the engine's argmax beats chance (1/32) by a
+    // wide margin — random weights sit at chance, so this only passes if
+    // the *trained* weights actually reached the engine
+    let corpus = Corpus::new(CorpusConfig { vocab: 32, structure: 0.85,
+                                            ..CorpusConfig::default() });
+    let mut stream = corpus.stream(Split::Val, 1);
+    let n_req = 64usize;
+    let mut truths = Vec::with_capacity(n_req);
+    for id in 0..n_req as u64 {
+        let mut window = vec![0i32; seq + 1];
+        for v in window.iter_mut() {
+            *v = stream.next_token() as i32;
+        }
+        truths.push(window[seq]);
+        eng.submit(Request { id, tokens: window[..seq].to_vec() });
+    }
+    let (done, _, _) = eng.drain().unwrap();
+    assert_eq!(done.len(), n_req);
+    let hits = done
+        .iter()
+        .zip(&truths)
+        .filter(|(c, &t)| c.next_token == t)
+        .count();
+    let acc = hits as f64 / n_req as f64;
+    assert!(
+        acc > 0.15,
+        "trained checkpoint predicts at {acc} (chance is {:.3})",
+        1.0 / 32.0
+    );
+}
+
+#[test]
+fn native_records_flow_into_the_scaling_fitter() {
+    use quartet::scaling::fit::{fit_base_law, FitOptions};
+    use quartet::scaling::law::Run;
+
+    // three sizes, short runs — enough for the fitter to run end to end
+    let opts = NativeTrainOptions { steps: 60, batch: 16, ..smoke_opts() };
+    let mut runs: Vec<Run> = Vec::new();
+    for d_hidden in [64usize, 128, 192] {
+        let cfg = ModelConfig { d_hidden, ..smoke_cfg(TrainMethod::F32) };
+        let (rec, _) = train_native(&cfg, &opts, &ScalarBackend).unwrap();
+        assert!(!rec.diverged);
+        // records survive a save/load roundtrip like any sweep output
+        let dir = std::env::temp_dir()
+            .join(format!("native_runs_{}_{}", std::process::id(), d_hidden));
+        let _ = std::fs::remove_dir_all(&dir);
+        rec.save(&dir).unwrap();
+        let loaded = quartet::coordinator::runrecord::RunRecord::load_dir(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].method, "f32");
+        runs.push(loaded[0].to_fit_run());
+    }
+    let fit_opts = FitOptions { max_iters: 800, restarts: 1, ..FitOptions::default() };
+    let (law, obj) = fit_base_law(&runs, &fit_opts);
+    assert!(obj.is_finite(), "fit objective {obj}");
+    for p in [law.a, law.alpha, law.b, law.beta, law.e, law.gamma] {
+        assert!(p.is_finite() && p > 0.0, "non-physical fitted param {p}");
+    }
+}
+
+#[test]
+fn quartet_runs_reproducible_and_backend_stable() {
+    // same seed → bit-identical record per backend; across backends the
+    // SR stream discipline differs by design, but both must converge
+    let cfg = smoke_cfg(TrainMethod::Quartet);
+    let opts = NativeTrainOptions { steps: 120, ..smoke_opts() };
+    let (a, _) = train_native(&cfg, &opts, &ScalarBackend).unwrap();
+    let (b, _) = train_native(&cfg, &opts, &ScalarBackend).unwrap();
+    assert_eq!(a.train_curve, b.train_curve);
+    assert_eq!(a.final_val_loss, b.final_val_loss);
+
+    let par = ParallelBackend::with_threads(2);
+    let (p1, _) = train_native(&cfg, &opts, &par).unwrap();
+    let (p2, _) = train_native(&cfg, &opts, &ParallelBackend::with_threads(7)).unwrap();
+    // thread count must not change the numerics (per-row SR streams)
+    assert_eq!(p1.train_curve, p2.train_curve, "SR streams depend on thread count");
+    assert_eq!(p1.final_val_loss, p2.final_val_loss);
+    assert!(final_loss(&p1) < p1.val_curve.first().unwrap().1, "parallel run regressed");
+}
+
+/// The per-layer trust-mask machinery exists: a quartet forward on real
+/// corpus features produces masks, and a QuEST-masked run still improves
+/// (the mask gates a tiny outlier fraction, not the learning signal).
+#[test]
+fn quartet_trust_masks_present_and_benign() {
+    let model = MlpLm::init(smoke_cfg(TrainMethod::Quartet), 3).unwrap();
+    let ctx = vec![(1u32, 2u32), (3, 4), (5, 6), (7, 8)];
+    let x = model.features(&ctx);
+    let (_, cache) = model.layers[0].forward(
+        &x,
+        ctx.len(),
+        TrainMethod::Quartet,
+        &ScalarBackend,
+        &mut quartet::util::rng::Rng::new(1),
+    );
+    let mask = cache.mask_x.expect("quest forward must carry a trust mask");
+    let total = ctx.len() * model.layers[0].d_in;
+    let kept: u32 = mask.iter().map(|w| w.count_ones()).sum();
+    assert!(
+        kept as usize >= total * 9 / 10,
+        "trust mask gates too much: {kept}/{total}"
+    );
+}
