@@ -30,6 +30,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{anyhow, Result};
 
+use crate::quant::e2m1::byte_decode_lut;
 use crate::quant::hadamard::BlockHadamard;
 use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode};
 use crate::util::rng::Rng;
@@ -81,6 +82,43 @@ pub trait Backend: Send + Sync {
         k: usize,
         mask: Option<&[u64]>,
     ) -> Vec<f32>;
+
+    /// Decode a packed MXFP4 tensor to dense row-major f32 with the group
+    /// scales folded — the same values [`Mxfp4Tensor::dequantize`] yields,
+    /// through the GEMM LUT path. This is the *decode-once* hook behind
+    /// `serve::PackedWeightCache`: each deployed weight tile is decoded a
+    /// single time at engine build and every subsequent step's GEMM runs
+    /// against the shared decoded rows via [`Backend::gemm_mxfp4_predec`],
+    /// instead of re-decoding the tile inside every call. Implementations
+    /// must be bit-identical to the scalar reference (decode is pure
+    /// element-wise work, so partitioning cannot reassociate anything).
+    fn decode_mxfp4(&self, t: &Mxfp4Tensor) -> Vec<f32> {
+        let lut = byte_decode_lut();
+        let mut out = vec![0.0f32; t.rows * t.cols];
+        scalar::decode_rows(t, &lut, &mut out);
+        out
+    }
+
+    /// C = A · Bᵀ where B (`[n, k]` row-major, k = `a.cols`) was decoded
+    /// once by [`Backend::decode_mxfp4`]. Must be bit-identical to
+    /// `gemm_mxfp4(a, b_packed)` whenever `b_dec == decode_mxfp4(b_packed)`
+    /// — the decode moves out of the step loop, the arithmetic does not
+    /// change (same per-dot accumulation order).
+    fn gemm_mxfp4_predec(&self, a: &Mxfp4Tensor, b_dec: &[f32], n: usize) -> Vec<f32> {
+        let (m, k) = (a.rows, a.cols);
+        assert_eq!(b_dec.len(), n * k, "decoded B shape mismatch");
+        let lut = byte_decode_lut();
+        let mut a_dec = vec![0.0f32; m * k];
+        scalar::decode_rows(a, &lut, &mut a_dec);
+        let mut c = vec![0.0f32; m * n];
+        for j in 0..n {
+            let rb = &b_dec[j * k..(j + 1) * k];
+            for i in 0..m {
+                c[i * n + j] = scalar::dot_f32(&a_dec[i * k..(i + 1) * k], rb);
+            }
+        }
+        c
+    }
 
     /// Apply H_g to each contiguous g-group along the last axis, in place.
     fn block_hadamard(&self, data: &mut [f32], g: usize);

@@ -261,6 +261,72 @@ impl Backend for ParallelBackend {
         c
     }
 
+    fn decode_mxfp4(&self, t: &Mxfp4Tensor) -> Vec<f32> {
+        let (rows, k) = (t.rows, t.cols);
+        let mut out = vec![0.0f32; rows * k];
+        let threads = self.pool_size().min(rows.max(1));
+        let lut = byte_decode_lut();
+        if threads <= 1 || rows * k < SMALL_WORK {
+            scalar::decode_rows(t, &lut, &mut out);
+            return out;
+        }
+        let rows_per = (rows + threads - 1) / threads;
+        std::thread::scope(|s| {
+            for (ci, chunk) in out.chunks_mut(rows_per * k).enumerate() {
+                let r0 = ci * rows_per;
+                let lut = &lut;
+                s.spawn(move || {
+                    for (i, row) in chunk.chunks_mut(k).enumerate() {
+                        scalar::decode_row(t, r0 + i, lut, row);
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    fn gemm_mxfp4_predec(&self, a: &Mxfp4Tensor, b_dec: &[f32], n: usize) -> Vec<f32> {
+        let (m, k) = (a.rows, a.cols);
+        assert_eq!(b_dec.len(), n * k, "decoded B shape mismatch");
+        let threads = self.pool_size().min(m.max(1));
+        if threads <= 1 || m * n * k < SMALL_WORK {
+            // scalar reference path — bit-identical, so unobservable
+            return ScalarBackend.gemm_mxfp4_predec(a, b_dec, n);
+        }
+        let lut = byte_decode_lut();
+        let rows_per = (m + threads - 1) / threads;
+
+        // one fused scope per call: each worker decodes its own A rows
+        // (B needs no decode at all — the weight cache already staged it)
+        // and immediately contracts them, since C chunk i reads only A
+        // chunk i; this is a per-decode-step hot path, so the fixed
+        // thread-spawn cost is paid once, not twice
+        let mut a_dec = vec![0.0f32; m * k];
+        let mut c = vec![0.0f32; m * n];
+        std::thread::scope(|s| {
+            for (ci, (a_chunk, c_chunk)) in a_dec
+                .chunks_mut(rows_per * k)
+                .zip(c.chunks_mut(rows_per * n))
+                .enumerate()
+            {
+                let r0 = ci * rows_per;
+                let lut = &lut;
+                s.spawn(move || {
+                    for (i, out) in a_chunk.chunks_mut(k).enumerate() {
+                        scalar::decode_row(a, r0 + i, lut, out);
+                    }
+                    for (i, c_row) in c_chunk.chunks_mut(n).enumerate() {
+                        let ra = &a_chunk[i * k..(i + 1) * k];
+                        for (j, out) in c_row.iter_mut().enumerate() {
+                            *out = scalar::dot_f32(ra, &b_dec[j * k..(j + 1) * k]);
+                        }
+                    }
+                });
+            }
+        });
+        c
+    }
+
     fn gemm_f32(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
         let threads = self.pool_size().min(m.max(1));
         if threads <= 1 || m * n * k < SMALL_WORK {

@@ -39,10 +39,12 @@
 //!                     language model, Adam, and a training loop that
 //!                     emits run records and servable checkpoints — no
 //!                     PJRT required.
-//! * [`serve`]       — batched prefill engines (Fig 6): the pure-Rust
-//!                     CPU engine over [`kernels`] serving native trained
-//!                     checkpoints, plus the PJRT one under the `xla`
-//!                     feature.
+//! * [`serve`]       — the serving subsystem (Fig 6, `repro serve`):
+//!                     deploy-once `PackedWeightCache`, the
+//!                     continuous-batching autoregressive `ServeEngine`
+//!                     (sampling, stop conditions, Poisson traces,
+//!                     latency percentiles), the batched CPU prefill
+//!                     engine, plus the PJRT one under the `xla` feature.
 //! * [`bench`]       — shared experiment harness used by `benches/*`.
 //!
 //! The PJRT execution paths (~37 `xla::` call sites) are compiled only

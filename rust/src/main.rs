@@ -6,7 +6,10 @@
 //!               [--checkpoint ckpt.json] [--out runs]    # pure Rust
 //! repro train   --artifact n80k-quartet --steps 200 [--lr 2e-3] [--seed 0]
 //! repro sweep   --preset reduced --out runs [--max-steps 4000]
-//! repro serve   --artifact n330k-quartet --requests 256
+//! repro serve   [--checkpoint ckpt.json] --method quartet [--max-batch 8]
+//!               [--requests 64] [--rate 40] [--trace trace.json]
+//!               [--temperature 0.8] [--out runs]   # native, pure Rust
+//! repro serve   --artifact n330k-quartet --requests 256       # PJRT
 //! repro regions [--paper]             # Fig 1(b,c) optimality maps
 //! repro table2                        # error-bias statistics
 //! repro kernels [--m 256 --n 11008 --k 4096]   # backend speedup check
@@ -15,9 +18,11 @@
 //! Every subcommand honours the global `--backend scalar|parallel` flag
 //! (or the `QUARTET_BACKEND` env var) selecting the kernels backend.
 //! `train --native` runs the pure-Rust Quartet trainer (no PJRT; method
-//! axis `f32|mxfp8|quartet|rtn`); artifact-based `train`/`sweep`/`serve`/
-//! `info` execute through PJRT and need `--features xla`; the rest are
-//! pure Rust.
+//! axis `f32|mxfp8|quartet|rtn`) and `serve` without `--artifact` runs
+//! the native continuous-batching engine (serve method axis
+//! `f32|mxfp8|quartet`); artifact-based `train`/`sweep`/`serve`/`info`
+//! execute through PJRT and need `--features xla`; the rest are pure
+//! Rust.
 
 use anyhow::{bail, Result};
 
@@ -52,6 +57,8 @@ fn main() -> Result<()> {
         None => {
             println!("usage: repro <info|train|sweep|serve|regions|table2|kernels> [flags]");
             println!("       repro train --native --method f32|mxfp8|quartet|rtn  (pure Rust)");
+            println!("       repro serve --method f32|mxfp8|quartet [--checkpoint ckpt.json]");
+            println!("                   [--trace t.json | --requests N --rate r]  (pure Rust)");
             println!("global: --backend scalar|parallel (or QUARTET_BACKEND env)");
             println!("see README.md for the full command reference");
             Ok(())
@@ -244,16 +251,125 @@ fn cmd_sweep(_args: &mut Args) -> Result<()> {
     no_xla("sweep")
 }
 
-#[cfg(feature = "xla")]
+/// `serve` front door: with `--artifact` the PJRT prefill engine (xla
+/// feature); otherwise the native continuous-batching autoregressive
+/// engine over a trained checkpoint (or fresh weights).
 fn cmd_serve(args: &mut Args) -> Result<()> {
+    match args.get("artifact") {
+        Some(artifact) => cmd_serve_xla(args, &artifact),
+        None => cmd_serve_native(args),
+    }
+}
+
+/// Native serving: checkpoint → [`quartet::serve::PackedWeightCache`]
+/// (weights prepared exactly once) → `ServeEngine` autoregressive decode
+/// with admission/eviction between steps. Requests come from a JSON trace
+/// (`--trace`) or a synthetic Poisson workload (`--requests`/`--rate`).
+fn cmd_serve_native(args: &mut Args) -> Result<()> {
+    use quartet::serve::{
+        load_trace, synth_requests, PackedWeightCache, Sampling, ServeEngine, ServeMethod,
+        ServeRecord, SynthOptions,
+    };
+    use quartet::train::{MlpLm, ModelConfig, TrainMethod};
+
+    let method = ServeMethod::parse(&args.str_or("method", "quartet"))?;
+    let max_batch = args.parse_or("max-batch", 8usize)?;
+    if max_batch == 0 {
+        bail!("--max-batch must be positive");
+    }
+    let max_new = args.parse_or("max-new-tokens", 32usize)?;
+    let temperature = args.parse_or("temperature", 0.0f32)?;
+    let seed = args.parse_or("seed", 0u64)?;
+    let n_requests = args.parse_or("requests", 64usize)?;
+    let prompt_len = args.parse_or("prompt-len", 8usize)?;
+    let rate = args.parse_or("rate", 0.0f64)?;
+    let stop_token = args.parse_opt::<i32>("stop-token")?;
+    let steps_cap = args.parse_opt::<usize>("steps")?;
+    let ckpt = args.get("checkpoint").map(PathBuf::from);
+    let trace_path = args.get("trace").map(PathBuf::from);
+    let out = args.get("out").map(PathBuf::from);
+    // fresh-weights shape, ignored when --checkpoint is given
+    let vocab = args.parse_or("vocab", 256usize)?;
+    let d_emb = args.parse_or("d-emb", 32usize)?;
+    let d_hidden = args.parse_or("d-hidden", 128usize)?;
+    let n_hidden = args.parse_or("n-hidden", 1usize)?;
+    args.finish()?;
+
+    let model = match &ckpt {
+        Some(p) => MlpLm::load(p)?,
+        None => MlpLm::init(
+            ModelConfig { vocab, d_emb, d_hidden, n_hidden, method: TrainMethod::Quartet },
+            seed,
+        )?,
+    };
+    let backend = quartet::kernels::backend_from_name(quartet::kernels::active().name())?;
+    let cache = PackedWeightCache::build(&model, method, &*backend);
+    let mut eng = ServeEngine::new(cache, backend, max_batch, Sampling { temperature, seed });
+
+    let reqs = match &trace_path {
+        Some(p) => load_trace(p)?,
+        None => synth_requests(&SynthOptions {
+            n: n_requests,
+            vocab: model.cfg.vocab,
+            prompt_len,
+            max_new_tokens: max_new,
+            vary_lengths: true,
+            rate,
+            stop_token,
+            seed,
+        }),
+    };
+    let submitted = reqs.len();
+    for r in reqs {
+        eng.submit(r)?;
+    }
+    let report = eng.run(steps_cap)?;
+    println!(
+        "served {}/{} requests [{} {} max_batch={}]: {} tokens, {:.0} tok/s decode \
+         ({:.3}s busy / {:.3}s wall, {} steps)",
+        report.completions.len(),
+        submitted,
+        method.name(),
+        eng.backend_name(),
+        max_batch,
+        report.generated_tokens,
+        report.tokens_per_sec(),
+        report.busy_s,
+        report.wall_s,
+        report.decode_steps
+    );
+    let [l50, l90, l99] = report.latency_percentiles();
+    let [t50, t90, t99] = report.ttft_percentiles();
+    println!(
+        "latency p50/p90/p99: {l50:.4}/{l90:.4}/{l99:.4} s   \
+         ttft p50/p90/p99: {t50:.4}/{t90:.4}/{t99:.4} s"
+    );
+    if let Some(dir) = out {
+        let rec = ServeRecord::from_report(
+            "repro_serve",
+            "continuous",
+            method.name(),
+            eng.backend_name(),
+            max_batch,
+            max_batch,
+            submitted,
+            &report,
+        );
+        let path = rec.save(&dir)?;
+        println!("record: {}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn cmd_serve_xla(args: &mut Args, artifact: &str) -> Result<()> {
     let root = artifacts_root(args);
-    let artifact = args.required("artifact")?;
     let n_requests = args.parse_or("requests", 64usize)?;
     let seed = args.parse_or("seed", 0u64)?;
     args.finish()?;
 
     let engine = Engine::cpu()?;
-    let art = engine.load_named(&root, &artifact)?;
+    let art = engine.load_named(&root, artifact)?;
     let mut eng = quartet::serve::PrefillEngine::new(&art, seed)?;
     let mut rng = quartet::util::rng::Rng::new(seed);
     let vocab = art.manifest.model.vocab;
@@ -274,8 +390,8 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "xla"))]
-fn cmd_serve(_args: &mut Args) -> Result<()> {
-    no_xla("serve")
+fn cmd_serve_xla(_args: &mut Args, _artifact: &str) -> Result<()> {
+    no_xla("serve --artifact (the native `repro serve` needs no XLA)")
 }
 
 fn cmd_regions(args: &mut Args) -> Result<()> {

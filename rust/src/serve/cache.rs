@@ -1,0 +1,334 @@
+//! `PackedWeightCache` — deploy-once weight preparation, shared across
+//! requests, decode steps and engines.
+//!
+//! The historical `CpuPrefillEngine` kept packed MXFP4 weights but let
+//! `gemm_mxfp4` re-decode every tile inside every step; related FP4 work
+//! ("FP4 All the Way", NVFP4 pretraining) is explicit that the serving
+//! path only realizes the format's throughput win if weights are staged
+//! once and stay resident. This cache quantizes each linear layer into
+//! its deployed form a single time at build — packed MXFP4 tiles plus the
+//! decode-once rows from [`Backend::decode_mxfp4`] for the `quartet`
+//! method, FP8 quant-dequant rows for `mxfp8`, raw rows for `f32` — and
+//! hands shared references (`Arc`) to every engine. A prep-pass counter
+//! makes "weights are prepared once per cache, never per step" a testable
+//! regression invariant instead of folklore.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::kernels::Backend;
+use crate::quant::fp8::mxfp8_rtn;
+use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::train::model::{relu, write_pair_features};
+use crate::train::MlpLm;
+use crate::util::rng::Rng;
+
+/// Serving precision — the method axis of `repro serve` and the fig6
+/// bench. Distinct from [`crate::train::TrainMethod`]: serving never runs
+/// a backward pass, so the deployed forms are simpler (RTN instead of
+/// QuEST, no trust masks, no SR).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMethod {
+    /// Raw f32 weights and activations (the bf16 stand-in baseline).
+    F32,
+    /// MXFP8 (E4M3 + E8M0 group scale) quant-dequant: weights once at
+    /// build, activations per step; dense f32 GEMM carrier.
+    Mxfp8,
+    /// Deployed Quartet FP4: fixed block Hadamard + RTN MXFP4 packed
+    /// weights (the checkpoint form), Hadamard + RTN packed activations,
+    /// block-scaled GEMM against the decode-once weight rows.
+    Quartet,
+}
+
+impl ServeMethod {
+    pub const ALL: [ServeMethod; 3] =
+        [ServeMethod::F32, ServeMethod::Mxfp8, ServeMethod::Quartet];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeMethod::F32 => "f32",
+            ServeMethod::Mxfp8 => "mxfp8",
+            ServeMethod::Quartet => "quartet",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ServeMethod> {
+        match s {
+            "f32" => Ok(ServeMethod::F32),
+            "mxfp8" => Ok(ServeMethod::Mxfp8),
+            "quartet" => Ok(ServeMethod::Quartet),
+            other => Err(anyhow!(
+                "unknown serve method {other:?} (expected f32|mxfp8|quartet)"
+            )),
+        }
+    }
+}
+
+/// One deployed linear layer (`[d_out, d_in]`), prepared once at build.
+enum PreparedLayer {
+    /// raw f32 rows
+    F32 { w: Vec<f32> },
+    /// FP8 quant-dequantized rows (dense f32 carrier)
+    Mxfp8 { w: Vec<f32> },
+    /// packed Hadamard-space MXFP4 checkpoint form + its decode-once rows
+    Quartet { packed: Mxfp4Tensor, dec: Vec<f32> },
+}
+
+/// Deploy-once weight store for the native MLP LM: embeddings in f32,
+/// every linear prepared under one [`ServeMethod`]. Shared via `Arc`
+/// between the prefill and autoregressive engines — and across every
+/// request and decode step inside them.
+pub struct PackedWeightCache {
+    method: ServeMethod,
+    pub vocab: usize,
+    pub d_emb: usize,
+    pub d_hidden: usize,
+    pub n_hidden: usize,
+    tok_emb: Vec<f32>,
+    layers: Vec<PreparedLayer>,
+    /// (d_out, d_in) per layer, input → output order
+    dims: Vec<(usize, usize)>,
+    /// per-layer preparation passes executed — must equal `n_layers()`
+    /// after build and never move again (the prep-once regression hook)
+    prep_passes: AtomicUsize,
+}
+
+impl PackedWeightCache {
+    /// Prepare every layer of `model` for serving under `method`. This is
+    /// the only place weight quantization or decoding happens; engines
+    /// built on the returned cache do zero weight prep per step.
+    pub fn build(model: &MlpLm, method: ServeMethod, be: &dyn Backend) -> Arc<PackedWeightCache> {
+        let prep_passes = AtomicUsize::new(0);
+        // RTN draws nothing from the RNG; the argument only satisfies the
+        // quantize signature
+        let mut rng = Rng::new(0);
+        let layers = model
+            .layers
+            .iter()
+            .map(|l| {
+                prep_passes.fetch_add(1, Ordering::Relaxed);
+                match method {
+                    ServeMethod::F32 => PreparedLayer::F32 { w: l.w.clone() },
+                    ServeMethod::Mxfp8 => PreparedLayer::Mxfp8 { w: mxfp8_rtn(&l.w) },
+                    ServeMethod::Quartet => {
+                        let mut wh = l.w.clone();
+                        be.block_hadamard(&mut wh, MX_GROUP);
+                        let packed =
+                            be.quantize_mxfp4(&wh, l.d_out, l.d_in, QuantMode::Rtn, &mut rng);
+                        let dec = be.decode_mxfp4(&packed);
+                        PreparedLayer::Quartet { packed, dec }
+                    }
+                }
+            })
+            .collect();
+        Arc::new(PackedWeightCache {
+            method,
+            vocab: model.cfg.vocab,
+            d_emb: model.cfg.d_emb,
+            d_hidden: model.cfg.d_hidden,
+            n_hidden: model.cfg.n_hidden,
+            tok_emb: model.tok_emb.clone(),
+            layers,
+            dims: model.cfg.layer_dims(),
+            prep_passes,
+        })
+    }
+
+    pub fn method(&self) -> ServeMethod {
+        self.method
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn tok_emb(&self) -> &[f32] {
+        &self.tok_emb
+    }
+
+    /// Weight preparation passes executed so far. The invariant engines
+    /// must keep: equal to [`PackedWeightCache::n_layers`] right after
+    /// [`PackedWeightCache::build`], and unchanged forever after — steps
+    /// serve from the cache, they never re-quantize or re-decode.
+    pub fn prep_passes(&self) -> usize {
+        self.prep_passes.load(Ordering::Relaxed)
+    }
+
+    /// Bytes the deployed weights occupy (quartet: packed nibbles +
+    /// scales, i.e. real checkpoint traffic; dense methods: 4 bytes per
+    /// value).
+    pub fn weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                PreparedLayer::F32 { w } | PreparedLayer::Mxfp8 { w } => w.len() * 4,
+                PreparedLayer::Quartet { packed, .. } => packed.storage_bytes(),
+            })
+            .sum()
+    }
+
+    /// Write the order-2 feature row for the context `(prev2, prev)` —
+    /// the exact layout the checkpoint was trained with
+    /// (`train::model::write_pair_features`), so serving can never drift
+    /// from training.
+    pub fn write_features(&self, prev2: i32, prev: i32, dst: &mut [f32]) {
+        write_pair_features(
+            &self.tok_emb,
+            self.d_emb,
+            self.vocab,
+            prev2 as usize,
+            prev as usize,
+            dst,
+        );
+    }
+
+    /// Apply layer `li` to owned `[rows, d_in]` activations under the
+    /// serving precision; returns `[rows, d_out]`. Weight-side prep was
+    /// all done at build — only the activation path runs per call, and it
+    /// takes the buffer by value so the packed path's in-place Hadamard
+    /// never copies on the decode-step hot loop.
+    pub fn layer_forward(
+        &self,
+        li: usize,
+        x: Vec<f32>,
+        rows: usize,
+        be: &dyn Backend,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
+        let (d_out, d_in) = self.dims[li];
+        debug_assert_eq!(x.len(), rows * d_in);
+        match &self.layers[li] {
+            PreparedLayer::F32 { w } => be.gemm_f32(&x, w, rows, d_out, d_in),
+            PreparedLayer::Mxfp8 { w } => {
+                let xq = mxfp8_rtn(&x);
+                be.gemm_f32(&xq, w, rows, d_out, d_in)
+            }
+            PreparedLayer::Quartet { dec, .. } => {
+                let mut xh = x;
+                be.block_hadamard(&mut xh, MX_GROUP);
+                let xq = be.quantize_mxfp4(&xh, rows, d_in, QuantMode::Rtn, rng);
+                be.gemm_mxfp4_predec(&xq, dec, d_out)
+            }
+        }
+    }
+
+    /// The hidden stack only (every layer but the vocab projection), ReLU
+    /// between layers — prefill runs this over all positions and projects
+    /// just the last one.
+    pub fn hidden_forward(
+        &self,
+        feats: Vec<f32>,
+        rows: usize,
+        be: &dyn Backend,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
+        let mut x = feats;
+        for li in 0..self.layers.len() - 1 {
+            x = self.layer_forward(li, x, rows, be, rng);
+            relu(&mut x);
+        }
+        x
+    }
+
+    /// Full next-token readout for `[rows, 2·d_emb]` feature rows: hidden
+    /// stack, then the vocab projection — the per-decode-step forward the
+    /// autoregressive engine batches across requests.
+    pub fn forward(
+        &self,
+        feats: Vec<f32>,
+        rows: usize,
+        be: &dyn Backend,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
+        let x = self.hidden_forward(feats, rows, be, rng);
+        self.layer_forward(self.layers.len() - 1, x, rows, be, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{ParallelBackend, ScalarBackend};
+    use crate::train::{ModelConfig, TrainMethod};
+
+    fn model() -> MlpLm {
+        let cfg = ModelConfig {
+            vocab: 96,
+            d_emb: 16,
+            d_hidden: 64,
+            n_hidden: 1,
+            method: TrainMethod::Quartet,
+        };
+        MlpLm::init(cfg, 11).unwrap()
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in ServeMethod::ALL {
+            assert_eq!(ServeMethod::parse(m.name()).unwrap(), m);
+        }
+        assert!(ServeMethod::parse("rtn").is_err());
+    }
+
+    #[test]
+    fn build_preps_each_layer_exactly_once() {
+        let m = model();
+        for method in ServeMethod::ALL {
+            let cache = PackedWeightCache::build(&m, method, &ScalarBackend);
+            assert_eq!(cache.n_layers(), 3); // input + 1 hidden + vocab
+            assert_eq!(cache.prep_passes(), 3, "{}", method.name());
+        }
+    }
+
+    #[test]
+    fn forward_is_backend_invariant_and_prep_free() {
+        let m = model();
+        let mut outs = Vec::new();
+        for method in ServeMethod::ALL {
+            for (slot, be) in [
+                Box::new(ScalarBackend) as Box<dyn Backend>,
+                Box::new(ParallelBackend::with_threads(3)),
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                let cache = PackedWeightCache::build(&m, method, &*be);
+                let mut rng = Rng::new(4);
+                let rows = 5;
+                let mut feats = vec![0.0f32; rows * 2 * cache.d_emb];
+                for (r, chunk) in feats.chunks_mut(2 * cache.d_emb).enumerate() {
+                    cache.write_features(r as i32, (r + 1) as i32, chunk);
+                }
+                let logits = cache.forward(feats, rows, &*be, &mut rng);
+                assert_eq!(logits.len(), rows * cache.vocab);
+                assert_eq!(cache.prep_passes(), cache.n_layers(), "forward re-prepped");
+                if slot == 0 {
+                    outs.push(logits);
+                } else {
+                    assert_eq!(
+                        outs.last().unwrap(),
+                        &logits,
+                        "{}: backends disagree",
+                        method.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quartet_bytes_are_packed_fp4() {
+        let m = model();
+        let q = PackedWeightCache::build(&m, ServeMethod::Quartet, &ScalarBackend);
+        let f = PackedWeightCache::build(&m, ServeMethod::F32, &ScalarBackend);
+        // 4.25 bits/value vs 32: the packed deployment is ~7.5x smaller
+        assert!(
+            q.weight_bytes() * 7 < f.weight_bytes(),
+            "{} vs {}",
+            q.weight_bytes(),
+            f.weight_bytes()
+        );
+    }
+}

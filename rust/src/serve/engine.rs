@@ -1,0 +1,468 @@
+//! `ServeEngine` — autoregressive decode with continuous batching.
+//!
+//! The scheduler keeps up to `max_batch` requests *active*; between decode
+//! steps it evicts whatever finished (stop token sampled, or the request's
+//! `max_new_tokens` reached) and admits arrivals from the waiting queue
+//! into the freed slots. Short and long generations therefore share
+//! batches instead of barrier-syncing on the longest member — the naive
+//! baseline the fig6 bench races is exactly this engine at `max_batch = 1`.
+//!
+//! Every decode step runs ONE batched forward over the shared
+//! [`PackedWeightCache`] (weights were prepared at cache build; a step
+//! only quantizes its activation rows), so a step's cost scales with the
+//! number of active rows while the per-step fixed overheads — thread-scope
+//! setup, weight streaming — are amortized across the whole batch.
+//!
+//! Determinism contract: the forward is bit-identical across backends and
+//! thread counts (deterministic RTN path + decode-once GEMM), greedy
+//! readout is the NaN-safe argmax, and sampled decode draws from a
+//! per-request RNG stream derived from `(seed, request id)` — so the full
+//! token stream of every request is a pure function of (checkpoint,
+//! method, seed), independent of backend, thread count and batch
+//! composition. `tests/serve_engine.rs` pins all three independences.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::kernels::Backend;
+use crate::serve::argmax_logit;
+use crate::serve::cache::PackedWeightCache;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    /// prompt tokens; the order-2 model conditions on the last two (an
+    /// empty prompt starts from the zero-token pad, like training's
+    /// position 0)
+    pub prompt: Vec<i32>,
+    /// decode budget; 0 completes immediately at admission
+    pub max_new_tokens: usize,
+    /// generation stops as soon as this token is sampled (it is kept in
+    /// the output)
+    pub stop_token: Option<i32>,
+    /// virtual arrival time in seconds (0 = available immediately);
+    /// synthetic Poisson traces and replayed traces set this
+    pub arrival_s: f64,
+}
+
+impl GenRequest {
+    /// Immediate-arrival request with no stop token.
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> GenRequest {
+        GenRequest { id, prompt, max_new_tokens, stop_token: None, arrival_s: 0.0 }
+    }
+}
+
+/// Why a generation ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// hit `max_new_tokens`
+    Length,
+    /// sampled the request's stop token
+    Stop,
+}
+
+impl FinishReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+        }
+    }
+}
+
+/// A finished generation plus its latency accounting. All times are on the
+/// engine's virtual clock (compute wall time + idle jumps to the next
+/// arrival) and measured from the request's `arrival_s`.
+#[derive(Debug, Clone)]
+pub struct GenCompletion {
+    pub id: u64,
+    /// generated tokens, stop token (if any) included
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// arrival → admission into a decode slot
+    pub queue_s: f64,
+    /// arrival → first generated token
+    pub ttft_s: f64,
+    /// arrival → completion
+    pub latency_s: f64,
+}
+
+/// Sampling policy. `temperature == 0` is greedy argmax; `> 0` draws from
+/// `softmax(logits / temperature)` on the per-request stream seeded by
+/// `(seed, request id)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Sampling {
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Sampling {
+    pub fn greedy() -> Sampling {
+        Sampling { temperature: 0.0, seed: 0 }
+    }
+}
+
+/// One active decode slot.
+struct Slot {
+    req: GenRequest,
+    prev2: i32,
+    prev: i32,
+    generated: Vec<i32>,
+    rng: Rng,
+    admitted_s: f64,
+    first_token_s: Option<f64>,
+}
+
+/// Continuous-batching autoregressive engine over a shared weight cache.
+pub struct ServeEngine {
+    backend: Box<dyn Backend>,
+    cache: Arc<PackedWeightCache>,
+    pub max_batch: usize,
+    sampling: Sampling,
+    /// not-yet-arrived requests, sorted by (arrival_s, id)
+    future: VecDeque<GenRequest>,
+    /// arrived, waiting for a free slot (FIFO)
+    waiting: VecDeque<GenRequest>,
+    active: Vec<Slot>,
+    clock_s: f64,
+    busy_s: f64,
+    steps: usize,
+    generated_tokens: usize,
+}
+
+impl ServeEngine {
+    pub fn new(
+        cache: Arc<PackedWeightCache>,
+        backend: Box<dyn Backend>,
+        max_batch: usize,
+        sampling: Sampling,
+    ) -> ServeEngine {
+        assert!(max_batch > 0, "max_batch must be positive");
+        ServeEngine {
+            backend,
+            cache,
+            max_batch,
+            sampling,
+            future: VecDeque::new(),
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            clock_s: 0.0,
+            busy_s: 0.0,
+            steps: 0,
+            generated_tokens: 0,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn cache(&self) -> &PackedWeightCache {
+        &self.cache
+    }
+
+    /// Queue a request. Prompt tokens are validated against the model's
+    /// vocab up front so a malformed request fails loudly at submission,
+    /// not silently mid-batch.
+    pub fn submit(&mut self, req: GenRequest) -> Result<()> {
+        let vocab = self.cache.vocab as i32;
+        if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t >= vocab) {
+            bail!("request {}: prompt token {t} outside vocab 0..{vocab}", req.id);
+        }
+        if req.arrival_s <= self.clock_s {
+            self.waiting.push_back(req);
+        } else {
+            let pos = self
+                .future
+                .partition_point(|r| (r.arrival_s, r.id) <= (req.arrival_s, req.id));
+            self.future.insert(pos, req);
+        }
+        Ok(())
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn future_len(&self) -> usize {
+        self.future.len()
+    }
+
+    /// Anything left to do (active, arrived, or yet to arrive)?
+    pub fn has_work(&self) -> bool {
+        !self.active.is_empty() || !self.waiting.is_empty() || !self.future.is_empty()
+    }
+
+    /// Virtual clock (seconds since the engine started).
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Move matured arrivals into the waiting queue and fill free slots.
+    /// Returns completions produced *at admission* (zero-budget requests).
+    fn admit(&mut self) -> Vec<GenCompletion> {
+        while let Some(r) = self.future.front() {
+            if r.arrival_s > self.clock_s {
+                break;
+            }
+            let r = self.future.pop_front().expect("front checked");
+            self.waiting.push_back(r);
+        }
+        let mut done = Vec::new();
+        while self.active.len() < self.max_batch {
+            let Some(req) = self.waiting.pop_front() else { break };
+            let wait = (self.clock_s - req.arrival_s).max(0.0);
+            if req.max_new_tokens == 0 {
+                done.push(GenCompletion {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    finish: FinishReason::Length,
+                    queue_s: wait,
+                    ttft_s: wait,
+                    latency_s: wait,
+                });
+                continue;
+            }
+            let (prev2, prev) = match req.prompt.len() {
+                0 => (0, 0),
+                1 => (0, req.prompt[0]),
+                n => (req.prompt[n - 2], req.prompt[n - 1]),
+            };
+            let rng = Rng::new(self.sampling.seed).fold(req.id);
+            self.active.push(Slot {
+                prev2,
+                prev,
+                generated: Vec::new(),
+                rng,
+                admitted_s: self.clock_s,
+                first_token_s: None,
+                req,
+            });
+        }
+        done
+    }
+
+    /// One continuous-batching decode step: admit arrivals into free
+    /// slots, run a single batched forward over every active request,
+    /// sample one token each, evict the finished. Returns the completions
+    /// this step produced (possibly none).
+    pub fn decode_step(&mut self) -> Result<Vec<GenCompletion>> {
+        let mut done = self.admit();
+        if self.active.is_empty() {
+            // idle: jump the virtual clock to the next arrival, if any
+            if let Some(next) = self.future.front().map(|r| r.arrival_s) {
+                self.clock_s = self.clock_s.max(next);
+                done.extend(self.admit());
+            }
+            if self.active.is_empty() {
+                // same ordering contract as the main exit below
+                done.sort_by_key(|c| c.id);
+                return Ok(done);
+            }
+        }
+
+        let n = self.active.len();
+        let d_in = 2 * self.cache.d_emb;
+        let vocab = self.cache.vocab;
+
+        let t0 = Instant::now();
+        let mut x = vec![0.0f32; n * d_in];
+        for (i, slot) in self.active.iter().enumerate() {
+            self.cache.write_features(slot.prev2, slot.prev, &mut x[i * d_in..(i + 1) * d_in]);
+        }
+        // the deployed forward is deterministic (RTN); the RNG argument
+        // only satisfies the quantize signature
+        let mut fwd_rng = Rng::new(0);
+        let logits = self.cache.forward(x, n, &*self.backend, &mut fwd_rng);
+        let dt = t0.elapsed().as_secs_f64();
+        self.clock_s += dt;
+        self.busy_s += dt;
+        self.steps += 1;
+
+        // sample one token per slot; collect who finished and why
+        let temperature = self.sampling.temperature;
+        let now = self.clock_s;
+        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        for (i, slot) in self.active.iter_mut().enumerate() {
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            let tok = if temperature > 0.0 {
+                sample_softmax(row, temperature, &mut slot.rng)
+            } else {
+                argmax_logit(row)
+            };
+            slot.first_token_s.get_or_insert(now);
+            slot.generated.push(tok);
+            slot.prev2 = slot.prev;
+            slot.prev = tok;
+            self.generated_tokens += 1;
+            if slot.req.stop_token == Some(tok) {
+                finished.push((i, FinishReason::Stop));
+            } else if slot.generated.len() >= slot.req.max_new_tokens {
+                finished.push((i, FinishReason::Length));
+            }
+        }
+        // evict back-to-front so the collected indices stay valid
+        for &(i, finish) in finished.iter().rev() {
+            let slot = self.active.remove(i);
+            done.push(complete(slot, finish, now));
+        }
+        // continuous batching: freed slots refill *now*, not at the next
+        // step's prologue — a waiter never idles behind an empty slot
+        done.extend(self.admit());
+        // restore submission order among this step's completions
+        done.sort_by_key(|c| c.id);
+        Ok(done)
+    }
+
+    /// Drive the scheduler until every submitted request completes, or
+    /// `max_steps` decode steps have run (the CI smoke cap). Returns the
+    /// aggregated report; a capped run reports whatever finished. The
+    /// counters are per-call deltas, so a capped run can be resumed with
+    /// another `run` and each report describes exactly its own work
+    /// (`wall_s` stays the absolute virtual clock the arrival times and
+    /// latency percentiles are measured on).
+    pub fn run(&mut self, max_steps: Option<usize>) -> Result<ServeReport> {
+        let (busy0, steps0, tokens0) = (self.busy_s, self.steps, self.generated_tokens);
+        let mut completions = Vec::new();
+        let mut left = max_steps.unwrap_or(usize::MAX);
+        while self.has_work() && left > 0 {
+            completions.extend(self.decode_step()?);
+            left -= 1;
+        }
+        Ok(ServeReport {
+            completions,
+            wall_s: self.clock_s,
+            busy_s: self.busy_s - busy0,
+            decode_steps: self.steps - steps0,
+            generated_tokens: self.generated_tokens - tokens0,
+        })
+    }
+}
+
+fn complete(slot: Slot, finish: FinishReason, now: f64) -> GenCompletion {
+    let arrival = slot.req.arrival_s;
+    GenCompletion {
+        id: slot.req.id,
+        tokens: slot.generated,
+        finish,
+        queue_s: (slot.admitted_s - arrival).max(0.0),
+        ttft_s: (slot.first_token_s.unwrap_or(now) - arrival).max(0.0),
+        latency_s: (now - arrival).max(0.0),
+    }
+}
+
+/// Draw one token from `softmax(logits / temperature)` via an f64 CDF
+/// walk on the request's own stream. Bit-identical across backends and
+/// batch compositions because the logits are. NaN logits get zero weight
+/// (mirroring the greedy readout's NaN skip).
+fn sample_softmax(row: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
+    let inv_t = 1.0 / temperature.max(1e-6) as f64;
+    let max = row
+        .iter()
+        .filter(|v| !v.is_nan())
+        .fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    if max == f32::NEG_INFINITY {
+        // empty or all-NaN/-inf row: degrade like the greedy readout
+        return 0;
+    }
+    if max.is_infinite() {
+        // a +inf logit holds all the probability mass — defer to greedy
+        // (the softmax weights would be inf - inf = NaN)
+        return argmax_logit(row);
+    }
+    let weights: Vec<f64> = row
+        .iter()
+        .map(|&l| if l.is_nan() { 0.0 } else { (((l - max) as f64) * inv_t).exp() })
+        .collect();
+    let z: f64 = weights.iter().sum();
+    let mut u = rng.uniform() * z;
+    for (j, w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return j as i32;
+        }
+    }
+    row.len().saturating_sub(1) as i32
+}
+
+/// Aggregate latency/throughput statistics of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completions: Vec<GenCompletion>,
+    /// virtual clock at the end of the run (idle gaps included)
+    pub wall_s: f64,
+    /// time spent inside decode steps
+    pub busy_s: f64,
+    pub decode_steps: usize,
+    pub generated_tokens: usize,
+}
+
+impl ServeReport {
+    /// Decode throughput over busy time (idle waits for arrivals are the
+    /// trace's property, not the engine's).
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.generated_tokens as f64 / self.busy_s.max(1e-12)
+    }
+
+    fn pct(&self, p: f64, f: impl Fn(&GenCompletion) -> f64) -> f64 {
+        let xs: Vec<f64> = self.completions.iter().map(f).collect();
+        percentile(&xs, p)
+    }
+
+    /// `[p50, p90, p99]` of arrival → completion latency.
+    pub fn latency_percentiles(&self) -> [f64; 3] {
+        [50.0, 90.0, 99.0].map(|p| self.pct(p, |c| c.latency_s))
+    }
+
+    /// `[p50, p90, p99]` of arrival → first token.
+    pub fn ttft_percentiles(&self) -> [f64; 3] {
+        [50.0, 90.0, 99.0].map(|p| self.pct(p, |c| c.ttft_s))
+    }
+
+    /// `[p50, p90, p99]` of arrival → admission.
+    pub fn queue_percentiles(&self) -> [f64; 3] {
+        [50.0, 90.0, 99.0].map(|p| self.pct(p, |c| c.queue_s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_softmax_is_deterministic_and_in_range() {
+        let row = [0.1f32, 2.0, -1.0, 0.5];
+        let a = sample_softmax(&row, 0.8, &mut Rng::new(3));
+        let b = sample_softmax(&row, 0.8, &mut Rng::new(3));
+        assert_eq!(a, b);
+        for seed in 0..50 {
+            let t = sample_softmax(&row, 1.0, &mut Rng::new(seed));
+            assert!((0..4).contains(&t));
+        }
+    }
+
+    #[test]
+    fn sample_softmax_low_temperature_is_greedy() {
+        let row = [0.1f32, 5.0, -1.0, 0.5];
+        for seed in 0..20 {
+            assert_eq!(sample_softmax(&row, 0.01, &mut Rng::new(seed)), 1);
+        }
+    }
+
+    #[test]
+    fn sample_softmax_survives_nan_rows() {
+        assert_eq!(sample_softmax(&[f32::NAN, f32::NAN], 1.0, &mut Rng::new(1)), 0);
+        let t = sample_softmax(&[f32::NAN, 3.0, f32::NEG_INFINITY], 1.0, &mut Rng::new(1));
+        assert_eq!(t, 1);
+    }
+}

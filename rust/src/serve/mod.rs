@@ -1,35 +1,47 @@
-//! Batched prefill serving engines (Fig 6 and the serving example).
+//! The serving subsystem (Fig 6 and `repro serve`): batched prefill plus
+//! continuous-batching autoregressive decode, all in the deployed
+//! low-precision format.
 //!
-//! Two fronts share the [`Request`]/[`Completion`] protocol:
+//! * [`cache::PackedWeightCache`] — deploy-once weight preparation under a
+//!   [`cache::ServeMethod`] (`f32` | `mxfp8` | `quartet`): each layer is
+//!   quantized into its checkpoint form and — for the packed FP4 path —
+//!   decoded exactly once through [`crate::kernels::Backend::decode_mxfp4`],
+//!   then shared (`Arc`) across every engine, request and step.
+//! * [`engine::ServeEngine`] — autoregressive decode with a
+//!   continuous-batching scheduler: per-request `max_new_tokens` / stop
+//!   tokens, greedy or seeded temperature sampling, admission/eviction
+//!   between decode steps so short and long generations share batches.
+//!   Token streams are bit-identical across backends, thread counts and
+//!   batch compositions.
+//! * [`trace`] — JSON request traces, synthetic Poisson workloads, and
+//!   the [`trace::ServeRecord`] JSON the fig6 bench emits.
+//! * [`CpuPrefillEngine`] — batched single-shot prefill over the same
+//!   cache (the Fig 6 prefill leg); serves trained checkpoints via
+//!   [`CpuPrefillEngine::from_checkpoint`].
+//! * [`PrefillEngine`] (`xla` feature) — the PJRT prefill front: FIFO
+//!   batches up to the artifact's compiled batch size.
 //!
-//! * [`CpuPrefillEngine`] — pure Rust, always available: batched prefill
-//!   over the native MLP language model, driven through the
-//!   [`crate::kernels::Backend`] layer (fixed Hadamard → RTN MXFP4
-//!   activations × weights quantized once at load, exactly like a
-//!   deployed MXFP4 checkpoint). It serves **trained checkpoints**
-//!   written by `repro train --native` / [`crate::train::MlpLm::save`]
-//!   via [`CpuPrefillEngine::from_checkpoint`], and random weights of the
-//!   same architecture for benchmarking ([`CpuPrefillEngine::new`]). It
-//!   is the measurable CPU stand-in for the Fig 6 serving curve and the
-//!   harness that lets backends race on an end-to-end serving workload.
-//! * [`PrefillEngine`] (`xla` feature) — the PJRT front: requests arrive
-//!   in a FIFO, the batcher groups up to the artifact's compiled batch
-//!   size (padding the tail), and each group runs one `forward` prefill.
-//!
-//! Latency/throughput are measured per batch; Fig 6 sweeps batch sizes.
-//! Tail batches compute only their own rows — a short final batch is not
-//! billed for padding work.
+//! Weight prep happens once per cache build, never per step — a counted,
+//! test-pinned invariant (`prep_passes`).
+
+pub mod cache;
+pub mod engine;
+pub mod trace;
 
 use std::collections::VecDeque;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::kernels::Backend;
-use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
 use crate::train::{MlpLm, ModelConfig, TrainMethod};
 use crate::util::rng::Rng;
+
+pub use cache::{PackedWeightCache, ServeMethod};
+pub use engine::{FinishReason, GenCompletion, GenRequest, Sampling, ServeEngine, ServeReport};
+pub use trace::{load_trace, parse_trace, synth_requests, ServeRecord, SynthOptions};
 
 #[cfg(feature = "xla")]
 use crate::coordinator::init::init_state;
@@ -44,7 +56,7 @@ pub struct Request {
     pub tokens: Vec<i32>,
 }
 
-/// Result of serving one request.
+/// Result of serving one prefill request.
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: u64,
@@ -71,7 +83,7 @@ pub(crate) fn argmax_logit(row: &[f32]) -> i32 {
 }
 
 // ---------------------------------------------------------------------------
-// CPU engine — kernels::Backend consumer, no PJRT
+// CPU prefill engine — kernels::Backend consumer, no PJRT
 // ---------------------------------------------------------------------------
 
 /// Shape of the CPU serving model (the native MLP architecture: token-pair
@@ -96,16 +108,12 @@ impl Default for CpuServeConfig {
 
 /// Batched prefill over the quantized MLP stack — the forward arithmetic
 /// of the paper's serving path (Hadamard → RTN quantize → block-scaled
-/// GEMM per layer), with weights quantized once at engine build.
+/// GEMM per layer), with all weight prep done once in the shared
+/// [`PackedWeightCache`] at engine build.
 pub struct CpuPrefillEngine {
     backend: Box<dyn Backend>,
     pub cfg: CpuServeConfig,
-    /// token embedding, `[vocab, d_emb]` row-major (f32, like the model)
-    tok_emb: Vec<f32>,
-    /// pre-quantized Hadamard-space weights: input layer
-    /// `[d_hidden, 2·d_emb]`, hidden layers `[d_hidden, d_hidden]`, and
-    /// the vocab projection `[vocab, d_hidden]` last
-    layers: Vec<Mxfp4Tensor>,
+    cache: Arc<PackedWeightCache>,
     queue: VecDeque<Request>,
 }
 
@@ -125,39 +133,35 @@ impl CpuPrefillEngine {
     }
 
     /// Deploy a trained model: Hadamard + RTN-quantize every linear once
-    /// (the MXFP4 checkpoint form), keep embeddings f32.
+    /// into the shared weight cache (the MXFP4 checkpoint form), keep
+    /// embeddings f32.
     pub fn from_model(
         model: &MlpLm,
         seq: usize,
         batch: usize,
         backend: Box<dyn Backend>,
     ) -> CpuPrefillEngine {
-        let mc = &model.cfg;
+        let cache = PackedWeightCache::build(model, ServeMethod::Quartet, &*backend);
+        Self::from_cache(cache, seq, batch, backend)
+    }
+
+    /// Serve an already-prepared weight cache — engines sharing a cache
+    /// never re-quantize or re-decode anything.
+    pub fn from_cache(
+        cache: Arc<PackedWeightCache>,
+        seq: usize,
+        batch: usize,
+        backend: Box<dyn Backend>,
+    ) -> CpuPrefillEngine {
         let cfg = CpuServeConfig {
-            d_emb: mc.d_emb,
-            d_hidden: mc.d_hidden,
-            n_hidden: mc.n_hidden,
+            d_emb: cache.d_emb,
+            d_hidden: cache.d_hidden,
+            n_hidden: cache.n_hidden,
             seq,
             batch,
-            vocab: mc.vocab,
+            vocab: cache.vocab,
         };
-        let mut rng = Rng::new(0);
-        let layers = model
-            .layers
-            .iter()
-            .map(|l| {
-                let mut wh = l.w.clone();
-                backend.block_hadamard(&mut wh, MX_GROUP);
-                backend.quantize_mxfp4(&wh, l.d_out, l.d_in, QuantMode::Rtn, &mut rng)
-            })
-            .collect();
-        CpuPrefillEngine {
-            backend,
-            cfg,
-            tok_emb: model.tok_emb.clone(),
-            layers,
-            queue: VecDeque::new(),
-        }
+        CpuPrefillEngine { backend, cfg, cache, queue: VecDeque::new() }
     }
 
     /// Load a `repro train --native` checkpoint and serve it.
@@ -175,6 +179,16 @@ impl CpuPrefillEngine {
         self.backend.name()
     }
 
+    /// The shared weight cache (prep-count inspection, cache sharing).
+    pub fn cache(&self) -> &PackedWeightCache {
+        &self.cache
+    }
+
+    /// Clone the cache handle to share with other engines.
+    pub fn shared_cache(&self) -> Arc<PackedWeightCache> {
+        self.cache.clone()
+    }
+
     pub fn submit(&mut self, req: Request) {
         self.queue.push_back(req);
     }
@@ -186,6 +200,8 @@ impl CpuPrefillEngine {
     /// Serve one batch from the queue; returns completions in submission
     /// order. A tail batch computes only `take·seq` rows — no padding
     /// work, so its latency reflects the requests it actually carries.
+    /// Weights come straight from the cache: zero per-step quantize or
+    /// decode on the weight side.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         if self.queue.is_empty() {
             return Ok(Vec::new());
@@ -197,8 +213,12 @@ impl CpuPrefillEngine {
         // the valid ones sharing its batch
         for r in self.queue.iter().take(take) {
             if r.tokens.len() != seq {
-                bail!("request {} has {} tokens, engine seq is {}", r.id,
-                      r.tokens.len(), seq);
+                bail!(
+                    "request {} has {} tokens, engine seq is {}",
+                    r.id,
+                    r.tokens.len(),
+                    seq
+                );
             }
         }
         let reqs: Vec<Request> = self.queue.drain(..take).collect();
@@ -212,30 +232,18 @@ impl CpuPrefillEngine {
         let mut x = vec![0.0f32; rows * d_in];
         for (i, r) in reqs.iter().enumerate() {
             for p in 0..seq {
-                let prev2 = if p == 0 { 0 } else { r.tokens[p - 1] as usize };
-                // layout shared with MlpLm::features — serving can never
-                // drift from the layout the checkpoint was trained with
-                crate::train::model::write_pair_features(
-                    &self.tok_emb,
-                    d_emb,
-                    vocab,
+                let prev2 = if p == 0 { 0 } else { r.tokens[p - 1] };
+                self.cache.write_features(
                     prev2,
-                    r.tokens[p] as usize,
+                    r.tokens[p],
                     &mut x[(i * seq + p) * d_in..(i * seq + p + 1) * d_in],
                 );
             }
         }
-        // hidden stack over every position (the prefill workload): fixed
-        // Hadamard, RTN activations, packed block-scaled GEMM, ReLU
+        // hidden stack over every position (the prefill workload); the
+        // deployed forward draws nothing from the RNG
         let mut rtn_rng = Rng::new(0);
-        let n_stack = self.layers.len() - 1;
-        for w in &self.layers[..n_stack] {
-            debug_assert_eq!(x.len(), rows * w.cols);
-            be.block_hadamard(&mut x, MX_GROUP);
-            let xq = be.quantize_mxfp4(&x, rows, w.cols, QuantMode::Rtn, &mut rtn_rng);
-            x = be.gemm_mxfp4(&xq, w);
-            crate::train::model::relu(&mut x);
-        }
+        let x = self.cache.hidden_forward(x, rows, be, &mut rtn_rng);
         // vocab projection at the last position only (next-token readout)
         let d_h = self.cfg.d_hidden;
         let mut last = vec![0.0f32; take * d_h];
@@ -243,10 +251,8 @@ impl CpuPrefillEngine {
             let src = ((i * seq) + seq - 1) * d_h;
             last[i * d_h..(i + 1) * d_h].copy_from_slice(&x[src..src + d_h]);
         }
-        let w_out = self.layers.last().expect("engine has layers");
-        be.block_hadamard(&mut last, MX_GROUP);
-        let lq = be.quantize_mxfp4(&last, take, d_h, QuantMode::Rtn, &mut rtn_rng);
-        let logits = be.gemm_mxfp4(&lq, w_out);
+        let logits =
+            self.cache.layer_forward(self.cache.n_layers() - 1, last, take, be, &mut rtn_rng);
         let latency = t0.elapsed().as_secs_f64();
 
         let mut done = Vec::with_capacity(take);
@@ -502,5 +508,45 @@ mod tests {
             outs.push(done.iter().map(|c| c.next_token).collect::<Vec<_>>());
         }
         assert_eq!(outs[0], outs[1]);
+    }
+
+    #[test]
+    fn weight_prep_runs_once_per_engine_not_per_step() {
+        // §regression for the historical per-call re-quantize/re-decode:
+        // building the engine prepares each layer exactly once; serving
+        // any number of batches must never touch the prep counter again.
+        let cfg = CpuServeConfig { batch: 2, seq: 8, ..small_cfg() };
+        let mut eng = CpuPrefillEngine::new(cfg.clone(), Box::new(ScalarBackend), 3);
+        let n_layers = eng.cache().n_layers();
+        assert_eq!(eng.cache().prep_passes(), n_layers, "prep happens at build");
+        for r in requests(7, cfg.seq, cfg.vocab, 5) {
+            eng.submit(r);
+        }
+        let mut steps = 0;
+        while eng.pending() > 0 {
+            eng.step().unwrap();
+            steps += 1;
+        }
+        assert_eq!(steps, 4); // 7 requests at batch 2
+        assert_eq!(
+            eng.cache().prep_passes(),
+            n_layers,
+            "stepping re-prepared weights"
+        );
+    }
+
+    #[test]
+    fn engines_can_share_one_cache_without_re_prep() {
+        let cfg = CpuServeConfig { batch: 2, seq: 8, ..small_cfg() };
+        let eng = CpuPrefillEngine::new(cfg, Box::new(ScalarBackend), 3);
+        let cache = eng.shared_cache();
+        let n_layers = cache.n_layers();
+        let mut second =
+            CpuPrefillEngine::from_cache(cache.clone(), 8, 2, Box::new(ScalarBackend));
+        for r in requests(3, 8, 128, 6) {
+            second.submit(r);
+        }
+        second.drain().unwrap();
+        assert_eq!(cache.prep_passes(), n_layers, "sharing must not re-prep");
     }
 }

@@ -1,0 +1,299 @@
+//! Request sources for `repro serve` — JSON trace replay and synthetic
+//! Poisson arrivals — plus [`ServeRecord`], the JSON measurement schema
+//! the `fig6_continuous_batching` bench emits (and CI uploads as a
+//! workflow artifact).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::serve::engine::{GenRequest, ServeReport};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Parse a request trace:
+///
+/// ```json
+/// {"requests": [
+///   {"id": 0, "prompt": [3, 7, 12], "max_new_tokens": 16,
+///    "arrival_s": 0.0, "stop_token": 5}
+/// ]}
+/// ```
+///
+/// `id` (defaults to the array index), `arrival_s` (0.0) and `stop_token`
+/// (none) are optional; `prompt` and `max_new_tokens` are required.
+pub fn parse_trace(text: &str) -> Result<Vec<GenRequest>> {
+    let j = Json::parse(text)?;
+    let arr = j
+        .req("requests")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("\"requests\" is not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (idx, r) in arr.iter().enumerate() {
+        let prompt = r
+            .req("prompt")
+            .with_context(|| format!("request {idx}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("request {idx}: prompt is not an array"))?
+            .iter()
+            .map(|t| {
+                t.as_f64()
+                    .map(|v| v as i32)
+                    .ok_or_else(|| anyhow!("request {idx}: non-numeric prompt token"))
+            })
+            .collect::<Result<Vec<i32>>>()?;
+        let max_new_tokens = r
+            .req("max_new_tokens")
+            .with_context(|| format!("request {idx}"))?
+            .as_usize()
+            .ok_or_else(|| anyhow!("request {idx}: bad max_new_tokens"))?;
+        out.push(GenRequest {
+            id: r.get("id").and_then(|v| v.as_usize()).unwrap_or(idx) as u64,
+            prompt,
+            max_new_tokens,
+            stop_token: r.get("stop_token").and_then(|v| v.as_f64()).map(|v| v as i32),
+            arrival_s: r.get("arrival_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        });
+    }
+    Ok(out)
+}
+
+pub fn load_trace(path: &Path) -> Result<Vec<GenRequest>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    parse_trace(&text).with_context(|| format!("parsing trace {}", path.display()))
+}
+
+/// Shape of a synthetic workload.
+#[derive(Debug, Clone)]
+pub struct SynthOptions {
+    pub n: usize,
+    pub vocab: usize,
+    pub prompt_len: usize,
+    /// decode budget; with `vary_lengths` each request draws uniformly
+    /// from `[1, max_new_tokens]` — the mixed short/long workload
+    /// continuous batching exists for
+    pub max_new_tokens: usize,
+    pub vary_lengths: bool,
+    /// Poisson arrival rate in requests/second; `<= 0` puts every arrival
+    /// at t = 0 (a closed-loop throughput run)
+    pub rate: f64,
+    pub stop_token: Option<i32>,
+    pub seed: u64,
+}
+
+/// Synthesize a request trace: uniform-random prompts, optional uniform
+/// generation lengths, exponential inter-arrival gaps at `rate`.
+pub fn synth_requests(opts: &SynthOptions) -> Vec<GenRequest> {
+    let mut rng = Rng::new(opts.seed);
+    let mut t = 0.0f64;
+    (0..opts.n)
+        .map(|i| {
+            if opts.rate > 0.0 {
+                t += -(1.0 - rng.uniform()).ln() / opts.rate;
+            }
+            let prompt: Vec<i32> = (0..opts.prompt_len)
+                .map(|_| rng.below(opts.vocab) as i32)
+                .collect();
+            let max_new_tokens = if opts.vary_lengths {
+                1 + rng.below(opts.max_new_tokens.max(1))
+            } else {
+                opts.max_new_tokens
+            };
+            GenRequest {
+                id: i as u64,
+                prompt,
+                max_new_tokens,
+                stop_token: opts.stop_token,
+                arrival_s: t,
+            }
+        })
+        .collect()
+}
+
+/// One serving measurement: run metadata plus the latency/throughput
+/// percentiles of a [`ServeReport`], written as a JSON file (the CI serve
+/// smoke uploads these as workflow artifacts; plotting scripts read the
+/// same schema).
+#[derive(Debug, Clone)]
+pub struct ServeRecord {
+    /// emitting bench/tool, e.g. `fig6_continuous_batching`
+    pub bench: String,
+    /// `continuous` | `naive`
+    pub mode: String,
+    pub method: String,
+    pub backend: String,
+    /// the swept batch-size point this record belongs to
+    pub batch_point: usize,
+    /// the engine's actual slot capacity (1 for the naive baseline)
+    pub max_batch: usize,
+    pub requests: usize,
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub decode_steps: usize,
+    pub wall_s: f64,
+    pub busy_s: f64,
+    pub tokens_per_sec: f64,
+    /// `[p50, p90, p99]`, seconds
+    pub latency_s: [f64; 3],
+    /// `[p50, p90, p99]`, seconds
+    pub ttft_s: [f64; 3],
+}
+
+impl ServeRecord {
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_report(
+        bench: &str,
+        mode: &str,
+        method: &str,
+        backend: &str,
+        batch_point: usize,
+        max_batch: usize,
+        requests: usize,
+        report: &ServeReport,
+    ) -> ServeRecord {
+        ServeRecord {
+            bench: bench.to_string(),
+            mode: mode.to_string(),
+            method: method.to_string(),
+            backend: backend.to_string(),
+            batch_point,
+            max_batch,
+            requests,
+            completed: report.completions.len(),
+            generated_tokens: report.generated_tokens,
+            decode_steps: report.decode_steps,
+            wall_s: report.wall_s,
+            busy_s: report.busy_s,
+            tokens_per_sec: report.tokens_per_sec(),
+            latency_s: report.latency_percentiles(),
+            ttft_s: report.ttft_percentiles(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("bench", Json::str(&self.bench)),
+            ("mode", Json::str(&self.mode)),
+            ("method", Json::str(&self.method)),
+            ("backend", Json::str(&self.backend)),
+            ("batch_point", Json::num(self.batch_point as f64)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("generated_tokens", Json::num(self.generated_tokens as f64)),
+            ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("busy_s", Json::num(self.busy_s)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec)),
+            ("latency_p50_p90_p99_s", Json::f64s(&self.latency_s)),
+            ("ttft_p50_p90_p99_s", Json::f64s(&self.ttft_s)),
+        ])
+    }
+
+    /// Write `{bench}_{method}_{backend}_b{batch_point}_{mode}.json` into
+    /// `dir` (created if missing); returns the path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(format!(
+            "{}_{}_{}_b{}_{}.json",
+            self.bench, self.method, self.backend, self.batch_point, self.mode
+        ));
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_roundtrip_with_defaults() {
+        let text = r#"{"requests": [
+            {"prompt": [1, 2, 3], "max_new_tokens": 8},
+            {"id": 9, "prompt": [4], "max_new_tokens": 2,
+             "arrival_s": 0.5, "stop_token": 7}
+        ]}"#;
+        let reqs = parse_trace(text).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].id, 0);
+        assert_eq!(reqs[0].prompt, vec![1, 2, 3]);
+        assert_eq!(reqs[0].max_new_tokens, 8);
+        assert_eq!(reqs[0].stop_token, None);
+        assert_eq!(reqs[0].arrival_s, 0.0);
+        assert_eq!(reqs[1].id, 9);
+        assert_eq!(reqs[1].stop_token, Some(7));
+        assert!((reqs[1].arrival_s - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_rejects_missing_fields() {
+        assert!(parse_trace(r#"{"requests": [{"prompt": [1]}]}"#).is_err());
+        assert!(parse_trace(r#"{"requests": [{"max_new_tokens": 4}]}"#).is_err());
+        assert!(parse_trace(r#"{"nope": []}"#).is_err());
+    }
+
+    #[test]
+    fn synth_poisson_arrivals_are_ordered_and_seeded() {
+        let opts = SynthOptions {
+            n: 32,
+            vocab: 64,
+            prompt_len: 4,
+            max_new_tokens: 10,
+            vary_lengths: true,
+            rate: 100.0,
+            stop_token: None,
+            seed: 5,
+        };
+        let a = synth_requests(&opts);
+        let b = synth_requests(&opts);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s, "arrivals not ordered");
+        }
+        assert!(a.iter().all(|r| (1..=10).contains(&r.max_new_tokens)));
+        assert!(a.iter().all(|r| r.prompt.iter().all(|&t| (0..64).contains(&t))));
+        // rate 0: everything lands at t = 0
+        let z = synth_requests(&SynthOptions { rate: 0.0, ..opts });
+        assert!(z.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn record_json_has_the_artifact_schema() {
+        let report = ServeReport {
+            completions: Vec::new(),
+            wall_s: 1.5,
+            busy_s: 1.25,
+            decode_steps: 40,
+            generated_tokens: 640,
+        };
+        let rec = ServeRecord::from_report(
+            "fig6_continuous_batching",
+            "continuous",
+            "quartet",
+            "parallel",
+            8,
+            8,
+            32,
+            &report,
+        );
+        let j = Json::parse(&rec.to_json().to_string()).unwrap();
+        assert_eq!(j.req("mode").unwrap().as_str(), Some("continuous"));
+        assert_eq!(j.req("batch_point").unwrap().as_usize(), Some(8));
+        assert_eq!(j.req("generated_tokens").unwrap().as_usize(), Some(640));
+        let tps = j.req("tokens_per_sec").unwrap().as_f64().unwrap();
+        assert!((tps - 640.0 / 1.25).abs() < 1e-9);
+        assert_eq!(
+            j.req("latency_p50_p90_p99_s").unwrap().as_arr().unwrap().len(),
+            3
+        );
+    }
+}

@@ -82,6 +82,18 @@ impl Args {
         }
     }
 
+    /// Optional typed flag: `None` when absent, an error when present but
+    /// unparseable.
+    pub fn parse_opt<T: std::str::FromStr>(&mut self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
     pub fn flag(&mut self, key: &str) -> bool {
         self.get(key).map(|v| v != "false").unwrap_or(false)
     }
@@ -129,6 +141,22 @@ pub fn methods_flag(args: &mut Args) -> Result<Vec<crate::train::TrainMethod>> {
         .collect()
 }
 
+/// Comma-separated positive-integer list (`--batches 1,2,4`) — the batch
+/// axis shared by the serving benches.
+pub fn usize_list_or(args: &mut Args, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+    match args.get(key) {
+        None => Ok(default.to_vec()),
+        Some(v) => v
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("--{key}: cannot parse {s:?}"))
+            })
+            .collect(),
+    }
+}
+
 /// Consume `--backend scalar|parallel|both` (default `both`) into concrete
 /// backend instances — the shared axis of the kernel benches. Unknown
 /// names are an error, not a silent fallback.
@@ -169,6 +197,16 @@ mod tests {
     }
 
     #[test]
+    fn usize_lists() {
+        let mut a = Args::parse(argv("x --batches 1,2,4")).unwrap();
+        assert_eq!(usize_list_or(&mut a, "batches", &[8]).unwrap(), vec![1, 2, 4]);
+        let mut b = Args::parse(argv("x")).unwrap();
+        assert_eq!(usize_list_or(&mut b, "batches", &[8, 16]).unwrap(), vec![8, 16]);
+        let mut c = Args::parse(argv("x --batches 1,zap")).unwrap();
+        assert!(usize_list_or(&mut c, "batches", &[]).is_err());
+    }
+
+    #[test]
     fn repeated_and_lists() {
         let mut a = Args::parse(argv("x --m a --m b --sizes n20k,n40k")).unwrap();
         assert_eq!(a.get_all("m"), vec!["a", "b"]);
@@ -193,5 +231,14 @@ mod tests {
         let mut a = Args::parse(argv("x --steps abc")).unwrap();
         let e = a.parse_or("steps", 1usize).unwrap_err().to_string();
         assert!(e.contains("steps"));
+    }
+
+    #[test]
+    fn parse_opt_absent_present_invalid() {
+        let mut a = Args::parse(argv("x --steps 7")).unwrap();
+        assert_eq!(a.parse_opt::<usize>("steps").unwrap(), Some(7));
+        assert_eq!(a.parse_opt::<usize>("missing").unwrap(), None);
+        let mut b = Args::parse(argv("x --steps abc")).unwrap();
+        assert!(b.parse_opt::<usize>("steps").is_err());
     }
 }

@@ -86,6 +86,40 @@ fn gemms_bit_identical_across_backends() {
 }
 
 #[test]
+fn decode_once_gemm_bit_identical_to_packed_gemm() {
+    // the serving weight cache's contract: decode_mxfp4 once, then
+    // gemm_mxfp4_predec against the shared rows must equal the packed
+    // gemm bit for bit — on every backend, at every thread count, and
+    // decode itself must equal the reference dequantize
+    let scalar = ScalarBackend;
+    for (m, n, k) in gemm_shapes() {
+        let mut rng = Rng::new(m as u64 * 3 + (n as u64) * 7 + (k as u64) * 11);
+        let a = rng.gaussian_vec(m * k, 1.0);
+        let b = rng.gaussian_vec(n * k, 0.4);
+        let ta = scalar.quantize_mxfp4(&a, m, k, QuantMode::Rtn, &mut Rng::new(0));
+        let tb = scalar.quantize_mxfp4(&b, n, k, QuantMode::Rtn, &mut Rng::new(0));
+        let want = scalar.gemm_mxfp4(&ta, &tb);
+        let b_dec_ref = scalar.decode_mxfp4(&tb);
+        assert_eq!(b_dec_ref, tb.dequantize(), "decode vs dequantize {n}x{k}");
+        assert_eq!(
+            want,
+            scalar.gemm_mxfp4_predec(&ta, &b_dec_ref, n),
+            "scalar predec {m}x{n}x{k}"
+        );
+        for t in THREAD_COUNTS {
+            let be = ParallelBackend::with_threads(t);
+            let b_dec = be.decode_mxfp4(&tb);
+            assert_eq!(b_dec, b_dec_ref, "decode {n}x{k} threads={t}");
+            assert_eq!(
+                want,
+                be.gemm_mxfp4_predec(&ta, &b_dec, n),
+                "predec gemm {m}x{n}x{k} threads={t}"
+            );
+        }
+    }
+}
+
+#[test]
 fn masked_gradient_gemm_bit_identical_across_backends() {
     // the QuEST straight-through backward: C = A·Bᵀ with an output-side
     // trust mask fused in; the mask index is global, so row partitioning
