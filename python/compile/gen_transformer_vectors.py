@@ -1,0 +1,111 @@
+"""Emit cross-language golden vectors pinning the rust native transformer
+forward (`train::transformer::TransformerLm::logits`) against the numpy
+float32 twin in `compile/native_transformer.py`, per TrainMethod.
+
+Usage: ``python -m compile.gen_transformer_vectors [out.json]`` (default
+writes ``rust/tests/data/transformer_vectors.json``). Regenerate whenever
+the transformer architecture or the quantizer numerics change;
+``rust/tests/transformer_vectors.rs`` consumes the file.
+
+Weights are a deterministic integer lattice (exactly representable in
+f32, identical on both sides without sharing an RNG):
+
+    w[i]     = (((i*37 + salt*101) % 113) - 56) / 64 * scale
+    gain[i]  = 1 + (((i + salt) % 7) - 3) / 32
+
+with the salts/scales listed in ``build_model`` — the rust test re-derives
+the same tensors from the same formula.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from .native_transformer import Block, transformer_logits
+
+VOCAB = 32
+D_MODEL = 32
+N_HEADS = 2
+N_LAYERS = 2
+D_FF = 32
+SEQ = 8
+METHODS = ["f32", "mxfp8", "quartet", "rtn"]
+
+
+def det_vals(n, salt, scale):
+    i = np.arange(n, dtype=np.int64)
+    h = (i * 37 + salt * 101) % 113
+    return ((h - 56).astype(np.float32) / np.float32(64.0) * np.float32(scale)).astype(
+        np.float32
+    )
+
+
+def det_gain(n, salt):
+    i = np.arange(n, dtype=np.int64)
+    return (
+        np.float32(1.0)
+        + (((i + salt) % 7) - 3).astype(np.float32) / np.float32(32.0)
+    ).astype(np.float32)
+
+
+def build_model():
+    tok_emb = det_vals(VOCAB * D_MODEL, 1, 1.0).reshape(VOCAB, D_MODEL)
+    blocks = []
+    for b in range(N_LAYERS):
+        base = 10 + 16 * b
+        blocks.append(
+            Block(
+                attn_norm=det_gain(D_MODEL, b),
+                wq=det_vals(D_MODEL * D_MODEL, base, 0.25).reshape(D_MODEL, D_MODEL),
+                wk=det_vals(D_MODEL * D_MODEL, base + 1, 0.25).reshape(D_MODEL, D_MODEL),
+                wv=det_vals(D_MODEL * D_MODEL, base + 2, 0.25).reshape(D_MODEL, D_MODEL),
+                wo=det_vals(D_MODEL * D_MODEL, base + 3, 0.25).reshape(D_MODEL, D_MODEL),
+                mlp_norm=det_gain(D_MODEL, b + 3),
+                w_gate=det_vals(D_FF * D_MODEL, base + 4, 0.25).reshape(D_FF, D_MODEL),
+                w_up=det_vals(D_FF * D_MODEL, base + 5, 0.25).reshape(D_FF, D_MODEL),
+                w_down=det_vals(D_MODEL * D_FF, base + 6, 0.25).reshape(D_MODEL, D_FF),
+            )
+        )
+    final_norm = det_gain(D_MODEL, 11)
+    return tok_emb, blocks, final_norm
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "data",
+        "transformer_vectors.json")
+    tok_emb, blocks, final_norm = build_model()
+    tokens = [(7 * i + 3) % VOCAB for i in range(SEQ)]
+    cases = []
+    for method in METHODS:
+        logits = transformer_logits(tok_emb, blocks, final_norm, tokens, N_HEADS, method)
+        assert logits.shape == (SEQ, VOCAB)
+        assert np.all(np.isfinite(logits)), method
+        cases.append({
+            "method": method,
+            "logits": [float(v) for v in logits.reshape(-1)],
+        })
+    payload = {
+        "config": {
+            "vocab": VOCAB,
+            "d_model": D_MODEL,
+            "n_heads": N_HEADS,
+            "n_layers": N_LAYERS,
+            "d_ff": D_FF,
+            "seq": SEQ,
+        },
+        "tokens": tokens,
+        "cases": cases,
+    }
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(payload, f)
+    print(f"wrote {len(cases)} method cases to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Float32 numpy twin of the rust native transformer forward
+(`rust/src/train/transformer.rs`) — the reference that generates
+``rust/tests/data/transformer_vectors.json``.
+
+Every operation mirrors the rust implementation op-for-op in float32
+(quantizers, Hadamard butterflies, RMSNorm's f64 mean-square, rotary,
+SwiGLU, causal softmax with f64 normalizer), so the two sides agree to
+float-ulp accumulation — the golden test compares with a small relative
+tolerance and an outlier allowance for the rare group whose quantization
+boundary sits within libm-ulp distance (see the regen notes there).
+
+Pure numpy: no jax dependency, usable anywhere the generator runs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MX_GROUP = 32
+E2M1_MAX = np.float32(6.0)
+QUEST_ALPHA = np.float32(2.925)
+RMS_EPS = 1e-6
+ROPE_THETA = np.float32(10000.0)
+E8M0_MIN_EXP = -98
+
+
+def f32(x):
+    return np.asarray(x, dtype=np.float32)
+
+
+def e2m1_rtn(x):
+    """RTN to the E2M1 grid, ties away from zero, clamp ±6 (f32 twin)."""
+    x = f32(x)
+    a = np.abs(x)
+    step = np.where(a < 2.0, np.float32(0.5),
+                    np.where(a < 4.0, np.float32(1.0), np.float32(2.0))).astype(np.float32)
+    q = (np.floor(a / step + np.float32(0.5)) * step).astype(np.float32)
+    q = np.minimum(q, E2M1_MAX)
+    return (np.where(x < 0, -q, q)).astype(np.float32)
+
+
+def e8m0_scale(amax, target):
+    """2^ceil(log2(amax/target)), exponent clamped to the E8M0 range."""
+    safe = np.maximum(f32(amax), np.float32(2.0 ** E8M0_MIN_EXP))
+    e = np.ceil(np.log2(safe / np.float32(target)))
+    e = np.clip(e, E8M0_MIN_EXP, 127)
+    return np.exp2(e).astype(np.float32)
+
+
+def mxfp4_rtn(x):
+    """AbsMax MXFP4 quant-dequant per 1x32 group along the last axis."""
+    x = f32(x)
+    xg = x.reshape(-1, MX_GROUP)
+    s = e8m0_scale(np.max(np.abs(xg), axis=1, keepdims=True), E2M1_MAX)
+    return (e2m1_rtn(xg / s) * s).astype(np.float32).reshape(x.shape)
+
+
+def quest_quantize(x):
+    """QuEST MXFP4: RMSE clip, best of the two neighbouring binades
+    (f64 MSE comparison, like the rust quest_scale)."""
+    x = f32(x)
+    xg = x.reshape(-1, MX_GROUP)
+    ms = np.sum(xg.astype(np.float32) * xg, axis=1, keepdims=True, dtype=np.float32)
+    rms = np.sqrt(ms / np.float32(MX_GROUP) + np.float32(1e-20)).astype(np.float32)
+    clip = QUEST_ALPHA * rms
+    e = np.log2(np.maximum(clip / E2M1_MAX, np.float32(2.0 ** E8M0_MIN_EXP)))
+    lo = np.exp2(np.clip(np.floor(e), E8M0_MIN_EXP, 127)).astype(np.float32)
+    hi = np.exp2(np.clip(np.ceil(e), E8M0_MIN_EXP, 127)).astype(np.float32)
+    q_lo = (e2m1_rtn(xg / lo) * lo).astype(np.float32)
+    q_hi = (e2m1_rtn(xg / hi) * hi).astype(np.float32)
+    mse_lo = np.sum((q_lo - xg).astype(np.float64) ** 2, axis=1, keepdims=True)
+    mse_hi = np.sum((q_hi - xg).astype(np.float64) ** 2, axis=1, keepdims=True)
+    use_lo = mse_lo <= mse_hi
+    q = np.where(use_lo, q_lo, q_hi).astype(np.float32)
+    s = np.where(use_lo, lo, hi).astype(np.float32)
+    mask = np.abs(xg) <= s * E2M1_MAX
+    return q.reshape(x.shape), mask.reshape(x.shape)
+
+
+def e4m3(x):
+    x = f32(x)
+    a = np.abs(x)
+    e = np.floor(np.log2(np.maximum(a, np.float32(1e-38))))
+    e = np.maximum(e, np.float32(-6.0))
+    ulp = np.exp2(e - np.float32(3.0)).astype(np.float32)
+    q = (np.floor(a / ulp + np.float32(0.5)) * ulp).astype(np.float32)
+    q = np.minimum(q, np.float32(448.0))
+    q = np.where(a == 0.0, np.float32(0.0), q)
+    return np.where(x < 0, -q, q).astype(np.float32)
+
+
+def mxfp8_rtn(x):
+    x = f32(x)
+    xg = x.reshape(-1, MX_GROUP)
+    s = e8m0_scale(np.max(np.abs(xg), axis=1, keepdims=True), 448.0)
+    return (e4m3(xg / s) * s).astype(np.float32).reshape(x.shape)
+
+
+def block_hadamard(x, g=MX_GROUP):
+    """Normalized FWHT per contiguous g-group — the same butterfly order
+    as `quant::hadamard::fwht`, so results are bit-identical in f32."""
+    x = f32(x)
+    y = x.reshape(-1, g).copy()
+    h = 1
+    while h < g:
+        yv = y.reshape(-1, g // (2 * h), 2, h)
+        a = yv[:, :, 0, :].copy()
+        b = yv[:, :, 1, :].copy()
+        yv[:, :, 0, :] = a + b
+        yv[:, :, 1, :] = a - b
+        h *= 2
+    norm = np.float32(1.0) / np.sqrt(np.float32(g))
+    return (y * norm).astype(np.float32).reshape(x.shape)
+
+
+def quant_matmul(x, w, method):
+    """y = x·wᵀ under the TrainMethod forward precision (f64 accumulate,
+    f32 result — the rust side accumulates in f32; the golden tolerance
+    absorbs the sub-ulp difference)."""
+    x = f32(x)
+    w = f32(w)
+    if method == "f32":
+        xq, wq = x, w
+    elif method == "mxfp8":
+        xq, wq = mxfp8_rtn(x), mxfp8_rtn(w)
+    elif method == "quartet":
+        xq, _ = quest_quantize(block_hadamard(x))
+        wq, _ = quest_quantize(block_hadamard(w))
+    elif method == "rtn":
+        xq, wq = mxfp4_rtn(x), mxfp4_rtn(w)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return (xq.astype(np.float64) @ wq.astype(np.float64).T).astype(np.float32)
+
+
+def rmsnorm(x, g):
+    """y = g ⊙ x · rsqrt(mean(x², f64) + 1e-6), per row."""
+    x = f32(x)
+    ms = np.sum(x.astype(np.float64) ** 2, axis=1, keepdims=True) / x.shape[1]
+    inv = (1.0 / np.sqrt(ms + RMS_EPS)).astype(np.float32)
+    return (f32(g)[None, :] * x * inv).astype(np.float32)
+
+
+def rope_rotate(x, n_heads, positions):
+    """Rotary rotation of q/k rows `[rows, n_heads·hd]` at `positions`."""
+    x = f32(x).copy()
+    rows, d = x.shape
+    hd = d // n_heads
+    half = hd // 2
+    i = np.arange(half, dtype=np.float32)
+    freqs = np.power(ROPE_THETA, (-(2.0 * i) / np.float32(hd)).astype(np.float32))
+    ang = (f32(positions)[:, None] * freqs[None, :]).astype(np.float32)
+    c = np.cos(ang).astype(np.float32)
+    s = np.sin(ang).astype(np.float32)
+    xv = x.reshape(rows, n_heads, half, 2)
+    a = xv[:, :, :, 0].copy()
+    b = xv[:, :, :, 1].copy()
+    xv[:, :, :, 0] = a * c[:, None, :] - b * s[:, None, :]
+    xv[:, :, :, 1] = a * s[:, None, :] + b * c[:, None, :]
+    return x
+
+
+def silu(x):
+    x = f32(x)
+    sg = (np.float32(1.0) / (np.float32(1.0) + np.exp(-x))).astype(np.float32)
+    return (x * sg).astype(np.float32)
+
+
+def causal_attention(q, k, v, n_heads):
+    """Per-head causal attention over `[s, d]` rows (training layout,
+    pos0 = 0): f64 softmax normalizer, f32 probs, key-order context
+    accumulation — the `Backend::attention_causal` twin."""
+    s, d = q.shape
+    hd = d // n_heads
+    scale = np.float32(1.0 / np.sqrt(np.float32(hd)))
+    ctx = np.zeros((s, d), dtype=np.float32)
+    for h in range(n_heads):
+        qh = q[:, h * hd:(h + 1) * hd]
+        kh = k[:, h * hd:(h + 1) * hd]
+        vh = v[:, h * hd:(h + 1) * hd]
+        for i in range(s):
+            lim = i + 1
+            scores = ((qh[i].astype(np.float64) @ kh[:lim].astype(np.float64).T)
+                      .astype(np.float32) * scale).astype(np.float32)
+            m = np.max(scores)
+            e = np.exp((scores - m).astype(np.float64))
+            p = (e / np.sum(e)).astype(np.float32)
+            ctx[i, h * hd:(h + 1) * hd] = (
+                p.astype(np.float64) @ vh[:lim].astype(np.float64)
+            ).astype(np.float32)
+    return ctx
+
+
+class Block:
+    def __init__(self, attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down):
+        self.attn_norm = f32(attn_norm)
+        self.wq, self.wk, self.wv, self.wo = map(f32, (wq, wk, wv, wo))
+        self.mlp_norm = f32(mlp_norm)
+        self.w_gate, self.w_up, self.w_down = map(f32, (w_gate, w_up, w_down))
+
+
+def transformer_logits(tok_emb, blocks, final_norm, tokens, n_heads, method):
+    """Logits `[s, vocab]` of one sequence — the TransformerLm::logits
+    twin (batch rows are independent, so one sequence at a time is
+    general)."""
+    tok_emb = f32(tok_emb)
+    tokens = np.asarray(tokens, dtype=np.int64)
+    s = len(tokens)
+    x = tok_emb[tokens].copy()
+    positions = np.arange(s, dtype=np.float32)
+    for blk in blocks:
+        a = rmsnorm(x, blk.attn_norm)
+        q = quant_matmul(a, blk.wq, method)
+        k = quant_matmul(a, blk.wk, method)
+        v = quant_matmul(a, blk.wv, method)
+        q = rope_rotate(q, n_heads, positions)
+        k = rope_rotate(k, n_heads, positions)
+        ctx = causal_attention(q, k, v, n_heads)
+        x = (x + quant_matmul(ctx, blk.wo, method)).astype(np.float32)
+        m = rmsnorm(x, blk.mlp_norm)
+        gate = quant_matmul(m, blk.w_gate, method)
+        up = quant_matmul(m, blk.w_up, method)
+        hsw = (silu(gate) * up).astype(np.float32)
+        x = (x + quant_matmul(hsw, blk.w_down, method)).astype(np.float32)
+    hn = rmsnorm(x, f32(final_norm))
+    # tied vocab head: the shared embedding matrix quantized on the way
+    # into the GEMM, same method axis as every other linear
+    return quant_matmul(hn, tok_emb, method)

@@ -120,6 +120,39 @@ pub trait Backend: Send + Sync {
         c
     }
 
+    /// Causal multi-head attention over independent (batch, head) groups:
+    /// `q [groups, sq, hd]` against `k`/`v` `[groups, sk, hd]`, where query
+    /// row `i` sits at global position `pos0 + i` and attends key positions
+    /// `0..=pos0+i` (so `sk >= pos0 + sq`). Scores are `scale·q·kᵀ`,
+    /// softmax'd per query row (f64 normalizer), masked positions exactly
+    /// 0. Returns `(ctx [groups, sq, hd], probs [groups, sq, sk])` — the
+    /// probs feed the training backward and are discarded by serving.
+    ///
+    /// Every query row is computed independently with the shared scalar
+    /// kernel, so implementations must be bit-identical to the scalar
+    /// reference at any thread count and the same row yields the same
+    /// output whether it is decoded alone (`sq = 1` against a KV cache) or
+    /// inside a full-sequence recompute — the invariant the KV-cached
+    /// serving path is pinned on (`tests/serve_engine.rs`).
+    #[allow(clippy::too_many_arguments)]
+    fn attention_causal(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        groups: usize,
+        sq: usize,
+        sk: usize,
+        hd: usize,
+        pos0: usize,
+        scale: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut ctx = vec![0.0f32; groups * sq * hd];
+        let mut probs = vec![0.0f32; groups * sq * sk];
+        scalar::attention_groups(q, k, v, groups, sq, sk, hd, pos0, scale, &mut ctx, &mut probs);
+        (ctx, probs)
+    }
+
     /// Apply H_g to each contiguous g-group along the last axis, in place.
     fn block_hadamard(&self, data: &mut [f32], g: usize);
 

@@ -391,6 +391,51 @@ impl Backend for ParallelBackend {
         c
     }
 
+    fn attention_causal(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        groups: usize,
+        sq: usize,
+        sk: usize,
+        hd: usize,
+        pos0: usize,
+        scale: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut ctx = vec![0.0f32; groups * sq * hd];
+        let mut probs = vec![0.0f32; groups * sq * sk];
+        let threads = self.pool_size().min(groups.max(1));
+        // each (batch, head) group is fully independent and runs the same
+        // scalar kernel, so partitioning the group axis is unobservable
+        if threads <= 1 || groups * sq * sk * hd < SMALL_WORK {
+            scalar::attention_groups(
+                q, k, v, groups, sq, sk, hd, pos0, scale, &mut ctx, &mut probs,
+            );
+            return (ctx, probs);
+        }
+        let per = (groups + threads - 1) / threads;
+        std::thread::scope(|s| {
+            for (ci, (ctx_chunk, probs_chunk)) in ctx
+                .chunks_mut(per * sq * hd)
+                .zip(probs.chunks_mut(per * sq * sk))
+                .enumerate()
+            {
+                let g0 = ci * per;
+                let ng = ctx_chunk.len() / (sq * hd);
+                let qc = &q[g0 * sq * hd..(g0 + ng) * sq * hd];
+                let kc = &k[g0 * sk * hd..(g0 + ng) * sk * hd];
+                let vc = &v[g0 * sk * hd..(g0 + ng) * sk * hd];
+                s.spawn(move || {
+                    scalar::attention_groups(
+                        qc, kc, vc, ng, sq, sk, hd, pos0, scale, ctx_chunk, probs_chunk,
+                    );
+                });
+            }
+        });
+        (ctx, probs)
+    }
+
     fn block_hadamard(&self, data: &mut [f32], g: usize) {
         assert_eq!(data.len() % g, 0);
         let n_groups = data.len() / g;

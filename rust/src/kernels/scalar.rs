@@ -201,6 +201,74 @@ pub(crate) fn decode_rows(t: &Mxfp4Tensor, lut: &[(f32, f32); 256], out: &mut [f
     }
 }
 
+/// Causal-attention reference kernel over `groups` independent
+/// (batch, head) slabs — the shared inner loop of
+/// [`Backend::attention_causal`]. For each query row `i` (global position
+/// `pos0 + i`) it scores key positions `0..=pos0+i` with `scale·q·kᵀ`,
+/// softmaxes the row (f64 normalizer, masked positions exactly 0) and
+/// accumulates the context row `Σⱼ pᵢⱼ·vⱼ` in key order. Every query row
+/// is self-contained, so callers may partition the group axis freely —
+/// and a row decoded alone against a KV cache (`sq = 1`) is bit-identical
+/// to the same row inside a full-sequence recompute, the invariant the
+/// serving KV path is pinned on.
+///
+/// `ctx` (`[groups, sq, hd]`) and `probs` (`[groups, sq, sk]`) must come
+/// in zeroed.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_groups(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    groups: usize,
+    sq: usize,
+    sk: usize,
+    hd: usize,
+    pos0: usize,
+    scale: f32,
+    ctx: &mut [f32],
+    probs: &mut [f32],
+) {
+    assert_eq!(q.len(), groups * sq * hd, "q shape");
+    assert_eq!(k.len(), groups * sk * hd, "k shape");
+    assert_eq!(v.len(), groups * sk * hd, "v shape");
+    assert!(pos0 + sq <= sk, "query positions run past the key horizon");
+    for g in 0..groups {
+        let qg = &q[g * sq * hd..(g + 1) * sq * hd];
+        let kg = &k[g * sk * hd..(g + 1) * sk * hd];
+        let vg = &v[g * sk * hd..(g + 1) * sk * hd];
+        let cg = &mut ctx[g * sq * hd..(g + 1) * sq * hd];
+        let pg = &mut probs[g * sq * sk..(g + 1) * sq * sk];
+        for i in 0..sq {
+            let limit = pos0 + i + 1;
+            let qi = &qg[i * hd..(i + 1) * hd];
+            let prow = &mut pg[i * sk..(i + 1) * sk];
+            let mut max = f32::NEG_INFINITY;
+            for j in 0..limit {
+                let s = dot_f32(qi, &kg[j * hd..(j + 1) * hd]) * scale;
+                prow[j] = s;
+                if s > max {
+                    max = s;
+                }
+            }
+            let mut z = 0.0f64;
+            for j in 0..limit {
+                z += ((prow[j] - max) as f64).exp();
+            }
+            for j in 0..limit {
+                prow[j] = (((prow[j] - max) as f64).exp() / z) as f32;
+            }
+            let crow = &mut cg[i * hd..(i + 1) * hd];
+            for j in 0..limit {
+                let p = prow[j];
+                let vj = &vg[j * hd..(j + 1) * hd];
+                for d in 0..hd {
+                    crow[d] += p * vj[d];
+                }
+            }
+        }
+    }
+}
+
 /// 8-accumulator dot product (breaks the FMA dependency chain so LLVM
 /// auto-vectorizes; the single-accumulator form runs ~8x slower).
 #[inline]

@@ -2,11 +2,14 @@
 //!
 //! ```text
 //! repro info                          # engine + artifact inventory (xla)
-//! repro train   --native --method quartet [--steps 400] [--d-hidden 128]
+//! repro train   --native --method quartet [--arch mlp|transformer]
+//!               [--steps 400] [--d-hidden 128 | --d-model 64 --n-heads 4
+//!               --n-layers 2 --d-ff 128 --seq 32]
 //!               [--checkpoint ckpt.json] [--out runs]    # pure Rust
 //! repro train   --artifact n80k-quartet --steps 200 [--lr 2e-3] [--seed 0]
 //! repro sweep   --preset reduced --out runs [--max-steps 4000]
 //! repro serve   [--checkpoint ckpt.json] --method quartet [--max-batch 8]
+//!               [--arch mlp|transformer] [--recompute]
 //!               [--requests 64] [--rate 40] [--trace trace.json]
 //!               [--temperature 0.8] [--out runs]   # native, pure Rust
 //! repro serve   --artifact n330k-quartet --requests 256       # PJRT
@@ -56,8 +59,10 @@ fn main() -> Result<()> {
         Some(other) => bail!("unknown subcommand {other:?} (see --help in README)"),
         None => {
             println!("usage: repro <info|train|sweep|serve|regions|table2|kernels> [flags]");
-            println!("       repro train --native --method f32|mxfp8|quartet|rtn  (pure Rust)");
+            println!("       repro train --native --method f32|mxfp8|quartet|rtn");
+            println!("                   [--arch mlp|transformer]  (pure Rust)");
             println!("       repro serve --method f32|mxfp8|quartet [--checkpoint ckpt.json]");
+            println!("                   [--arch mlp|transformer] [--recompute]");
             println!("                   [--trace t.json | --requests N --rate r]  (pure Rust)");
             println!("global: --backend scalar|parallel (or QUARTET_BACKEND env)");
             println!("see README.md for the full command reference");
@@ -122,18 +127,19 @@ fn cmd_train(args: &mut Args) -> Result<()> {
 }
 
 /// Pure-Rust Quartet training (Algorithm 1 on the kernels backends):
-/// trains the native MLP LM on the synthetic corpus, optionally writing a
-/// RunRecord (`--out`) and a servable checkpoint (`--checkpoint`).
+/// trains a native model — `--arch mlp` (order-2 MLP LM, the default) or
+/// `--arch transformer` (Llama-style decoder with KV-cache-servable
+/// checkpoints) — on the synthetic corpus, optionally writing a RunRecord
+/// (`--out`) and a servable checkpoint (`--checkpoint`).
 fn cmd_train_native(args: &mut Args) -> Result<()> {
-    use quartet::train::{train_native, ModelConfig, NativeTrainOptions, TrainMethod};
-
-    let cfg = ModelConfig {
-        vocab: args.parse_or("vocab", 256usize)?,
-        d_emb: args.parse_or("d-emb", 32usize)?,
-        d_hidden: args.parse_or("d-hidden", 128usize)?,
-        n_hidden: args.parse_or("n-hidden", 1usize)?,
-        method: TrainMethod::parse(&args.str_or("method", "quartet"))?,
+    use quartet::train::{
+        train_native, train_native_transformer, ModelConfig, NativeTrainOptions,
+        TrainMethod, TransformerConfig,
     };
+
+    let arch = args.str_or("arch", "mlp");
+    let method = TrainMethod::parse(&args.str_or("method", "quartet"))?;
+    let vocab = args.parse_or("vocab", 256usize)?;
     let opts = NativeTrainOptions {
         steps: args.parse_or("steps", 400usize)?,
         batch: args.parse_or("batch", 32usize)?,
@@ -147,10 +153,37 @@ fn cmd_train_native(args: &mut Args) -> Result<()> {
     };
     let out = args.get("out").map(PathBuf::from);
     let ckpt = args.get("checkpoint").map(PathBuf::from);
-    args.finish()?;
 
     let be = quartet::kernels::active();
-    let (rec, model) = train_native(&cfg, &opts, be)?;
+    let (rec, model) = match arch.as_str() {
+        "mlp" => {
+            let cfg = ModelConfig {
+                vocab,
+                d_emb: args.parse_or("d-emb", 32usize)?,
+                d_hidden: args.parse_or("d-hidden", 128usize)?,
+                n_hidden: args.parse_or("n-hidden", 1usize)?,
+                method,
+            };
+            args.finish()?;
+            let (rec, m) = train_native(&cfg, &opts, be)?;
+            (rec, quartet::train::NativeModel::Mlp(m))
+        }
+        "transformer" => {
+            let cfg = TransformerConfig {
+                vocab,
+                d_model: args.parse_or("d-model", 64usize)?,
+                n_heads: args.parse_or("n-heads", 4usize)?,
+                n_layers: args.parse_or("n-layers", 2usize)?,
+                d_ff: args.parse_or("d-ff", 128usize)?,
+                seq: args.parse_or("seq", 32usize)?,
+                method,
+            };
+            args.finish()?;
+            let (rec, m) = train_native_transformer(&cfg, &opts, be)?;
+            (rec, quartet::train::NativeModel::Transformer(m))
+        }
+        other => bail!("unknown --arch {other:?} (expected mlp|transformer)"),
+    };
     println!(
         "trained {} [{} backend]: steps={} tokens={} init val loss={:.4} \
          final val loss={:.4} ({:.0} tok/s, {:.2}s){}",
@@ -177,8 +210,7 @@ fn cmd_train_native(args: &mut Args) -> Result<()> {
             );
         }
         model.save(&path)?;
-        println!("checkpoint: {} (serve it with CpuPrefillEngine::from_checkpoint)",
-                 path.display());
+        println!("checkpoint: {} (serve it with `repro serve --checkpoint`)", path.display());
     }
     Ok(())
 }
@@ -270,7 +302,9 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
         load_trace, synth_requests, PackedWeightCache, Sampling, ServeEngine, ServeMethod,
         ServeRecord, SynthOptions,
     };
-    use quartet::train::{MlpLm, ModelConfig, TrainMethod};
+    use quartet::train::{
+        MlpLm, ModelConfig, NativeModel, TrainMethod, TransformerConfig, TransformerLm,
+    };
 
     let method = ServeMethod::parse(&args.str_or("method", "quartet"))?;
     let max_batch = args.parse_or("max-batch", 8usize)?;
@@ -285,32 +319,58 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
     let rate = args.parse_or("rate", 0.0f64)?;
     let stop_token = args.parse_opt::<i32>("stop-token")?;
     let steps_cap = args.parse_opt::<usize>("steps")?;
+    let recompute = args.flag("recompute");
     let ckpt = args.get("checkpoint").map(PathBuf::from);
     let trace_path = args.get("trace").map(PathBuf::from);
     let out = args.get("out").map(PathBuf::from);
-    // fresh-weights shape, ignored when --checkpoint is given
+    // fresh-weights shape, ignored when --checkpoint is given (the
+    // checkpoint's own `kind` then selects the architecture)
+    let arch = args.str_or("arch", "mlp");
     let vocab = args.parse_or("vocab", 256usize)?;
     let d_emb = args.parse_or("d-emb", 32usize)?;
     let d_hidden = args.parse_or("d-hidden", 128usize)?;
     let n_hidden = args.parse_or("n-hidden", 1usize)?;
+    let d_model = args.parse_or("d-model", 64usize)?;
+    let n_heads = args.parse_or("n-heads", 4usize)?;
+    let n_layers = args.parse_or("n-layers", 2usize)?;
+    let d_ff = args.parse_or("d-ff", 128usize)?;
     args.finish()?;
 
     let model = match &ckpt {
-        Some(p) => MlpLm::load(p)?,
-        None => MlpLm::init(
-            ModelConfig { vocab, d_emb, d_hidden, n_hidden, method: TrainMethod::Quartet },
-            seed,
-        )?,
+        Some(p) => NativeModel::load(p)?,
+        None => match arch.as_str() {
+            "mlp" => NativeModel::Mlp(MlpLm::init(
+                ModelConfig { vocab, d_emb, d_hidden, n_hidden, method: TrainMethod::Quartet },
+                seed,
+            )?),
+            "transformer" => NativeModel::Transformer(TransformerLm::init(
+                TransformerConfig {
+                    vocab,
+                    d_model,
+                    n_heads,
+                    n_layers,
+                    d_ff,
+                    seq: 32,
+                    method: TrainMethod::Quartet,
+                },
+                seed,
+            )?),
+            other => bail!("unknown --arch {other:?} (expected mlp|transformer)"),
+        },
     };
     let backend = quartet::kernels::backend_from_name(quartet::kernels::active().name())?;
-    let cache = PackedWeightCache::build(&model, method, &*backend);
+    let cache = PackedWeightCache::build_model(&model, method, &*backend);
+    let arch_name = cache.arch_name();
     let mut eng = ServeEngine::new(cache, backend, max_batch, Sampling { temperature, seed });
+    if recompute {
+        eng.set_recompute(true);
+    }
 
     let reqs = match &trace_path {
         Some(p) => load_trace(p)?,
         None => synth_requests(&SynthOptions {
             n: n_requests,
-            vocab: model.cfg.vocab,
+            vocab: model.vocab(),
             prompt_len,
             max_new_tokens: max_new,
             vary_lengths: true,
@@ -325,18 +385,20 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
     }
     let report = eng.run(steps_cap)?;
     println!(
-        "served {}/{} requests [{} {} max_batch={}]: {} tokens, {:.0} tok/s decode \
-         ({:.3}s busy / {:.3}s wall, {} steps)",
+        "served {}/{} requests [{arch_name} {} {} max_batch={}{}]: {} tokens, \
+         {:.0} tok/s decode ({:.3}s busy / {:.3}s wall, {} steps, peak KV {} bytes)",
         report.completions.len(),
         submitted,
         method.name(),
         eng.backend_name(),
         max_batch,
+        if recompute { " recompute" } else { "" },
         report.generated_tokens,
         report.tokens_per_sec(),
         report.busy_s,
         report.wall_s,
-        report.decode_steps
+        report.decode_steps,
+        report.kv_bytes_peak
     );
     let [l50, l90, l99] = report.latency_percentiles();
     let [t50, t90, t99] = report.ttft_percentiles();

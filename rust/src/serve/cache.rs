@@ -1,5 +1,5 @@
 //! `PackedWeightCache` — deploy-once weight preparation, shared across
-//! requests, decode steps and engines.
+//! requests, decode steps and engines, for both native architectures.
 //!
 //! The historical `CpuPrefillEngine` kept packed MXFP4 weights but let
 //! `gemm_mxfp4` re-decode every tile inside every step; related FP4 work
@@ -12,6 +12,20 @@
 //! hands shared references (`Arc`) to every engine. A prep-pass counter
 //! makes "weights are prepared once per cache, never per step" a testable
 //! regression invariant instead of folklore.
+//!
+//! Two architectures deploy through the same cache:
+//!
+//! * **MLP** (`native-mlp-lm`) — the order-2 token-pair model; stateless
+//!   decode (features are a pure function of the last two tokens).
+//! * **Transformer** (`native-llama-lm`) — the Llama-style decoder. Here
+//!   decode is stateful: every request owns a [`DecodeState`] holding a
+//!   per-layer KV cache, so a decode step appends one (K, V) pair per
+//!   layer instead of re-running the whole prefix. [`PackedWeightCache::
+//!   new_state`] fills the cache from the prompt in one batched prefill
+//!   pass; `recompute: true` opts a state out of KV caching entirely (the
+//!   O(L²) baseline the `fig7_transformer_decode` bench races). Both
+//!   paths run the identical per-row kernels, so their token streams are
+//!   bit-identical — pinned in `tests/serve_engine.rs`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -22,13 +36,14 @@ use crate::kernels::Backend;
 use crate::quant::fp8::mxfp8_rtn;
 use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
 use crate::train::model::{relu, write_pair_features};
-use crate::train::MlpLm;
+use crate::train::transformer::{add_assign, rmsnorm_rows, rope_row, silu};
+use crate::train::{MlpLm, NativeModel, TransformerLm};
 use crate::util::rng::Rng;
 
-/// Serving precision — the method axis of `repro serve` and the fig6
-/// bench. Distinct from [`crate::train::TrainMethod`]: serving never runs
-/// a backward pass, so the deployed forms are simpler (RTN instead of
-/// QuEST, no trust masks, no SR).
+/// Serving precision — the method axis of `repro serve` and the fig6/fig7
+/// benches. Distinct from [`crate::train::TrainMethod`]: serving never
+/// runs a backward pass, so the deployed forms are simpler (RTN instead
+/// of QuEST, no trust masks, no SR).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ServeMethod {
     /// Raw f32 weights and activations (the bf16 stand-in baseline).
@@ -67,7 +82,13 @@ impl ServeMethod {
 }
 
 /// One deployed linear layer (`[d_out, d_in]`), prepared once at build.
-enum PreparedLayer {
+struct PreparedLayer {
+    d_out: usize,
+    d_in: usize,
+    form: PreparedForm,
+}
+
+enum PreparedForm {
     /// raw f32 rows
     F32 { w: Vec<f32> },
     /// FP8 quant-dequantized rows (dense f32 carrier)
@@ -76,52 +97,198 @@ enum PreparedLayer {
     Quartet { packed: Mxfp4Tensor, dec: Vec<f32> },
 }
 
-/// Deploy-once weight store for the native MLP LM: embeddings in f32,
-/// every linear prepared under one [`ServeMethod`]. Shared via `Arc`
-/// between the prefill and autoregressive engines — and across every
-/// request and decode step inside them.
+impl PreparedLayer {
+    /// The only place weight quantization or decoding happens; every call
+    /// bumps the shared prep counter exactly once.
+    fn prepare(
+        w: &[f32],
+        d_out: usize,
+        d_in: usize,
+        method: ServeMethod,
+        be: &dyn Backend,
+        prep: &AtomicUsize,
+    ) -> PreparedLayer {
+        assert_eq!(w.len(), d_out * d_in, "weight shape mismatch");
+        prep.fetch_add(1, Ordering::Relaxed);
+        // RTN draws nothing from the RNG; the argument only satisfies the
+        // quantize signature
+        let mut rng = Rng::new(0);
+        let form = match method {
+            ServeMethod::F32 => PreparedForm::F32 { w: w.to_vec() },
+            ServeMethod::Mxfp8 => PreparedForm::Mxfp8 { w: mxfp8_rtn(w) },
+            ServeMethod::Quartet => {
+                let mut wh = w.to_vec();
+                be.block_hadamard(&mut wh, MX_GROUP);
+                let packed = be.quantize_mxfp4(&wh, d_out, d_in, QuantMode::Rtn, &mut rng);
+                let dec = be.decode_mxfp4(&packed);
+                PreparedForm::Quartet { packed, dec }
+            }
+        };
+        PreparedLayer { d_out, d_in, form }
+    }
+
+    /// Apply the layer to owned `[rows, d_in]` activations; only the
+    /// activation path runs per call — the weight side was staged at
+    /// build. Every output row is a pure function of its own input row,
+    /// which is what keeps decode independent of batch composition.
+    fn apply(&self, x: Vec<f32>, rows: usize, be: &dyn Backend, rng: &mut Rng) -> Vec<f32> {
+        debug_assert_eq!(x.len(), rows * self.d_in);
+        match &self.form {
+            PreparedForm::F32 { w } => be.gemm_f32(&x, w, rows, self.d_out, self.d_in),
+            PreparedForm::Mxfp8 { w } => {
+                let xq = mxfp8_rtn(&x);
+                be.gemm_f32(&xq, w, rows, self.d_out, self.d_in)
+            }
+            PreparedForm::Quartet { dec, .. } => {
+                let mut xh = x;
+                be.block_hadamard(&mut xh, MX_GROUP);
+                let xq = be.quantize_mxfp4(&xh, rows, self.d_in, QuantMode::Rtn, rng);
+                be.gemm_mxfp4_predec(&xq, dec, self.d_out)
+            }
+        }
+    }
+
+    fn weight_bytes(&self) -> usize {
+        match &self.form {
+            PreparedForm::F32 { w } | PreparedForm::Mxfp8 { w } => w.len() * 4,
+            PreparedForm::Quartet { packed, .. } => packed.storage_bytes(),
+        }
+    }
+}
+
+/// One deployed transformer block (norm gains f32, the seven matmuls
+/// prepared under the serving method).
+struct PreparedBlock {
+    attn_norm: Vec<f32>,
+    wq: PreparedLayer,
+    wk: PreparedLayer,
+    wv: PreparedLayer,
+    wo: PreparedLayer,
+    mlp_norm: Vec<f32>,
+    w_gate: PreparedLayer,
+    w_up: PreparedLayer,
+    w_down: PreparedLayer,
+}
+
+struct PreparedTransformer {
+    /// `[vocab, d_model]` — the f32 lookup table (the gather never
+    /// quantizes)
+    tok_emb: Vec<f32>,
+    blocks: Vec<PreparedBlock>,
+    final_norm: Vec<f32>,
+    /// the tied vocab head: the same embedding values prepared under the
+    /// serving method, like every other matmul weight
+    head: PreparedLayer,
+    d_model: usize,
+    n_heads: usize,
+    head_dim: usize,
+}
+
+enum PreparedArch {
+    Mlp {
+        tok_emb: Vec<f32>,
+        layers: Vec<PreparedLayer>,
+    },
+    Transformer(PreparedTransformer),
+}
+
+/// Per-layer KV buffers of one request, laid out `[n_heads, cap, head_dim]`
+/// per tensor so each head's prefix is a contiguous `[len, head_dim]`
+/// slice the attention kernel consumes directly.
+pub struct LayerKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl LayerKv {
+    fn zeros(n_heads: usize, cap: usize, hd: usize) -> LayerKv {
+        LayerKv { k: vec![0.0f32; n_heads * cap * hd], v: vec![0.0f32; n_heads * cap * hd] }
+    }
+}
+
+/// Transformer decode state: the token history plus the per-layer KV
+/// cache. Invariant between steps: `pos == history.len() - 1` — positions
+/// `0..pos` are in the cache, `history[pos]` is the token the next decode
+/// step consumes.
+pub struct TfDecodeState {
+    pub history: Vec<i32>,
+    pub pos: usize,
+    pub kv: Vec<LayerKv>,
+    pub cap: usize,
+}
+
+/// Per-request decode state — architecture-specific; created by
+/// [`PackedWeightCache::new_state`], advanced by
+/// [`PackedWeightCache::decode_forward`] + [`DecodeState::push_token`],
+/// and dropped (reclaiming its KV memory) when the engine evicts the
+/// request.
+pub enum DecodeState {
+    /// order-2 MLP: decode conditions on the last two tokens only
+    Mlp { prev2: i32, prev: i32 },
+    Transformer(Box<TfDecodeState>),
+}
+
+impl DecodeState {
+    /// Record a sampled token as the newest element of the context.
+    pub fn push_token(&mut self, tok: i32) {
+        match self {
+            DecodeState::Mlp { prev2, prev } => {
+                *prev2 = *prev;
+                *prev = tok;
+            }
+            DecodeState::Transformer(ts) => ts.history.push(tok),
+        }
+    }
+
+    /// Bytes of KV memory this request holds (0 for the MLP and for
+    /// recompute-mode states, which keep no cache by construction).
+    pub fn kv_bytes(&self) -> usize {
+        match self {
+            DecodeState::Mlp { .. } => 0,
+            DecodeState::Transformer(ts) => {
+                ts.kv.iter().map(|l| (l.k.len() + l.v.len()) * 4).sum()
+            }
+        }
+    }
+}
+
+/// One forward segment: `n` fresh positions starting at `pos0`, appended
+/// into (and attended against) the segment's own KV buffers.
+struct TfSeg<'a> {
+    kv: &'a mut Vec<LayerKv>,
+    pos0: usize,
+    n: usize,
+    cap: usize,
+}
+
+/// Deploy-once weight store for a native checkpoint: embeddings/norms in
+/// f32, every matmul weight prepared under one [`ServeMethod`]. Shared
+/// via `Arc` between engines — and across every request and decode step
+/// inside them.
 pub struct PackedWeightCache {
     method: ServeMethod,
     pub vocab: usize,
+    /// MLP: per-token embedding width (features are `2·d_emb`);
+    /// transformer: `d_model`
     pub d_emb: usize,
+    /// MLP: hidden width; transformer: `d_ff`
     pub d_hidden: usize,
+    /// MLP: extra hidden layers; transformer: `n_layers`
     pub n_hidden: usize,
-    tok_emb: Vec<f32>,
-    layers: Vec<PreparedLayer>,
-    /// (d_out, d_in) per layer, input → output order
-    dims: Vec<(usize, usize)>,
+    arch: PreparedArch,
     /// per-layer preparation passes executed — must equal `n_layers()`
     /// after build and never move again (the prep-once regression hook)
     prep_passes: AtomicUsize,
 }
 
 impl PackedWeightCache {
-    /// Prepare every layer of `model` for serving under `method`. This is
-    /// the only place weight quantization or decoding happens; engines
-    /// built on the returned cache do zero weight prep per step.
+    /// Prepare every layer of an MLP `model` for serving under `method`.
     pub fn build(model: &MlpLm, method: ServeMethod, be: &dyn Backend) -> Arc<PackedWeightCache> {
         let prep_passes = AtomicUsize::new(0);
-        // RTN draws nothing from the RNG; the argument only satisfies the
-        // quantize signature
-        let mut rng = Rng::new(0);
         let layers = model
             .layers
             .iter()
-            .map(|l| {
-                prep_passes.fetch_add(1, Ordering::Relaxed);
-                match method {
-                    ServeMethod::F32 => PreparedLayer::F32 { w: l.w.clone() },
-                    ServeMethod::Mxfp8 => PreparedLayer::Mxfp8 { w: mxfp8_rtn(&l.w) },
-                    ServeMethod::Quartet => {
-                        let mut wh = l.w.clone();
-                        be.block_hadamard(&mut wh, MX_GROUP);
-                        let packed =
-                            be.quantize_mxfp4(&wh, l.d_out, l.d_in, QuantMode::Rtn, &mut rng);
-                        let dec = be.decode_mxfp4(&packed);
-                        PreparedLayer::Quartet { packed, dec }
-                    }
-                }
-            })
+            .map(|l| PreparedLayer::prepare(&l.w, l.d_out, l.d_in, method, be, &prep_passes))
             .collect();
         Arc::new(PackedWeightCache {
             method,
@@ -129,66 +296,150 @@ impl PackedWeightCache {
             d_emb: model.cfg.d_emb,
             d_hidden: model.cfg.d_hidden,
             n_hidden: model.cfg.n_hidden,
-            tok_emb: model.tok_emb.clone(),
-            layers,
-            dims: model.cfg.layer_dims(),
+            arch: PreparedArch::Mlp { tok_emb: model.tok_emb.clone(), layers },
             prep_passes,
         })
+    }
+
+    /// Prepare every block of a transformer `model` for serving under
+    /// `method`: the seven matmuls per block plus the tied vocab head are
+    /// quantized/decoded once; the embedding lookup table and norm gains
+    /// stay f32.
+    pub fn build_transformer(
+        model: &TransformerLm,
+        method: ServeMethod,
+        be: &dyn Backend,
+    ) -> Arc<PackedWeightCache> {
+        let prep_passes = AtomicUsize::new(0);
+        let c = &model.cfg;
+        let (d, ff) = (c.d_model, c.d_ff);
+        let blocks = model
+            .blocks
+            .iter()
+            .map(|b| PreparedBlock {
+                attn_norm: b.attn_norm.clone(),
+                wq: PreparedLayer::prepare(&b.wq.w, d, d, method, be, &prep_passes),
+                wk: PreparedLayer::prepare(&b.wk.w, d, d, method, be, &prep_passes),
+                wv: PreparedLayer::prepare(&b.wv.w, d, d, method, be, &prep_passes),
+                wo: PreparedLayer::prepare(&b.wo.w, d, d, method, be, &prep_passes),
+                mlp_norm: b.mlp_norm.clone(),
+                w_gate: PreparedLayer::prepare(&b.w_gate.w, ff, d, method, be, &prep_passes),
+                w_up: PreparedLayer::prepare(&b.w_up.w, ff, d, method, be, &prep_passes),
+                w_down: PreparedLayer::prepare(&b.w_down.w, d, ff, method, be, &prep_passes),
+            })
+            .collect();
+        Arc::new(PackedWeightCache {
+            method,
+            vocab: c.vocab,
+            d_emb: c.d_model,
+            d_hidden: c.d_ff,
+            n_hidden: c.n_layers,
+            arch: PreparedArch::Transformer(PreparedTransformer {
+                tok_emb: model.tok_emb.clone(),
+                blocks,
+                final_norm: model.final_norm.clone(),
+                head: PreparedLayer::prepare(
+                    &model.tok_emb,
+                    c.vocab,
+                    d,
+                    method,
+                    be,
+                    &prep_passes,
+                ),
+                d_model: c.d_model,
+                n_heads: c.n_heads,
+                head_dim: c.head_dim(),
+            }),
+            prep_passes,
+        })
+    }
+
+    /// Prepare whichever architecture a loaded checkpoint carries.
+    pub fn build_model(
+        model: &NativeModel,
+        method: ServeMethod,
+        be: &dyn Backend,
+    ) -> Arc<PackedWeightCache> {
+        match model {
+            NativeModel::Mlp(m) => Self::build(m, method, be),
+            NativeModel::Transformer(m) => Self::build_transformer(m, method, be),
+        }
     }
 
     pub fn method(&self) -> ServeMethod {
         self.method
     }
 
+    pub fn arch_name(&self) -> &'static str {
+        match &self.arch {
+            PreparedArch::Mlp { .. } => "mlp",
+            PreparedArch::Transformer(_) => "transformer",
+        }
+    }
+
+    /// Number of prepared (quantized) linears: the MLP stack depth, or
+    /// 7 matmuls per transformer block plus the tied vocab head.
     pub fn n_layers(&self) -> usize {
-        self.layers.len()
+        match &self.arch {
+            PreparedArch::Mlp { layers, .. } => layers.len(),
+            PreparedArch::Transformer(tf) => 7 * tf.blocks.len() + 1,
+        }
     }
 
     pub fn tok_emb(&self) -> &[f32] {
-        &self.tok_emb
+        match &self.arch {
+            PreparedArch::Mlp { tok_emb, .. } => tok_emb,
+            PreparedArch::Transformer(tf) => &tf.tok_emb,
+        }
     }
 
     /// Weight preparation passes executed so far. The invariant engines
     /// must keep: equal to [`PackedWeightCache::n_layers`] right after
-    /// [`PackedWeightCache::build`], and unchanged forever after — steps
-    /// serve from the cache, they never re-quantize or re-decode.
+    /// build, and unchanged forever after — steps serve from the cache,
+    /// they never re-quantize or re-decode.
     pub fn prep_passes(&self) -> usize {
         self.prep_passes.load(Ordering::Relaxed)
     }
 
-    /// Bytes the deployed weights occupy (quartet: packed nibbles +
-    /// scales, i.e. real checkpoint traffic; dense methods: 4 bytes per
+    /// Bytes the deployed matmul weights occupy (quartet: packed nibbles
+    /// + scales, i.e. real checkpoint traffic; dense methods: 4 bytes per
     /// value).
     pub fn weight_bytes(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| match l {
-                PreparedLayer::F32 { w } | PreparedLayer::Mxfp8 { w } => w.len() * 4,
-                PreparedLayer::Quartet { packed, .. } => packed.storage_bytes(),
-            })
-            .sum()
+        match &self.arch {
+            PreparedArch::Mlp { layers, .. } => layers.iter().map(|l| l.weight_bytes()).sum(),
+            PreparedArch::Transformer(tf) => {
+                tf.blocks
+                    .iter()
+                    .flat_map(|b| {
+                        [&b.wq, &b.wk, &b.wv, &b.wo, &b.w_gate, &b.w_up, &b.w_down]
+                    })
+                    .map(|l| l.weight_bytes())
+                    .sum::<usize>()
+                    + tf.head.weight_bytes()
+            }
+        }
+    }
+
+    fn mlp_layers(&self) -> (&[f32], &[PreparedLayer]) {
+        match &self.arch {
+            PreparedArch::Mlp { tok_emb, layers } => (tok_emb, layers),
+            PreparedArch::Transformer(_) => {
+                panic!("MLP-only entry point called on a transformer cache")
+            }
+        }
     }
 
     /// Write the order-2 feature row for the context `(prev2, prev)` —
-    /// the exact layout the checkpoint was trained with
+    /// the exact layout the MLP checkpoint was trained with
     /// (`train::model::write_pair_features`), so serving can never drift
-    /// from training.
+    /// from training. MLP caches only.
     pub fn write_features(&self, prev2: i32, prev: i32, dst: &mut [f32]) {
-        write_pair_features(
-            &self.tok_emb,
-            self.d_emb,
-            self.vocab,
-            prev2 as usize,
-            prev as usize,
-            dst,
-        );
+        let (tok_emb, _) = self.mlp_layers();
+        write_pair_features(tok_emb, self.d_emb, self.vocab, prev2 as usize, prev as usize, dst);
     }
 
-    /// Apply layer `li` to owned `[rows, d_in]` activations under the
-    /// serving precision; returns `[rows, d_out]`. Weight-side prep was
-    /// all done at build — only the activation path runs per call, and it
-    /// takes the buffer by value so the packed path's in-place Hadamard
-    /// never copies on the decode-step hot loop.
+    /// Apply MLP layer `li` to owned `[rows, d_in]` activations under the
+    /// serving precision; returns `[rows, d_out]`.
     pub fn layer_forward(
         &self,
         li: usize,
@@ -197,26 +448,13 @@ impl PackedWeightCache {
         be: &dyn Backend,
         rng: &mut Rng,
     ) -> Vec<f32> {
-        let (d_out, d_in) = self.dims[li];
-        debug_assert_eq!(x.len(), rows * d_in);
-        match &self.layers[li] {
-            PreparedLayer::F32 { w } => be.gemm_f32(&x, w, rows, d_out, d_in),
-            PreparedLayer::Mxfp8 { w } => {
-                let xq = mxfp8_rtn(&x);
-                be.gemm_f32(&xq, w, rows, d_out, d_in)
-            }
-            PreparedLayer::Quartet { dec, .. } => {
-                let mut xh = x;
-                be.block_hadamard(&mut xh, MX_GROUP);
-                let xq = be.quantize_mxfp4(&xh, rows, d_in, QuantMode::Rtn, rng);
-                be.gemm_mxfp4_predec(&xq, dec, d_out)
-            }
-        }
+        let (_, layers) = self.mlp_layers();
+        layers[li].apply(x, rows, be, rng)
     }
 
-    /// The hidden stack only (every layer but the vocab projection), ReLU
-    /// between layers — prefill runs this over all positions and projects
-    /// just the last one.
+    /// The MLP hidden stack only (every layer but the vocab projection),
+    /// ReLU between layers — prefill runs this over all positions and
+    /// projects just the last one.
     pub fn hidden_forward(
         &self,
         feats: Vec<f32>,
@@ -224,17 +462,17 @@ impl PackedWeightCache {
         be: &dyn Backend,
         rng: &mut Rng,
     ) -> Vec<f32> {
+        let (_, layers) = self.mlp_layers();
         let mut x = feats;
-        for li in 0..self.layers.len() - 1 {
-            x = self.layer_forward(li, x, rows, be, rng);
+        for layer in &layers[..layers.len() - 1] {
+            x = layer.apply(x, rows, be, rng);
             relu(&mut x);
         }
         x
     }
 
-    /// Full next-token readout for `[rows, 2·d_emb]` feature rows: hidden
-    /// stack, then the vocab projection — the per-decode-step forward the
-    /// autoregressive engine batches across requests.
+    /// Full MLP next-token readout for `[rows, 2·d_emb]` feature rows:
+    /// hidden stack, then the vocab projection.
     pub fn forward(
         &self,
         feats: Vec<f32>,
@@ -242,8 +480,275 @@ impl PackedWeightCache {
         be: &dyn Backend,
         rng: &mut Rng,
     ) -> Vec<f32> {
+        let (_, layers) = self.mlp_layers();
         let x = self.hidden_forward(feats, rows, be, rng);
-        self.layer_forward(self.layers.len() - 1, x, rows, be, rng)
+        layers[layers.len() - 1].apply(x, rows, be, rng)
+    }
+
+    // ---- architecture-agnostic decode -------------------------------------
+
+    /// Build the decode state for a request. For the transformer this
+    /// allocates the KV buffers (capacity `prompt + max_new_tokens`) and
+    /// fills them from the prompt prefix in ONE batched prefill pass;
+    /// `recompute: true` skips both — the state then re-runs its whole
+    /// history every step (the baseline the fig7 bench measures against).
+    pub fn new_state(
+        &self,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        be: &dyn Backend,
+        recompute: bool,
+    ) -> DecodeState {
+        match &self.arch {
+            PreparedArch::Mlp { .. } => {
+                let (prev2, prev) = match prompt.len() {
+                    0 => (0, 0),
+                    1 => (0, prompt[0]),
+                    n => (prompt[n - 2], prompt[n - 1]),
+                };
+                DecodeState::Mlp { prev2, prev }
+            }
+            PreparedArch::Transformer(tf) => {
+                // an empty prompt starts from the zero-token pad, like
+                // training's position 0
+                let history: Vec<i32> =
+                    if prompt.is_empty() { vec![0] } else { prompt.to_vec() };
+                let len = history.len();
+                let (kv, cap) = if recompute {
+                    (Vec::new(), 0)
+                } else {
+                    let cap = len + max_new_tokens;
+                    let kv = (0..tf.blocks.len())
+                        .map(|_| LayerKv::zeros(tf.n_heads, cap, tf.head_dim))
+                        .collect();
+                    (kv, cap)
+                };
+                let mut ts = Box::new(TfDecodeState { history, pos: len - 1, kv, cap });
+                if !recompute && len > 1 {
+                    // prefill: one batched pass over the prompt prefix
+                    let n = len - 1;
+                    let cap0 = ts.cap;
+                    let x = self.tf_gather(tf, &ts.history[..n]);
+                    let mut segs = vec![TfSeg { kv: &mut ts.kv, pos0: 0, n, cap: cap0 }];
+                    let _ = self.tf_forward(tf, x, &mut segs, be);
+                }
+                DecodeState::Transformer(ts)
+            }
+        }
+    }
+
+    /// One batched decode forward over every state: returns `[n, vocab]`
+    /// next-token logits, one row per state, and advances the transformer
+    /// KV positions. With `recompute` the transformer path re-runs each
+    /// state's full history through the identical kernels instead of
+    /// reading its KV cache — bit-identical logits, O(context) more work.
+    pub fn decode_forward(
+        &self,
+        states: &mut [&mut DecodeState],
+        be: &dyn Backend,
+        recompute: bool,
+    ) -> Vec<f32> {
+        match &self.arch {
+            PreparedArch::Mlp { .. } => {
+                let d_in = 2 * self.d_emb;
+                let n = states.len();
+                let mut x = vec![0.0f32; n * d_in];
+                for (i, st) in states.iter().enumerate() {
+                    if let DecodeState::Mlp { prev2, prev } = &**st {
+                        self.write_features(*prev2, *prev, &mut x[i * d_in..(i + 1) * d_in]);
+                    } else {
+                        panic!("transformer state handed to an MLP cache");
+                    }
+                }
+                let mut rng = Rng::new(0);
+                self.forward(x, n, be, &mut rng)
+            }
+            PreparedArch::Transformer(tf) => {
+                if recompute {
+                    self.tf_decode_recompute(tf, states, be)
+                } else {
+                    self.tf_decode_cached(tf, states, be)
+                }
+            }
+        }
+    }
+
+    fn tf_gather(&self, tf: &PreparedTransformer, tokens: &[i32]) -> Vec<f32> {
+        let d = tf.d_model;
+        let mut x = vec![0.0f32; tokens.len() * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let src = (t as usize % self.vocab) * d;
+            x[i * d..(i + 1) * d].copy_from_slice(&tf.tok_emb[src..src + d]);
+        }
+        x
+    }
+
+    /// KV-cached decode: ONE batched forward for the newest token of
+    /// every state (the quantized linears amortize across the whole
+    /// batch; attention reads each request's cached prefix).
+    fn tf_decode_cached(
+        &self,
+        tf: &PreparedTransformer,
+        states: &mut [&mut DecodeState],
+        be: &dyn Backend,
+    ) -> Vec<f32> {
+        let d = tf.d_model;
+        let n = states.len();
+        let mut x = vec![0.0f32; n * d];
+        let mut segs: Vec<TfSeg<'_>> = Vec::with_capacity(n);
+        for (i, st) in states.iter_mut().enumerate() {
+            let ts = match &mut **st {
+                DecodeState::Transformer(ts) => ts,
+                DecodeState::Mlp { .. } => panic!("mlp state handed to a transformer cache"),
+            };
+            assert_eq!(ts.pos + 1, ts.history.len(), "decode state out of sync");
+            let (pos0, cap) = (ts.pos, ts.cap);
+            let tok = ts.history[pos0] as usize % self.vocab;
+            x[i * d..(i + 1) * d].copy_from_slice(&tf.tok_emb[tok * d..(tok + 1) * d]);
+            segs.push(TfSeg { kv: &mut ts.kv, pos0, n: 1, cap });
+        }
+        let hn = self.tf_forward(tf, x, &mut segs, be);
+        // tied head under the serving method (weights staged at build)
+        let mut rng = Rng::new(0);
+        let logits = tf.head.apply(hn, n, be, &mut rng);
+        for st in states.iter_mut() {
+            if let DecodeState::Transformer(ts) = &mut **st {
+                ts.pos += 1;
+            }
+        }
+        logits
+    }
+
+    /// Recompute decode: every step re-runs each state's full history
+    /// through a throwaway KV scratch — same kernels, same per-row math,
+    /// O(context) extra work per token. The last position's logits are
+    /// bit-identical to the cached path's.
+    fn tf_decode_recompute(
+        &self,
+        tf: &PreparedTransformer,
+        states: &mut [&mut DecodeState],
+        be: &dyn Backend,
+    ) -> Vec<f32> {
+        let d = tf.d_model;
+        let mut logits = Vec::with_capacity(states.len() * self.vocab);
+        for st in states.iter_mut() {
+            let ts = match &mut **st {
+                DecodeState::Transformer(ts) => ts,
+                DecodeState::Mlp { .. } => panic!("mlp state handed to a transformer cache"),
+            };
+            assert_eq!(ts.pos + 1, ts.history.len(), "decode state out of sync");
+            let len = ts.history.len();
+            let x = self.tf_gather(tf, &ts.history);
+            let mut scratch: Vec<LayerKv> = (0..tf.blocks.len())
+                .map(|_| LayerKv::zeros(tf.n_heads, len, tf.head_dim))
+                .collect();
+            let mut segs = vec![TfSeg { kv: &mut scratch, pos0: 0, n: len, cap: len }];
+            let hn = self.tf_forward(tf, x, &mut segs, be);
+            let last = hn[(len - 1) * d..len * d].to_vec();
+            let mut rng = Rng::new(0);
+            logits.extend(tf.head.apply(last, 1, be, &mut rng));
+            ts.pos += 1;
+        }
+        logits
+    }
+
+    /// Shared transformer forward: `x` holds the embedding rows of every
+    /// segment's fresh positions, concatenated. Per block, the seven
+    /// matmuls run ONCE over all rows; per segment, the fresh K/V rows
+    /// are appended into the segment's own cache and attention reads the
+    /// contiguous per-head prefix. Returns the final-normed hidden rows.
+    /// Prefill, cached decode and the recompute baseline all flow through
+    /// this one function, which is why their numerics cannot diverge.
+    fn tf_forward(
+        &self,
+        tf: &PreparedTransformer,
+        x: Vec<f32>,
+        segs: &mut [TfSeg<'_>],
+        be: &dyn Backend,
+    ) -> Vec<f32> {
+        let d = tf.d_model;
+        let h = tf.n_heads;
+        let hd = tf.head_dim;
+        let rows = x.len() / d;
+        debug_assert_eq!(rows, segs.iter().map(|s| s.n).sum::<usize>());
+        let scale = 1.0 / (hd as f32).sqrt();
+        // the deployed forward draws nothing from the RNG (RTN only)
+        let mut rng = Rng::new(0);
+        let mut x = x;
+        for (li, block) in tf.blocks.iter().enumerate() {
+            let (a, _) = rmsnorm_rows(&x, &block.attn_norm, d);
+            let mut q = block.wq.apply(a.clone(), rows, be, &mut rng);
+            let mut k = block.wk.apply(a.clone(), rows, be, &mut rng);
+            let v = block.wv.apply(a, rows, be, &mut rng);
+            let mut r0 = 0usize;
+            for seg in segs.iter() {
+                for i in 0..seg.n {
+                    let pos = seg.pos0 + i;
+                    let r = r0 + i;
+                    rope_row(&mut q[r * d..(r + 1) * d], h, hd, pos, false);
+                    rope_row(&mut k[r * d..(r + 1) * d], h, hd, pos, false);
+                }
+                r0 += seg.n;
+            }
+            let mut ctx = vec![0.0f32; rows * d];
+            let mut r0 = 0usize;
+            for seg in segs.iter_mut() {
+                let sk = seg.pos0 + seg.n;
+                assert!(sk <= seg.cap, "KV capacity exceeded ({sk} > {})", seg.cap);
+                let lkv = &mut seg.kv[li];
+                for i in 0..seg.n {
+                    let p = seg.pos0 + i;
+                    let r = r0 + i;
+                    for hh in 0..h {
+                        let src = r * d + hh * hd;
+                        let dst = (hh * seg.cap + p) * hd;
+                        lkv.k[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                        lkv.v[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+                    }
+                }
+                // one hook call per (segment, head): the per-head KV
+                // prefix is a contiguous slice at stride `cap`, so no
+                // packing copy is needed. Serving cost is dominated by
+                // the quantized linears (O(d²) per row vs O(ctx·hd)
+                // here), so the groups=1 calls staying on the scalar
+                // path is a deliberate trade against O(ctx) copies.
+                let mut qh = vec![0.0f32; seg.n * hd];
+                for hh in 0..h {
+                    for i in 0..seg.n {
+                        let src = (r0 + i) * d + hh * hd;
+                        qh[i * hd..(i + 1) * hd].copy_from_slice(&q[src..src + hd]);
+                    }
+                    let koff = hh * seg.cap * hd;
+                    let (ctxh, _) = be.attention_causal(
+                        &qh,
+                        &lkv.k[koff..koff + sk * hd],
+                        &lkv.v[koff..koff + sk * hd],
+                        1,
+                        seg.n,
+                        sk,
+                        hd,
+                        seg.pos0,
+                        scale,
+                    );
+                    for i in 0..seg.n {
+                        let dst = (r0 + i) * d + hh * hd;
+                        ctx[dst..dst + hd].copy_from_slice(&ctxh[i * hd..(i + 1) * hd]);
+                    }
+                }
+                r0 += seg.n;
+            }
+            let attn_out = block.wo.apply(ctx, rows, be, &mut rng);
+            add_assign(&mut x, &attn_out);
+            let (m, _) = rmsnorm_rows(&x, &block.mlp_norm, d);
+            let gate = block.w_gate.apply(m.clone(), rows, be, &mut rng);
+            let up = block.w_up.apply(m, rows, be, &mut rng);
+            let hsw: Vec<f32> =
+                gate.iter().zip(&up).map(|(&g0, &u0)| silu(g0) * u0).collect();
+            let down = block.w_down.apply(hsw, rows, be, &mut rng);
+            add_assign(&mut x, &down);
+        }
+        let (hn, _) = rmsnorm_rows(&x, &tf.final_norm, d);
+        hn
     }
 }
 
@@ -251,6 +756,7 @@ impl PackedWeightCache {
 mod tests {
     use super::*;
     use crate::kernels::{ParallelBackend, ScalarBackend};
+    use crate::train::transformer::TransformerConfig;
     use crate::train::{ModelConfig, TrainMethod};
 
     fn model() -> MlpLm {
@@ -262,6 +768,19 @@ mod tests {
             method: TrainMethod::Quartet,
         };
         MlpLm::init(cfg, 11).unwrap()
+    }
+
+    fn tf_model() -> TransformerLm {
+        let cfg = TransformerConfig {
+            vocab: 96,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 32,
+            seq: 8,
+            method: TrainMethod::Quartet,
+        };
+        TransformerLm::init(cfg, 17).unwrap()
     }
 
     #[test]
@@ -279,6 +798,20 @@ mod tests {
             let cache = PackedWeightCache::build(&m, method, &ScalarBackend);
             assert_eq!(cache.n_layers(), 3); // input + 1 hidden + vocab
             assert_eq!(cache.prep_passes(), 3, "{}", method.name());
+            assert_eq!(cache.arch_name(), "mlp");
+        }
+    }
+
+    #[test]
+    fn transformer_build_preps_seven_linears_per_block_plus_head() {
+        let m = tf_model();
+        for method in ServeMethod::ALL {
+            let cache = PackedWeightCache::build_transformer(&m, method, &ScalarBackend);
+            // 2 blocks × 7 matmuls + the tied vocab head
+            assert_eq!(cache.n_layers(), 15, "{}", method.name());
+            assert_eq!(cache.prep_passes(), 15, "{}", method.name());
+            assert_eq!(cache.arch_name(), "transformer");
+            assert_eq!(cache.vocab, 96);
         }
     }
 
@@ -319,6 +852,71 @@ mod tests {
     }
 
     #[test]
+    fn transformer_decode_is_backend_invariant_and_prep_free() {
+        let m = tf_model();
+        for method in ServeMethod::ALL {
+            let mut outs: Vec<Vec<f32>> = Vec::new();
+            for be in [
+                Box::new(ScalarBackend) as Box<dyn Backend>,
+                Box::new(ParallelBackend::with_threads(3)),
+            ] {
+                let cache = PackedWeightCache::build_transformer(&m, method, &*be);
+                let mut s1 = cache.new_state(&[1, 2, 3], 4, &*be, false);
+                let mut s2 = cache.new_state(&[5], 4, &*be, false);
+                let mut states = vec![&mut s1, &mut s2];
+                let logits = cache.decode_forward(&mut states, &*be, false);
+                assert_eq!(logits.len(), 2 * cache.vocab);
+                assert_eq!(cache.prep_passes(), cache.n_layers(), "decode re-prepped");
+                outs.push(logits);
+            }
+            assert_eq!(outs[0], outs[1], "{}: backends disagree", method.name());
+        }
+    }
+
+    #[test]
+    fn transformer_prefill_matches_stepwise_feeding() {
+        // feeding the prompt one token at a time through decode_forward
+        // must leave the same logits as the one-pass prefill — same
+        // kernels, same rows, different batching
+        let m = tf_model();
+        let be = ScalarBackend;
+        let cache = PackedWeightCache::build_transformer(&m, ServeMethod::Quartet, &be);
+        let prompt = [7i32, 11, 3, 42, 9];
+        // prefill path
+        let mut a = cache.new_state(&prompt, 4, &be, false);
+        let la = {
+            let mut states = vec![&mut a];
+            cache.decode_forward(&mut states, &be, false)
+        };
+        // stepwise path: start from the first token only, feed the rest
+        let mut b = cache.new_state(&prompt[..1], prompt.len() + 3, &be, false);
+        let mut lb = Vec::new();
+        for step in 0..prompt.len() {
+            let mut states = vec![&mut b];
+            lb = cache.decode_forward(&mut states, &be, false);
+            if step + 1 < prompt.len() {
+                b.push_token(prompt[step + 1]);
+            }
+        }
+        assert_eq!(la, lb, "prefill and stepwise decode disagree");
+    }
+
+    #[test]
+    fn decode_state_kv_accounting() {
+        let m = tf_model();
+        let be = ScalarBackend;
+        let cache = PackedWeightCache::build_transformer(&m, ServeMethod::Quartet, &be);
+        let cached = cache.new_state(&[1, 2, 3], 5, &be, false);
+        // 2 layers × (K + V) × 2 heads × cap 8 × hd 16 × 4 bytes
+        assert_eq!(cached.kv_bytes(), 2 * 2 * 2 * 8 * 16 * 4);
+        let rec = cache.new_state(&[1, 2, 3], 5, &be, true);
+        assert_eq!(rec.kv_bytes(), 0, "recompute states must hold no KV");
+        // MLP states hold no KV either
+        let mlp_cache = PackedWeightCache::build(&model(), ServeMethod::Quartet, &be);
+        assert_eq!(mlp_cache.new_state(&[1, 2], 5, &be, false).kv_bytes(), 0);
+    }
+
+    #[test]
     fn quartet_bytes_are_packed_fp4() {
         let m = model();
         let q = PackedWeightCache::build(&m, ServeMethod::Quartet, &ScalarBackend);
@@ -330,5 +928,10 @@ mod tests {
             q.weight_bytes(),
             f.weight_bytes()
         );
+        let tq = PackedWeightCache::build_transformer(&tf_model(), ServeMethod::Quartet,
+                                                      &ScalarBackend);
+        let tf32 = PackedWeightCache::build_transformer(&tf_model(), ServeMethod::F32,
+                                                        &ScalarBackend);
+        assert!(tq.weight_bytes() * 7 < tf32.weight_bytes());
     }
 }

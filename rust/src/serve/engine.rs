@@ -29,7 +29,7 @@ use anyhow::{bail, Result};
 
 use crate::kernels::Backend;
 use crate::serve::argmax_logit;
-use crate::serve::cache::PackedWeightCache;
+use crate::serve::cache::{DecodeState, PackedWeightCache};
 use crate::util::rng::Rng;
 use crate::util::stats::percentile;
 
@@ -108,11 +108,13 @@ impl Sampling {
     }
 }
 
-/// One active decode slot.
+/// One active decode slot. The architecture-specific context — the MLP's
+/// last-two-token pair, or the transformer's token history + per-layer KV
+/// cache — lives in `state`; evicting the slot drops it, reclaiming the
+/// KV memory.
 struct Slot {
     req: GenRequest,
-    prev2: i32,
-    prev: i32,
+    state: DecodeState,
     generated: Vec<i32>,
     rng: Rng,
     admitted_s: f64,
@@ -130,10 +132,15 @@ pub struct ServeEngine {
     /// arrived, waiting for a free slot (FIFO)
     waiting: VecDeque<GenRequest>,
     active: Vec<Slot>,
+    /// decode without KV caching: every step re-runs each request's full
+    /// history (the O(context²) baseline fig7 races; MLP decode is
+    /// stateless, so there the flag changes nothing)
+    recompute: bool,
     clock_s: f64,
     busy_s: f64,
     steps: usize,
     generated_tokens: usize,
+    kv_bytes_peak: usize,
 }
 
 impl ServeEngine {
@@ -152,11 +159,33 @@ impl ServeEngine {
             future: VecDeque::new(),
             waiting: VecDeque::new(),
             active: Vec::new(),
+            recompute: false,
             clock_s: 0.0,
             busy_s: 0.0,
             steps: 0,
             generated_tokens: 0,
+            kv_bytes_peak: 0,
         }
+    }
+
+    /// Disable (or re-enable) KV-cached decode. Call before the first
+    /// submit: states built under one mode are not revisited.
+    pub fn set_recompute(&mut self, recompute: bool) {
+        assert!(
+            self.active.is_empty() && self.waiting.is_empty() && self.future.is_empty(),
+            "set_recompute must run before any request is submitted"
+        );
+        self.recompute = recompute;
+    }
+
+    /// KV memory currently held by active requests.
+    pub fn kv_bytes_active(&self) -> usize {
+        self.active.iter().map(|s| s.state.kv_bytes()).sum()
+    }
+
+    /// High-water mark of KV memory across the engine's lifetime.
+    pub fn kv_bytes_peak(&self) -> usize {
+        self.kv_bytes_peak
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -219,6 +248,7 @@ impl ServeEngine {
             self.waiting.push_back(r);
         }
         let mut done = Vec::new();
+        let t0 = Instant::now();
         while self.active.len() < self.max_batch {
             let Some(req) = self.waiting.pop_front() else { break };
             let wait = (self.clock_s - req.arrival_s).max(0.0);
@@ -233,15 +263,17 @@ impl ServeEngine {
                 });
                 continue;
             }
-            let (prev2, prev) = match req.prompt.len() {
-                0 => (0, 0),
-                1 => (0, req.prompt[0]),
-                n => (req.prompt[n - 2], req.prompt[n - 1]),
-            };
+            // architecture-specific decode context; for the transformer
+            // this runs the batched prompt prefill into the KV cache
+            let state = self.cache.new_state(
+                &req.prompt,
+                req.max_new_tokens,
+                &*self.backend,
+                self.recompute,
+            );
             let rng = Rng::new(self.sampling.seed).fold(req.id);
             self.active.push(Slot {
-                prev2,
-                prev,
+                state,
                 generated: Vec::new(),
                 rng,
                 admitted_s: self.clock_s,
@@ -249,6 +281,11 @@ impl ServeEngine {
                 req,
             });
         }
+        // prefill is real decode-side compute: it advances the virtual
+        // clock and counts as busy time (TTFT honestly includes it)
+        let dt = t0.elapsed().as_secs_f64();
+        self.clock_s += dt;
+        self.busy_s += dt;
         done
     }
 
@@ -272,19 +309,17 @@ impl ServeEngine {
         }
 
         let n = self.active.len();
-        let d_in = 2 * self.cache.d_emb;
         let vocab = self.cache.vocab;
 
         let t0 = Instant::now();
-        let mut x = vec![0.0f32; n * d_in];
-        for (i, slot) in self.active.iter().enumerate() {
-            self.cache.write_features(slot.prev2, slot.prev, &mut x[i * d_in..(i + 1) * d_in]);
-        }
-        // the deployed forward is deterministic (RTN); the RNG argument
-        // only satisfies the quantize signature
-        let mut fwd_rng = Rng::new(0);
-        let logits = self.cache.forward(x, n, &*self.backend, &mut fwd_rng);
+        // ONE batched forward over every active request; the transformer
+        // path appends one (K, V) pair per layer per request into the
+        // per-request caches (or re-runs full histories under recompute)
+        let mut states: Vec<&mut DecodeState> =
+            self.active.iter_mut().map(|s| &mut s.state).collect();
+        let logits = self.cache.decode_forward(&mut states, &*self.backend, self.recompute);
         let dt = t0.elapsed().as_secs_f64();
+        debug_assert_eq!(logits.len(), n * vocab);
         self.clock_s += dt;
         self.busy_s += dt;
         self.steps += 1;
@@ -302,8 +337,7 @@ impl ServeEngine {
             };
             slot.first_token_s.get_or_insert(now);
             slot.generated.push(tok);
-            slot.prev2 = slot.prev;
-            slot.prev = tok;
+            slot.state.push_token(tok);
             self.generated_tokens += 1;
             if slot.req.stop_token == Some(tok) {
                 finished.push((i, FinishReason::Stop));
@@ -311,6 +345,10 @@ impl ServeEngine {
                 finished.push((i, FinishReason::Length));
             }
         }
+        // KV high-water mark: read while every state is still live, just
+        // before eviction drops the finished requests' buffers
+        let kv_now: usize = self.active.iter().map(|s| s.state.kv_bytes()).sum();
+        self.kv_bytes_peak = self.kv_bytes_peak.max(kv_now);
         // evict back-to-front so the collected indices stay valid
         for &(i, finish) in finished.iter().rev() {
             let slot = self.active.remove(i);
@@ -327,10 +365,12 @@ impl ServeEngine {
     /// Drive the scheduler until every submitted request completes, or
     /// `max_steps` decode steps have run (the CI smoke cap). Returns the
     /// aggregated report; a capped run reports whatever finished. The
-    /// counters are per-call deltas, so a capped run can be resumed with
-    /// another `run` and each report describes exactly its own work
-    /// (`wall_s` stays the absolute virtual clock the arrival times and
-    /// latency percentiles are measured on).
+    /// busy/step/token counters are per-call deltas, so a capped run can
+    /// be resumed with another `run` and each report describes exactly
+    /// its own work (`wall_s` stays the absolute virtual clock the
+    /// arrival times and latency percentiles are measured on, and
+    /// `kv_bytes_peak` stays the engine-lifetime high-water mark — a
+    /// capacity number, not a per-window delta).
     pub fn run(&mut self, max_steps: Option<usize>) -> Result<ServeReport> {
         let (busy0, steps0, tokens0) = (self.busy_s, self.steps, self.generated_tokens);
         let mut completions = Vec::new();
@@ -345,6 +385,7 @@ impl ServeEngine {
             busy_s: self.busy_s - busy0,
             decode_steps: self.steps - steps0,
             generated_tokens: self.generated_tokens - tokens0,
+            kv_bytes_peak: self.kv_bytes_peak,
         })
     }
 }
@@ -401,10 +442,13 @@ pub struct ServeReport {
     pub completions: Vec<GenCompletion>,
     /// virtual clock at the end of the run (idle gaps included)
     pub wall_s: f64,
-    /// time spent inside decode steps
+    /// time spent inside decode steps (prompt prefill included)
     pub busy_s: f64,
     pub decode_steps: usize,
     pub generated_tokens: usize,
+    /// high-water mark of per-request KV memory over the engine's
+    /// lifetime (0 for the MLP architecture and for recompute mode)
+    pub kv_bytes_peak: usize,
 }
 
 impl ServeReport {

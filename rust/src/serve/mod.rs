@@ -3,16 +3,23 @@
 //! low-precision format.
 //!
 //! * [`cache::PackedWeightCache`] — deploy-once weight preparation under a
-//!   [`cache::ServeMethod`] (`f32` | `mxfp8` | `quartet`): each layer is
-//!   quantized into its checkpoint form and — for the packed FP4 path —
-//!   decoded exactly once through [`crate::kernels::Backend::decode_mxfp4`],
-//!   then shared (`Arc`) across every engine, request and step.
+//!   [`cache::ServeMethod`] (`f32` | `mxfp8` | `quartet`) for BOTH native
+//!   architectures (order-2 MLP and the Llama-style transformer): each
+//!   matmul weight is quantized into its checkpoint form and — for the
+//!   packed FP4 path — decoded exactly once through
+//!   [`crate::kernels::Backend::decode_mxfp4`], then shared (`Arc`)
+//!   across every engine, request and step.
 //! * [`engine::ServeEngine`] — autoregressive decode with a
 //!   continuous-batching scheduler: per-request `max_new_tokens` / stop
 //!   tokens, greedy or seeded temperature sampling, admission/eviction
 //!   between decode steps so short and long generations share batches.
-//!   Token streams are bit-identical across backends, thread counts and
-//!   batch compositions.
+//!   Transformer requests carry a per-request KV cache
+//!   ([`cache::DecodeState`]) filled by a one-pass prompt prefill, so a
+//!   decode step appends one (K, V) pair per layer instead of re-running
+//!   the prefix; eviction drops the state, reclaiming the memory
+//!   (`kv_bytes_peak` in the report). Token streams are bit-identical
+//!   across backends, thread counts, batch compositions — and between
+//!   KV-cached and full-recompute decode.
 //! * [`trace`] — JSON request traces, synthetic Poisson workloads, and
 //!   the [`trace::ServeRecord`] JSON the fig6 bench emits.
 //! * [`CpuPrefillEngine`] — batched single-shot prefill over the same
@@ -39,7 +46,7 @@ use crate::kernels::Backend;
 use crate::train::{MlpLm, ModelConfig, TrainMethod};
 use crate::util::rng::Rng;
 
-pub use cache::{PackedWeightCache, ServeMethod};
+pub use cache::{DecodeState, LayerKv, PackedWeightCache, ServeMethod, TfDecodeState};
 pub use engine::{FinishReason, GenCompletion, GenRequest, Sampling, ServeEngine, ServeReport};
 pub use trace::{load_trace, parse_trace, synth_requests, ServeRecord, SynthOptions};
 

@@ -123,7 +123,8 @@ pub struct ServeRecord {
     pub mode: String,
     pub method: String,
     pub backend: String,
-    /// the swept batch-size point this record belongs to
+    /// the swept axis point this record belongs to (fig6: batch size;
+    /// fig7: context length — the `bench` field says which)
     pub batch_point: usize,
     /// the engine's actual slot capacity (1 for the naive baseline)
     pub max_batch: usize,
@@ -138,6 +139,8 @@ pub struct ServeRecord {
     pub latency_s: [f64; 3],
     /// `[p50, p90, p99]`, seconds
     pub ttft_s: [f64; 3],
+    /// KV-cache high-water mark (bytes; 0 for MLP/recompute serving)
+    pub kv_bytes_peak: usize,
 }
 
 impl ServeRecord {
@@ -168,6 +171,7 @@ impl ServeRecord {
             tokens_per_sec: report.tokens_per_sec(),
             latency_s: report.latency_percentiles(),
             ttft_s: report.ttft_percentiles(),
+            kv_bytes_peak: report.kv_bytes_peak,
         }
     }
 
@@ -188,6 +192,7 @@ impl ServeRecord {
             ("tokens_per_sec", Json::num(self.tokens_per_sec)),
             ("latency_p50_p90_p99_s", Json::f64s(&self.latency_s)),
             ("ttft_p50_p90_p99_s", Json::f64s(&self.ttft_s)),
+            ("kv_bytes_peak", Json::num(self.kv_bytes_peak as f64)),
         ])
     }
 
@@ -274,6 +279,7 @@ mod tests {
             busy_s: 1.25,
             decode_steps: 40,
             generated_tokens: 640,
+            kv_bytes_peak: 4096,
         };
         let rec = ServeRecord::from_report(
             "fig6_continuous_batching",

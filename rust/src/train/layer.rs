@@ -66,59 +66,7 @@ impl QuantLinear {
         be: &dyn Backend,
         rng: &mut Rng,
     ) -> (Vec<f32>, LinearCache) {
-        assert_eq!(x.len(), rows * self.d_in);
-        match method {
-            TrainMethod::F32 => {
-                let y = be.gemm_f32(x, &self.w, rows, self.d_out, self.d_in);
-                (y, LinearCache { x: x.to_vec(), xq: None, wq: None, mask_x: None, mask_w: None })
-            }
-            TrainMethod::Mxfp8 => {
-                let xq = mxfp8_rtn(x);
-                let wq = mxfp8_rtn(&self.w);
-                let y = be.gemm_f32(&xq, &wq, rows, self.d_out, self.d_in);
-                (y, LinearCache {
-                    x: x.to_vec(),
-                    xq: Some(xq),
-                    wq: Some(wq),
-                    mask_x: None,
-                    mask_w: None,
-                })
-            }
-            TrainMethod::Quartet => {
-                let mut xh = x.to_vec();
-                be.block_hadamard(&mut xh, MX_GROUP);
-                let xt = be.quantize_mxfp4(&xh, rows, self.d_in, QuantMode::Quest, rng);
-                let mut wh = self.w.clone();
-                be.block_hadamard(&mut wh, MX_GROUP);
-                let wt = be.quantize_mxfp4(&wh, self.d_out, self.d_in, QuantMode::Quest, rng);
-                let y = be.gemm_mxfp4(&xt, &wt);
-                let cache = LinearCache {
-                    x: x.to_vec(),
-                    xq: Some(xt.dequantize()),
-                    wq: Some(wt.dequantize()),
-                    mask_x: xt.mask,
-                    mask_w: wt.mask,
-                };
-                (y, cache)
-            }
-            TrainMethod::Rtn => {
-                // naive MXFP4: no rotation anywhere — absmax RTN straight
-                // on the raw tensors. Heavy-tailed activations/gradients
-                // are exactly what this baseline cannot survive (Table 2's
-                // misalignment story), which is why it loses the ordering.
-                let xt = be.quantize_mxfp4(x, rows, self.d_in, QuantMode::Rtn, rng);
-                let wt = be.quantize_mxfp4(&self.w, self.d_out, self.d_in, QuantMode::Rtn, rng);
-                let y = be.gemm_mxfp4(&xt, &wt);
-                let cache = LinearCache {
-                    x: x.to_vec(),
-                    xq: Some(xt.dequantize()),
-                    wq: Some(wt.dequantize()),
-                    mask_x: None,
-                    mask_w: None,
-                };
-                (y, cache)
-            }
-        }
+        forward_with(&self.w, self.d_out, self.d_in, x, rows, method, be, rng)
     }
 
     /// Gradient step: from `dy [rows, d_out]` produce
@@ -134,64 +82,150 @@ impl QuantLinear {
         be: &dyn Backend,
         rng: &mut Rng,
     ) -> (Vec<f32>, Vec<f32>) {
-        assert_eq!(dy.len(), rows * self.d_out);
-        let (d_out, d_in) = (self.d_out, self.d_in);
-        match method {
-            TrainMethod::F32 => {
-                let wt = transpose(&self.w, d_out, d_in);
-                let dx = be.gemm_f32(dy, &wt, rows, d_in, d_out);
-                let dyt = transpose(dy, rows, d_out);
-                let xt = transpose(&cache.x, rows, d_in);
-                let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
-                (dx, dw)
-            }
-            TrainMethod::Mxfp8 => {
-                let dyq = mxfp8_rtn(dy);
-                let wq = cache.wq.as_ref().expect("mxfp8 cache");
-                let xq = cache.xq.as_ref().expect("mxfp8 cache");
-                let wt = transpose(wq, d_out, d_in);
-                let dx = be.gemm_f32(&dyq, &wt, rows, d_in, d_out);
-                let dyt = transpose(&dyq, rows, d_out);
-                let xt = transpose(xq, rows, d_in);
-                let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
-                (dx, dw)
-            }
-            TrainMethod::Quartet => {
-                // Algorithm 1 backward: unbiased SR(3/4·x) gradient
-                // quantization, both gradient GEMMs against the quantized
-                // forward operands — in Hadamard space, where the trust
-                // masks live — then rotate back.
-                let dyq = quartet_sr_dequant(be, dy, rows, d_out, rng);
-                let wq = cache.wq.as_ref().expect("quartet cache");
-                let xq = cache.xq.as_ref().expect("quartet cache");
-                // dL/d(Hx) = mask_x ⊙ (dyq · Q(Hw)); then dx = H·dL/d(Hx)
-                let wt = transpose(wq, d_out, d_in);
-                let mut dxh =
-                    be.gemm_f32_masked(&dyq, &wt, rows, d_in, d_out, cache.mask_x.as_deref());
-                be.block_hadamard_inv(&mut dxh, MX_GROUP);
-                // dL/d(Hw) = mask_w ⊙ (dyqᵀ · Q(Hx)); then dw = H·dL/d(Hw)
-                let dyt = transpose(&dyq, rows, d_out);
-                let xt = transpose(xq, rows, d_in);
-                let mut dwh =
-                    be.gemm_f32_masked(&dyt, &xt, d_out, d_in, rows, cache.mask_w.as_deref());
-                be.block_hadamard_inv(&mut dwh, MX_GROUP);
-                (dxh, dwh)
-            }
-            TrainMethod::Rtn => {
-                // naive backward: deterministic RTN on the raw gradient
-                // (biased — the bulk of a softmax gradient's small entries
-                // rounds to zero against the group absmax), straight
-                // GEMMs, no masks, no rotation
-                let dyq = rtn_dequant(be, dy, rows, d_out, rng);
-                let wq = cache.wq.as_ref().expect("rtn cache");
-                let xq = cache.xq.as_ref().expect("rtn cache");
-                let wt = transpose(wq, d_out, d_in);
-                let dx = be.gemm_f32(&dyq, &wt, rows, d_in, d_out);
-                let dyt = transpose(&dyq, rows, d_out);
-                let xt = transpose(xq, rows, d_in);
-                let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
-                (dx, dw)
-            }
+        backward_with(&self.w, self.d_out, self.d_in, dy, cache, rows, method, be, rng)
+    }
+}
+
+/// Method-dispatch forward on a *borrowed* `[d_out, d_in]` weight matrix
+/// — shared by [`QuantLinear`] and the transformer's tied vocab head,
+/// whose weight IS the f32 embedding table (quantized on the way into
+/// the GEMM, QAT-style, while the master stays shared and f32).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_with(
+    w: &[f32],
+    d_out: usize,
+    d_in: usize,
+    x: &[f32],
+    rows: usize,
+    method: TrainMethod,
+    be: &dyn Backend,
+    rng: &mut Rng,
+) -> (Vec<f32>, LinearCache) {
+    assert_eq!(x.len(), rows * d_in);
+    assert_eq!(w.len(), d_out * d_in);
+    match method {
+        TrainMethod::F32 => {
+            let y = be.gemm_f32(x, w, rows, d_out, d_in);
+            (y, LinearCache { x: x.to_vec(), xq: None, wq: None, mask_x: None, mask_w: None })
+        }
+        TrainMethod::Mxfp8 => {
+            let xq = mxfp8_rtn(x);
+            let wq = mxfp8_rtn(w);
+            let y = be.gemm_f32(&xq, &wq, rows, d_out, d_in);
+            (y, LinearCache {
+                x: x.to_vec(),
+                xq: Some(xq),
+                wq: Some(wq),
+                mask_x: None,
+                mask_w: None,
+            })
+        }
+        TrainMethod::Quartet => {
+            let mut xh = x.to_vec();
+            be.block_hadamard(&mut xh, MX_GROUP);
+            let xt = be.quantize_mxfp4(&xh, rows, d_in, QuantMode::Quest, rng);
+            let mut wh = w.to_vec();
+            be.block_hadamard(&mut wh, MX_GROUP);
+            let wt = be.quantize_mxfp4(&wh, d_out, d_in, QuantMode::Quest, rng);
+            let y = be.gemm_mxfp4(&xt, &wt);
+            let cache = LinearCache {
+                x: x.to_vec(),
+                xq: Some(xt.dequantize()),
+                wq: Some(wt.dequantize()),
+                mask_x: xt.mask,
+                mask_w: wt.mask,
+            };
+            (y, cache)
+        }
+        TrainMethod::Rtn => {
+            // naive MXFP4: no rotation anywhere — absmax RTN straight
+            // on the raw tensors. Heavy-tailed activations/gradients
+            // are exactly what this baseline cannot survive (Table 2's
+            // misalignment story), which is why it loses the ordering.
+            let xt = be.quantize_mxfp4(x, rows, d_in, QuantMode::Rtn, rng);
+            let wt = be.quantize_mxfp4(w, d_out, d_in, QuantMode::Rtn, rng);
+            let y = be.gemm_mxfp4(&xt, &wt);
+            let cache = LinearCache {
+                x: x.to_vec(),
+                xq: Some(xt.dequantize()),
+                wq: Some(wt.dequantize()),
+                mask_x: None,
+                mask_w: None,
+            };
+            (y, cache)
+        }
+    }
+}
+
+/// Backward twin of [`forward_with`]; see [`QuantLinear::backward`].
+#[allow(clippy::too_many_arguments)]
+pub fn backward_with(
+    w: &[f32],
+    d_out: usize,
+    d_in: usize,
+    dy: &[f32],
+    cache: &LinearCache,
+    rows: usize,
+    method: TrainMethod,
+    be: &dyn Backend,
+    rng: &mut Rng,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(dy.len(), rows * d_out);
+    match method {
+        TrainMethod::F32 => {
+            let wt = transpose(w, d_out, d_in);
+            let dx = be.gemm_f32(dy, &wt, rows, d_in, d_out);
+            let dyt = transpose(dy, rows, d_out);
+            let xt = transpose(&cache.x, rows, d_in);
+            let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
+            (dx, dw)
+        }
+        TrainMethod::Mxfp8 => {
+            let dyq = mxfp8_rtn(dy);
+            let wq = cache.wq.as_ref().expect("mxfp8 cache");
+            let xq = cache.xq.as_ref().expect("mxfp8 cache");
+            let wt = transpose(wq, d_out, d_in);
+            let dx = be.gemm_f32(&dyq, &wt, rows, d_in, d_out);
+            let dyt = transpose(&dyq, rows, d_out);
+            let xt = transpose(xq, rows, d_in);
+            let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
+            (dx, dw)
+        }
+        TrainMethod::Quartet => {
+            // Algorithm 1 backward: unbiased SR(3/4·x) gradient
+            // quantization, both gradient GEMMs against the quantized
+            // forward operands — in Hadamard space, where the trust
+            // masks live — then rotate back.
+            let dyq = quartet_sr_dequant(be, dy, rows, d_out, rng);
+            let wq = cache.wq.as_ref().expect("quartet cache");
+            let xq = cache.xq.as_ref().expect("quartet cache");
+            // dL/d(Hx) = mask_x ⊙ (dyq · Q(Hw)); then dx = H·dL/d(Hx)
+            let wt = transpose(wq, d_out, d_in);
+            let mut dxh =
+                be.gemm_f32_masked(&dyq, &wt, rows, d_in, d_out, cache.mask_x.as_deref());
+            be.block_hadamard_inv(&mut dxh, MX_GROUP);
+            // dL/d(Hw) = mask_w ⊙ (dyqᵀ · Q(Hx)); then dw = H·dL/d(Hw)
+            let dyt = transpose(&dyq, rows, d_out);
+            let xt = transpose(xq, rows, d_in);
+            let mut dwh =
+                be.gemm_f32_masked(&dyt, &xt, d_out, d_in, rows, cache.mask_w.as_deref());
+            be.block_hadamard_inv(&mut dwh, MX_GROUP);
+            (dxh, dwh)
+        }
+        TrainMethod::Rtn => {
+            // naive backward: deterministic RTN on the raw gradient
+            // (biased — the bulk of a softmax gradient's small entries
+            // rounds to zero against the group absmax), straight
+            // GEMMs, no masks, no rotation
+            let dyq = rtn_dequant(be, dy, rows, d_out, rng);
+            let wq = cache.wq.as_ref().expect("rtn cache");
+            let xq = cache.xq.as_ref().expect("rtn cache");
+            let wt = transpose(wq, d_out, d_in);
+            let dx = be.gemm_f32(&dyq, &wt, rows, d_in, d_out);
+            let dyt = transpose(&dyq, rows, d_out);
+            let xt = transpose(xq, rows, d_in);
+            let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
+            (dx, dw)
         }
     }
 }

@@ -14,10 +14,16 @@
 //!   Zipf–Markov corpus (token-pair embedding → quantized linear stack →
 //!   vocab logits), with JSON checkpoints `serve::CpuPrefillEngine`
 //!   consumes.
+//! * [`transformer`] — [`TransformerLm`]: the Llama-style decoder
+//!   (`arch: transformer`) — RMSNorm → causal rotary attention → SwiGLU
+//!   blocks with all matmuls (tied vocab head included) on the same
+//!   method axis; the workload shape the paper actually evaluates, and
+//!   the substrate of the serving engine's KV-cached decode.
 //! * [`optim`] — [`Adam`] with bias correction.
-//! * [`trainer`] — [`train_native`]: the loop (batching, eval, divergence
-//!   detection) emitting [`crate::coordinator::runrecord::RunRecord`]s so
-//!   `scaling::fit` consumes native runs exactly like PJRT sweeps.
+//! * [`trainer`] — [`train_native`] / [`train_native_transformer`]: the
+//!   loops (batching, eval, divergence detection) emitting
+//!   [`crate::coordinator::runrecord::RunRecord`]s so `scaling::fit`
+//!   consumes native runs exactly like PJRT sweeps.
 //!
 //! The method axis reproduces Table 3's ordering on CPU:
 //! `f32` (exact) ≤ `mxfp8` (lossless baseline) ≤ `quartet` (QuEST fwd +
@@ -30,15 +36,70 @@ pub mod layer;
 pub mod model;
 pub mod optim;
 pub mod trainer;
+pub mod transformer;
 
-use anyhow::{anyhow, ensure, Result};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 pub use layer::QuantLinear;
 pub use model::MlpLm;
 pub use optim::Adam;
-pub use trainer::{train_native, NativeTrainOptions};
+pub use trainer::{train_native, train_native_transformer, NativeTrainOptions};
+pub use transformer::{TransformerConfig, TransformerLm};
 
 use crate::quant::mxfp4::MX_GROUP;
+
+/// A trained native model of either architecture — what `repro serve`
+/// loads from disk without being told which trainer produced it.
+pub enum NativeModel {
+    Mlp(MlpLm),
+    Transformer(TransformerLm),
+}
+
+impl NativeModel {
+    /// Load a native checkpoint, dispatching on its `kind` field
+    /// (`native-mlp-lm` | `native-llama-lm`). The JSON — dominated by the
+    /// serialized weights — is read and parsed exactly once.
+    pub fn load(path: &Path) -> Result<NativeModel> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let j = crate::util::json::Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let loaded = match j.req("kind")?.as_str().unwrap_or("") {
+            "native-mlp-lm" => NativeModel::Mlp(MlpLm::from_json(&j)?),
+            "native-llama-lm" => NativeModel::Transformer(TransformerLm::from_json(&j)?),
+            other => bail!(
+                "{}: unknown checkpoint kind {other:?} (expected native-mlp-lm or \
+                 native-llama-lm)",
+                path.display()
+            ),
+        };
+        Ok(loaded)
+    }
+
+    /// Write the checkpoint of whichever architecture this is.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        match self {
+            NativeModel::Mlp(m) => m.save(path),
+            NativeModel::Transformer(m) => m.save(path),
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        match self {
+            NativeModel::Mlp(m) => m.cfg.vocab,
+            NativeModel::Transformer(m) => m.cfg.vocab,
+        }
+    }
+
+    pub fn arch_name(&self) -> &'static str {
+        match self {
+            NativeModel::Mlp(_) => "mlp",
+            NativeModel::Transformer(_) => "transformer",
+        }
+    }
+}
 
 /// Precision recipe for the linear layers — the Table 3 method axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -183,9 +183,15 @@ impl MlpLm {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
         let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("loading {}", path.display()))
+    }
+
+    /// Build from already-parsed checkpoint JSON (weight dumps are large;
+    /// `NativeModel::load` parses once and dispatches here by `kind`).
+    pub fn from_json(j: &Json) -> Result<MlpLm> {
         let kind = j.req("kind")?.as_str().unwrap_or("");
         if kind != "native-mlp-lm" {
-            bail!("{}: not a native checkpoint (kind {kind:?})", path.display());
+            bail!("not a native MLP checkpoint (kind {kind:?})");
         }
         let cfg = ModelConfig {
             vocab: j.req("vocab")?.as_usize().unwrap_or(0),

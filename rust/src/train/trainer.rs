@@ -12,6 +12,7 @@ use crate::data::corpus::{Corpus, CorpusConfig, CorpusStream, Split};
 use crate::kernels::Backend;
 use crate::train::model::MlpLm;
 use crate::train::optim::Adam;
+use crate::train::transformer::{TransformerConfig, TransformerLm};
 use crate::train::ModelConfig;
 use crate::util::rng::Rng;
 
@@ -197,6 +198,150 @@ pub fn train_native(
     Ok((rec, model))
 }
 
+/// Streaming `[b, s+1]` window source over a corpus split — the
+/// transformer's batcher. Windows are consecutive and non-overlapping, so
+/// every predicted position is one fresh training token in the
+/// scaling-law D accounting.
+pub struct SeqWindows<'a> {
+    stream: CorpusStream<'a>,
+}
+
+impl<'a> SeqWindows<'a> {
+    pub fn new(corpus: &'a Corpus, split: Split) -> SeqWindows<'a> {
+        SeqWindows { stream: corpus.stream(split, 0) }
+    }
+
+    /// Next `b` windows of `s + 1` tokens each, row-major `[b, s+1]`.
+    pub fn next_batch(&mut self, b: usize, s: usize) -> Vec<u32> {
+        (0..b * (s + 1)).map(|_| self.stream.next_token()).collect()
+    }
+}
+
+/// Mean validation loss of a transformer over fresh val-split windows
+/// (deterministic: every forward precision is noise-free at eval).
+pub fn eval_val_loss_transformer(
+    model: &TransformerLm,
+    corpus: &Corpus,
+    be: &dyn Backend,
+    batches: usize,
+    batch: usize,
+) -> f64 {
+    let b = batches.max(1) * batch.max(1);
+    let mut windows = SeqWindows::new(corpus, Split::Val);
+    let toks = windows.next_batch(b, model.cfg.seq);
+    model.eval_loss(&toks, b, be)
+}
+
+/// Train a native Llama-style transformer from scratch; returns the run
+/// record (val_curve starts with the step-0 loss) and the trained model
+/// for checkpointing/serving. The loop mirrors [`train_native`] — Adam,
+/// cosine lr decay, divergence detection, eval wall-time subtraction — so
+/// records from both architectures feed `scaling::fit` identically.
+pub fn train_native_transformer(
+    cfg: &TransformerConfig,
+    opts: &NativeTrainOptions,
+    be: &dyn Backend,
+) -> Result<(RunRecord, TransformerLm)> {
+    cfg.validate_for_training()?;
+    let corpus = Corpus::new(CorpusConfig { vocab: cfg.vocab, ..opts.corpus.clone() });
+    let mut model = TransformerLm::init(cfg.clone(), opts.seed)?;
+    let sizes = model.param_sizes();
+    let mut adam = Adam::new(&sizes, opts.lr);
+    let mut rng = Rng::new(opts.seed ^ 0xD1CE_5EED);
+    let mut windows = SeqWindows::new(&corpus, Split::Train);
+
+    let name = format!("native-tf-d{}L{}-{}", cfg.d_model, cfg.n_layers, cfg.method.name());
+    let mut train_curve = Vec::new();
+    let mut val_curve = Vec::new();
+    let init_val = eval_val_loss_transformer(&model, &corpus, be, opts.eval_batches, opts.batch);
+    val_curve.push((0, init_val));
+    if opts.verbose {
+        eprintln!("[{name}] step 0/{} val loss {init_val:.4}", opts.steps);
+    }
+
+    let t0 = Instant::now();
+    let mut eval_secs = 0.0f64;
+    let mut diverged = false;
+    let mut steps_done = 0usize;
+    for step in 1..=opts.steps {
+        let toks = windows.next_batch(opts.batch, cfg.seq);
+        let (loss, grads) = model.loss_and_grads(&toks, opts.batch, be, &mut rng);
+        steps_done = step;
+        if !loss.is_finite() || loss > 20.0 {
+            diverged = true;
+            train_curve.push((step, loss));
+            break;
+        }
+        let progress = (step - 1) as f32 / opts.steps as f32;
+        adam.lr = opts.lr * 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        adam.begin_step();
+        // slot order is the TransformerLm::param_sizes contract
+        let mut slot = 0usize;
+        adam.update(slot, &mut model.tok_emb, &grads.tok_emb);
+        slot += 1;
+        for (bi, block) in model.blocks.iter_mut().enumerate() {
+            let g = &grads.blocks[bi];
+            adam.update(slot, &mut block.attn_norm, &g.attn_norm);
+            adam.update(slot + 1, &mut block.wq.w, &g.wq);
+            adam.update(slot + 2, &mut block.wk.w, &g.wk);
+            adam.update(slot + 3, &mut block.wv.w, &g.wv);
+            adam.update(slot + 4, &mut block.wo.w, &g.wo);
+            adam.update(slot + 5, &mut block.mlp_norm, &g.mlp_norm);
+            adam.update(slot + 6, &mut block.w_gate.w, &g.w_gate);
+            adam.update(slot + 7, &mut block.w_up.w, &g.w_up);
+            adam.update(slot + 8, &mut block.w_down.w, &g.w_down);
+            slot += 9;
+        }
+        adam.update(slot, &mut model.final_norm, &grads.final_norm);
+
+        if step % opts.log_every.max(1) == 0 || step == opts.steps {
+            train_curve.push((step, loss));
+            if opts.verbose {
+                eprintln!("[{name}] step {step}/{} train loss {loss:.4}", opts.steps);
+            }
+        }
+        if opts.eval_every > 0 && step % opts.eval_every == 0 && step < opts.steps {
+            let e0 = Instant::now();
+            let vl =
+                eval_val_loss_transformer(&model, &corpus, be, opts.eval_batches, opts.batch);
+            eval_secs += e0.elapsed().as_secs_f64();
+            val_curve.push((step, vl));
+            if opts.verbose {
+                eprintln!("[{name}] step {step}/{} val loss {vl:.4}", opts.steps);
+            }
+        }
+    }
+    let wall = (t0.elapsed().as_secs_f64() - eval_secs).max(0.0);
+
+    let final_val = if diverged {
+        f64::NAN
+    } else {
+        eval_val_loss_transformer(&model, &corpus, be, opts.eval_batches, opts.batch)
+    };
+    val_curve.push((steps_done, final_val));
+    // each window predicts seq tokens
+    let tokens = steps_done * opts.batch * cfg.seq;
+    let params = cfg.non_embedding_params();
+
+    let rec = RunRecord {
+        artifact: name,
+        size: format!("d{}L{}", cfg.d_model, cfg.n_layers),
+        method: cfg.method.name().to_string(),
+        non_embedding_params: params,
+        tokens,
+        steps: steps_done,
+        ratio: tokens as f64 / params.max(1) as f64,
+        seed: opts.seed,
+        train_curve,
+        val_curve,
+        final_val_loss: final_val,
+        wall_secs: wall,
+        tokens_per_sec: tokens as f64 / wall.max(1e-9),
+        diverged,
+    };
+    Ok((rec, model))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,6 +403,78 @@ mod tests {
         let (a, _) = train_native(&cfg, &opts, &ScalarBackend).unwrap();
         let (b, _) = train_native(&cfg, &opts, &ScalarBackend).unwrap();
         assert_eq!(a.train_curve, b.train_curve, "stochastic rounding ignored the seed");
+        assert_eq!(a.final_val_loss, b.final_val_loss);
+    }
+
+    #[test]
+    fn seq_windows_are_deterministic_and_sized() {
+        let corpus = Corpus::new(CorpusConfig { vocab: 32, ..CorpusConfig::default() });
+        let mut a = SeqWindows::new(&corpus, Split::Train);
+        let wa = a.next_batch(3, 8);
+        assert_eq!(wa.len(), 3 * 9);
+        let mut b = SeqWindows::new(&corpus, Split::Train);
+        assert_eq!(b.next_batch(3, 8), wa);
+        // consecutive batches continue the stream instead of repeating it
+        assert_ne!(a.next_batch(3, 8), wa);
+    }
+
+    #[test]
+    fn transformer_f32_run_drops_loss_and_fills_record() {
+        let cfg = TransformerConfig {
+            vocab: 32,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 32,
+            seq: 8,
+            method: TrainMethod::F32,
+        };
+        let opts = NativeTrainOptions {
+            steps: 40,
+            batch: 8,
+            lr: 8e-3,
+            seed: 3,
+            eval_batches: 2,
+            log_every: 20,
+            ..NativeTrainOptions::default()
+        };
+        let (rec, model) = train_native_transformer(&cfg, &opts, &ScalarBackend).unwrap();
+        assert!(!rec.diverged);
+        assert_eq!(rec.steps, 40);
+        assert_eq!(rec.tokens, 40 * 8 * 8);
+        assert_eq!(rec.method, "f32");
+        assert_eq!(rec.size, "d32L1");
+        let init = rec.val_curve[0].1;
+        assert!(
+            rec.final_val_loss < init,
+            "no progress: {init} -> {}",
+            rec.final_val_loss
+        );
+        assert_eq!(model.cfg.vocab, 32);
+        let run = rec.to_fit_run();
+        assert!(run.n > 0.0 && run.d > 0.0 && run.loss.is_finite());
+    }
+
+    #[test]
+    fn transformer_seeded_runs_are_reproducible() {
+        let cfg = TransformerConfig {
+            vocab: 32,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 32,
+            seq: 8,
+            method: TrainMethod::Quartet,
+        };
+        let opts = NativeTrainOptions {
+            steps: 12,
+            batch: 4,
+            log_every: 4,
+            ..NativeTrainOptions::default()
+        };
+        let (a, _) = train_native_transformer(&cfg, &opts, &ScalarBackend).unwrap();
+        let (b, _) = train_native_transformer(&cfg, &opts, &ScalarBackend).unwrap();
+        assert_eq!(a.train_curve, b.train_curve, "SR ignored the seed");
         assert_eq!(a.final_val_loss, b.final_val_loss);
     }
 }

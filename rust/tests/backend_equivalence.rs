@@ -181,6 +181,84 @@ fn sr_backward_quantize_reproducible_on_small_gradients() {
 }
 
 #[test]
+fn attention_hook_bit_identical_across_backends_and_threads() {
+    // the transformer serving/training hook: every (batch, head) group is
+    // independent and every query row is self-contained, so thread
+    // partitioning must be unobservable — ctx AND probs, bit for bit.
+    // Shapes cover decode (sq = 1 against a long KV prefix, pos0 > 0),
+    // prefill/training (square, pos0 = 0), odd group counts that no
+    // thread count divides, and a > SMALL_WORK shape that actually
+    // engages the thread pool.
+    let scalar = ScalarBackend;
+    for &(groups, sq, sk, hd, pos0) in &[
+        (6usize, 9usize, 9usize, 16usize, 0usize),
+        (3, 1, 17, 32, 16),
+        (5, 4, 12, 8, 8),
+        (13, 7, 7, 16, 0),
+        (64, 8, 8, 32, 0),
+    ] {
+        let mut rng = Rng::new((groups * 31 + sk * 7 + hd) as u64);
+        let q = rng.gaussian_vec(groups * sq * hd, 1.0);
+        let k = rng.gaussian_vec(groups * sk * hd, 1.0);
+        let v = rng.gaussian_vec(groups * sk * hd, 0.7);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let (ctx_ref, probs_ref) =
+            scalar.attention_causal(&q, &k, &v, groups, sq, sk, hd, pos0, scale);
+        // causality + normalization sanity on the reference itself
+        for g in 0..groups {
+            for i in 0..sq {
+                let row = &probs_ref[(g * sq + i) * sk..(g * sq + i + 1) * sk];
+                let limit = pos0 + i + 1;
+                for (j, &p) in row.iter().enumerate() {
+                    if j >= limit {
+                        assert_eq!(p, 0.0, "future position {j} attended (limit {limit})");
+                    } else {
+                        assert!((0.0..=1.0).contains(&p), "prob {p} out of range");
+                    }
+                }
+                let sum: f64 = row.iter().map(|&p| p as f64).sum();
+                assert!((sum - 1.0).abs() < 1e-4, "row sums to {sum}");
+            }
+        }
+        for t in THREAD_COUNTS {
+            let be = ParallelBackend::with_threads(t);
+            let (ctx, probs) = be.attention_causal(&q, &k, &v, groups, sq, sk, hd, pos0, scale);
+            assert_eq!(ctx, ctx_ref, "ctx {groups}x{sq}x{sk}x{hd} threads={t}");
+            assert_eq!(probs, probs_ref, "probs {groups}x{sq}x{sk}x{hd} threads={t}");
+        }
+    }
+}
+
+#[test]
+fn attention_hook_rows_independent_of_batching() {
+    // the KV-decode invariant at the kernel level: the last query row of
+    // a full-sequence call must equal the same row issued alone with
+    // sq = 1 against the same keys — bit for bit, on both backends
+    let (sk, hd) = (11usize, 16usize);
+    let mut rng = Rng::new(99);
+    let q = rng.gaussian_vec(sk * hd, 1.0);
+    let k = rng.gaussian_vec(sk * hd, 1.0);
+    let v = rng.gaussian_vec(sk * hd, 1.0);
+    let scale = 1.0 / (hd as f32).sqrt();
+    for be in [
+        Box::new(ScalarBackend) as Box<dyn Backend>,
+        Box::new(ParallelBackend::with_threads(3)),
+    ] {
+        let (full, _) = be.attention_causal(&q, &k, &v, 1, sk, sk, hd, 0, scale);
+        for i in [0usize, 4, sk - 1] {
+            let qi = &q[i * hd..(i + 1) * hd];
+            let (alone, _) = be.attention_causal(qi, &k, &v, 1, 1, sk, hd, i, scale);
+            assert_eq!(
+                &full[i * hd..(i + 1) * hd],
+                &alone[..],
+                "[{}] row {i} depends on its batch",
+                be.name()
+            );
+        }
+    }
+}
+
+#[test]
 fn block_hadamard_bit_identical() {
     let scalar = ScalarBackend;
     // 999 groups: odd, no thread count divides it

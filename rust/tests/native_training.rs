@@ -6,8 +6,14 @@
 
 use quartet::data::corpus::{Corpus, CorpusConfig, Split};
 use quartet::kernels::{Backend, ParallelBackend, ScalarBackend};
-use quartet::serve::{CpuPrefillEngine, Request};
-use quartet::train::{train_native, MlpLm, ModelConfig, NativeTrainOptions, TrainMethod};
+use quartet::serve::{
+    CpuPrefillEngine, GenRequest, PackedWeightCache, Request, Sampling, ServeEngine,
+    ServeMethod,
+};
+use quartet::train::{
+    train_native, train_native_transformer, MlpLm, ModelConfig, NativeModel,
+    NativeTrainOptions, TrainMethod, TransformerConfig,
+};
 
 /// Small enough to run in seconds, structured enough (85% deterministic
 /// order-2 transitions over a 32-token vocab) that 500 steps separate the
@@ -193,6 +199,145 @@ fn quartet_runs_reproducible_and_backend_stable() {
     assert_eq!(p1.train_curve, p2.train_curve, "SR streams depend on thread count");
     assert_eq!(p1.final_val_loss, p2.final_val_loss);
     assert!(final_loss(&p1) < p1.val_curve.first().unwrap().1, "parallel run regressed");
+}
+
+// ---------------------------------------------------------------------------
+// transformer smoke (the `--arch transformer` tentpole)
+// ---------------------------------------------------------------------------
+
+/// Small enough to run in seconds, structured enough that 500 cosine-decay
+/// steps separate the methods: near the plateau the unbiased-vs-biased
+/// backward gap dominates (prototype-validated across seeds — rtn's
+/// deterministic gradient rounding costs it a persistent loss floor).
+fn tf_smoke_cfg(method: TrainMethod) -> TransformerConfig {
+    TransformerConfig {
+        vocab: 32,
+        d_model: 64,
+        n_heads: 4,
+        n_layers: 1,
+        d_ff: 64,
+        seq: 16,
+        method,
+    }
+}
+
+fn tf_smoke_opts() -> NativeTrainOptions {
+    NativeTrainOptions {
+        steps: 500,
+        batch: 8,
+        lr: 8e-3,
+        seed: 7,
+        eval_every: 0,
+        eval_batches: 4,
+        log_every: 100,
+        verbose: false,
+        corpus: CorpusConfig { vocab: 32, structure: 0.85, ..CorpusConfig::default() },
+    }
+}
+
+/// The transformer acceptance gate: quartet converges (≥20% below its
+/// init loss) and the method axis orders as Table 3 predicts. The ≤
+/// comparisons carry a small slack; quartet < rtn is strict.
+fn assert_tf_ordering(be: &dyn Backend) {
+    let opts = tf_smoke_opts();
+    let mut quartet_init = f64::NAN;
+    let mut finals = [0.0f64; 4];
+    for (slot, method) in TrainMethod::ALL.into_iter().enumerate() {
+        let (rec, _) = train_native_transformer(&tf_smoke_cfg(method), &opts, be).unwrap();
+        if method == TrainMethod::Quartet {
+            quartet_init = rec.val_curve.first().unwrap().1;
+        }
+        finals[slot] = final_loss(&rec);
+    }
+    let [f32_l, mxfp8_l, quartet_l, rtn_l] = finals;
+    let name = be.name();
+    assert!(
+        quartet_l < 0.8 * quartet_init,
+        "[{name}] transformer quartet did not converge: init {quartet_init}, final {quartet_l}"
+    );
+    let slack = 0.08;
+    assert!(
+        f32_l <= mxfp8_l + slack,
+        "[{name}] tf f32 {f32_l} should be ≤ mxfp8 {mxfp8_l}"
+    );
+    assert!(
+        mxfp8_l <= quartet_l + slack,
+        "[{name}] tf mxfp8 {mxfp8_l} should be ≤ quartet {quartet_l}"
+    );
+    assert!(
+        quartet_l < rtn_l,
+        "[{name}] tf quartet {quartet_l} must strictly beat rtn {rtn_l}"
+    );
+}
+
+#[test]
+fn transformer_method_ordering_holds_on_scalar_backend() {
+    assert_tf_ordering(&ScalarBackend);
+}
+
+#[test]
+fn transformer_method_ordering_holds_on_parallel_backend() {
+    assert_tf_ordering(&ParallelBackend::with_threads(3));
+}
+
+#[test]
+fn trained_transformer_checkpoint_serves_via_engine() {
+    // train → checkpoint → NativeModel::load → PackedWeightCache →
+    // ServeEngine greedy decode: the served next-token predictions on
+    // held-out val windows must beat chance by a wide margin, which only
+    // happens if the *trained* weights actually reached the KV-decode
+    // path (random weights sit at chance, 1/32)
+    let opts = NativeTrainOptions { steps: 300, ..tf_smoke_opts() };
+    let (rec, model) =
+        train_native_transformer(&tf_smoke_cfg(TrainMethod::Quartet), &opts, &ScalarBackend)
+            .unwrap();
+    assert!(!rec.diverged);
+
+    let path = std::env::temp_dir()
+        .join(format!("native_tf_serve_{}.json", std::process::id()));
+    model.save(&path).unwrap();
+    let loaded = NativeModel::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(loaded.arch_name(), "transformer");
+    assert_eq!(loaded.vocab(), 32);
+
+    let be: Box<dyn Backend> = Box::new(ScalarBackend);
+    let cache = PackedWeightCache::build_model(&loaded, ServeMethod::Quartet, &*be);
+    assert_eq!(cache.arch_name(), "transformer");
+    let mut eng = ServeEngine::new(cache, be, 8, Sampling::greedy());
+
+    // held-out windows with known continuations
+    let corpus = Corpus::new(CorpusConfig { vocab: 32, structure: 0.85,
+                                            ..CorpusConfig::default() });
+    let mut stream = corpus.stream(Split::Val, 1);
+    let seq = 12usize;
+    let n_req = 48usize;
+    let mut truths = Vec::with_capacity(n_req);
+    for id in 0..n_req as u64 {
+        let mut window = vec![0i32; seq + 1];
+        for v in window.iter_mut() {
+            *v = stream.next_token() as i32;
+        }
+        truths.push(window[seq]);
+        eng.submit(GenRequest::new(id, window[..seq].to_vec(), 1)).unwrap();
+    }
+    let report = eng.run(None).unwrap();
+    assert_eq!(report.completions.len(), n_req);
+    assert!(report.kv_bytes_peak > 0, "KV cache never engaged");
+    let hits = report
+        .completions
+        .iter()
+        .filter(|c| {
+            let truth = truths[c.id as usize];
+            c.tokens.first() == Some(&truth)
+        })
+        .count();
+    let acc = hits as f64 / n_req as f64;
+    assert!(
+        acc > 0.25,
+        "trained transformer predicts at {acc} (chance is {:.3})",
+        1.0 / 32.0
+    );
 }
 
 /// The per-layer trust-mask machinery exists: a quartet forward on real

@@ -1,7 +1,9 @@
 //! Property tests over the quant substrate (util::prop harness), plus the
 //! cross-language golden-vector pinning against python/compile/formats.py.
 
-use quartet::quant::e2m1::{e2m1_decode, e2m1_encode_rtn, e2m1_rtn, E2M1_GRID};
+use quartet::kernels::{Backend, ParallelBackend, ScalarBackend};
+use quartet::quant::e2m1::{e2m1_decode, e2m1_encode_rtn, e2m1_rtn, E2M1_GRID, E2M1_MAX};
+use quartet::quant::e8m0::E8m0;
 use quartet::quant::hadamard::{
     block_hadamard, block_hadamard_inv, rademacher, randomized_block_hadamard,
     randomized_block_hadamard_inv,
@@ -47,6 +49,92 @@ fn prop_rtn_idempotent() {
         let q2 = Mxfp4Tensor::quantize(&q1, 1, cols, QuantMode::Rtn, ctx.rng).dequantize();
         for (a, b) in q1.iter().zip(&q2) {
             ensure((a - b).abs() < 1e-6, format!("{a} -> {b}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rtn_roundtrip_is_a_fixed_point() {
+    // quantize∘dequantize∘quantize is a fixed point of the full RTN
+    // pipeline: the second pass may legally tighten a group's E8M0 binade
+    // (a group whose absmax rounded down no longer needs the original
+    // scale), but the *values* must be exactly stable — and from the
+    // second pass on, codes and scales must stop moving too. This pins
+    // the e2m1 grid (grid points are exact fixed points of e2m1_rtn) and
+    // the e8m0 scale rule (power-of-two rescaling of grid values is
+    // exact) together, not just separately.
+    check("RTN quant-dequant-quant fixed point", 30, |ctx| {
+        let rows = ctx.dim(1).min(5);
+        let cols = ctx.dim(32);
+        let scale = ctx.scale();
+        let x = ctx.vec_gaussian(rows * cols, scale);
+        let t1 = Mxfp4Tensor::quantize(&x, rows, cols, QuantMode::Rtn, ctx.rng);
+        let d1 = t1.dequantize();
+        let t2 = Mxfp4Tensor::quantize(&d1, rows, cols, QuantMode::Rtn, ctx.rng);
+        let d2 = t2.dequantize();
+        for (i, (a, b)) in d1.iter().zip(&d2).enumerate() {
+            ensure(a == b, format!("value {i} moved on requantize: {a} -> {b}"))?;
+        }
+        let t3 = Mxfp4Tensor::quantize(&d2, rows, cols, QuantMode::Rtn, ctx.rng);
+        ensure(t3.codes == t2.codes, "codes still moving after second pass")?;
+        ensure(t3.scales == t2.scales, "scales still moving after second pass")
+    });
+}
+
+#[test]
+fn prop_e8m0_scale_idempotent() {
+    // the scale a group absmax maps to must be a fixed point of the scale
+    // rule itself: re-deriving the scale from the full-range value it
+    // covers (s · target_max) lands on the same binade
+    check("E8M0 from_absmax idempotence", 40, |ctx| {
+        let scale = ctx.scale();
+        for _ in 0..16 {
+            let amax = (ctx.rng.uniform_f32() + 1e-6) * scale;
+            let s = E8m0::from_absmax(amax, E2M1_MAX);
+            let s2 = E8m0::from_absmax(s.value() * E2M1_MAX, E2M1_MAX);
+            ensure(
+                s2 == s,
+                format!("amax {amax}: scale {} re-derives to {}", s.value(), s2.value()),
+            )?;
+            // and the covering property that makes it a valid MX scale
+            ensure(amax / s.value() <= E2M1_MAX + 1e-4, "scale fails to cover")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_once_handles_tail_groups() {
+    // serving's decode-once pair on ragged shapes: odd group counts
+    // (k ≡ 32 mod 64, so no power-of-two tile divides them) and odd row
+    // counts leave tail groups/rows at every partition boundary — decode
+    // and the pre-decoded GEMM must stay bit-identical to the packed
+    // reference on every backend and thread count
+    check("decode_mxfp4/gemm_mxfp4_predec tail groups", 12, |ctx| {
+        let m = ctx.dim(1).min(7);
+        let n = 2 * ctx.dim(1) - 1; // odd
+        let k = 32 * (2 * ctx.rng.below(4) + 1); // odd number of MX groups
+        let a = ctx.vec_gaussian(m * k, 1.0);
+        let b = ctx.vec_gaussian(n * k, 0.5);
+        let scalar = ScalarBackend;
+        let ta = scalar.quantize_mxfp4(&a, m, k, QuantMode::Rtn, ctx.rng);
+        let tb = scalar.quantize_mxfp4(&b, n, k, QuantMode::Rtn, ctx.rng);
+        let want = scalar.gemm_mxfp4(&ta, &tb);
+        let dec_ref = scalar.decode_mxfp4(&tb);
+        ensure(dec_ref == tb.dequantize(), "scalar decode != dequantize")?;
+        ensure(
+            want == scalar.gemm_mxfp4_predec(&ta, &dec_ref, n),
+            "scalar predec != packed gemm",
+        )?;
+        for t in [2usize, 3, 7] {
+            let be = ParallelBackend::with_threads(t);
+            let dec = be.decode_mxfp4(&tb);
+            ensure(dec == dec_ref, format!("decode differs at {t} threads ({n}x{k})"))?;
+            ensure(
+                want == be.gemm_mxfp4_predec(&ta, &dec, n),
+                format!("predec gemm differs at {t} threads ({m}x{n}x{k})"),
+            )?;
         }
         Ok(())
     });

@@ -13,7 +13,7 @@ use quartet::serve::{
     synth_requests, FinishReason, GenRequest, PackedWeightCache, Sampling, ServeEngine,
     ServeMethod, SynthOptions,
 };
-use quartet::train::{MlpLm, ModelConfig, TrainMethod};
+use quartet::train::{MlpLm, ModelConfig, TrainMethod, TransformerConfig, TransformerLm};
 
 const VOCAB: usize = 128;
 
@@ -30,6 +30,23 @@ fn model() -> MlpLm {
 
 fn cache(method: ServeMethod, be: &dyn Backend) -> Arc<PackedWeightCache> {
     PackedWeightCache::build(&model(), method, be)
+}
+
+fn tf_model() -> TransformerLm {
+    let cfg = TransformerConfig {
+        vocab: VOCAB,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 32,
+        seq: 8,
+        method: TrainMethod::Quartet,
+    };
+    TransformerLm::init(cfg, 23).unwrap()
+}
+
+fn tf_cache(method: ServeMethod, be: &dyn Backend) -> Arc<PackedWeightCache> {
+    PackedWeightCache::build_transformer(&tf_model(), method, be)
 }
 
 fn fixed_requests(n: usize, max_new_tokens: usize) -> Vec<GenRequest> {
@@ -266,6 +283,166 @@ fn autoregressive_engine_never_re_preps_weights() {
         n_layers,
         "decode steps re-prepared weights"
     );
+}
+
+// ---------------------------------------------------------------------------
+// transformer KV-cache decode
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kv_cached_decode_bit_identical_to_recompute_everywhere() {
+    // THE tentpole invariant: for every (serve method, backend, thread
+    // count), KV-cached decode and full-history recompute produce
+    // bit-identical token streams — caching moves work, never numerics.
+    // Mixed prompt/generation lengths keep admission/eviction churning so
+    // cache state survives slot turnover too.
+    for method in ServeMethod::ALL {
+        let mut all: Vec<BTreeMap<u64, Vec<i32>>> = Vec::new();
+        for recompute in [false, true] {
+            for be in [
+                Box::new(ScalarBackend) as Box<dyn Backend>,
+                Box::new(ParallelBackend::with_threads(3)),
+                Box::new(ParallelBackend::with_threads(7)),
+            ] {
+                let cache = tf_cache(method, &*be);
+                let mut eng = ServeEngine::new(cache, be, 3, Sampling::greedy());
+                eng.set_recompute(recompute);
+                for r in synth_requests(&SynthOptions {
+                    n: 7,
+                    vocab: VOCAB,
+                    prompt_len: 5,
+                    max_new_tokens: 9,
+                    vary_lengths: true,
+                    rate: 0.0,
+                    stop_token: None,
+                    seed: 31,
+                }) {
+                    eng.submit(r).unwrap();
+                }
+                all.push(streams(&mut eng));
+            }
+        }
+        assert_eq!(all[0].len(), 7, "{}: missing completions", method.name());
+        for (i, s) in all.iter().enumerate().skip(1) {
+            assert_eq!(
+                &all[0], s,
+                "{}: stream set {i} (recompute={}, backend slot {}) diverged",
+                method.name(),
+                i >= 3,
+                i % 3
+            );
+        }
+    }
+}
+
+#[test]
+fn kv_cached_streams_independent_of_batch_composition() {
+    // per-request KV state + row-local kernels ⇒ the same request decodes
+    // the same tokens whether it shares its batch with 0 or 7 others,
+    // greedy or sampled
+    for temperature in [0.0f32, 0.7] {
+        let mut per_batch: Vec<BTreeMap<u64, Vec<i32>>> = Vec::new();
+        for max_batch in [1usize, 3, 8] {
+            let be: Box<dyn Backend> = Box::new(ScalarBackend);
+            let cache = tf_cache(ServeMethod::Quartet, &*be);
+            let mut eng =
+                ServeEngine::new(cache, be, max_batch, Sampling { temperature, seed: 9 });
+            for r in synth_requests(&SynthOptions {
+                n: 8,
+                vocab: VOCAB,
+                prompt_len: 4,
+                max_new_tokens: 10,
+                vary_lengths: true,
+                rate: 0.0,
+                stop_token: None,
+                seed: 17,
+            }) {
+                eng.submit(r).unwrap();
+            }
+            per_batch.push(streams(&mut eng));
+        }
+        assert_eq!(per_batch[0], per_batch[1], "T={temperature}: batch 1 vs 3");
+        assert_eq!(per_batch[0], per_batch[2], "T={temperature}: batch 1 vs 8");
+    }
+}
+
+#[test]
+fn transformer_stop_tokens_and_empty_prompts_work() {
+    // discover the greedy stream, then replay with a stop token planted
+    // at its second position; also decode from an empty prompt (zero-pad
+    // start, like training position 0)
+    let be: Box<dyn Backend> = Box::new(ScalarBackend);
+    let mut probe = ServeEngine::new(tf_cache(ServeMethod::Quartet, &*be), be, 2,
+                                     Sampling::greedy());
+    probe.submit(GenRequest::new(0, vec![3, 1, 4], 6)).unwrap();
+    probe.submit(GenRequest::new(1, Vec::new(), 5)).unwrap();
+    let full = streams(&mut probe);
+    assert_eq!(full[&0].len(), 6);
+    assert_eq!(full[&1].len(), 5, "empty prompt must still decode");
+    let stop = full[&0][1];
+
+    let be: Box<dyn Backend> = Box::new(ScalarBackend);
+    let mut eng = ServeEngine::new(tf_cache(ServeMethod::Quartet, &*be), be, 2,
+                                   Sampling::greedy());
+    let mut r = GenRequest::new(0, vec![3, 1, 4], 6);
+    r.stop_token = Some(stop);
+    eng.submit(r).unwrap();
+    let report = eng.run(None).unwrap();
+    let c0 = &report.completions[0];
+    assert_eq!(c0.finish, FinishReason::Stop);
+    assert_eq!(c0.tokens, full[&0][..c0.tokens.len()].to_vec());
+    assert!(c0.tokens.len() <= 2, "stopped late: {:?}", c0.tokens);
+}
+
+#[test]
+fn kv_memory_grows_while_serving_and_is_reclaimed_on_eviction() {
+    let be: Box<dyn Backend> = Box::new(ScalarBackend);
+    let cache = tf_cache(ServeMethod::Quartet, &*be);
+    let mut eng = ServeEngine::new(cache, be, 4, Sampling::greedy());
+    for r in fixed_requests(4, 6) {
+        eng.submit(r).unwrap();
+    }
+    assert_eq!(eng.kv_bytes_active(), 0, "no KV before admission");
+    eng.decode_step().unwrap();
+    let mid = eng.kv_bytes_active();
+    // 4 requests × 2 layers × (K+V) × 2 heads × cap (4+6) × hd 16 × 4B
+    assert_eq!(mid, 4 * 2 * 2 * 2 * 10 * 16 * 4);
+    let report = eng.run(None).unwrap();
+    assert_eq!(report.completions.len(), 4);
+    assert_eq!(eng.kv_bytes_active(), 0, "eviction must reclaim KV memory");
+    assert_eq!(eng.kv_bytes_peak(), mid, "peak should be the full-batch watermark");
+    assert_eq!(report.kv_bytes_peak, mid);
+
+    // the recompute baseline never allocates KV at all
+    let be: Box<dyn Backend> = Box::new(ScalarBackend);
+    let cache = tf_cache(ServeMethod::Quartet, &*be);
+    let mut eng = ServeEngine::new(cache, be, 4, Sampling::greedy());
+    eng.set_recompute(true);
+    for r in fixed_requests(4, 6) {
+        eng.submit(r).unwrap();
+    }
+    let report = eng.run(None).unwrap();
+    assert_eq!(report.completions.len(), 4);
+    assert_eq!(report.kv_bytes_peak, 0);
+}
+
+#[test]
+fn transformer_serve_methods_all_produce_full_streams() {
+    for method in ServeMethod::ALL {
+        let be: Box<dyn Backend> = Box::new(ScalarBackend);
+        let mut eng = ServeEngine::new(tf_cache(method, &*be), be, 4, Sampling::greedy());
+        for r in fixed_requests(5, 6) {
+            eng.submit(r).unwrap();
+        }
+        let report = eng.run(None).unwrap();
+        assert_eq!(report.completions.len(), 5, "{}", method.name());
+        assert!(
+            report.completions.iter().all(|c| c.tokens.len() == 6
+                && c.tokens.iter().all(|&t| (0..VOCAB as i32).contains(&t))),
+            "{}",
+            method.name()
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,158 @@
+//! Cross-language golden vectors for the native transformer forward:
+//! `tests/data/transformer_vectors.json` pins `TransformerLm::logits`
+//! per TrainMethod against the numpy float32 twin
+//! (`python/compile/native_transformer.py`), so refactors cannot
+//! silently drift the numerics — the same role `quant_vectors.json`
+//! plays for the raw quantizers.
+//!
+//! Weights are a deterministic integer lattice (exactly representable in
+//! f32) re-derived here from the same formula the generator uses, so no
+//! RNG has to match across languages:
+//!
+//!   w[i]    = (((i·37 + salt·101) mod 113) − 56) / 64 · scale
+//!   gain[i] = 1 + (((i + salt) mod 7) − 3) / 32
+//!
+//! Comparison tolerance: the two sides differ by libm/accumulation ulps
+//! (rope sin/cos, softmax exp, GEMM order), which is ≤ ~1e-5 relative on
+//! smooth paths but can flip a single E2M1 code when an activation lands
+//! ulp-close to a rounding boundary, shifting one row's logits by ~1e-2
+//! together. The comparison is therefore quantile-based — median error
+//! at float-noise level, global RMS tiny, nothing grossly wrong — which
+//! is immune to isolated flips while still failing loudly on genuine
+//! numeric drift (which moves *every* entry, not one row).
+
+use quartet::kernels::ScalarBackend;
+use quartet::train::transformer::{TransformerBlock, TransformerConfig, TransformerLm};
+use quartet::train::{QuantLinear, TrainMethod};
+use quartet::util::json::Json;
+
+fn det_vals(n: usize, salt: i64, scale: f32) -> Vec<f32> {
+    (0..n as i64)
+        .map(|i| ((i * 37 + salt * 101) % 113 - 56) as f32 / 64.0 * scale)
+        .collect()
+}
+
+fn det_gain(n: usize, salt: i64) -> Vec<f32> {
+    (0..n as i64)
+        .map(|i| 1.0 + ((i + salt) % 7 - 3) as f32 / 32.0)
+        .collect()
+}
+
+fn det_model(cfg: &TransformerConfig) -> TransformerLm {
+    let (d, ff) = (cfg.d_model, cfg.d_ff);
+    let blocks = (0..cfg.n_layers as i64)
+        .map(|b| {
+            let base = 10 + 16 * b;
+            TransformerBlock {
+                attn_norm: det_gain(d, b),
+                wq: QuantLinear::from_weights(d, d, det_vals(d * d, base, 0.25)),
+                wk: QuantLinear::from_weights(d, d, det_vals(d * d, base + 1, 0.25)),
+                wv: QuantLinear::from_weights(d, d, det_vals(d * d, base + 2, 0.25)),
+                wo: QuantLinear::from_weights(d, d, det_vals(d * d, base + 3, 0.25)),
+                mlp_norm: det_gain(d, b + 3),
+                w_gate: QuantLinear::from_weights(ff, d, det_vals(ff * d, base + 4, 0.25)),
+                w_up: QuantLinear::from_weights(ff, d, det_vals(ff * d, base + 5, 0.25)),
+                w_down: QuantLinear::from_weights(d, ff, det_vals(d * ff, base + 6, 0.25)),
+            }
+        })
+        .collect();
+    TransformerLm {
+        cfg: cfg.clone(),
+        tok_emb: det_vals(cfg.vocab * d, 1, 1.0),
+        blocks,
+        final_norm: det_gain(d, 11),
+    }
+}
+
+#[test]
+fn golden_transformer_logits_match_python_twin() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data/transformer_vectors.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "transformer golden vectors missing at {} ({e}); regenerate them with \
+             `cd python && python -m compile.gen_transformer_vectors` and re-run",
+            path.display()
+        )
+    });
+    let j = Json::parse(&text).unwrap();
+    let cfgj = j.req("config").unwrap();
+    let usize_of = |k: &str| cfgj.req(k).unwrap().as_usize().unwrap();
+    let (vocab, d_model) = (usize_of("vocab"), usize_of("d_model"));
+    let (n_heads, n_layers) = (usize_of("n_heads"), usize_of("n_layers"));
+    let (d_ff, seq) = (usize_of("d_ff"), usize_of("seq"));
+    let tokens: Vec<u32> = j
+        .req("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(tokens.len(), seq);
+
+    let cases = j.req("cases").unwrap().as_arr().unwrap();
+    assert_eq!(cases.len(), 4, "one case per TrainMethod");
+    for case in cases {
+        let method = TrainMethod::parse(case.req("method").unwrap().as_str().unwrap()).unwrap();
+        let want: Vec<f32> = case
+            .req("logits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(want.len(), seq * vocab);
+
+        let cfg = TransformerConfig { vocab, d_model, n_heads, n_layers, d_ff, seq, method };
+        let model = det_model(&cfg);
+        let got = model.logits(&tokens, 1, seq, &ScalarBackend);
+        assert_eq!(got.len(), want.len());
+
+        let mut diffs: Vec<f64> = Vec::with_capacity(got.len());
+        let mut sq_err = 0.0f64;
+        let mut sq_ref = 0.0f64;
+        let mut max_diff = 0.0f64;
+        for (&g, &w) in got.iter().zip(&want) {
+            let diff = ((g - w).abs()) as f64;
+            diffs.push(diff);
+            sq_err += diff * diff;
+            sq_ref += (w as f64).powi(2);
+            max_diff = max_diff.max(diff);
+        }
+        diffs.sort_by(|a, b| a.total_cmp(b));
+        let median = diffs[diffs.len() / 2];
+        let rms_rel = (sq_err / sq_ref.max(1e-12)).sqrt();
+        // three-tier bound, robust to the rare libm-ulp-induced E2M1 code
+        // flip (which shifts one row's logits by ~1e-2 together) while
+        // still catching real numeric drift, which moves *every* entry:
+        //   median — the typical entry must track to float-noise level,
+        //   rms    — the global energy of the error must stay tiny,
+        //   max    — nothing may be grossly wrong.
+        let msg = format!(
+            "[{}] logits drifted off the python reference \
+             (median {median:.2e}, rms_rel {rms_rel:.2e}, max {max_diff:.2e}); \
+             if the change is intentional, regenerate with \
+             `cd python && python -m compile.gen_transformer_vectors`",
+            method.name()
+        );
+        assert!(median < 1e-3, "{msg}");
+        assert!(rms_rel < 2e-2, "{msg}");
+        assert!(max_diff < 0.5, "{msg}");
+    }
+}
+
+#[test]
+fn det_lattice_matches_generator_formula() {
+    // spot-pin the weight formula itself so a silent change on either
+    // side shows up as THIS failure, not a confusing logits mismatch
+    let v = det_vals(8, 10, 0.25);
+    // i=0: ((10·101) % 113 = 1010 % 113 = 106) − 56 = 50 → 50/64·0.25
+    assert_eq!(v[0], 50.0 / 64.0 * 0.25);
+    // i=1: (37 + 1010) % 113 = 1047 % 113 = 30 → (30−56)/64·0.25
+    assert_eq!(v[1], -26.0 / 64.0 * 0.25);
+    let g = det_gain(4, 11);
+    // i=0: ((0+11)%7 − 3) = 1 → 1 + 1/32
+    assert_eq!(g[0], 1.0 + 1.0 / 32.0);
+}
