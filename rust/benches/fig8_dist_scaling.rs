@@ -1,0 +1,167 @@
+//! Fig 8 (distributed leg): data-parallel native training scaling —
+//! worker counts × gradient-reduce modes × methods, per kernel backend.
+//!
+//! For every point the bench trains the same model through
+//! `train::dist`'s sharded trainer and records throughput plus the
+//! modeled ring all-reduce volume per step, making the wire story
+//! concrete: an `mxfp4` reduce ships 4.25 bits/value against f32's 32 —
+//! a 7.5× comms cut from exactly the unbiased-SR machinery the paper
+//! builds for the backward pass.
+//!
+//! Two invariants are *asserted*, not just printed, so the CI dist-smoke
+//! (`--steps 5 --workers 1,4`) is a real gate:
+//!
+//! * under `--reduce f32`, loss curves are bit-identical at every worker
+//!   count (the logical-shard determinism contract of `train::dist`);
+//! * under `--reduce mxfp4`, repeated runs at one worker count are
+//!   bit-identical (SR streams are keyed by seed/step/shard/tensor).
+//!
+//! Flags: `--backend scalar|parallel|both` (falls back to the
+//! `QUARTET_BACKEND` env var), `--workers 1,2,4`, `--reduce f32,mxfp4`,
+//! `--methods f32,quartet`, `--shards 4`, `--steps N`, `--batch N`,
+//! `--d-hidden N`, `--out DIR` (save the RunRecords).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use quartet::coordinator::runrecord::RunRecord;
+use quartet::train::{
+    train_native, DistOptions, ModelConfig, NativeTrainOptions, ReduceMode, TrainMethod,
+    DEFAULT_GRAD_SHARDS,
+};
+use quartet::util::cli::{backends_flag, usize_list_or, Args};
+
+fn main() {
+    quartet::util::bench::print_header(
+        "Fig 8 — data-parallel scaling (workers x reduce mode x method)",
+    );
+    let mut args = Args::from_env().unwrap_or_default();
+    let _ = args.flag("bench");
+    let backends = backends_flag(&mut args).expect("--backend");
+    let workers = usize_list_or(&mut args, "workers", &[1, 2, 4]).expect("--workers");
+    let reduces: Vec<ReduceMode> = args
+        .list_or("reduce", &["f32", "mxfp4"])
+        .iter()
+        .map(|s| ReduceMode::parse(s).expect("--reduce"))
+        .collect();
+    let methods: Vec<TrainMethod> = args
+        .list_or("methods", &["f32", "quartet"])
+        .iter()
+        .map(|s| TrainMethod::parse(s).expect("--methods"))
+        .collect();
+    let steps = args.parse_or("steps", 60usize).expect("--steps");
+    let batch = args.parse_or("batch", 32usize).expect("--batch");
+    let shards = args.parse_or("shards", DEFAULT_GRAD_SHARDS).expect("--shards");
+    let d_hidden = args.parse_or("d-hidden", 128usize).expect("--d-hidden");
+    let seed = args.parse_or("seed", 1u64).expect("--seed");
+    let out = args.get("out").map(PathBuf::from);
+    args.finish().expect("unknown flag");
+
+    let mut records: Vec<RunRecord> = Vec::new();
+    // (backend, method) -> the f32-reduce loss curve seen at the first
+    // worker count; every other worker count must reproduce it bit-exactly
+    let mut f32_curves: BTreeMap<(String, String), (Vec<(usize, f64)>, f64)> = BTreeMap::new();
+    // (backend, method, reduce) -> tokens/sec at the first worker count,
+    // the scaling-efficiency denominator
+    let mut base_tps: BTreeMap<(String, String, String), f64> = BTreeMap::new();
+
+    println!(
+        "\n{:<10} {:>9} {:>7} {:>8} {:>10} {:>10} {:>9} {:>14}",
+        "backend", "method", "reduce", "workers", "final", "tok/s", "scaling", "comms/step"
+    );
+    for be in &backends {
+        for &method in &methods {
+            for &reduce in &reduces {
+                for &w in &workers {
+                    let cfg = ModelConfig {
+                        vocab: 128,
+                        d_emb: 32,
+                        d_hidden,
+                        n_hidden: 1,
+                        method,
+                    };
+                    let opts = NativeTrainOptions {
+                        steps,
+                        batch,
+                        seed,
+                        dist: Some(DistOptions { workers: w, shards, reduce }),
+                        ..NativeTrainOptions::default()
+                    };
+                    let (mut rec, _model) =
+                        train_native(&cfg, &opts, be.as_ref()).expect("dist training");
+
+                    let bkey = be.name().to_string();
+                    let mkey = method.name().to_string();
+                    match reduce {
+                        ReduceMode::F32 if !rec.diverged => {
+                            let ckey = (bkey.clone(), mkey.clone());
+                            if let Some((curve, final_l)) = f32_curves.get(&ckey) {
+                                assert_eq!(
+                                    &rec.train_curve, curve,
+                                    "[{bkey}/{mkey}] f32-reduce loss curve changed at \
+                                     workers={w} — the worker count leaked into the bits"
+                                );
+                                assert_eq!(
+                                    rec.final_val_loss, *final_l,
+                                    "[{bkey}/{mkey}] f32-reduce final loss changed at \
+                                     workers={w}"
+                                );
+                            } else {
+                                f32_curves
+                                    .insert(ckey, (rec.train_curve.clone(), rec.final_val_loss));
+                            }
+                        }
+                        ReduceMode::Mxfp4 if !rec.diverged => {
+                            // repeatability at this exact worker count
+                            let (rec2, _) = train_native(&cfg, &opts, be.as_ref())
+                                .expect("dist training (repeat)");
+                            assert_eq!(
+                                rec.train_curve, rec2.train_curve,
+                                "[{bkey}/{mkey}] mxfp4 reduce is not deterministic at \
+                                 workers={w}"
+                            );
+                        }
+                        _ => {}
+                    }
+
+                    let key = (bkey.clone(), mkey.clone(), reduce.name().to_string());
+                    let scaling = match base_tps.get(&key).copied() {
+                        None => {
+                            base_tps.insert(key, rec.tokens_per_sec);
+                            1.0
+                        }
+                        Some(base) => rec.tokens_per_sec / base.max(1e-9),
+                    };
+                    println!(
+                        "{:<10} {:>9} {:>7} {:>8} {:>10.4} {:>10.0} {:>8.2}x {:>11.1} KiB{}",
+                        bkey,
+                        mkey,
+                        reduce.name(),
+                        rec.workers,
+                        rec.final_val_loss,
+                        rec.tokens_per_sec,
+                        scaling,
+                        rec.comms_bytes_per_step / 1024.0,
+                        if rec.diverged { "  [DIVERGED]" } else { "" }
+                    );
+                    rec.artifact = format!("{}-{}", rec.artifact, bkey);
+                    records.push(rec);
+                }
+            }
+        }
+    }
+
+    println!(
+        "\nf32 reduce: loss curves bit-identical across all requested worker counts \
+         (asserted). mxfp4 reduce: 4.25 bits/value on the wire vs f32's 32 — the comms \
+         column shrinks 7.5x at equal worker count; SR keeps the reduced gradient unbiased."
+    );
+    if let Some(dir) = out {
+        for rec in &records {
+            match rec.save(&dir) {
+                Ok(p) => println!("saved {}", p.display()),
+                Err(e) => eprintln!("save failed: {e:#}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,505 @@
+//! `repro check-records` — the CI perf-regression gate over bench-record
+//! JSON.
+//!
+//! Every figure bench emits one of two record schemas: **run** records
+//! ([`crate::coordinator::runrecord::RunRecord`] — fig1 training sweeps,
+//! fig8 distributed scaling) and **serve** records (`serve::ServeRecord`
+//! — fig6 continuous batching, fig7 KV decode). This module walks a
+//! directory tree of those files, validates each against its schema
+//! (required fields, finite numbers, ordered percentiles, well-formed
+//! curves), and compares the throughput/latency fields to the committed
+//! floors/ceilings in `tests/data/bench_baselines.json`.
+//!
+//! The baselines are deliberately *generous* — roughly 10–100× headroom
+//! below what even a throttled CI runner produces — so the gate trips on
+//! order-of-magnitude regressions (an accidentally quadratic path, dead
+//! parallelism, a decode loop that re-preps weights per step), never on
+//! runner jitter. Schema violations, by contrast, fail exactly: a record
+//! that drops a field or writes a NaN percentile is a bug regardless of
+//! speed.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Perf floors/ceilings loaded from `bench_baselines.json`.
+#[derive(Debug, Clone)]
+pub struct Baselines {
+    /// run records: minimum training throughput (tokens/sec) for any
+    /// non-diverged run
+    pub run_min_tokens_per_sec: f64,
+    /// serve records: minimum decode throughput (tokens/sec) when any
+    /// tokens were generated
+    pub serve_min_tokens_per_sec: f64,
+    /// serve records: p99 request-latency ceiling, seconds
+    pub serve_max_latency_p99_s: f64,
+    /// serve records: p99 time-to-first-token ceiling, seconds
+    pub serve_max_ttft_p99_s: f64,
+}
+
+impl Baselines {
+    pub fn from_json(j: &Json) -> Result<Baselines> {
+        let num = |obj: &Json, key: &str| -> Result<f64> {
+            obj.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow!("baseline {key} is not a number"))
+        };
+        let run = j.req("run")?;
+        let serve = j.req("serve")?;
+        Ok(Baselines {
+            run_min_tokens_per_sec: num(run, "min_tokens_per_sec")?,
+            serve_min_tokens_per_sec: num(serve, "min_tokens_per_sec")?,
+            serve_max_latency_p99_s: num(serve, "max_latency_p99_s")?,
+            serve_max_ttft_p99_s: num(serve, "max_ttft_p99_s")?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Baselines> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading baselines {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Baselines::from_json(&j).with_context(|| format!("loading {}", path.display()))
+    }
+}
+
+/// Locate the committed baselines when `--baselines` is not given: the
+/// gate refuses to run without them (a missing file must fail the build,
+/// not silently pass it).
+fn default_baselines_path() -> Result<PathBuf> {
+    let candidates = [
+        PathBuf::from("rust/tests/data/bench_baselines.json"),
+        PathBuf::from("tests/data/bench_baselines.json"),
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data/bench_baselines.json"),
+    ];
+    for c in &candidates {
+        if c.exists() {
+            return Ok(c.clone());
+        }
+    }
+    bail!(
+        "bench_baselines.json not found (looked in rust/tests/data, tests/data and the \
+         crate dir); pass --baselines PATH"
+    )
+}
+
+/// Outcome of one gate pass.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    pub checked: usize,
+    pub run_records: usize,
+    pub serve_records: usize,
+    pub violations: Vec<String>,
+}
+
+impl CheckReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "check-records: {} record(s) checked ({} run, {} serve), {} violation(s)",
+            self.checked,
+            self.run_records,
+            self.serve_records,
+            self.violations.len()
+        )
+    }
+}
+
+fn walk_json(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk_json(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Walk `dir` recursively and gate every `.json` record found. Errors on
+/// an unreadable tree or an empty one (an upload step that produced no
+/// records is itself a regression); per-record problems are collected as
+/// violations, not errors, so one bad file cannot mask the rest.
+pub fn check_records(dir: &Path, baselines: Option<&Path>) -> Result<CheckReport> {
+    let bpath = match baselines {
+        Some(p) => p.to_path_buf(),
+        None => default_baselines_path()?,
+    };
+    let b = Baselines::load(&bpath)?;
+    if !dir.exists() {
+        bail!("record directory {} does not exist", dir.display());
+    }
+    let mut files = Vec::new();
+    walk_json(dir, &mut files)?;
+    files.sort();
+    if files.is_empty() {
+        bail!("no .json records under {} — nothing to gate", dir.display());
+    }
+    let mut report = CheckReport::default();
+    for path in &files {
+        let name = path.display().to_string();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                report.checked += 1;
+                report.violations.push(format!("{name}: unreadable: {e}"));
+                continue;
+            }
+        };
+        match Json::parse(&text) {
+            Ok(j) => check_one(&j, &name, &b, &mut report),
+            Err(e) => {
+                report.checked += 1;
+                report.violations.push(format!("{name}: invalid JSON: {e}"));
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Classify and gate one parsed record.
+pub fn check_one(j: &Json, name: &str, b: &Baselines, report: &mut CheckReport) {
+    report.checked += 1;
+    if j.get("train_curve").is_some() {
+        report.run_records += 1;
+        check_run(j, name, b, &mut report.violations);
+    } else if j.get("latency_p50_p90_p99_s").is_some() {
+        report.serve_records += 1;
+        check_serve(j, name, b, &mut report.violations);
+    } else {
+        report.violations.push(format!(
+            "{name}: unknown record schema (neither a run record with train_curve nor a \
+             serve record with latency percentiles)"
+        ));
+    }
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    match j.get(key).and_then(|v| v.as_str()) {
+        Some(s) if !s.is_empty() => Ok(s.to_string()),
+        Some(_) => Err(format!("{key} is empty")),
+        None => Err(format!("missing string field {key}")),
+    }
+}
+
+fn req_num(j: &Json, key: &str) -> Result<f64, String> {
+    match j.get(key) {
+        Some(v) => v
+            .as_f64()
+            .filter(|f| f.is_finite())
+            .ok_or_else(|| format!("{key} is not a finite number")),
+        None => Err(format!("missing numeric field {key}")),
+    }
+}
+
+fn curve(j: &Json, key: &str) -> Result<Vec<(f64, f64)>, String> {
+    let arr = j
+        .get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| format!("missing curve field {key}"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, p) in arr.iter().enumerate() {
+        let pair = p.as_arr().ok_or_else(|| format!("{key}[{i}] is not a pair"))?;
+        if pair.len() != 2 {
+            return Err(format!("{key}[{i}] has {} entries, wants 2", pair.len()));
+        }
+        // loss may be null (JSON has no inf/nan): surfaces as NAN here,
+        // the caller decides whether that is legal for this record
+        let step = pair[0].as_f64().ok_or_else(|| format!("{key}[{i}] step not numeric"))?;
+        let loss = pair[1].as_f64().unwrap_or(f64::NAN);
+        out.push((step, loss));
+    }
+    Ok(out)
+}
+
+fn check_run(j: &Json, name: &str, b: &Baselines, violations: &mut Vec<String>) {
+    let mut fail = |msg: String| violations.push(format!("{name}: {msg}"));
+
+    for key in ["artifact", "size", "method"] {
+        if let Err(e) = req_str(j, key) {
+            fail(e);
+        }
+    }
+    for key in ["non_embedding_params", "tokens", "steps", "ratio", "seed", "wall_secs"] {
+        if let Err(e) = req_num(j, key) {
+            fail(e);
+        }
+    }
+    let diverged = match j.get("diverged").and_then(|v| v.as_bool()) {
+        Some(d) => d,
+        None => {
+            fail("missing bool field diverged".into());
+            false
+        }
+    };
+
+    match curve(j, "val_curve") {
+        Ok(c) if c.is_empty() => fail("val_curve is empty".into()),
+        Ok(c) => {
+            if !diverged {
+                for (i, &(_, l)) in c.iter().enumerate() {
+                    if !l.is_finite() {
+                        fail(format!("val_curve[{i}] loss is not finite on a non-diverged run"));
+                        break;
+                    }
+                }
+            }
+            if c.windows(2).any(|w| w[1].0 < w[0].0) {
+                fail("val_curve steps are not non-decreasing".into());
+            }
+        }
+        Err(e) => fail(e),
+    }
+    if let Err(e) = curve(j, "train_curve") {
+        fail(e);
+    }
+
+    if !diverged {
+        if let Err(e) = req_num(j, "final_val_loss") {
+            fail(format!("{e} (required finite on non-diverged runs)"));
+        }
+    }
+
+    // dist fields (written by every current record; absent only in
+    // pre-dist archives, which are not what CI gates)
+    let workers = j.get("workers").and_then(|v| v.as_f64()).unwrap_or(1.0);
+    if workers < 1.0 {
+        fail(format!("workers {workers} < 1"));
+    }
+    if let Some(r) = j.get("reduce").and_then(|v| v.as_str()) {
+        if !matches!(r, "none" | "f32" | "mxfp4") {
+            fail(format!("unknown reduce mode {r:?}"));
+        }
+    }
+    if let Some(c) = j.get("comms_bytes_per_step").and_then(|v| v.as_f64()) {
+        if c.is_nan() || c < 0.0 {
+            fail(format!("comms_bytes_per_step {c} is negative or NaN"));
+        }
+    }
+
+    // perf floor: only meaningful for completed, non-diverged runs
+    match (req_num(j, "tokens_per_sec"), req_num(j, "steps")) {
+        (Ok(tps), Ok(steps)) => {
+            if !diverged && steps >= 1.0 && tps < b.run_min_tokens_per_sec {
+                fail(format!(
+                    "training throughput {tps:.1} tok/s is below the baseline floor {} \
+                     (an order-of-magnitude regression, not jitter — the floor carries \
+                     10-100x headroom)",
+                    b.run_min_tokens_per_sec
+                ));
+            }
+        }
+        (Err(e), _) => fail(e),
+        (_, Err(_)) => {}
+    }
+}
+
+fn check_serve(j: &Json, name: &str, b: &Baselines, violations: &mut Vec<String>) {
+    let mut fail = |msg: String| violations.push(format!("{name}: {msg}"));
+
+    for key in ["bench", "mode", "method", "backend"] {
+        if let Err(e) = req_str(j, key) {
+            fail(e);
+        }
+    }
+    for key in [
+        "batch_point",
+        "max_batch",
+        "requests",
+        "completed",
+        "generated_tokens",
+        "decode_steps",
+        "wall_s",
+        "busy_s",
+        "kv_bytes_peak",
+    ] {
+        if let Err(e) = req_num(j, key) {
+            fail(e);
+        }
+    }
+
+    if let (Ok(req), Ok(done)) = (req_num(j, "requests"), req_num(j, "completed")) {
+        if done > req {
+            fail(format!("completed {done} exceeds submitted requests {req}"));
+        }
+    }
+
+    let mut p99 = |key: &str, ceiling: f64| {
+        let arr = match j.get(key).and_then(|v| v.as_arr()) {
+            Some(a) => a,
+            None => {
+                fail(format!("missing percentile field {key}"));
+                return;
+            }
+        };
+        if arr.len() != 3 {
+            fail(format!("{key} has {} entries, wants [p50, p90, p99]", arr.len()));
+            return;
+        }
+        let vals: Vec<f64> = arr.iter().map(|v| v.as_f64().unwrap_or(f64::NAN)).collect();
+        if vals.iter().any(|v| !v.is_finite() || *v < 0.0) {
+            fail(format!("{key} has a non-finite or negative entry"));
+            return;
+        }
+        if vals[0] > vals[1] || vals[1] > vals[2] {
+            fail(format!("{key} percentiles are not ordered: {vals:?}"));
+            return;
+        }
+        if vals[2] > ceiling {
+            fail(format!("{key} p99 {}s exceeds the baseline ceiling {}s", vals[2], ceiling));
+        }
+    };
+    p99("latency_p50_p90_p99_s", b.serve_max_latency_p99_s);
+    p99("ttft_p50_p90_p99_s", b.serve_max_ttft_p99_s);
+
+    match (req_num(j, "tokens_per_sec"), req_num(j, "generated_tokens")) {
+        (Ok(tps), Ok(toks)) => {
+            if toks > 0.0 && tps < b.serve_min_tokens_per_sec {
+                fail(format!(
+                    "decode throughput {tps:.1} tok/s is below the baseline floor {} \
+                     (order-of-magnitude headroom — this is a regression, not jitter)",
+                    b.serve_min_tokens_per_sec
+                ));
+            }
+        }
+        (Err(e), _) => fail(e),
+        (_, Err(_)) => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baselines() -> Baselines {
+        Baselines {
+            run_min_tokens_per_sec: 10.0,
+            serve_min_tokens_per_sec: 2.0,
+            serve_max_latency_p99_s: 300.0,
+            serve_max_ttft_p99_s: 300.0,
+        }
+    }
+
+    fn run_json(tps: f64) -> Json {
+        let r = crate::coordinator::runrecord::RunRecord {
+            artifact: "native-h64-quartet".into(),
+            size: "h64".into(),
+            method: "quartet".into(),
+            non_embedding_params: 10_000,
+            tokens: 3200,
+            steps: 100,
+            ratio: 0.32,
+            seed: 1,
+            train_curve: vec![(50, 3.1), (100, 2.8)],
+            val_curve: vec![(0, 3.5), (100, 2.9)],
+            final_val_loss: 2.9,
+            wall_secs: 1.0,
+            tokens_per_sec: tps,
+            diverged: false,
+            workers: 4,
+            grad_shards: 4,
+            reduce: "mxfp4".into(),
+            comms_bytes_per_step: 1234.5,
+        };
+        Json::parse(&r.to_json().to_string()).unwrap()
+    }
+
+    fn serve_json() -> Json {
+        Json::parse(
+            r#"{"bench":"fig6_continuous_batching","mode":"continuous","method":"quartet",
+                "backend":"scalar","batch_point":4,"max_batch":4,"requests":8,"completed":8,
+                "generated_tokens":64,"decode_steps":20,"wall_s":0.5,"busy_s":0.4,
+                "tokens_per_sec":128.0,"latency_p50_p90_p99_s":[0.1,0.2,0.3],
+                "ttft_p50_p90_p99_s":[0.05,0.1,0.2],"kv_bytes_peak":4096}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn healthy_records_pass() {
+        let b = baselines();
+        let mut rep = CheckReport::default();
+        check_one(&run_json(5000.0), "run.json", &b, &mut rep);
+        check_one(&serve_json(), "serve.json", &b, &mut rep);
+        assert_eq!(rep.checked, 2);
+        assert_eq!(rep.run_records, 1);
+        assert_eq!(rep.serve_records, 1);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn slow_run_trips_the_throughput_floor() {
+        let mut rep = CheckReport::default();
+        check_one(&run_json(1.0), "slow.json", &baselines(), &mut rep);
+        assert_eq!(rep.violations.len(), 1);
+        assert!(rep.violations[0].contains("below the baseline floor"));
+    }
+
+    #[test]
+    fn schema_violations_are_reported() {
+        let b = baselines();
+        // missing method
+        let mut j = run_json(5000.0);
+        if let Json::Obj(m) = &mut j {
+            m.remove("method");
+        }
+        let mut rep = CheckReport::default();
+        check_one(&j, "r.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("method")));
+
+        // unordered serve percentiles
+        let mut s = serve_json();
+        s.set("latency_p50_p90_p99_s", Json::f64s(&[0.3, 0.2, 0.1]));
+        let mut rep = CheckReport::default();
+        check_one(&s, "s.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("not ordered")));
+
+        // unknown schema
+        let mut rep = CheckReport::default();
+        check_one(&Json::parse(r#"{"hello": 1}"#).unwrap(), "x.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("unknown record schema")));
+    }
+
+    #[test]
+    fn diverged_runs_skip_the_floor_but_keep_the_schema() {
+        let b = baselines();
+        let mut j = run_json(0.5);
+        j.set("diverged", Json::Bool(true));
+        j.set("final_val_loss", Json::Null);
+        let mut rep = CheckReport::default();
+        check_one(&j, "d.json", &b, &mut rep);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn check_records_walks_directories_and_gates() {
+        let dir = std::env::temp_dir().join(format!("qr_check_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("sub")).unwrap();
+        std::fs::write(dir.join("ok.json"), run_json(5000.0).to_string()).unwrap();
+        std::fs::write(dir.join("sub/serve.json"), serve_json().to_string()).unwrap();
+        std::fs::write(dir.join("sub/bad.json"), "{not json").unwrap();
+        let bpath = dir.join("baselines.json");
+        std::fs::write(
+            &bpath,
+            r#"{"run":{"min_tokens_per_sec":10.0},
+                "serve":{"min_tokens_per_sec":2.0,"max_latency_p99_s":300.0,
+                         "max_ttft_p99_s":300.0}}"#,
+        )
+        .unwrap();
+        // the baselines file itself is a .json in the tree — it counts as
+        // an unknown schema, which is exactly why CI keeps baselines
+        // outside the record directory; point at a clean subset here
+        let report = check_records(&dir.join("sub"), Some(&bpath)).unwrap();
+        assert_eq!(report.checked, 2);
+        assert!(report.violations.iter().any(|v| v.contains("invalid JSON")));
+        assert_eq!(report.serve_records, 1);
+
+        // an empty tree is an error, not a pass
+        let empty = dir.join("empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(check_records(&empty, Some(&bpath)).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -4,8 +4,10 @@
 //!
 //! The training-execution half (init, trainer, checkpoint, the sweep
 //! *runner*) drives PJRT and needs the `xla` feature; run records, sweep
-//! presets and the step math are pure Rust.
+//! presets, the step math and the `check` record gate (the
+//! `repro check-records` CI perf-regression guard) are pure Rust.
 
+pub mod check;
 #[cfg(feature = "xla")]
 pub mod checkpoint;
 #[cfg(feature = "xla")]

@@ -26,6 +26,16 @@ pub struct RunRecord {
     pub wall_secs: f64,
     pub tokens_per_sec: f64,
     pub diverged: bool,
+    /// data-parallel worker count (1 for single-worker runs)
+    pub workers: usize,
+    /// logical gradient shards per step (the determinism granularity of
+    /// `train::dist`; 1 for single-worker runs)
+    pub grad_shards: usize,
+    /// gradient all-reduce wire format: `none` | `f32` | `mxfp4`
+    pub reduce: String,
+    /// modeled ring all-reduce traffic per optimizer step, bytes
+    /// (0 when `workers` is 1 — nothing crosses a wire)
+    pub comms_bytes_per_step: f64,
 }
 
 impl RunRecord {
@@ -48,6 +58,10 @@ impl RunRecord {
             ("wall_secs", Json::num(self.wall_secs)),
             ("tokens_per_sec", Json::num(self.tokens_per_sec)),
             ("diverged", Json::Bool(self.diverged)),
+            ("workers", Json::num(self.workers as f64)),
+            ("grad_shards", Json::num(self.grad_shards as f64)),
+            ("reduce", Json::str(&self.reduce)),
+            ("comms_bytes_per_step", Json::num(self.comms_bytes_per_step)),
         ])
     }
 
@@ -78,6 +92,19 @@ impl RunRecord {
             wall_secs: j.req("wall_secs")?.as_f64().unwrap_or(0.0),
             tokens_per_sec: j.req("tokens_per_sec")?.as_f64().unwrap_or(0.0),
             diverged: j.req("diverged")?.as_bool().unwrap_or(false),
+            // dist fields default for records written before the
+            // data-parallel axis existed
+            workers: j.get("workers").and_then(|v| v.as_usize()).unwrap_or(1),
+            grad_shards: j.get("grad_shards").and_then(|v| v.as_usize()).unwrap_or(1),
+            reduce: j
+                .get("reduce")
+                .and_then(|v| v.as_str())
+                .unwrap_or("none")
+                .to_string(),
+            comms_bytes_per_step: j
+                .get("comms_bytes_per_step")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
         })
     }
 
@@ -142,6 +169,10 @@ mod tests {
             wall_secs: 12.5,
             tokens_per_sec: 40_960.0,
             diverged: false,
+            workers: 4,
+            grad_shards: 4,
+            reduce: "mxfp4".into(),
+            comms_bytes_per_step: 65_280.0,
         }
     }
 
@@ -154,6 +185,28 @@ mod tests {
         assert_eq!(r2.train_curve, r.train_curve);
         assert_eq!(r2.final_val_loss, r.final_val_loss);
         assert_eq!(r2.diverged, false);
+        assert_eq!(r2.workers, 4);
+        assert_eq!(r2.grad_shards, 4);
+        assert_eq!(r2.reduce, "mxfp4");
+        assert_eq!(r2.comms_bytes_per_step, 65_280.0);
+    }
+
+    #[test]
+    fn pre_dist_records_default_to_single_worker() {
+        // records written before the data-parallel axis existed carry no
+        // workers/reduce fields; loading them must not error
+        let mut j = sample().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("workers");
+            m.remove("grad_shards");
+            m.remove("reduce");
+            m.remove("comms_bytes_per_step");
+        }
+        let r = RunRecord::from_json(&j).unwrap();
+        assert_eq!(r.workers, 1);
+        assert_eq!(r.grad_shards, 1);
+        assert_eq!(r.reduce, "none");
+        assert_eq!(r.comms_bytes_per_step, 0.0);
     }
 
     #[test]

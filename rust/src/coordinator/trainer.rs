@@ -180,6 +180,10 @@ impl<'a> Trainer<'a> {
             wall_secs: wall,
             tokens_per_sec: tokens_done as f64 / wall.max(1e-9),
             diverged,
+            workers: 1,
+            grad_shards: 1,
+            reduce: "none".to_string(),
+            comms_bytes_per_step: 0.0,
         };
         Ok((rec, params))
     }

@@ -153,6 +153,42 @@ pub trait Backend: Send + Sync {
         (ctx, probs)
     }
 
+    /// All-reduce hook for MXFP4-compressed data-parallel gradients: each
+    /// contribution `parts[p]` (dense `[rows, cols]`, cols % 32 == 0) is
+    /// quantized to the MXFP4 wire format with unbiased stochastic
+    /// rounding on its own RNG stream (seeded by `salts[p]`), decoded,
+    /// and accumulated element-wise **in part order**. This is the
+    /// receive side of `train::dist::GradReducer`: what crosses the
+    /// (virtual) wire is 4.25 bits/value instead of 32, and because SR is
+    /// unbiased the reduced gradient is an unbiased estimate of the f32
+    /// sum — the same property that makes Quartet's backward sound.
+    ///
+    /// Determinism contract: the result is a pure function of
+    /// `(parts, salts, rows, cols)` — thread count must not change a bit
+    /// (the accumulation order is fixed by `parts` order). Like
+    /// `quantize_mxfp4`, the SR stream *discipline* may differ between
+    /// backends; within one backend the default body and any fused
+    /// override must agree exactly.
+    fn reduce_mxfp4(
+        &self,
+        parts: &[&[f32]],
+        rows: usize,
+        cols: usize,
+        salts: &[u64],
+    ) -> Vec<f32> {
+        assert_eq!(parts.len(), salts.len(), "one salt per part");
+        let mut acc = vec![0.0f32; rows * cols];
+        for (part, &salt) in parts.iter().zip(salts) {
+            assert_eq!(part.len(), rows * cols, "part shape mismatch");
+            let t = self.quantize_mxfp4(part, rows, cols, QuantMode::Sr, &mut Rng::new(salt));
+            let dec = self.decode_mxfp4(&t);
+            for (a, v) in acc.iter_mut().zip(&dec) {
+                *a += *v;
+            }
+        }
+        acc
+    }
+
     /// Apply H_g to each contiguous g-group along the last axis, in place.
     fn block_hadamard(&self, data: &mut [f32], g: usize);
 
@@ -232,6 +268,22 @@ mod tests {
         let b = hadamard_plan(32);
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(a.g, 32);
+    }
+
+    #[test]
+    fn reduce_mxfp4_default_matches_quantize_decode_sum() {
+        let be = ScalarBackend;
+        let mut rng = Rng::new(3);
+        let a = rng.gaussian_vec(2 * 32, 1.0);
+        let b = rng.gaussian_vec(2 * 32, 1.0);
+        let got = be.reduce_mxfp4(&[&a, &b], 2, 32, &[7, 9]);
+        let da = be.decode_mxfp4(&be.quantize_mxfp4(&a, 2, 32, QuantMode::Sr, &mut Rng::new(7)));
+        let db = be.decode_mxfp4(&be.quantize_mxfp4(&b, 2, 32, QuantMode::Sr, &mut Rng::new(9)));
+        let want: Vec<f32> = da.iter().zip(&db).map(|(x, y)| x + y).collect();
+        assert_eq!(got, want);
+        // deterministic per salt set, fresh noise under other salts
+        assert_eq!(got, be.reduce_mxfp4(&[&a, &b], 2, 32, &[7, 9]));
+        assert_ne!(got, be.reduce_mxfp4(&[&a, &b], 2, 32, &[8, 9]));
     }
 
     #[test]

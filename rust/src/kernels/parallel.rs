@@ -436,6 +436,76 @@ impl Backend for ParallelBackend {
         (ctx, probs)
     }
 
+    fn reduce_mxfp4(
+        &self,
+        parts: &[&[f32]],
+        rows: usize,
+        cols: usize,
+        salts: &[u64],
+    ) -> Vec<f32> {
+        assert_eq!(parts.len(), salts.len(), "one salt per part");
+        assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
+        for part in parts {
+            assert_eq!(part.len(), rows * cols, "part shape mismatch");
+        }
+        let mut acc = vec![0.0f32; rows * cols];
+        if parts.is_empty() || rows == 0 || cols == 0 {
+            return acc;
+        }
+        // Fused quantize→decode→accumulate, partitioned on the row axis:
+        // each worker owns a block of output rows and runs every part's
+        // row through one reused 1-row scratch tensor, so no full packed
+        // intermediate is ever materialized. Per-part quantize salts are
+        // exactly what `quantize_mxfp4` would draw from `Rng::new(salt)`
+        // (the stochastic path always uses per-row streams regardless of
+        // size), and the per-element accumulation follows part order — so
+        // this override is bit-identical to the trait default executed on
+        // this backend, at any thread count.
+        let part_salts: Vec<u64> = salts.iter().map(|&s| Rng::new(s).next_u64()).collect();
+        let threads = self.pool_size().min(rows);
+        let gpr = cols / MX_GROUP;
+        let lut = byte_decode_lut();
+        let rows_per = (rows + threads - 1) / threads;
+        std::thread::scope(|s| {
+            for (ci, chunk) in acc.chunks_mut(rows_per * cols).enumerate() {
+                let r0 = ci * rows_per;
+                let lut = &lut;
+                let part_salts = &part_salts;
+                s.spawn(move || {
+                    let mut t = Mxfp4Tensor {
+                        rows: 1,
+                        cols,
+                        codes: vec![0u8; cols / 2],
+                        scales: vec![E8m0(0); gpr],
+                        mask: None,
+                    };
+                    let mut dec = vec![0.0f32; cols];
+                    for (i, out_row) in chunk.chunks_mut(cols).enumerate() {
+                        let r = r0 + i;
+                        for (p, part) in parts.iter().enumerate() {
+                            let mut row_rng = row_stream(part_salts[p], r);
+                            scalar::quantize_rows(
+                                &part[r * cols..(r + 1) * cols],
+                                1,
+                                cols,
+                                QuantMode::Sr,
+                                &mut row_rng,
+                                &mut t.codes,
+                                &mut t.scales,
+                                None,
+                            );
+                            scalar::decode_row(&t, 0, lut, &mut dec);
+                            for (a, v) in out_row.iter_mut().zip(&dec) {
+                                *a += *v;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        acc
+    }
+
     fn block_hadamard(&self, data: &mut [f32], g: usize) {
         assert_eq!(data.len() % g, 0);
         let n_groups = data.len() / g;
@@ -497,6 +567,28 @@ mod tests {
             assert_eq!(got.codes, codes, "{mode:?}");
             assert_eq!(got.scales, scales, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn reduce_mxfp4_fused_matches_unfused_at_any_thread_count() {
+        let mut rng = Rng::new(11);
+        let (rows, cols) = (6, 64);
+        let a = rng.gaussian_vec(rows * cols, 1.0);
+        let b = rng.gaussian_vec(rows * cols, 0.5);
+        let be = ParallelBackend::with_threads(3);
+        let got = be.reduce_mxfp4(&[&a, &b], rows, cols, &[41, 42]);
+        // unfused reference on the same backend (the trait default body):
+        // quantize each part on its salted stream, decode, accumulate
+        let mut want = vec![0.0f32; rows * cols];
+        for (part, salt) in [(&a, 41u64), (&b, 42u64)] {
+            let t = be.quantize_mxfp4(part, rows, cols, QuantMode::Sr, &mut Rng::new(salt));
+            for (w, v) in want.iter_mut().zip(be.decode_mxfp4(&t)) {
+                *w += v;
+            }
+        }
+        assert_eq!(got, want, "fused override drifted from quantize→decode→sum");
+        let t7 = ParallelBackend::with_threads(7).reduce_mxfp4(&[&a, &b], rows, cols, &[41, 42]);
+        assert_eq!(got, t7, "reduce bits depend on thread count");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! repro train   --native --method quartet [--arch mlp|transformer]
 //!               [--steps 400] [--d-hidden 128 | --d-model 64 --n-heads 4
 //!               --n-layers 2 --d-ff 128 --seq 32]
+//!               [--workers 4] [--reduce f32|mxfp4] [--shards 4]
 //!               [--checkpoint ckpt.json] [--out runs]    # pure Rust
 //! repro train   --artifact n80k-quartet --steps 200 [--lr 2e-3] [--seed 0]
 //! repro sweep   --preset reduced --out runs [--max-steps 4000]
@@ -16,6 +17,7 @@
 //! repro regions [--paper]             # Fig 1(b,c) optimality maps
 //! repro table2                        # error-bias statistics
 //! repro kernels [--m 256 --n 11008 --k 4096]   # backend speedup check
+//! repro check-records [--dir runs]    # bench-record schema + perf gate
 //! ```
 //!
 //! Every subcommand honours the global `--backend scalar|parallel` flag
@@ -56,11 +58,15 @@ fn main() -> Result<()> {
         Some("regions") => cmd_regions(&mut args),
         Some("table2") => cmd_table2(&mut args),
         Some("kernels") => cmd_kernels(&mut args),
+        Some("check-records") => cmd_check_records(&mut args),
         Some(other) => bail!("unknown subcommand {other:?} (see --help in README)"),
         None => {
-            println!("usage: repro <info|train|sweep|serve|regions|table2|kernels> [flags]");
+            println!(
+                "usage: repro <info|train|sweep|serve|regions|table2|kernels|check-records> [flags]"
+            );
             println!("       repro train --native --method f32|mxfp8|quartet|rtn");
-            println!("                   [--arch mlp|transformer]  (pure Rust)");
+            println!("                   [--arch mlp|transformer]");
+            println!("                   [--workers N --reduce f32|mxfp4 --shards S]  (pure Rust)");
             println!("       repro serve --method f32|mxfp8|quartet [--checkpoint ckpt.json]");
             println!("                   [--arch mlp|transformer] [--recompute]");
             println!("                   [--trace t.json | --requests N --rate r]  (pure Rust)");
@@ -133,13 +139,32 @@ fn cmd_train(args: &mut Args) -> Result<()> {
 /// (`--out`) and a servable checkpoint (`--checkpoint`).
 fn cmd_train_native(args: &mut Args) -> Result<()> {
     use quartet::train::{
-        train_native, train_native_transformer, ModelConfig, NativeTrainOptions,
-        TrainMethod, TransformerConfig,
+        train_native, train_native_transformer, DistOptions, ModelConfig,
+        NativeTrainOptions, ReduceMode, TrainMethod, TransformerConfig,
+        DEFAULT_GRAD_SHARDS,
     };
 
     let arch = args.str_or("arch", "mlp");
     let method = TrainMethod::parse(&args.str_or("method", "quartet"))?;
     let vocab = args.parse_or("vocab", 256usize)?;
+    // data-parallel axis: engaged by any of --workers/--reduce/--shards;
+    // --shards fixes the determinism granularity (loss bits depend on it,
+    // never on the worker count)
+    let workers = args.parse_opt::<usize>("workers")?;
+    let reduce = args.get("reduce");
+    let shards = args.parse_opt::<usize>("shards")?;
+    let dist = if workers.is_some() || reduce.is_some() || shards.is_some() {
+        Some(DistOptions {
+            workers: workers.unwrap_or(1).max(1),
+            shards: shards.unwrap_or(DEFAULT_GRAD_SHARDS),
+            reduce: match reduce.as_deref() {
+                None => ReduceMode::F32,
+                Some(s) => ReduceMode::parse(s)?,
+            },
+        })
+    } else {
+        None
+    };
     let opts = NativeTrainOptions {
         steps: args.parse_or("steps", 400usize)?,
         batch: args.parse_or("batch", 32usize)?,
@@ -149,6 +174,7 @@ fn cmd_train_native(args: &mut Args) -> Result<()> {
         eval_batches: args.parse_or("eval-batches", 8usize)?,
         log_every: args.parse_or("log-every", 50usize)?,
         verbose: true,
+        dist,
         ..NativeTrainOptions::default()
     };
     let out = args.get("out").map(PathBuf::from);
@@ -197,6 +223,17 @@ fn cmd_train_native(args: &mut Args) -> Result<()> {
         rec.wall_secs,
         if rec.diverged { "  [DIVERGED]" } else { "" }
     );
+    if rec.workers > 1 || rec.reduce != "none" {
+        println!(
+            "dist: workers={} shards={} reduce={} comms={:.1} KiB/step (ring all-reduce, \
+             {} bits/value)",
+            rec.workers,
+            rec.grad_shards,
+            rec.reduce,
+            rec.comms_bytes_per_step / 1024.0,
+            if rec.reduce == "mxfp4" { "4.25" } else { "32" }
+        );
+    }
     if let Some(dir) = out {
         let path = rec.save(&dir)?;
         println!("record: {}", path.display());
@@ -549,4 +586,31 @@ fn cmd_kernels(args: &mut Args) -> Result<()> {
         println!("  parallel speedup: {:.2}x", medians[0] / medians[1]);
     }
     Ok(())
+}
+
+/// Perf-regression gate over the bench-record JSON the figure benches
+/// emit: every record under `--dir` (recursively) is validated against
+/// the run/serve schemas and its throughput/latency compared to the
+/// committed floors in `tests/data/bench_baselines.json`. Nonzero exit on
+/// any violation — CI runs this after the fig1/fig6/fig7/fig8 smokes so a
+/// silent order-of-magnitude slowdown fails the build instead of
+/// shipping.
+fn cmd_check_records(args: &mut Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("dir", "runs"));
+    let baselines = args.get("baselines").map(PathBuf::from);
+    args.finish()?;
+    let report = quartet::coordinator::check::check_records(&dir, baselines.as_deref())?;
+    println!("{}", report.summary());
+    if report.violations.is_empty() {
+        Ok(())
+    } else {
+        for v in &report.violations {
+            eprintln!("FAIL {v}");
+        }
+        bail!(
+            "{} violation(s) across {} record(s) — see FAIL lines above",
+            report.violations.len(),
+            report.checked
+        )
+    }
 }

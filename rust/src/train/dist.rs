@@ -1,0 +1,498 @@
+//! Data-parallel native training: N in-process workers, each computing
+//! gradients on its shard of the global batch, synchronized by a
+//! [`GradReducer`] that all-reduces per-tensor gradients either exactly
+//! (f32) or through the MXFP4 wire format via unbiased stochastic
+//! rounding ([`crate::kernels::Backend::reduce_mxfp4`]) — the paper's
+//! central claim (SR keeps FP4 gradients usable end to end) applied to
+//! *communicating* gradients, not just computing with them.
+//!
+//! # Determinism model
+//!
+//! The global batch is always split into [`DistOptions::shards`] fixed,
+//! equal, contiguous **logical shards**; `--workers N` only chooses how
+//! many OS threads pick those shards up (contiguous balanced ranges).
+//! Every per-shard quantity is keyed by the shard index, never by the
+//! thread that ran it:
+//!
+//! * the model's own SR streams: each shard's forward/backward draws from
+//!   [`shard_stream`]`(seed, step, shard)`;
+//! * the reducer's compression streams: tensor `t`'s contribution from
+//!   shard `p` is SR-quantized under a salt folded from
+//!   `(seed, step, p, t)`;
+//! * the reduction itself folds shard contributions element-wise in shard
+//!   order (f32 addition in a fixed order).
+//!
+//! So the loss curve is a pure function of `(seed, shards, reduce)` and
+//! is **bit-identical at any worker count** — the same invariant
+//! [`crate::kernels::ParallelBackend`] pins for its thread count, lifted
+//! one level up the stack. `tests/dist_training.rs` pins it for both
+//! backends and both architectures.
+//!
+//! # Comms accounting
+//!
+//! Each step's all-reduce payload (one worker's full gradient in wire
+//! format: 32 bits/value for f32, 4.25 for MXFP4) is accumulated by the
+//! reducer, and the trainer records the classic ring all-reduce volume
+//! `2·(W−1)·payload` in the run record (`comms_bytes_per_step`) — the
+//! number `fig8_dist_scaling` sweeps against worker count.
+//!
+//! The model deliberately charges **one message per worker**, independent
+//! of the shard count: a real deployment's worker sums its local shards
+//! in f32 for free (they never cross a wire) and compresses the single
+//! outgoing message. This simulation quantizes per *shard* instead —
+//! that is a determinism device (it keeps the bits worker-count
+//! invariant), not a wire requirement, so the accounting follows the
+//! deployment, not the simulation's internal granularity.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::kernels::Backend;
+use crate::train::model::{Grads, MlpLm};
+use crate::train::transformer::{TfBlockGrads, TfGrads, TransformerLm};
+use crate::util::rng::Rng;
+
+/// Default logical shard count (the determinism granularity): small
+/// enough that per-shard forward passes stay efficient, large enough
+/// that `--workers 4` parallelizes fully.
+pub const DEFAULT_GRAD_SHARDS: usize = 4;
+
+/// How per-shard gradients cross the (virtual) wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceMode {
+    /// Exact element-wise f32 sum in shard order — the baseline, 32
+    /// bits/value on the wire.
+    F32,
+    /// Each contribution is SR-quantized to packed MXFP4 (4.25
+    /// bits/value: 4-bit codes + one E8M0 scale byte per 32) and decoded
+    /// on the receive side; unbiased, so the reduced gradient estimates
+    /// the f32 sum without bias.
+    Mxfp4,
+}
+
+impl ReduceMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceMode::F32 => "f32",
+            ReduceMode::Mxfp4 => "mxfp4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ReduceMode> {
+        match s {
+            "f32" => Ok(ReduceMode::F32),
+            "mxfp4" => Ok(ReduceMode::Mxfp4),
+            other => Err(anyhow!("unknown reduce mode {other:?} (expected f32|mxfp4)")),
+        }
+    }
+
+    /// Wire bits per gradient value.
+    pub fn bits_per_value(self) -> f64 {
+        match self {
+            ReduceMode::F32 => 32.0,
+            ReduceMode::Mxfp4 => 4.25,
+        }
+    }
+
+    /// Wire bytes for a `values`-element tensor.
+    pub fn payload_bytes(self, values: usize) -> f64 {
+        values as f64 * self.bits_per_value() / 8.0
+    }
+}
+
+/// The data-parallel axis of a native training run.
+#[derive(Debug, Clone)]
+pub struct DistOptions {
+    /// OS worker threads; clamped to `shards` (extra workers would idle).
+    pub workers: usize,
+    /// Logical gradient shards per step — fixes the determinism
+    /// granularity independently of `workers`.
+    pub shards: usize,
+    pub reduce: ReduceMode,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions {
+            workers: 1,
+            shards: DEFAULT_GRAD_SHARDS,
+            reduce: ReduceMode::F32,
+        }
+    }
+}
+
+impl DistOptions {
+    /// Effective worker thread count.
+    pub fn effective_workers(&self) -> usize {
+        self.workers.max(1).min(self.shards.max(1))
+    }
+
+    /// The shard structure must tile the global batch exactly — unequal
+    /// shards would break both the mean-of-means loss identity and the
+    /// worker-count invariance.
+    pub fn validate(&self, batch: usize) -> Result<()> {
+        ensure!(self.shards >= 1, "need at least one gradient shard");
+        ensure!(self.workers >= 1, "need at least one worker");
+        ensure!(
+            batch % self.shards == 0,
+            "batch {} must be divisible by the shard count {} (equal shards are \
+             what keeps the loss a mean of shard means)",
+            batch,
+            self.shards
+        );
+        Ok(())
+    }
+}
+
+/// Splitmix-style fold of the run seed, step, shard and tensor labels
+/// into one 64-bit salt; shared by the model-backward streams
+/// (`tensor = MODEL_STREAM`) and the reducer's compression streams.
+fn fold_salt(seed: u64, step: u64, shard: u64, tensor: u64) -> u64 {
+    let mut h = seed ^ 0x9e37_79b9_7f4a_7c15;
+    for v in [step, shard, tensor] {
+        h = (h ^ v.wrapping_mul(0xa076_1d64_78bd_642f))
+            .rotate_left(23)
+            .wrapping_mul(0xe703_7ed1_a0b4_28db);
+        h ^= h >> 29;
+    }
+    h
+}
+
+/// Tensor label reserved for the per-shard model forward/backward stream
+/// (reducer tensor ids start at 0 and stay well below this).
+const MODEL_STREAM: u64 = u64::MAX;
+
+/// Per-(seed, step, shard) RNG stream for one shard's forward/backward.
+pub fn shard_stream(seed: u64, step: usize, shard: usize) -> Rng {
+    Rng::new(fold_salt(seed, step as u64, shard as u64, MODEL_STREAM))
+}
+
+/// Modeled ring all-reduce volume for one step: every worker sends and
+/// receives `(W−1)/W` of the payload in the reduce-scatter and again in
+/// the all-gather, so the cluster moves `2·(W−1)·payload` bytes total.
+/// One worker needs no wire at all.
+pub fn ring_allreduce_bytes(workers: usize, payload_bytes: f64) -> f64 {
+    if workers <= 1 {
+        0.0
+    } else {
+        2.0 * (workers - 1) as f64 * payload_bytes
+    }
+}
+
+/// MX-aligned view of a gradient tensor: natural `[rows, cols]` when the
+/// contraction axis is 32-aligned, flattened `[1, len]` when only the
+/// total length is, `None` when neither (the reducer then falls back to
+/// the exact f32 path for that tensor).
+fn mx_shape(rows: usize, cols: usize) -> Option<(usize, usize)> {
+    use crate::quant::mxfp4::MX_GROUP;
+    if cols % MX_GROUP == 0 {
+        Some((rows, cols))
+    } else if (rows * cols) % MX_GROUP == 0 {
+        Some((1, rows * cols))
+    } else {
+        None
+    }
+}
+
+/// All-reduces one parameter tensor at a time across the shard set;
+/// constructed once per optimizer step so `payload_bytes` accumulates
+/// exactly one worker's per-step gradient wire volume.
+pub struct GradReducer<'a> {
+    be: &'a dyn Backend,
+    mode: ReduceMode,
+    seed: u64,
+    step: u64,
+    /// wire bytes of one worker's full gradient payload this step
+    pub payload_bytes: f64,
+}
+
+impl<'a> GradReducer<'a> {
+    pub fn new(be: &'a dyn Backend, mode: ReduceMode, seed: u64, step: usize) -> GradReducer<'a> {
+        GradReducer { be, mode, seed, step: step as u64, payload_bytes: 0.0 }
+    }
+
+    /// Reduce one tensor's per-shard contributions (each `[rows, cols]`)
+    /// into `Σ_p weight·parts[p]`, folding in shard order. `tensor_id`
+    /// distinguishes the SR compression streams between tensors of one
+    /// step; shard index supplies the other axis, so the streams are
+    /// per-(seed, step, shard, tensor) and never depend on which worker
+    /// ran the shard.
+    pub fn reduce(
+        &mut self,
+        parts: &[&[f32]],
+        weight: f32,
+        rows: usize,
+        cols: usize,
+        tensor_id: u64,
+    ) -> Vec<f32> {
+        let len = rows * cols;
+        for part in parts {
+            assert_eq!(part.len(), len, "gradient part shape mismatch");
+        }
+        match self.mode {
+            ReduceMode::F32 => {
+                self.payload_bytes += ReduceMode::F32.payload_bytes(len);
+                self.sum_f32(parts, weight, len)
+            }
+            ReduceMode::Mxfp4 => match mx_shape(rows, cols) {
+                Some((r, c)) => {
+                    self.payload_bytes += ReduceMode::Mxfp4.payload_bytes(len);
+                    // what crosses the wire is each shard's RAW gradient
+                    // (that is what a worker would send); the shard weight
+                    // is applied once to the decoded sum — still unbiased
+                    // (E[w·ΣQ(vₚ)] = w·Σvₚ) and it avoids materializing a
+                    // weighted copy of every shard tensor per step
+                    let salts: Vec<u64> = (0..parts.len())
+                        .map(|p| fold_salt(self.seed, self.step, p as u64, tensor_id))
+                        .collect();
+                    let mut acc = self.be.reduce_mxfp4(parts, r, c, &salts);
+                    for a in acc.iter_mut() {
+                        *a *= weight;
+                    }
+                    acc
+                }
+                // not MX-groupable in any view: ship it exact (and account
+                // it at 32 bits/value — no silent discount)
+                None => {
+                    self.payload_bytes += ReduceMode::F32.payload_bytes(len);
+                    self.sum_f32(parts, weight, len)
+                }
+            },
+        }
+    }
+
+    fn sum_f32(&self, parts: &[&[f32]], weight: f32, len: usize) -> Vec<f32> {
+        let mut acc = vec![0.0f32; len];
+        for part in parts {
+            for (a, &v) in acc.iter_mut().zip(*part) {
+                *a += v * weight;
+            }
+        }
+        acc
+    }
+}
+
+/// Run `f(shard_index)` for every shard on `workers` scoped threads
+/// (contiguous balanced shard ranges) and return the per-shard results in
+/// shard order. Which worker ran a shard never affects its result, so
+/// the output is worker-count invariant by construction.
+fn run_sharded<T, F>(shards: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let w = workers.max(1).min(shards.max(1));
+    let mut slots: Vec<Option<T>> = Vec::new();
+    slots.resize_with(shards, || None);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [Option<T>] = &mut slots;
+        let mut s0 = 0usize;
+        for wi in 0..w {
+            let n = shards / w + usize::from(wi < shards % w);
+            if n == 0 {
+                continue;
+            }
+            let (chunk, next) = rest.split_at_mut(n);
+            rest = next;
+            let shard0 = s0;
+            s0 += n;
+            let f = &f;
+            scope.spawn(move || {
+                for (i, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(shard0 + i));
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("shard computed")).collect()
+}
+
+/// One data-parallel MLP step: shard the `(ctx, tgt)` global batch,
+/// compute per-shard `loss_and_grads` on worker threads, all-reduce.
+/// Returns the global mean loss, the reduced gradients, and one worker's
+/// gradient wire payload in bytes.
+pub fn dist_loss_and_grads_mlp(
+    model: &MlpLm,
+    ctx: &[(u32, u32)],
+    tgt: &[u32],
+    d: &DistOptions,
+    be: &dyn Backend,
+    seed: u64,
+    step: usize,
+) -> (f64, Grads, f64) {
+    let b = ctx.len();
+    let shards = d.shards.max(1);
+    assert_eq!(b % shards, 0, "batch must tile into shards (DistOptions::validate)");
+    assert_eq!(tgt.len(), b);
+    let per = b / shards;
+
+    let results = run_sharded(shards, d.effective_workers(), |sh| {
+        let lo = sh * per;
+        let hi = lo + per;
+        let mut rng = shard_stream(seed, step, sh);
+        model.loss_and_grads(&ctx[lo..hi], &tgt[lo..hi], be, &mut rng)
+    });
+
+    let loss = results.iter().map(|(l, _)| *l).sum::<f64>() / shards as f64;
+    let weight = 1.0 / shards as f32;
+    let mut reducer = GradReducer::new(be, d.reduce, seed, step);
+
+    let emb_parts: Vec<&[f32]> = results.iter().map(|(_, g)| g.tok_emb.as_slice()).collect();
+    let tok_emb = reducer.reduce(&emb_parts, weight, model.cfg.vocab, model.cfg.d_emb, 0);
+    let mut layers = Vec::with_capacity(model.layers.len());
+    for (li, layer) in model.layers.iter().enumerate() {
+        let parts: Vec<&[f32]> =
+            results.iter().map(|(_, g)| g.layers[li].as_slice()).collect();
+        layers.push(reducer.reduce(&parts, weight, layer.d_out, layer.d_in, (li + 1) as u64));
+    }
+    (loss, Grads { tok_emb, layers }, reducer.payload_bytes)
+}
+
+/// One data-parallel transformer step over `toks [b, seq+1]` windows;
+/// the transformer twin of [`dist_loss_and_grads_mlp`].
+pub fn dist_loss_and_grads_transformer(
+    model: &TransformerLm,
+    toks: &[u32],
+    b: usize,
+    d: &DistOptions,
+    be: &dyn Backend,
+    seed: u64,
+    step: usize,
+) -> (f64, TfGrads, f64) {
+    let shards = d.shards.max(1);
+    assert_eq!(b % shards, 0, "batch must tile into shards (DistOptions::validate)");
+    let win = model.cfg.seq + 1;
+    assert_eq!(toks.len(), b * win);
+    let per = b / shards;
+
+    let results = run_sharded(shards, d.effective_workers(), |sh| {
+        let lo = sh * per * win;
+        let hi = lo + per * win;
+        let mut rng = shard_stream(seed, step, sh);
+        model.loss_and_grads(&toks[lo..hi], per, be, &mut rng)
+    });
+
+    let loss = results.iter().map(|(l, _)| *l).sum::<f64>() / shards as f64;
+    let weight = 1.0 / shards as f32;
+    let cfg = &model.cfg;
+    let mut reducer = GradReducer::new(be, d.reduce, seed, step);
+
+    // tensor ids mirror the Adam slot order: tok_emb, then 9 per block,
+    // then final_norm — stable labels for the compression streams
+    let emb_parts: Vec<&[f32]> = results.iter().map(|(_, g)| g.tok_emb.as_slice()).collect();
+    let tok_emb = reducer.reduce(&emb_parts, weight, cfg.vocab, cfg.d_model, 0);
+
+    let mut blocks = Vec::with_capacity(model.blocks.len());
+    for bi in 0..model.blocks.len() {
+        let base = 1 + bi as u64 * 9;
+        let pick = |sel: fn(&TfBlockGrads) -> &Vec<f32>| -> Vec<&[f32]> {
+            results.iter().map(|(_, g)| sel(&g.blocks[bi]).as_slice()).collect()
+        };
+        blocks.push(TfBlockGrads {
+            attn_norm: reducer.reduce(&pick(|g| &g.attn_norm), weight, 1, cfg.d_model, base),
+            wq: reducer.reduce(&pick(|g| &g.wq), weight, cfg.d_model, cfg.d_model, base + 1),
+            wk: reducer.reduce(&pick(|g| &g.wk), weight, cfg.d_model, cfg.d_model, base + 2),
+            wv: reducer.reduce(&pick(|g| &g.wv), weight, cfg.d_model, cfg.d_model, base + 3),
+            wo: reducer.reduce(&pick(|g| &g.wo), weight, cfg.d_model, cfg.d_model, base + 4),
+            mlp_norm: reducer.reduce(&pick(|g| &g.mlp_norm), weight, 1, cfg.d_model, base + 5),
+            w_gate: reducer.reduce(&pick(|g| &g.w_gate), weight, cfg.d_ff, cfg.d_model, base + 6),
+            w_up: reducer.reduce(&pick(|g| &g.w_up), weight, cfg.d_ff, cfg.d_model, base + 7),
+            w_down: reducer.reduce(&pick(|g| &g.w_down), weight, cfg.d_model, cfg.d_ff, base + 8),
+        });
+    }
+    let fin_parts: Vec<&[f32]> =
+        results.iter().map(|(_, g)| g.final_norm.as_slice()).collect();
+    let final_norm = reducer.reduce(
+        &fin_parts,
+        weight,
+        1,
+        cfg.d_model,
+        1 + model.blocks.len() as u64 * 9,
+    );
+    (loss, TfGrads { tok_emb, blocks, final_norm }, reducer.payload_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ScalarBackend;
+
+    #[test]
+    fn reduce_mode_parse_and_bits() {
+        assert_eq!(ReduceMode::parse("f32").unwrap(), ReduceMode::F32);
+        assert_eq!(ReduceMode::parse("mxfp4").unwrap(), ReduceMode::Mxfp4);
+        assert!(ReduceMode::parse("fp8").is_err());
+        assert_eq!(ReduceMode::F32.bits_per_value(), 32.0);
+        assert_eq!(ReduceMode::Mxfp4.bits_per_value(), 4.25);
+        // 64 values: 32 bytes of codes/2 + 2 scale bytes = 34
+        assert_eq!(ReduceMode::Mxfp4.payload_bytes(64), 34.0);
+        assert_eq!(ReduceMode::F32.payload_bytes(64), 256.0);
+    }
+
+    #[test]
+    fn ring_volume_zero_for_single_worker() {
+        assert_eq!(ring_allreduce_bytes(1, 1000.0), 0.0);
+        assert_eq!(ring_allreduce_bytes(2, 1000.0), 2000.0);
+        assert_eq!(ring_allreduce_bytes(4, 1000.0), 6000.0);
+    }
+
+    #[test]
+    fn validate_enforces_shard_tiling() {
+        let d = DistOptions { workers: 4, shards: 4, reduce: ReduceMode::F32 };
+        d.validate(32).unwrap();
+        assert!(d.validate(30).is_err());
+        assert!(DistOptions { shards: 0, ..d.clone() }.validate(32).is_err());
+        assert_eq!(DistOptions { workers: 9, ..d }.effective_workers(), 4);
+    }
+
+    #[test]
+    fn mx_shape_prefers_natural_then_flat() {
+        assert_eq!(mx_shape(4, 64), Some((4, 64)));
+        assert_eq!(mx_shape(32, 16), Some((1, 512)));
+        assert_eq!(mx_shape(3, 5), None);
+    }
+
+    #[test]
+    fn shard_streams_distinct_and_stable() {
+        let mut a = shard_stream(1, 2, 0);
+        let mut b = shard_stream(1, 2, 1);
+        let mut c = shard_stream(1, 3, 0);
+        let x = a.next_u64();
+        assert_ne!(x, b.next_u64());
+        assert_ne!(x, c.next_u64());
+        assert_eq!(x, shard_stream(1, 2, 0).next_u64());
+    }
+
+    #[test]
+    fn run_sharded_output_is_in_shard_order_at_any_worker_count() {
+        for w in [1usize, 2, 3, 5, 9] {
+            let got = run_sharded(5, w, |s| s * 10);
+            assert_eq!(got, vec![0, 10, 20, 30, 40], "workers {w}");
+        }
+    }
+
+    #[test]
+    fn f32_reduce_is_weighted_shard_ordered_sum() {
+        let be = ScalarBackend;
+        let a = vec![1.0f32; 32];
+        let b = vec![3.0f32; 32];
+        let mut r = GradReducer::new(&be, ReduceMode::F32, 0, 1);
+        let out = r.reduce(&[&a, &b], 0.5, 1, 32, 0);
+        assert!(out.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        assert_eq!(r.payload_bytes, 32.0 * 4.0);
+    }
+
+    #[test]
+    fn mxfp4_reduce_deterministic_per_step_and_tensor() {
+        let be = ScalarBackend;
+        let mut rng = Rng::new(5);
+        let a = rng.gaussian_vec(2 * 32, 1.0);
+        let b = rng.gaussian_vec(2 * 32, 1.0);
+        let go = |step: usize, tensor: u64| {
+            let mut r = GradReducer::new(&be, ReduceMode::Mxfp4, 7, step);
+            r.reduce(&[a.as_slice(), b.as_slice()], 0.5, 2, 32, tensor)
+        };
+        assert_eq!(go(1, 0), go(1, 0));
+        assert_ne!(go(1, 0), go(2, 0), "step must advance the SR streams");
+        assert_ne!(go(1, 0), go(1, 1), "tensors must not share SR streams");
+    }
+}

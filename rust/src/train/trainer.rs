@@ -10,6 +10,9 @@ use anyhow::Result;
 use crate::coordinator::runrecord::RunRecord;
 use crate::data::corpus::{Corpus, CorpusConfig, CorpusStream, Split};
 use crate::kernels::Backend;
+use crate::train::dist::{
+    dist_loss_and_grads_mlp, dist_loss_and_grads_transformer, ring_allreduce_bytes, DistOptions,
+};
 use crate::train::model::MlpLm;
 use crate::train::optim::Adam;
 use crate::train::transformer::{TransformerConfig, TransformerLm};
@@ -31,6 +34,12 @@ pub struct NativeTrainOptions {
     pub verbose: bool,
     /// corpus knobs; `vocab` is overridden by the model config
     pub corpus: CorpusConfig,
+    /// data-parallel axis: `None` keeps the single-worker path
+    /// bit-identical to its historical behaviour; `Some` shards every
+    /// global batch into [`DistOptions::shards`] logical shards computed
+    /// by [`DistOptions::workers`] threads and all-reduced per
+    /// [`DistOptions::reduce`] (see [`crate::train::dist`]).
+    pub dist: Option<DistOptions>,
 }
 
 impl Default for NativeTrainOptions {
@@ -45,7 +54,25 @@ impl Default for NativeTrainOptions {
             log_every: 50,
             verbose: false,
             corpus: CorpusConfig::default(),
+            dist: None,
         }
+    }
+}
+
+/// Distilled record metadata of the (optional) data-parallel axis:
+/// `(workers, grad_shards, reduce name, ring comms bytes/step)`.
+fn dist_record_fields(
+    dist: &Option<DistOptions>,
+    payload_bytes: f64,
+) -> (usize, usize, String, f64) {
+    match dist {
+        None => (1, 1, "none".to_string(), 0.0),
+        Some(d) => (
+            d.effective_workers(),
+            d.shards,
+            d.reduce.name().to_string(),
+            ring_allreduce_bytes(d.effective_workers(), payload_bytes),
+        ),
     }
 }
 
@@ -106,6 +133,9 @@ pub fn train_native(
     be: &dyn Backend,
 ) -> Result<(RunRecord, MlpLm)> {
     cfg.validate_for_training()?;
+    if let Some(d) = &opts.dist {
+        d.validate(opts.batch)?;
+    }
     let corpus = Corpus::new(CorpusConfig { vocab: cfg.vocab, ..opts.corpus.clone() });
     let mut model = MlpLm::init(cfg.clone(), opts.seed)?;
     let mut sizes = vec![model.tok_emb.len()];
@@ -114,7 +144,16 @@ pub fn train_native(
     let mut rng = Rng::new(opts.seed ^ 0xD1CE_5EED);
     let mut triples = Triples::new(&corpus, Split::Train);
 
-    let name = format!("native-h{}-{}", cfg.d_hidden, cfg.method.name());
+    let name = match &opts.dist {
+        None => format!("native-h{}-{}", cfg.d_hidden, cfg.method.name()),
+        Some(d) => format!(
+            "native-h{}-{}-w{}-{}",
+            cfg.d_hidden,
+            cfg.method.name(),
+            d.effective_workers(),
+            d.reduce.name()
+        ),
+    };
     let mut train_curve = Vec::new();
     let mut val_curve = Vec::new();
     let init_val = eval_val_loss(&model, &corpus, be, opts.eval_batches, opts.batch);
@@ -130,9 +169,18 @@ pub fn train_native(
     let mut eval_secs = 0.0f64;
     let mut diverged = false;
     let mut steps_done = 0usize;
+    let mut comms_payload = 0.0f64;
     for step in 1..=opts.steps {
         let (ctx, tgt) = triples.next_batch(opts.batch);
-        let (loss, grads) = model.loss_and_grads(&ctx, &tgt, be, &mut rng);
+        let (loss, grads) = match &opts.dist {
+            None => model.loss_and_grads(&ctx, &tgt, be, &mut rng),
+            Some(d) => {
+                let (l, g, payload) =
+                    dist_loss_and_grads_mlp(&model, &ctx, &tgt, d, be, opts.seed, step);
+                comms_payload = payload;
+                (l, g)
+            }
+        };
         // the diverged step still consumed its batch: count it, so the
         // record's steps/tokens agree with the curves
         steps_done = step;
@@ -178,6 +226,8 @@ pub fn train_native(
     val_curve.push((steps_done, final_val));
     let tokens = steps_done * opts.batch;
     let params = cfg.non_embedding_params();
+    let (workers, grad_shards, reduce, comms_bytes_per_step) =
+        dist_record_fields(&opts.dist, comms_payload);
 
     let rec = RunRecord {
         artifact: name,
@@ -194,6 +244,10 @@ pub fn train_native(
         wall_secs: wall,
         tokens_per_sec: tokens as f64 / wall.max(1e-9),
         diverged,
+        workers,
+        grad_shards,
+        reduce,
+        comms_bytes_per_step,
     };
     Ok((rec, model))
 }
@@ -243,6 +297,9 @@ pub fn train_native_transformer(
     be: &dyn Backend,
 ) -> Result<(RunRecord, TransformerLm)> {
     cfg.validate_for_training()?;
+    if let Some(d) = &opts.dist {
+        d.validate(opts.batch)?;
+    }
     let corpus = Corpus::new(CorpusConfig { vocab: cfg.vocab, ..opts.corpus.clone() });
     let mut model = TransformerLm::init(cfg.clone(), opts.seed)?;
     let sizes = model.param_sizes();
@@ -250,7 +307,17 @@ pub fn train_native_transformer(
     let mut rng = Rng::new(opts.seed ^ 0xD1CE_5EED);
     let mut windows = SeqWindows::new(&corpus, Split::Train);
 
-    let name = format!("native-tf-d{}L{}-{}", cfg.d_model, cfg.n_layers, cfg.method.name());
+    let name = match &opts.dist {
+        None => format!("native-tf-d{}L{}-{}", cfg.d_model, cfg.n_layers, cfg.method.name()),
+        Some(d) => format!(
+            "native-tf-d{}L{}-{}-w{}-{}",
+            cfg.d_model,
+            cfg.n_layers,
+            cfg.method.name(),
+            d.effective_workers(),
+            d.reduce.name()
+        ),
+    };
     let mut train_curve = Vec::new();
     let mut val_curve = Vec::new();
     let init_val = eval_val_loss_transformer(&model, &corpus, be, opts.eval_batches, opts.batch);
@@ -263,9 +330,19 @@ pub fn train_native_transformer(
     let mut eval_secs = 0.0f64;
     let mut diverged = false;
     let mut steps_done = 0usize;
+    let mut comms_payload = 0.0f64;
     for step in 1..=opts.steps {
         let toks = windows.next_batch(opts.batch, cfg.seq);
-        let (loss, grads) = model.loss_and_grads(&toks, opts.batch, be, &mut rng);
+        let (loss, grads) = match &opts.dist {
+            None => model.loss_and_grads(&toks, opts.batch, be, &mut rng),
+            Some(d) => {
+                let (l, g, payload) = dist_loss_and_grads_transformer(
+                    &model, &toks, opts.batch, d, be, opts.seed, step,
+                );
+                comms_payload = payload;
+                (l, g)
+            }
+        };
         steps_done = step;
         if !loss.is_finite() || loss > 20.0 {
             diverged = true;
@@ -322,6 +399,8 @@ pub fn train_native_transformer(
     // each window predicts seq tokens
     let tokens = steps_done * opts.batch * cfg.seq;
     let params = cfg.non_embedding_params();
+    let (workers, grad_shards, reduce, comms_bytes_per_step) =
+        dist_record_fields(&opts.dist, comms_payload);
 
     let rec = RunRecord {
         artifact: name,
@@ -338,6 +417,10 @@ pub fn train_native_transformer(
         wall_secs: wall,
         tokens_per_sec: tokens as f64 / wall.max(1e-9),
         diverged,
+        workers,
+        grad_shards,
+        reduce,
+        comms_bytes_per_step,
     };
     Ok((rec, model))
 }

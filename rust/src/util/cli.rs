@@ -157,11 +157,19 @@ pub fn usize_list_or(args: &mut Args, key: &str, default: &[usize]) -> Result<Ve
     }
 }
 
-/// Consume `--backend scalar|parallel|both` (default `both`) into concrete
-/// backend instances — the shared axis of the kernel benches. Unknown
-/// names are an error, not a silent fallback.
+/// Consume `--backend scalar|parallel|both` into concrete backend
+/// instances — the shared axis of the kernel benches. When the flag is
+/// omitted the `QUARTET_BACKEND` env var is consulted (matching how the
+/// test suite selects backends, so the CI matrix sets one env var instead
+/// of threading `--backend` through every bench invocation), and `both`
+/// is the final default. Unknown names are an error, not a silent
+/// fallback.
 pub fn backends_flag(args: &mut Args) -> Result<Vec<Box<dyn crate::kernels::Backend>>> {
-    match args.str_or("backend", "both").as_str() {
+    let sel = match args.get("backend") {
+        Some(v) => v,
+        None => std::env::var("QUARTET_BACKEND").unwrap_or_else(|_| "both".to_string()),
+    };
+    match sel.as_str() {
         "both" => Ok(vec![
             crate::kernels::backend_from_name("scalar")?,
             crate::kernels::backend_from_name("parallel")?,

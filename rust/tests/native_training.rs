@@ -34,6 +34,7 @@ fn smoke_opts() -> NativeTrainOptions {
         log_every: 100,
         verbose: false,
         corpus: CorpusConfig { vocab: 32, structure: 0.85, ..CorpusConfig::default() },
+        dist: None,
     }
 }
 
@@ -232,6 +233,7 @@ fn tf_smoke_opts() -> NativeTrainOptions {
         log_every: 100,
         verbose: false,
         corpus: CorpusConfig { vocab: 32, structure: 0.85, ..CorpusConfig::default() },
+        dist: None,
     }
 }
 

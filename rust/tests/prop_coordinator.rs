@@ -63,12 +63,24 @@ fn prop_runrecord_roundtrip() {
             wall_secs: ctx.rng.uniform() * 100.0,
             tokens_per_sec: ctx.rng.uniform() * 1e6,
             diverged: ctx.rng.below(2) == 0,
+            workers: 1 + ctx.rng.below(8),
+            grad_shards: 1 + ctx.rng.below(8),
+            reduce: ["none", "f32", "mxfp4"][ctx.rng.below(3)].to_string(),
+            comms_bytes_per_step: ctx.rng.uniform() * 1e8,
         };
         let j = Json::parse(&rec.to_json().to_string()).map_err(|e| e.to_string())?;
         let back = RunRecord::from_json(&j).map_err(|e| e.to_string())?;
         ensure(back.artifact == rec.artifact, "artifact")?;
         ensure(back.train_curve == rec.train_curve, "curve")?;
         ensure(back.diverged == rec.diverged, "diverged")?;
+        ensure(back.workers == rec.workers, "workers")?;
+        ensure(back.grad_shards == rec.grad_shards, "grad_shards")?;
+        ensure(back.reduce == rec.reduce, "reduce")?;
+        ensure(
+            (back.comms_bytes_per_step - rec.comms_bytes_per_step).abs()
+                < 1e-6 * (1.0 + rec.comms_bytes_per_step),
+            "comms",
+        )?;
         ensure((back.ratio - rec.ratio).abs() < 1e-9, "ratio")
     });
 }
