@@ -9,91 +9,202 @@
 //!   paper    : the RTX5090 measurements (§5).
 //! The *shape* claim being checked: speedup grows with arithmetic
 //! intensity and the quantize stage amortizes at large d. The backend
-//! axis (`--backend scalar|parallel|both`, default both) additionally
-//! measures how much the tiled `ParallelBackend` buys over the scalar
-//! reference — the CPU rendering of Fig 3's "kernels engineered for the
-//! hardware's parallelism" claim.
+//! axis (`--backend scalar|parallel|simd|parallel+simd|both|all`,
+//! default both) additionally measures what each layer of parallelism
+//! buys — threads (`parallel`), lanes (`simd`), and their product
+//! (`parallel+simd`) — the CPU rendering of Fig 3's "kernels engineered
+//! for the hardware's parallelism" claim. Every backend × kernel cell
+//! reports GFLOP/s and GB/s; pass `--out DIR` to emit one
+//! [`KernelRecord`] JSON per cell for the `repro check-records` gate
+//! (the decode-once GEMM rows carry `speedup_vs_scalar`).
 
-use quartet::bench::{gemm_flops, geomean, llama_linear_shapes};
-use quartet::quant::mxfp4::QuantMode;
+use std::path::PathBuf;
+
+use quartet::bench::{gemm_flops, geomean, llama_linear_shapes, KernelRecord};
+use quartet::kernels::{Backend, ScalarBackend};
+use quartet::quant::mxfp4::{QuantMode, MX_GROUP};
 use quartet::util::bench::Bencher;
 use quartet::util::cli::{backends_flag, Args};
 use quartet::util::rng::Rng;
+
+/// The per-backend kernel axis; `gemm_predec` is the decode-once GEMM
+/// the serve path runs and the speedup claim is gated on.
+const KERNELS: [&str; 5] = ["quantize", "decode", "hadamard", "gemm", "gemm_predec"];
+
+/// Per-shape throughput sample for one backend × kernel cell.
+#[derive(Default)]
+struct Cell {
+    gflops: Vec<f64>,
+    gbps: Vec<f64>,
+    /// predec only: scalar median / this backend's median, per shape.
+    speedups: Vec<f64>,
+}
 
 fn main() {
     quartet::util::bench::print_header("Fig 3(a,b) — linear-layer kernel speedups");
     let mut args = Args::from_env().unwrap_or_default();
     let _ = args.flag("bench"); // passed through by `cargo bench`
     let backends = backends_flag(&mut args).expect("--backend");
+    let out = args.get("out").map(PathBuf::from);
     let b = Bencher::from_env();
     let fast = std::env::var("QUARTET_BENCH_FAST").is_ok();
 
-    // (backend, shape label) -> median mxfp4 GEMM seconds
-    let mut mx_medians: Vec<(&'static str, &'static str, f64)> = Vec::new();
+    let shapes: Vec<_> = llama_linear_shapes()
+        .into_iter()
+        .filter(|&(_, m, n, k)| !(fast && m * n * k > 512 * 1024 * 1024))
+        .collect();
 
-    for be in &backends {
+    // Scalar decode-once GEMM baseline per shape — the denominator of the
+    // speedup claim, measured once whatever `--backend` selected.
+    let scalar = ScalarBackend;
+    let mut predec_scalar: Vec<f64> = Vec::new();
+    for &(_, m, n, k) in &shapes {
         let mut rng = Rng::new(0xF163);
-        let mut speedups = Vec::new();
-        println!("\n[backend: {}]", be.name());
+        let a = rng.gaussian_vec(m * k, 1.0);
+        let w = rng.gaussian_vec(n * k, 0.3);
+        let ta = scalar.quantize_mxfp4(&a, m, k, QuantMode::Rtn, &mut rng);
+        let wd = {
+            let tw = scalar.quantize_mxfp4(&w, n, k, QuantMode::Rtn, &mut rng);
+            scalar.decode_mxfp4(&tw)
+        };
+        let ms = b.bench_with_work("predec_scalar", gemm_flops(m, n, k), "FLOP", || {
+            scalar.gemm_mxfp4_predec(&ta, &wd, n)
+        });
+        predec_scalar.push(ms.median());
+    }
+
+    // (backend index, kernel) -> per-shape samples
+    let mut cells: Vec<Vec<Cell>> = backends
+        .iter()
+        .map(|_| KERNELS.iter().map(|_| Cell::default()).collect())
+        .collect();
+
+    for (bi, be) in backends.iter().enumerate() {
+        let mut rng = Rng::new(0xF163);
+        let mut e2e_speedups = Vec::new();
+        println!("\n[backend: {}]", be.describe());
         println!(
-            "{:<26} {:>12} {:>12} {:>12} {:>10}",
-            "shape (m,n,k)", "f32 GEMM", "mxfp4 GEMM", "quantize", "speedup"
+            "{:<26} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10}",
+            "shape (m,n,k)", "f32 GEMM", "mxfp4 GEMM", "predec GEMM", "quantize", "decode", "speedup"
         );
-        for (label, m, n, k) in llama_linear_shapes() {
-            if fast && m * n * k > 512 * 1024 * 1024 {
-                continue;
-            }
+        for (si, &(label, m, n, k)) in shapes.iter().enumerate() {
             let a = rng.gaussian_vec(m * k, 1.0);
             let w = rng.gaussian_vec(n * k, 0.3);
             let ta = be.quantize_mxfp4(&a, m, k, QuantMode::Rtn, &mut rng);
             let tw = be.quantize_mxfp4(&w, n, k, QuantMode::Rtn, &mut rng);
+            let mut wd = vec![0.0f32; n * k];
+            be.decode_mxfp4_into(&tw, &mut wd);
+            let mut had = a.clone();
 
             let m_f32 = b.bench_with_work("f32", gemm_flops(m, n, k), "FLOP",
                                           || be.gemm_f32(&a, &w, m, n, k));
             let m_mx = b.bench_with_work("mxfp4", gemm_flops(m, n, k), "FLOP",
                                          || be.gemm_mxfp4(&ta, &tw));
+            let m_pd = b.bench_with_work("predec", gemm_flops(m, n, k), "FLOP",
+                                         || be.gemm_mxfp4_predec(&ta, &wd, n));
             let m_q = b.bench("quant", || {
                 be.quantize_mxfp4(&a, m, k, QuantMode::Rtn, &mut Rng::new(1))
             });
+            let m_d = b.bench("decode", || be.decode_mxfp4_into(&tw, &mut wd));
+            let m_h = b.bench("hadamard", || be.block_hadamard(&mut had, MX_GROUP));
+
+            // Work accounting per kernel: FLOPs and bytes moved per call.
+            // quantize m×k: absmax pass + scale-multiply ≈ 2 ops/elem;
+            // reads 4mk, writes the packed tensor. decode n×k: one
+            // scale-multiply per element; reads packed, writes 4nk.
+            // hadamard m×k at g=32: 5mk butterfly add/subs + mk norm
+            // muls, read+write 8mk. gemm: 2mnk over both packed inputs
+            // plus the f32 output. predec: 2mnk over packed A + decoded
+            // B + output.
+            let (mk, nk, mn) = (m as f64 * k as f64, n as f64 * k as f64, m as f64 * n as f64);
+            let rows: [(usize, f64, f64, f64); 5] = [
+                (0, 2.0 * mk, 4.0 * mk + ta.storage_bytes() as f64, m_q.median()),
+                (1, nk, tw.storage_bytes() as f64 + 4.0 * nk, m_d.median()),
+                (2, 6.0 * mk, 8.0 * mk, m_h.median()),
+                (
+                    3,
+                    gemm_flops(m, n, k),
+                    (ta.storage_bytes() + tw.storage_bytes()) as f64 + 4.0 * mn,
+                    m_mx.median(),
+                ),
+                (
+                    4,
+                    gemm_flops(m, n, k),
+                    ta.storage_bytes() as f64 + 4.0 * nk + 4.0 * mn,
+                    m_pd.median(),
+                ),
+            ];
+            for (ki, flops, bytes, secs) in rows {
+                let cell = &mut cells[bi][ki];
+                cell.gflops.push(flops / secs / 1e9);
+                cell.gbps.push(bytes / secs / 1e9);
+                if ki == 4 && be.name() != "scalar" {
+                    cell.speedups.push(predec_scalar[si] / secs);
+                }
+            }
 
             let sp = m_f32.median() / (m_mx.median() + m_q.median());
-            speedups.push(sp);
-            mx_medians.push((be.name(), label, m_mx.median()));
+            e2e_speedups.push(sp);
             println!(
-                "{:<26} {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>9.2}x",
+                "{:<26} {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>9.2}x",
                 label,
                 m_f32.median() * 1e3,
                 m_mx.median() * 1e3,
+                m_pd.median() * 1e3,
                 m_q.median() * 1e3,
+                m_d.median() * 1e3,
                 sp
             );
         }
         println!(
             "measured geomean ({}, end-to-end incl. quantize): {:.2}x",
             be.name(),
-            geomean(&speedups)
+            geomean(&e2e_speedups)
         );
     }
 
-    // cross-backend speedup (the refactor's own Fig 3 row)
-    if backends.len() == 2 {
-        println!("\n[parallel vs scalar, mxfp4 GEMM]");
-        let mut ratios = Vec::new();
-        for (label, _m, _n, _k) in llama_linear_shapes() {
-            let find = |bname: &str| {
-                mx_medians
-                    .iter()
-                    .find(|(b, l, _)| *b == bname && *l == label)
-                    .map(|(_, _, t)| *t)
-            };
-            if let (Some(s), Some(p)) = (find("scalar"), find("parallel")) {
-                let r = s / p;
-                ratios.push(r);
-                println!("{label:<26} {r:>9.2}x");
+    // Per backend × kernel throughput table (+ the gated predec rows).
+    println!("\n[per-kernel throughput, geomean over {} shape(s)]", shapes.len());
+    println!(
+        "{:<22} {:<12} {:>10} {:>10} {:>14}",
+        "backend", "kernel", "GFLOP/s", "GB/s", "vs scalar"
+    );
+    let mut records = Vec::new();
+    for (bi, be) in backends.iter().enumerate() {
+        for (ki, kernel) in KERNELS.iter().enumerate() {
+            let cell = &cells[bi][ki];
+            if cell.gflops.is_empty() {
+                continue;
             }
+            let speedup = if cell.speedups.is_empty() {
+                None
+            } else {
+                Some(geomean(&cell.speedups))
+            };
+            println!(
+                "{:<22} {:<12} {:>10.2} {:>10.2} {:>14}",
+                be.describe(),
+                kernel,
+                geomean(&cell.gflops),
+                geomean(&cell.gbps),
+                speedup.map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".to_string())
+            );
+            records.push(KernelRecord {
+                bench: "fig3_kernel_speedup".to_string(),
+                kernel: kernel.to_string(),
+                backend: be.name().to_string(),
+                backend_detail: be.describe(),
+                shapes: cell.gflops.len(),
+                gflops: geomean(&cell.gflops),
+                gbps: geomean(&cell.gbps),
+                speedup_vs_scalar: speedup,
+            });
         }
-        if !ratios.is_empty() {
-            println!("geomean: {:.2}x", geomean(&ratios));
+    }
+    if let Some(dir) = &out {
+        for rec in &records {
+            let path = rec.save(dir).expect("writing kernel record");
+            println!("record: {}", path.display());
         }
     }
 

@@ -4,6 +4,10 @@
 
 use std::path::{Path, PathBuf};
 
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
 /// Resolve an artifact/run directory: env override first, then the crate
 /// dir (`rust/<leaf>`), then the workspace root (`<repo>/<leaf>`), and
 /// finally a cwd-relative `./<leaf>` so benches and binaries still work
@@ -64,6 +68,58 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// One backend × kernel aggregate row from a kernel bench
+/// (`fig3_kernel_speedup`): geomean throughput across the shape sweep,
+/// with the decode-once GEMM rows also carrying their speedup over the
+/// ScalarBackend baseline so `repro check-records` can gate the claim.
+#[derive(Debug, Clone)]
+pub struct KernelRecord {
+    pub bench: String,
+    /// Kernel axis: `quantize` | `decode` | `hadamard` | `gemm` | `gemm_predec`.
+    pub kernel: String,
+    /// Stable backend name (`scalar` | `parallel` | `simd` | `parallel+simd`).
+    pub backend: String,
+    /// Human-facing backend description incl. detected ISA, e.g. `simd(avx2)`.
+    pub backend_detail: String,
+    /// Number of shapes aggregated into the geomeans.
+    pub shapes: usize,
+    pub gflops: f64,
+    pub gbps: f64,
+    /// Geomean speedup over ScalarBackend on the same kernel (absent for
+    /// the scalar rows themselves).
+    pub speedup_vs_scalar: Option<f64>,
+}
+
+impl KernelRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("bench", Json::str(&self.bench)),
+            ("kernel", Json::str(&self.kernel)),
+            ("backend", Json::str(&self.backend)),
+            ("backend_detail", Json::str(&self.backend_detail)),
+            ("shapes", Json::num(self.shapes as f64)),
+            ("gflops", Json::num(self.gflops)),
+            ("gbps", Json::num(self.gbps)),
+        ];
+        if let Some(s) = self.speedup_vs_scalar {
+            pairs.push(("speedup_vs_scalar", Json::num(s)));
+        }
+        Json::from_pairs(pairs)
+    }
+
+    /// Write `{bench}_{kernel}_{backend}.json` into `dir` (created if
+    /// missing); returns the path. `+` in backend names is kept as-is —
+    /// it is filename-safe everywhere we run.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(format!("{}_{}_{}.json", self.bench, self.kernel, self.backend));
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
 /// Paper-reported reference rows, kept next to the code that regenerates
 /// them so every bench prints paper-vs-measured (EXPERIMENTS.md quotes
 /// these).
@@ -111,6 +167,45 @@ mod tests {
     #[test]
     fn flops_formula() {
         assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+
+    #[test]
+    fn kernel_record_json_shape() {
+        let mut rec = KernelRecord {
+            bench: "fig3_kernel_speedup".to_string(),
+            kernel: "gemm_predec".to_string(),
+            backend: "parallel+simd".to_string(),
+            backend_detail: "parallel+simd(avx2)".to_string(),
+            shapes: 5,
+            gflops: 1.25,
+            gbps: 3.5,
+            speedup_vs_scalar: Some(2.4),
+        };
+        let s = rec.to_json().to_string_pretty();
+        assert!(s.contains("\"kernel\": \"gemm_predec\""));
+        assert!(s.contains("\"speedup_vs_scalar\": 2.4"));
+        rec.speedup_vs_scalar = None;
+        assert!(!rec.to_json().to_string_pretty().contains("speedup_vs_scalar"));
+    }
+
+    #[test]
+    fn kernel_record_save_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("kernel_rec_{}", std::process::id()));
+        let rec = KernelRecord {
+            bench: "t".to_string(),
+            kernel: "decode".to_string(),
+            backend: "simd".to_string(),
+            backend_detail: "simd(scalar)".to_string(),
+            shapes: 1,
+            gflops: 0.5,
+            gbps: 1.0,
+            speedup_vs_scalar: None,
+        };
+        let path = rec.save(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "t_decode_simd.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"backend_detail\": \"simd(scalar)\""));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

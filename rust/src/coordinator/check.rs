@@ -1,10 +1,13 @@
 //! `repro check-records` — the CI perf-regression gate over bench-record
 //! JSON.
 //!
-//! Every figure bench emits one of two record schemas: **run** records
+//! Every figure bench emits one of three record schemas: **run** records
 //! ([`crate::coordinator::runrecord::RunRecord`] — fig1 training sweeps,
-//! fig8 distributed scaling) and **serve** records (`serve::ServeRecord`
-//! — fig6 continuous batching, fig7 KV decode). This module walks a
+//! fig8 distributed scaling), **serve** records (`serve::ServeRecord`
+//! — fig6 continuous batching, fig7 KV decode), and **kernel** records
+//! ([`crate::bench::KernelRecord`] — fig3 per-backend kernel
+//! throughput, which carries the decode-once GEMM speedup the simd
+//! backend is gated on). This module walks a
 //! directory tree of those files, validates each against its schema
 //! (required fields, finite numbers, ordered percentiles, well-formed
 //! curves), and compares the throughput/latency fields to the committed
@@ -37,6 +40,12 @@ pub struct Baselines {
     pub serve_max_latency_p99_s: f64,
     /// serve records: p99 time-to-first-token ceiling, seconds
     pub serve_max_ttft_p99_s: f64,
+    /// kernel records: minimum GFLOP/s for simd-backed GEMM rows
+    /// (0.0 when the baselines file has no "kernel" section)
+    pub kernel_min_gflops: f64,
+    /// kernel records: minimum decode-once GEMM speedup over
+    /// ScalarBackend required of the `parallel+simd` row
+    pub kernel_min_predec_speedup: f64,
 }
 
 impl Baselines {
@@ -48,11 +57,19 @@ impl Baselines {
         };
         let run = j.req("run")?;
         let serve = j.req("serve")?;
+        // "kernel" is optional so pre-simd baseline files keep loading;
+        // without it the kernel floors are 0.0 (schema-only checks).
+        let (kernel_min_gflops, kernel_min_predec_speedup) = match j.get("kernel") {
+            Some(kernel) => (num(kernel, "min_gflops")?, num(kernel, "min_predec_speedup")?),
+            None => (0.0, 0.0),
+        };
         Ok(Baselines {
             run_min_tokens_per_sec: num(run, "min_tokens_per_sec")?,
             serve_min_tokens_per_sec: num(serve, "min_tokens_per_sec")?,
             serve_max_latency_p99_s: num(serve, "max_latency_p99_s")?,
             serve_max_ttft_p99_s: num(serve, "max_ttft_p99_s")?,
+            kernel_min_gflops,
+            kernel_min_predec_speedup,
         })
     }
 
@@ -90,16 +107,18 @@ pub struct CheckReport {
     pub checked: usize,
     pub run_records: usize,
     pub serve_records: usize,
+    pub kernel_records: usize,
     pub violations: Vec<String>,
 }
 
 impl CheckReport {
     pub fn summary(&self) -> String {
         format!(
-            "check-records: {} record(s) checked ({} run, {} serve), {} violation(s)",
+            "check-records: {} record(s) checked ({} run, {} serve, {} kernel), {} violation(s)",
             self.checked,
             self.run_records,
             self.serve_records,
+            self.kernel_records,
             self.violations.len()
         )
     }
@@ -167,10 +186,13 @@ pub fn check_one(j: &Json, name: &str, b: &Baselines, report: &mut CheckReport) 
     } else if j.get("latency_p50_p90_p99_s").is_some() {
         report.serve_records += 1;
         check_serve(j, name, b, &mut report.violations);
+    } else if j.get("kernel").is_some() {
+        report.kernel_records += 1;
+        check_kernel(j, name, b, &mut report.violations);
     } else {
         report.violations.push(format!(
-            "{name}: unknown record schema (neither a run record with train_curve nor a \
-             serve record with latency percentiles)"
+            "{name}: unknown record schema (not a run record with train_curve, a serve \
+             record with latency percentiles, or a kernel record with a kernel axis)"
         ));
     }
 }
@@ -368,6 +390,63 @@ fn check_serve(j: &Json, name: &str, b: &Baselines, violations: &mut Vec<String>
     }
 }
 
+fn check_kernel(j: &Json, name: &str, b: &Baselines, violations: &mut Vec<String>) {
+    let mut fail = |msg: String| violations.push(format!("{name}: {msg}"));
+
+    let mut field = |key: &str| match req_str(j, key) {
+        Ok(s) => s,
+        Err(e) => {
+            fail(e);
+            String::new()
+        }
+    };
+    field("bench");
+    let kernel = field("kernel");
+    let backend = field("backend");
+    field("backend_detail");
+
+    for key in ["shapes", "gflops", "gbps"] {
+        match req_num(j, key) {
+            Ok(v) if v < 0.0 => fail(format!("{key} {v} is negative")),
+            Ok(_) => {}
+            Err(e) => fail(e),
+        }
+    }
+
+    // throughput floor: the simd backends' GEMM rows must clear the
+    // (generous) committed floor — dead vectorization shows up here
+    if backend.contains("simd") && kernel.contains("gemm") {
+        if let Ok(gflops) = req_num(j, "gflops") {
+            if gflops < b.kernel_min_gflops {
+                fail(format!(
+                    "{backend} {kernel} throughput {gflops:.3} GFLOP/s is below the \
+                     baseline floor {} (order-of-magnitude headroom — a regression, \
+                     not jitter)",
+                    b.kernel_min_gflops
+                ));
+            }
+        }
+    }
+
+    // the headline claim: decode-once GEMM on the full-parallelism
+    // backend must beat ScalarBackend by the committed factor
+    if kernel == "gemm_predec" && backend == "parallel+simd" {
+        match req_num(j, "speedup_vs_scalar") {
+            Ok(s) if s < b.kernel_min_predec_speedup => fail(format!(
+                "parallel+simd gemm_predec speedup {s:.2}x over scalar is below the \
+                 required {}x",
+                b.kernel_min_predec_speedup
+            )),
+            Ok(_) => {}
+            Err(e) => fail(format!("{e} (required on the parallel+simd gemm_predec row)")),
+        }
+    } else if let Some(v) = j.get("speedup_vs_scalar") {
+        if !v.as_f64().map(|s| s.is_finite() && s > 0.0).unwrap_or(false) {
+            fail("speedup_vs_scalar is not a finite positive number".into());
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -378,6 +457,8 @@ mod tests {
             serve_min_tokens_per_sec: 2.0,
             serve_max_latency_p99_s: 300.0,
             serve_max_ttft_p99_s: 300.0,
+            kernel_min_gflops: 0.05,
+            kernel_min_predec_speedup: 2.0,
         }
     }
 
@@ -459,6 +540,88 @@ mod tests {
         let mut rep = CheckReport::default();
         check_one(&Json::parse(r#"{"hello": 1}"#).unwrap(), "x.json", &b, &mut rep);
         assert!(rep.violations.iter().any(|v| v.contains("unknown record schema")));
+    }
+
+    fn kernel_json(backend: &str, kernel: &str, gflops: f64, speedup: Option<f64>) -> Json {
+        let rec = crate::bench::KernelRecord {
+            bench: "fig3_kernel_speedup".into(),
+            kernel: kernel.into(),
+            backend: backend.into(),
+            backend_detail: format!("{backend}(avx2)"),
+            shapes: 5,
+            gflops,
+            gbps: gflops * 2.0,
+            speedup_vs_scalar: speedup,
+        };
+        Json::parse(&rec.to_json().to_string()).unwrap()
+    }
+
+    #[test]
+    fn kernel_records_classify_and_pass() {
+        let b = baselines();
+        let mut rep = CheckReport::default();
+        check_one(&kernel_json("scalar", "gemm_predec", 0.001, None), "s.json", &b, &mut rep);
+        check_one(&kernel_json("simd", "gemm", 1.5, Some(3.0)), "v.json", &b, &mut rep);
+        check_one(
+            &kernel_json("parallel+simd", "gemm_predec", 1.5, Some(2.5)),
+            "ps.json",
+            &b,
+            &mut rep,
+        );
+        assert_eq!(rep.kernel_records, 3);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn kernel_floors_trip() {
+        let b = baselines();
+        // simd GEMM below the GFLOP/s floor
+        let mut rep = CheckReport::default();
+        check_one(&kernel_json("simd", "gemm", 0.001, None), "slow.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("below the baseline floor")));
+
+        // parallel+simd predec below the required speedup
+        let mut rep = CheckReport::default();
+        check_one(
+            &kernel_json("parallel+simd", "gemm_predec", 1.5, Some(1.1)),
+            "slow2.json",
+            &b,
+            &mut rep,
+        );
+        assert!(rep.violations.iter().any(|v| v.contains("below the required 2")));
+
+        // ...and the speedup field is REQUIRED on that row
+        let mut rep = CheckReport::default();
+        check_one(
+            &kernel_json("parallel+simd", "gemm_predec", 1.5, None),
+            "missing.json",
+            &b,
+            &mut rep,
+        );
+        assert!(rep.violations.iter().any(|v| v.contains("speedup_vs_scalar")));
+    }
+
+    #[test]
+    fn kernel_section_is_optional_in_baseline_files() {
+        let j = Json::parse(
+            r#"{"run":{"min_tokens_per_sec":10.0},
+                "serve":{"min_tokens_per_sec":2.0,"max_latency_p99_s":300.0,
+                         "max_ttft_p99_s":300.0}}"#,
+        )
+        .unwrap();
+        let b = Baselines::from_json(&j).unwrap();
+        assert_eq!(b.kernel_min_gflops, 0.0);
+        assert_eq!(b.kernel_min_predec_speedup, 0.0);
+
+        let j = Json::parse(
+            r#"{"run":{"min_tokens_per_sec":10.0},
+                "serve":{"min_tokens_per_sec":2.0,"max_latency_p99_s":300.0,
+                         "max_ttft_p99_s":300.0},
+                "kernel":{"min_gflops":0.05,"min_predec_speedup":2.0}}"#,
+        )
+        .unwrap();
+        let b = Baselines::from_json(&j).unwrap();
+        assert_eq!(b.kernel_min_predec_speedup, 2.0);
     }
 
     #[test]

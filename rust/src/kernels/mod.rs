@@ -13,17 +13,26 @@
 //!   scoped threads (the offline registry carries no rayon): cache-blocked
 //!   decode-once GEMM tiles, chunked group quantization, and per-row
 //!   splittable RNG streams so stochastic rounding is reproducible under
-//!   any thread count.
+//!   any thread count. Composes over an inner lane ISA
+//!   (`parallel+simd`: threads × lanes) via the `simd` dispatchers.
+//! * [`SimdBackend`] — explicit AVX2/NEON lane-parallel kernels behind
+//!   runtime feature detection with a safe scalar fallback: shuffle-LUT
+//!   packed decode, a fused decode+FMA register-tiled GEMM microkernel,
+//!   vectorized group quantization and Hadamard butterflies — all
+//!   bit-identical to the scalar reference (SR included: the stream is
+//!   drawn scalar-side in element order at any lane width).
 //!
 //! Consumers never pick a concrete type: they either take a `&dyn Backend`
 //! or call [`active`], which resolves the process-wide backend once from
 //! the `QUARTET_BACKEND` env var (or the `--backend` CLI flag via
 //! `util::cli::apply_backend_flag`, which calls [`select`]). The default
 //! is `scalar`, keeping every seed experiment bit-for-bit reproducible;
-//! `parallel` is the opt-in fast path the Fig 3/5/6 benches sweep.
+//! `parallel`, `simd` and `parallel+simd` are the opt-in fast paths the
+//! Fig 3/5/6 benches sweep.
 
 pub mod parallel;
 pub mod scalar;
+pub mod simd;
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -37,6 +46,7 @@ use crate::util::rng::Rng;
 
 pub use parallel::ParallelBackend;
 pub use scalar::ScalarBackend;
+pub use simd::{Lanes, SimdBackend};
 
 /// A compute backend: owns every hot loop the quantized training/serving
 /// paths execute. Implementations must be bit-identical to
@@ -47,6 +57,14 @@ pub use scalar::ScalarBackend;
 pub trait Backend: Send + Sync {
     /// Stable name used by `QUARTET_BACKEND` / `--backend`.
     fn name(&self) -> &'static str;
+
+    /// Human-readable resolved description for summary lines: the stable
+    /// name plus any runtime-detected detail (e.g. `simd(avx2)`,
+    /// `parallel+simd(neon)`). Falls back to [`Backend::name`]; record
+    /// filenames keep using the stable name.
+    fn describe(&self) -> String {
+        self.name().to_string()
+    }
 
     /// Quantize a dense row-major `[rows, cols]` f32 tensor to packed
     /// MXFP4 (cols % 32 == 0).
@@ -93,10 +111,20 @@ pub trait Backend: Send + Sync {
     /// must be bit-identical to the scalar reference (decode is pure
     /// element-wise work, so partitioning cannot reassociate anything).
     fn decode_mxfp4(&self, t: &Mxfp4Tensor) -> Vec<f32> {
-        let lut = byte_decode_lut();
         let mut out = vec![0.0f32; t.rows * t.cols];
-        scalar::decode_rows(t, &lut, &mut out);
+        self.decode_mxfp4_into(t, &mut out);
         out
+    }
+
+    /// [`Backend::decode_mxfp4`] into a caller-owned buffer (`out.len() ==
+    /// t.rows * t.cols`) — the allocation-free form the serve decode path
+    /// uses per step so repeated decodes stop churning fresh `Vec`s.
+    /// Overrides must write every element and stay bit-identical to the
+    /// scalar reference.
+    fn decode_mxfp4_into(&self, t: &Mxfp4Tensor, out: &mut [f32]) {
+        assert_eq!(out.len(), t.rows * t.cols, "decode output shape mismatch");
+        let lut = byte_decode_lut();
+        scalar::decode_rows(t, &lut, out);
     }
 
     /// C = A · Bᵀ where B (`[n, k]` row-major, k = `a.cols`) was decoded
@@ -198,13 +226,16 @@ pub trait Backend: Send + Sync {
     }
 }
 
-/// Instantiate a backend by name (`scalar` | `parallel`).
+/// Instantiate a backend by name
+/// (`scalar` | `parallel` | `simd` | `parallel+simd`).
 pub fn backend_from_name(name: &str) -> Result<Box<dyn Backend>> {
     match name {
         "scalar" => Ok(Box::new(ScalarBackend)),
         "parallel" => Ok(Box::new(ParallelBackend::new())),
+        "simd" => Ok(Box::new(SimdBackend::new())),
+        "parallel+simd" => Ok(Box::new(ParallelBackend::new_simd())),
         other => Err(anyhow!(
-            "unknown backend {other:?} (expected \"scalar\" or \"parallel\")"
+            "unknown backend {other:?} (expected \"scalar\", \"parallel\", \"simd\" or \"parallel+simd\")"
         )),
     }
 }
@@ -259,7 +290,36 @@ mod tests {
     fn backend_names_resolve() {
         assert_eq!(backend_from_name("scalar").unwrap().name(), "scalar");
         assert_eq!(backend_from_name("parallel").unwrap().name(), "parallel");
+        assert_eq!(backend_from_name("simd").unwrap().name(), "simd");
+        assert_eq!(
+            backend_from_name("parallel+simd").unwrap().name(),
+            "parallel+simd"
+        );
         assert!(backend_from_name("cuda").is_err());
+    }
+
+    #[test]
+    fn describe_includes_detected_isa() {
+        // scalar/parallel keep the bare name; the simd backends append the
+        // resolved lane ISA in parentheses
+        assert_eq!(backend_from_name("scalar").unwrap().describe(), "scalar");
+        assert_eq!(backend_from_name("parallel").unwrap().describe(), "parallel");
+        let simd = backend_from_name("simd").unwrap().describe();
+        assert!(simd.starts_with("simd(") && simd.ends_with(')'), "{simd}");
+        let both = backend_from_name("parallel+simd").unwrap().describe();
+        assert!(both.starts_with("parallel+simd(") && both.ends_with(')'), "{both}");
+    }
+
+    #[test]
+    fn decode_into_matches_decode() {
+        let be = ScalarBackend;
+        let mut rng = Rng::new(8);
+        let x = rng.gaussian_vec(3 * 64, 1.0);
+        let t = be.quantize_mxfp4(&x, 3, 64, QuantMode::Rtn, &mut rng);
+        let fresh = be.decode_mxfp4(&t);
+        let mut reused = vec![f32::NAN; 3 * 64];
+        be.decode_mxfp4_into(&t, &mut reused);
+        assert_eq!(fresh, reused);
     }
 
     #[test]

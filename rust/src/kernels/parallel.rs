@@ -12,11 +12,15 @@
 //!   output depends only on the input RNG state — not on the thread
 //!   count — so SR runs are reproducible on any machine, while repeated
 //!   calls still see fresh noise (the salt advances the caller's RNG).
+//! * The backend composes over an inner lane ISA (threads × lanes): every
+//!   worker closure runs the `kernels::simd` lane-dispatched kernels,
+//!   which are themselves bit-identical to the scalar reference at any
+//!   width — so `parallel` and `parallel+simd` produce the same bits,
+//!   including the SR streams (lane-width invariance).
 
-use crate::kernels::{scalar, Backend, ScalarBackend};
+use crate::kernels::{scalar, simd, Backend, Lanes, SimdBackend};
 use crate::quant::e2m1::byte_decode_lut;
 use crate::quant::e8m0::E8m0;
-use crate::quant::hadamard::fwht;
 use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
 use crate::util::rng::Rng;
 
@@ -30,22 +34,49 @@ const TILE_N: usize = 64;
 /// (bit-identical, so the fallback is unobservable).
 const SMALL_WORK: usize = 1 << 14;
 
-/// Row/tile-parallel kernels.
+/// Row/tile-parallel kernels, optionally composed over a lane ISA.
 #[derive(Debug, Clone, Copy)]
 pub struct ParallelBackend {
     /// worker count; 0 = `QUARTET_THREADS` env or available parallelism
     pub threads: usize,
+    /// inner lane ISA for worker kernels; `None` = scalar inner loops
+    /// (the plain `parallel` backend)
+    simd: Option<Lanes>,
 }
 
 impl ParallelBackend {
     pub fn new() -> ParallelBackend {
-        ParallelBackend { threads: 0 }
+        ParallelBackend { threads: 0, simd: None }
     }
 
     /// Fixed worker count (tests pin this to prove thread-count
     /// independence).
     pub fn with_threads(threads: usize) -> ParallelBackend {
-        ParallelBackend { threads }
+        ParallelBackend { threads, simd: None }
+    }
+
+    /// Threads × lanes composition (`parallel+simd`): worker inner loops
+    /// run on the runtime-detected lane ISA.
+    pub fn new_simd() -> ParallelBackend {
+        ParallelBackend { threads: 0, simd: Some(Lanes::detect()) }
+    }
+
+    /// Fixed worker count with the detected lane ISA (tests pin this to
+    /// prove the composition is thread-count independent too).
+    pub fn with_threads_simd(threads: usize) -> ParallelBackend {
+        ParallelBackend { threads, simd: Some(Lanes::detect()) }
+    }
+
+    /// The lane ISA worker closures dispatch on (scalar when not
+    /// composing).
+    fn lanes(&self) -> Lanes {
+        self.simd.unwrap_or(Lanes::Scalar)
+    }
+
+    /// Single-threaded twin for small-input fallbacks: same lane ISA, no
+    /// thread setup — bit-identical, so the fallback is unobservable.
+    fn inner(&self) -> SimdBackend {
+        SimdBackend::with_lanes(self.lanes())
     }
 
     fn pool_size(&self) -> usize {
@@ -78,7 +109,18 @@ fn row_stream(salt: u64, row: usize) -> Rng {
 
 impl Backend for ParallelBackend {
     fn name(&self) -> &'static str {
-        "parallel"
+        if self.simd.is_some() {
+            "parallel+simd"
+        } else {
+            "parallel"
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self.simd {
+            Some(l) => format!("parallel+simd({})", l.label()),
+            None => "parallel".to_string(),
+        }
     }
 
     fn quantize_mxfp4(
@@ -93,8 +135,9 @@ impl Backend for ParallelBackend {
         assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
         let stochastic = matches!(mode, QuantMode::Sr | QuantMode::SrPrescaled);
         let threads = self.pool_size().min(rows.max(1));
+        let lanes = self.lanes();
         if !stochastic && (threads <= 1 || rows * cols < SMALL_WORK) {
-            return ScalarBackend.quantize_mxfp4(data, rows, cols, mode, rng);
+            return self.inner().quantize_mxfp4(data, rows, cols, mode, rng);
         }
 
         let gpr = cols / MX_GROUP;
@@ -115,7 +158,8 @@ impl Backend for ParallelBackend {
             // the scoped-thread setup costs more than the quantization
             for r in 0..rows {
                 let mut row_rng = row_stream(salt, r);
-                scalar::quantize_rows(
+                simd::quantize_rows(
+                    lanes,
                     &data[r * cols..(r + 1) * cols],
                     1,
                     cols,
@@ -168,7 +212,8 @@ impl Backend for ParallelBackend {
                     if stochastic {
                         for i in 0..nr {
                             let mut row_rng = row_stream(salt, r0 + i);
-                            scalar::quantize_rows(
+                            simd::quantize_rows(
+                                lanes,
                                 &data_chunk[i * cols..(i + 1) * cols],
                                 1,
                                 cols,
@@ -180,7 +225,8 @@ impl Backend for ParallelBackend {
                             );
                         }
                     } else {
-                        scalar::quantize_rows(
+                        simd::quantize_rows(
+                            lanes,
                             data_chunk,
                             nr,
                             cols,
@@ -202,8 +248,9 @@ impl Backend for ParallelBackend {
         assert_eq!(a.cols, b.cols, "contraction mismatch");
         let (m, n, k) = (a.rows, b.rows, a.cols);
         let threads = self.pool_size().min(m.max(1));
+        let lanes = self.lanes();
         if threads <= 1 || m * n * k < SMALL_WORK {
-            return ScalarBackend.gemm_mxfp4(a, b);
+            return self.inner().gemm_mxfp4(a, b);
         }
         let lut = byte_decode_lut();
         let rows_per = (m + threads - 1) / threads;
@@ -216,7 +263,7 @@ impl Backend for ParallelBackend {
                 let lut = &lut;
                 s.spawn(move || {
                     for (i, out) in chunk.chunks_mut(k).enumerate() {
-                        scalar::decode_row(a, r0 + i, lut, out);
+                        simd::decode_row(lanes, a, r0 + i, lut, out);
                     }
                 });
             }
@@ -239,7 +286,8 @@ impl Backend for ParallelBackend {
                     while jb < n {
                         let nb = TILE_N.min(n - jb);
                         for jj in 0..nb {
-                            scalar::decode_row(
+                            simd::decode_row(
+                                lanes,
                                 b,
                                 jb + jj,
                                 lut,
@@ -250,7 +298,7 @@ impl Backend for ParallelBackend {
                             let ra = &a_dec[(r0 + i) * k..(r0 + i + 1) * k];
                             for jj in 0..nb {
                                 c_row[jb + jj] =
-                                    scalar::dot_f32(ra, &b_tile[jj * k..(jj + 1) * k]);
+                                    simd::dot(lanes, ra, &b_tile[jj * k..(jj + 1) * k]);
                             }
                         }
                         jb += nb;
@@ -261,14 +309,17 @@ impl Backend for ParallelBackend {
         c
     }
 
-    fn decode_mxfp4(&self, t: &Mxfp4Tensor) -> Vec<f32> {
+    fn decode_mxfp4_into(&self, t: &Mxfp4Tensor, out: &mut [f32]) {
         let (rows, k) = (t.rows, t.cols);
-        let mut out = vec![0.0f32; rows * k];
+        assert_eq!(out.len(), rows * k, "decode output shape mismatch");
         let threads = self.pool_size().min(rows.max(1));
+        let lanes = self.lanes();
         let lut = byte_decode_lut();
         if threads <= 1 || rows * k < SMALL_WORK {
-            scalar::decode_rows(t, &lut, &mut out);
-            return out;
+            for (r, row) in out.chunks_mut(k.max(1)).enumerate().take(rows) {
+                simd::decode_row(lanes, t, r, &lut, row);
+            }
+            return;
         }
         let rows_per = (rows + threads - 1) / threads;
         std::thread::scope(|s| {
@@ -277,21 +328,21 @@ impl Backend for ParallelBackend {
                 let lut = &lut;
                 s.spawn(move || {
                     for (i, row) in chunk.chunks_mut(k).enumerate() {
-                        scalar::decode_row(t, r0 + i, lut, row);
+                        simd::decode_row(lanes, t, r0 + i, lut, row);
                     }
                 });
             }
         });
-        out
     }
 
     fn gemm_mxfp4_predec(&self, a: &Mxfp4Tensor, b_dec: &[f32], n: usize) -> Vec<f32> {
         let (m, k) = (a.rows, a.cols);
         assert_eq!(b_dec.len(), n * k, "decoded B shape mismatch");
         let threads = self.pool_size().min(m.max(1));
+        let lanes = self.lanes();
         if threads <= 1 || m * n * k < SMALL_WORK {
-            // scalar reference path — bit-identical, so unobservable
-            return ScalarBackend.gemm_mxfp4_predec(a, b_dec, n);
+            // single-threaded same-lane path — bit-identical, unobservable
+            return self.inner().gemm_mxfp4_predec(a, b_dec, n);
         }
         let lut = byte_decode_lut();
         let rows_per = (m + threads - 1) / threads;
@@ -313,12 +364,12 @@ impl Backend for ParallelBackend {
                 let lut = &lut;
                 s.spawn(move || {
                     for (i, out) in a_chunk.chunks_mut(k).enumerate() {
-                        scalar::decode_row(a, r0 + i, lut, out);
+                        simd::decode_row(lanes, a, r0 + i, lut, out);
                     }
                     for (i, c_row) in c_chunk.chunks_mut(n).enumerate() {
                         let ra = &a_chunk[i * k..(i + 1) * k];
                         for (j, out) in c_row.iter_mut().enumerate() {
-                            *out = scalar::dot_f32(ra, &b_dec[j * k..(j + 1) * k]);
+                            *out = simd::dot(lanes, ra, &b_dec[j * k..(j + 1) * k]);
                         }
                     }
                 });
@@ -329,8 +380,9 @@ impl Backend for ParallelBackend {
 
     fn gemm_f32(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
         let threads = self.pool_size().min(m.max(1));
+        let lanes = self.lanes();
         if threads <= 1 || m * n * k < SMALL_WORK {
-            return ScalarBackend.gemm_f32(a, b, m, n, k);
+            return self.inner().gemm_f32(a, b, m, n, k);
         }
         let rows_per = (m + threads - 1) / threads;
         let mut c = vec![0.0f32; m * n];
@@ -341,7 +393,7 @@ impl Backend for ParallelBackend {
                     for (i, c_row) in c_chunk.chunks_mut(n).enumerate() {
                         let ra = &a[(r0 + i) * k..(r0 + i + 1) * k];
                         for (j, out) in c_row.iter_mut().enumerate() {
-                            *out = scalar::dot_f32(ra, &b[j * k..(j + 1) * k]);
+                            *out = simd::dot(lanes, ra, &b[j * k..(j + 1) * k]);
                         }
                     }
                 });
@@ -363,8 +415,9 @@ impl Backend for ParallelBackend {
             return self.gemm_f32(a, b, m, n, k);
         };
         let threads = self.pool_size().min(m.max(1));
+        let lanes = self.lanes();
         if threads <= 1 || m * n * k < SMALL_WORK {
-            return ScalarBackend.gemm_f32_masked(a, b, m, n, k, Some(mask));
+            return self.inner().gemm_f32_masked(a, b, m, n, k, Some(mask));
         }
         assert!(mask.len() * 64 >= m * n, "trust mask too short for [{m}, {n}]");
         let rows_per = (m + threads - 1) / threads;
@@ -381,7 +434,7 @@ impl Backend for ParallelBackend {
                         for (j, out) in c_row.iter_mut().enumerate() {
                             let flat = (r0 + i) * n + j;
                             if mask[flat / 64] & (1u64 << (flat % 64)) != 0 {
-                                *out = scalar::dot_f32(ra, &b[j * k..(j + 1) * k]);
+                                *out = simd::dot(lanes, ra, &b[j * k..(j + 1) * k]);
                             }
                         }
                     }
@@ -463,6 +516,7 @@ impl Backend for ParallelBackend {
         // this backend, at any thread count.
         let part_salts: Vec<u64> = salts.iter().map(|&s| Rng::new(s).next_u64()).collect();
         let threads = self.pool_size().min(rows);
+        let lanes = self.lanes();
         let gpr = cols / MX_GROUP;
         let lut = byte_decode_lut();
         let rows_per = (rows + threads - 1) / threads;
@@ -484,7 +538,8 @@ impl Backend for ParallelBackend {
                         let r = r0 + i;
                         for (p, part) in parts.iter().enumerate() {
                             let mut row_rng = row_stream(part_salts[p], r);
-                            scalar::quantize_rows(
+                            simd::quantize_rows(
+                                lanes,
                                 &part[r * cols..(r + 1) * cols],
                                 1,
                                 cols,
@@ -494,7 +549,7 @@ impl Backend for ParallelBackend {
                                 &mut t.scales,
                                 None,
                             );
-                            scalar::decode_row(&t, 0, lut, &mut dec);
+                            simd::decode_row(lanes, &t, 0, lut, &mut dec);
                             for (a, v) in out_row.iter_mut().zip(&dec) {
                                 *a += *v;
                             }
@@ -510,8 +565,9 @@ impl Backend for ParallelBackend {
         assert_eq!(data.len() % g, 0);
         let n_groups = data.len() / g;
         let threads = self.pool_size().min(n_groups.max(1));
+        let lanes = self.lanes();
         if threads <= 1 || data.len() < SMALL_WORK {
-            ScalarBackend.block_hadamard(data, g);
+            self.inner().block_hadamard(data, g);
             return;
         }
         let per = ((n_groups + threads - 1) / threads) * g;
@@ -519,7 +575,7 @@ impl Backend for ParallelBackend {
             for chunk in data.chunks_mut(per) {
                 s.spawn(move || {
                     for grp in chunk.chunks_mut(g) {
-                        fwht(grp);
+                        simd::fwht(lanes, grp);
                     }
                 });
             }
@@ -530,6 +586,41 @@ impl Backend for ParallelBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::ScalarBackend;
+
+    #[test]
+    fn names_track_composition() {
+        assert_eq!(ParallelBackend::new().name(), "parallel");
+        assert_eq!(ParallelBackend::new().describe(), "parallel");
+        assert_eq!(ParallelBackend::new_simd().name(), "parallel+simd");
+        assert!(ParallelBackend::new_simd().describe().starts_with("parallel+simd("));
+    }
+
+    #[test]
+    fn simd_composition_bit_identical_to_plain_parallel() {
+        // threads × lanes must change nothing: same RTN bits, same GEMM
+        // bits, same SR stream (the row-stream salts are lane-independent)
+        let mut rng = Rng::new(21);
+        let (rows, cols) = (9, 160);
+        let x = rng.gaussian_vec(rows * cols, 1.0);
+        let plain = ParallelBackend::with_threads(3);
+        let fused = ParallelBackend::with_threads_simd(3);
+        for mode in [QuantMode::Rtn, QuantMode::Quest, QuantMode::Sr] {
+            let a = plain.quantize_mxfp4(&x, rows, cols, mode, &mut Rng::new(5));
+            let b = fused.quantize_mxfp4(&x, rows, cols, mode, &mut Rng::new(5));
+            assert_eq!(a.codes, b.codes, "{mode:?}");
+            assert_eq!(a.scales, b.scales, "{mode:?}");
+            assert_eq!(a.mask, b.mask, "{mode:?}");
+        }
+        let t = plain.quantize_mxfp4(&x, rows, cols, QuantMode::Rtn, &mut Rng::new(5));
+        assert_eq!(plain.decode_mxfp4(&t), fused.decode_mxfp4(&t));
+        assert_eq!(plain.gemm_mxfp4(&t, &t), fused.gemm_mxfp4(&t, &t));
+        let mut h1 = x.clone();
+        let mut h2 = x.clone();
+        plain.block_hadamard(&mut h1, MX_GROUP);
+        fused.block_hadamard(&mut h2, MX_GROUP);
+        assert_eq!(h1, h2);
+    }
 
     #[test]
     fn row_streams_distinct_and_stable() {

@@ -1,0 +1,992 @@
+//! Lane-parallel backend: explicit AVX2 (x86_64) / NEON (aarch64) kernels
+//! behind runtime feature detection, with a safe scalar fallback so the
+//! backend is selectable on every host.
+//!
+//! This is the CPU rendering of the paper's fused dequant-into-FMA
+//! microkernel: packed-MXFP4 nibbles are decoded with in-register table
+//! shuffles and multiplied straight into the MAC registers, so a K-panel
+//! of A is decoded once per 32-group and reused across a register tile of
+//! B rows ([`NB`] accumulators). Group quantization vectorizes the absmax
+//! reduce and the scale broadcast-multiply; block-Hadamard butterflies
+//! vectorize every stage whose stride covers a full vector.
+//!
+//! Bit-identity contract (pinned by `tests/backend_equivalence.rs`):
+//! every entry point — including stochastic rounding — is bit-identical to
+//! [`ScalarBackend`](crate::kernels::ScalarBackend) regardless of the lane
+//! width, because
+//!
+//! * the scalar reference dot (`scalar::dot_f32`) already runs 8
+//!   accumulators with separate mul+add; one 8-lane vector (or a NEON
+//!   4-lane pair) replays exactly that per-accumulator op sequence, and
+//!   the horizontal reduction copies its sequential lane sum. No FMA
+//!   contraction is ever emitted (`add(mul(..))`, never `fmadd`).
+//! * decode is pure element-wise work: shuffle-LUT magnitude, sign by xor
+//!   into the f32 sign bit (code 8 yields -0.0 like the scalar LUT), then
+//!   the same single multiply by the group scale.
+//! * quantization vectorizes only the absmax reduce (associative for the
+//!   finite inputs the quantizer is defined on) and the `x * inv`
+//!   prescale; the per-element encode — where RTN/SR rounding happens —
+//!   runs scalar-side in element order on the caller's RNG, so the SR
+//!   stream is drawn exactly like the scalar backend's at any lane width.
+//! * Hadamard butterflies and the final normalization are element-wise
+//!   adds/subs/muls — vector lanes change nothing.
+//!
+//! [`ParallelBackend`](crate::kernels::ParallelBackend) composes over
+//! these kernels (threads × lanes) via the `pub(crate)` lane-dispatched
+//! free functions below; `QUARTET_BACKEND=parallel+simd` selects that
+//! composition.
+
+use crate::kernels::{scalar, Backend};
+use crate::quant::e2m1::{byte_decode_lut, e2m1_encode_rtn, e2m1_encode_sr, E2M1_MAX};
+use crate::quant::e8m0::E8m0;
+use crate::quant::mxfp4::{quest_scale, Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::util::rng::Rng;
+
+/// Register-tile width of the fused decode+MAC microkernel: B rows whose
+/// accumulators share one decoded A group. 4 keeps AVX2 at 4 accumulator
+/// registers + 2 decode temporaries and NEON at 8 + 2 — well inside both
+/// register files.
+const NB: usize = 4;
+
+/// Detected lane ISA. `Scalar` is the safe fallback everywhere; the
+/// vector variants only exist on their architecture (cfg-gated) and must
+/// only be constructed when the feature is actually present —
+/// [`Lanes::detect`] is the sanctioned constructor, tests may pin
+/// `Lanes::Scalar` explicitly to race the fallback against the vector
+/// path on the same machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lanes {
+    /// No vector path: every kernel delegates to the scalar reference.
+    Scalar,
+    /// 8-lane f32 AVX2 path (runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 4-lane f32 NEON path (baseline on aarch64).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Lanes {
+    /// Runtime feature detection: AVX2 on x86_64 when the CPU reports it,
+    /// NEON always on aarch64 (baseline ISA), scalar everywhere else.
+    pub fn detect() -> Lanes {
+        detect_impl()
+    }
+
+    /// Short ISA label for summary lines (`simd(avx2)`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Lanes::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Lanes::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Lanes::Neon => "neon",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_impl() -> Lanes {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Lanes::Avx2
+    } else {
+        Lanes::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_impl() -> Lanes {
+    Lanes::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_impl() -> Lanes {
+    Lanes::Scalar
+}
+
+/// Vectorized kernels on the detected (or pinned) lane ISA.
+#[derive(Debug, Clone, Copy)]
+pub struct SimdBackend {
+    lanes: Lanes,
+}
+
+impl SimdBackend {
+    pub fn new() -> SimdBackend {
+        SimdBackend { lanes: Lanes::detect() }
+    }
+
+    /// Pin an explicit lane ISA (tests race the vector path against
+    /// `Lanes::Scalar` on the same machine).
+    pub fn with_lanes(lanes: Lanes) -> SimdBackend {
+        SimdBackend { lanes }
+    }
+
+    pub fn lanes(&self) -> Lanes {
+        self.lanes
+    }
+}
+
+impl Default for SimdBackend {
+    fn default() -> Self {
+        SimdBackend::new()
+    }
+}
+
+impl Backend for SimdBackend {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn describe(&self) -> String {
+        format!("simd({})", self.lanes.label())
+    }
+
+    fn quantize_mxfp4(
+        &self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        mode: QuantMode,
+        rng: &mut Rng,
+    ) -> Mxfp4Tensor {
+        assert_eq!(data.len(), rows * cols);
+        assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
+        let gpr = cols / MX_GROUP;
+        let mut codes = vec![0u8; rows * cols / 2];
+        let mut scales = vec![E8m0(0); rows * gpr];
+        let mut mask = if mode == QuantMode::Quest {
+            Some(vec![0u64; (rows * cols + 63) / 64])
+        } else {
+            None
+        };
+        quantize_rows(
+            self.lanes,
+            data,
+            rows,
+            cols,
+            mode,
+            rng,
+            &mut codes,
+            &mut scales,
+            mask.as_deref_mut(),
+        );
+        Mxfp4Tensor { rows, cols, codes, scales, mask }
+    }
+
+    fn gemm_mxfp4(&self, a: &Mxfp4Tensor, b: &Mxfp4Tensor) -> Vec<f32> {
+        assert_eq!(a.cols, b.cols, "contraction mismatch");
+        let (m, n, k) = (a.rows, b.rows, a.cols);
+        // decode B once (vectorized), then run the fused decode+MAC
+        // microkernel over packed A — same values, same per-dot MAC order
+        // as the scalar decode-then-dot reference, so bit-identical
+        let mut b_dec = vec![0.0f32; n * k];
+        self.decode_mxfp4_into(b, &mut b_dec);
+        let mut c = vec![0.0f32; m * n];
+        gemm_predec_into(self.lanes, a, &b_dec, n, &mut c);
+        c
+    }
+
+    fn gemm_f32(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let ra = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                c[i * n + j] = dot(self.lanes, ra, &b[j * k..(j + 1) * k]);
+            }
+        }
+        c
+    }
+
+    fn gemm_f32_masked(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        mask: Option<&[u64]>,
+    ) -> Vec<f32> {
+        let Some(mask) = mask else {
+            return self.gemm_f32(a, b, m, n, k);
+        };
+        assert!(mask.len() * 64 >= m * n, "trust mask too short for [{m}, {n}]");
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let ra = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let flat = i * n + j;
+                if mask[flat / 64] & (1u64 << (flat % 64)) != 0 {
+                    c[flat] = dot(self.lanes, ra, &b[j * k..(j + 1) * k]);
+                }
+            }
+        }
+        c
+    }
+
+    fn decode_mxfp4_into(&self, t: &Mxfp4Tensor, out: &mut [f32]) {
+        assert_eq!(out.len(), t.rows * t.cols, "decode output shape mismatch");
+        let lut = byte_decode_lut();
+        let k = t.cols;
+        for (r, row) in out.chunks_mut(k.max(1)).enumerate().take(t.rows) {
+            decode_row(self.lanes, t, r, &lut, row);
+        }
+    }
+
+    fn gemm_mxfp4_predec(&self, a: &Mxfp4Tensor, b_dec: &[f32], n: usize) -> Vec<f32> {
+        let (m, k) = (a.rows, a.cols);
+        assert_eq!(b_dec.len(), n * k, "decoded B shape mismatch");
+        let mut c = vec![0.0f32; m * n];
+        gemm_predec_into(self.lanes, a, b_dec, n, &mut c);
+        c
+    }
+
+    fn block_hadamard(&self, data: &mut [f32], g: usize) {
+        assert_eq!(data.len() % g, 0);
+        for chunk in data.chunks_mut(g) {
+            fwht(self.lanes, chunk);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane-dispatched free functions: the composition surface ParallelBackend
+// uses inside its worker closures (threads × lanes). Every function is
+// bit-identical to its `scalar::` counterpart on any `Lanes` value.
+// ---------------------------------------------------------------------------
+
+/// `scalar::dot_f32` at the selected lane width (vector body over the
+/// 8-wide chunks, scalar tail for `len % 8`).
+pub(crate) fn dot(lanes: Lanes, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match lanes {
+        Lanes::Scalar => scalar::dot_f32(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => unsafe { neon::dot(a, b) },
+    }
+}
+
+/// `scalar::decode_row` at the selected lane width (the vector paths
+/// shuffle-decode whole 32-groups and ignore the byte LUT).
+pub(crate) fn decode_row(
+    lanes: Lanes,
+    t: &Mxfp4Tensor,
+    row: usize,
+    lut: &[(f32, f32); 256],
+    out: &mut [f32],
+) {
+    match lanes {
+        Lanes::Scalar => scalar::decode_row(t, row, lut, out),
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { avx2::decode_row(t, row, out) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => unsafe { neon::decode_row(t, row, out) },
+    }
+}
+
+/// `scalar::quantize_rows` at the selected lane width. The vector paths
+/// vectorize the absmax reduce and the scale prescale; rounding itself
+/// (and every RNG draw) stays scalar-side in element order, so RTN, SR
+/// and QuEST outputs — codes, scales, trust mask, and the caller's RNG
+/// state — are bit-identical to the scalar reference.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn quantize_rows(
+    lanes: Lanes,
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    mode: QuantMode,
+    rng: &mut Rng,
+    codes: &mut [u8],
+    scales: &mut [E8m0],
+    mask: Option<&mut [u64]>,
+) {
+    match lanes {
+        Lanes::Scalar => scalar::quantize_rows(data, rows, cols, mode, rng, codes, scales, mask),
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => quantize_rows_vec(lanes, data, rows, cols, mode, rng, codes, scales, mask),
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => quantize_rows_vec(lanes, data, rows, cols, mode, rng, codes, scales, mask),
+    }
+}
+
+/// `quant::hadamard::fwht` at the selected lane width: butterfly stages
+/// whose stride covers a full vector run lane-parallel, smaller stages
+/// stay scalar; all stages are element-wise (x+y, x−y) pairs, so the
+/// result is bit-identical at any width.
+pub(crate) fn fwht(lanes: Lanes, block: &mut [f32]) {
+    match lanes {
+        Lanes::Scalar => crate::quant::hadamard::fwht(block),
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { avx2::fwht(block) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => unsafe { neon::fwht(block) },
+    }
+}
+
+/// Decode-once GEMM into a caller-owned C buffer: `c[i*n+j] =
+/// dot(decode(a row i), b_dec row j)`. The vector paths never materialize
+/// the decoded A row — each 32-group is decoded into registers once and
+/// multiplied into an [`NB`]-wide tile of accumulators (K-panel fusion).
+pub(crate) fn gemm_predec_into(
+    lanes: Lanes,
+    a: &Mxfp4Tensor,
+    b_dec: &[f32],
+    n: usize,
+    c: &mut [f32],
+) {
+    let (m, k) = (a.rows, a.cols);
+    assert_eq!(b_dec.len(), n * k, "decoded B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    let lut = byte_decode_lut();
+    let mut scratch = vec![0.0f32; k];
+    for i in 0..m {
+        predec_row(lanes, a, i, b_dec, n, &lut, &mut scratch, &mut c[i * n..(i + 1) * n]);
+    }
+}
+
+/// One C row of the decode-once GEMM. The scalar path decodes the packed
+/// A row into `scratch` and runs the reference dot (the trait-default
+/// arithmetic); vector paths fuse decode into the MAC loop and leave
+/// `scratch` untouched.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn predec_row(
+    lanes: Lanes,
+    a: &Mxfp4Tensor,
+    row: usize,
+    b_dec: &[f32],
+    n: usize,
+    lut: &[(f32, f32); 256],
+    scratch: &mut [f32],
+    c_row: &mut [f32],
+) {
+    let k = a.cols;
+    debug_assert_eq!(c_row.len(), n);
+    match lanes {
+        Lanes::Scalar => {
+            scalar::decode_row(a, row, lut, scratch);
+            for (j, out) in c_row.iter_mut().enumerate() {
+                *out = scalar::dot_f32(scratch, &b_dec[j * k..(j + 1) * k]);
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => {
+            let mut j = 0;
+            while j < n {
+                let nb = NB.min(n - j);
+                unsafe { avx2::predec_dot_tile(a, row, b_dec, j, nb, &mut c_row[j..j + nb]) };
+                j += nb;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => {
+            let mut j = 0;
+            while j < n {
+                let nb = NB.min(n - j);
+                unsafe { neon::predec_dot_tile(a, row, b_dec, j, nb, &mut c_row[j..j + nb]) };
+                j += nb;
+            }
+        }
+    }
+}
+
+/// Shared vector quantize loop: per 32-group, scale selection (vectorized
+/// absmax for RTN/SR, the scalar `quest_scale` for QuEST), vectorized
+/// `x * inv` prescale into a stack scratch, then the scalar per-element
+/// encode — bit-identical to `scalar::quantize_rows` because the prescaled
+/// values are the product of the very same two f32s and every rounding
+/// decision (and RNG draw) happens scalar-side in element order. The
+/// absmax reduce assumes finite inputs (max is associative there); NaNs
+/// yield garbage codes on every backend alike.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[allow(clippy::too_many_arguments)]
+fn quantize_rows_vec(
+    lanes: Lanes,
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    mode: QuantMode,
+    rng: &mut Rng,
+    codes: &mut [u8],
+    scales: &mut [E8m0],
+    mut mask: Option<&mut [u64]>,
+) {
+    let gpr = cols / MX_GROUP;
+    let mut scratch = [0.0f32; MX_GROUP];
+    for r in 0..rows {
+        for g in 0..gpr {
+            let base = r * cols + g * MX_GROUP;
+            let group = &data[base..base + MX_GROUP];
+            let (scale, clip_ok) = match mode {
+                QuantMode::Quest => quest_scale(group),
+                _ => {
+                    let amax = group_absmax(lanes, group);
+                    (E8m0::from_absmax(amax, E2M1_MAX), None)
+                }
+            };
+            scales[r * gpr + g] = scale;
+            let inv = 1.0 / scale.value();
+            prescale(lanes, group, inv, &mut scratch);
+            for i in 0..MX_GROUP {
+                let x = scratch[i];
+                let code = match mode {
+                    QuantMode::Rtn | QuantMode::Quest => e2m1_encode_rtn(x),
+                    QuantMode::SrPrescaled => e2m1_encode_sr(0.75 * x, rng.uniform_f32()),
+                    QuantMode::Sr => {
+                        e2m1_encode_sr(x.clamp(-E2M1_MAX, E2M1_MAX), rng.uniform_f32())
+                    }
+                };
+                let flat = base + i;
+                if flat & 1 == 0 {
+                    codes[flat / 2] = code;
+                } else {
+                    codes[flat / 2] |= code << 4;
+                }
+                if let Some(m) = mask.as_mut() {
+                    let ok = clip_ok.map(|c| group[i].abs() <= c).unwrap_or(true);
+                    if ok {
+                        m[flat / 64] |= 1u64 << (flat % 64);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Vectorized |group|-max over one 32-group (identical value to the
+/// scalar sequential fold for finite inputs).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn group_absmax(lanes: Lanes, group: &[f32]) -> f32 {
+    match lanes {
+        Lanes::Scalar => group.iter().fold(0.0f32, |m, &v| m.max(v.abs())),
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { avx2::group_absmax(group) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => unsafe { neon::group_absmax(group) },
+    }
+}
+
+/// Vectorized `out[i] = group[i] * inv` (the E8M0 scale broadcast).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn prescale(lanes: Lanes, group: &[f32], inv: f32, out: &mut [f32; MX_GROUP]) {
+    match lanes {
+        Lanes::Scalar => {
+            for (o, &v) in out.iter_mut().zip(group) {
+                *o = v * inv;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { avx2::prescale(group, inv, out) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => unsafe { neon::prescale(group, inv, out) },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2: 8-lane f32.
+//
+// Safety: every fn is `#[target_feature(enable = "avx2")]` and must only
+// be reached through a `Lanes::Avx2` dispatch — that variant is only
+// constructed by `Lanes::detect()` after `is_x86_feature_detected!`
+// confirms the ISA (or by tests on machines known to have it).
+// ---------------------------------------------------------------------------
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use crate::quant::mxfp4::{Mxfp4Tensor, MX_GROUP};
+
+    /// E2M1 magnitude grid as an in-register shuffle table.
+    static MAG: [f32; 8] = crate::quant::e2m1::E2M1_GRID;
+
+    /// Decode 8 packed codes (low 8 bytes of `codes8`, one code per byte)
+    /// into scaled f32s: magnitude via `vpermps` table shuffle, sign by
+    /// xor of code bit 3 into the f32 sign bit (code 8 decodes to -0.0,
+    /// matching the scalar LUT), then the same single multiply by the
+    /// group scale the scalar decode performs.
+    #[target_feature(enable = "avx2")]
+    unsafe fn decode8(codes8: __m128i, mag: __m256, sv: __m256) -> __m256 {
+        let idx = _mm256_cvtepu8_epi32(codes8);
+        let m = _mm256_permutevar8x32_ps(mag, _mm256_and_si256(idx, _mm256_set1_epi32(7)));
+        let sign = _mm256_slli_epi32::<28>(_mm256_and_si256(idx, _mm256_set1_epi32(8)));
+        _mm256_mul_ps(_mm256_xor_ps(m, _mm256_castsi256_ps(sign)), sv)
+    }
+
+    /// Split one 16-byte packed 32-group into four 8-code vectors in
+    /// element order (low nibble first, matching the byte LUT layout).
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack_group(bytes: __m128i) -> [__m128i; 4] {
+        let nib = _mm_set1_epi8(0x0f);
+        let lo = _mm_and_si128(bytes, nib);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(bytes), nib);
+        let first = _mm_unpacklo_epi8(lo, hi); // elements 0..16
+        let second = _mm_unpackhi_epi8(lo, hi); // elements 16..32
+        [
+            first,
+            _mm_unpackhi_epi64(first, first),
+            second,
+            _mm_unpackhi_epi64(second, second),
+        ]
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn decode_row(t: &Mxfp4Tensor, row: usize, out: &mut [f32]) {
+        let k = t.cols;
+        let gpr = k / MX_GROUP;
+        let mag = _mm256_loadu_ps(MAG.as_ptr());
+        for g in 0..gpr {
+            let sv = _mm256_set1_ps(t.scales[row * gpr + g].value());
+            let base = (row * k + g * MX_GROUP) / 2;
+            let bytes = _mm_loadu_si128(t.codes.as_ptr().add(base) as *const __m128i);
+            let quarters = unpack_group(bytes);
+            for (q, &codes8) in quarters.iter().enumerate() {
+                _mm256_storeu_ps(
+                    out.as_mut_ptr().add(g * MX_GROUP + q * 8),
+                    decode8(codes8, mag, sv),
+                );
+            }
+        }
+    }
+
+    /// 8-lane dot: lane u replays scalar accumulator u of
+    /// `scalar::dot_f32` (separate mul + add — never FMA — and the same
+    /// sequential lane sum + scalar tail).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let chunks = a.len() / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut tail = 0.0f32;
+        for i in chunks * 8..a.len() {
+            tail += a[i] * b[i];
+        }
+        lanes.iter().sum::<f32>() + tail
+    }
+
+    /// Fused decode+MAC K-panel microkernel: one packed A row against
+    /// `nb ≤ NB` pre-decoded B rows. Each 32-group of A is shuffle-decoded
+    /// into registers once and multiplied into all `nb` accumulators;
+    /// per-accumulator the MAC order is chunk-ascending — exactly the
+    /// sequence `scalar::dot_f32` runs over the decoded row.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn predec_dot_tile(
+        t: &Mxfp4Tensor,
+        row: usize,
+        b_dec: &[f32],
+        j0: usize,
+        nb: usize,
+        out: &mut [f32],
+    ) {
+        let k = t.cols;
+        let gpr = k / MX_GROUP;
+        let mag = _mm256_loadu_ps(MAG.as_ptr());
+        let mut acc = [_mm256_setzero_ps(); super::NB];
+        for g in 0..gpr {
+            let sv = _mm256_set1_ps(t.scales[row * gpr + g].value());
+            let base = (row * k + g * MX_GROUP) / 2;
+            let bytes = _mm_loadu_si128(t.codes.as_ptr().add(base) as *const __m128i);
+            let quarters = unpack_group(bytes);
+            for (q, &codes8) in quarters.iter().enumerate() {
+                let va = decode8(codes8, mag, sv);
+                let off = g * MX_GROUP + q * 8;
+                for (jj, a) in acc.iter_mut().enumerate().take(nb) {
+                    let vb = _mm256_loadu_ps(b_dec.as_ptr().add((j0 + jj) * k + off));
+                    *a = _mm256_add_ps(*a, _mm256_mul_ps(va, vb));
+                }
+            }
+        }
+        for (jj, o) in out.iter_mut().enumerate().take(nb) {
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc[jj]);
+            // k % 32 == 0, so the scalar reference's tail loop is empty:
+            // mirror its closing `sum + tail` with tail = 0.0 so even the
+            // sign of an all-(-0.0) sum matches bitwise
+            *o = lanes.iter().sum::<f32>() + 0.0;
+        }
+    }
+
+    /// Vectorized absmax reduce over one 32-group.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn group_absmax(group: &[f32]) -> f32 {
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let mut m = _mm256_setzero_ps();
+        for q in 0..MX_GROUP / 8 {
+            let v = _mm256_loadu_ps(group.as_ptr().add(q * 8));
+            m = _mm256_max_ps(m, _mm256_and_ps(v, absmask));
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), m);
+        lanes.iter().fold(0.0f32, |a, &b| a.max(b))
+    }
+
+    /// Vectorized scale broadcast: `out[i] = group[i] * inv`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn prescale(group: &[f32], inv: f32, out: &mut [f32; MX_GROUP]) {
+        let vi = _mm256_set1_ps(inv);
+        for q in 0..MX_GROUP / 8 {
+            let v = _mm256_loadu_ps(group.as_ptr().add(q * 8));
+            _mm256_storeu_ps(out.as_mut_ptr().add(q * 8), _mm256_mul_ps(v, vi));
+        }
+    }
+
+    /// FWHT with vectorized butterflies for every stage of stride ≥ 8
+    /// and a vectorized final normalization; stages of stride < 8 (and
+    /// any `g % 8` norm tail) stay scalar. All element-wise — bit-equal.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn fwht(block: &mut [f32]) {
+        let g = block.len();
+        debug_assert!(g.is_power_of_two());
+        let mut h = 1;
+        while h < g {
+            let mut i = 0;
+            while i < g {
+                if h >= 8 {
+                    let mut j = i;
+                    while j < i + h {
+                        let x = _mm256_loadu_ps(block.as_ptr().add(j));
+                        let y = _mm256_loadu_ps(block.as_ptr().add(j + h));
+                        _mm256_storeu_ps(block.as_mut_ptr().add(j), _mm256_add_ps(x, y));
+                        _mm256_storeu_ps(block.as_mut_ptr().add(j + h), _mm256_sub_ps(x, y));
+                        j += 8;
+                    }
+                } else {
+                    for j in i..i + h {
+                        let (x, y) = (block[j], block[j + h]);
+                        block[j] = x + y;
+                        block[j + h] = x - y;
+                    }
+                }
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+        let norm = 1.0 / (g as f32).sqrt();
+        let nv = _mm256_set1_ps(norm);
+        let chunks = g / 8;
+        for c in 0..chunks {
+            let v = _mm256_loadu_ps(block.as_ptr().add(c * 8));
+            _mm256_storeu_ps(block.as_mut_ptr().add(c * 8), _mm256_mul_ps(v, nv));
+        }
+        for v in block[chunks * 8..].iter_mut() {
+            *v *= norm;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON: 4-lane f32 (baseline on aarch64, so no runtime detection needed).
+//
+// The scalar reference dot runs 8 accumulators; here an accumulator PAIR
+// (acc0 = scalar lanes 0..4, acc1 = lanes 4..8) replays it. All MACs use
+// `vaddq_f32(acc, vmulq_f32(a, b))` — never `vmlaq_f32`, which lowers to
+// a fused `fmla` and would break bit-identity.
+// ---------------------------------------------------------------------------
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use crate::quant::e2m1::e2m1_decode;
+    use crate::quant::mxfp4::{Mxfp4Tensor, MX_GROUP};
+
+    /// Byte-index tables for `vqtbl1q_u8` replication: REP4[j] selects
+    /// nibble-vector bytes 4j..4j+4, each repeated 4× (one per f32 byte).
+    static REP4: [[u8; 16]; 4] = {
+        let mut t = [[0u8; 16]; 4];
+        let mut j = 0;
+        while j < 4 {
+            let mut p = 0;
+            while p < 16 {
+                t[j][p] = (4 * j + p / 4) as u8;
+                p += 1;
+            }
+            j += 1;
+        }
+        t
+    };
+
+    /// Little-endian byte offsets 0..4 repeated per f32 slot.
+    static OFFS: [u8; 16] = [0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3];
+
+    /// 16-entry decoded-value table as raw little-endian f32 bytes for
+    /// `vqtbl4q_u8`: byte `4c + b` is byte `b` of `e2m1_decode(c)` (so
+    /// code 8 carries -0.0, matching the scalar LUT).
+    unsafe fn value_table() -> uint8x16x4_t {
+        let mut bytes = [0u8; 64];
+        let mut c = 0usize;
+        while c < 16 {
+            bytes[4 * c..4 * c + 4].copy_from_slice(&e2m1_decode(c as u8).to_le_bytes());
+            c += 1;
+        }
+        uint8x16x4_t(
+            vld1q_u8(bytes.as_ptr()),
+            vld1q_u8(bytes.as_ptr().add(16)),
+            vld1q_u8(bytes.as_ptr().add(32)),
+            vld1q_u8(bytes.as_ptr().add(48)),
+        )
+    }
+
+    /// Decode one packed 32-group into 8 scaled f32x4 vectors in element
+    /// order: nibble split + zip into per-element codes, then a 64-byte
+    /// table shuffle assembles each f32 from the value table, then one
+    /// multiply by the group scale (same single f32 mul as scalar).
+    unsafe fn decode_group(tbl: uint8x16x4_t, bytes: uint8x16_t, sv: float32x4_t) -> [float32x4_t; 8] {
+        let nib = vdupq_n_u8(0x0f);
+        let lo = vandq_u8(bytes, nib);
+        let hi = vshrq_n_u8::<4>(bytes);
+        let first = vzip1q_u8(lo, hi); // element codes 0..16
+        let second = vzip2q_u8(lo, hi); // element codes 16..32
+        let mut out = [vdupq_n_f32(0.0); 8];
+        for (half, codes16) in [first, second].into_iter().enumerate() {
+            let c4 = vshlq_n_u8::<2>(codes16); // 4·code: byte base in the value table
+            for j in 0..4 {
+                let rep = vqtbl1q_u8(c4, vld1q_u8(REP4[j].as_ptr()));
+                let idx = vaddq_u8(rep, vld1q_u8(OFFS.as_ptr()));
+                let v = vreinterpretq_f32_u8(vqtbl4q_u8(tbl, idx));
+                out[half * 4 + j] = vmulq_f32(v, sv);
+            }
+        }
+        out
+    }
+
+    pub(super) unsafe fn decode_row(t: &Mxfp4Tensor, row: usize, out: &mut [f32]) {
+        let k = t.cols;
+        let gpr = k / MX_GROUP;
+        let tbl = value_table();
+        for g in 0..gpr {
+            let sv = vdupq_n_f32(t.scales[row * gpr + g].value());
+            let base = (row * k + g * MX_GROUP) / 2;
+            let bytes = vld1q_u8(t.codes.as_ptr().add(base));
+            let vecs = decode_group(tbl, bytes, sv);
+            for (q, v) in vecs.into_iter().enumerate() {
+                vst1q_f32(out.as_mut_ptr().add(g * MX_GROUP + q * 4), v);
+            }
+        }
+    }
+
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let chunks = a.len() / 8;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let pa = a.as_ptr().add(c * 8);
+            let pb = b.as_ptr().add(c * 8);
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(pa), vld1q_f32(pb)));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4))));
+        }
+        let mut lanes = [0.0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        let mut tail = 0.0f32;
+        for i in chunks * 8..a.len() {
+            tail += a[i] * b[i];
+        }
+        lanes.iter().sum::<f32>() + tail
+    }
+
+    /// Fused decode+MAC K-panel tile (see the AVX2 twin): accumulator
+    /// pairs per B row, even/odd quarter vectors mapping to scalar
+    /// accumulator lanes 0..4 / 4..8.
+    pub(super) unsafe fn predec_dot_tile(
+        t: &Mxfp4Tensor,
+        row: usize,
+        b_dec: &[f32],
+        j0: usize,
+        nb: usize,
+        out: &mut [f32],
+    ) {
+        let k = t.cols;
+        let gpr = k / MX_GROUP;
+        let tbl = value_table();
+        let mut acc = [[vdupq_n_f32(0.0); 2]; super::NB];
+        for g in 0..gpr {
+            let sv = vdupq_n_f32(t.scales[row * gpr + g].value());
+            let base = (row * k + g * MX_GROUP) / 2;
+            let bytes = vld1q_u8(t.codes.as_ptr().add(base));
+            let vecs = decode_group(tbl, bytes, sv);
+            for (q, va) in vecs.into_iter().enumerate() {
+                let off = g * MX_GROUP + q * 4;
+                for (jj, a) in acc.iter_mut().enumerate().take(nb) {
+                    let vb = vld1q_f32(b_dec.as_ptr().add((j0 + jj) * k + off));
+                    a[q % 2] = vaddq_f32(a[q % 2], vmulq_f32(va, vb));
+                }
+            }
+        }
+        for (jj, o) in out.iter_mut().enumerate().take(nb) {
+            let mut lanes = [0.0f32; 8];
+            vst1q_f32(lanes.as_mut_ptr(), acc[jj][0]);
+            vst1q_f32(lanes.as_mut_ptr().add(4), acc[jj][1]);
+            // k % 32 == 0: mirror the scalar `sum + tail` with tail = 0.0
+            *o = lanes.iter().sum::<f32>() + 0.0;
+        }
+    }
+
+    pub(super) unsafe fn group_absmax(group: &[f32]) -> f32 {
+        let mut m = vdupq_n_f32(0.0);
+        for q in 0..MX_GROUP / 4 {
+            m = vmaxq_f32(m, vabsq_f32(vld1q_f32(group.as_ptr().add(q * 4))));
+        }
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), m);
+        lanes.iter().fold(0.0f32, |a, &b| a.max(b))
+    }
+
+    pub(super) unsafe fn prescale(group: &[f32], inv: f32, out: &mut [f32; MX_GROUP]) {
+        let vi = vdupq_n_f32(inv);
+        for q in 0..MX_GROUP / 4 {
+            let v = vld1q_f32(group.as_ptr().add(q * 4));
+            vst1q_f32(out.as_mut_ptr().add(q * 4), vmulq_f32(v, vi));
+        }
+    }
+
+    pub(super) unsafe fn fwht(block: &mut [f32]) {
+        let g = block.len();
+        debug_assert!(g.is_power_of_two());
+        let mut h = 1;
+        while h < g {
+            let mut i = 0;
+            while i < g {
+                if h >= 4 {
+                    let mut j = i;
+                    while j < i + h {
+                        let x = vld1q_f32(block.as_ptr().add(j));
+                        let y = vld1q_f32(block.as_ptr().add(j + h));
+                        vst1q_f32(block.as_mut_ptr().add(j), vaddq_f32(x, y));
+                        vst1q_f32(block.as_mut_ptr().add(j + h), vsubq_f32(x, y));
+                        j += 4;
+                    }
+                } else {
+                    for j in i..i + h {
+                        let (x, y) = (block[j], block[j + h]);
+                        block[j] = x + y;
+                        block[j + h] = x - y;
+                    }
+                }
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+        let norm = 1.0 / (g as f32).sqrt();
+        let nv = vdupq_n_f32(norm);
+        let chunks = g / 4;
+        for c in 0..chunks {
+            let v = vld1q_f32(block.as_ptr().add(c * 4));
+            vst1q_f32(block.as_mut_ptr().add(c * 4), vmulq_f32(v, nv));
+        }
+        for v in block[chunks * 4..].iter_mut() {
+            *v *= norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ScalarBackend;
+
+    fn detected() -> SimdBackend {
+        SimdBackend::new()
+    }
+
+    fn fallback() -> SimdBackend {
+        SimdBackend::with_lanes(Lanes::Scalar)
+    }
+
+    #[test]
+    fn names_and_labels() {
+        assert_eq!(detected().name(), "simd");
+        assert!(detected().describe().starts_with("simd("));
+        assert_eq!(fallback().describe(), "simd(scalar)");
+    }
+
+    #[test]
+    fn quantize_bit_identical_all_modes() {
+        let mut rng = Rng::new(17);
+        let x = rng.gaussian_vec(5 * 96, 1.3);
+        for mode in [
+            QuantMode::Rtn,
+            QuantMode::Quest,
+            QuantMode::Sr,
+            QuantMode::SrPrescaled,
+        ] {
+            let (mut r1, mut r2, mut r3) = (Rng::new(23), Rng::new(23), Rng::new(23));
+            let s = ScalarBackend.quantize_mxfp4(&x, 5, 96, mode, &mut r1);
+            let v = detected().quantize_mxfp4(&x, 5, 96, mode, &mut r2);
+            let f = fallback().quantize_mxfp4(&x, 5, 96, mode, &mut r3);
+            assert_eq!(s.codes, v.codes, "{mode:?} codes");
+            assert_eq!(s.scales, v.scales, "{mode:?} scales");
+            assert_eq!(s.mask, v.mask, "{mode:?} mask");
+            assert_eq!(s.codes, f.codes, "{mode:?} fallback codes");
+            // caller RNG must advance identically (SR draws in element order)
+            assert_eq!(r1.next_u64(), r2.next_u64(), "{mode:?} rng state");
+            assert_eq!(r1.next_u64(), r3.next_u64(), "{mode:?} fallback rng state");
+        }
+    }
+
+    #[test]
+    fn decode_and_gemms_bit_identical() {
+        let mut rng = Rng::new(29);
+        let (m, n, k) = (7, 13, 160);
+        let a = rng.gaussian_vec(m * k, 1.0);
+        let b = rng.gaussian_vec(n * k, 1.0);
+        let sc = ScalarBackend;
+        let ap = sc.quantize_mxfp4(&a, m, k, QuantMode::Rtn, &mut Rng::new(1));
+        let bp = sc.quantize_mxfp4(&b, n, k, QuantMode::Rtn, &mut Rng::new(2));
+        for be in [detected(), fallback()] {
+            assert_eq!(sc.decode_mxfp4(&ap), be.decode_mxfp4(&ap), "decode");
+            let mut into = vec![0.0f32; m * k];
+            be.decode_mxfp4_into(&ap, &mut into);
+            assert_eq!(sc.decode_mxfp4(&ap), into, "decode_into");
+            assert_eq!(sc.gemm_mxfp4(&ap, &bp), be.gemm_mxfp4(&ap, &bp), "gemm_mxfp4");
+            let b_dec = sc.decode_mxfp4(&bp);
+            assert_eq!(
+                sc.gemm_mxfp4_predec(&ap, &b_dec, n),
+                be.gemm_mxfp4_predec(&ap, &b_dec, n),
+                "predec"
+            );
+            assert_eq!(sc.gemm_f32(&a, &b, m, n, k), be.gemm_f32(&a, &b, m, n, k), "f32");
+        }
+    }
+
+    #[test]
+    fn dot_tail_matches_scalar() {
+        // k = 100: 12 full 8-lane chunks + a 4-element scalar tail
+        let mut rng = Rng::new(31);
+        let a = rng.gaussian_vec(100, 1.0);
+        let b = rng.gaussian_vec(100, 1.0);
+        let want = scalar::dot_f32(&a, &b);
+        assert_eq!(want, dot(detected().lanes(), &a, &b));
+        assert_eq!(want, dot(Lanes::Scalar, &a, &b));
+    }
+
+    #[test]
+    fn hadamard_bit_identical() {
+        let mut rng = Rng::new(37);
+        for g in [4usize, 8, 16, 32, 64] {
+            let x = rng.gaussian_vec(3 * g, 1.0);
+            let mut s = x.clone();
+            ScalarBackend.block_hadamard(&mut s, g);
+            for be in [detected(), fallback()] {
+                let mut v = x.clone();
+                be.block_hadamard(&mut v, g);
+                assert_eq!(s, v, "g={g} {}", be.describe());
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_bit_identical() {
+        let mut rng = Rng::new(41);
+        let a = rng.gaussian_vec(3 * 64, 1.0);
+        let b = rng.gaussian_vec(3 * 64, 0.5);
+        let want = ScalarBackend.reduce_mxfp4(&[&a, &b], 3, 64, &[5, 6]);
+        assert_eq!(want, detected().reduce_mxfp4(&[&a, &b], 3, 64, &[5, 6]));
+        assert_eq!(want, fallback().reduce_mxfp4(&[&a, &b], 3, 64, &[5, 6]));
+    }
+}

@@ -20,8 +20,9 @@
 //! repro check-records [--dir runs]    # bench-record schema + perf gate
 //! ```
 //!
-//! Every subcommand honours the global `--backend scalar|parallel` flag
-//! (or the `QUARTET_BACKEND` env var) selecting the kernels backend.
+//! Every subcommand honours the global `--backend
+//! scalar|parallel|simd|parallel+simd` flag (or the `QUARTET_BACKEND`
+//! env var) selecting the kernels backend.
 //! `train --native` runs the pure-Rust Quartet trainer (no PJRT; method
 //! axis `f32|mxfp8|quartet|rtn`) and `serve` without `--artifact` runs
 //! the native continuous-batching engine (serve method axis
@@ -70,7 +71,9 @@ fn main() -> Result<()> {
             println!("       repro serve --method f32|mxfp8|quartet [--checkpoint ckpt.json]");
             println!("                   [--arch mlp|transformer] [--recompute]");
             println!("                   [--trace t.json | --requests N --rate r]  (pure Rust)");
-            println!("global: --backend scalar|parallel (or QUARTET_BACKEND env)");
+            println!(
+                "global: --backend scalar|parallel|simd|parallel+simd (or QUARTET_BACKEND env)"
+            );
             println!("see README.md for the full command reference");
             Ok(())
         }
@@ -214,7 +217,7 @@ fn cmd_train_native(args: &mut Args) -> Result<()> {
         "trained {} [{} backend]: steps={} tokens={} init val loss={:.4} \
          final val loss={:.4} ({:.0} tok/s, {:.2}s){}",
         rec.artifact,
-        be.name(),
+        be.describe(),
         rec.steps,
         rec.tokens,
         rec.val_curve.first().map(|&(_, l)| l).unwrap_or(f64::NAN),
@@ -427,7 +430,7 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
         report.completions.len(),
         submitted,
         method.name(),
-        eng.backend_name(),
+        eng.backend_describe(),
         max_batch,
         if recompute { " recompute" } else { "" },
         report.generated_tokens,
@@ -544,14 +547,13 @@ fn cmd_table2(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// Quick scalar-vs-parallel kernel race on one GEMM shape — the smallest
+/// Quick all-backends kernel race on one GEMM shape — the smallest
 /// end-to-end check that the backend layer delivers (Fig 3's CPU story).
 fn cmd_kernels(args: &mut Args) -> Result<()> {
     let m = args.parse_or("m", 256usize)?;
     let n = args.parse_or("n", 11008usize)?;
     let k = args.parse_or("k", 4096usize)?;
     args.finish()?;
-    use quartet::kernels::{Backend, ParallelBackend, ScalarBackend};
     use quartet::quant::mxfp4::QuantMode;
     use quartet::util::bench::Bencher;
     use quartet::util::rng::Rng;
@@ -563,27 +565,30 @@ fn cmd_kernels(args: &mut Args) -> Result<()> {
     let w = rng.gaussian_vec(n * k, 0.3);
 
     println!("GEMM shape m={m} n={n} k={k}");
-    let mut medians = Vec::new();
-    for be in [
-        Box::new(ScalarBackend) as Box<dyn Backend>,
-        Box::new(ParallelBackend::new()),
-    ] {
+    let mut scalar_median = 0.0f64;
+    for name in ["scalar", "parallel", "simd", "parallel+simd"] {
+        let be = quartet::kernels::backend_from_name(name)?;
         let tx = be.quantize_mxfp4(&x, m, k, QuantMode::Rtn, &mut Rng::new(1));
         let tw = be.quantize_mxfp4(&w, n, k, QuantMode::Rtn, &mut Rng::new(2));
         let gemm = b.bench("gemm", || be.gemm_mxfp4(&tx, &tw));
         let quant = b.bench("quant", || {
             be.quantize_mxfp4(&x, m, k, QuantMode::Rtn, &mut Rng::new(1))
         });
-        println!(
-            "  {:<9} mxfp4 gemm {:>9.2} ms   quantize {:>9.2} ms",
-            be.name(),
-            gemm.median() * 1e3,
+        let med = gemm.median();
+        print!(
+            "  {:<20} mxfp4 gemm {:>9.2} ms   quantize {:>9.2} ms",
+            be.describe(),
+            med * 1e3,
             quant.median() * 1e3
         );
-        medians.push(gemm.median());
-    }
-    if medians.len() == 2 && medians[1] > 0.0 {
-        println!("  parallel speedup: {:.2}x", medians[0] / medians[1]);
+        if name == "scalar" {
+            scalar_median = med;
+            println!();
+        } else if med > 0.0 && scalar_median > 0.0 {
+            println!("   ({:.2}x vs scalar)", scalar_median / med);
+        } else {
+            println!();
+        }
     }
     Ok(())
 }

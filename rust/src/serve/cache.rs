@@ -120,7 +120,8 @@ impl PreparedLayer {
                 let mut wh = w.to_vec();
                 be.block_hadamard(&mut wh, MX_GROUP);
                 let packed = be.quantize_mxfp4(&wh, d_out, d_in, QuantMode::Rtn, &mut rng);
-                let dec = be.decode_mxfp4(&packed);
+                let mut dec = vec![0.0f32; d_out * d_in];
+                be.decode_mxfp4_into(&packed, &mut dec);
                 PreparedForm::Quartet { packed, dec }
             }
         };

@@ -192,6 +192,12 @@ impl ServeEngine {
         self.backend.name()
     }
 
+    /// Backend name plus the detected ISA path (e.g. `simd(avx2)`) — for
+    /// human-facing summary lines; record filenames keep [`Self::backend_name`].
+    pub fn backend_describe(&self) -> String {
+        self.backend.describe()
+    }
+
     pub fn cache(&self) -> &PackedWeightCache {
         &self.cache
     }

@@ -121,9 +121,10 @@ impl Args {
     }
 }
 
-/// Consume the shared `--backend scalar|parallel` flag and lock in the
-/// process-wide [`crate::kernels`] backend (the `QUARTET_BACKEND` env var
-/// is the flag-less equivalent). Call before any kernel work runs.
+/// Consume the shared `--backend scalar|parallel|simd|parallel+simd` flag
+/// and lock in the process-wide [`crate::kernels`] backend (the
+/// `QUARTET_BACKEND` env var is the flag-less equivalent). Call before any
+/// kernel work runs.
 pub fn apply_backend_flag(args: &mut Args) -> Result<()> {
     if let Some(name) = args.get("backend") {
         crate::kernels::select(&name)?;
@@ -157,12 +158,14 @@ pub fn usize_list_or(args: &mut Args, key: &str, default: &[usize]) -> Result<Ve
     }
 }
 
-/// Consume `--backend scalar|parallel|both` into concrete backend
-/// instances — the shared axis of the kernel benches. When the flag is
-/// omitted the `QUARTET_BACKEND` env var is consulted (matching how the
-/// test suite selects backends, so the CI matrix sets one env var instead
-/// of threading `--backend` through every bench invocation), and `both`
-/// is the final default. Unknown names are an error, not a silent
+/// Consume `--backend scalar|parallel|simd|parallel+simd|both|all` into
+/// concrete backend instances — the shared axis of the kernel benches.
+/// When the flag is omitted the `QUARTET_BACKEND` env var is consulted
+/// (matching how the test suite selects backends, so the CI matrix sets
+/// one env var instead of threading `--backend` through every bench
+/// invocation), and `both` is the final default. `both` keeps its
+/// historical scalar+parallel meaning; `all` sweeps every backend
+/// including the simd columns. Unknown names are an error, not a silent
 /// fallback.
 pub fn backends_flag(args: &mut Args) -> Result<Vec<Box<dyn crate::kernels::Backend>>> {
     let sel = match args.get("backend") {
@@ -173,6 +176,12 @@ pub fn backends_flag(args: &mut Args) -> Result<Vec<Box<dyn crate::kernels::Back
         "both" => Ok(vec![
             crate::kernels::backend_from_name("scalar")?,
             crate::kernels::backend_from_name("parallel")?,
+        ]),
+        "all" => Ok(vec![
+            crate::kernels::backend_from_name("scalar")?,
+            crate::kernels::backend_from_name("parallel")?,
+            crate::kernels::backend_from_name("simd")?,
+            crate::kernels::backend_from_name("parallel+simd")?,
         ]),
         name => Ok(vec![crate::kernels::backend_from_name(name)?]),
     }

@@ -1,12 +1,16 @@
-//! Backend-equivalence suite: `ParallelBackend` must be bit-identical to
-//! `ScalarBackend` on every deterministic entry point (RTN/QuEST
-//! quantization, both GEMMs, the Hadamard transforms) across the Llama
-//! shape table — including non-multiple-of-tile edge shapes — and
-//! stochastic rounding must be seed-reproducible at any thread count and
-//! distributionally matched against the scalar reference.
+//! Backend-equivalence suite: `ParallelBackend` and `SimdBackend` must
+//! be bit-identical to `ScalarBackend` on every deterministic entry
+//! point (RTN/QuEST quantization, both GEMMs, the Hadamard transforms)
+//! across the Llama shape table — including non-multiple-of-tile edge
+//! shapes — and stochastic rounding must be seed-reproducible at any
+//! thread count and distributionally matched against the scalar
+//! reference. `SimdBackend` makes a stronger promise than the threaded
+//! backend: its SR stream is drawn scalar-side in element order, so SR
+//! itself is bit-identical to `ScalarBackend` at any lane width, and
+//! `parallel+simd` reproduces plain `parallel` exactly.
 
 use quartet::bench::llama_linear_shapes;
-use quartet::kernels::{Backend, ParallelBackend, ScalarBackend};
+use quartet::kernels::{Backend, Lanes, ParallelBackend, ScalarBackend, SimdBackend};
 use quartet::quant::mxfp4::{Mxfp4Tensor, QuantMode};
 use quartet::util::rng::Rng;
 use quartet::util::stats::mse;
@@ -308,6 +312,190 @@ fn sr_advances_caller_rng_between_calls() {
     let first = be.quantize_mxfp4(&x, rows, cols, QuantMode::Sr, &mut rng);
     let second = be.quantize_mxfp4(&x, rows, cols, QuantMode::Sr, &mut rng);
     assert_ne!(first.codes, second.codes, "repeated SR calls must see fresh noise");
+}
+
+/// The simd backend variants under test: the detected ISA path plus the
+/// forced scalar-lane fallback, so CI exercises the dispatch layer even
+/// on runners without the wide instructions.
+fn simd_variants() -> Vec<SimdBackend> {
+    let mut v = vec![SimdBackend::with_lanes(Lanes::Scalar)];
+    if SimdBackend::new().lanes() != Lanes::Scalar {
+        v.push(SimdBackend::new());
+    }
+    v
+}
+
+#[test]
+fn simd_quantize_bit_identical_including_sr() {
+    // stronger than the parallel backend's SR contract: every mode —
+    // including stochastic rounding — is bit-identical to ScalarBackend,
+    // because the SR draws happen scalar-side in element order on the
+    // caller's RNG regardless of lane width
+    let scalar = ScalarBackend;
+    for (rows, cols) in quant_shapes() {
+        let mut rng = Rng::new(rows as u64 * 131 + cols as u64);
+        let x = rng.gaussian_vec(rows * cols, 1.0);
+        for mode in [QuantMode::Rtn, QuantMode::Quest, QuantMode::Sr, QuantMode::SrPrescaled] {
+            let mut rng_want = Rng::new(23);
+            let want = scalar.quantize_mxfp4(&x, rows, cols, mode, &mut rng_want);
+            let want_next = rng_want.next_u64();
+            for be in simd_variants() {
+                let mut rng_got = Rng::new(23);
+                let got = be.quantize_mxfp4(&x, rows, cols, mode, &mut rng_got);
+                let ctx = format!("{mode:?} {rows}x{cols} [{}]", be.describe());
+                assert_tensors_equal(&want, &got, &ctx);
+                // the caller's RNG must advance identically too — a lane
+                // path that drew extra noise would desync training
+                assert_eq!(want_next, rng_got.next_u64(), "{ctx}: RNG state diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_decode_and_gemms_bit_identical() {
+    let scalar = ScalarBackend;
+    for (m, n, k) in gemm_shapes() {
+        let mut rng = Rng::new(m as u64 * 13 + (n as u64) * 29 + (k as u64) * 43);
+        let a = rng.gaussian_vec(m * k, 1.0);
+        let b = rng.gaussian_vec(n * k, 0.4);
+        let ta = scalar.quantize_mxfp4(&a, m, k, QuantMode::Rtn, &mut Rng::new(0));
+        let tb = scalar.quantize_mxfp4(&b, n, k, QuantMode::Rtn, &mut Rng::new(0));
+        let want_mx = scalar.gemm_mxfp4(&ta, &tb);
+        let want_dec = scalar.decode_mxfp4(&tb);
+        let want_f32 = scalar.gemm_f32(&a, &b, m, n, k);
+        let mask: Vec<u64> = (0..(m * n + 63) / 64).map(|_| rng.next_u64()).collect();
+        let want_masked = scalar.gemm_f32_masked(&a, &b, m, n, k, Some(&mask));
+        for be in simd_variants() {
+            let lbl = be.describe();
+            assert_eq!(want_dec, be.decode_mxfp4(&tb), "decode {n}x{k} [{lbl}]");
+            let mut into = vec![f32::NAN; n * k];
+            be.decode_mxfp4_into(&tb, &mut into);
+            assert_eq!(want_dec, into, "decode_into {n}x{k} [{lbl}]");
+            assert_eq!(want_mx, be.gemm_mxfp4(&ta, &tb), "mxfp4 gemm {m}x{n}x{k} [{lbl}]");
+            assert_eq!(
+                want_mx,
+                be.gemm_mxfp4_predec(&ta, &want_dec, n),
+                "predec gemm {m}x{n}x{k} [{lbl}]"
+            );
+            assert_eq!(want_f32, be.gemm_f32(&a, &b, m, n, k), "f32 gemm {m}x{n}x{k} [{lbl}]");
+            assert_eq!(
+                want_masked,
+                be.gemm_f32_masked(&a, &b, m, n, k, Some(&mask)),
+                "masked gemm {m}x{n}x{k} [{lbl}]"
+            );
+        }
+    }
+    // ragged contraction tails: k not a multiple of any lane width — the
+    // f32 dot's vector body + scalar tail must reproduce the scalar
+    // 8-accumulator sum exactly
+    for (m, n, k) in [(3usize, 5usize, 1usize), (4, 4, 7), (2, 3, 100), (5, 2, 37)] {
+        let mut rng = Rng::new(k as u64 + 5);
+        let a = rng.gaussian_vec(m * k, 1.0);
+        let b = rng.gaussian_vec(n * k, 1.0);
+        let want = scalar.gemm_f32(&a, &b, m, n, k);
+        for be in simd_variants() {
+            assert_eq!(
+                want,
+                be.gemm_f32(&a, &b, m, n, k),
+                "ragged f32 gemm {m}x{n}x{k} [{}]",
+                be.describe()
+            );
+        }
+    }
+}
+
+#[test]
+fn simd_hadamard_bit_identical() {
+    let scalar = ScalarBackend;
+    // 999 groups: stresses block iteration; g sweeps across and past the
+    // vector width so sub-width butterflies hit the scalar stages
+    for g in [4usize, 8, 16, 32, 64] {
+        let mut rng = Rng::new(g as u64 * 7 + 1);
+        let x = rng.gaussian_vec(g * 999, 1.0);
+        let mut want = x.clone();
+        scalar.block_hadamard(&mut want, g);
+        for be in simd_variants() {
+            let mut got = x.clone();
+            be.block_hadamard(&mut got, g);
+            assert_eq!(want, got, "hadamard g={g} [{}]", be.describe());
+            // inverse composes back to the input's transform too
+            let mut back = got.clone();
+            be.block_hadamard_inv(&mut back, g);
+            let mut back_ref = want.clone();
+            scalar.block_hadamard_inv(&mut back_ref, g);
+            assert_eq!(back_ref, back, "hadamard inv g={g} [{}]", be.describe());
+        }
+    }
+}
+
+#[test]
+fn simd_reduce_bit_identical() {
+    // gradient all-reduce: SR quantize + decode + accumulate per part;
+    // bit-identical because the simd SR stream equals the scalar one
+    let scalar = ScalarBackend;
+    let (rows, cols) = (9, 160);
+    let mut rng = Rng::new(41);
+    let a = rng.gaussian_vec(rows * cols, 1e-2);
+    let b = rng.gaussian_vec(rows * cols, 1e-2);
+    let c = rng.gaussian_vec(rows * cols, 1e-2);
+    let parts: [&[f32]; 3] = [&a, &b, &c];
+    let want = scalar.reduce_mxfp4(&parts, rows, cols, &[3, 5, 8]);
+    for be in simd_variants() {
+        assert_eq!(
+            want,
+            be.reduce_mxfp4(&parts, rows, cols, &[3, 5, 8]),
+            "reduce [{}]",
+            be.describe()
+        );
+    }
+}
+
+#[test]
+fn parallel_simd_composition_matches_scalar_and_plain_parallel() {
+    // threads × lanes: the composed backend must stay bit-identical to
+    // ScalarBackend on deterministic entry points at every thread count,
+    // and its SR stream must equal plain ParallelBackend's (the per-row
+    // salted streams don't depend on lane width)
+    let scalar = ScalarBackend;
+    for (m, n, k) in [(48usize, 31usize, 1056usize), (7, 13, 160), (64, 64, 640)] {
+        let mut rng = Rng::new(m as u64 + n as u64 * 3 + k as u64 * 9);
+        let a = rng.gaussian_vec(m * k, 1.0);
+        let b = rng.gaussian_vec(n * k, 0.4);
+        let ta = scalar.quantize_mxfp4(&a, m, k, QuantMode::Rtn, &mut Rng::new(0));
+        let tb = scalar.quantize_mxfp4(&b, n, k, QuantMode::Rtn, &mut Rng::new(0));
+        let want_q = scalar.quantize_mxfp4(&a, m, k, QuantMode::Quest, &mut Rng::new(6));
+        let want_mx = scalar.gemm_mxfp4(&ta, &tb);
+        let want_dec = scalar.decode_mxfp4(&tb);
+        let mut want_h = a.clone();
+        scalar.block_hadamard(&mut want_h, 32);
+        for t in THREAD_COUNTS {
+            let be = ParallelBackend::with_threads_simd(t);
+            assert_eq!(be.name(), "parallel+simd");
+            let ctx = format!("{m}x{n}x{k} threads={t} [{}]", be.describe());
+            assert_tensors_equal(
+                &be.quantize_mxfp4(&a, m, k, QuantMode::Quest, &mut Rng::new(6)),
+                &want_q,
+                &ctx,
+            );
+            assert_eq!(want_mx, be.gemm_mxfp4(&ta, &tb), "{ctx}: gemm");
+            let mut dec = vec![f32::NAN; n * k];
+            be.decode_mxfp4_into(&tb, &mut dec);
+            assert_eq!(want_dec, dec, "{ctx}: decode");
+            assert_eq!(want_mx, be.gemm_mxfp4_predec(&ta, &want_dec, n), "{ctx}: predec");
+            let mut h = a.clone();
+            be.block_hadamard(&mut h, 32);
+            assert_eq!(want_h, h, "{ctx}: hadamard");
+
+            // SR: lane width must be unobservable given the same threads
+            let plain = ParallelBackend::with_threads(t);
+            for mode in [QuantMode::Sr, QuantMode::SrPrescaled] {
+                let want_sr = plain.quantize_mxfp4(&a, m, k, mode, &mut Rng::new(77));
+                let got_sr = be.quantize_mxfp4(&a, m, k, mode, &mut Rng::new(77));
+                assert_tensors_equal(&want_sr, &got_sr, &format!("{ctx}: {mode:?}"));
+            }
+        }
+    }
 }
 
 #[test]
