@@ -106,6 +106,7 @@ fn main() {
                         rate: 0.0,
                         stop_token: None,
                         seed: 0xF166 + bs as u64,
+                        shared_prefix_len: 0,
                     }) {
                         eng.submit(r).expect("submit");
                     }

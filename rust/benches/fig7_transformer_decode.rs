@@ -11,22 +11,35 @@
 //!   one batched pass, then each step appends one (K, V) pair per layer
 //!   and attends the cached prefix — O(1) matmul rows per token.
 //!
-//! Token streams are bit-identical between the two modes (same per-row
-//! kernels — `tests/serve_engine.rs` pins it), so the speedup is pure
-//! data-path scheduling. Expected shape (the acceptance bar): cached
+//! * **paged_shared_mxfp4** — the paged store at full stretch: a
+//!   shared-prefix workload (32 shared + 4 private prompt tokens) served
+//!   with prefix sharing AND packed-MXFP4 pages; the prefix pages are
+//!   computed once and re-referenced by every later request.
+//!
+//! Token streams are bit-identical between the first two modes (same
+//! per-row kernels — `tests/serve_engine.rs` pins it), so the speedup is
+//! pure data-path scheduling. Expected shape (the acceptance bar): cached
 //! decode beats recompute wall-clock from context ≥ 64 on both backends,
 //! with the ratio growing linearly in context.
 //!
+//! After the context sweep, a **kv_capacity** race fixes the pool byte
+//! budget at exactly two dense-f32 requests and serves 16 shared-prefix
+//! requests twice: `kv_capacity_dense` (f32 pages, sharing off, chunked
+//! prefill — the dense-allocation stand-in) admits 2 concurrently, while
+//! `kv_capacity` (MXFP4 pages + prefix sharing) admits all 16 — the
+//! `concurrency_vs_dense` ratio `check-records` gates (floor 2×).
+//!
 //! Each run emits a JSON `ServeRecord` (throughput, latency percentiles,
-//! peak KV bytes) under `--out` (default `runs/fig7_decode`); CI uploads
-//! them as workflow artifacts. `--steps N` caps decode steps per run for
-//! smoke-test use.
+//! peak KV bytes/pages, page utilization, prefix hit rate) under `--out`
+//! (default `runs/fig7_decode`); CI uploads them as workflow artifacts.
+//! `--steps N` caps decode steps per run for smoke-test use (admission
+//! happens at step 1, so even capped runs record peak concurrency).
 
 use std::path::PathBuf;
 
 use quartet::serve::{
-    synth_requests, PackedWeightCache, Sampling, ServeEngine, ServeMethod, ServeRecord,
-    SynthOptions,
+    synth_requests, KvPool, KvPoolConfig, KvQuant, KvServeOptions, PackedWeightCache, Sampling,
+    ServeEngine, ServeMethod, ServeRecord, SynthOptions,
 };
 use quartet::train::{TrainMethod, TransformerConfig, TransformerLm};
 use quartet::util::cli::{backends_flag, usize_list_or, Args};
@@ -77,14 +90,26 @@ fn main() {
                 be.name()
             );
             println!(
-                "{:>8} {:>16} {:>16} {:>10} {:>14}",
-                "context", "recompute tok/s", "kv_cached tok/s", "speedup", "peak KV bytes"
+                "{:>8} {:>16} {:>16} {:>18} {:>10} {:>14}",
+                "context", "recompute tok/s", "kv_cached tok/s", "paged+mxfp4 tok/s", "speedup",
+                "peak KV bytes"
             );
             for &ctx in &contexts {
-                let mut tps = [0.0f64; 2];
+                let mut tps = [0.0f64; 3];
                 let mut kv_peak = 0usize;
-                for (slot, (mode, recompute)) in
-                    [("recompute", true), ("kv_cached", false)].into_iter().enumerate()
+                // (mode, recompute, kv options, shared prompt prefix)
+                let legs = [
+                    ("recompute", true, KvServeOptions::default(), 0usize),
+                    ("kv_cached", false, KvServeOptions::default(), 0),
+                    (
+                        "paged_shared_mxfp4",
+                        false,
+                        KvServeOptions { quant: KvQuant::Mxfp4, ..KvServeOptions::default() },
+                        32,
+                    ),
+                ];
+                for (slot, (mode, recompute, kv_opts, shared_len)) in
+                    legs.into_iter().enumerate()
                 {
                     let backend = quartet::kernels::backend_from_name(be.name())
                         .expect("backend name");
@@ -95,21 +120,23 @@ fn main() {
                         Sampling::greedy(),
                     );
                     eng.set_recompute(recompute);
+                    eng.set_kv_options(kv_opts);
                     for r in synth_requests(&SynthOptions {
                         n: n_requests,
                         vocab: 256,
-                        prompt_len: 4,
+                        prompt_len: if shared_len > 0 { shared_len + 4 } else { 4 },
                         max_new_tokens: ctx,
                         vary_lengths: false,
                         rate: 0.0,
                         stop_token: None,
                         seed: 0xF177 + ctx as u64,
+                        shared_prefix_len: shared_len,
                     }) {
                         eng.submit(r).expect("submit");
                     }
                     let report = eng.run(steps_cap).expect("run");
                     tps[slot] = report.tokens_per_sec();
-                    if !recompute {
+                    if mode == "kv_cached" {
                         kv_peak = report.kv_bytes_peak;
                     }
                     let rec = ServeRecord::from_report(
@@ -126,18 +153,112 @@ fn main() {
                     records += 1;
                 }
                 println!(
-                    "{ctx:>8} {:>16.0} {:>16.0} {:>9.2}x {:>14}",
+                    "{ctx:>8} {:>16.0} {:>16.0} {:>18.0} {:>9.2}x {:>14}",
                     tps[0],
                     tps[1],
+                    tps[2],
                     tps[1] / tps[0].max(1e-12),
                     kv_peak
                 );
             }
+            records += capacity_race(&cache, *method, be.name(), steps_cap, &out);
         }
     }
     println!(
         "\nexpected: kv_cached beats recompute from context >= 64 on both backends \
-         (each cached step touches O(1) matmul rows; recompute touches O(context))."
+         (each cached step touches O(1) matmul rows; recompute touches O(context)); \
+         kv_capacity admits >= 2x the dense baseline's concurrent requests at a \
+         fixed KV byte budget."
     );
     println!("{records} records -> {}", out.display());
+}
+
+/// Concurrency at a FIXED KV byte budget: the pool is capped at exactly
+/// two dense-f32 requests' worth of pages, then 16 requests sharing a
+/// 48-token prompt prefix race through twice — f32 pages with sharing off
+/// (the dense-allocation stand-in, prefilled in chunks of 8), and MXFP4
+/// pages with prefix sharing. The MXFP4+shared leg needs 3 shared + 1
+/// fresh page per request (~7.5× smaller pages), so all 16 fit where the
+/// baseline admits 2; its record carries `concurrency_vs_dense`, which
+/// `check-records` gates at ≥ 2×.
+fn capacity_race(
+    cache: &std::sync::Arc<PackedWeightCache>,
+    method: ServeMethod,
+    be_name: &str,
+    steps_cap: Option<usize>,
+    out: &std::path::Path,
+) -> usize {
+    let (n_layers, n_heads, head_dim) = cache.transformer_dims().expect("transformer cache");
+    let pt = 16usize;
+    let prompt_len = 52usize; // 48 shared + 4 private
+    let max_new = 12usize;
+    let pages_per_req = (prompt_len + max_new + pt - 1) / pt; // 4 pages per request
+    let f32_page = KvPool::new(KvPoolConfig {
+        page_tokens: pt,
+        n_layers,
+        n_heads,
+        head_dim,
+        quant: KvQuant::F32,
+        max_bytes: 0,
+    })
+    .page_bytes();
+    let budget = 2 * pages_per_req * f32_page;
+    let n_requests = 16usize;
+    let mut conc = [0usize; 2];
+    let mut records = 0usize;
+    for (slot, (mode, quant, share, prefill_chunk)) in [
+        ("kv_capacity_dense", KvQuant::F32, false, 8usize),
+        ("kv_capacity", KvQuant::Mxfp4, true, 0),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let backend = quartet::kernels::backend_from_name(be_name).expect("backend name");
+        let mut eng = ServeEngine::new(cache.clone(), backend, n_requests, Sampling::greedy());
+        eng.set_kv_options(KvServeOptions {
+            page_tokens: pt,
+            quant,
+            prefill_chunk,
+            max_pool_bytes: budget,
+            share,
+        });
+        for r in synth_requests(&SynthOptions {
+            n: n_requests,
+            vocab: 256,
+            prompt_len,
+            max_new_tokens: max_new,
+            vary_lengths: false,
+            rate: 0.0,
+            stop_token: None,
+            seed: 0xF177,
+            shared_prefix_len: 48,
+        }) {
+            eng.submit(r).expect("submit");
+        }
+        let report = eng.run(steps_cap).expect("run");
+        conc[slot] = report.max_concurrent;
+        let mut rec = ServeRecord::from_report(
+            "fig7_transformer_decode",
+            mode,
+            method.name(),
+            be_name,
+            0,
+            n_requests,
+            n_requests,
+            &report,
+        );
+        if slot == 1 {
+            rec.concurrency_vs_dense = Some(conc[1] as f64 / conc[0].max(1) as f64);
+        }
+        rec.save(out).expect("write record");
+        records += 1;
+    }
+    println!(
+        "capacity @ {budget} KV bytes: dense-f32 {} concurrent vs mxfp4+shared {} \
+         ({:.1}x)",
+        conc[0],
+        conc[1],
+        conc[1] as f64 / conc[0].max(1) as f64
+    );
+    records
 }

@@ -46,6 +46,12 @@ pub struct Baselines {
     /// kernel records: minimum decode-once GEMM speedup over
     /// ScalarBackend required of the `parallel+simd` row
     pub kernel_min_predec_speedup: f64,
+    /// serve records: minimum prefix-trie hit rate on shared-prefix legs
+    /// (0.0 when the baselines file has no "kv" section)
+    pub kv_min_prefix_hit_rate: f64,
+    /// serve records: minimum concurrent-request multiple over the dense
+    /// baseline required of the `kv_capacity` record
+    pub kv_min_concurrency_vs_dense: f64,
 }
 
 impl Baselines {
@@ -63,6 +69,12 @@ impl Baselines {
             Some(kernel) => (num(kernel, "min_gflops")?, num(kernel, "min_predec_speedup")?),
             None => (0.0, 0.0),
         };
+        // "kv" is optional for the same reason: pre-paging baseline files
+        // keep loading, with the paged-KV floors at 0.0.
+        let (kv_min_prefix_hit_rate, kv_min_concurrency_vs_dense) = match j.get("kv") {
+            Some(kv) => (num(kv, "min_prefix_hit_rate")?, num(kv, "min_concurrency_vs_dense")?),
+            None => (0.0, 0.0),
+        };
         Ok(Baselines {
             run_min_tokens_per_sec: num(run, "min_tokens_per_sec")?,
             serve_min_tokens_per_sec: num(serve, "min_tokens_per_sec")?,
@@ -70,6 +82,8 @@ impl Baselines {
             serve_max_ttft_p99_s: num(serve, "max_ttft_p99_s")?,
             kernel_min_gflops,
             kernel_min_predec_speedup,
+            kv_min_prefix_hit_rate,
+            kv_min_concurrency_vs_dense,
         })
     }
 
@@ -388,6 +402,50 @@ fn check_serve(j: &Json, name: &str, b: &Baselines, violations: &mut Vec<String>
         (Err(e), _) => fail(e),
         (_, Err(_)) => {}
     }
+
+    // paged-KV fields (absent on pre-paging archives): both are ratios,
+    // so whenever they appear at all they must be finite and in [0, 1]
+    for key in ["page_utilization", "prefix_hit_rate"] {
+        if let Some(v) = j.get(key) {
+            match v.as_f64() {
+                Some(x) if x.is_finite() && (0.0..=1.0).contains(&x) => {}
+                _ => fail(format!("{key} is not a finite ratio in [0, 1]")),
+            }
+        }
+    }
+
+    let mode = j.get("mode").and_then(|v| v.as_str()).unwrap_or("").to_string();
+    // shared-prefix legs must actually share: a cold trie (hit rate near
+    // zero) means prefix publication or lookup broke, not jitter
+    if mode.contains("shared") {
+        match req_num(j, "prefix_hit_rate") {
+            Ok(r) if r < b.kv_min_prefix_hit_rate => fail(format!(
+                "prefix_hit_rate {r:.3} is below the required {} on a shared-prefix leg",
+                b.kv_min_prefix_hit_rate
+            )),
+            Ok(_) => {}
+            Err(e) => fail(format!("{e} (required on shared-prefix legs)")),
+        }
+    }
+    // the kv-capacity headline: mxfp4+shared paging must admit at least
+    // the committed multiple of the dense baseline's concurrency at a
+    // fixed KV byte budget. `kv_capacity_dense` is the baseline leg and
+    // carries no ratio, hence the exact match.
+    if mode == "kv_capacity" {
+        match req_num(j, "concurrency_vs_dense") {
+            Ok(r) if r < b.kv_min_concurrency_vs_dense => fail(format!(
+                "kv_capacity concurrency {r:.2}x over the dense baseline is below the \
+                 required {}x",
+                b.kv_min_concurrency_vs_dense
+            )),
+            Ok(_) => {}
+            Err(e) => fail(format!("{e} (required on the kv_capacity record)")),
+        }
+    } else if let Some(v) = j.get("concurrency_vs_dense") {
+        if !v.as_f64().map(|r| r.is_finite() && r > 0.0).unwrap_or(false) {
+            fail("concurrency_vs_dense is not a finite positive number".into());
+        }
+    }
 }
 
 fn check_kernel(j: &Json, name: &str, b: &Baselines, violations: &mut Vec<String>) {
@@ -459,6 +517,8 @@ mod tests {
             serve_max_ttft_p99_s: 300.0,
             kernel_min_gflops: 0.05,
             kernel_min_predec_speedup: 2.0,
+            kv_min_prefix_hit_rate: 0.25,
+            kv_min_concurrency_vs_dense: 2.0,
         }
     }
 
@@ -602,7 +662,7 @@ mod tests {
     }
 
     #[test]
-    fn kernel_section_is_optional_in_baseline_files() {
+    fn kernel_and_kv_sections_are_optional_in_baseline_files() {
         let j = Json::parse(
             r#"{"run":{"min_tokens_per_sec":10.0},
                 "serve":{"min_tokens_per_sec":2.0,"max_latency_p99_s":300.0,
@@ -612,16 +672,83 @@ mod tests {
         let b = Baselines::from_json(&j).unwrap();
         assert_eq!(b.kernel_min_gflops, 0.0);
         assert_eq!(b.kernel_min_predec_speedup, 0.0);
+        assert_eq!(b.kv_min_prefix_hit_rate, 0.0);
+        assert_eq!(b.kv_min_concurrency_vs_dense, 0.0);
 
         let j = Json::parse(
             r#"{"run":{"min_tokens_per_sec":10.0},
                 "serve":{"min_tokens_per_sec":2.0,"max_latency_p99_s":300.0,
                          "max_ttft_p99_s":300.0},
-                "kernel":{"min_gflops":0.05,"min_predec_speedup":2.0}}"#,
+                "kernel":{"min_gflops":0.05,"min_predec_speedup":2.0},
+                "kv":{"min_prefix_hit_rate":0.25,"min_concurrency_vs_dense":2.0}}"#,
         )
         .unwrap();
         let b = Baselines::from_json(&j).unwrap();
         assert_eq!(b.kernel_min_predec_speedup, 2.0);
+        assert_eq!(b.kv_min_prefix_hit_rate, 0.25);
+        assert_eq!(b.kv_min_concurrency_vs_dense, 2.0);
+    }
+
+    #[test]
+    fn kv_floors_gate_shared_and_capacity_records() {
+        let b = baselines();
+
+        // a healthy shared-prefix record passes
+        let mut s = serve_json();
+        s.set("mode", Json::str("paged_shared_mxfp4"));
+        s.set("prefix_hit_rate", Json::num(0.875));
+        s.set("page_utilization", Json::num(0.9));
+        let mut rep = CheckReport::default();
+        check_one(&s, "ok.json", &b, &mut rep);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+
+        // a cold trie trips the hit-rate floor
+        s.set("prefix_hit_rate", Json::num(0.1));
+        let mut rep = CheckReport::default();
+        check_one(&s, "cold.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("prefix_hit_rate")));
+
+        // ...and the field is REQUIRED on shared legs
+        let mut s = serve_json();
+        s.set("mode", Json::str("paged_shared_mxfp4"));
+        let mut rep = CheckReport::default();
+        check_one(&s, "missing.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("prefix_hit_rate")));
+
+        // kv_capacity passes with the ratio over the floor...
+        let mut c = serve_json();
+        c.set("mode", Json::str("kv_capacity"));
+        c.set("concurrency_vs_dense", Json::num(8.0));
+        let mut rep = CheckReport::default();
+        check_one(&c, "cap.json", &b, &mut rep);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+
+        // ...trips below it...
+        c.set("concurrency_vs_dense", Json::num(1.2));
+        let mut rep = CheckReport::default();
+        check_one(&c, "low.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("concurrency")));
+
+        // ...and requires the field at all
+        let mut c = serve_json();
+        c.set("mode", Json::str("kv_capacity"));
+        let mut rep = CheckReport::default();
+        check_one(&c, "nocap.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("concurrency_vs_dense")));
+
+        // the dense baseline leg is exempt (exact-match mode, no ratio)
+        let mut d = serve_json();
+        d.set("mode", Json::str("kv_capacity_dense"));
+        let mut rep = CheckReport::default();
+        check_one(&d, "dense.json", &b, &mut rep);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+
+        // an out-of-range utilization is a schema violation anywhere
+        let mut u = serve_json();
+        u.set("page_utilization", Json::num(1.5));
+        let mut rep = CheckReport::default();
+        check_one(&u, "util.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("page_utilization")));
     }
 
     #[test]

@@ -40,6 +40,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use anyhow::{anyhow, Result};
 
 use crate::quant::e2m1::byte_decode_lut;
+use crate::quant::e8m0::E8m0;
 use crate::quant::hadamard::BlockHadamard;
 use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode};
 use crate::util::rng::Rng;
@@ -47,6 +48,37 @@ use crate::util::rng::Rng;
 pub use parallel::ParallelBackend;
 pub use scalar::ScalarBackend;
 pub use simd::{Lanes, SimdBackend};
+
+/// One layer's K/V storage for a single fixed-size KV page, borrowed from
+/// the serve-side `KvPool`. Pages hold `page_tokens` token slots of width
+/// `d = n_heads * head_dim` laid out token-major (`[slot, d]`), either
+/// dense f32 or packed MXFP4 (E2M1 nibble pairs + one E8m0 scale per
+/// 32-element group of the flat `[slot, d]` row stream — the same layout
+/// `Mxfp4Tensor` uses for a `[page_tokens, d]` matrix).
+pub enum KvPageData<'a> {
+    F32 {
+        k: &'a [f32],
+        v: &'a [f32],
+    },
+    Mxfp4 {
+        k_codes: &'a [u8],
+        k_scales: &'a [E8m0],
+        v_codes: &'a [u8],
+        v_scales: &'a [E8m0],
+    },
+}
+
+/// A request's KV history for one layer as the attention kernel sees it:
+/// an ordered walk of borrowed pages covering token positions
+/// `0..len` (the last page may be partially filled). `d` is the flat
+/// per-token row width (`n_heads * head_dim`); token position `p` lives
+/// in `pages[p / page_tokens]` at slot `p % page_tokens`.
+pub struct KvPageView<'a> {
+    pub pages: Vec<KvPageData<'a>>,
+    pub page_tokens: usize,
+    pub d: usize,
+    pub len: usize,
+}
 
 /// A compute backend: owns every hot loop the quantized training/serving
 /// paths execute. Implementations must be bit-identical to
@@ -179,6 +211,42 @@ pub trait Backend: Send + Sync {
         let mut probs = vec![0.0f32; groups * sq * sk];
         scalar::attention_groups(q, k, v, groups, sq, sk, hd, pos0, scale, &mut ctx, &mut probs);
         (ctx, probs)
+    }
+
+    /// Causal attention for the paged serving KV cache: `q [sq, d]`
+    /// (token-major, `d = n_heads * hd`, query row `i` at global position
+    /// `pos0 + i`) against a request's paged K/V history covering
+    /// positions `0..view.len` (`view.len >= pos0 + sq`). Returns the
+    /// context `[sq, d]` in the same token-major layout; probs are not
+    /// materialized (serving discards them).
+    ///
+    /// The reference gathers each head's keys/values from the page walk —
+    /// decoding MXFP4 pages with exactly the `decode_mxfp4` LUT+scale
+    /// arithmetic — and then runs the shared scalar
+    /// [`attention_groups`](scalar::attention_groups) kernel per head, so
+    /// every (head, query-row) cell is self-contained. Implementations
+    /// must be bit-identical to the scalar reference at any thread count,
+    /// and equal to [`Backend::attention_causal`] on the same logical K/V
+    /// whenever the pages are f32 — the invariant that makes paged decode
+    /// reproduce dense decode bit-for-bit (`tests/serve_engine.rs`).
+    #[allow(clippy::too_many_arguments)]
+    fn attention_causal_paged(
+        &self,
+        q: &[f32],
+        view: &KvPageView<'_>,
+        n_heads: usize,
+        hd: usize,
+        sq: usize,
+        pos0: usize,
+        scale: f32,
+    ) -> Vec<f32> {
+        assert_eq!(view.d, n_heads * hd, "page row width mismatch");
+        assert_eq!(q.len(), sq * view.d, "q shape");
+        let mut ctx_heads = vec![0.0f32; n_heads * sq * hd];
+        scalar::attention_paged_heads(q, view, 0, n_heads, hd, sq, pos0, scale, &mut ctx_heads);
+        let mut ctx = vec![0.0f32; sq * view.d];
+        scalar::scatter_heads(&ctx_heads, 0, n_heads, hd, sq, view.d, &mut ctx);
+        ctx
     }
 
     /// All-reduce hook for MXFP4-compressed data-parallel gradients: each

@@ -489,6 +489,45 @@ impl Backend for ParallelBackend {
         (ctx, probs)
     }
 
+    fn attention_causal_paged(
+        &self,
+        q: &[f32],
+        view: &crate::kernels::KvPageView<'_>,
+        n_heads: usize,
+        hd: usize,
+        sq: usize,
+        pos0: usize,
+        scale: f32,
+    ) -> Vec<f32> {
+        assert_eq!(view.d, n_heads * hd, "page row width mismatch");
+        assert_eq!(q.len(), sq * view.d, "q shape");
+        let mut ctx_heads = vec![0.0f32; n_heads * sq * hd];
+        let threads = self.pool_size().min(n_heads.max(1));
+        // every (head, query-row) cell is self-contained (the page view is
+        // shared read-only), so partitioning the head axis is unobservable
+        if threads <= 1 || n_heads * sq * view.len * hd < SMALL_WORK {
+            scalar::attention_paged_heads(
+                q, view, 0, n_heads, hd, sq, pos0, scale, &mut ctx_heads,
+            );
+        } else {
+            let per = (n_heads + threads - 1) / threads;
+            std::thread::scope(|s| {
+                for (ci, chunk) in ctx_heads.chunks_mut(per * sq * hd).enumerate() {
+                    let h0 = ci * per;
+                    let nh = chunk.len() / (sq * hd);
+                    s.spawn(move || {
+                        scalar::attention_paged_heads(
+                            q, view, h0, nh, hd, sq, pos0, scale, chunk,
+                        );
+                    });
+                }
+            });
+        }
+        let mut ctx = vec![0.0f32; sq * view.d];
+        scalar::scatter_heads(&ctx_heads, 0, n_heads, hd, sq, view.d, &mut ctx);
+        ctx
+    }
+
     fn reduce_mxfp4(
         &self,
         parts: &[&[f32]],

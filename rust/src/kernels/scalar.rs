@@ -269,6 +269,104 @@ pub(crate) fn attention_groups(
     }
 }
 
+/// Paged-KV causal attention for heads `h0..h0 + nh` — the shared inner
+/// loop of [`Backend::attention_causal_paged`]. For each head it gathers
+/// the request's K/V history `[view.len, hd]` out of the page walk
+/// (decoding MXFP4 pages with the exact `decode_row` arithmetic: LUT pair
+/// per byte, E8m0 scale per flat 32-group) and runs the shared
+/// [`attention_groups`] kernel with `groups = 1`, so every
+/// (head, query-row) cell is self-contained and callers may partition the
+/// head axis freely. `ctx_heads` is head-major `[nh, sq, hd]` and must
+/// come in zeroed.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_paged_heads(
+    q: &[f32],
+    view: &crate::kernels::KvPageView<'_>,
+    h0: usize,
+    nh: usize,
+    hd: usize,
+    sq: usize,
+    pos0: usize,
+    scale: f32,
+    ctx_heads: &mut [f32],
+) {
+    let (d, pt, len) = (view.d, view.page_tokens, view.len);
+    assert_eq!(q.len(), sq * d, "q shape");
+    assert_eq!(ctx_heads.len(), nh * sq * hd, "ctx_heads shape");
+    assert!(pos0 + sq <= len, "query positions run past the paged horizon");
+    let lut = byte_decode_lut();
+    let mut kbuf = vec![0.0f32; len * hd];
+    let mut vbuf = vec![0.0f32; len * hd];
+    let mut qbuf = vec![0.0f32; sq * hd];
+    let mut probs = vec![0.0f32; sq * len];
+    for hi in 0..nh {
+        let h = h0 + hi;
+        // gather this head's K/V history from the page walk
+        for (pi, page) in view.pages.iter().enumerate() {
+            let start = pi * pt;
+            if start >= len {
+                break;
+            }
+            let count = pt.min(len - start);
+            for slot in 0..count {
+                let src = slot * d + h * hd;
+                let dst = (start + slot) * hd;
+                match page {
+                    crate::kernels::KvPageData::F32 { k, v } => {
+                        kbuf[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                        vbuf[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+                    }
+                    crate::kernels::KvPageData::Mxfp4 {
+                        k_codes,
+                        k_scales,
+                        v_codes,
+                        v_scales,
+                    } => {
+                        for bi in 0..hd / 2 {
+                            let flat = src + 2 * bi;
+                            let ks = k_scales[flat / MX_GROUP].value();
+                            let (lo, hi_v) = lut[k_codes[flat / 2] as usize];
+                            kbuf[dst + 2 * bi] = lo * ks;
+                            kbuf[dst + 2 * bi + 1] = hi_v * ks;
+                            let vs = v_scales[flat / MX_GROUP].value();
+                            let (lo, hi_v) = lut[v_codes[flat / 2] as usize];
+                            vbuf[dst + 2 * bi] = lo * vs;
+                            vbuf[dst + 2 * bi + 1] = hi_v * vs;
+                        }
+                    }
+                }
+            }
+        }
+        for i in 0..sq {
+            qbuf[i * hd..(i + 1) * hd].copy_from_slice(&q[i * d + h * hd..i * d + (h + 1) * hd]);
+        }
+        probs.fill(0.0);
+        let ctx = &mut ctx_heads[hi * sq * hd..(hi + 1) * sq * hd];
+        attention_groups(&qbuf, &kbuf, &vbuf, 1, sq, len, hd, pos0, scale, ctx, &mut probs);
+    }
+}
+
+/// Scatter a head-major `[nh, sq, hd]` context block (heads
+/// `h0..h0 + nh`) into the token-major `[sq, d]` output layout.
+pub(crate) fn scatter_heads(
+    ctx_heads: &[f32],
+    h0: usize,
+    nh: usize,
+    hd: usize,
+    sq: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    for hi in 0..nh {
+        let h = h0 + hi;
+        for i in 0..sq {
+            let src = (hi * sq + i) * hd;
+            let dst = i * d + h * hd;
+            out[dst..dst + hd].copy_from_slice(&ctx_heads[src..src + hd]);
+        }
+    }
+}
+
 /// 8-accumulator dot product (breaks the FMA dependency chain so LLVM
 /// auto-vectorizes; the single-accumulator form runs ~8x slower).
 #[inline]

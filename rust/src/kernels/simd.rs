@@ -35,6 +35,12 @@
 //! these kernels (threads × lanes) via the `pub(crate)` lane-dispatched
 //! free functions below; `QUARTET_BACKEND=parallel+simd` selects that
 //! composition.
+//!
+//! The attention hooks (`attention_causal`, `attention_causal_paged`)
+//! inherit the trait defaults: both are built from the shared scalar
+//! per-row kernels (whose dots already auto-vectorize), so the inherited
+//! bodies are bit-identical by construction and the equivalence suite
+//! still races this backend through them.
 
 use crate::kernels::{scalar, Backend};
 use crate::quant::e2m1::{byte_decode_lut, e2m1_encode_rtn, e2m1_encode_sr, E2M1_MAX};

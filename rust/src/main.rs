@@ -11,6 +11,9 @@
 //! repro sweep   --preset reduced --out runs [--max-steps 4000]
 //! repro serve   [--checkpoint ckpt.json] --method quartet [--max-batch 8]
 //!               [--arch mlp|transformer] [--recompute]
+//!               [--kv-page-size 16] [--kv-quant f32|mxfp4]
+//!               [--prefill-chunk 8] [--kv-pool-bytes N]
+//!               [--no-prefix-share] [--shared-prefix-len 32]
 //!               [--requests 64] [--rate 40] [--trace trace.json]
 //!               [--temperature 0.8] [--out runs]   # native, pure Rust
 //! repro serve   --artifact n330k-quartet --requests 256       # PJRT
@@ -70,6 +73,8 @@ fn main() -> Result<()> {
             println!("                   [--workers N --reduce f32|mxfp4 --shards S]  (pure Rust)");
             println!("       repro serve --method f32|mxfp8|quartet [--checkpoint ckpt.json]");
             println!("                   [--arch mlp|transformer] [--recompute]");
+            println!("                   [--kv-page-size 16 --kv-quant f32|mxfp4]");
+            println!("                   [--prefill-chunk C --kv-pool-bytes N --no-prefix-share]");
             println!("                   [--trace t.json | --requests N --rate r]  (pure Rust)");
             println!(
                 "global: --backend scalar|parallel|simd|parallel+simd (or QUARTET_BACKEND env)"
@@ -339,8 +344,8 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
 /// (`--trace`) or a synthetic Poisson workload (`--requests`/`--rate`).
 fn cmd_serve_native(args: &mut Args) -> Result<()> {
     use quartet::serve::{
-        load_trace, synth_requests, PackedWeightCache, Sampling, ServeEngine, ServeMethod,
-        ServeRecord, SynthOptions,
+        load_trace, synth_requests, KvQuant, KvServeOptions, PackedWeightCache, Sampling,
+        ServeEngine, ServeMethod, ServeRecord, SynthOptions,
     };
     use quartet::train::{
         MlpLm, ModelConfig, NativeModel, TrainMethod, TransformerConfig, TransformerLm,
@@ -360,6 +365,16 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
     let stop_token = args.parse_opt::<i32>("stop-token")?;
     let steps_cap = args.parse_opt::<usize>("steps")?;
     let recompute = args.flag("recompute");
+    // paged-KV knobs (transformer, cached mode)
+    let kv_page_size = args.parse_or("kv-page-size", 16usize)?;
+    if kv_page_size == 0 {
+        bail!("--kv-page-size must be positive");
+    }
+    let kv_quant = KvQuant::parse(&args.str_or("kv-quant", "f32"))?;
+    let prefill_chunk = args.parse_or("prefill-chunk", 0usize)?;
+    let kv_pool_bytes = args.parse_or("kv-pool-bytes", 0usize)?;
+    let no_prefix_share = args.flag("no-prefix-share");
+    let shared_prefix_len = args.parse_or("shared-prefix-len", 0usize)?;
     let ckpt = args.get("checkpoint").map(PathBuf::from);
     let trace_path = args.get("trace").map(PathBuf::from);
     let out = args.get("out").map(PathBuf::from);
@@ -405,6 +420,13 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
     if recompute {
         eng.set_recompute(true);
     }
+    eng.set_kv_options(KvServeOptions {
+        page_tokens: kv_page_size,
+        quant: kv_quant,
+        prefill_chunk,
+        max_pool_bytes: kv_pool_bytes,
+        share: !no_prefix_share,
+    });
 
     let reqs = match &trace_path {
         Some(p) => load_trace(p)?,
@@ -417,6 +439,7 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
             rate,
             stop_token,
             seed,
+            shared_prefix_len,
         }),
     };
     let submitted = reqs.len();
@@ -440,6 +463,17 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
         report.decode_steps,
         report.kv_bytes_peak
     );
+    if report.kv_pages_peak > 0 {
+        println!(
+            "paged KV [{} page={kv_page_size}]: peak {} pages, utilization {:.2}, \
+             prefix hit rate {:.2}, max concurrent {}",
+            report.kv_quant,
+            report.kv_pages_peak,
+            report.page_utilization,
+            report.prefix_hit_rate,
+            report.max_concurrent
+        );
+    }
     let [l50, l90, l99] = report.latency_percentiles();
     let [t50, t90, t99] = report.ttft_percentiles();
     println!(

@@ -26,6 +26,20 @@
 //!   O(L²) baseline the `fig7_transformer_decode` bench races). Both
 //!   paths run the identical per-row kernels, so their token streams are
 //!   bit-identical — pinned in `tests/serve_engine.rs`.
+//!
+//! Transformer KV storage comes in two shapes. The original *dense* form
+//! (`[n_heads, cap, head_dim]` buffers owned by the state) remains the
+//! recompute scratch and the direct `new_state`/`decode_forward` API; the
+//! engine's serving path now uses the *paged* form
+//! ([`crate::serve::paged::KvPool`] pages addressed through a per-request
+//! [`crate::serve::paged::BlockTable`]), built by
+//! [`PackedWeightCache::new_state_paged`] and advanced by
+//! [`PackedWeightCache::decode_forward_paged`] — which also interleaves
+//! chunked prefill with decode. Both forms flow through the one
+//! `tf_forward`, and the optional MXFP4 KV mode quantize-dequantizes each
+//! fresh (K, V) row with deterministic RTN in *both* forms, so paged,
+//! dense and recompute token streams stay bit-identical per
+//! `tests/serve_engine.rs`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -33,8 +47,11 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::kernels::Backend;
+use crate::quant::e2m1::byte_decode_lut;
+use crate::quant::e8m0::E8m0;
 use crate::quant::fp8::mxfp8_rtn;
 use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::serve::paged::{BlockTable, KvPool, KvQuant};
 use crate::train::model::{relu, write_pair_features};
 use crate::train::transformer::{add_assign, rmsnorm_rows, rope_row, silu};
 use crate::train::{MlpLm, NativeModel, TransformerLm};
@@ -207,15 +224,23 @@ impl LayerKv {
     }
 }
 
-/// Transformer decode state: the token history plus the per-layer KV
-/// cache. Invariant between steps: `pos == history.len() - 1` — positions
-/// `0..pos` are in the cache, `history[pos]` is the token the next decode
-/// step consumes.
+/// Transformer decode state: the token history plus the KV storage.
+/// Invariant between steps: `pos == history.len() - 1` — positions
+/// `0..pos` are cached (dense) or stored-or-pending (paged),
+/// `history[pos]` is the token the next decode step consumes.
+///
+/// Exactly one storage form is populated: dense states own `kv` buffers
+/// (`cap > 0`), paged states carry a `table` into the engine's `KvPool`
+/// and track `stored` — how many leading positions already hold K/V rows
+/// on pages. `stored < pos` means prefill is still in flight (chunked
+/// prefill); a decode step only fires once `stored == pos`.
 pub struct TfDecodeState {
     pub history: Vec<i32>,
     pub pos: usize,
     pub kv: Vec<LayerKv>,
     pub cap: usize,
+    pub table: Option<BlockTable>,
+    pub stored: usize,
 }
 
 /// Per-request decode state — architecture-specific; created by
@@ -241,25 +266,55 @@ impl DecodeState {
         }
     }
 
-    /// Bytes of KV memory this request holds (0 for the MLP and for
-    /// recompute-mode states, which keep no cache by construction).
+    /// Bytes of KV memory this request holds *privately*: dense buffers
+    /// for dense states, block-table metadata for paged states (their
+    /// page payloads are pool-owned and counted via
+    /// `KvPool::bytes_in_use`, since shared pages must not be counted
+    /// once per request). 0 for the MLP and for recompute-mode states,
+    /// which keep no cache by construction.
     pub fn kv_bytes(&self) -> usize {
         match self {
             DecodeState::Mlp { .. } => 0,
             DecodeState::Transformer(ts) => {
-                ts.kv.iter().map(|l| (l.k.len() + l.v.len()) * 4).sum()
+                let dense: usize = ts.kv.iter().map(|l| (l.k.len() + l.v.len()) * 4).sum();
+                dense + ts.table.as_ref().map_or(0, |t| t.meta_bytes())
             }
+        }
+    }
+
+    /// Detach the paged block table (eviction: the engine releases its
+    /// pages back to the pool). `None` for dense/MLP states.
+    pub fn take_table(&mut self) -> Option<BlockTable> {
+        match self {
+            DecodeState::Mlp { .. } => None,
+            DecodeState::Transformer(ts) => ts.table.take(),
         }
     }
 }
 
+/// Where one forward segment's fresh K/V rows land and where attention
+/// reads its prefix from.
+enum SegKv<'a> {
+    /// State- or scratch-owned dense buffers (`[n_heads, cap, hd]` per
+    /// layer). `quant` = Mxfp4 quantize-dequantizes each fresh row in
+    /// place before storing — the recompute twin of MXFP4 pages.
+    Dense {
+        kv: &'a mut Vec<LayerKv>,
+        cap: usize,
+        quant: KvQuant,
+    },
+    /// Pool pages addressed through the request's block table (the pool
+    /// itself travels separately through `tf_forward`); page storage
+    /// format is the pool's.
+    Paged { table: &'a BlockTable },
+}
+
 /// One forward segment: `n` fresh positions starting at `pos0`, appended
-/// into (and attended against) the segment's own KV buffers.
+/// into (and attended against) the segment's own KV storage.
 struct TfSeg<'a> {
-    kv: &'a mut Vec<LayerKv>,
+    kv: SegKv<'a>,
     pos0: usize,
     n: usize,
-    cap: usize,
 }
 
 /// Deploy-once weight store for a native checkpoint: embeddings/norms in
@@ -524,18 +579,85 @@ impl PackedWeightCache {
                         .collect();
                     (kv, cap)
                 };
-                let mut ts = Box::new(TfDecodeState { history, pos: len - 1, kv, cap });
+                let mut ts = Box::new(TfDecodeState {
+                    history,
+                    pos: len - 1,
+                    kv,
+                    cap,
+                    table: None,
+                    stored: len - 1,
+                });
                 if !recompute && len > 1 {
                     // prefill: one batched pass over the prompt prefix
                     let n = len - 1;
                     let cap0 = ts.cap;
                     let x = self.tf_gather(tf, &ts.history[..n]);
-                    let mut segs = vec![TfSeg { kv: &mut ts.kv, pos0: 0, n, cap: cap0 }];
-                    let _ = self.tf_forward(tf, x, &mut segs, be);
+                    let mut segs = vec![TfSeg {
+                        kv: SegKv::Dense { kv: &mut ts.kv, cap: cap0, quant: KvQuant::F32 },
+                        pos0: 0,
+                        n,
+                    }];
+                    let _ = self.tf_forward(tf, x, &mut segs, be, None);
                 }
                 DecodeState::Transformer(ts)
             }
         }
+    }
+
+    /// Transformer shape `(n_blocks, n_heads, head_dim)` — what the
+    /// engine needs to size a `KvPool`; `None` for MLP caches (stateless
+    /// decode, nothing to page).
+    pub fn transformer_dims(&self) -> Option<(usize, usize, usize)> {
+        match &self.arch {
+            PreparedArch::Mlp { .. } => None,
+            PreparedArch::Transformer(tf) => Some((tf.blocks.len(), tf.n_heads, tf.head_dim)),
+        }
+    }
+
+    /// Build a *paged* transformer decode state: the caller (the engine's
+    /// admission path) has already reserved `table` — every page the
+    /// request can ever touch, `ceil((len + max_new_tokens)/page_tokens)`
+    /// of them, with `table.shared_tokens` leading positions arriving
+    /// pre-filled from the prefix tree. With `prefill_chunk == 0` the
+    /// unshared prompt prefix is prefilled here in one batched pass (the
+    /// pre-paging admission behaviour); with a nonzero chunk, prefill is
+    /// deferred to [`PackedWeightCache::decode_forward_paged`] steps.
+    pub fn new_state_paged(
+        &self,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        be: &dyn Backend,
+        pool: &mut KvPool,
+        table: BlockTable,
+        prefill_chunk: usize,
+    ) -> DecodeState {
+        let tf = match &self.arch {
+            PreparedArch::Transformer(tf) => tf,
+            PreparedArch::Mlp { .. } => panic!("paged states are transformer-only"),
+        };
+        let history: Vec<i32> = if prompt.is_empty() { vec![0] } else { prompt.to_vec() };
+        let len = history.len();
+        let pt = pool.config().page_tokens;
+        let need = (len + max_new_tokens + pt - 1) / pt;
+        assert!(table.pages.len() >= need, "block table under-provisioned");
+        assert!(table.shared_tokens <= len - 1, "shared prefix exceeds the prompt");
+        let mut ts = Box::new(TfDecodeState {
+            history,
+            pos: len - 1,
+            kv: Vec::new(),
+            cap: 0,
+            stored: table.shared_tokens,
+            table: Some(table),
+        });
+        if prefill_chunk == 0 && ts.stored < len - 1 {
+            let (pos0, n) = (ts.stored, len - 1 - ts.stored);
+            let x = self.tf_gather(tf, &ts.history[pos0..pos0 + n]);
+            let table = ts.table.as_ref().unwrap();
+            let mut segs = vec![TfSeg { kv: SegKv::Paged { table }, pos0, n }];
+            let _ = self.tf_forward(tf, x, &mut segs, be, Some(pool));
+            ts.stored = len - 1;
+        }
+        DecodeState::Transformer(ts)
     }
 
     /// One batched decode forward over every state: returns `[n, vocab]`
@@ -548,6 +670,21 @@ impl PackedWeightCache {
         states: &mut [&mut DecodeState],
         be: &dyn Backend,
         recompute: bool,
+    ) -> Vec<f32> {
+        self.decode_forward_quant(states, be, recompute, KvQuant::F32)
+    }
+
+    /// [`PackedWeightCache::decode_forward`] with an explicit KV storage
+    /// format for the dense/recompute paths: `KvQuant::Mxfp4`
+    /// quantize-dequantizes every fresh (K, V) row before it is stored or
+    /// attended — the dense twin of MXFP4 pages, which is what makes the
+    /// recompute baseline bit-comparable to `--kv-quant mxfp4` serving.
+    pub fn decode_forward_quant(
+        &self,
+        states: &mut [&mut DecodeState],
+        be: &dyn Backend,
+        recompute: bool,
+        kv_quant: KvQuant,
     ) -> Vec<f32> {
         match &self.arch {
             PreparedArch::Mlp { .. } => {
@@ -566,12 +703,96 @@ impl PackedWeightCache {
             }
             PreparedArch::Transformer(tf) => {
                 if recompute {
-                    self.tf_decode_recompute(tf, states, be)
+                    self.tf_decode_recompute(tf, states, be, kv_quant)
                 } else {
-                    self.tf_decode_cached(tf, states, be)
+                    self.tf_decode_cached(tf, states, be, kv_quant)
                 }
             }
         }
+    }
+
+    /// One engine step over *paged* states: every state contributes one
+    /// segment to a single batched forward — a decode segment (its newest
+    /// token) once its prompt is fully stored, otherwise the next prefill
+    /// chunk (`min(prefill_chunk, remaining)` positions; `0` = all
+    /// remaining). Chunked prefill thus interleaves with other requests'
+    /// decode steps inside one forward instead of stalling them.
+    ///
+    /// Returns `(logits, decoded)`: `logits` holds one `[vocab]` row per
+    /// state whose `decoded` flag is true (prefill segments produce no
+    /// logits — their row budget went to K/V building), in state order.
+    pub fn decode_forward_paged(
+        &self,
+        states: &mut [&mut DecodeState],
+        be: &dyn Backend,
+        pool: &mut KvPool,
+        prefill_chunk: usize,
+    ) -> (Vec<f32>, Vec<bool>) {
+        let tf = match &self.arch {
+            PreparedArch::Transformer(tf) => tf,
+            PreparedArch::Mlp { .. } => panic!("paged decode is transformer-only"),
+        };
+        // plan: (pos0, n, is_decode) per state, embeddings gathered along
+        let mut x = Vec::new();
+        let mut plan: Vec<(usize, usize, bool)> = Vec::with_capacity(states.len());
+        for st in states.iter() {
+            let ts = match &**st {
+                DecodeState::Transformer(ts) => ts,
+                DecodeState::Mlp { .. } => panic!("mlp state handed to a transformer cache"),
+            };
+            assert_eq!(ts.pos + 1, ts.history.len(), "decode state out of sync");
+            assert!(ts.table.is_some(), "paged decode on a table-less state");
+            if ts.stored < ts.pos {
+                let remaining = ts.pos - ts.stored;
+                let n = if prefill_chunk == 0 { remaining } else { prefill_chunk.min(remaining) };
+                x.extend_from_slice(&self.tf_gather(tf, &ts.history[ts.stored..ts.stored + n]));
+                plan.push((ts.stored, n, false));
+            } else {
+                x.extend_from_slice(&self.tf_gather(tf, &ts.history[ts.pos..ts.pos + 1]));
+                plan.push((ts.pos, 1, true));
+            }
+        }
+        let mut segs: Vec<TfSeg<'_>> = states
+            .iter()
+            .zip(&plan)
+            .map(|(st, &(pos0, n, _))| {
+                let ts = match &**st {
+                    DecodeState::Transformer(ts) => ts,
+                    DecodeState::Mlp { .. } => unreachable!(),
+                };
+                TfSeg { kv: SegKv::Paged { table: ts.table.as_ref().unwrap() }, pos0, n }
+            })
+            .collect();
+        let hn = self.tf_forward(tf, x, &mut segs, be, Some(pool));
+        drop(segs);
+        // head over the decode rows only, in state order
+        let d = tf.d_model;
+        let mut dec_rows = Vec::new();
+        let mut r0 = 0usize;
+        for &(_, n, is_decode) in &plan {
+            if is_decode {
+                dec_rows.extend_from_slice(&hn[r0 * d..(r0 + 1) * d]);
+            }
+            r0 += n;
+        }
+        let n_dec = dec_rows.len() / d;
+        let logits = if n_dec > 0 {
+            let mut rng = Rng::new(0);
+            tf.head.apply(dec_rows, n_dec, be, &mut rng)
+        } else {
+            Vec::new()
+        };
+        for (st, &(_, n, is_decode)) in states.iter_mut().zip(&plan) {
+            if let DecodeState::Transformer(ts) = &mut **st {
+                if is_decode {
+                    ts.stored = ts.pos + 1;
+                    ts.pos += 1;
+                } else {
+                    ts.stored += n;
+                }
+            }
+        }
+        (logits, plan.iter().map(|p| p.2).collect())
     }
 
     fn tf_gather(&self, tf: &PreparedTransformer, tokens: &[i32]) -> Vec<f32> {
@@ -592,6 +813,7 @@ impl PackedWeightCache {
         tf: &PreparedTransformer,
         states: &mut [&mut DecodeState],
         be: &dyn Backend,
+        kv_quant: KvQuant,
     ) -> Vec<f32> {
         let d = tf.d_model;
         let n = states.len();
@@ -606,15 +828,20 @@ impl PackedWeightCache {
             let (pos0, cap) = (ts.pos, ts.cap);
             let tok = ts.history[pos0] as usize % self.vocab;
             x[i * d..(i + 1) * d].copy_from_slice(&tf.tok_emb[tok * d..(tok + 1) * d]);
-            segs.push(TfSeg { kv: &mut ts.kv, pos0, n: 1, cap });
+            segs.push(TfSeg {
+                kv: SegKv::Dense { kv: &mut ts.kv, cap, quant: kv_quant },
+                pos0,
+                n: 1,
+            });
         }
-        let hn = self.tf_forward(tf, x, &mut segs, be);
+        let hn = self.tf_forward(tf, x, &mut segs, be, None);
         // tied head under the serving method (weights staged at build)
         let mut rng = Rng::new(0);
         let logits = tf.head.apply(hn, n, be, &mut rng);
         for st in states.iter_mut() {
             if let DecodeState::Transformer(ts) = &mut **st {
                 ts.pos += 1;
+                ts.stored = ts.pos;
             }
         }
         logits
@@ -629,6 +856,7 @@ impl PackedWeightCache {
         tf: &PreparedTransformer,
         states: &mut [&mut DecodeState],
         be: &dyn Backend,
+        kv_quant: KvQuant,
     ) -> Vec<f32> {
         let d = tf.d_model;
         let mut logits = Vec::with_capacity(states.len() * self.vocab);
@@ -643,12 +871,17 @@ impl PackedWeightCache {
             let mut scratch: Vec<LayerKv> = (0..tf.blocks.len())
                 .map(|_| LayerKv::zeros(tf.n_heads, len, tf.head_dim))
                 .collect();
-            let mut segs = vec![TfSeg { kv: &mut scratch, pos0: 0, n: len, cap: len }];
-            let hn = self.tf_forward(tf, x, &mut segs, be);
+            let mut segs = vec![TfSeg {
+                kv: SegKv::Dense { kv: &mut scratch, cap: len, quant: kv_quant },
+                pos0: 0,
+                n: len,
+            }];
+            let hn = self.tf_forward(tf, x, &mut segs, be, None);
             let last = hn[(len - 1) * d..len * d].to_vec();
             let mut rng = Rng::new(0);
             logits.extend(tf.head.apply(last, 1, be, &mut rng));
             ts.pos += 1;
+            ts.stored = ts.pos;
         }
         logits
     }
@@ -656,16 +889,19 @@ impl PackedWeightCache {
     /// Shared transformer forward: `x` holds the embedding rows of every
     /// segment's fresh positions, concatenated. Per block, the seven
     /// matmuls run ONCE over all rows; per segment, the fresh K/V rows
-    /// are appended into the segment's own cache and attention reads the
-    /// contiguous per-head prefix. Returns the final-normed hidden rows.
-    /// Prefill, cached decode and the recompute baseline all flow through
-    /// this one function, which is why their numerics cannot diverge.
+    /// are appended into the segment's own storage (dense buffers or pool
+    /// pages via the block table) and attention reads the stored prefix.
+    /// Returns the final-normed hidden rows. Prefill (one-shot and
+    /// chunked), cached decode, paged decode and the recompute baseline
+    /// all flow through this one function, which is why their numerics
+    /// cannot diverge.
     fn tf_forward(
         &self,
         tf: &PreparedTransformer,
         x: Vec<f32>,
         segs: &mut [TfSeg<'_>],
         be: &dyn Backend,
+        mut pool: Option<&mut KvPool>,
     ) -> Vec<f32> {
         let d = tf.d_model;
         let h = tf.n_heads;
@@ -695,45 +931,86 @@ impl PackedWeightCache {
             let mut r0 = 0usize;
             for seg in segs.iter_mut() {
                 let sk = seg.pos0 + seg.n;
-                assert!(sk <= seg.cap, "KV capacity exceeded ({sk} > {})", seg.cap);
-                let lkv = &mut seg.kv[li];
-                for i in 0..seg.n {
-                    let p = seg.pos0 + i;
-                    let r = r0 + i;
-                    for hh in 0..h {
-                        let src = r * d + hh * hd;
-                        let dst = (hh * seg.cap + p) * hd;
-                        lkv.k[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
-                        lkv.v[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+                match &mut seg.kv {
+                    SegKv::Dense { kv, cap, quant } => {
+                        assert!(sk <= *cap, "KV capacity exceeded ({sk} > {})", *cap);
+                        let lkv = &mut kv[li];
+                        for i in 0..seg.n {
+                            let p = seg.pos0 + i;
+                            let r = r0 + i;
+                            // `--kv-quant mxfp4` on the dense path stores
+                            // (and therefore attends over) the same
+                            // dec(quantize(row)) values the paged pool
+                            // holds, keeping recompute the bit-exact twin
+                            // of paged decode.
+                            if *quant == KvQuant::Mxfp4 {
+                                qdq_row_mxfp4(&mut k[r * d..(r + 1) * d]);
+                                qdq_row_mxfp4(&mut v[r * d..(r + 1) * d]);
+                            }
+                            for hh in 0..h {
+                                let src = r * d + hh * hd;
+                                let dst = (hh * *cap + p) * hd;
+                                lkv.k[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                                lkv.v[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+                            }
+                        }
+                        // one hook call per (segment, head): the per-head KV
+                        // prefix is a contiguous slice at stride `cap`, so no
+                        // packing copy is needed. Serving cost is dominated by
+                        // the quantized linears (O(d²) per row vs O(ctx·hd)
+                        // here), so the groups=1 calls staying on the scalar
+                        // path is a deliberate trade against O(ctx) copies.
+                        let mut qh = vec![0.0f32; seg.n * hd];
+                        for hh in 0..h {
+                            for i in 0..seg.n {
+                                let src = (r0 + i) * d + hh * hd;
+                                qh[i * hd..(i + 1) * hd].copy_from_slice(&q[src..src + hd]);
+                            }
+                            let koff = hh * *cap * hd;
+                            let (ctxh, _) = be.attention_causal(
+                                &qh,
+                                &lkv.k[koff..koff + sk * hd],
+                                &lkv.v[koff..koff + sk * hd],
+                                1,
+                                seg.n,
+                                sk,
+                                hd,
+                                seg.pos0,
+                                scale,
+                            );
+                            for i in 0..seg.n {
+                                let dst = (r0 + i) * d + hh * hd;
+                                ctx[dst..dst + hd]
+                                    .copy_from_slice(&ctxh[i * hd..(i + 1) * hd]);
+                            }
+                        }
                     }
-                }
-                // one hook call per (segment, head): the per-head KV
-                // prefix is a contiguous slice at stride `cap`, so no
-                // packing copy is needed. Serving cost is dominated by
-                // the quantized linears (O(d²) per row vs O(ctx·hd)
-                // here), so the groups=1 calls staying on the scalar
-                // path is a deliberate trade against O(ctx) copies.
-                let mut qh = vec![0.0f32; seg.n * hd];
-                for hh in 0..h {
-                    for i in 0..seg.n {
-                        let src = (r0 + i) * d + hh * hd;
-                        qh[i * hd..(i + 1) * hd].copy_from_slice(&q[src..src + hd]);
-                    }
-                    let koff = hh * seg.cap * hd;
-                    let (ctxh, _) = be.attention_causal(
-                        &qh,
-                        &lkv.k[koff..koff + sk * hd],
-                        &lkv.v[koff..koff + sk * hd],
-                        1,
-                        seg.n,
-                        sk,
-                        hd,
-                        seg.pos0,
-                        scale,
-                    );
-                    for i in 0..seg.n {
-                        let dst = (r0 + i) * d + hh * hd;
-                        ctx[dst..dst + hd].copy_from_slice(&ctxh[i * hd..(i + 1) * hd]);
+                    SegKv::Paged { table } => {
+                        let pool_ref =
+                            pool.as_deref_mut().expect("paged segment without a pool");
+                        let pt = pool_ref.config().page_tokens;
+                        for i in 0..seg.n {
+                            let p = seg.pos0 + i;
+                            let r = r0 + i;
+                            pool_ref.write_row(
+                                table.pages[p / pt],
+                                li,
+                                p % pt,
+                                &k[r * d..(r + 1) * d],
+                                &v[r * d..(r + 1) * d],
+                            );
+                        }
+                        let view = pool_ref.layer_view(table, li, sk);
+                        let ctxh = be.attention_causal_paged(
+                            &q[r0 * d..(r0 + seg.n) * d],
+                            &view,
+                            h,
+                            hd,
+                            seg.n,
+                            seg.pos0,
+                            scale,
+                        );
+                        ctx[r0 * d..(r0 + seg.n) * d].copy_from_slice(&ctxh);
                     }
                 }
                 r0 += seg.n;
@@ -751,6 +1028,31 @@ impl PackedWeightCache {
         let (hn, _) = rmsnorm_rows(&x, &tf.final_norm, d);
         hn
     }
+}
+
+/// Quantize-dequantize one full-width `[d]` row through deterministic RTN
+/// MXFP4 in place — the exact arithmetic [`KvPool::write_row`] applies when
+/// storing and [`crate::kernels::KvPageData::Mxfp4`] pages apply when read,
+/// so dense/recompute states under `--kv-quant mxfp4` see the identical
+/// values the paged pool serves. Requires `d % MX_GROUP == 0` (the row is
+/// quantized at model width, not per head).
+fn qdq_row_mxfp4(row: &mut [f32]) {
+    let d = row.len();
+    debug_assert_eq!(d % MX_GROUP, 0, "row width must be a multiple of 32");
+    let mut codes = vec![0u8; d / 2];
+    let mut scales = vec![E8m0(0); d / MX_GROUP];
+    crate::kernels::scalar::quantize_rows(
+        &*row,
+        1,
+        d,
+        QuantMode::Rtn,
+        &mut Rng::new(0),
+        &mut codes,
+        &mut scales,
+        None,
+    );
+    let t = Mxfp4Tensor { rows: 1, cols: d, codes, scales, mask: None };
+    crate::kernels::scalar::decode_row(&t, 0, &byte_decode_lut(), row);
 }
 
 #[cfg(test)]
@@ -900,6 +1202,85 @@ mod tests {
             }
         }
         assert_eq!(la, lb, "prefill and stepwise decode disagree");
+    }
+
+    #[test]
+    fn paged_decode_matches_dense_and_recompute() {
+        use crate::serve::paged::{KvPoolConfig, KvServeOptions};
+        let m = tf_model();
+        let be = ScalarBackend;
+        let cache = PackedWeightCache::build_transformer(&m, ServeMethod::Quartet, &be);
+        let prompt = [7i32, 11, 3];
+        let max_new = 4;
+        let greedy = |l: &[f32]| -> i32 {
+            let mut best = 0usize;
+            for (i, &x) in l.iter().enumerate() {
+                if x > l[best] {
+                    best = i;
+                }
+            }
+            best as i32
+        };
+        // references: dense cached (f32) and recompute-with-qdq (mxfp4)
+        let mut refs = Vec::new();
+        for quant in [KvQuant::F32, KvQuant::Mxfp4] {
+            let recompute = quant == KvQuant::Mxfp4;
+            let mut s = cache.new_state(&prompt, max_new, &be, recompute);
+            let mut toks = Vec::new();
+            for _ in 0..max_new {
+                let logits = {
+                    let mut states = vec![&mut s];
+                    cache.decode_forward_quant(&mut states, &be, recompute, quant)
+                };
+                let t = greedy(&logits);
+                toks.push(t);
+                s.push_token(t);
+            }
+            refs.push((quant, toks));
+        }
+        // every (quant, prefill_chunk) paged variant must match its twin
+        for (quant, want) in &refs {
+            for prefill_chunk in [0usize, 2] {
+                let mut pool = KvPool::new(KvPoolConfig {
+                    page_tokens: 4,
+                    n_layers: 2,
+                    n_heads: 2,
+                    head_dim: 16,
+                    quant: *quant,
+                    max_bytes: 0,
+                });
+                let n_pages = (prompt.len() + max_new + 3) / 4;
+                let pages: Vec<u32> =
+                    (0..n_pages).map(|_| pool.alloc().unwrap()).collect();
+                let table = BlockTable { pages, shared_tokens: 0 };
+                let mut st = cache
+                    .new_state_paged(&prompt, max_new, &be, &mut pool, table, prefill_chunk);
+                let mut got = Vec::new();
+                while got.len() < max_new {
+                    let (logits, decoded) = {
+                        let mut states = vec![&mut st];
+                        cache.decode_forward_paged(&mut states, &be, &mut pool, prefill_chunk)
+                    };
+                    if decoded[0] {
+                        let t = greedy(&logits);
+                        got.push(t);
+                        st.push_token(t);
+                    }
+                }
+                assert_eq!(
+                    &got, want,
+                    "paged stream diverged (quant {}, chunk {prefill_chunk})",
+                    quant.name()
+                );
+                let table = st.take_table().unwrap();
+                pool.release(&table);
+                assert_eq!(pool.pages_in_use(), 0);
+            }
+        }
+        // defaults stay aligned with the CLI docs
+        let opts = KvServeOptions::default();
+        assert_eq!((opts.page_tokens, opts.prefill_chunk), (16, 0));
+        assert!(opts.share);
     }
 
     #[test]

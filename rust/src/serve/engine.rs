@@ -13,13 +13,27 @@
 //! number of active rows while the per-step fixed overheads — thread-scope
 //! setup, weight streaming — are amortized across the whole batch.
 //!
+//! Transformer KV memory is paged: active requests store K/V rows on
+//! fixed-size pages of one engine-owned [`KvPool`], addressed through
+//! per-request block tables. Admission allocates a request's whole table
+//! up front (so a mid-stream request can never stall on pages) and is
+//! gated on the pool's byte budget — when pages run out, the head of the
+//! waiting queue blocks until eviction returns some. Finished prompt
+//! prefixes are published into a token-keyed [`PrefixTree`]; later
+//! requests sharing a prompt prefix re-reference those pages instead of
+//! recomputing them (refcounted, copy-free, evicted under pressure).
+//! Long prompts can be prefilled in fixed-size chunks interleaved with
+//! decode steps (`prefill_chunk`), and pages can store packed MXFP4
+//! (`KvQuant::Mxfp4`) at ~7.5× less memory.
+//!
 //! Determinism contract: the forward is bit-identical across backends and
 //! thread counts (deterministic RTN path + decode-once GEMM), greedy
 //! readout is the NaN-safe argmax, and sampled decode draws from a
 //! per-request RNG stream derived from `(seed, request id)` — so the full
 //! token stream of every request is a pure function of (checkpoint,
-//! method, seed), independent of backend, thread count and batch
-//! composition. `tests/serve_engine.rs` pins all three independences.
+//! method, seed), independent of backend, thread count, batch
+//! composition, page size, prefix sharing and prefill chunking.
+//! `tests/serve_engine.rs` pins all of these independences.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -30,6 +44,7 @@ use anyhow::{bail, Result};
 use crate::kernels::Backend;
 use crate::serve::argmax_logit;
 use crate::serve::cache::{DecodeState, PackedWeightCache};
+use crate::serve::paged::{BlockTable, KvPool, KvPoolConfig, KvServeOptions, PrefixTree};
 use crate::util::rng::Rng;
 use crate::util::stats::percentile;
 
@@ -119,6 +134,12 @@ struct Slot {
     rng: Rng,
     admitted_s: f64,
     first_token_s: Option<f64>,
+    /// positions the prompt prefill must cover (`history.len() - 1`);
+    /// `stored >= prefill_len` means the prefix is decodable and its full
+    /// pages are publishable into the prefix tree
+    prefill_len: usize,
+    /// this slot's prompt prefix has been offered to the prefix tree
+    tree_inserted: bool,
 }
 
 /// Continuous-batching autoregressive engine over a shared weight cache.
@@ -136,11 +157,24 @@ pub struct ServeEngine {
     /// history (the O(context²) baseline fig7 races; MLP decode is
     /// stateless, so there the flag changes nothing)
     recompute: bool,
+    /// paged-KV knobs (page size, storage format, prefill chunking,
+    /// prefix sharing, pool byte budget)
+    kv_opts: KvServeOptions,
+    /// the engine-owned page pool — built lazily at the first transformer
+    /// admission in cached mode, `None` for MLP and recompute engines
+    pool: Option<KvPool>,
+    /// token-keyed prefix index over published prompt pages
+    tree: PrefixTree,
     clock_s: f64,
     busy_s: f64,
     steps: usize,
     generated_tokens: usize,
     kv_bytes_peak: usize,
+    kv_pages_peak: usize,
+    page_util_at_peak: f64,
+    prefix_page_hits: usize,
+    prefix_page_lookups: usize,
+    max_concurrent: usize,
 }
 
 impl ServeEngine {
@@ -160,11 +194,19 @@ impl ServeEngine {
             waiting: VecDeque::new(),
             active: Vec::new(),
             recompute: false,
+            kv_opts: KvServeOptions::default(),
+            pool: None,
+            tree: PrefixTree::new(),
             clock_s: 0.0,
             busy_s: 0.0,
             steps: 0,
             generated_tokens: 0,
             kv_bytes_peak: 0,
+            kv_pages_peak: 0,
+            page_util_at_peak: 0.0,
+            prefix_page_hits: 0,
+            prefix_page_lookups: 0,
+            max_concurrent: 0,
         }
     }
 
@@ -178,9 +220,41 @@ impl ServeEngine {
         self.recompute = recompute;
     }
 
-    /// KV memory currently held by active requests.
+    /// Configure the paged-KV store (page size, storage format, prefill
+    /// chunking, prefix sharing, pool byte budget). Call before the first
+    /// submit: the pool is built at the first admission.
+    pub fn set_kv_options(&mut self, opts: KvServeOptions) {
+        assert!(
+            self.active.is_empty() && self.waiting.is_empty() && self.future.is_empty(),
+            "set_kv_options must run before any request is submitted"
+        );
+        assert!(self.pool.is_none(), "set_kv_options must run before the pool is built");
+        assert!(opts.page_tokens > 0, "page_tokens must be positive");
+        self.kv_opts = opts;
+    }
+
+    pub fn kv_options(&self) -> KvServeOptions {
+        self.kv_opts
+    }
+
+    /// The engine's page pool, if one has been built (transformer, cached
+    /// mode, at least one admission).
+    pub fn kv_pool(&self) -> Option<&KvPool> {
+        self.pool.as_ref()
+    }
+
+    /// The prefix-sharing index (empty until a prompt prefix spanning at
+    /// least one full page finishes prefill with sharing enabled).
+    pub fn prefix_tree(&self) -> &PrefixTree {
+        &self.tree
+    }
+
+    /// KV memory currently resident: pool pages (request-held and
+    /// tree-held) plus per-request metadata (block tables; dense buffers
+    /// when states are built through the direct dense API).
     pub fn kv_bytes_active(&self) -> usize {
-        self.active.iter().map(|s| s.state.kv_bytes()).sum()
+        self.active.iter().map(|s| s.state.kv_bytes()).sum::<usize>()
+            + self.pool.as_ref().map_or(0, |p| p.bytes_in_use())
     }
 
     /// High-water mark of KV memory across the engine's lifetime.
@@ -245,6 +319,14 @@ impl ServeEngine {
 
     /// Move matured arrivals into the waiting queue and fill free slots.
     /// Returns completions produced *at admission* (zero-budget requests).
+    ///
+    /// Paged admission (transformer, cached mode) allocates the request's
+    /// ENTIRE block table up front — `ceil((len + max_new) / page_tokens)`
+    /// pages — re-referencing prefix-tree pages where the prompt prefix
+    /// matches. When the pool can't supply the fresh pages even after
+    /// evicting unreferenced tree prefixes, the request goes back to the
+    /// FRONT of the waiting queue (FIFO order is preserved; admission
+    /// blocks until eviction frees pages).
     fn admit(&mut self) -> Vec<GenCompletion> {
         while let Some(r) = self.future.front() {
             if r.arrival_s > self.clock_s {
@@ -252,6 +334,18 @@ impl ServeEngine {
             }
             let r = self.future.pop_front().expect("front checked");
             self.waiting.push_back(r);
+        }
+        if self.pool.is_none() && !self.recompute && !self.waiting.is_empty() {
+            if let Some((n_layers, n_heads, head_dim)) = self.cache.transformer_dims() {
+                self.pool = Some(KvPool::new(KvPoolConfig {
+                    page_tokens: self.kv_opts.page_tokens,
+                    n_layers,
+                    n_heads,
+                    head_dim,
+                    quant: self.kv_opts.quant,
+                    max_bytes: self.kv_opts.max_pool_bytes,
+                }));
+            }
         }
         let mut done = Vec::new();
         let t0 = Instant::now();
@@ -270,13 +364,66 @@ impl ServeEngine {
                 continue;
             }
             // architecture-specific decode context; for the transformer
-            // this runs the batched prompt prefill into the KV cache
-            let state = self.cache.new_state(
-                &req.prompt,
-                req.max_new_tokens,
-                &*self.backend,
-                self.recompute,
-            );
+            // this runs the (possibly chunk-deferred) prompt prefill
+            let (state, prefill_len) = if self.pool.is_some() {
+                let pt = self.kv_opts.page_tokens;
+                // effective history: an empty prompt decodes from the
+                // zero-token pad, mirroring `new_state`
+                let len = req.prompt.len().max(1);
+                let n_pages = (len + req.max_new_tokens + pt - 1) / pt;
+                // prefix sharing: full pages covered by the prefill
+                // positions 0..len-1, keyed on the prompt tokens
+                let shared = if self.kv_opts.share && len > 1 {
+                    self.tree.lookup(&req.prompt[..len - 1], pt)
+                } else {
+                    Vec::new()
+                };
+                if self.kv_opts.share {
+                    self.prefix_page_lookups += (len - 1) / pt;
+                    self.prefix_page_hits += shared.len();
+                }
+                let pool = self.pool.as_mut().expect("checked above");
+                // take a reference on the shared pages FIRST so the
+                // pressure eviction below can never reclaim them
+                for &p in &shared {
+                    pool.retain(p);
+                }
+                let fresh = n_pages - shared.len();
+                if !pool.can_alloc(fresh) {
+                    self.tree.evict(pool, fresh);
+                }
+                if !pool.can_alloc(fresh) {
+                    // roll the prefix references back and block the head
+                    // of the queue until eviction frees pages
+                    for &p in &shared {
+                        pool.release_page(p);
+                    }
+                    self.waiting.push_front(req);
+                    break;
+                }
+                let mut pages = shared.clone();
+                for _ in 0..fresh {
+                    pages.push(pool.alloc().expect("can_alloc checked"));
+                }
+                let table = BlockTable { pages, shared_tokens: shared.len() * pt };
+                let state = self.cache.new_state_paged(
+                    &req.prompt,
+                    req.max_new_tokens,
+                    &*self.backend,
+                    self.pool.as_mut().expect("checked above"),
+                    table,
+                    self.kv_opts.prefill_chunk,
+                );
+                (state, len - 1)
+            } else {
+                let state = self.cache.new_state(
+                    &req.prompt,
+                    req.max_new_tokens,
+                    &*self.backend,
+                    self.recompute,
+                );
+                (state, req.prompt.len().max(1) - 1)
+            };
             let rng = Rng::new(self.sampling.seed).fold(req.id);
             self.active.push(Slot {
                 state,
@@ -284,15 +431,53 @@ impl ServeEngine {
                 rng,
                 admitted_s: self.clock_s,
                 first_token_s: None,
+                prefill_len,
+                tree_inserted: false,
                 req,
             });
+            // publish BEFORE admitting the next request so one-shot
+            // prefills are shareable within a single admission burst
+            // (their pages are already filled; chunked prefills publish
+            // from decode_step once their fill completes)
+            self.publish_prefixes();
         }
+        self.max_concurrent = self.max_concurrent.max(self.active.len());
         // prefill is real decode-side compute: it advances the virtual
         // clock and counts as busy time (TTFT honestly includes it)
         let dt = t0.elapsed().as_secs_f64();
         self.clock_s += dt;
         self.busy_s += dt;
         done
+    }
+
+    /// Publish every finished prompt prefill's full pages into the prefix
+    /// tree (refcounted), so later requests with the same prompt prefix
+    /// re-reference them. One-shot prefills publish at admission; chunked
+    /// prefills publish at the decode step that completes them.
+    fn publish_prefixes(&mut self) {
+        if !self.kv_opts.share {
+            return;
+        }
+        let Some(pool) = self.pool.as_mut() else { return };
+        let pt = pool.config().page_tokens;
+        for slot in self.active.iter_mut() {
+            if slot.tree_inserted {
+                continue;
+            }
+            let DecodeState::Transformer(ts) = &slot.state else {
+                slot.tree_inserted = true;
+                continue;
+            };
+            if ts.stored < slot.prefill_len {
+                continue; // chunked prefill still in flight
+            }
+            let n_full = slot.prefill_len / pt;
+            if n_full > 0 {
+                let table = ts.table.as_ref().expect("paged state has a table");
+                self.tree.insert(&ts.history[..n_full * pt], pt, &table.pages[..n_full], pool);
+            }
+            slot.tree_inserted = true;
+        }
     }
 
     /// One continuous-batching decode step: admit arrivals into free
@@ -308,6 +493,14 @@ impl ServeEngine {
                 done.extend(self.admit());
             }
             if self.active.is_empty() {
+                if let Some(head) = self.waiting.front() {
+                    // nothing is active to evict, the tree was already
+                    // squeezed at admission: this request can never fit
+                    bail!(
+                        "request {}: KV page demand exceeds the pool byte budget",
+                        head.id
+                    );
+                }
                 // same ordering contract as the main exit below
                 done.sort_by_key(|c| c.id);
                 return Ok(done);
@@ -318,24 +511,48 @@ impl ServeEngine {
         let vocab = self.cache.vocab;
 
         let t0 = Instant::now();
-        // ONE batched forward over every active request; the transformer
-        // path appends one (K, V) pair per layer per request into the
-        // per-request caches (or re-runs full histories under recompute)
+        // ONE batched forward over every active request; the paged path
+        // appends one (K, V) row per layer per decoding request into its
+        // pool pages — and advances any in-flight chunked prefills, which
+        // produce no logits this step (`decoded[i] == false`)
         let mut states: Vec<&mut DecodeState> =
             self.active.iter_mut().map(|s| &mut s.state).collect();
-        let logits = self.cache.decode_forward(&mut states, &*self.backend, self.recompute);
+        let (logits, decoded) = if let Some(pool) = self.pool.as_mut() {
+            let (logits, decoded) = self.cache.decode_forward_paged(
+                &mut states,
+                &*self.backend,
+                pool,
+                self.kv_opts.prefill_chunk,
+            );
+            (logits, Some(decoded))
+        } else {
+            let logits = self.cache.decode_forward_quant(
+                &mut states,
+                &*self.backend,
+                self.recompute,
+                self.kv_opts.quant,
+            );
+            (logits, None)
+        };
         let dt = t0.elapsed().as_secs_f64();
-        debug_assert_eq!(logits.len(), n * vocab);
+        let n_decoded = decoded.as_ref().map_or(n, |d| d.iter().filter(|&&x| x).count());
+        debug_assert_eq!(logits.len(), n_decoded * vocab);
         self.clock_s += dt;
         self.busy_s += dt;
         self.steps += 1;
+        self.publish_prefixes();
 
-        // sample one token per slot; collect who finished and why
+        // sample one token per decoding slot; collect who finished and why
         let temperature = self.sampling.temperature;
         let now = self.clock_s;
         let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        let mut li = 0usize;
         for (i, slot) in self.active.iter_mut().enumerate() {
-            let row = &logits[i * vocab..(i + 1) * vocab];
+            if !decoded.as_ref().map_or(true, |d| d[i]) {
+                continue; // this step only advanced the slot's prefill
+            }
+            let row = &logits[li * vocab..(li + 1) * vocab];
+            li += 1;
             let tok = if temperature > 0.0 {
                 sample_softmax(row, temperature, &mut slot.rng)
             } else {
@@ -352,12 +569,36 @@ impl ServeEngine {
             }
         }
         // KV high-water mark: read while every state is still live, just
-        // before eviction drops the finished requests' buffers
-        let kv_now: usize = self.active.iter().map(|s| s.state.kv_bytes()).sum();
+        // before eviction drops the finished requests' tables. At a new
+        // page peak also snapshot utilization — stored rows over the page
+        // slots the active block tables address.
+        let kv_now: usize = self.active.iter().map(|s| s.state.kv_bytes()).sum::<usize>()
+            + self.pool.as_ref().map_or(0, |p| p.bytes_in_use());
         self.kv_bytes_peak = self.kv_bytes_peak.max(kv_now);
-        // evict back-to-front so the collected indices stay valid
+        if let Some(pool) = &self.pool {
+            let pages = pool.pages_in_use();
+            if pages >= self.kv_pages_peak {
+                self.kv_pages_peak = pages;
+                let pt = pool.config().page_tokens;
+                let (mut stored, mut slots) = (0usize, 0usize);
+                for s in &self.active {
+                    if let DecodeState::Transformer(ts) = &s.state {
+                        stored += ts.stored;
+                        slots += ts.table.as_ref().map_or(0, |t| t.pages.len()) * pt;
+                    }
+                }
+                self.page_util_at_peak =
+                    if slots == 0 { 0.0 } else { stored as f64 / slots as f64 };
+            }
+        }
+        // evict back-to-front so the collected indices stay valid; a
+        // paged slot hands its pages straight back to the pool (shared
+        // prefix pages stay resident while the tree references them)
         for &(i, finish) in finished.iter().rev() {
-            let slot = self.active.remove(i);
+            let mut slot = self.active.remove(i);
+            if let Some(table) = slot.state.take_table() {
+                self.pool.as_mut().expect("paged state implies a pool").release(&table);
+            }
             done.push(complete(slot, finish, now));
         }
         // continuous batching: freed slots refill *now*, not at the next
@@ -392,6 +633,15 @@ impl ServeEngine {
             decode_steps: self.steps - steps0,
             generated_tokens: self.generated_tokens - tokens0,
             kv_bytes_peak: self.kv_bytes_peak,
+            kv_pages_peak: self.kv_pages_peak,
+            page_utilization: self.page_util_at_peak,
+            prefix_hit_rate: if self.prefix_page_lookups == 0 {
+                0.0
+            } else {
+                self.prefix_page_hits as f64 / self.prefix_page_lookups as f64
+            },
+            max_concurrent: self.max_concurrent,
+            kv_quant: self.kv_opts.quant.name(),
         })
     }
 }
@@ -452,9 +702,24 @@ pub struct ServeReport {
     pub busy_s: f64,
     pub decode_steps: usize,
     pub generated_tokens: usize,
-    /// high-water mark of per-request KV memory over the engine's
-    /// lifetime (0 for the MLP architecture and for recompute mode)
+    /// high-water mark of KV memory over the engine's lifetime: allocated
+    /// pool pages (payload, whatever their storage format) plus block-table
+    /// metadata (0 for the MLP architecture and for recompute mode)
     pub kv_bytes_peak: usize,
+    /// high-water mark of allocated pool pages (0 when no pool was built)
+    pub kv_pages_peak: usize,
+    /// at the page peak: stored K/V rows over the page slots the active
+    /// block tables addressed — low values mean admission-time
+    /// preallocation is holding pages the requests never filled
+    pub page_utilization: f64,
+    /// shared prefix pages re-referenced / full prompt pages looked up
+    /// (0.0 when sharing is off or no prompt spans a full page)
+    pub prefix_hit_rate: f64,
+    /// most requests ever decoding concurrently — the capacity axis the
+    /// paged/quantized KV store is meant to raise at a fixed byte budget
+    pub max_concurrent: usize,
+    /// KV storage format the engine served with (`f32` | `mxfp4`)
+    pub kv_quant: &'static str,
 }
 
 impl ServeReport {

@@ -13,15 +13,22 @@
 //!   continuous-batching scheduler: per-request `max_new_tokens` / stop
 //!   tokens, greedy or seeded temperature sampling, admission/eviction
 //!   between decode steps so short and long generations share batches.
-//!   Transformer requests carry a per-request KV cache
-//!   ([`cache::DecodeState`]) filled by a one-pass prompt prefill, so a
-//!   decode step appends one (K, V) pair per layer instead of re-running
-//!   the prefix; eviction drops the state, reclaiming the memory
-//!   (`kv_bytes_peak` in the report). Token streams are bit-identical
-//!   across backends, thread counts, batch compositions — and between
-//!   KV-cached and full-recompute decode.
-//! * [`trace`] — JSON request traces, synthetic Poisson workloads, and
-//!   the [`trace::ServeRecord`] JSON the fig6 bench emits.
+//!   Transformer requests store KV in fixed-size pages of a shared
+//!   [`paged::KvPool`] addressed through per-request block tables, with
+//!   reference-counted prefix sharing ([`paged::PrefixTree`]), optional
+//!   chunked prefill interleaved with decode, and optional packed-MXFP4
+//!   page storage (`--kv-quant mxfp4`). Admission is gated on free pages;
+//!   eviction returns pages to the pool copy-free (`kv_bytes_peak`,
+//!   `page_utilization`, `prefix_hit_rate` in the report). Token streams
+//!   are bit-identical across backends, thread counts, batch
+//!   compositions, page sizes, prefill chunking, prefix sharing — and
+//!   between paged and full-recompute decode.
+//! * [`paged`] — the page pool itself: refcounted fixed-size KV pages
+//!   (f32 or packed MXFP4), block tables, and the token-keyed radix tree
+//!   behind prefix sharing.
+//! * [`trace`] — JSON request traces, synthetic Poisson workloads (with
+//!   shared-prefix mixes), and the [`trace::ServeRecord`] JSON the
+//!   fig6/fig7 benches emit.
 //! * [`CpuPrefillEngine`] — batched single-shot prefill over the same
 //!   cache (the Fig 6 prefill leg); serves trained checkpoints via
 //!   [`CpuPrefillEngine::from_checkpoint`].
@@ -33,6 +40,7 @@
 
 pub mod cache;
 pub mod engine;
+pub mod paged;
 pub mod trace;
 
 use std::collections::VecDeque;
@@ -48,6 +56,7 @@ use crate::util::rng::Rng;
 
 pub use cache::{DecodeState, LayerKv, PackedWeightCache, ServeMethod, TfDecodeState};
 pub use engine::{FinishReason, GenCompletion, GenRequest, Sampling, ServeEngine, ServeReport};
+pub use paged::{BlockTable, KvPool, KvPoolConfig, KvQuant, KvServeOptions, PrefixTree};
 pub use trace::{load_trace, parse_trace, synth_requests, ServeRecord, SynthOptions};
 
 #[cfg(feature = "xla")]

@@ -1,0 +1,596 @@
+//! Paged KV storage for the serving engine: a vLLM-style global block
+//! pool of fixed-size pages, per-request block tables, and
+//! reference-counted prefix sharing keyed on prompt token ids.
+//!
+//! * [`KvPool`] owns every page. A page holds `page_tokens` token slots ×
+//!   all layers of (K, V) rows of width `d = n_heads * head_dim`, either
+//!   dense f32 or packed MXFP4 (`--kv-quant mxfp4`: E2M1 nibble pairs +
+//!   one E8m0 scale per flat 32-group — the exact `Mxfp4Tensor` layout of
+//!   a `[page_tokens, d]` matrix, written with deterministic RTN so page
+//!   contents are a pure function of the tokens they cache).
+//! * [`BlockTable`] is a request's ordered page walk; token position `p`
+//!   lives in `pages[p / page_tokens]` at slot `p % page_tokens`.
+//!   Eviction is copy-free: the table's pages are released back to the
+//!   pool (refcount decrement), never memcpy'd.
+//! * [`PrefixTree`] maps full-page prompt-token chunks to physical pages.
+//!   Requests sharing a prompt prefix map the *same* pages (sound because
+//!   causal attention + absolute RoPE make page `j`'s K/V a pure function
+//!   of tokens `0..(j+1)·page_tokens`, and RTN draws nothing from any
+//!   RNG); the tree holds one reference per node, so a shared page is
+//!   freed only when the last user *and* the tree drop it.
+//!
+//! Admission in `ServeEngine` is gated on [`KvPool::can_alloc`]; under
+//! pressure the engine evicts unreferenced tree leaves first
+//! ([`PrefixTree::evict`]) and otherwise leaves the request queued —
+//! memory, not slot count, becomes the binding batch-size constraint,
+//! which is exactly the axis the fig7 `kv_capacity` records measure.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::kernels::{KvPageData, KvPageView};
+use crate::quant::e8m0::E8m0;
+use crate::quant::mxfp4::{QuantMode, MX_GROUP};
+use crate::util::rng::Rng;
+
+/// On-page storage format for cached K/V rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvQuant {
+    /// Dense f32 rows — bit-identical to the dense KV path.
+    F32,
+    /// Packed MXFP4 (deterministic RTN): 4-bit codes + E8m0 group scales,
+    /// ~7.5× smaller than f32 per row.
+    Mxfp4,
+}
+
+impl KvQuant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvQuant::F32 => "f32",
+            KvQuant::Mxfp4 => "mxfp4",
+        }
+    }
+
+    /// Parse a `--kv-quant` flag value.
+    pub fn parse(name: &str) -> Result<KvQuant> {
+        match name {
+            "f32" => Ok(KvQuant::F32),
+            "mxfp4" => Ok(KvQuant::Mxfp4),
+            other => Err(anyhow!(
+                "unknown kv quant {other:?} (expected \"f32\" or \"mxfp4\")"
+            )),
+        }
+    }
+}
+
+/// Pool geometry: page size, model shape, storage format, memory budget.
+#[derive(Debug, Clone, Copy)]
+pub struct KvPoolConfig {
+    /// Token slots per page.
+    pub page_tokens: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub quant: KvQuant,
+    /// Pool memory budget in bytes; 0 = unbounded (pages are still
+    /// allocated lazily, so the pool only ever grows to the watermark).
+    pub max_bytes: usize,
+}
+
+impl KvPoolConfig {
+    /// Flat per-token row width.
+    pub fn d(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+}
+
+/// One page's backing storage across all layers: K and V planes of
+/// `n_layers * page_tokens` rows of width `d` (row index
+/// `layer * page_tokens + slot`).
+enum PageData {
+    F32 {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    Mxfp4 {
+        k_codes: Vec<u8>,
+        k_scales: Vec<E8m0>,
+        v_codes: Vec<u8>,
+        v_scales: Vec<E8m0>,
+    },
+}
+
+struct PageSlot {
+    refs: u32,
+    data: PageData,
+}
+
+/// A request's ordered walk of pool pages plus how many leading token
+/// positions arrived pre-filled via prefix sharing.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    pub pages: Vec<u32>,
+    /// Leading positions whose K/V was already on shared pages at
+    /// admission (a multiple of `page_tokens`); prefill skips them.
+    pub shared_tokens: usize,
+}
+
+impl BlockTable {
+    /// Bytes of block-table metadata (one u32 page id per page) — counted
+    /// into `kv_bytes_peak` so the report reflects real memory, not just
+    /// page payloads.
+    pub fn meta_bytes(&self) -> usize {
+        self.pages.len() * std::mem::size_of::<u32>()
+    }
+}
+
+/// The global paged KV allocator: a grow-to-budget vector of
+/// reference-counted pages plus a free list. Pages are never zeroed on
+/// reuse — the MXFP4 write path assigns whole bytes before OR-ing high
+/// nibbles and the f32 path overwrites rows, so stale data is unreadable
+/// (a row is only visible once its position is covered by `len`).
+pub struct KvPool {
+    cfg: KvPoolConfig,
+    pages: Vec<PageSlot>,
+    free: Vec<u32>,
+}
+
+impl KvPool {
+    pub fn new(cfg: KvPoolConfig) -> KvPool {
+        assert!(cfg.page_tokens > 0, "page_tokens must be positive");
+        if cfg.quant == KvQuant::Mxfp4 {
+            assert_eq!(
+                cfg.d() % MX_GROUP,
+                0,
+                "mxfp4 KV needs n_heads*head_dim % 32 == 0"
+            );
+        }
+        KvPool { cfg, pages: Vec::new(), free: Vec::new() }
+    }
+
+    pub fn config(&self) -> &KvPoolConfig {
+        &self.cfg
+    }
+
+    /// Bytes of backing storage per page (payload only; block-table
+    /// metadata is accounted per request).
+    pub fn page_bytes(&self) -> usize {
+        let rows = self.cfg.n_layers * self.cfg.page_tokens;
+        let elems = rows * self.cfg.d();
+        match self.cfg.quant {
+            KvQuant::F32 => 2 * elems * std::mem::size_of::<f32>(),
+            // K and V planes: packed nibbles + one scale byte per 32-group
+            KvQuant::Mxfp4 => 2 * (elems / 2 + elems / MX_GROUP),
+        }
+    }
+
+    /// Page-count cap implied by the byte budget (`usize::MAX` when
+    /// unbounded).
+    fn max_pages(&self) -> usize {
+        if self.cfg.max_bytes == 0 {
+            usize::MAX
+        } else {
+            (self.cfg.max_bytes / self.page_bytes()).max(1)
+        }
+    }
+
+    /// Can `n` fresh pages be handed out right now (free list + growth
+    /// headroom)?
+    pub fn can_alloc(&self, n: usize) -> bool {
+        let headroom = self.max_pages().saturating_sub(self.pages.len());
+        self.free.len().saturating_add(headroom) >= n
+    }
+
+    /// Allocate one page at refcount 1 (free-list reuse first, then
+    /// growth under the budget). `None` when the budget is exhausted.
+    pub fn alloc(&mut self) -> Option<u32> {
+        if let Some(id) = self.free.pop() {
+            let slot = &mut self.pages[id as usize];
+            assert_eq!(slot.refs, 0, "free list held a live page");
+            slot.refs = 1;
+            return Some(id);
+        }
+        if self.pages.len() >= self.max_pages() {
+            return None;
+        }
+        let rows = self.cfg.n_layers * self.cfg.page_tokens;
+        let elems = rows * self.cfg.d();
+        let data = match self.cfg.quant {
+            KvQuant::F32 => PageData::F32 { k: vec![0.0; elems], v: vec![0.0; elems] },
+            KvQuant::Mxfp4 => PageData::Mxfp4 {
+                k_codes: vec![0; elems / 2],
+                k_scales: vec![E8m0(0); elems / MX_GROUP],
+                v_codes: vec![0; elems / 2],
+                v_scales: vec![E8m0(0); elems / MX_GROUP],
+            },
+        };
+        let id = self.pages.len() as u32;
+        self.pages.push(PageSlot { refs: 1, data });
+        Some(id)
+    }
+
+    /// Add a reference to a live page (prefix sharing).
+    pub fn retain(&mut self, page: u32) {
+        let slot = &mut self.pages[page as usize];
+        assert!(slot.refs > 0, "retain on a freed page");
+        slot.refs += 1;
+    }
+
+    /// Drop one reference; the page returns to the free list at zero.
+    /// Panics on double-free.
+    pub fn release_page(&mut self, page: u32) {
+        let slot = &mut self.pages[page as usize];
+        assert!(slot.refs > 0, "double free of page {page}");
+        slot.refs -= 1;
+        if slot.refs == 0 {
+            self.free.push(page);
+        }
+    }
+
+    /// Release every page of an evicted request's table (copy-free
+    /// eviction: shared pages just lose one reference).
+    pub fn release(&mut self, table: &BlockTable) {
+        for &p in &table.pages {
+            self.release_page(p);
+        }
+    }
+
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.pages[page as usize].refs
+    }
+
+    /// Pages currently holding at least one reference.
+    pub fn pages_in_use(&self) -> usize {
+        self.pages.len() - self.free.len()
+    }
+
+    /// Payload bytes behind live pages — the pool half of
+    /// `kv_bytes_peak`.
+    pub fn bytes_in_use(&self) -> usize {
+        self.pages_in_use() * self.page_bytes()
+    }
+
+    /// Write one token's (K, V) rows (`k_row`/`v_row` of width `d`) into
+    /// `page` at `(layer, slot)`. MXFP4 pages quantize with deterministic
+    /// RTN — backend- and caller-independent, so shared pages hold the
+    /// same bits no matter which request computed them.
+    pub fn write_row(&mut self, page: u32, layer: usize, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        let d = self.cfg.d();
+        assert_eq!(k_row.len(), d, "k row width");
+        assert_eq!(v_row.len(), d, "v row width");
+        assert!(slot < self.cfg.page_tokens, "slot out of page");
+        let row = layer * self.cfg.page_tokens + slot;
+        let off = row * d;
+        match &mut self.pages[page as usize].data {
+            PageData::F32 { k, v } => {
+                k[off..off + d].copy_from_slice(k_row);
+                v[off..off + d].copy_from_slice(v_row);
+            }
+            PageData::Mxfp4 { k_codes, k_scales, v_codes, v_scales } => {
+                // RTN draws nothing from the RNG; Rng::new(0) is inert
+                for (row_data, codes, scales) in
+                    [(k_row, &mut *k_codes, &mut *k_scales), (v_row, v_codes, v_scales)]
+                {
+                    crate::kernels::scalar::quantize_rows(
+                        row_data,
+                        1,
+                        d,
+                        QuantMode::Rtn,
+                        &mut Rng::new(0),
+                        &mut codes[off / 2..(off + d) / 2],
+                        &mut scales[off / MX_GROUP..(off + d) / MX_GROUP],
+                        None,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Borrow one layer's K/V slices of a request's page walk as the
+    /// attention kernel's [`KvPageView`], covering positions `0..len`.
+    pub fn layer_view<'a>(&'a self, table: &BlockTable, layer: usize, len: usize) -> KvPageView<'a> {
+        let pt = self.cfg.page_tokens;
+        let d = self.cfg.d();
+        let n_pages = (len + pt - 1) / pt;
+        assert!(n_pages <= table.pages.len(), "table too short for len {len}");
+        let rows = layer * pt * d..(layer + 1) * pt * d;
+        let pages = table.pages[..n_pages]
+            .iter()
+            .map(|&p| match &self.pages[p as usize].data {
+                PageData::F32 { k, v } => {
+                    KvPageData::F32 { k: &k[rows.clone()], v: &v[rows.clone()] }
+                }
+                PageData::Mxfp4 { k_codes, k_scales, v_codes, v_scales } => KvPageData::Mxfp4 {
+                    k_codes: &k_codes[rows.start / 2..rows.end / 2],
+                    k_scales: &k_scales[rows.start / MX_GROUP..rows.end / MX_GROUP],
+                    v_codes: &v_codes[rows.start / 2..rows.end / 2],
+                    v_scales: &v_scales[rows.start / MX_GROUP..rows.end / MX_GROUP],
+                },
+            })
+            .collect();
+        KvPageView { pages, page_tokens: pt, d, len }
+    }
+}
+
+#[derive(Debug)]
+struct Node {
+    page: u32,
+    children: BTreeMap<Vec<i32>, Node>,
+}
+
+/// Radix tree over full-page prompt-token chunks → physical pages. Each
+/// node holds one pool reference to its page; [`PrefixTree::lookup`]
+/// walks the longest full-page prefix match without touching refcounts
+/// (callers retain only once admission is certain), and
+/// [`PrefixTree::evict`] reclaims leaves nobody else references, in
+/// deterministic key order.
+#[derive(Debug, Default)]
+pub struct PrefixTree {
+    children: BTreeMap<Vec<i32>, Node>,
+}
+
+impl PrefixTree {
+    pub fn new() -> PrefixTree {
+        PrefixTree::default()
+    }
+
+    /// Longest shared prefix of `tokens` already cached, as the pages
+    /// covering its full `pt`-token chunks. Does NOT retain — the caller
+    /// retains each page only after deciding to admit.
+    pub fn lookup(&self, tokens: &[i32], pt: usize) -> Vec<u32> {
+        let mut pages = Vec::new();
+        let mut level = &self.children;
+        for chunk in tokens.chunks_exact(pt) {
+            match level.get(chunk) {
+                Some(node) => {
+                    pages.push(node.page);
+                    level = &node.children;
+                }
+                None => break,
+            }
+        }
+        pages
+    }
+
+    /// Register a request's full-page prompt chunks → `pages` mapping.
+    /// Vacant levels take one pool reference; occupied levels keep their
+    /// existing page (identical content: pages are pure functions of the
+    /// tokens above them).
+    pub fn insert(&mut self, tokens: &[i32], pt: usize, pages: &[u32], pool: &mut KvPool) {
+        let mut level = &mut self.children;
+        for (chunk, &page) in tokens.chunks_exact(pt).zip(pages) {
+            level = &mut level
+                .entry(chunk.to_vec())
+                .or_insert_with(|| {
+                    pool.retain(page);
+                    Node { page, children: BTreeMap::new() }
+                })
+                .children;
+        }
+    }
+
+    /// Free up to `need` pages by dropping leaves whose page is
+    /// referenced only by the tree (refcount 1). Post-order, key order —
+    /// deterministic. Returns how many pages were released.
+    pub fn evict(&mut self, pool: &mut KvPool, need: usize) -> usize {
+        let mut freed = 0;
+        evict_level(&mut self.children, pool, need, &mut freed);
+        freed
+    }
+
+    fn count(children: &BTreeMap<Vec<i32>, Node>) -> usize {
+        children.values().map(|n| 1 + Self::count(&n.children)).sum()
+    }
+
+    /// Nodes (= cached pages) currently registered.
+    pub fn len(&self) -> usize {
+        Self::count(&self.children)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Drop every node, releasing each node's pool reference.
+    pub fn clear(&mut self, pool: &mut KvPool) {
+        while self.evict(pool, usize::MAX) > 0 {}
+        assert!(self.children.is_empty(), "clear left referenced nodes");
+    }
+}
+
+fn evict_level(
+    children: &mut BTreeMap<Vec<i32>, Node>,
+    pool: &mut KvPool,
+    need: usize,
+    freed: &mut usize,
+) {
+    children.retain(|_, node| {
+        if *freed >= need {
+            return true;
+        }
+        evict_level(&mut node.children, pool, need, freed);
+        if node.children.is_empty() && pool.refcount(node.page) == 1 && *freed < need {
+            pool.release_page(node.page);
+            *freed += 1;
+            false
+        } else {
+            true
+        }
+    });
+}
+
+/// Engine-facing knobs for the paged KV path (CLI: `--kv-page-size`,
+/// `--kv-quant`, `--prefill-chunk`, `--kv-pool-bytes`).
+#[derive(Debug, Clone, Copy)]
+pub struct KvServeOptions {
+    pub page_tokens: usize,
+    pub quant: KvQuant,
+    /// Max prompt positions prefetched per engine step; 0 = one-shot
+    /// prefill at admission (the pre-paging behaviour).
+    pub prefill_chunk: usize,
+    /// Pool byte budget; 0 = unbounded.
+    pub max_pool_bytes: usize,
+    /// Prefix sharing on/off (on by default; off isolates every request).
+    pub share: bool,
+}
+
+impl Default for KvServeOptions {
+    fn default() -> Self {
+        KvServeOptions {
+            page_tokens: 16,
+            quant: KvQuant::F32,
+            prefill_chunk: 0,
+            max_pool_bytes: 0,
+            share: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Backend;
+    use crate::kernels::ScalarBackend;
+
+    fn cfg(quant: KvQuant, max_bytes: usize) -> KvPoolConfig {
+        KvPoolConfig {
+            page_tokens: 4,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 16,
+            quant,
+            max_bytes,
+        }
+    }
+
+    #[test]
+    fn page_bytes_count_real_storage() {
+        let pool = KvPool::new(cfg(KvQuant::F32, 0));
+        // 2 planes × 2 layers × 4 slots × 32 wide × 4 B
+        assert_eq!(pool.page_bytes(), 2 * 2 * 4 * 32 * 4);
+        let qpool = KvPool::new(cfg(KvQuant::Mxfp4, 0));
+        // 2 planes × (codes: 2·4·32/2 B + scales: 2·4·32/32 B)
+        assert_eq!(qpool.page_bytes(), 2 * (2 * 4 * 32 / 2 + 2 * 4 * 32 / 32));
+        // mxfp4 pages are ~7.5× smaller
+        assert!(pool.page_bytes() as f64 / qpool.page_bytes() as f64 > 7.0);
+    }
+
+    #[test]
+    fn alloc_free_reuse_and_budget() {
+        // budget for exactly 2 pages
+        let page = KvPool::new(cfg(KvQuant::F32, 0)).page_bytes();
+        let mut pool = KvPool::new(cfg(KvQuant::F32, 2 * page));
+        assert!(pool.can_alloc(2) && !pool.can_alloc(3));
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(pool.alloc().is_none(), "budget exceeded");
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.bytes_in_use(), 2 * page);
+        pool.release_page(a);
+        assert_eq!(pool.pages_in_use(), 1);
+        assert!(pool.can_alloc(1));
+        let c = pool.alloc().unwrap();
+        assert_eq!(c, a, "free-list reuse");
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut pool = KvPool::new(cfg(KvQuant::F32, 0));
+        let p = pool.alloc().unwrap();
+        pool.release_page(p);
+        pool.release_page(p);
+    }
+
+    #[test]
+    fn refcounts_gate_release() {
+        let mut pool = KvPool::new(cfg(KvQuant::F32, 0));
+        let p = pool.alloc().unwrap();
+        pool.retain(p);
+        assert_eq!(pool.refcount(p), 2);
+        pool.release_page(p);
+        assert_eq!(pool.pages_in_use(), 1, "shared page freed early");
+        pool.release_page(p);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn f32_rows_roundtrip_through_layer_view() {
+        let mut pool = KvPool::new(cfg(KvQuant::F32, 0));
+        let p = pool.alloc().unwrap();
+        let d = pool.config().d();
+        let k_row: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let v_row: Vec<f32> = (0..d).map(|i| -(i as f32)).collect();
+        pool.write_row(p, 1, 2, &k_row, &v_row);
+        let table = BlockTable { pages: vec![p], shared_tokens: 0 };
+        let view = pool.layer_view(&table, 1, 3);
+        assert_eq!(view.len, 3);
+        match &view.pages[0] {
+            KvPageData::F32 { k, v } => {
+                assert_eq!(&k[2 * d..3 * d], &k_row[..]);
+                assert_eq!(&v[2 * d..3 * d], &v_row[..]);
+            }
+            _ => panic!("expected f32 page"),
+        }
+    }
+
+    #[test]
+    fn mxfp4_rows_match_reference_quantizer() {
+        let mut pool = KvPool::new(cfg(KvQuant::Mxfp4, 0));
+        let p = pool.alloc().unwrap();
+        let d = pool.config().d();
+        let mut rng = Rng::new(4);
+        let k_row = rng.gaussian_vec(d, 1.0);
+        let v_row = rng.gaussian_vec(d, 0.5);
+        pool.write_row(p, 0, 1, &k_row, &v_row);
+        let want = ScalarBackend.quantize_mxfp4(&k_row, 1, d, QuantMode::Rtn, &mut Rng::new(0));
+        let table = BlockTable { pages: vec![p], shared_tokens: 0 };
+        let view = pool.layer_view(&table, 0, 2);
+        match &view.pages[0] {
+            KvPageData::Mxfp4 { k_codes, k_scales, .. } => {
+                assert_eq!(&k_codes[d / 2..2 * d / 2], &want.codes[..]);
+                assert_eq!(&k_scales[d / MX_GROUP..2 * d / MX_GROUP], &want.scales[..]);
+            }
+            _ => panic!("expected mxfp4 page"),
+        }
+    }
+
+    #[test]
+    fn prefix_tree_shares_and_evicts() {
+        let mut pool = KvPool::new(cfg(KvQuant::F32, 0));
+        let mut tree = PrefixTree::new();
+        let tokens = [1, 2, 3, 4, 5, 6, 7, 8, 9]; // two full 4-chunks + tail
+        let pages = [pool.alloc().unwrap(), pool.alloc().unwrap()];
+        tree.insert(&tokens, 4, &pages, &mut pool);
+        assert_eq!(tree.len(), 2);
+        assert_eq!(pool.refcount(pages[0]), 2, "tree holds one ref");
+        // full match
+        assert_eq!(tree.lookup(&tokens, 4), pages.to_vec());
+        // partial match: first chunk only
+        assert_eq!(tree.lookup(&[1, 2, 3, 4, 0, 0, 0, 0], 4), vec![pages[0]]);
+        // no match
+        assert!(tree.lookup(&[9, 9, 9, 9], 4).is_empty());
+        // evict: nothing freeable while the request still holds its refs
+        assert_eq!(tree.evict(&mut pool, 10), 0);
+        // request evicted → its refs drop; the deepest leaf frees first
+        pool.release_page(pages[0]);
+        pool.release_page(pages[1]);
+        assert_eq!(tree.evict(&mut pool, 1), 1);
+        assert_eq!(tree.len(), 1);
+        // the surviving node (the parent chunk) still pins its page
+        assert_eq!(pool.pages_in_use(), 1);
+        tree.clear(&mut pool);
+        assert_eq!(pool.pages_in_use(), 0);
+        assert!(tree.is_empty());
+    }
+
+    #[test]
+    fn kv_quant_parses() {
+        assert_eq!(KvQuant::parse("f32").unwrap(), KvQuant::F32);
+        assert_eq!(KvQuant::parse("mxfp4").unwrap(), KvQuant::Mxfp4);
+        assert!(KvQuant::parse("int8").is_err());
+        assert_eq!(KvQuant::Mxfp4.name(), "mxfp4");
+    }
+}

@@ -80,21 +80,31 @@ pub struct SynthOptions {
     pub rate: f64,
     pub stop_token: Option<i32>,
     pub seed: u64,
+    /// leading tokens shared by EVERY prompt (drawn once from the same
+    /// stream) — the shared-system-prompt workload paged prefix sharing
+    /// exists for; `prompt_len` counts the shared part, and 0 keeps the
+    /// historical fully-random streams byte-for-byte
+    pub shared_prefix_len: usize,
 }
 
-/// Synthesize a request trace: uniform-random prompts, optional uniform
-/// generation lengths, exponential inter-arrival gaps at `rate`.
+/// Synthesize a request trace: uniform-random prompts (optionally behind
+/// one shared prefix), optional uniform generation lengths, exponential
+/// inter-arrival gaps at `rate`.
 pub fn synth_requests(opts: &SynthOptions) -> Vec<GenRequest> {
     let mut rng = Rng::new(opts.seed);
+    let shared_len = opts.shared_prefix_len.min(opts.prompt_len);
+    let shared: Vec<i32> =
+        (0..shared_len).map(|_| rng.below(opts.vocab) as i32).collect();
     let mut t = 0.0f64;
     (0..opts.n)
         .map(|i| {
             if opts.rate > 0.0 {
                 t += -(1.0 - rng.uniform()).ln() / opts.rate;
             }
-            let prompt: Vec<i32> = (0..opts.prompt_len)
-                .map(|_| rng.below(opts.vocab) as i32)
-                .collect();
+            let mut prompt = shared.clone();
+            prompt.extend(
+                (0..opts.prompt_len - shared_len).map(|_| rng.below(opts.vocab) as i32),
+            );
             let max_new_tokens = if opts.vary_lengths {
                 1 + rng.below(opts.max_new_tokens.max(1))
             } else {
@@ -139,8 +149,24 @@ pub struct ServeRecord {
     pub latency_s: [f64; 3],
     /// `[p50, p90, p99]`, seconds
     pub ttft_s: [f64; 3],
-    /// KV-cache high-water mark (bytes; 0 for MLP/recompute serving)
+    /// KV-cache high-water mark (bytes: pool pages + block-table
+    /// metadata; 0 for MLP/recompute serving)
     pub kv_bytes_peak: usize,
+    /// high-water mark of allocated KV pool pages (0 when no pool ran)
+    pub kv_pages_peak: usize,
+    /// stored-row fill fraction of the active block tables at the page
+    /// peak, in `[0, 1]`
+    pub page_utilization: f64,
+    /// shared prefix pages re-referenced / full prompt pages looked up
+    pub prefix_hit_rate: f64,
+    /// most requests ever decoding concurrently
+    pub max_concurrent: usize,
+    /// KV storage format (`f32` | `mxfp4`)
+    pub kv_quant: String,
+    /// capacity-run records only: this leg's `max_concurrent` over the
+    /// dense-f32 baseline's at the same pool byte budget (omitted from
+    /// the JSON when `None`)
+    pub concurrency_vs_dense: Option<f64>,
 }
 
 impl ServeRecord {
@@ -172,11 +198,17 @@ impl ServeRecord {
             latency_s: report.latency_percentiles(),
             ttft_s: report.ttft_percentiles(),
             kv_bytes_peak: report.kv_bytes_peak,
+            kv_pages_peak: report.kv_pages_peak,
+            page_utilization: report.page_utilization,
+            prefix_hit_rate: report.prefix_hit_rate,
+            max_concurrent: report.max_concurrent,
+            kv_quant: report.kv_quant.to_string(),
+            concurrency_vs_dense: None,
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::from_pairs(vec![
+        let mut pairs = vec![
             ("bench", Json::str(&self.bench)),
             ("mode", Json::str(&self.mode)),
             ("method", Json::str(&self.method)),
@@ -193,7 +225,16 @@ impl ServeRecord {
             ("latency_p50_p90_p99_s", Json::f64s(&self.latency_s)),
             ("ttft_p50_p90_p99_s", Json::f64s(&self.ttft_s)),
             ("kv_bytes_peak", Json::num(self.kv_bytes_peak as f64)),
-        ])
+            ("kv_pages_peak", Json::num(self.kv_pages_peak as f64)),
+            ("page_utilization", Json::num(self.page_utilization)),
+            ("prefix_hit_rate", Json::num(self.prefix_hit_rate)),
+            ("max_concurrent", Json::num(self.max_concurrent as f64)),
+            ("kv_quant", Json::str(&self.kv_quant)),
+        ];
+        if let Some(r) = self.concurrency_vs_dense {
+            pairs.push(("concurrency_vs_dense", Json::num(r)));
+        }
+        Json::from_pairs(pairs)
     }
 
     /// Write `{bench}_{method}_{backend}_b{batch_point}_{mode}.json` into
@@ -252,6 +293,7 @@ mod tests {
             rate: 100.0,
             stop_token: None,
             seed: 5,
+            shared_prefix_len: 0,
         };
         let a = synth_requests(&opts);
         let b = synth_requests(&opts);
@@ -272,6 +314,31 @@ mod tests {
     }
 
     #[test]
+    fn synth_shared_prefix_mixes() {
+        let opts = SynthOptions {
+            n: 8,
+            vocab: 64,
+            prompt_len: 12,
+            max_new_tokens: 4,
+            vary_lengths: false,
+            rate: 0.0,
+            stop_token: None,
+            seed: 5,
+            shared_prefix_len: 8,
+        };
+        let reqs = synth_requests(&opts);
+        let prefix = &reqs[0].prompt[..8];
+        assert!(reqs.iter().all(|r| r.prompt.len() == 12));
+        assert!(reqs.iter().all(|r| &r.prompt[..8] == prefix), "prefix not shared");
+        let tails: std::collections::BTreeSet<&[i32]> =
+            reqs.iter().map(|r| &r.prompt[8..]).collect();
+        assert!(tails.len() > 1, "tails should differ");
+        // the prefix saturates at prompt_len; oversized asks are clamped
+        let full = synth_requests(&SynthOptions { shared_prefix_len: 99, ..opts });
+        assert!(full.iter().all(|r| r.prompt == full[0].prompt));
+    }
+
+    #[test]
     fn record_json_has_the_artifact_schema() {
         let report = ServeReport {
             completions: Vec::new(),
@@ -280,6 +347,11 @@ mod tests {
             decode_steps: 40,
             generated_tokens: 640,
             kv_bytes_peak: 4096,
+            kv_pages_peak: 6,
+            page_utilization: 0.75,
+            prefix_hit_rate: 0.5,
+            max_concurrent: 8,
+            kv_quant: "mxfp4",
         };
         let rec = ServeRecord::from_report(
             "fig6_continuous_batching",
@@ -301,5 +373,15 @@ mod tests {
             j.req("latency_p50_p90_p99_s").unwrap().as_arr().unwrap().len(),
             3
         );
+        assert_eq!(j.req("kv_pages_peak").unwrap().as_usize(), Some(6));
+        assert_eq!(j.req("prefix_hit_rate").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.req("max_concurrent").unwrap().as_usize(), Some(8));
+        assert_eq!(j.req("kv_quant").unwrap().as_str(), Some("mxfp4"));
+        // concurrency_vs_dense is emitted only when set
+        assert!(j.get("concurrency_vs_dense").is_none());
+        let mut rec2 = rec;
+        rec2.concurrency_vs_dense = Some(8.0);
+        let j2 = Json::parse(&rec2.to_json().to_string()).unwrap();
+        assert_eq!(j2.req("concurrency_vs_dense").unwrap().as_f64(), Some(8.0));
     }
 }

@@ -10,7 +10,9 @@
 //! `parallel+simd` reproduces plain `parallel` exactly.
 
 use quartet::bench::llama_linear_shapes;
-use quartet::kernels::{Backend, Lanes, ParallelBackend, ScalarBackend, SimdBackend};
+use quartet::kernels::{
+    Backend, KvPageData, KvPageView, Lanes, ParallelBackend, ScalarBackend, SimdBackend,
+};
 use quartet::quant::mxfp4::{Mxfp4Tensor, QuantMode};
 use quartet::util::rng::Rng;
 use quartet::util::stats::mse;
@@ -258,6 +260,174 @@ fn attention_hook_rows_independent_of_batching() {
                 "[{}] row {i} depends on its batch",
                 be.name()
             );
+        }
+    }
+}
+
+/// `[rows, n_heads*hd]` token-major → `[n_heads, rows, hd]` head-major.
+fn gather_heads(x: &[f32], n_heads: usize, hd: usize, rows: usize) -> Vec<f32> {
+    let d = n_heads * hd;
+    let mut out = vec![0.0f32; n_heads * rows * hd];
+    for h in 0..n_heads {
+        for r in 0..rows {
+            out[(h * rows + r) * hd..][..hd].copy_from_slice(&x[r * d + h * hd..][..hd]);
+        }
+    }
+    out
+}
+
+/// Inverse of [`gather_heads`].
+fn scatter_heads(heads: &[f32], n_heads: usize, hd: usize, rows: usize) -> Vec<f32> {
+    let d = n_heads * hd;
+    let mut out = vec![0.0f32; rows * d];
+    for h in 0..n_heads {
+        for r in 0..rows {
+            out[r * d + h * hd..][..hd].copy_from_slice(&heads[(h * rows + r) * hd..][..hd]);
+        }
+    }
+    out
+}
+
+#[test]
+fn paged_attention_hook_bit_identical_across_backends_and_threads() {
+    // the paged serving hook: q is token-major [sq, d], K/V live on
+    // fixed-size pages (f32 or packed MXFP4). Against f32 pages the hook
+    // must reproduce the dense attention hook over the same rows bit for
+    // bit; against mxfp4 pages it must equal the dense hook over the
+    // reference dequantize of those pages — and every backend × thread
+    // count must agree with scalar on both. Slots past `len` are
+    // NaN-poisoned so an over-read can't go unnoticed. Shapes cover
+    // single-token decode on a partial last page, chunked prefill
+    // (sq < sk), and a > SMALL_WORK shape that engages the thread pool.
+    let scalar = ScalarBackend;
+    let pt = 4usize;
+    for &(n_heads, sq, sk, hd, pos0) in &[
+        (2usize, 1usize, 17usize, 16usize, 16usize),
+        (2, 4, 12, 16, 8),
+        (4, 8, 8, 32, 0),
+        (8, 8, 32, 32, 0),
+    ] {
+        let d = n_heads * hd;
+        let n_pages = (sk + pt - 1) / pt;
+        let mut rng = Rng::new((n_heads * 37 + sk * 5 + hd + pos0) as u64);
+        let q = rng.gaussian_vec(sq * d, 1.0);
+        let mut kf = rng.gaussian_vec(n_pages * pt * d, 1.0);
+        let mut vf = rng.gaussian_vec(n_pages * pt * d, 0.7);
+        for x in kf[sk * d..].iter_mut().chain(vf[sk * d..].iter_mut()) {
+            *x = f32::NAN;
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        let label = format!("{n_heads}h sq={sq} sk={sk} hd={hd} pos0={pos0}");
+
+        let view = KvPageView {
+            pages: (0..n_pages)
+                .map(|p| KvPageData::F32 {
+                    k: &kf[p * pt * d..(p + 1) * pt * d],
+                    v: &vf[p * pt * d..(p + 1) * pt * d],
+                })
+                .collect(),
+            page_tokens: pt,
+            d,
+            len: sk,
+        };
+        let want = scalar.attention_causal_paged(&q, &view, n_heads, hd, sq, pos0, scale);
+        assert!(want.iter().all(|x| x.is_finite()), "{label}: read past len");
+        let (ctx_heads, _) = scalar.attention_causal(
+            &gather_heads(&q, n_heads, hd, sq),
+            &gather_heads(&kf[..sk * d], n_heads, hd, sk),
+            &gather_heads(&vf[..sk * d], n_heads, hd, sk),
+            n_heads,
+            sq,
+            sk,
+            hd,
+            pos0,
+            scale,
+        );
+        assert_eq!(
+            want,
+            scatter_heads(&ctx_heads, n_heads, hd, sq),
+            "{label}: f32 paged vs dense hook"
+        );
+
+        // mxfp4 pages: quantize each page's [pt, d] matrix (zero the
+        // poison slots first — they are never read, only encoded)
+        let mut kq = kf.clone();
+        let mut vq = vf.clone();
+        for x in kq[sk * d..].iter_mut().chain(vq[sk * d..].iter_mut()) {
+            *x = 0.0;
+        }
+        let quantize_pages = |src: &[f32]| -> Vec<Mxfp4Tensor> {
+            (0..n_pages)
+                .map(|p| {
+                    scalar.quantize_mxfp4(
+                        &src[p * pt * d..(p + 1) * pt * d],
+                        pt,
+                        d,
+                        QuantMode::Rtn,
+                        &mut Rng::new(0),
+                    )
+                })
+                .collect()
+        };
+        let (tks, tvs) = (quantize_pages(&kq), quantize_pages(&vq));
+        let qview = KvPageView {
+            pages: tks
+                .iter()
+                .zip(&tvs)
+                .map(|(tk, tv)| KvPageData::Mxfp4 {
+                    k_codes: &tk.codes,
+                    k_scales: &tk.scales,
+                    v_codes: &tv.codes,
+                    v_scales: &tv.scales,
+                })
+                .collect(),
+            page_tokens: pt,
+            d,
+            len: sk,
+        };
+        let want_q = scalar.attention_causal_paged(&q, &qview, n_heads, hd, sq, pos0, scale);
+        let khat: Vec<f32> = tks.iter().flat_map(|t| t.dequantize()).collect();
+        let vhat: Vec<f32> = tvs.iter().flat_map(|t| t.dequantize()).collect();
+        let (ctx_heads_q, _) = scalar.attention_causal(
+            &gather_heads(&q, n_heads, hd, sq),
+            &gather_heads(&khat[..sk * d], n_heads, hd, sk),
+            &gather_heads(&vhat[..sk * d], n_heads, hd, sk),
+            n_heads,
+            sq,
+            sk,
+            hd,
+            pos0,
+            scale,
+        );
+        assert_eq!(
+            want_q,
+            scatter_heads(&ctx_heads_q, n_heads, hd, sq),
+            "{label}: mxfp4 page decode vs reference dequantize"
+        );
+
+        for (name, v, w) in [("f32", &view, &want), ("mxfp4", &qview, &want_q)] {
+            for t in THREAD_COUNTS {
+                let be = ParallelBackend::with_threads(t);
+                assert_eq!(
+                    *w,
+                    be.attention_causal_paged(&q, v, n_heads, hd, sq, pos0, scale),
+                    "{label}: {name} parallel threads={t}"
+                );
+                let bs = ParallelBackend::with_threads_simd(t);
+                assert_eq!(
+                    *w,
+                    bs.attention_causal_paged(&q, v, n_heads, hd, sq, pos0, scale),
+                    "{label}: {name} parallel+simd threads={t}"
+                );
+            }
+            for be in simd_variants() {
+                assert_eq!(
+                    *w,
+                    be.attention_causal_paged(&q, v, n_heads, hd, sq, pos0, scale),
+                    "{label}: {name} [{}]",
+                    be.describe()
+                );
+            }
         }
     }
 }

@@ -1,0 +1,261 @@
+//! Property tests over the paged-KV allocator (`serve::paged`): random
+//! admission/eviction traffic against an independent reference model.
+//!
+//! The model mirrors what the serving engine does with the pool — look up
+//! a shared prefix, retain it, allocate fresh pages under a byte budget,
+//! publish full prompt chunks to the trie, evict requests and trie leaves
+//! under pressure — while tracking every page's expected refcount in a
+//! plain map and the trie's shape in a plain nested BTreeMap. After every
+//! operation the pool must agree with the model exactly:
+//!
+//! * `refcount(p)` matches the model for every page ever allocated
+//!   (no drift, no double-free — a double release panics in the pool);
+//! * `pages_in_use()` equals the number of model-live pages (no leaks);
+//! * shared pages stay live while ANY holder (request or trie) remains,
+//!   and return to the free list only at refcount zero;
+//! * trie lookup/len/evict agree with the reference trie node-for-node.
+//!
+//! Failures replay with `QUARTET_PROP_SEED=<seed>`.
+
+use std::collections::BTreeMap;
+
+use quartet::serve::{BlockTable, KvPool, KvPoolConfig, KvQuant, PrefixTree};
+use quartet::util::prop::{check, ensure};
+
+const PT: usize = 4;
+
+/// Reference trie node: same shape as `PrefixTree`, maintained by hand.
+#[derive(Default)]
+struct MNode {
+    page: u32,
+    children: BTreeMap<Vec<i32>, MNode>,
+}
+
+struct Model {
+    /// expected refcount per page ever allocated (entry removed at zero)
+    refs: BTreeMap<u32, u32>,
+    tree: BTreeMap<Vec<i32>, MNode>,
+}
+
+impl Model {
+    fn new() -> Model {
+        Model { refs: BTreeMap::new(), tree: BTreeMap::new() }
+    }
+
+    fn lookup(&self, tokens: &[i32]) -> Vec<u32> {
+        let mut pages = Vec::new();
+        let mut level = &self.tree;
+        for chunk in tokens.chunks_exact(PT) {
+            match level.get(chunk) {
+                Some(node) => {
+                    pages.push(node.page);
+                    level = &node.children;
+                }
+                None => break,
+            }
+        }
+        pages
+    }
+
+    fn insert(&mut self, tokens: &[i32], pages: &[u32]) {
+        let mut level = &mut self.tree;
+        for (chunk, &page) in tokens.chunks_exact(PT).zip(pages) {
+            let refs = &mut self.refs;
+            level = &mut level
+                .entry(chunk.to_vec())
+                .or_insert_with(|| {
+                    *refs.entry(page).or_insert(0) += 1;
+                    MNode { page, children: BTreeMap::new() }
+                })
+                .children;
+        }
+    }
+
+    /// Mirror of `PrefixTree::evict`: post-order, key order, leaves whose
+    /// page only the trie references, up to `need`.
+    fn evict(&mut self, need: usize) -> usize {
+        fn walk(
+            children: &mut BTreeMap<Vec<i32>, MNode>,
+            refs: &mut BTreeMap<u32, u32>,
+            need: usize,
+            freed: &mut usize,
+        ) {
+            children.retain(|_, node| {
+                if *freed >= need {
+                    return true;
+                }
+                walk(&mut node.children, refs, need, freed);
+                if node.children.is_empty()
+                    && refs.get(&node.page).copied().unwrap_or(0) == 1
+                    && *freed < need
+                {
+                    refs.remove(&node.page);
+                    *freed += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        let mut freed = 0;
+        walk(&mut self.tree, &mut self.refs, need, &mut freed);
+        freed
+    }
+
+    fn tree_len(&self) -> usize {
+        fn count(children: &BTreeMap<Vec<i32>, MNode>) -> usize {
+            children.values().map(|n| 1 + count(&n.children)).sum()
+        }
+        count(&self.tree)
+    }
+
+    fn release(&mut self, table: &BlockTable) {
+        for &p in &table.pages {
+            let r = self.refs.get_mut(&p).expect("release of untracked page");
+            *r -= 1;
+            if *r == 0 {
+                self.refs.remove(&p);
+            }
+        }
+    }
+}
+
+/// Pool state must agree with the model after every operation.
+fn sync(pool: &KvPool, model: &Model, tree: &PrefixTree, seen: u32) -> Result<(), String> {
+    for p in 0..seen {
+        let want = model.refs.get(&p).copied().unwrap_or(0);
+        ensure(
+            pool.refcount(p) == want,
+            format!("page {p}: pool refcount {} vs model {want}", pool.refcount(p)),
+        )?;
+    }
+    ensure(
+        pool.pages_in_use() == model.refs.len(),
+        format!("pages_in_use {} vs model {}", pool.pages_in_use(), model.refs.len()),
+    )?;
+    ensure(
+        tree.len() == model.tree_len(),
+        format!("tree len {} vs model {}", tree.len(), model.tree_len()),
+    )
+}
+
+#[test]
+fn prop_pool_refcounts_match_reference_model_under_random_traffic() {
+    check("paged-KV pool vs reference model", 25, |ctx| {
+        let quant = if ctx.rng.below(2) == 0 { KvQuant::F32 } else { KvQuant::Mxfp4 };
+        let cfg = KvPoolConfig {
+            page_tokens: PT,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 16,
+            quant,
+            max_bytes: 0,
+        };
+        // budget: 4..=9 pages so admissions regularly hit pressure
+        let budget_pages = ctx.rng.below(6) + 4;
+        let page = KvPool::new(cfg).page_bytes();
+        let mut pool = KvPool::new(KvPoolConfig { max_bytes: budget_pages * page, ..cfg });
+        let mut tree = PrefixTree::new();
+        let mut model = Model::new();
+        let mut active: Vec<BlockTable> = Vec::new();
+        let mut seen = 0u32; // pages are dense ids 0..seen
+
+        for _ in 0..30 {
+            match ctx.rng.below(4) {
+                // admit a request with a (likely colliding) chunked prompt
+                0 | 1 => {
+                    let depth = ctx.rng.below(3) + 1;
+                    let mut prompt = Vec::new();
+                    for lvl in 0..depth {
+                        // 2 choices per level → real prefix collisions
+                        let choice = ctx.rng.below(2) as i32;
+                        prompt.extend(std::iter::repeat(lvl as i32 * 8 + choice).take(PT));
+                    }
+                    for t in 0..ctx.rng.below(PT) {
+                        prompt.push(1000 + t as i32); // partial tail chunk
+                    }
+                    let n_pages = (prompt.len() + PT - 1) / PT;
+                    let shared = tree.lookup(&prompt, PT);
+                    ensure(
+                        shared == model.lookup(&prompt),
+                        format!("lookup {shared:?} vs model {:?}", model.lookup(&prompt)),
+                    )?;
+                    // retain shared BEFORE pressure-evicting the trie, as
+                    // the engine does — evict must not reclaim them
+                    for &p in &shared {
+                        pool.retain(p);
+                        *model.refs.entry(p).or_insert(0) += 1;
+                    }
+                    let fresh = n_pages - shared.len();
+                    if !pool.can_alloc(fresh) {
+                        let freed = tree.evict(&mut pool, fresh);
+                        let mfreed = model.evict(fresh);
+                        ensure(freed == mfreed, format!("evict {freed} vs model {mfreed}"))?;
+                    }
+                    if pool.can_alloc(fresh) {
+                        let mut pages = shared.clone();
+                        for _ in 0..fresh {
+                            let p = pool.alloc().expect("can_alloc said yes");
+                            seen = seen.max(p + 1);
+                            ensure(
+                                model.refs.insert(p, 1).is_none(),
+                                format!("alloc handed out live page {p}"),
+                            )?;
+                            pages.push(p);
+                        }
+                        let table =
+                            BlockTable { pages, shared_tokens: shared.len() * PT };
+                        // publish roughly half the admissions
+                        if ctx.rng.below(2) == 0 {
+                            let toks = &prompt[..depth * PT];
+                            tree.insert(toks, PT, &table.pages[..depth], &mut pool);
+                            model.insert(toks, &table.pages[..depth]);
+                        }
+                        active.push(table);
+                    } else {
+                        // admission blocked: hand the shared refs back
+                        for &p in &shared {
+                            pool.release_page(p);
+                            model.release(&BlockTable {
+                                pages: vec![p],
+                                shared_tokens: 0,
+                            });
+                        }
+                    }
+                }
+                // evict a random active request (copy-free release)
+                2 if !active.is_empty() => {
+                    let i = ctx.rng.below(active.len());
+                    let table = active.swap_remove(i);
+                    pool.release(&table);
+                    model.release(&table);
+                }
+                // pressure-evict trie leaves directly
+                _ => {
+                    let need = ctx.rng.below(3) + 1;
+                    let freed = tree.evict(&mut pool, need);
+                    let mfreed = model.evict(need);
+                    ensure(freed == mfreed, format!("evict {freed} vs model {mfreed}"))?;
+                }
+            }
+            sync(&pool, &model, &tree, seen)?;
+            ensure(
+                pool.bytes_in_use() == pool.pages_in_use() * pool.page_bytes(),
+                "bytes_in_use is not pages * page_bytes",
+            )?;
+        }
+
+        // drain: every request releases, the trie clears, nothing leaks
+        for table in active.drain(..) {
+            pool.release(&table);
+            model.release(&table);
+            sync(&pool, &model, &tree, seen)?;
+        }
+        tree.clear(&mut pool);
+        ensure(tree.is_empty(), "clear left trie nodes")?;
+        ensure(
+            pool.pages_in_use() == 0,
+            format!("{} page(s) leaked after full drain", pool.pages_in_use()),
+        )
+    });
+}

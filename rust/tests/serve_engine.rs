@@ -10,8 +10,8 @@ use std::sync::Arc;
 
 use quartet::kernels::{Backend, ParallelBackend, ScalarBackend};
 use quartet::serve::{
-    synth_requests, FinishReason, GenRequest, PackedWeightCache, Sampling, ServeEngine,
-    ServeMethod, SynthOptions,
+    synth_requests, FinishReason, GenRequest, KvQuant, KvServeOptions, PackedWeightCache,
+    Sampling, ServeEngine, ServeMethod, SynthOptions,
 };
 use quartet::train::{MlpLm, ModelConfig, TrainMethod, TransformerConfig, TransformerLm};
 
@@ -59,6 +59,7 @@ fn fixed_requests(n: usize, max_new_tokens: usize) -> Vec<GenRequest> {
         rate: 0.0,
         stop_token: None,
         seed: 3,
+        shared_prefix_len: 0,
     })
 }
 
@@ -316,6 +317,7 @@ fn kv_cached_decode_bit_identical_to_recompute_everywhere() {
                     rate: 0.0,
                     stop_token: None,
                     seed: 31,
+                    shared_prefix_len: 0,
                 }) {
                     eng.submit(r).unwrap();
                 }
@@ -356,6 +358,7 @@ fn kv_cached_streams_independent_of_batch_composition() {
                 rate: 0.0,
                 stop_token: None,
                 seed: 17,
+                shared_prefix_len: 0,
             }) {
                 eng.submit(r).unwrap();
             }
@@ -395,23 +398,34 @@ fn transformer_stop_tokens_and_empty_prompts_work() {
 }
 
 #[test]
-fn kv_memory_grows_while_serving_and_is_reclaimed_on_eviction() {
+fn kv_memory_counts_pool_pages_and_is_reclaimed_on_eviction() {
     let be: Box<dyn Backend> = Box::new(ScalarBackend);
     let cache = tf_cache(ServeMethod::Quartet, &*be);
     let mut eng = ServeEngine::new(cache, be, 4, Sampling::greedy());
+    eng.set_kv_options(KvServeOptions { page_tokens: 8, ..KvServeOptions::default() });
     for r in fixed_requests(4, 6) {
         eng.submit(r).unwrap();
     }
     assert_eq!(eng.kv_bytes_active(), 0, "no KV before admission");
     eng.decode_step().unwrap();
     let mid = eng.kv_bytes_active();
-    // 4 requests × 2 layers × (K+V) × 2 heads × cap (4+6) × hd 16 × 4B
-    assert_eq!(mid, 4 * 2 * 2 * 2 * 10 * 16 * 4);
+    // admission allocates whole block tables: each request needs
+    // ceil((4 prompt + 6 new) / 8) = 2 pages of
+    // (K+V) × 2 layers × 8 slots × (2·16) wide × 4 B = 4096 B payload,
+    // plus 2 × 4 B of block-table metadata
+    let page = 2 * 2 * 8 * (2 * 16) * 4;
+    assert_eq!(mid, 4 * 2 * page + 4 * 2 * 4);
+    assert_eq!(eng.kv_pool().unwrap().pages_in_use(), 8);
     let report = eng.run(None).unwrap();
     assert_eq!(report.completions.len(), 4);
+    // prompts span no full page (prefill is 3 positions < 8), so nothing
+    // was published to the prefix tree and eviction reclaims everything
+    assert!(eng.prefix_tree().is_empty());
     assert_eq!(eng.kv_bytes_active(), 0, "eviction must reclaim KV memory");
     assert_eq!(eng.kv_bytes_peak(), mid, "peak should be the full-batch watermark");
     assert_eq!(report.kv_bytes_peak, mid);
+    assert_eq!(report.kv_pages_peak, 8);
+    assert_eq!(report.max_concurrent, 4);
 
     // the recompute baseline never allocates KV at all
     let be: Box<dyn Backend> = Box::new(ScalarBackend);
@@ -424,6 +438,191 @@ fn kv_memory_grows_while_serving_and_is_reclaimed_on_eviction() {
     let report = eng.run(None).unwrap();
     assert_eq!(report.completions.len(), 4);
     assert_eq!(report.kv_bytes_peak, 0);
+    assert_eq!(report.kv_pages_peak, 0);
+}
+
+#[test]
+fn mxfp4_paged_streams_match_the_recompute_qdq_twin() {
+    // With --kv-quant mxfp4 every cached K/V row is stored as
+    // dec(quantize(row)). The recompute twin applies the same
+    // quantize∘decode to the rows it rebuilds each step, so the two
+    // engines must emit bit-identical streams — paged MXFP4 storage loses
+    // exactly the quantizer's precision and nothing else, on every
+    // backend and thread count.
+    let reqs = || {
+        synth_requests(&SynthOptions {
+            n: 6,
+            vocab: VOCAB,
+            prompt_len: 5,
+            max_new_tokens: 8,
+            vary_lengths: true,
+            rate: 0.0,
+            stop_token: None,
+            seed: 41,
+            shared_prefix_len: 0,
+        })
+    };
+    let mut all: Vec<BTreeMap<u64, Vec<i32>>> = Vec::new();
+    for (recompute, threads) in [(false, None), (false, Some(3)), (true, None)] {
+        let be: Box<dyn Backend> = match threads {
+            None => Box::new(ScalarBackend),
+            Some(t) => Box::new(ParallelBackend::with_threads(t)),
+        };
+        let cache = tf_cache(ServeMethod::Quartet, &*be);
+        let mut eng = ServeEngine::new(cache, be, 3, Sampling::greedy());
+        eng.set_recompute(recompute);
+        eng.set_kv_options(KvServeOptions {
+            page_tokens: 4,
+            quant: KvQuant::Mxfp4,
+            ..KvServeOptions::default()
+        });
+        for r in reqs() {
+            eng.submit(r).unwrap();
+        }
+        all.push(streams(&mut eng));
+    }
+    assert_eq!(all[0].len(), 6);
+    assert_eq!(all[0], all[1], "mxfp4 paged: scalar vs parallel(3)");
+    assert_eq!(all[0], all[2], "mxfp4 paged vs its recompute-qdq twin");
+}
+
+#[test]
+fn prefix_sharing_keeps_streams_and_raises_hit_rate() {
+    // 6 requests sharing an 8-token prompt prefix (12-token prompts, page
+    // 4): sharing re-references the two full prefix pages instead of
+    // recomputing them. Streams must not move — page content is a pure
+    // function of the tokens above it — while the hit rate and the page
+    // peak show the sharing actually happened.
+    let reqs = || {
+        synth_requests(&SynthOptions {
+            n: 6,
+            vocab: VOCAB,
+            prompt_len: 12,
+            max_new_tokens: 6,
+            vary_lengths: false,
+            rate: 0.0,
+            stop_token: None,
+            seed: 47,
+            shared_prefix_len: 8,
+        })
+    };
+    let mut by_share: Vec<BTreeMap<u64, Vec<i32>>> = Vec::new();
+    let mut reports = Vec::new();
+    for share in [true, false] {
+        let be: Box<dyn Backend> = Box::new(ScalarBackend);
+        let cache = tf_cache(ServeMethod::Quartet, &*be);
+        let mut eng = ServeEngine::new(cache, be, 3, Sampling::greedy());
+        eng.set_kv_options(KvServeOptions {
+            page_tokens: 4,
+            share,
+            ..KvServeOptions::default()
+        });
+        for r in reqs() {
+            eng.submit(r).unwrap();
+        }
+        let report = eng.run(None).unwrap();
+        by_share.push(report.completions.iter().map(|c| (c.id, c.tokens.clone())).collect());
+        reports.push(report);
+    }
+    assert_eq!(by_share[0].len(), 6);
+    assert_eq!(by_share[0], by_share[1], "prefix sharing changed token streams");
+    // 11 prefill positions → 2 full-page lookups per request; every
+    // request after the first hits both (they sit in the shared 8 tokens)
+    assert!(
+        reports[0].prefix_hit_rate > 0.5,
+        "hit rate {} with sharing on",
+        reports[0].prefix_hit_rate
+    );
+    assert_eq!(reports[1].prefix_hit_rate, 0.0, "hit rate with sharing off");
+    assert!(
+        reports[0].kv_pages_peak < reports[1].kv_pages_peak,
+        "sharing saved no pages: {} vs {}",
+        reports[0].kv_pages_peak,
+        reports[1].kv_pages_peak
+    );
+}
+
+#[test]
+fn chunked_prefill_streams_match_one_shot() {
+    // --prefill-chunk 3 splits each 9-position prompt prefill across
+    // decode steps (interleaved with other requests' decode); the token
+    // streams must match the one-shot prefill exactly, while the step
+    // count shows the chunking actually deferred work
+    let reqs = || {
+        synth_requests(&SynthOptions {
+            n: 5,
+            vocab: VOCAB,
+            prompt_len: 10,
+            max_new_tokens: 6,
+            vary_lengths: true,
+            rate: 0.0,
+            stop_token: None,
+            seed: 53,
+            shared_prefix_len: 0,
+        })
+    };
+    let mut per_chunk: Vec<BTreeMap<u64, Vec<i32>>> = Vec::new();
+    let mut steps = Vec::new();
+    for chunk in [0usize, 3] {
+        let be: Box<dyn Backend> = Box::new(ScalarBackend);
+        let cache = tf_cache(ServeMethod::Quartet, &*be);
+        let mut eng = ServeEngine::new(cache, be, 2, Sampling::greedy());
+        eng.set_kv_options(KvServeOptions {
+            page_tokens: 4,
+            prefill_chunk: chunk,
+            ..KvServeOptions::default()
+        });
+        for r in reqs() {
+            eng.submit(r).unwrap();
+        }
+        let report = eng.run(None).unwrap();
+        per_chunk.push(report.completions.iter().map(|c| (c.id, c.tokens.clone())).collect());
+        steps.push(report.decode_steps);
+    }
+    assert_eq!(per_chunk[0].len(), 5);
+    assert_eq!(per_chunk[0], per_chunk[1], "chunked prefill changed token streams");
+    assert!(steps[1] > steps[0], "chunked run took no extra steps: {steps:?}");
+}
+
+#[test]
+fn token_streams_independent_of_page_size() {
+    // the page size is memory layout, never numerics: page-4, page-16 and
+    // the recompute baseline all emit the same streams
+    let reqs = || {
+        synth_requests(&SynthOptions {
+            n: 6,
+            vocab: VOCAB,
+            prompt_len: 6,
+            max_new_tokens: 8,
+            vary_lengths: true,
+            rate: 0.0,
+            stop_token: None,
+            seed: 59,
+            shared_prefix_len: 0,
+        })
+    };
+    let mut all: Vec<BTreeMap<u64, Vec<i32>>> = Vec::new();
+    for pt in [4usize, 16] {
+        let be: Box<dyn Backend> = Box::new(ScalarBackend);
+        let cache = tf_cache(ServeMethod::Quartet, &*be);
+        let mut eng = ServeEngine::new(cache, be, 3, Sampling::greedy());
+        eng.set_kv_options(KvServeOptions { page_tokens: pt, ..KvServeOptions::default() });
+        for r in reqs() {
+            eng.submit(r).unwrap();
+        }
+        all.push(streams(&mut eng));
+    }
+    let be: Box<dyn Backend> = Box::new(ScalarBackend);
+    let cache = tf_cache(ServeMethod::Quartet, &*be);
+    let mut eng = ServeEngine::new(cache, be, 3, Sampling::greedy());
+    eng.set_recompute(true);
+    for r in reqs() {
+        eng.submit(r).unwrap();
+    }
+    all.push(streams(&mut eng));
+    assert_eq!(all[0].len(), 6);
+    assert_eq!(all[0], all[1], "page 4 vs page 16");
+    assert_eq!(all[0], all[2], "paged vs dense recompute");
 }
 
 #[test]
