@@ -1,0 +1,158 @@
+"""Pure-numpy NVFP4 twin of the rust reference quantizer (L2, build-time).
+
+Mirrors ``rust/src/quant/format.rs::quantize_ref`` for the NVFP4
+descriptor — 16-element groups, E2M1 elements, fractional E4M3 group
+scales, and a second-level power-of-two tensor scale — operation for
+operation in float32, so the two substrates agree bit-for-bit on codes
+and scales (up to the measure-zero log2-rounding windows noted below).
+
+Deliberately **jax-free**: unlike ``compile.formats`` this module runs in
+a bare numpy environment, because its only job is to regenerate the
+cross-language golden vectors consumed by
+``rust prop_quant::nvfp4_golden_vectors_match_python``.
+
+Usage: ``python -m compile.nvfp4 [out.json]`` (default writes
+``rust/tests/data/nvfp4_vectors.json``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+#: Non-negative E2M1 magnitudes (shared with compile.formats, restated so
+#: this module stays import-light).
+E2M1_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+E2M1_MAX = np.float32(6.0)
+
+E4M3_MAX = np.float32(448.0)
+#: Smallest positive E4M3 value (subnormal step 2^-9) — the floor for
+#: group scales so a zero group still has an invertible scale.
+E4M3_MIN_POS = np.float32(1.0 / 512.0)
+
+#: E8M0 exponent clamp shared with the MX scale rule (see formats.py for
+#: why the floor is -98 and not the spec's -127).
+E8M0_MIN_EXP = -98
+E8M0_MAX_EXP = 127
+
+#: NVFP4 group size (the MX formats use 32).
+GROUP = 16
+
+_HALF = np.float32(0.5)
+_ONE = np.float32(1.0)
+_TWO = np.float32(2.0)
+
+
+def _floor_log2_f32(a):
+    """Exact floor(log2(a)) for a > 0 via frexp (no libm rounding).
+
+    The rust side computes ``a.log2().floor()``; a faithfully-rounded f32
+    log2 can only disagree with the exact answer when ``a`` sits within
+    ~1 output ulp of a power of two, and at those points both ulp choices
+    ceil to the same next-binade scale — so frexp is the safer twin.
+    """
+    _, e = np.frexp(np.float32(a))
+    return int(e) - 1
+
+
+def e2m1_rtn(x):
+    """Round float32 values to the E2M1 grid — nearest, ties away from
+    zero, clamped to ±6. Same arithmetic as ``rust e2m1::e2m1_rtn`` (the
+    grid steps are powers of two, so every intermediate is exact)."""
+    x = np.asarray(x, dtype=np.float32)
+    a = np.abs(x)
+    step = np.where(a < 2.0, _HALF, np.where(a < 4.0, _ONE, _TWO)).astype(np.float32)
+    q = (np.floor(a / step + _HALF) * step).astype(np.float32)
+    q = np.minimum(q, E2M1_MAX)
+    return np.where(np.signbit(x), -q, q).astype(np.float32)
+
+
+def e4m3_ceil(x):
+    """Round a non-negative float32 UP to the next E4M3 magnitude,
+    clamping to 448 (identity on the grid) — ``rust fp8::e4m3_ceil``."""
+    x = np.float32(x)
+    if x <= 0.0:
+        return np.float32(0.0)
+    a = np.float32(min(float(x), float(E4M3_MAX)))
+    e = max(_floor_log2_f32(a), -6)
+    ulp = np.float32(2.0 ** (e - 3))
+    return np.float32(min(float(np.ceil(a / ulp) * ulp), float(E4M3_MAX)))
+
+
+def tensor_scale(global_absmax):
+    """Second-level power-of-two scale: 2^ceil(log2(absmax / (448·6))),
+    exponent clamped to the E8M0 range — ``GroupFormat::tensor_scale``."""
+    safe = np.float32(max(float(global_absmax), 2.0 ** E8M0_MIN_EXP))
+    r = safe / np.float32(E4M3_MAX * E2M1_MAX)
+    exp = int(np.ceil(np.log2(r)))
+    exp = min(max(exp, E8M0_MIN_EXP), E8M0_MAX_EXP)
+    return np.float32(2.0 ** exp)
+
+
+def nvfp4_rtn(x):
+    """NVFP4 quantize-dequantize of a [rows, cols] float32 tensor.
+
+    Returns ``(dq, group_scales, s_t)``: the dequantized tensor, the
+    *decoded* per-group E4M3 scales [rows, cols/16] (tensor scale not
+    included), and the tensor scale — exactly the triple the rust
+    ``GroupTensor`` stores.
+    """
+    x = np.asarray(x, dtype=np.float32)
+    rows, cols = x.shape
+    if cols % GROUP:
+        raise ValueError(f"cols {cols} not divisible by the NVFP4 group {GROUP}")
+    s_t = tensor_scale(np.max(np.abs(x)) if x.size else 0.0)
+    xg = x.reshape(rows, cols // GROUP, GROUP)
+    dq = np.zeros_like(xg)
+    scales = np.zeros((rows, cols // GROUP), dtype=np.float32)
+    for r in range(rows):
+        for g in range(cols // GROUP):
+            grp = xg[r, g]
+            amax = np.float32(np.max(np.abs(grp)))
+            # encode_scale: ceil'd fractional scale, floored so zero
+            # groups stay invertible
+            target = amax / (s_t * E2M1_MAX)
+            s = np.float32(max(float(e4m3_ceil(target)), float(E4M3_MIN_POS)))
+            scales[r, g] = s
+            # rust multiplies by the f32 reciprocal, not divides — the
+            # two differ in the last ulp, which can flip an RTN tie
+            inv = _ONE / (s * s_t)
+            dq[r, g] = e2m1_rtn(grp * inv) * (s * s_t)
+    return dq.reshape(rows, cols), scales, s_t
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "data",
+        "nvfp4_vectors.json")
+    rng = np.random.default_rng(20250711)
+    cases = []
+    for rows, cols, scale in [(1, 32, 1.0), (2, 64, 0.01), (1, 96, 100.0),
+                              (3, 32, 1e-6), (2, 160, 1.0)]:
+        x = (rng.standard_normal((rows, cols)) * scale).astype(np.float32)
+        # exercise exact zeros, a whole-group zero run (the E4M3_MIN_POS
+        # floor), and a two-level outlier that drags the tensor scale
+        x[0, 0] = 0.0
+        if cols >= 64:
+            x[0, 16:32] = 0.0
+            x[rows - 1, 33] = 24.0 * scale
+        dq, scales, s_t = nvfp4_rtn(x)
+        cases.append({
+            "rows": rows,
+            "cols": cols,
+            "x": [float(v) for v in x.reshape(-1)],
+            "tensor_scale": float(s_t),
+            "group_scales": [float(v) for v in scales.reshape(-1)],
+            "nvfp4_rtn": [float(v) for v in dq.reshape(-1)],
+        })
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"seed": 20250711, "cases": cases}, f)
+    print(f"wrote {len(cases)} cases to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,21 @@
 //! Fig 4: alternative scaling-law functional forms — free γ (Busbridge),
 //! γ=1 (Hoffmann/Chinchilla), β=1 (Kaplan) — fitted on the same grid,
 //! compared by Huber objective and max relative error.
+//!
+//! Baseline points come from three places: a paper-constant synthetic
+//! grid (always available), `bf16` records from the PJRT testbed, and
+//! `f32` records from the native sweep (`repro sweep --native` or
+//! `table3_methods --native`). `--runs DIR` points at a record tree
+//! other than the default `runs/` root — the CI smoke leg aims it at the
+//! records the Table 3 native leg just produced.
+
+use std::path::PathBuf;
 
 use quartet::bench::runs_root;
 use quartet::coordinator::runrecord::RunRecord;
 use quartet::scaling::fit::{fit_base_law, FitOptions};
 use quartet::scaling::law::{Run, PAPER_LAW};
+use quartet::util::cli::Args;
 
 fn report(runs: &[Run], label: &str) {
     println!("\n[{label}: {} baseline points]", runs.len());
@@ -30,6 +40,9 @@ fn report(runs: &[Run], label: &str) {
 
 fn main() {
     quartet::util::bench::print_header("Fig 4 — scaling-law form comparison");
+    let mut args = Args::from_env().unwrap_or_default();
+    let _ = args.flag("bench");
+    let runs_dir = args.get("runs").map(PathBuf::from).unwrap_or_else(runs_root);
 
     // paper-generated grid (always available; validates form ordering)
     let mut synth = Vec::new();
@@ -40,17 +53,38 @@ fn main() {
     }
     report(&synth, "paper-constant grid");
 
-    // real testbed runs when present
-    let recs = RunRecord::load_dir(&runs_root()).unwrap_or_default();
-    let real: Vec<Run> = recs
+    // real baseline runs when present: PJRT bf16 and native f32 each
+    // carry their own grid, so they are refit separately
+    let recs = RunRecord::load_dir(&runs_dir).unwrap_or_default();
+    let testbed: Vec<Run> = recs
         .iter()
         .filter(|r| r.method == "bf16" && !r.diverged)
         .map(|r| r.to_fit_run())
         .collect();
-    if real.len() >= 4 {
-        report(&real, "testbed runs");
+    if testbed.len() >= 4 {
+        report(&testbed, "testbed runs (bf16)");
     } else {
         println!("\n(testbed fit skipped — run `make runs` for bf16 baselines)");
     }
-    println!("\npaper finding (Fig 4): the free-γ form fits best; γ=1 and β=1 leave structure on the table.");
+    let native: Vec<Run> = recs
+        .iter()
+        .filter(|r| r.method == "f32" && r.artifact.starts_with("native-") && !r.diverged)
+        .map(|r| r.to_fit_run())
+        .collect();
+    // the native width axis is 3 points (`--preset native`), the floor
+    // the rest of the native fit tooling uses
+    if native.len() >= 3 {
+        report(&native, "native runs (f32)");
+    } else {
+        println!(
+            "\n(native fit skipped — {} f32 record(s) in {}; `repro sweep --native \
+             --preset native` produces the width axis)",
+            native.len(),
+            runs_dir.display()
+        );
+    }
+    println!(
+        "\npaper finding (Fig 4): the free-γ form fits best; γ=1 and β=1 leave structure \
+         on the table."
+    );
 }

@@ -4,12 +4,22 @@
 //! Also times each method's quantizer on a standard shape under the
 //! selected kernels backend (`--backend scalar|parallel`), since the
 //! per-step quantize cost is what Table 3's wall-clock column hides.
+//!
+//! `--native [--preset smoke|native] [--out DIR]` instead runs (or
+//! resumes) the pure-Rust native sweep over the *shared method axis*
+//! (`f32|mxfp8|quartet|rtn|nvfp4|fp4-clamp`), prints the method × width
+//! loss table, fits per-method efficiencies against the f32 baseline,
+//! and leaves the run records behind for `repro check-records` — the CI
+//! smoke leg that pins the recipe ordering runs exactly this.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 use quartet::bench::paper::TABLE3_EFF;
 use quartet::bench::runs_root;
 use quartet::coordinator::runrecord::RunRecord;
+use quartet::coordinator::sweep::{native_sweep_presets, run_native_sweep};
+use quartet::quant::format::Method;
 use quartet::quant::methods::*;
 use quartet::scaling::fit::{fit_base_law, fit_efficiencies, FitOptions};
 use quartet::scaling::law::Run;
@@ -46,12 +56,96 @@ fn bench_quantizer_zoo() {
     }
 }
 
+/// `--native`: the native-sweep Table 3 — train (resumably) the shared
+/// method axis × MLP widths, print the loss table, and fit per-method
+/// efficiencies against the f32 baseline. The records stay in `--out`
+/// so the `check-records` ordering gate can pin
+/// `f32 ≤ mxfp8 ≤ {quartet, nvfp4} < rtn` afterwards.
+fn native_table(args: &mut Args) {
+    let preset = args.str_or("preset", "smoke");
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(runs_root);
+    let be = quartet::kernels::active();
+    let jobs = native_sweep_presets(&preset).expect("--preset");
+    println!(
+        "\n[native sweep {preset:?}: {} jobs, backend = {}, records -> {}]",
+        jobs.len(),
+        be.describe(),
+        out.display()
+    );
+    let recs = run_native_sweep(&out, &jobs, be, true).expect("native sweep");
+
+    let mut widths: Vec<usize> = jobs.iter().map(|j| j.d_hidden).collect();
+    widths.sort_unstable();
+    widths.dedup();
+    let cell: BTreeMap<(String, String), &RunRecord> = recs
+        .iter()
+        .map(|r| ((r.method.clone(), r.size.clone()), r))
+        .collect();
+    print!("{:<12}", "method");
+    for w in &widths {
+        print!(" {:>9}", format!("h{w}"));
+    }
+    println!();
+    for m in Method::ALL {
+        print!("{:<12}", m.name());
+        for w in &widths {
+            match cell.get(&(m.name().to_string(), format!("h{w}"))) {
+                Some(rec) if rec.diverged || !rec.final_val_loss.is_finite() => {
+                    print!(" {:>9}", "NaN")
+                }
+                Some(rec) => print!(" {:>9.4}", rec.final_val_loss),
+                None => print!(" {:>9}", "-"),
+            }
+        }
+        println!();
+    }
+
+    // efficiency refit against the f32 baseline (needs the width axis —
+    // the single-width `smoke` preset skips this and only feeds the gate)
+    let runs: Vec<Run> = recs
+        .iter()
+        .filter(|r| !r.diverged && r.final_val_loss.is_finite())
+        .map(|r| r.to_fit_run())
+        .collect();
+    let base: Vec<Run> = runs.iter().filter(|r| r.method == "f32").cloned().collect();
+    if base.len() >= 3 {
+        let fit_opts = FitOptions { max_iters: 1500, restarts: 2, ..FitOptions::default() };
+        let (law, _) = fit_base_law(&base, &fit_opts);
+        let eff = fit_efficiencies(&law, &runs, &fit_opts);
+        println!(
+            "\n{:<12} {:>8} {:>8}    (paper 30M scale: quartet 0.64/0.94)",
+            "method", "eff_N", "eff_D"
+        );
+        for m in Method::ALL {
+            if let Some(e) = eff.get(m.name()) {
+                println!("{:<12} {:>8.3} {:>8.3}", m.name(), e.eff_n, e.eff_d);
+            }
+        }
+    } else {
+        println!(
+            "\n(efficiency refit needs ≥3 f32 widths — use `--preset native`; \
+             the {preset:?} records still feed the check-records ordering gate)"
+        );
+    }
+    println!(
+        "\nexpected ordering (gated in CI): f32 ≤ mxfp8 ≤ {{quartet, nvfp4}} < rtn, \
+         with fp4-clamp between quartet and rtn"
+    );
+}
+
 fn main() {
     quartet::util::bench::print_header("Table 3 — fully-quantized training methods (nano scale)");
     let mut args = Args::from_env().unwrap_or_default();
     let _ = args.flag("bench");
     quartet::util::cli::apply_backend_flag(&mut args).expect("--backend");
     bench_quantizer_zoo();
+    if args.flag("native") {
+        native_table(&mut args);
+        return;
+    }
     let recs = RunRecord::load_dir(&runs_root()).unwrap_or_default();
     if recs.is_empty() {
         println!("\nno runs in {} — run `make runs` and `repro sweep --preset table3`",

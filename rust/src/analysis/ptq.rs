@@ -17,7 +17,11 @@
 use crate::kernels::active;
 use crate::quant::e2m1::e2m1_rtn;
 use crate::quant::e8m0::E8m0;
-use crate::quant::mxfp4::{QuantMode, MX_GROUP};
+use crate::quant::format::MXFP4;
+use crate::quant::mxfp4::QuantMode;
+
+/// MXFP4 group size, from the format descriptor.
+const GROUP: usize = MXFP4.group;
 use crate::quant::E2M1_MAX;
 use crate::util::rng::Rng;
 
@@ -45,12 +49,12 @@ pub fn rtn_ptq(w: &mut [f32], dout: usize, din: usize, rotate: bool) {
     assert_eq!(w.len(), dout * din);
     let be = active();
     if rotate {
-        be.block_hadamard(w, MX_GROUP);
+        be.block_hadamard(w, GROUP);
     }
     let q = be.quantize_mxfp4(w, dout, din, QuantMode::Rtn, &mut Rng::new(0));
     w.copy_from_slice(&q.dequantize());
     if rotate {
-        be.block_hadamard_inv(w, MX_GROUP);
+        be.block_hadamard_inv(w, GROUP);
     }
 }
 
@@ -66,8 +70,8 @@ pub fn gptq(w: &mut [f32], dout: usize, din: usize, x_cal: &[f32], n_cal: usize,
     let be = active();
     let mut x = x_cal.to_vec();
     if opts.rotate {
-        be.block_hadamard(w, MX_GROUP);
-        be.block_hadamard(&mut x, MX_GROUP);
+        be.block_hadamard(w, GROUP);
+        be.block_hadamard(&mut x, GROUP);
     }
 
     // H = XᵀX / n + λ I
@@ -113,10 +117,10 @@ pub fn gptq(w: &mut [f32], dout: usize, din: usize, x_cal: &[f32], n_cal: usize,
     let mut scales = vec![0.0f32; dout];
     let mut total_err = 0.0f64;
     for j in 0..din {
-        if j % MX_GROUP == 0 {
+        if j % GROUP == 0 {
             // fresh per-row group scales from the *current* (compensated) W
             for (r, s) in scales.iter_mut().enumerate() {
-                let seg = &w[r * din + j..r * din + j + MX_GROUP];
+                let seg = &w[r * din + j..r * din + j + GROUP];
                 let amax = seg.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
                 *s = E8m0::from_absmax(amax, E2M1_MAX).value();
             }
@@ -149,7 +153,7 @@ pub fn gptq(w: &mut [f32], dout: usize, din: usize, x_cal: &[f32], n_cal: usize,
     }
 
     if opts.rotate {
-        be.block_hadamard_inv(w, MX_GROUP);
+        be.block_hadamard_inv(w, GROUP);
     }
     total_err / (dout * din) as f64
 }

@@ -52,6 +52,27 @@ pub struct Baselines {
     /// serve records: minimum concurrent-request multiple over the dense
     /// baseline required of the `kv_capacity` record
     pub kv_min_concurrency_vs_dense: f64,
+    /// cross-record accuracy-ordering floors over the native method
+    /// sweep (`None` when the baselines file has no "ordering" section)
+    pub ordering: Option<OrderingFloors>,
+}
+
+/// Floors for the native-sweep recipe ordering
+/// `f32 ≤ mxfp8 ≤ {quartet, nvfp4}` and `{quartet, nvfp4} < rtn`,
+/// gated **across** run records grouped by (size, seed, steps) rather
+/// than per record.
+#[derive(Debug, Clone)]
+pub struct OrderingFloors {
+    /// slack allowed on the `≤` chain (the f32/mxfp8/quartet/nvfp4 runs
+    /// sit within a few hundredths of each other at the plateau)
+    pub slack: f64,
+    /// margin by which quartet and nvfp4 must beat rtn — the headline
+    /// biased-gradient separation, which holds by whole nats at the
+    /// calibrated scale
+    pub min_rtn_margin: f64,
+    /// groups trained for fewer steps are exempt: 5-step perf smokes
+    /// (fig1/fig8 legs) are throughput evidence, not accuracy evidence
+    pub min_steps: f64,
 }
 
 impl Baselines {
@@ -75,6 +96,17 @@ impl Baselines {
             Some(kv) => (num(kv, "min_prefix_hit_rate")?, num(kv, "min_concurrency_vs_dense")?),
             None => (0.0, 0.0),
         };
+        // "ordering" is optional too: without it the cross-record
+        // accuracy gate is off entirely (pre-native-sweep baseline files
+        // keep loading, and perf-only record trees stay ungated).
+        let ordering = match j.get("ordering") {
+            Some(o) => Some(OrderingFloors {
+                slack: num(o, "slack")?,
+                min_rtn_margin: num(o, "min_rtn_margin")?,
+                min_steps: num(o, "min_steps")?,
+            }),
+            None => None,
+        };
         Ok(Baselines {
             run_min_tokens_per_sec: num(run, "min_tokens_per_sec")?,
             serve_min_tokens_per_sec: num(serve, "min_tokens_per_sec")?,
@@ -84,6 +116,7 @@ impl Baselines {
             kernel_min_predec_speedup,
             kv_min_prefix_hit_rate,
             kv_min_concurrency_vs_dense,
+            ordering,
         })
     }
 
@@ -170,6 +203,7 @@ pub fn check_records(dir: &Path, baselines: Option<&Path>) -> Result<CheckReport
         bail!("no .json records under {} — nothing to gate", dir.display());
     }
     let mut report = CheckReport::default();
+    let mut native_runs = Vec::new();
     for path in &files {
         let name = path.display().to_string();
         let text = match std::fs::read_to_string(path) {
@@ -181,14 +215,106 @@ pub fn check_records(dir: &Path, baselines: Option<&Path>) -> Result<CheckReport
             }
         };
         match Json::parse(&text) {
-            Ok(j) => check_one(&j, &name, &b, &mut report),
+            Ok(j) => {
+                check_one(&j, &name, &b, &mut report);
+                if let Some(run) = native_run(&j) {
+                    native_runs.push(run);
+                }
+            }
             Err(e) => {
                 report.checked += 1;
                 report.violations.push(format!("{name}: invalid JSON: {e}"));
             }
         }
     }
+    check_ordering(&native_runs, &b, &mut report.violations);
     Ok(report)
+}
+
+/// One native-sweep run record distilled for the cross-record ordering
+/// gate. Divergence and non-finite losses fold to +inf so a diverged run
+/// automatically loses every comparison it appears on the low side of.
+#[derive(Debug, Clone)]
+struct NativeRun {
+    size: String,
+    seed: String,
+    steps: f64,
+    method: String,
+    loss: f64,
+}
+
+fn native_run(j: &Json) -> Option<NativeRun> {
+    if j.get("train_curve").is_none() {
+        return None; // not a run record
+    }
+    let artifact = j.get("artifact")?.as_str()?;
+    if !artifact.starts_with("native-") {
+        return None; // XLA-testbed records keep their own method axis
+    }
+    let diverged = j.get("diverged").and_then(|v| v.as_bool()).unwrap_or(false);
+    let loss = j
+        .get("final_val_loss")
+        .and_then(|v| v.as_f64())
+        .filter(|l| l.is_finite() && !diverged)
+        .unwrap_or(f64::INFINITY);
+    Some(NativeRun {
+        size: j.get("size")?.as_str()?.to_string(),
+        seed: j.get("seed")?.as_f64()?.to_string(),
+        steps: j.get("steps")?.as_f64()?,
+        method: j.get("method")?.as_str()?.to_string(),
+        loss,
+    })
+}
+
+/// The recipe-ordering gate: within every (size, seed, steps) group of
+/// native runs, `f32 ≤ mxfp8 ≤ {quartet, nvfp4}` up to `slack`, and
+/// quartet/nvfp4 must beat rtn by `min_rtn_margin`. A pair is only gated
+/// when both methods are present, so partial sweeps (a quartet-only fig8
+/// leg, say) pass vacuously; when the same cell appears under several
+/// backends the *worst* loss is gated.
+fn check_ordering(runs: &[NativeRun], b: &Baselines, violations: &mut Vec<String>) {
+    let Some(f) = &b.ordering else { return };
+    use std::collections::BTreeMap;
+    type Cell = (String, String, String);
+    let mut groups: BTreeMap<Cell, BTreeMap<String, f64>> = BTreeMap::new();
+    for r in runs {
+        if r.steps < f.min_steps {
+            continue;
+        }
+        let key = (r.size.clone(), r.seed.clone(), format!("{}", r.steps));
+        let slot = groups
+            .entry(key)
+            .or_default()
+            .entry(r.method.clone())
+            .or_insert(f64::NEG_INFINITY);
+        *slot = (*slot).max(r.loss);
+    }
+    for ((size, seed, steps), methods) in &groups {
+        let both = |lo: &str, hi: &str| Some((*methods.get(lo)?, *methods.get(hi)?));
+        for (lo, hi) in [("f32", "mxfp8"), ("mxfp8", "quartet"), ("mxfp8", "nvfp4")] {
+            if let Some((l, h)) = both(lo, hi) {
+                if l > h + f.slack {
+                    violations.push(format!(
+                        "native ordering [{size} seed {seed} steps {steps}]: {lo} loss {l:.4} \
+                         exceeds {hi} loss {h:.4} + slack {} — the accuracy ordering inverted",
+                        f.slack
+                    ));
+                }
+            }
+        }
+        for lo in ["quartet", "nvfp4"] {
+            if let Some((l, rtn)) = both(lo, "rtn") {
+                if l + f.min_rtn_margin > rtn {
+                    violations.push(format!(
+                        "native ordering [{size} seed {seed} steps {steps}]: {lo} loss {l:.4} \
+                         does not beat rtn loss {rtn:.4} by the required margin {} — the \
+                         biased-gradient separation collapsed",
+                        f.min_rtn_margin
+                    ));
+                }
+            }
+        }
+    }
 }
 
 /// Classify and gate one parsed record.
@@ -519,6 +645,11 @@ mod tests {
             kernel_min_predec_speedup: 2.0,
             kv_min_prefix_hit_rate: 0.25,
             kv_min_concurrency_vs_dense: 2.0,
+            ordering: Some(OrderingFloors {
+                slack: 0.08,
+                min_rtn_margin: 0.05,
+                min_steps: 300.0,
+            }),
         }
     }
 
@@ -674,19 +805,25 @@ mod tests {
         assert_eq!(b.kernel_min_predec_speedup, 0.0);
         assert_eq!(b.kv_min_prefix_hit_rate, 0.0);
         assert_eq!(b.kv_min_concurrency_vs_dense, 0.0);
+        assert!(b.ordering.is_none());
 
         let j = Json::parse(
             r#"{"run":{"min_tokens_per_sec":10.0},
                 "serve":{"min_tokens_per_sec":2.0,"max_latency_p99_s":300.0,
                          "max_ttft_p99_s":300.0},
                 "kernel":{"min_gflops":0.05,"min_predec_speedup":2.0},
-                "kv":{"min_prefix_hit_rate":0.25,"min_concurrency_vs_dense":2.0}}"#,
+                "kv":{"min_prefix_hit_rate":0.25,"min_concurrency_vs_dense":2.0},
+                "ordering":{"slack":0.08,"min_rtn_margin":0.05,"min_steps":300}}"#,
         )
         .unwrap();
         let b = Baselines::from_json(&j).unwrap();
         assert_eq!(b.kernel_min_predec_speedup, 2.0);
         assert_eq!(b.kv_min_prefix_hit_rate, 0.25);
         assert_eq!(b.kv_min_concurrency_vs_dense, 2.0);
+        let o = b.ordering.unwrap();
+        assert_eq!(o.slack, 0.08);
+        assert_eq!(o.min_rtn_margin, 0.05);
+        assert_eq!(o.min_steps, 300.0);
     }
 
     #[test]
@@ -790,6 +927,134 @@ mod tests {
         let empty = dir.join("empty");
         std::fs::create_dir_all(&empty).unwrap();
         assert!(check_records(&empty, Some(&bpath)).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn native_json(method: &str, loss: f64, steps: usize) -> Json {
+        let mut j = run_json(5000.0);
+        j.set("artifact", Json::str(&format!("native-h128-{method}")));
+        j.set("size", Json::str("h128"));
+        j.set("method", Json::str(method));
+        j.set("steps", Json::num(steps as f64));
+        j.set("final_val_loss", Json::num(loss));
+        j
+    }
+
+    const ORDERED_BASELINES: &str = r#"{"run":{"min_tokens_per_sec":10.0},
+        "serve":{"min_tokens_per_sec":2.0,"max_latency_p99_s":300.0,
+                 "max_ttft_p99_s":300.0},
+        "ordering":{"slack":0.08,"min_rtn_margin":0.05,"min_steps":300}}"#;
+
+    fn gate_dir(records: &[(&str, f64, usize)]) -> Vec<String> {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static UNIQ: AtomicUsize = AtomicUsize::new(0);
+        let root = std::env::temp_dir().join(format!(
+            "qr_ordering_{}_{}",
+            std::process::id(),
+            UNIQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        let dir = root.join("records");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (i, (m, loss, steps)) in records.iter().enumerate() {
+            std::fs::write(
+                dir.join(format!("{i}_{m}.json")),
+                native_json(m, *loss, *steps).to_string(),
+            )
+            .unwrap();
+        }
+        let bpath = root.join("baselines.json");
+        std::fs::write(&bpath, ORDERED_BASELINES).unwrap();
+        let report = check_records(&dir, Some(&bpath)).unwrap();
+        std::fs::remove_dir_all(&root).unwrap();
+        report.violations
+    }
+
+    #[test]
+    fn ordering_gate_passes_the_expected_recipe_ranking() {
+        let v = gate_dir(&[
+            ("f32", 2.00, 500),
+            ("mxfp8", 2.02, 500),
+            ("quartet", 2.05, 500),
+            ("nvfp4", 2.04, 500),
+            ("rtn", 3.10, 500),
+        ]);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn ordering_gate_trips_on_a_collapsed_rtn_margin() {
+        let v = gate_dir(&[("quartet", 2.05, 500), ("rtn", 2.06, 500)]);
+        assert!(
+            v.iter().any(|m| m.contains("quartet") && m.contains("margin")),
+            "{v:?}"
+        );
+        let v = gate_dir(&[("nvfp4", 2.04, 500), ("rtn", 2.05, 500), ("f32", 2.0, 500)]);
+        assert!(v.iter().any(|m| m.contains("nvfp4") && m.contains("margin")), "{v:?}");
+    }
+
+    #[test]
+    fn ordering_gate_trips_on_an_inverted_slack_chain() {
+        let v = gate_dir(&[("f32", 2.50, 500), ("mxfp8", 2.00, 500)]);
+        assert!(v.iter().any(|m| m.contains("inverted")), "{v:?}");
+    }
+
+    #[test]
+    fn ordering_gate_exempts_short_perf_smokes_and_partial_sweeps() {
+        // 5-step fig1-style smoke: ordering at that depth is noise
+        let v = gate_dir(&[
+            ("f32", 9.00, 5),
+            ("mxfp8", 2.00, 5),
+            ("quartet", 5.00, 5),
+            ("rtn", 1.00, 5),
+        ]);
+        assert!(v.is_empty(), "{v:?}");
+        // partial sweep: pairs gate only when both methods are present
+        let v = gate_dir(&[("quartet", 2.05, 500), ("nvfp4", 2.04, 500)]);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn ordering_gate_folds_divergence_to_a_loss_of_infinity() {
+        // a diverged f32 run must lose to mxfp8 (gate trips)...
+        let dir = std::env::temp_dir().join(format!("qr_ord_div_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut bad = native_json("f32", 2.0, 500);
+        bad.set("diverged", Json::Bool(true));
+        bad.set("final_val_loss", Json::Null);
+        std::fs::write(dir.join("f32.json"), bad.to_string()).unwrap();
+        std::fs::write(dir.join("mxfp8.json"), native_json("mxfp8", 2.0, 500).to_string())
+            .unwrap();
+        // ...while a diverged rtn run still loses to quartet (no trip)
+        let mut rtn = native_json("rtn", 2.0, 500);
+        rtn.set("diverged", Json::Bool(true));
+        rtn.set("final_val_loss", Json::Null);
+        std::fs::write(dir.join("rtn.json"), rtn.to_string()).unwrap();
+        std::fs::write(
+            dir.join("quartet.json"),
+            native_json("quartet", 2.0, 500).to_string(),
+        )
+        .unwrap();
+        let bpath = dir.join("baselines.json");
+        std::fs::write(&bpath, ORDERED_BASELINES).unwrap();
+        // keep the baselines file outside the walked tree
+        let gated = dir.join("records");
+        std::fs::create_dir_all(&gated).unwrap();
+        for f in ["f32.json", "mxfp8.json", "rtn.json", "quartet.json"] {
+            std::fs::rename(dir.join(f), gated.join(f)).unwrap();
+        }
+        let report = check_records(&gated, Some(&bpath)).unwrap();
+        assert!(
+            report.violations.iter().any(|m| m.contains("f32") && m.contains("inverted")),
+            "{:?}",
+            report.violations
+        );
+        assert!(
+            !report.violations.iter().any(|m| m.contains("margin")),
+            "{:?}",
+            report.violations
+        );
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,19 +1,26 @@
 //! Sweep runner: the training grids behind Fig 1 / Fig 2(c) / Table 3,
 //! sized for the CPU testbed (see EXPERIMENTS.md for the paper mapping).
+//!
+//! Two families live here. The XLA sweep (`run_sweep`) replays AOT
+//! artifacts through the runtime engine; the **native sweep**
+//! (`run_native_sweep`) trains the pure-Rust testbed across the shared
+//! method axis ([`Method`]) × MLP widths, producing the run records that
+//! `repro sweep --native`, the Table 3 / Fig 4 benches, and the
+//! `check-records` accuracy-ordering gate all consume.
 
-#[cfg(feature = "xla")]
 use std::path::Path;
 
-#[cfg(feature = "xla")]
-use anyhow::Context;
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-#[cfg(feature = "xla")]
 use crate::coordinator::runrecord::RunRecord;
 #[cfg(feature = "xla")]
 use crate::coordinator::trainer::{TrainOptions, Trainer};
+use crate::data::corpus::CorpusConfig;
+use crate::kernels::Backend;
+use crate::quant::format::Method;
 #[cfg(feature = "xla")]
 use crate::runtime::engine::Engine;
+use crate::train::{train_native, ModelConfig, NativeTrainOptions};
 
 /// One grid cell: artifact name + token ratio.
 #[derive(Debug, Clone)]
@@ -148,6 +155,100 @@ pub fn run_sweep(artifacts_root: &Path, out_dir: &Path, jobs: &[SweepJob],
     Ok(records)
 }
 
+/// One native-sweep cell: a method × MLP width trained end-to-end by the
+/// pure-Rust trainer (no XLA artifacts involved).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NativeSweepJob {
+    pub method: Method,
+    pub d_hidden: usize,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+/// Named native presets — methods × widths over the shared registry.
+/// `smoke` is the CI leg: every method at the one width whose ordering
+/// separation the tier-1 tests already prove; `native` adds the width
+/// axis so the scaling law can be refit from the same records.
+pub fn native_sweep_presets(name: &str) -> Result<Vec<NativeSweepJob>> {
+    let (sizes, steps): (&[usize], usize) = match name {
+        "smoke" => (&[128], 500),
+        "native" | "native-full" => (&[64, 128, 256], 500),
+        other => anyhow::bail!("unknown native sweep preset {other:?} (try smoke|native)"),
+    };
+    let mut jobs = Vec::new();
+    for method in Method::ALL {
+        for &d_hidden in sizes {
+            jobs.push(NativeSweepJob { method, d_hidden, steps, seed: 7 });
+        }
+    }
+    Ok(jobs)
+}
+
+/// Model + optimizer calibration for one native cell. This mirrors the
+/// tier-1 ordering tests (`tests/native_training.rs`) exactly — 32-token
+/// order-2 corpus at structure 0.85, d_emb 16, lr 8e-3, batch 32 — so
+/// the `f32 ≤ mxfp8 ≤ {quartet, nvfp4} < rtn` separation the
+/// `check-records` ordering gate pins is CI-proven, not aspirational.
+pub fn native_job_config(job: &NativeSweepJob) -> (ModelConfig, NativeTrainOptions) {
+    let cfg = ModelConfig {
+        vocab: 32,
+        d_emb: 16,
+        d_hidden: job.d_hidden,
+        n_hidden: 1,
+        method: job.method,
+    };
+    let opts = NativeTrainOptions {
+        steps: job.steps,
+        batch: 32,
+        lr: 8e-3,
+        seed: job.seed,
+        eval_every: 0,
+        eval_batches: 8,
+        log_every: 100,
+        verbose: false,
+        corpus: CorpusConfig { vocab: 32, structure: 0.85, ..CorpusConfig::default() },
+        dist: None,
+    };
+    (cfg, opts)
+}
+
+/// Execute a native sweep, writing run records into `out_dir`. Resumable:
+/// a job whose record already exists (matched on artifact + seed + steps,
+/// not filename, so a diverged rerun with a different token ratio still
+/// counts) is reused rather than retrained.
+pub fn run_native_sweep(
+    out_dir: &Path,
+    jobs: &[NativeSweepJob],
+    be: &dyn Backend,
+    verbose: bool,
+) -> Result<Vec<RunRecord>> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let existing = RunRecord::load_dir(out_dir).unwrap_or_default();
+    let mut records = Vec::new();
+    for job in jobs {
+        let artifact = format!("native-h{}-{}", job.d_hidden, job.method.name());
+        if let Some(prev) = existing
+            .iter()
+            .find(|r| r.artifact == artifact && r.seed == job.seed && r.steps == job.steps)
+        {
+            if verbose {
+                eprintln!("[sweep] cached {artifact} (seed {}, {} steps)", job.seed, job.steps);
+            }
+            records.push(prev.clone());
+            continue;
+        }
+        if verbose {
+            eprintln!("[sweep] {artifact}: {} steps on {}", job.steps, be.name());
+        }
+        let (cfg, opts) = native_job_config(job);
+        let (rec, _model) = train_native(&cfg, &opts, be)?;
+        rec.save(out_dir)?;
+        records.push(rec);
+    }
+    Ok(records)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +266,40 @@ mod tests {
         // 25x tokens on 20480 params at 512 tokens/step = 1000 steps
         assert_eq!(steps_for_ratio(25.0, 20_480, 512), 1000);
         assert_eq!(steps_for_ratio(0.001, 20_480, 512), 1);
+    }
+
+    #[test]
+    fn native_presets_cover_the_full_method_axis() {
+        let smoke = native_sweep_presets("smoke").unwrap();
+        assert_eq!(smoke.len(), Method::ALL.len());
+        assert!(smoke.iter().all(|j| j.d_hidden == 128 && j.steps == 500));
+        let full = native_sweep_presets("native").unwrap();
+        assert_eq!(full.len(), Method::ALL.len() * 3);
+        assert!(native_sweep_presets("nope").is_err());
+    }
+
+    #[test]
+    fn native_sweep_resumes_from_existing_records() {
+        let dir = std::env::temp_dir().join(format!("qr_native_sweep_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let jobs = vec![
+            NativeSweepJob { method: Method::F32, d_hidden: 32, steps: 3, seed: 7 },
+            NativeSweepJob { method: Method::Nvfp4, d_hidden: 32, steps: 3, seed: 7 },
+        ];
+        let be = crate::kernels::ScalarBackend;
+        let first = run_native_sweep(&dir, &jobs, &be, false).unwrap();
+        assert_eq!(first.len(), 2);
+        assert_eq!(first[0].artifact, "native-h32-f32");
+        assert_eq!(first[1].artifact, "native-h32-nvfp4");
+        // doctor one record on disk: a resumed pass must surface the
+        // doctored value (proving it loaded the record instead of
+        // retraining), and must not touch the other cell either
+        let mut doctored = first[0].clone();
+        doctored.final_val_loss = 12.5;
+        doctored.save(&dir).unwrap();
+        let second = run_native_sweep(&dir, &jobs, &be, false).unwrap();
+        assert_eq!(second[0].final_val_loss, 12.5);
+        assert_eq!(second[1].steps, first[1].steps);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -41,6 +41,7 @@ use anyhow::{anyhow, Result};
 
 use crate::quant::e2m1::byte_decode_lut;
 use crate::quant::e8m0::E8m0;
+use crate::quant::format::{GroupFormat, GroupTensor};
 use crate::quant::hadamard::BlockHadamard;
 use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode};
 use crate::util::rng::Rng;
@@ -283,6 +284,49 @@ pub trait Backend: Send + Sync {
             }
         }
         acc
+    }
+
+    /// Quantize a dense `[rows, cols]` tensor under an arbitrary
+    /// [`GroupFormat`] descriptor (`cols % fmt.group == 0`). This is the
+    /// descriptor-parameterized generalization of
+    /// [`Backend::quantize_mxfp4`]: NVFP4 and any future format flow
+    /// through here. The default routes to the scalar reference
+    /// (`quant::format::quantize_ref`), so every backend is bit-identical
+    /// on this path *by construction*; an override takes on the burden of
+    /// preserving that bit-identity (pinned for all formats × backends in
+    /// `tests/backend_equivalence.rs`).
+    fn quantize_group(
+        &self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: &'static GroupFormat,
+        mode: QuantMode,
+        rng: &mut Rng,
+    ) -> GroupTensor {
+        crate::quant::format::quantize_ref(data, rows, cols, fmt, mode, rng)
+    }
+
+    /// Decode a [`GroupTensor`] to dense row-major f32, scales (both
+    /// levels) folded. Same bit-identity contract as
+    /// [`Backend::quantize_group`].
+    fn decode_group(&self, t: &GroupTensor) -> Vec<f32> {
+        crate::quant::format::decode_ref(t)
+    }
+
+    /// C = A · Bᵀ over descriptor-packed operands (A `[M,K]`, B `[N,K]`,
+    /// same format) — the format-generic sibling of
+    /// [`Backend::gemm_mxfp4`]. Default decodes through the scalar
+    /// reference and accumulates with the shared `dot_f32` kernel.
+    fn gemm_group(&self, a: &GroupTensor, b: &GroupTensor) -> Vec<f32> {
+        crate::quant::format::gemm_ref(a, b)
+    }
+
+    /// Decode-once variant of [`Backend::gemm_group`]: B (`[n, k]`) was
+    /// decoded ahead of time by [`Backend::decode_group`]. Must equal
+    /// `gemm_group(a, b_packed)` whenever `b_dec == decode_group(b_packed)`.
+    fn gemm_group_predec(&self, a: &GroupTensor, b_dec: &[f32], n: usize) -> Vec<f32> {
+        crate::quant::format::gemm_predec_ref(a, b_dec, n)
     }
 
     /// Apply H_g to each contiguous g-group along the last axis, in place.

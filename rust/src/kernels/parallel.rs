@@ -21,7 +21,11 @@
 use crate::kernels::{scalar, simd, Backend, Lanes, SimdBackend};
 use crate::quant::e2m1::byte_decode_lut;
 use crate::quant::e8m0::E8m0;
-use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::quant::format::MXFP4;
+use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode};
+
+/// MXFP4 group size, from the format descriptor.
+const GROUP: usize = MXFP4.group;
 use crate::util::rng::Rng;
 
 /// Rows of B decoded per cache-blocked GEMM tile: 64 rows × k ≤ 11008
@@ -132,7 +136,7 @@ impl Backend for ParallelBackend {
         rng: &mut Rng,
     ) -> Mxfp4Tensor {
         assert_eq!(data.len(), rows * cols);
-        assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
+        assert_eq!(cols % GROUP, 0, "cols must be a multiple of 32");
         let stochastic = matches!(mode, QuantMode::Sr | QuantMode::SrPrescaled);
         let threads = self.pool_size().min(rows.max(1));
         let lanes = self.lanes();
@@ -140,7 +144,7 @@ impl Backend for ParallelBackend {
             return self.inner().quantize_mxfp4(data, rows, cols, mode, rng);
         }
 
-        let gpr = cols / MX_GROUP;
+        let gpr = cols / GROUP;
         let mut codes = vec![0u8; rows * cols / 2];
         let mut scales = vec![E8m0(0); rows * gpr];
         let mut mask = if mode == QuantMode::Quest {
@@ -536,7 +540,7 @@ impl Backend for ParallelBackend {
         salts: &[u64],
     ) -> Vec<f32> {
         assert_eq!(parts.len(), salts.len(), "one salt per part");
-        assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
+        assert_eq!(cols % GROUP, 0, "cols must be a multiple of 32");
         for part in parts {
             assert_eq!(part.len(), rows * cols, "part shape mismatch");
         }
@@ -556,7 +560,7 @@ impl Backend for ParallelBackend {
         let part_salts: Vec<u64> = salts.iter().map(|&s| Rng::new(s).next_u64()).collect();
         let threads = self.pool_size().min(rows);
         let lanes = self.lanes();
-        let gpr = cols / MX_GROUP;
+        let gpr = cols / GROUP;
         let lut = byte_decode_lut();
         let rows_per = (rows + threads - 1) / threads;
         std::thread::scope(|s| {
@@ -656,8 +660,8 @@ mod tests {
         assert_eq!(plain.gemm_mxfp4(&t, &t), fused.gemm_mxfp4(&t, &t));
         let mut h1 = x.clone();
         let mut h2 = x.clone();
-        plain.block_hadamard(&mut h1, MX_GROUP);
-        fused.block_hadamard(&mut h2, MX_GROUP);
+        plain.block_hadamard(&mut h1, GROUP);
+        fused.block_hadamard(&mut h2, GROUP);
         assert_eq!(h1, h2);
     }
 

@@ -7,7 +7,11 @@
 use crate::kernels::Backend;
 use crate::quant::e2m1::{byte_decode_lut, e2m1_encode_rtn, e2m1_encode_sr, E2M1_MAX};
 use crate::quant::e8m0::E8m0;
-use crate::quant::mxfp4::{quest_scale, Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::quant::format::MXFP4;
+use crate::quant::mxfp4::{quest_scale, Mxfp4Tensor, QuantMode};
+
+/// MXFP4 group size, from the format descriptor.
+const GROUP: usize = MXFP4.group;
 use crate::util::rng::Rng;
 
 /// Single-threaded reference kernels.
@@ -28,8 +32,8 @@ impl Backend for ScalarBackend {
         rng: &mut Rng,
     ) -> Mxfp4Tensor {
         assert_eq!(data.len(), rows * cols);
-        assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
-        let gpr = cols / MX_GROUP;
+        assert_eq!(cols % GROUP, 0, "cols must be a multiple of 32");
+        let gpr = cols / GROUP;
         let mut codes = vec![0u8; rows * cols / 2];
         let mut scales = vec![E8m0(0); rows * gpr];
         let mut mask = if mode == QuantMode::Quest {
@@ -133,11 +137,11 @@ pub(crate) fn quantize_rows(
     scales: &mut [E8m0],
     mut mask: Option<&mut [u64]>,
 ) {
-    let gpr = cols / MX_GROUP;
+    let gpr = cols / GROUP;
     for r in 0..rows {
         for g in 0..gpr {
-            let base = r * cols + g * MX_GROUP;
-            let group = &data[base..base + MX_GROUP];
+            let base = r * cols + g * GROUP;
+            let group = &data[base..base + GROUP];
             let (scale, clip_ok) = match mode {
                 QuantMode::Quest => quest_scale(group),
                 _ => {
@@ -147,7 +151,7 @@ pub(crate) fn quantize_rows(
             };
             scales[r * gpr + g] = scale;
             let inv = 1.0 / scale.value();
-            for i in 0..MX_GROUP {
+            for i in 0..GROUP {
                 let x = group[i] * inv;
                 let code = match mode {
                     QuantMode::Rtn | QuantMode::Quest => e2m1_encode_rtn(x),
@@ -181,11 +185,11 @@ pub(crate) fn decode_row(
     out: &mut [f32],
 ) {
     let k = t.cols;
-    let gpr = k / MX_GROUP;
+    let gpr = k / GROUP;
     for g in 0..gpr {
         let s = t.scales[row * gpr + g].value();
-        let base = (row * k + g * MX_GROUP) / 2;
-        let dst = &mut out[g * MX_GROUP..(g + 1) * MX_GROUP];
+        let base = (row * k + g * GROUP) / 2;
+        let dst = &mut out[g * GROUP..(g + 1) * GROUP];
         for (bi, pair) in dst.chunks_exact_mut(2).enumerate() {
             let (lo, hi) = lut[t.codes[base + bi] as usize];
             pair[0] = lo * s;
@@ -324,11 +328,11 @@ pub(crate) fn attention_paged_heads(
                     } => {
                         for bi in 0..hd / 2 {
                             let flat = src + 2 * bi;
-                            let ks = k_scales[flat / MX_GROUP].value();
+                            let ks = k_scales[flat / GROUP].value();
                             let (lo, hi_v) = lut[k_codes[flat / 2] as usize];
                             kbuf[dst + 2 * bi] = lo * ks;
                             kbuf[dst + 2 * bi + 1] = hi_v * ks;
-                            let vs = v_scales[flat / MX_GROUP].value();
+                            let vs = v_scales[flat / GROUP].value();
                             let (lo, hi_v) = lut[v_codes[flat / 2] as usize];
                             vbuf[dst + 2 * bi] = lo * vs;
                             vbuf[dst + 2 * bi + 1] = hi_v * vs;

@@ -45,7 +45,11 @@
 use crate::kernels::{scalar, Backend};
 use crate::quant::e2m1::{byte_decode_lut, e2m1_encode_rtn, e2m1_encode_sr, E2M1_MAX};
 use crate::quant::e8m0::E8m0;
-use crate::quant::mxfp4::{quest_scale, Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::quant::format::MXFP4;
+use crate::quant::mxfp4::{quest_scale, Mxfp4Tensor, QuantMode};
+
+/// MXFP4 group size, from the format descriptor.
+const GROUP: usize = MXFP4.group;
 use crate::util::rng::Rng;
 
 /// Register-tile width of the fused decode+MAC microkernel: B rows whose
@@ -156,8 +160,8 @@ impl Backend for SimdBackend {
         rng: &mut Rng,
     ) -> Mxfp4Tensor {
         assert_eq!(data.len(), rows * cols);
-        assert_eq!(cols % MX_GROUP, 0, "cols must be a multiple of 32");
-        let gpr = cols / MX_GROUP;
+        assert_eq!(cols % GROUP, 0, "cols must be a multiple of 32");
+        let gpr = cols / GROUP;
         let mut codes = vec![0u8; rows * cols / 2];
         let mut scales = vec![E8m0(0); rows * gpr];
         let mut mask = if mode == QuantMode::Quest {
@@ -418,12 +422,12 @@ fn quantize_rows_vec(
     scales: &mut [E8m0],
     mut mask: Option<&mut [u64]>,
 ) {
-    let gpr = cols / MX_GROUP;
-    let mut scratch = [0.0f32; MX_GROUP];
+    let gpr = cols / GROUP;
+    let mut scratch = [0.0f32; GROUP];
     for r in 0..rows {
         for g in 0..gpr {
-            let base = r * cols + g * MX_GROUP;
-            let group = &data[base..base + MX_GROUP];
+            let base = r * cols + g * GROUP;
+            let group = &data[base..base + GROUP];
             let (scale, clip_ok) = match mode {
                 QuantMode::Quest => quest_scale(group),
                 _ => {
@@ -434,7 +438,7 @@ fn quantize_rows_vec(
             scales[r * gpr + g] = scale;
             let inv = 1.0 / scale.value();
             prescale(lanes, group, inv, &mut scratch);
-            for i in 0..MX_GROUP {
+            for i in 0..GROUP {
                 let x = scratch[i];
                 let code = match mode {
                     QuantMode::Rtn | QuantMode::Quest => e2m1_encode_rtn(x),
@@ -475,7 +479,7 @@ fn group_absmax(lanes: Lanes, group: &[f32]) -> f32 {
 
 /// Vectorized `out[i] = group[i] * inv` (the E8M0 scale broadcast).
 #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
-fn prescale(lanes: Lanes, group: &[f32], inv: f32, out: &mut [f32; MX_GROUP]) {
+fn prescale(lanes: Lanes, group: &[f32], inv: f32, out: &mut [f32; GROUP]) {
     match lanes {
         Lanes::Scalar => {
             for (o, &v) in out.iter_mut().zip(group) {
@@ -501,7 +505,8 @@ fn prescale(lanes: Lanes, group: &[f32], inv: f32, out: &mut [f32; MX_GROUP]) {
 mod avx2 {
     use std::arch::x86_64::*;
 
-    use crate::quant::mxfp4::{Mxfp4Tensor, MX_GROUP};
+    use super::GROUP;
+    use crate::quant::mxfp4::Mxfp4Tensor;
 
     /// E2M1 magnitude grid as an in-register shuffle table.
     static MAG: [f32; 8] = crate::quant::e2m1::E2M1_GRID;
@@ -539,16 +544,16 @@ mod avx2 {
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn decode_row(t: &Mxfp4Tensor, row: usize, out: &mut [f32]) {
         let k = t.cols;
-        let gpr = k / MX_GROUP;
+        let gpr = k / GROUP;
         let mag = _mm256_loadu_ps(MAG.as_ptr());
         for g in 0..gpr {
             let sv = _mm256_set1_ps(t.scales[row * gpr + g].value());
-            let base = (row * k + g * MX_GROUP) / 2;
+            let base = (row * k + g * GROUP) / 2;
             let bytes = _mm_loadu_si128(t.codes.as_ptr().add(base) as *const __m128i);
             let quarters = unpack_group(bytes);
             for (q, &codes8) in quarters.iter().enumerate() {
                 _mm256_storeu_ps(
-                    out.as_mut_ptr().add(g * MX_GROUP + q * 8),
+                    out.as_mut_ptr().add(g * GROUP + q * 8),
                     decode8(codes8, mag, sv),
                 );
             }
@@ -591,17 +596,17 @@ mod avx2 {
         out: &mut [f32],
     ) {
         let k = t.cols;
-        let gpr = k / MX_GROUP;
+        let gpr = k / GROUP;
         let mag = _mm256_loadu_ps(MAG.as_ptr());
         let mut acc = [_mm256_setzero_ps(); super::NB];
         for g in 0..gpr {
             let sv = _mm256_set1_ps(t.scales[row * gpr + g].value());
-            let base = (row * k + g * MX_GROUP) / 2;
+            let base = (row * k + g * GROUP) / 2;
             let bytes = _mm_loadu_si128(t.codes.as_ptr().add(base) as *const __m128i);
             let quarters = unpack_group(bytes);
             for (q, &codes8) in quarters.iter().enumerate() {
                 let va = decode8(codes8, mag, sv);
-                let off = g * MX_GROUP + q * 8;
+                let off = g * GROUP + q * 8;
                 for (jj, a) in acc.iter_mut().enumerate().take(nb) {
                     let vb = _mm256_loadu_ps(b_dec.as_ptr().add((j0 + jj) * k + off));
                     *a = _mm256_add_ps(*a, _mm256_mul_ps(va, vb));
@@ -623,7 +628,7 @@ mod avx2 {
     pub(super) unsafe fn group_absmax(group: &[f32]) -> f32 {
         let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
         let mut m = _mm256_setzero_ps();
-        for q in 0..MX_GROUP / 8 {
+        for q in 0..GROUP / 8 {
             let v = _mm256_loadu_ps(group.as_ptr().add(q * 8));
             m = _mm256_max_ps(m, _mm256_and_ps(v, absmask));
         }
@@ -634,9 +639,9 @@ mod avx2 {
 
     /// Vectorized scale broadcast: `out[i] = group[i] * inv`.
     #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn prescale(group: &[f32], inv: f32, out: &mut [f32; MX_GROUP]) {
+    pub(super) unsafe fn prescale(group: &[f32], inv: f32, out: &mut [f32; GROUP]) {
         let vi = _mm256_set1_ps(inv);
-        for q in 0..MX_GROUP / 8 {
+        for q in 0..GROUP / 8 {
             let v = _mm256_loadu_ps(group.as_ptr().add(q * 8));
             _mm256_storeu_ps(out.as_mut_ptr().add(q * 8), _mm256_mul_ps(v, vi));
         }
@@ -699,7 +704,8 @@ mod neon {
     use std::arch::aarch64::*;
 
     use crate::quant::e2m1::e2m1_decode;
-    use crate::quant::mxfp4::{Mxfp4Tensor, MX_GROUP};
+    use super::GROUP;
+    use crate::quant::mxfp4::Mxfp4Tensor;
 
     /// Byte-index tables for `vqtbl1q_u8` replication: REP4[j] selects
     /// nibble-vector bytes 4j..4j+4, each repeated 4× (one per f32 byte).
@@ -763,15 +769,15 @@ mod neon {
 
     pub(super) unsafe fn decode_row(t: &Mxfp4Tensor, row: usize, out: &mut [f32]) {
         let k = t.cols;
-        let gpr = k / MX_GROUP;
+        let gpr = k / GROUP;
         let tbl = value_table();
         for g in 0..gpr {
             let sv = vdupq_n_f32(t.scales[row * gpr + g].value());
-            let base = (row * k + g * MX_GROUP) / 2;
+            let base = (row * k + g * GROUP) / 2;
             let bytes = vld1q_u8(t.codes.as_ptr().add(base));
             let vecs = decode_group(tbl, bytes, sv);
             for (q, v) in vecs.into_iter().enumerate() {
-                vst1q_f32(out.as_mut_ptr().add(g * MX_GROUP + q * 4), v);
+                vst1q_f32(out.as_mut_ptr().add(g * GROUP + q * 4), v);
             }
         }
     }
@@ -808,16 +814,16 @@ mod neon {
         out: &mut [f32],
     ) {
         let k = t.cols;
-        let gpr = k / MX_GROUP;
+        let gpr = k / GROUP;
         let tbl = value_table();
         let mut acc = [[vdupq_n_f32(0.0); 2]; super::NB];
         for g in 0..gpr {
             let sv = vdupq_n_f32(t.scales[row * gpr + g].value());
-            let base = (row * k + g * MX_GROUP) / 2;
+            let base = (row * k + g * GROUP) / 2;
             let bytes = vld1q_u8(t.codes.as_ptr().add(base));
             let vecs = decode_group(tbl, bytes, sv);
             for (q, va) in vecs.into_iter().enumerate() {
-                let off = g * MX_GROUP + q * 4;
+                let off = g * GROUP + q * 4;
                 for (jj, a) in acc.iter_mut().enumerate().take(nb) {
                     let vb = vld1q_f32(b_dec.as_ptr().add((j0 + jj) * k + off));
                     a[q % 2] = vaddq_f32(a[q % 2], vmulq_f32(va, vb));
@@ -835,7 +841,7 @@ mod neon {
 
     pub(super) unsafe fn group_absmax(group: &[f32]) -> f32 {
         let mut m = vdupq_n_f32(0.0);
-        for q in 0..MX_GROUP / 4 {
+        for q in 0..GROUP / 4 {
             m = vmaxq_f32(m, vabsq_f32(vld1q_f32(group.as_ptr().add(q * 4))));
         }
         let mut lanes = [0.0f32; 4];
@@ -843,9 +849,9 @@ mod neon {
         lanes.iter().fold(0.0f32, |a, &b| a.max(b))
     }
 
-    pub(super) unsafe fn prescale(group: &[f32], inv: f32, out: &mut [f32; MX_GROUP]) {
+    pub(super) unsafe fn prescale(group: &[f32], inv: f32, out: &mut [f32; GROUP]) {
         let vi = vdupq_n_f32(inv);
-        for q in 0..MX_GROUP / 4 {
+        for q in 0..GROUP / 4 {
             let v = vld1q_f32(group.as_ptr().add(q * 4));
             vst1q_f32(out.as_mut_ptr().add(q * 4), vmulq_f32(v, vi));
         }

@@ -8,7 +8,8 @@
 //!               [--workers 4] [--reduce f32|mxfp4] [--shards 4]
 //!               [--checkpoint ckpt.json] [--out runs]    # pure Rust
 //! repro train   --artifact n80k-quartet --steps 200 [--lr 2e-3] [--seed 0]
-//! repro sweep   --preset reduced --out runs [--max-steps 4000]
+//! repro sweep   --native [--preset smoke|native] [--out runs]  # pure Rust
+//! repro sweep   --preset reduced --out runs [--max-steps 4000]   # PJRT
 //! repro serve   [--checkpoint ckpt.json] --method quartet [--max-batch 8]
 //!               [--arch mlp|transformer] [--recompute]
 //!               [--kv-page-size 16] [--kv-quant f32|mxfp4]
@@ -26,12 +27,14 @@
 //! Every subcommand honours the global `--backend
 //! scalar|parallel|simd|parallel+simd` flag (or the `QUARTET_BACKEND`
 //! env var) selecting the kernels backend.
-//! `train --native` runs the pure-Rust Quartet trainer (no PJRT; method
-//! axis `f32|mxfp8|quartet|rtn`) and `serve` without `--artifact` runs
-//! the native continuous-batching engine (serve method axis
-//! `f32|mxfp8|quartet`); artifact-based `train`/`sweep`/`serve`/`info`
-//! execute through PJRT and need `--features xla`; the rest are pure
-//! Rust.
+//! `train --native` runs the pure-Rust Quartet trainer and `serve`
+//! without `--artifact` runs the native continuous-batching engine; both
+//! share one method axis
+//! (`f32|mxfp8|quartet|rtn|nvfp4|fp4-clamp`, see
+//! [`quartet::quant::format::Method`]). `sweep --native` trains that
+//! axis across MLP widths and refits the scaling law from the records.
+//! Artifact-based `train`/`sweep`/`serve`/`info` execute through PJRT
+//! and need `--features xla`; the rest are pure Rust.
 
 use anyhow::{bail, Result};
 
@@ -68,10 +71,12 @@ fn main() -> Result<()> {
             println!(
                 "usage: repro <info|train|sweep|serve|regions|table2|kernels|check-records> [flags]"
             );
-            println!("       repro train --native --method f32|mxfp8|quartet|rtn");
+            let axis = quartet::quant::format::Method::axis_help();
+            println!("       repro train --native --method {axis}");
             println!("                   [--arch mlp|transformer]");
             println!("                   [--workers N --reduce f32|mxfp4 --shards S]  (pure Rust)");
-            println!("       repro serve --method f32|mxfp8|quartet [--checkpoint ckpt.json]");
+            println!("       repro sweep --native [--preset smoke|native] [--out DIR] (pure Rust)");
+            println!("       repro serve --method {axis} [--checkpoint ckpt.json]");
             println!("                   [--arch mlp|transformer] [--recompute]");
             println!("                   [--kv-page-size 16 --kv-quant f32|mxfp4]");
             println!("                   [--prefill-chunk C --kv-pool-bytes N --no-prefix-share]");
@@ -300,8 +305,91 @@ fn cmd_train_xla(_args: &mut Args) -> Result<()> {
     no_xla("train (artifact mode; `train --native` is pure Rust)")
 }
 
-#[cfg(feature = "xla")]
+/// `sweep` front door: `--native` runs the pure-Rust method × width grid
+/// and refits the scaling law from its records; otherwise the PJRT
+/// artifact sweep (xla feature).
 fn cmd_sweep(args: &mut Args) -> Result<()> {
+    if args.flag("native") {
+        return cmd_sweep_native(args);
+    }
+    cmd_sweep_xla(args)
+}
+
+/// Native sweep: the shared method axis × MLP widths through the
+/// pure-Rust trainer (resumable — existing records are reused), followed
+/// by the native scaling-law refit: base law on the f32 runs, per-method
+/// parameter/data efficiencies on everything else, through the same
+/// `scaling::fit` the PJRT sweeps use.
+fn cmd_sweep_native(args: &mut Args) -> Result<()> {
+    use quartet::coordinator::sweep::{native_sweep_presets, run_native_sweep};
+    use quartet::scaling::fit::{fit_base_law, fit_efficiencies, FitOptions};
+    use quartet::scaling::law::Run;
+
+    let preset = args.str_or("preset", "smoke");
+    let out = PathBuf::from(args.str_or("out", "runs"));
+    let verbose = !args.flag("quiet");
+    args.finish()?;
+
+    let jobs = native_sweep_presets(&preset)?;
+    let be = quartet::kernels::active();
+    println!(
+        "native sweep {preset:?}: {} jobs [{} backend] -> {}",
+        jobs.len(),
+        be.describe(),
+        out.display()
+    );
+    let recs = run_native_sweep(&out, &jobs, be, verbose)?;
+    println!(
+        "{:<24} {:>8} {:>7} {:>10} {:>10}",
+        "artifact", "method", "steps", "val loss", "tok/s"
+    );
+    for r in &recs {
+        println!(
+            "{:<24} {:>8} {:>7} {:>10.4} {:>10.0}{}",
+            r.artifact,
+            r.method,
+            r.steps,
+            r.final_val_loss,
+            r.tokens_per_sec,
+            if r.diverged { "  [DIVERGED]" } else { "" }
+        );
+    }
+
+    // ---- native scaling-law refit over the records ---------------------
+    let runs: Vec<Run> = recs.iter().filter(|r| !r.diverged).map(|r| r.to_fit_run()).collect();
+    let base: Vec<Run> = runs.iter().filter(|r| r.method == "f32").cloned().collect();
+    if base.len() >= 3 {
+        let fit_opts = FitOptions { max_iters: 1500, restarts: 2, ..FitOptions::default() };
+        let (law, obj) = fit_base_law(&base, &fit_opts);
+        println!(
+            "\n[scaling::fit over {} native runs ({} f32 baseline)]  huber obj {obj:.3e}",
+            runs.len(),
+            base.len()
+        );
+        println!(
+            "base law: A={:.3e} α={:.3} B={:.3e} β={:.3} E={:.3} γ={:.3}",
+            law.a, law.alpha, law.b, law.beta, law.e, law.gamma
+        );
+        let eff = fit_efficiencies(&law, &runs, &fit_opts);
+        println!(
+            "{:<10} {:>8} {:>8}   (paper scale: quartet 0.64/0.94)",
+            "method", "eff_N", "eff_D"
+        );
+        for (m, e) in &eff {
+            println!("{:<10} {:>8.3} {:>8.3}", m, e.eff_n, e.eff_d);
+        }
+    } else {
+        println!(
+            "\n[refit skipped — the {preset:?} preset trains {} f32 width(s); \
+             use `--preset native` (3 widths) for a base-law fit]",
+            base.len()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn cmd_sweep_xla(args: &mut Args) -> Result<()> {
     let root = artifacts_root(args);
     let preset = args.str_or("preset", "reduced");
     let out = PathBuf::from(args.str_or("out", "runs"));
@@ -324,8 +412,8 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "xla"))]
-fn cmd_sweep(_args: &mut Args) -> Result<()> {
-    no_xla("sweep")
+fn cmd_sweep_xla(_args: &mut Args) -> Result<()> {
+    no_xla("sweep (artifact mode; `sweep --native` is pure Rust)")
 }
 
 /// `serve` front door: with `--artifact` the PJRT prefill engine (xla

@@ -1,0 +1,593 @@
+//! The format-descriptor layer: every group-quantized FP format in the
+//! crate is described by a [`GroupFormat`] — group size, element codec,
+//! scale codec, and whether a second (per-tensor) scaling level applies —
+//! and quantize/decode/packed-GEMM are parameterized by the descriptor
+//! instead of the historical implicit `MX_GROUP = 32` global.
+//!
+//! Three formats ship as consts:
+//!
+//! * [`MXFP4`] — the paper's format: E2M1 nibbles, E8M0 power-of-two
+//!   scales, 32-element groups. `quant::mxfp4::MX_GROUP` is now *derived*
+//!   from this descriptor, so the legacy fast paths and the descriptor
+//!   path can never disagree about geometry.
+//! * [`NVFP4`] — 16-element groups with E4M3-encoded fractional scales and
+//!   two-level scaling (a per-tensor power-of-two scale keeps the E4M3
+//!   group scales in range), after "Pretraining Large Language Models with
+//!   NVFP4".
+//! * [`MXFP8`] — E4M3 elements with E8M0 scales over 32-groups; the byte
+//!   twin of `quant::fp8::mxfp8_rtn`.
+//!
+//! The reference implementations here ([`quantize_ref`], [`decode_ref`],
+//! [`gemm_ref`]) are scalar and deliberately simple; `kernels::Backend`
+//! exposes them as `quantize_group`/`decode_group`/`gemm_group` trait
+//! *defaults*, so every backend (scalar, parallel, simd, parallel+simd) is
+//! bit-identical on the descriptor path by construction. A backend that
+//! overrides those hooks takes on the burden of preserving bit-identity —
+//! `tests/backend_equivalence.rs` pins it for all formats × backends.
+//!
+//! This module also owns [`Method`], the single method-axis enum shared by
+//! training (`train::TrainMethod`) and serving (`serve::cache::ServeMethod`)
+//! — those names are now thin type aliases. One `name()`/`parse()` registry
+//! feeds CLI flags, bench args, RunRecords and ServeRecords, so adding a
+//! recipe is a one-file change.
+
+use crate::quant::e2m1::{e2m1_decode, e2m1_encode_rtn, e2m1_encode_sr, E2M1_MAX};
+use crate::quant::e8m0::E8m0;
+use crate::quant::fp8::{e4m3_ceil, e4m3_decode_bits, e4m3_encode_bits, E4M3_MAX};
+use crate::quant::mxfp4::QuantMode;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// How the in-group elements are stored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElemCodec {
+    /// 4-bit E2M1 (sign + 2-bit exponent + 1-bit mantissa), packed two
+    /// codes per byte, low nibble = even column. Grid max 6.
+    E2m1,
+    /// 8-bit E4M3 (sign + 4-bit exponent + 3-bit mantissa), one byte per
+    /// element. Grid max 448.
+    E4m3,
+}
+
+impl ElemCodec {
+    pub const fn bits(self) -> usize {
+        match self {
+            ElemCodec::E2m1 => 4,
+            ElemCodec::E4m3 => 8,
+        }
+    }
+
+    /// Largest representable magnitude on the element grid.
+    pub const fn max(self) -> f32 {
+        match self {
+            ElemCodec::E2m1 => E2M1_MAX,
+            ElemCodec::E4m3 => E4M3_MAX,
+        }
+    }
+}
+
+/// How the per-group scale byte is encoded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleCodec {
+    /// Biased power-of-two exponent (the MX scale). Ceil-rounded via
+    /// `E8m0::from_absmax`, so `amax / scale <= elem_max` always.
+    E8m0,
+    /// E4M3 fractional scale (NVFP4). Ceil-rounded via `e4m3_ceil` with a
+    /// floor at the smallest E4M3 subnormal, preserving the same coverage
+    /// guarantee: the group amax never exceeds `elem_max * scale` after
+    /// the two-level tensor scale is applied.
+    E4m3,
+}
+
+/// A group-quantized FP format descriptor. Const-constructible so group
+/// sizes remain usable in array-length position (`[0.0; MXFP4.group]`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupFormat {
+    /// Registry name (also the RunRecord/CLI spelling for pure formats).
+    pub name: &'static str,
+    /// Elements per scale group. Rows must be a multiple of this.
+    pub group: usize,
+    /// Element storage codec.
+    pub elem: ElemCodec,
+    /// Scale storage codec.
+    pub scale: ScaleCodec,
+    /// Two-level scaling: a single per-tensor power-of-two scale chosen so
+    /// every per-group scale fits the scale codec's range.
+    pub two_level: bool,
+    /// Default forward-pass rounding mode. Backward passes typically
+    /// override with a stochastic mode at the call site.
+    pub rounding: QuantMode,
+}
+
+/// The paper's MXFP4: 32-element groups, E2M1 elements, E8M0 scales.
+pub const MXFP4: GroupFormat = GroupFormat {
+    name: "mxfp4",
+    group: 32,
+    elem: ElemCodec::E2m1,
+    scale: ScaleCodec::E8m0,
+    two_level: false,
+    rounding: QuantMode::Rtn,
+};
+
+/// NVFP4: 16-element groups, E2M1 elements, E4M3 scales, two-level.
+pub const NVFP4: GroupFormat = GroupFormat {
+    name: "nvfp4",
+    group: 16,
+    elem: ElemCodec::E2m1,
+    scale: ScaleCodec::E4m3,
+    two_level: true,
+    rounding: QuantMode::Rtn,
+};
+
+/// MXFP8: 32-element groups, E4M3 elements, E8M0 scales — the byte-level
+/// twin of the `fp8::mxfp8_rtn` quant-dequant baseline.
+pub const MXFP8: GroupFormat = GroupFormat {
+    name: "mxfp8",
+    group: 32,
+    elem: ElemCodec::E4m3,
+    scale: ScaleCodec::E8m0,
+    two_level: false,
+    rounding: QuantMode::Rtn,
+};
+
+/// All descriptor-backed formats, for registry-style lookups.
+pub const FORMATS: [&GroupFormat; 3] = [&MXFP4, &NVFP4, &MXFP8];
+
+/// Look a format up by its registry name.
+pub fn format_by_name(name: &str) -> Option<&'static GroupFormat> {
+    FORMATS.iter().copied().find(|f| f.name == name)
+}
+
+/// Smallest positive E4M3 value (subnormal step 2^-9) — the floor for
+/// E4M3-encoded group scales so a zero group still has an invertible scale.
+pub const E4M3_MIN_POS: f32 = 1.0 / 512.0;
+
+impl GroupFormat {
+    pub const fn groups_per_row(&self, cols: usize) -> usize {
+        cols / self.group
+    }
+
+    /// Packed element bytes for a `rows x cols` tensor.
+    pub const fn code_bytes(&self, rows: usize, cols: usize) -> usize {
+        rows * cols * self.elem.bits() / 8
+    }
+
+    /// The per-tensor (second-level) scale: the smallest power of two
+    /// `s_t` such that every group scale `amax_g / (s_t * elem_max)` fits
+    /// the scale codec's range. Power-of-two by choice (not in the NVFP4
+    /// spec, which allows f32) so that dividing by it is exact and the
+    /// bit-identity contract is trivial to uphold; reuses E8M0's ceil
+    /// discipline with target `scale_max * elem_max`.
+    pub fn tensor_scale(&self, global_absmax: f32) -> f32 {
+        if !self.two_level {
+            return 1.0;
+        }
+        E8m0::from_absmax(global_absmax, E4M3_MAX * self.elem.max()).value()
+    }
+
+    /// Encode one group scale from the group absmax (already divided by the
+    /// tensor scale for two-level formats). Returns (byte, decoded value);
+    /// the decoded value is exactly what `decode_scale(byte)` yields.
+    pub fn encode_scale(&self, group_absmax: f32, tensor_scale: f32) -> (u8, f32) {
+        match self.scale {
+            ScaleCodec::E8m0 => {
+                let s = E8m0::from_absmax(group_absmax, self.elem.max());
+                (s.0, s.value())
+            }
+            ScaleCodec::E4m3 => {
+                let target = group_absmax / (tensor_scale * self.elem.max());
+                let s = e4m3_ceil(target).max(E4M3_MIN_POS);
+                (e4m3_encode_bits(s), s)
+            }
+        }
+    }
+
+    /// Decode one group-scale byte (tensor scale NOT included).
+    pub fn decode_scale(&self, byte: u8) -> f32 {
+        match self.scale {
+            ScaleCodec::E8m0 => E8m0(byte).value(),
+            ScaleCodec::E4m3 => e4m3_decode_bits(byte),
+        }
+    }
+}
+
+/// A group-quantized tensor in genuine storage layout: packed element
+/// codes (nibbles for E2M1, low nibble = even column; bytes for E4M3),
+/// one raw scale byte per group, plus the two-level tensor scale.
+#[derive(Clone, Debug)]
+pub struct GroupTensor {
+    pub fmt: &'static GroupFormat,
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: Vec<u8>,
+    pub scales: Vec<u8>,
+    /// 1.0 for single-level formats.
+    pub tensor_scale: f32,
+}
+
+impl GroupTensor {
+    pub fn groups_per_row(&self) -> usize {
+        self.fmt.groups_per_row(self.cols)
+    }
+
+    /// Bytes actually stored: packed codes + scale bytes (+ 4 for the
+    /// tensor scale when two-level).
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() + if self.fmt.two_level { 4 } else { 0 }
+    }
+
+    /// Decoded scale of group `g` in row `r`, tensor scale included.
+    pub fn scale_at(&self, r: usize, g: usize) -> f32 {
+        self.fmt.decode_scale(self.scales[r * self.groups_per_row() + g]) * self.tensor_scale
+    }
+
+    /// Decode element `(r, c)` on the element grid (scales not applied).
+    fn raw_elem(&self, r: usize, c: usize) -> f32 {
+        let flat = r * self.cols + c;
+        match self.fmt.elem {
+            ElemCodec::E2m1 => {
+                let byte = self.codes[flat >> 1];
+                let code = (byte >> ((flat & 1) * 4)) & 0x0F;
+                e2m1_decode(code)
+            }
+            ElemCodec::E4m3 => e4m3_decode_bits(self.codes[flat]),
+        }
+    }
+
+    /// Decode the full tensor to dense f32.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        self.decode_rows_into(0, self.rows, &mut out);
+        out
+    }
+
+    /// Decode rows `[row0, row0+n)` into `out` (length `n * cols`).
+    pub fn decode_rows_into(&self, row0: usize, n: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), n * self.cols);
+        let g = self.fmt.group;
+        for r in 0..n {
+            for gi in 0..self.groups_per_row() {
+                let s = self.scale_at(row0 + r, gi);
+                for i in 0..g {
+                    let c = gi * g + i;
+                    out[r * self.cols + c] = self.raw_elem(row0 + r, c) * s;
+                }
+            }
+        }
+    }
+}
+
+fn absmax(data: &[f32]) -> f32 {
+    data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// Scalar reference quantizer for any [`GroupFormat`]. QuEST rounding is
+/// *not* on the descriptor path (its clip search and trust mask are
+/// MXFP4-specific and stay on `Mxfp4Tensor::quantize`).
+///
+/// SR element streams are consumed in flat row-major element order, one
+/// uniform draw per element — the same discipline the legacy MXFP4 path
+/// uses, so thread count and lane width can never reorder draws.
+pub fn quantize_ref(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: &'static GroupFormat,
+    mode: QuantMode,
+    rng: &mut Rng,
+) -> GroupTensor {
+    assert_eq!(data.len(), rows * cols);
+    assert_eq!(cols % fmt.group, 0, "cols {cols} not divisible by group {}", fmt.group);
+    assert!(
+        mode != QuantMode::Quest,
+        "QuEST rounding stays on the dedicated MXFP4 path (Mxfp4Tensor::quantize)"
+    );
+    let g = fmt.group;
+    let gpr = fmt.groups_per_row(cols);
+    let tensor_scale = fmt.tensor_scale(absmax(data));
+    let mut codes = vec![0u8; fmt.code_bytes(rows, cols)];
+    let mut scales = vec![0u8; rows * gpr];
+    let elem_max = fmt.elem.max();
+    for r in 0..rows {
+        for gi in 0..gpr {
+            let group = &data[r * cols + gi * g..r * cols + gi * g + g];
+            let (sbyte, sval) = fmt.encode_scale(absmax(group), tensor_scale);
+            scales[r * gpr + gi] = sbyte;
+            let inv = 1.0 / (sval * tensor_scale);
+            for (i, &x) in group.iter().enumerate() {
+                let xs = x * inv;
+                let flat = r * cols + gi * g + i;
+                match fmt.elem {
+                    ElemCodec::E2m1 => {
+                        let code = match mode {
+                            QuantMode::Rtn | QuantMode::Quest => e2m1_encode_rtn(xs),
+                            // the 3/4 prescale makes SR exactly unbiased on
+                            // the E2M1 grid (|0.75 x| <= 4.5 < 6 under the
+                            // ceil-rounded scale); callers undo it with a
+                            // 4/3 post-scale
+                            QuantMode::SrPrescaled => {
+                                e2m1_encode_sr(0.75 * xs, rng.uniform_f32())
+                            }
+                            QuantMode::Sr => {
+                                e2m1_encode_sr(xs.clamp(-E2M1_MAX, E2M1_MAX), rng.uniform_f32())
+                            }
+                        };
+                        codes[flat >> 1] |= code << ((flat & 1) * 4);
+                    }
+                    ElemCodec::E4m3 => {
+                        assert!(
+                            mode == QuantMode::Rtn,
+                            "stochastic rounding is not implemented for E4M3 elements"
+                        );
+                        let _ = elem_max;
+                        codes[flat] = e4m3_encode_bits(xs);
+                    }
+                }
+            }
+        }
+    }
+    GroupTensor { fmt, rows, cols, codes, scales, tensor_scale }
+}
+
+/// Scalar reference decode (mirrors `GroupTensor::dequantize`).
+pub fn decode_ref(t: &GroupTensor) -> Vec<f32> {
+    t.dequantize()
+}
+
+/// Scalar reference packed GEMM: `a` is `m x k`, `b` is `n x k` (both
+/// packed), output is `m x n` with `out[i][j] = dot(a_i, b_j)` — the same
+/// convention as `Backend::gemm_mxfp4`.
+pub fn gemm_ref(a: &GroupTensor, b: &GroupTensor) -> Vec<f32> {
+    assert_eq!(a.cols, b.cols);
+    let b_dec = b.dequantize();
+    gemm_predec_ref(a, &b_dec, b.rows)
+}
+
+/// Decode-once variant: `b_dec` is the pre-decoded `n x k` right operand.
+pub fn gemm_predec_ref(a: &GroupTensor, b_dec: &[f32], n: usize) -> Vec<f32> {
+    let (m, k) = (a.rows, a.cols);
+    assert_eq!(b_dec.len(), n * k);
+    let a_dec = a.dequantize();
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let ar = &a_dec[i * k..(i + 1) * k];
+        for j in 0..n {
+            out[i * n + j] = crate::kernels::scalar::dot_f32(ar, &b_dec[j * k..(j + 1) * k]);
+        }
+    }
+    out
+}
+
+/// The single method-axis enum shared by training and serving. The spelled
+/// names (`name()`) are the wire format: CLI flags, bench args, RunRecord
+/// and ServeRecord JSON all go through this registry, so adding a recipe
+/// means adding a variant here and a forward/backward arm in
+/// `train::layer` — nothing else.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Dense f32 everywhere — the accuracy ceiling.
+    F32,
+    /// MXFP8 quant-dequant on forward operands; backward in f32.
+    Mxfp8,
+    /// The paper's recipe: QuEST-rounded MXFP4 forward with randomized
+    /// Hadamard + trust masks, stochastic MXFP4 backward.
+    Quartet,
+    /// Naive round-to-nearest MXFP4 — the "what you lose without the
+    /// recipe" baseline.
+    Rtn,
+    /// NVFP4 (16-element groups, E4M3 scales, two-level): RTN forward on
+    /// the descriptor path, randomized group-16 Hadamard + SR backward.
+    Nvfp4,
+    /// The differentiable-gradient-estimator + outlier clamp-and-compensate
+    /// recipe ("Optimizing LLM Training Using FP4 Quantization"): MXFP4
+    /// RTN forward with activation outliers clamped at a quantile and
+    /// compensated through a sparse f32 GEMM; f32 backward with a capped
+    /// power-surrogate derivative on the weight gradient.
+    Fp4Clamp,
+}
+
+impl Method {
+    /// Every method on the axis, in record/report order.
+    pub const ALL: [Method; 6] = [
+        Method::F32,
+        Method::Mxfp8,
+        Method::Quartet,
+        Method::Rtn,
+        Method::Nvfp4,
+        Method::Fp4Clamp,
+    ];
+
+    /// The original four-method axis (paper Table 3 core). Fixed-width
+    /// consumers (the ordering asserts in `tests/native_training.rs`)
+    /// iterate this, not [`Method::ALL`], so the axis can keep growing.
+    pub const CORE: [Method; 4] = [Method::F32, Method::Mxfp8, Method::Quartet, Method::Rtn];
+
+    /// The registry/wire spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::F32 => "f32",
+            Method::Mxfp8 => "mxfp8",
+            Method::Quartet => "quartet",
+            Method::Rtn => "rtn",
+            Method::Nvfp4 => "nvfp4",
+            Method::Fp4Clamp => "fp4-clamp",
+        }
+    }
+
+    /// Parse a registry spelling ("fp4_clamp" is accepted as an alias for
+    /// "fp4-clamp"; "bf16" is deliberately *not* a method — records use it
+    /// only as the paper-data baseline label).
+    pub fn parse(s: &str) -> Result<Method> {
+        let canon = s.replace('_', "-");
+        for m in Method::ALL {
+            if m.name() == canon {
+                return Ok(m);
+            }
+        }
+        bail!("unknown method {s:?} (expected {})", Method::axis_help())
+    }
+
+    /// "f32|mxfp8|quartet|rtn|..." — for CLI help strings.
+    pub fn axis_help() -> String {
+        Method::ALL.map(|m| m.name()).join("|")
+    }
+
+    /// The group format backing this method's forward GEMM operands, if
+    /// it quantizes them.
+    pub fn format(self) -> Option<&'static GroupFormat> {
+        match self {
+            Method::F32 => None,
+            Method::Mxfp8 => Some(&MXFP8),
+            Method::Quartet | Method::Rtn | Method::Fp4Clamp => Some(&MXFP4),
+            Method::Nvfp4 => Some(&NVFP4),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fp8::{e4m3, mxfp8_rtn};
+    use crate::quant::mxfp4::Mxfp4Tensor;
+
+    #[test]
+    fn mxfp4_descriptor_path_is_bit_identical_to_legacy() {
+        let mut rng = Rng::new(11);
+        let x = rng.gaussian_vec(8 * 128, 1.3);
+        for mode in [QuantMode::Rtn, QuantMode::SrPrescaled, QuantMode::Sr] {
+            let mut r1 = Rng::new(99);
+            let mut r2 = Rng::new(99);
+            let legacy = Mxfp4Tensor::quantize(&x, 8, 128, mode, &mut r1);
+            let via_fmt = quantize_ref(&x, 8, 128, &MXFP4, mode, &mut r2);
+            assert_eq!(legacy.codes, via_fmt.codes, "{mode:?} codes");
+            assert_eq!(
+                legacy.scales.iter().map(|s| s.0).collect::<Vec<_>>(),
+                via_fmt.scales,
+                "{mode:?} scales"
+            );
+            assert_eq!(via_fmt.tensor_scale, 1.0);
+            assert_eq!(legacy.dequantize(), via_fmt.dequantize(), "{mode:?} dequant");
+        }
+    }
+
+    #[test]
+    fn mxfp8_descriptor_path_matches_qdq_reference() {
+        let mut rng = Rng::new(5);
+        let x = rng.gaussian_vec(4 * 96, 2.0);
+        let mut r = Rng::new(0);
+        let t = quantize_ref(&x, 4, 96, &MXFP8, QuantMode::Rtn, &mut r);
+        assert_eq!(t.dequantize(), mxfp8_rtn(&x));
+        assert_eq!(t.storage_bytes(), 4 * 96 + 4 * 3);
+    }
+
+    #[test]
+    fn nvfp4_groups_are_covered_by_their_scales() {
+        let mut rng = Rng::new(7);
+        for amp in [1e-5f32, 1.0, 3000.0, 1e6] {
+            let x = rng.gaussian_vec(6 * 48, amp);
+            let mut r = Rng::new(1);
+            let t = quantize_ref(&x, 6, 48, &NVFP4, QuantMode::Rtn, &mut r);
+            assert_eq!(t.groups_per_row(), 3);
+            for row in 0..6 {
+                for g in 0..3 {
+                    let grp = &x[row * 48 + g * 16..row * 48 + g * 16 + 16];
+                    let amax = grp.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    let s = t.scale_at(row, g);
+                    assert!(
+                        amax <= E2M1_MAX * s * (1.0 + 1e-6),
+                        "amp {amp}: group amax {amax} exceeds 6*scale {s}"
+                    );
+                }
+            }
+            let dq = t.dequantize();
+            assert!(dq.iter().all(|v| v.is_finite()));
+            // reconstruction is sane: correlation with the input is high
+            let err = crate::util::stats::mse(&dq, &x);
+            let var = crate::util::stats::mse(&x, &vec![0.0; x.len()]);
+            assert!(err < 0.1 * var, "amp {amp}: mse {err} vs var {var}");
+        }
+    }
+
+    #[test]
+    fn nvfp4_two_level_scale_extends_e4m3_range() {
+        // group scales alone top out at 448; a tensor with amax ~ 1e6
+        // needs the per-tensor level to stay covered
+        let mut rng = Rng::new(3);
+        let mut x = rng.gaussian_vec(2 * 32, 1.0);
+        x[5] = 9.0e5;
+        let mut r = Rng::new(1);
+        let t = quantize_ref(&x, 2, 32, &NVFP4, QuantMode::Rtn, &mut r);
+        assert!(t.tensor_scale > 1.0, "tensor scale {}", t.tensor_scale);
+        let dq = t.dequantize();
+        assert!((dq[5] - 9.0e5).abs() / 9.0e5 < 0.25);
+    }
+
+    #[test]
+    fn nvfp4_scale_bytes_roundtrip_exactly() {
+        // e4m3_ceil lands on the E4M3 grid, so encode(decode(byte)) is
+        // lossless and scale_at returns exactly what was stored
+        let mut rng = Rng::new(21);
+        let x = rng.gaussian_vec(4 * 64, 5.0);
+        let mut r = Rng::new(1);
+        let t = quantize_ref(&x, 4, 64, &NVFP4, QuantMode::Rtn, &mut r);
+        for &b in &t.scales {
+            let v = NVFP4.decode_scale(b);
+            assert_eq!(e4m3_encode_bits(v), b);
+            assert_eq!(e4m3(v), v, "scale {v} not on the E4M3 grid");
+        }
+    }
+
+    #[test]
+    fn gemm_ref_matches_dense_reference() {
+        let mut rng = Rng::new(13);
+        let a = rng.gaussian_vec(5 * 32, 1.0);
+        let b = rng.gaussian_vec(7 * 32, 1.0);
+        for fmt in FORMATS {
+            let mut r = Rng::new(1);
+            let at = quantize_ref(&a, 5, 32, fmt, QuantMode::Rtn, &mut r);
+            let bt = quantize_ref(&b, 7, 32, fmt, QuantMode::Rtn, &mut r);
+            let y = gemm_ref(&at, &bt);
+            let (ad, bd) = (at.dequantize(), bt.dequantize());
+            for i in 0..5 {
+                for j in 0..7 {
+                    let want: f32 =
+                        (0..32).map(|k| ad[i * 32 + k] * bd[j * 32 + k]).sum();
+                    assert!((y[i * 7 + j] - want).abs() < 1e-4 * want.abs().max(1.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn method_registry_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(Method::parse("fp4_clamp").unwrap(), Method::Fp4Clamp);
+        assert!(Method::parse("bf16").is_err());
+        assert!(Method::parse("fp4").is_err());
+        assert_eq!(&Method::CORE[..], &Method::ALL[..4]);
+        assert!(Method::axis_help().contains("nvfp4"));
+    }
+
+    #[test]
+    fn format_registry_lookup() {
+        assert_eq!(format_by_name("nvfp4").unwrap().group, 16);
+        assert_eq!(format_by_name("mxfp4").unwrap().group, 32);
+        assert!(format_by_name("int4").is_none());
+        assert_eq!(Method::Nvfp4.format().unwrap().scale, ScaleCodec::E4m3);
+        assert_eq!(Method::F32.format(), None);
+    }
+
+    #[test]
+    fn storage_accounting_includes_two_level_scale() {
+        let mut rng = Rng::new(2);
+        let x = rng.gaussian_vec(4 * 32, 1.0);
+        let mut r = Rng::new(1);
+        let t4 = quantize_ref(&x, 4, 32, &NVFP4, QuantMode::Rtn, &mut r);
+        // 4*32 nibbles = 64 bytes, 4*2 scale bytes, +4 tensor scale
+        assert_eq!(t4.storage_bytes(), 64 + 8 + 4);
+        let m4 = quantize_ref(&x, 4, 32, &MXFP4, QuantMode::Rtn, &mut r);
+        assert_eq!(m4.storage_bytes(), 64 + 4);
+    }
+}

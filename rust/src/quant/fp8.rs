@@ -26,6 +26,65 @@ pub fn e4m3(x: f32) -> f32 {
     }
 }
 
+/// Encode an f32 into the OCP E4M3 byte: 1 sign, 4 exponent (bias 7),
+/// 3 mantissa. Nearest, ties away from zero (matching [`e4m3`]); clamps
+/// to ±448 (bits 0x7E) and never emits the NaN pattern 0x7F. Both zeros
+/// encode as +0 — there is no negative zero on this wire.
+pub fn e4m3_encode_bits(x: f32) -> u8 {
+    if x == 0.0 {
+        return 0;
+    }
+    let sign = if x < 0.0 { 0x80u8 } else { 0 };
+    let a = x.abs().min(E4M3_MAX);
+    let e = (a.max(1e-38).log2().floor().max(-6.0)) as i32;
+    // m = round(a / 2^(e-3)): 8..=16 for normals, 0..=8 at the e = -6 floor
+    let mut m = ((a / ((e - 3) as f32).exp2()) + 0.5).floor() as i32;
+    let mut e = e;
+    if m >= 16 {
+        // rounding carried past the binade top; 16/2 = 8 is the next
+        // binade's mantissa floor
+        e += 1;
+        m = 8;
+    }
+    if m == 0 {
+        return 0; // underflow below half the smallest subnormal
+    }
+    if m < 8 {
+        // subnormal: exponent field 0, value m * 2^-9
+        sign | m as u8
+    } else {
+        sign | (((e + 7) as u8) << 4) | ((m - 8) as u8)
+    }
+}
+
+/// Decode an E4M3 byte (exact).
+pub fn e4m3_decode_bits(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((b >> 4) & 0x0F) as i32;
+    let mant = (b & 0x07) as i32;
+    let mag = if exp == 0 {
+        mant as f32 * (-9.0f32).exp2()
+    } else {
+        (8 + mant) as f32 * ((exp - 10) as f32).exp2()
+    };
+    sign * mag
+}
+
+/// Round UP to the next representable E4M3 magnitude (values already on
+/// the grid map to themselves, so this is idempotent), clamping to 448.
+/// Used for NVFP4 scale encoding: a ceil-rounded scale guarantees
+/// `group_absmax / scale` never exceeds the element grid — the same
+/// discipline `E8m0::from_absmax` applies for MX formats.
+pub fn e4m3_ceil(x: f32) -> f32 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    let a = x.min(E4M3_MAX);
+    let e = a.max(1e-38).log2().floor().max(-6.0);
+    let ulp = (e - 3.0).exp2();
+    ((a / ulp).ceil() * ulp).min(E4M3_MAX)
+}
+
 /// MXFP8: E4M3 elements + shared E8M0 scale per 32-group (quant-dequant).
 pub fn mxfp8_rtn(data: &[f32]) -> Vec<f32> {
     assert_eq!(data.len() % MX_GROUP, 0);
@@ -62,6 +121,51 @@ mod tests {
         // at binade [1,2): ulp = 1/8
         assert_eq!(e4m3(1.0 + 1.0 / 32.0), 1.0);
         assert_eq!(e4m3(1.0 + 3.0 / 32.0), 1.125);
+    }
+
+    #[test]
+    fn e4m3_bits_roundtrip_every_byte() {
+        for b in 0u16..=255 {
+            let b = b as u8;
+            if b & 0x7F == 0x7F {
+                continue; // the NaN pattern is never produced
+            }
+            let v = e4m3_decode_bits(b);
+            assert!(v.is_finite());
+            // every decodable byte re-encodes to itself (modulo -0 -> +0)
+            let expect = if b == 0x80 { 0 } else { b };
+            assert_eq!(e4m3_encode_bits(v), expect, "byte {b:#04x} value {v}");
+            // and the byte codec agrees with the value-level rounder
+            assert_eq!(e4m3(v), v);
+        }
+    }
+
+    #[test]
+    fn e4m3_bits_match_value_rounder_on_random_inputs() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..4000 {
+            let x = rng.gaussian_f32() * 10f32.powf(rng.uniform_f32() * 6.0 - 3.0);
+            assert_eq!(e4m3_decode_bits(e4m3_encode_bits(x)), e4m3(x), "x = {x}");
+        }
+    }
+
+    #[test]
+    fn e4m3_ceil_is_idempotent_and_covers() {
+        let mut rng = crate::util::rng::Rng::new(10);
+        for _ in 0..4000 {
+            let x = rng.uniform_f32() * 500.0 + 1e-6;
+            let c = e4m3_ceil(x);
+            assert_eq!(e4m3_ceil(c), c, "not idempotent at {x}");
+            assert_eq!(e4m3(c), c, "not on grid at {x}");
+            if x <= E4M3_MAX {
+                assert!(c >= x, "ceil went down at {x}: {c}");
+            }
+        }
+        assert_eq!(e4m3_ceil(0.0), 0.0);
+        assert_eq!(e4m3_ceil(-3.0), 0.0);
+        assert_eq!(e4m3_ceil(448.0), 448.0);
+        assert_eq!(e4m3_ceil(1e9), 448.0);
+        assert_eq!(e4m3_ceil(1.0 + 1.0 / 64.0), 1.125);
     }
 
     #[test]

@@ -39,6 +39,36 @@ pub fn quartet_sr_dequant(
     dq
 }
 
+/// NVFP4's backward quantizer: the Quartet structure (randomized block
+/// Hadamard, SR of (3/4)·x, 4/3 compensation, inverse transform) on the
+/// NVFP4 descriptor — group-16 rotation, E4M3 fractional scales, two-level
+/// tensor scale. Unbiased end to end: the ceil-rounded scales guarantee
+/// |3/4·x/s| ≤ 4.5 < 6, so SR's expectation is exact inside the grid.
+pub fn nvfp4_sr_dequant(
+    be: &dyn Backend,
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let g = crate::quant::format::NVFP4.group;
+    let signs = rademacher(rng, cols);
+    let mut work = x.to_vec();
+    randomized_block_hadamard_on(be, &mut work, &signs, g);
+    let t = be.quantize_group(
+        &work,
+        rows,
+        cols,
+        &crate::quant::format::NVFP4,
+        QuantMode::SrPrescaled,
+        rng,
+    );
+    let mut dq = be.decode_group(&t);
+    dq.iter_mut().for_each(|v| *v *= 4.0 / 3.0);
+    randomized_block_hadamard_inv_on(be, &mut dq, &signs, g);
+    dq
+}
+
 /// Pseudo-unbiased PMA correction for RTN-AbsMax MXFP4 over rotated
 /// Gaussian groups: the constant E[S] of Table 2's "RTN AbsMax PMA" row.
 /// Measured by `analysis::alignment::measure_rtn_pma_constant` (test-pinned).
@@ -452,6 +482,40 @@ mod tests {
         for (i, a) in acc.iter().enumerate() {
             assert!((a / trials as f64 - x[i] as f64).abs() < 0.08, "coord {i}");
         }
+    }
+
+    #[test]
+    fn nvfp4_sr_unbiased_and_tighter_than_quartet_sr() {
+        let be = crate::kernels::ScalarBackend;
+        let mut rng = Rng::new(12);
+        let x = gauss(&mut rng, 32);
+        let mut acc = vec![0.0f64; 32];
+        let trials = 3000;
+        let mut sq_err = 0.0f64;
+        for _ in 0..trials {
+            let q = nvfp4_sr_dequant(&be, &x, 1, 32, &mut rng);
+            for (i, (a, v)) in acc.iter_mut().zip(&q).enumerate() {
+                *a += *v as f64;
+                sq_err += ((*v - x[i]) as f64).powi(2);
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            assert!((a / trials as f64 - x[i] as f64).abs() < 0.08, "coord {i}");
+        }
+        // fractional E4M3 scales waste less of the grid than power-of-two
+        // E8M0 scales, so per-sample error should not be (much) worse
+        let mut sq_err_q = 0.0f64;
+        let mut rng2 = Rng::new(12);
+        for _ in 0..trials {
+            let q = quartet_sr_dequant(&be, &x, 1, 32, &mut rng2);
+            for (i, v) in q.iter().enumerate() {
+                sq_err_q += ((*v - x[i]) as f64).powi(2);
+            }
+        }
+        assert!(
+            sq_err < sq_err_q * 1.35,
+            "nvfp4 mse {sq_err} vs quartet mse {sq_err_q}"
+        );
     }
 
     #[test]

@@ -13,8 +13,10 @@ use crate::quant::e2m1::{e2m1_decode, E2M1_MAX};
 use crate::quant::e8m0::E8m0;
 use crate::util::rng::Rng;
 
-/// MX group size (OCP spec: 1-D blocks of 32).
-pub const MX_GROUP: usize = 32;
+/// MX group size (OCP spec: 1-D blocks of 32) — derived from the
+/// [`crate::quant::format::MXFP4`] descriptor so the legacy fast paths and
+/// the descriptor-parameterized paths share one source of truth.
+pub const MX_GROUP: usize = super::format::MXFP4.group;
 
 /// QuEST RMSE-optimal clip multiplier for E2M1 on unit-Gaussian groups —
 /// pinned to the value fitted in `python/compile/formats.py`.

@@ -44,13 +44,12 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
-
 use crate::kernels::Backend;
 use crate::quant::e2m1::byte_decode_lut;
 use crate::quant::e8m0::E8m0;
+use crate::quant::format::{GroupTensor, MXFP4, NVFP4};
 use crate::quant::fp8::mxfp8_rtn;
-use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode, MX_GROUP};
+use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode};
 use crate::serve::paged::{BlockTable, KvPool, KvQuant};
 use crate::train::model::{relu, write_pair_features};
 use crate::train::transformer::{add_assign, rmsnorm_rows, rope_row, silu};
@@ -58,45 +57,13 @@ use crate::train::{MlpLm, NativeModel, TransformerLm};
 use crate::util::rng::Rng;
 
 /// Serving precision — the method axis of `repro serve` and the fig6/fig7
-/// benches. Distinct from [`crate::train::TrainMethod`]: serving never
-/// runs a backward pass, so the deployed forms are simpler (RTN instead
-/// of QuEST, no trust masks, no SR).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ServeMethod {
-    /// Raw f32 weights and activations (the bf16 stand-in baseline).
-    F32,
-    /// MXFP8 (E4M3 + E8M0 group scale) quant-dequant: weights once at
-    /// build, activations per step; dense f32 GEMM carrier.
-    Mxfp8,
-    /// Deployed Quartet FP4: fixed block Hadamard + RTN MXFP4 packed
-    /// weights (the checkpoint form), Hadamard + RTN packed activations,
-    /// block-scaled GEMM against the decode-once weight rows.
-    Quartet,
-}
-
-impl ServeMethod {
-    pub const ALL: [ServeMethod; 3] =
-        [ServeMethod::F32, ServeMethod::Mxfp8, ServeMethod::Quartet];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            ServeMethod::F32 => "f32",
-            ServeMethod::Mxfp8 => "mxfp8",
-            ServeMethod::Quartet => "quartet",
-        }
-    }
-
-    pub fn parse(s: &str) -> Result<ServeMethod> {
-        match s {
-            "f32" => Ok(ServeMethod::F32),
-            "mxfp8" => Ok(ServeMethod::Mxfp8),
-            "quartet" => Ok(ServeMethod::Quartet),
-            other => Err(anyhow!(
-                "unknown serve method {other:?} (expected f32|mxfp8|quartet)"
-            )),
-        }
-    }
-}
+/// benches. A thin alias for the crate's single method-axis enum
+/// ([`crate::quant::format::Method`]), so training and serving share one
+/// `name()`/`parse()` registry. Serving never runs a backward pass, so
+/// the deployed forms are simpler than training's (deterministic RTN
+/// instead of QuEST, no trust masks, no SR): each [`Method`] variant maps
+/// to a [`PreparedForm`] in [`PreparedLayer::prepare`].
+pub type ServeMethod = crate::quant::format::Method;
 
 /// One deployed linear layer (`[d_out, d_in]`), prepared once at build.
 struct PreparedLayer {
@@ -112,6 +79,18 @@ enum PreparedForm {
     Mxfp8 { w: Vec<f32> },
     /// packed Hadamard-space MXFP4 checkpoint form + its decode-once rows
     Quartet { packed: Mxfp4Tensor, dec: Vec<f32> },
+    /// packed *unrotated* RTN MXFP4 (the naive baseline: no Hadamard on
+    /// either side) + its decode-once rows
+    Rtn { packed: Mxfp4Tensor, dec: Vec<f32> },
+    /// packed NVFP4 (16-wide groups, E4M3 scales, two-level) weights +
+    /// decode-once rows; activations quantize per step under the same
+    /// descriptor
+    Nvfp4 { packed: GroupTensor, dec: Vec<f32> },
+    /// weight-only FP4 (the `fp4-clamp` deployment): packed unrotated RTN
+    /// MXFP4 weights, f32 activations against the decode-once rows —
+    /// at inference the training recipe's clamp-and-compensate residual
+    /// path is exact, so quantizing activations would only add error
+    WeightOnly { packed: Mxfp4Tensor, dec: Vec<f32> },
 }
 
 impl PreparedLayer {
@@ -135,11 +114,28 @@ impl PreparedLayer {
             ServeMethod::Mxfp8 => PreparedForm::Mxfp8 { w: mxfp8_rtn(w) },
             ServeMethod::Quartet => {
                 let mut wh = w.to_vec();
-                be.block_hadamard(&mut wh, MX_GROUP);
+                be.block_hadamard(&mut wh, MXFP4.group);
                 let packed = be.quantize_mxfp4(&wh, d_out, d_in, QuantMode::Rtn, &mut rng);
                 let mut dec = vec![0.0f32; d_out * d_in];
                 be.decode_mxfp4_into(&packed, &mut dec);
                 PreparedForm::Quartet { packed, dec }
+            }
+            ServeMethod::Rtn => {
+                let packed = be.quantize_mxfp4(w, d_out, d_in, QuantMode::Rtn, &mut rng);
+                let mut dec = vec![0.0f32; d_out * d_in];
+                be.decode_mxfp4_into(&packed, &mut dec);
+                PreparedForm::Rtn { packed, dec }
+            }
+            ServeMethod::Nvfp4 => {
+                let packed = be.quantize_group(w, d_out, d_in, &NVFP4, QuantMode::Rtn, &mut rng);
+                let dec = be.decode_group(&packed);
+                PreparedForm::Nvfp4 { packed, dec }
+            }
+            ServeMethod::Fp4Clamp => {
+                let packed = be.quantize_mxfp4(w, d_out, d_in, QuantMode::Rtn, &mut rng);
+                let mut dec = vec![0.0f32; d_out * d_in];
+                be.decode_mxfp4_into(&packed, &mut dec);
+                PreparedForm::WeightOnly { packed, dec }
             }
         };
         PreparedLayer { d_out, d_in, form }
@@ -159,9 +155,20 @@ impl PreparedLayer {
             }
             PreparedForm::Quartet { dec, .. } => {
                 let mut xh = x;
-                be.block_hadamard(&mut xh, MX_GROUP);
+                be.block_hadamard(&mut xh, MXFP4.group);
                 let xq = be.quantize_mxfp4(&xh, rows, self.d_in, QuantMode::Rtn, rng);
                 be.gemm_mxfp4_predec(&xq, dec, self.d_out)
+            }
+            PreparedForm::Rtn { dec, .. } => {
+                let xq = be.quantize_mxfp4(&x, rows, self.d_in, QuantMode::Rtn, rng);
+                be.gemm_mxfp4_predec(&xq, dec, self.d_out)
+            }
+            PreparedForm::Nvfp4 { dec, .. } => {
+                let xq = be.quantize_group(&x, rows, self.d_in, &NVFP4, QuantMode::Rtn, rng);
+                be.gemm_group_predec(&xq, dec, self.d_out)
+            }
+            PreparedForm::WeightOnly { dec, .. } => {
+                be.gemm_f32(&x, dec, rows, self.d_out, self.d_in)
             }
         }
     }
@@ -169,7 +176,10 @@ impl PreparedLayer {
     fn weight_bytes(&self) -> usize {
         match &self.form {
             PreparedForm::F32 { w } | PreparedForm::Mxfp8 { w } => w.len() * 4,
-            PreparedForm::Quartet { packed, .. } => packed.storage_bytes(),
+            PreparedForm::Quartet { packed, .. }
+            | PreparedForm::Rtn { packed, .. }
+            | PreparedForm::WeightOnly { packed, .. } => packed.storage_bytes(),
+            PreparedForm::Nvfp4 { packed, .. } => packed.storage_bytes(),
         }
     }
 }
@@ -1034,13 +1044,13 @@ impl PackedWeightCache {
 /// MXFP4 in place — the exact arithmetic [`KvPool::write_row`] applies when
 /// storing and [`crate::kernels::KvPageData::Mxfp4`] pages apply when read,
 /// so dense/recompute states under `--kv-quant mxfp4` see the identical
-/// values the paged pool serves. Requires `d % MX_GROUP == 0` (the row is
-/// quantized at model width, not per head).
+/// values the paged pool serves. Requires `d % MXFP4.group == 0` (the row
+/// is quantized at model width, not per head).
 fn qdq_row_mxfp4(row: &mut [f32]) {
     let d = row.len();
-    debug_assert_eq!(d % MX_GROUP, 0, "row width must be a multiple of 32");
+    debug_assert_eq!(d % MXFP4.group, 0, "row width must be a multiple of 32");
     let mut codes = vec![0u8; d / 2];
-    let mut scales = vec![E8m0(0); d / MX_GROUP];
+    let mut scales = vec![E8m0(0); d / MXFP4.group];
     crate::kernels::scalar::quantize_rows(
         &*row,
         1,
@@ -1088,10 +1098,14 @@ mod tests {
 
     #[test]
     fn method_parse_roundtrip() {
+        // the serve axis IS the shared method registry: every method the
+        // trainer knows (rtn included, which the old serve-only enum
+        // rejected) parses and serves
         for m in ServeMethod::ALL {
             assert_eq!(ServeMethod::parse(m.name()).unwrap(), m);
         }
-        assert!(ServeMethod::parse("rtn").is_err());
+        assert_eq!(ServeMethod::parse("fp4_clamp").unwrap(), ServeMethod::Fp4Clamp);
+        assert!(ServeMethod::parse("int8").is_err());
     }
 
     #[test]
@@ -1315,5 +1329,63 @@ mod tests {
         let tf32 = PackedWeightCache::build_transformer(&tf_model(), ServeMethod::F32,
                                                         &ScalarBackend);
         assert!(tq.weight_bytes() * 7 < tf32.weight_bytes());
+    }
+
+    #[test]
+    fn new_fp4_methods_deploy_packed_weights() {
+        // rtn / nvfp4 / fp4-clamp all ship packed FP4 checkpoints (4.25
+        // or 4.5 bits/value), never the decode-once f32 rows
+        let m = model();
+        let f = PackedWeightCache::build(&m, ServeMethod::F32, &ScalarBackend);
+        for method in [ServeMethod::Rtn, ServeMethod::Nvfp4, ServeMethod::Fp4Clamp] {
+            let c = PackedWeightCache::build(&m, method, &ScalarBackend);
+            assert!(
+                c.weight_bytes() * 7 < f.weight_bytes(),
+                "{}: {} vs {}",
+                method.name(),
+                c.weight_bytes(),
+                f.weight_bytes()
+            );
+        }
+        // NVFP4 carries twice the scale traffic of MXFP4 (one E4M3 byte
+        // per 16 values vs one E8M0 byte per 32) plus the per-tensor
+        // scale word, so its deployment is strictly the larger of the two
+        let rtn = PackedWeightCache::build(&m, ServeMethod::Rtn, &ScalarBackend);
+        let nv = PackedWeightCache::build(&m, ServeMethod::Nvfp4, &ScalarBackend);
+        assert!(nv.weight_bytes() > rtn.weight_bytes());
+    }
+
+    #[test]
+    fn fp4_clamp_serves_weight_only() {
+        // at inference fp4-clamp's clamp-and-compensate path is exact, so
+        // the deployed layer must be: f32 activations x decoded RTN
+        // weights — bit-identical to gemm_f32 against the rtn method's
+        // decode-once rows
+        let m = model();
+        let be = ScalarBackend;
+        let clamp = PackedWeightCache::build(&m, ServeMethod::Fp4Clamp, &be);
+        let rows = 3;
+        let mut feats = vec![0.0f32; rows * 2 * clamp.d_emb];
+        for (r, chunk) in feats.chunks_mut(2 * clamp.d_emb).enumerate() {
+            clamp.write_features(r as i32, (r + 2) as i32, chunk);
+        }
+        let mut rng = Rng::new(9);
+        let logits = clamp.forward(feats.clone(), rows, &be, &mut rng);
+        assert_eq!(logits.len(), rows * clamp.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // reference: run the same stack by hand through decoded weights
+        let (_, layers) = clamp.mlp_layers();
+        let mut x = feats;
+        for (li, layer) in layers.iter().enumerate() {
+            let dec = match &layer.form {
+                PreparedForm::WeightOnly { dec, .. } => dec,
+                _ => panic!("fp4-clamp layer must be weight-only"),
+            };
+            x = be.gemm_f32(&x, dec, rows, layer.d_out, layer.d_in);
+            if li + 1 < layers.len() {
+                relu(&mut x);
+            }
+        }
+        assert_eq!(logits, x, "weight-only serving must be plain f32 GEMM");
     }
 }

@@ -3,7 +3,8 @@
 //! low-precision format.
 //!
 //! * [`cache::PackedWeightCache`] — deploy-once weight preparation under a
-//!   [`cache::ServeMethod`] (`f32` | `mxfp8` | `quartet`) for BOTH native
+//!   [`cache::ServeMethod`] (the shared method axis: `f32` | `mxfp8` |
+//!   `quartet` | `rtn` | `nvfp4` | `fp4-clamp`) for BOTH native
 //!   architectures (order-2 MLP and the Llama-style transformer): each
 //!   matmul weight is quantized into its checkpoint form and — for the
 //!   packed FP4 path — decoded exactly once through

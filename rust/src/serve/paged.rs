@@ -31,7 +31,11 @@ use anyhow::{anyhow, Result};
 
 use crate::kernels::{KvPageData, KvPageView};
 use crate::quant::e8m0::E8m0;
-use crate::quant::mxfp4::{QuantMode, MX_GROUP};
+use crate::quant::format::MXFP4;
+use crate::quant::mxfp4::QuantMode;
+
+/// MXFP4 group size, from the format descriptor.
+const GROUP: usize = MXFP4.group;
 use crate::util::rng::Rng;
 
 /// On-page storage format for cached K/V rows.
@@ -141,7 +145,7 @@ impl KvPool {
         assert!(cfg.page_tokens > 0, "page_tokens must be positive");
         if cfg.quant == KvQuant::Mxfp4 {
             assert_eq!(
-                cfg.d() % MX_GROUP,
+                cfg.d() % GROUP,
                 0,
                 "mxfp4 KV needs n_heads*head_dim % 32 == 0"
             );
@@ -161,7 +165,7 @@ impl KvPool {
         match self.cfg.quant {
             KvQuant::F32 => 2 * elems * std::mem::size_of::<f32>(),
             // K and V planes: packed nibbles + one scale byte per 32-group
-            KvQuant::Mxfp4 => 2 * (elems / 2 + elems / MX_GROUP),
+            KvQuant::Mxfp4 => 2 * (elems / 2 + elems / GROUP),
         }
     }
 
@@ -200,9 +204,9 @@ impl KvPool {
             KvQuant::F32 => PageData::F32 { k: vec![0.0; elems], v: vec![0.0; elems] },
             KvQuant::Mxfp4 => PageData::Mxfp4 {
                 k_codes: vec![0; elems / 2],
-                k_scales: vec![E8m0(0); elems / MX_GROUP],
+                k_scales: vec![E8m0(0); elems / GROUP],
                 v_codes: vec![0; elems / 2],
-                v_scales: vec![E8m0(0); elems / MX_GROUP],
+                v_scales: vec![E8m0(0); elems / GROUP],
             },
         };
         let id = self.pages.len() as u32;
@@ -279,7 +283,7 @@ impl KvPool {
                         QuantMode::Rtn,
                         &mut Rng::new(0),
                         &mut codes[off / 2..(off + d) / 2],
-                        &mut scales[off / MX_GROUP..(off + d) / MX_GROUP],
+                        &mut scales[off / GROUP..(off + d) / GROUP],
                         None,
                     );
                 }
@@ -303,9 +307,9 @@ impl KvPool {
                 }
                 PageData::Mxfp4 { k_codes, k_scales, v_codes, v_scales } => KvPageData::Mxfp4 {
                     k_codes: &k_codes[rows.start / 2..rows.end / 2],
-                    k_scales: &k_scales[rows.start / MX_GROUP..rows.end / MX_GROUP],
+                    k_scales: &k_scales[rows.start / GROUP..rows.end / GROUP],
                     v_codes: &v_codes[rows.start / 2..rows.end / 2],
-                    v_scales: &v_scales[rows.start / MX_GROUP..rows.end / MX_GROUP],
+                    v_scales: &v_scales[rows.start / GROUP..rows.end / GROUP],
                 },
             })
             .collect();
@@ -551,7 +555,7 @@ mod tests {
         match &view.pages[0] {
             KvPageData::Mxfp4 { k_codes, k_scales, .. } => {
                 assert_eq!(&k_codes[d / 2..2 * d / 2], &want.codes[..]);
-                assert_eq!(&k_scales[d / MX_GROUP..2 * d / MX_GROUP], &want.scales[..]);
+                assert_eq!(&k_scales[d / GROUP..2 * d / GROUP], &want.scales[..]);
             }
             _ => panic!("expected mxfp4 page"),
         }

@@ -183,10 +183,10 @@ pub fn ring_allreduce_bytes(workers: usize, payload_bytes: f64) -> f64 {
 /// total length is, `None` when neither (the reducer then falls back to
 /// the exact f32 path for that tensor).
 fn mx_shape(rows: usize, cols: usize) -> Option<(usize, usize)> {
-    use crate::quant::mxfp4::MX_GROUP;
-    if cols % MX_GROUP == 0 {
+    let group = crate::quant::format::MXFP4.group;
+    if cols % group == 0 {
         Some((rows, cols))
-    } else if (rows * cols) % MX_GROUP == 0 {
+    } else if (rows * cols) % group == 0 {
         Some((1, rows * cols))
     } else {
         None

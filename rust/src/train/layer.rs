@@ -13,11 +13,25 @@
 //! before rotating back.
 
 use crate::kernels::Backend;
+use crate::quant::format::{MXFP4, NVFP4};
 use crate::quant::fp8::mxfp8_rtn;
-use crate::quant::methods::quartet_sr_dequant;
-use crate::quant::mxfp4::{QuantMode, MX_GROUP};
+use crate::quant::methods::{nvfp4_sr_dequant, quartet_sr_dequant};
+use crate::quant::mxfp4::QuantMode;
 use crate::train::TrainMethod;
 use crate::util::rng::Rng;
+
+/// fp4-clamp: activation outliers are clamped at this |x| quantile and the
+/// clipped residual is compensated exactly through a sparse f32 GEMM
+/// (the OCC half of "Optimizing LLM Training Using FP4 Quantization").
+pub const OCC_QUANTILE: f32 = 0.99;
+
+/// fp4-clamp: exponent of the power surrogate whose derivative replaces
+/// STE's unit derivative on the weight gradient (the DGE half).
+pub const DGE_K: f32 = 5.0;
+
+/// Cap on the DGE derivative so near-zero weights cannot blow up their
+/// gradient (the surrogate derivative diverges at |w| → 0).
+pub const DGE_CAP: f32 = 3.0;
 
 /// One weight matrix `[d_out, d_in]` (row-major), master copy in f32 —
 /// quantization happens on the way into every GEMM, QAT-style.
@@ -122,10 +136,10 @@ pub fn forward_with(
         }
         TrainMethod::Quartet => {
             let mut xh = x.to_vec();
-            be.block_hadamard(&mut xh, MX_GROUP);
+            be.block_hadamard(&mut xh, MXFP4.group);
             let xt = be.quantize_mxfp4(&xh, rows, d_in, QuantMode::Quest, rng);
             let mut wh = w.to_vec();
-            be.block_hadamard(&mut wh, MX_GROUP);
+            be.block_hadamard(&mut wh, MXFP4.group);
             let wt = be.quantize_mxfp4(&wh, d_out, d_in, QuantMode::Quest, rng);
             let y = be.gemm_mxfp4(&xt, &wt);
             let cache = LinearCache {
@@ -149,6 +163,65 @@ pub fn forward_with(
                 x: x.to_vec(),
                 xq: Some(xt.dequantize()),
                 wq: Some(wt.dequantize()),
+                mask_x: None,
+                mask_w: None,
+            };
+            (y, cache)
+        }
+        TrainMethod::Nvfp4 => {
+            // NVFP4 forward: RTN on the 16-group / E4M3-scale / two-level
+            // descriptor, straight on the raw tensors — the fractional
+            // scales recover most of what MXFP4's power-of-two scales
+            // waste, without needing a rotation to survive
+            let xt = be.quantize_group(x, rows, d_in, &NVFP4, QuantMode::Rtn, rng);
+            let wt = be.quantize_group(w, d_out, d_in, &NVFP4, QuantMode::Rtn, rng);
+            let y = be.gemm_group(&xt, &wt);
+            let cache = LinearCache {
+                x: x.to_vec(),
+                xq: Some(be.decode_group(&xt)),
+                wq: Some(be.decode_group(&wt)),
+                mask_x: None,
+                mask_w: None,
+            };
+            (y, cache)
+        }
+        TrainMethod::Fp4Clamp => {
+            // OCC: clamp activations at the |x| quantile, quantize the
+            // clamped bulk to MXFP4, and compensate the clipped residual
+            // *exactly* through a sparse f32 GEMM — outliers never touch
+            // the 4-bit grid, everything else does
+            let tau = abs_quantile(x, OCC_QUANTILE);
+            let mut xc = x.to_vec();
+            let mut delta = vec![0.0f32; x.len()];
+            let mut outliers = false;
+            for (c, d) in xc.iter_mut().zip(delta.iter_mut()) {
+                let clamped = c.clamp(-tau, tau);
+                *d = *c - clamped;
+                if *d != 0.0 {
+                    outliers = true;
+                }
+                *c = clamped;
+            }
+            let xt = be.quantize_group(&xc, rows, d_in, &MXFP4, QuantMode::Rtn, rng);
+            let wt = be.quantize_group(w, d_out, d_in, &MXFP4, QuantMode::Rtn, rng);
+            let mut y = be.gemm_group(&xt, &wt);
+            let wq = be.decode_group(&wt);
+            if outliers {
+                let comp = be.gemm_f32(&delta, &wq, rows, d_out, d_in);
+                for (a, b) in y.iter_mut().zip(&comp) {
+                    *a += *b;
+                }
+            }
+            // the backward sees the *effective* forward input
+            // Q(clamp(x)) + Δ, so the compensation flows through dw too
+            let mut xq = be.decode_group(&xt);
+            for (a, b) in xq.iter_mut().zip(&delta) {
+                *a += *b;
+            }
+            let cache = LinearCache {
+                x: x.to_vec(),
+                xq: Some(xq),
+                wq: Some(wq),
                 mask_x: None,
                 mask_w: None,
             };
@@ -203,13 +276,13 @@ pub fn backward_with(
             let wt = transpose(wq, d_out, d_in);
             let mut dxh =
                 be.gemm_f32_masked(&dyq, &wt, rows, d_in, d_out, cache.mask_x.as_deref());
-            be.block_hadamard_inv(&mut dxh, MX_GROUP);
+            be.block_hadamard_inv(&mut dxh, MXFP4.group);
             // dL/d(Hw) = mask_w ⊙ (dyqᵀ · Q(Hx)); then dw = H·dL/d(Hw)
             let dyt = transpose(&dyq, rows, d_out);
             let xt = transpose(xq, rows, d_in);
             let mut dwh =
                 be.gemm_f32_masked(&dyt, &xt, d_out, d_in, rows, cache.mask_w.as_deref());
-            be.block_hadamard_inv(&mut dwh, MX_GROUP);
+            be.block_hadamard_inv(&mut dwh, MXFP4.group);
             (dxh, dwh)
         }
         TrainMethod::Rtn => {
@@ -226,6 +299,73 @@ pub fn backward_with(
             let xt = transpose(xq, rows, d_in);
             let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
             (dx, dw)
+        }
+        TrainMethod::Nvfp4 => {
+            // NVFP4 backward: Quartet's unbiased structure on the NVFP4
+            // descriptor (randomized group-16 Hadamard + SR(3/4·x) + 4/3),
+            // then straight-through GEMMs against the quantized forward
+            // operands — no trust masks on this recipe
+            let dyq = nvfp4_sr_dequant(be, dy, rows, d_out, rng);
+            let wq = cache.wq.as_ref().expect("nvfp4 cache");
+            let xq = cache.xq.as_ref().expect("nvfp4 cache");
+            let wt = transpose(wq, d_out, d_in);
+            let dx = be.gemm_f32(&dyq, &wt, rows, d_in, d_out);
+            let dyt = transpose(&dyq, rows, d_out);
+            let xt = transpose(xq, rows, d_in);
+            let dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
+            (dx, dw)
+        }
+        TrainMethod::Fp4Clamp => {
+            // the recipe keeps gradients in high precision (only the
+            // forward GEMM is 4-bit); DGE replaces STE's unit derivative
+            // on the weight gradient with the capped derivative of a
+            // power surrogate of the quantizer, so weights sitting in the
+            // flat low-magnitude region of the E2M1 grid keep moving
+            let wq = cache.wq.as_ref().expect("fp4-clamp cache");
+            let xq = cache.xq.as_ref().expect("fp4-clamp cache");
+            let wt = transpose(wq, d_out, d_in);
+            let dx = be.gemm_f32(dy, &wt, rows, d_in, d_out);
+            let dyt = transpose(dy, rows, d_out);
+            let xt = transpose(xq, rows, d_in);
+            let mut dw = be.gemm_f32(&dyt, &xt, d_out, d_in, rows);
+            apply_dge(&mut dw, w, d_out, d_in);
+            (dx, dw)
+        }
+    }
+}
+
+/// The |x| quantile used by fp4-clamp's OCC step (q in [0, 1]).
+fn abs_quantile(x: &[f32], q: f32) -> f32 {
+    let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+    let idx = ((mags.len() - 1) as f32 * q) as usize;
+    let (_, tau, _) = mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    *tau
+}
+
+/// DGE: scale each weight-gradient element by the derivative of the power
+/// surrogate `f(u) = u^(1/k)` of the normalized magnitude
+/// `u = |w| / group_absmax` — steep (capped at [`DGE_CAP`]) where the
+/// E2M1 grid is flat near zero, shallow near the group max, mean ≈ 1 over
+/// a uniform magnitude distribution so the overall gradient scale is
+/// preserved. Group geometry follows the forward quantizer (MXFP4).
+pub fn apply_dge(dw: &mut [f32], w: &[f32], d_out: usize, d_in: usize) {
+    assert_eq!(dw.len(), d_out * d_in);
+    assert_eq!(w.len(), d_out * d_in);
+    let g = MXFP4.group;
+    for r in 0..d_out {
+        for gi in 0..d_in / g {
+            let base = r * d_in + gi * g;
+            let grp = &w[base..base + g];
+            let amax = grp.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if amax == 0.0 {
+                continue;
+            }
+            for i in 0..g {
+                let u = (grp[i].abs() / amax).min(1.0);
+                let factor =
+                    ((1.0 / DGE_K) * u.max(1e-12).powf(1.0 / DGE_K - 1.0)).min(DGE_CAP);
+                dw[base + i] *= factor;
+            }
         }
     }
 }
@@ -339,6 +479,88 @@ mod tests {
             / exact.len() as f64)
             .sqrt();
         assert!(err < 0.35 * scale, "relative fp4 error {err} vs rms {scale}");
+    }
+
+    #[test]
+    fn nvfp4_forward_approximates_f32() {
+        let be = ScalarBackend;
+        let mut rng = Rng::new(14);
+        let (rows, d_in, d_out) = (8, 64, 32);
+        let layer = QuantLinear::init(d_out, d_in, &mut rng);
+        let x = rng.gaussian_vec(rows * d_in, 1.0);
+        let (exact, _) = layer.forward(&x, rows, TrainMethod::F32, &be, &mut Rng::new(0));
+        let (q, cache) = layer.forward(&x, rows, TrainMethod::Nvfp4, &be, &mut Rng::new(0));
+        assert!(cache.xq.is_some() && cache.wq.is_some());
+        let scale = (exact.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / exact.len() as f64)
+            .sqrt();
+        let err = (exact
+            .iter()
+            .zip(&q)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / exact.len() as f64)
+            .sqrt();
+        assert!(err < 0.35 * scale, "relative nvfp4 error {err} vs rms {scale}");
+        let dy: Vec<f32> = q.iter().map(|_| 0.5).collect();
+        let (dx, dw) =
+            layer.backward(&dy, &cache, rows, TrainMethod::Nvfp4, &be, &mut Rng::new(1));
+        assert!(dx.iter().chain(dw.iter()).all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fp4_clamp_compensation_beats_plain_rtn_under_outliers() {
+        // one giant activation outlier wrecks the whole RTN group (the
+        // absmax scale flushes everything else to zero); OCC clamps it,
+        // quantizes the bulk on a sane scale, and adds the outlier back
+        // exactly — so fp4-clamp must track f32 far better than rtn here
+        let be = ScalarBackend;
+        let mut rng = Rng::new(15);
+        let (rows, d_in, d_out) = (4, 64, 32);
+        let layer = QuantLinear::init(d_out, d_in, &mut rng);
+        let mut x = rng.gaussian_vec(rows * d_in, 1.0);
+        x[10] = 500.0;
+        x[70] = -350.0;
+        let (exact, _) = layer.forward(&x, rows, TrainMethod::F32, &be, &mut Rng::new(0));
+        let (clamped, _) =
+            layer.forward(&x, rows, TrainMethod::Fp4Clamp, &be, &mut Rng::new(0));
+        let (naive, _) = layer.forward(&x, rows, TrainMethod::Rtn, &be, &mut Rng::new(0));
+        let err = |y: &[f32]| {
+            exact
+                .iter()
+                .zip(y)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let (ec, en) = (err(&clamped), err(&naive));
+        assert!(ec < en / 4.0, "fp4-clamp err {ec} vs rtn err {en}");
+    }
+
+    #[test]
+    fn dge_preserves_gradient_scale_and_caps() {
+        let mut rng = Rng::new(16);
+        let (d_out, d_in) = (8, 64);
+        let w = rng.gaussian_vec(d_out * d_in, 1.0);
+        let mut dw = vec![1.0f32; d_out * d_in];
+        apply_dge(&mut dw, &w, d_out, d_in);
+        for &f in &dw {
+            assert!(f > 0.0 && f <= DGE_CAP, "factor {f} out of range");
+        }
+        let mean = dw.iter().map(|&v| v as f64).sum::<f64>() / dw.len() as f64;
+        assert!((mean - 1.0).abs() < 0.35, "DGE mean factor drifted: {mean}");
+        // the group max itself gets the shallow end of the surrogate
+        let amax_idx = (0..d_in)
+            .max_by(|&a, &b| w[a].abs().partial_cmp(&w[b].abs()).unwrap())
+            .unwrap();
+        assert!(dw[amax_idx] <= 1.0);
+    }
+
+    #[test]
+    fn abs_quantile_picks_the_tail() {
+        let x: Vec<f32> = (1..=100).map(|v| v as f32).collect();
+        let tau = abs_quantile(&x, 0.99);
+        assert!(tau >= 99.0 && tau <= 100.0, "tau {tau}");
+        assert_eq!(abs_quantile(&[0.0; 8], 0.99), 0.0);
     }
 
     #[test]

@@ -48,7 +48,7 @@ pub mod transformer;
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 pub use dist::{DistOptions, GradReducer, ReduceMode, DEFAULT_GRAD_SHARDS};
 pub use layer::QuantLinear;
@@ -57,7 +57,12 @@ pub use optim::Adam;
 pub use trainer::{train_native, train_native_transformer, NativeTrainOptions};
 pub use transformer::{TransformerConfig, TransformerLm};
 
-use crate::quant::mxfp4::MX_GROUP;
+use crate::quant::format::MXFP4;
+
+/// The MX-group alignment the native models are built around (the forward
+/// contraction axes must tile into MXFP4 groups; NVFP4's 16-groups divide
+/// it, so one constraint covers the whole method axis).
+const GROUP: usize = MXFP4.group;
 
 /// A trained native model of either architecture — what `repro serve`
 /// loads from disk without being told which trainer produced it.
@@ -111,54 +116,11 @@ impl NativeModel {
 }
 
 /// Precision recipe for the linear layers — the Table 3 method axis.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum TrainMethod {
-    /// Exact f32 GEMMs forward and backward (the bf16-stand-in baseline).
-    F32,
-    /// MXFP8 (E4M3 + E8M0 group scale) quant-dequant on every GEMM
-    /// operand — the paper's "lossless" low-precision baseline.
-    Mxfp8,
-    /// Quartet Algorithm 1: QuEST MXFP4 forward (fixed Hadamard, RMSE
-    /// clip, trust mask) + unbiased SR(3/4·x) backward with the trust
-    /// mask as straight-through gradient gate.
-    Quartet,
-    /// Naive MXFP4: absmax RTN straight on the raw tensors, forward *and*
-    /// backward, with no Hadamard rotation anywhere — biased gradients
-    /// over heavy-tailed distributions, the ordering's reliable loser
-    /// (the rotation being the difference is exactly the paper's point).
-    Rtn,
-}
-
-impl TrainMethod {
-    /// Every method, in the order the loss comparison quotes them.
-    pub const ALL: [TrainMethod; 4] = [
-        TrainMethod::F32,
-        TrainMethod::Mxfp8,
-        TrainMethod::Quartet,
-        TrainMethod::Rtn,
-    ];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            TrainMethod::F32 => "f32",
-            TrainMethod::Mxfp8 => "mxfp8",
-            TrainMethod::Quartet => "quartet",
-            TrainMethod::Rtn => "rtn",
-        }
-    }
-
-    pub fn parse(s: &str) -> Result<TrainMethod> {
-        match s {
-            "f32" => Ok(TrainMethod::F32),
-            "mxfp8" => Ok(TrainMethod::Mxfp8),
-            "quartet" => Ok(TrainMethod::Quartet),
-            "rtn" => Ok(TrainMethod::Rtn),
-            other => Err(anyhow!(
-                "unknown method {other:?} (expected f32|mxfp8|quartet|rtn)"
-            )),
-        }
-    }
-}
+/// This is a thin alias for the crate's single method-axis enum
+/// ([`crate::quant::format::Method`]); training consumes the full axis,
+/// so no restriction applies here. The variants, `name()` registry and
+/// `parse()` live in `quant::format`.
+pub type TrainMethod = crate::quant::format::Method;
 
 /// Shape of the native MLP language model. The model predicts token t+1
 /// from the embeddings of tokens (t-1, t) — exactly the order-2 structure
@@ -183,13 +145,13 @@ impl ModelConfig {
     /// serving engine can carry any vocab.
     pub fn validate(&self) -> Result<()> {
         ensure!(
-            (2 * self.d_emb) % MX_GROUP == 0,
-            "2*d_emb must be a multiple of {MX_GROUP} (d_emb {})",
+            (2 * self.d_emb) % GROUP == 0,
+            "2*d_emb must be a multiple of {GROUP} (d_emb {})",
             self.d_emb
         );
         ensure!(
-            self.d_hidden % MX_GROUP == 0,
-            "d_hidden must be a multiple of {MX_GROUP} (got {})",
+            self.d_hidden % GROUP == 0,
+            "d_hidden must be a multiple of {GROUP} (got {})",
             self.d_hidden
         );
         ensure!(self.d_emb > 0 && self.d_hidden > 0 && self.vocab > 1, "degenerate shape");
@@ -200,9 +162,9 @@ impl ModelConfig {
     pub fn validate_for_training(&self) -> Result<()> {
         self.validate()?;
         ensure!(
-            self.vocab % MX_GROUP == 0,
+            self.vocab % GROUP == 0,
             "training quantizes the logit gradient [rows, vocab], so vocab must be a \
-             multiple of {MX_GROUP} (got {})",
+             multiple of {GROUP} (got {})",
             self.vocab
         );
         Ok(())

@@ -33,7 +33,11 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::kernels::scalar::dot_f32;
 use crate::kernels::Backend;
-use crate::quant::mxfp4::MX_GROUP;
+use crate::quant::format::MXFP4;
+
+/// MX-group alignment for the transformer's contraction axes (NVFP4's
+/// 16-groups divide it, so one constraint covers the whole method axis).
+const GROUP: usize = MXFP4.group;
 use crate::train::layer::{backward_with, forward_with, LinearCache, QuantLinear};
 use crate::train::model::softmax_xent;
 use crate::train::TrainMethod;
@@ -71,13 +75,13 @@ impl TransformerConfig {
     /// see [`TransformerConfig::validate_for_training`].
     pub fn validate(&self) -> Result<()> {
         ensure!(
-            self.d_model % MX_GROUP == 0,
-            "d_model must be a multiple of {MX_GROUP} (got {})",
+            self.d_model % GROUP == 0,
+            "d_model must be a multiple of {GROUP} (got {})",
             self.d_model
         );
         ensure!(
-            self.d_ff % MX_GROUP == 0,
-            "d_ff must be a multiple of {MX_GROUP} (got {})",
+            self.d_ff % GROUP == 0,
+            "d_ff must be a multiple of {GROUP} (got {})",
             self.d_ff
         );
         ensure!(self.n_heads > 0, "n_heads must be positive");
@@ -104,9 +108,9 @@ impl TransformerConfig {
     pub fn validate_for_training(&self) -> Result<()> {
         self.validate()?;
         ensure!(
-            self.vocab % MX_GROUP == 0,
+            self.vocab % GROUP == 0,
             "training quantizes the logit gradient [rows, vocab], so vocab must be a \
-             multiple of {MX_GROUP} (got {})",
+             multiple of {GROUP} (got {})",
             self.vocab
         );
         Ok(())

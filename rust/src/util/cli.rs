@@ -132,14 +132,17 @@ pub fn apply_backend_flag(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// Consume `--methods f32,mxfp8,quartet,rtn` (default: the full axis) —
-/// the Table 3 method sweep shared by `train --native` tooling and the
-/// native-training benches.
+/// Consume `--methods f32,mxfp8,quartet,rtn` — the method sweep shared by
+/// `train --native` tooling and the native-training benches. The default
+/// is [`crate::quant::format::Method::CORE`] (the gated Table 3 axis);
+/// any name in the shared registry — `nvfp4` and `fp4-clamp` included —
+/// is accepted, so there is exactly one place method spellings live.
 pub fn methods_flag(args: &mut Args) -> Result<Vec<crate::train::TrainMethod>> {
-    args.list_or("methods", &["f32", "mxfp8", "quartet", "rtn"])
-        .iter()
-        .map(|s| crate::train::TrainMethod::parse(s))
-        .collect()
+    use crate::quant::format::Method;
+    match args.get("methods") {
+        None => Ok(Method::CORE.to_vec()),
+        Some(v) => v.split(',').map(|s| Method::parse(s.trim())).collect(),
+    }
 }
 
 /// Comma-separated positive-integer list (`--batches 1,2,4`) — the batch
@@ -221,6 +224,20 @@ mod tests {
         assert_eq!(usize_list_or(&mut b, "batches", &[8, 16]).unwrap(), vec![8, 16]);
         let mut c = Args::parse(argv("x --batches 1,zap")).unwrap();
         assert!(usize_list_or(&mut c, "batches", &[]).is_err());
+    }
+
+    #[test]
+    fn methods_flag_defaults_to_core_and_reads_the_registry() {
+        use crate::quant::format::Method;
+        let mut a = Args::parse(argv("x")).unwrap();
+        assert_eq!(methods_flag(&mut a).unwrap(), Method::CORE.to_vec());
+        let mut b = Args::parse(argv("x --methods nvfp4,fp4-clamp, quartet")).unwrap();
+        assert_eq!(
+            methods_flag(&mut b).unwrap(),
+            vec![Method::Nvfp4, Method::Fp4Clamp, Method::Quartet]
+        );
+        let mut c = Args::parse(argv("x --methods bf16")).unwrap();
+        assert!(methods_flag(&mut c).is_err());
     }
 
     #[test]

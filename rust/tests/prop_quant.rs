@@ -8,6 +8,7 @@ use quartet::quant::hadamard::{
     block_hadamard, block_hadamard_inv, rademacher, randomized_block_hadamard,
     randomized_block_hadamard_inv,
 };
+use quartet::quant::format::{E4M3_MIN_POS, NVFP4};
 use quartet::quant::mxfp4::{f32_gemm, mxfp4_gemm, Mxfp4Tensor, QuantMode, MX_GROUP};
 use quartet::util::prop::{check, ensure, ensure_close};
 use quartet::util::rng::Rng;
@@ -277,5 +278,177 @@ fn encode_decode_exhaustive() {
         let v = e2m1_decode(code);
         assert_eq!(e2m1_decode(e2m1_encode_rtn(v)), v);
         assert_eq!(e2m1_rtn(v), v); // grid points are fixed points
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NVFP4 (16-groups, fractional E4M3 scales, two-level)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_nvfp4_decode_on_grid_and_two_level_scales_cover() {
+    check("NVFP4 dequant on E2M1 grid, scales cover", 30, |ctx| {
+        let rows = ctx.dim(1).min(6);
+        let cols = ctx.dim(32); // multiple of 32, so the 16-group divides it
+        let scale = ctx.scale();
+        let x = ctx.vec_gaussian(rows * cols, scale);
+        let t = ScalarBackend.quantize_group(&x, rows, cols, &NVFP4, QuantMode::Rtn, ctx.rng);
+        // second level is a power of two by construction (exact division)
+        ensure(
+            t.tensor_scale > 0.0 && t.tensor_scale.log2().fract() == 0.0,
+            format!("tensor scale {} not a power of two", t.tensor_scale),
+        )?;
+        let g = NVFP4.group;
+        let gpr = cols / g;
+        // genuine storage: packed nibbles + one scale byte per 16-group
+        // + 4 bytes for the tensor scale
+        ensure(
+            t.storage_bytes() == rows * cols / 2 + rows * gpr + 4,
+            format!("storage bytes {}", t.storage_bytes()),
+        )?;
+        let dq = t.dequantize();
+        for r in 0..rows {
+            for gi in 0..gpr {
+                let s = t.scale_at(r, gi);
+                let amax = (0..g)
+                    .map(|i| x[r * cols + gi * g + i].abs())
+                    .fold(0.0f32, f32::max);
+                // the ceil'd E4M3 scale must cover the group (no clipping)
+                ensure(
+                    amax <= E2M1_MAX * s * (1.0 + 1e-5),
+                    format!("group absmax {amax} not covered by 6·{s}"),
+                )?;
+                for i in 0..g {
+                    let v = dq[r * cols + gi * g + i] / s;
+                    ensure(
+                        E2M1_GRID.iter().any(|&gv| (gv - v.abs()).abs() < 1e-5 * (1.0 + gv)),
+                        format!("off-grid value {v} (scale {s})"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nvfp4_scale_encoding_idempotent_over_every_byte() {
+    // scale idempotence, exhaustively: every positive E4M3 scale byte
+    // re-derives to itself when encode_scale is handed the exact absmax
+    // it covers (s · 6 · s_t). All intermediate products stay exact in
+    // f32 (≤ 7 significand bits × a power of two), the division recovers
+    // s exactly, and e4m3_ceil is the identity on its own grid. Byte 0
+    // (zero scale) instead floors to E4M3_MIN_POS — a zero group must
+    // keep an invertible scale.
+    for st_exp in [-6i32, 0, 9] {
+        let st = (st_exp as f32).exp2();
+        for b in 1u8..=0x7E {
+            let s = NVFP4.decode_scale(b);
+            let (b2, s2) = NVFP4.encode_scale(s * E2M1_MAX * st, st);
+            assert_eq!(b2, b, "byte {b:#04x} (scale {s}, s_t 2^{st_exp}) re-encoded as {b2:#04x}");
+            assert_eq!(s2, s, "byte {b:#04x}: decoded scale moved: {s} -> {s2}");
+        }
+        let (b0, s0) = NVFP4.encode_scale(0.0, st);
+        assert_eq!(s0, E4M3_MIN_POS, "zero absmax must floor at E4M3_MIN_POS");
+        assert_eq!(b0, 0x01);
+    }
+}
+
+#[test]
+fn prop_nvfp4_requantize_never_clips_and_moves_at_most_one_step() {
+    // Unlike MXFP4 (prop_rtn_roundtrip_is_a_fixed_point), NVFP4's
+    // quant∘dequant∘quant is NOT an exact fixed point: the second pass
+    // may re-derive a *fractional* E4M3 group scale whose ratio to the
+    // first is not a power of two (a group maxing at code 2.0 under
+    // scale 1.0 re-derives e4m3_ceil(1/3) = 0.34375, ratio ≈ 2.909), so
+    // first-pass grid values land off the rescaled grid. What the format
+    // does guarantee — the ceil discipline on both levels — is that the
+    // second pass never clips, so each value moves by at most half the
+    // local grid step (≤ 1·s, the 4→6 gap being the widest).
+    check("NVFP4 requantize bounded by one grid step", 25, |ctx| {
+        let rows = ctx.dim(1).min(5);
+        let cols = ctx.dim(32);
+        let scale = ctx.scale();
+        let x = ctx.vec_gaussian(rows * cols, scale);
+        let be = ScalarBackend;
+        let t1 = be.quantize_group(&x, rows, cols, &NVFP4, QuantMode::Rtn, ctx.rng);
+        let d1 = t1.dequantize();
+        let t2 = be.quantize_group(&d1, rows, cols, &NVFP4, QuantMode::Rtn, ctx.rng);
+        let d2 = t2.dequantize();
+        let g = NVFP4.group;
+        for r in 0..rows {
+            for gi in 0..cols / g {
+                let s2 = t2.scale_at(r, gi);
+                let amax1 = (0..g)
+                    .map(|i| d1[r * cols + gi * g + i].abs())
+                    .fold(0.0f32, f32::max);
+                ensure(
+                    amax1 <= E2M1_MAX * s2 * (1.0 + 1e-5),
+                    format!("second pass clipped: absmax {amax1} vs 6·{s2}"),
+                )?;
+                for i in 0..g {
+                    let idx = r * cols + gi * g + i;
+                    ensure(
+                        (d2[idx] - d1[idx]).abs() <= s2 * (1.0 + 1e-4),
+                        format!(
+                            "requantize moved value {idx} beyond a step: {} -> {} (scale {s2})",
+                            d1[idx], d2[idx]
+                        ),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nvfp4_golden_vectors_match_python() {
+    // generated by `python -m compile.nvfp4` — a pure-numpy twin (no jax)
+    // of the NVFP4 reference quantizer. Pins tensor-scale binade, decoded
+    // E4M3 group scales and dequantized values across substrates. The
+    // file is checked in so this runs from a clean clone.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data/nvfp4_vectors.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "NVFP4 golden vectors missing at {} ({e}); regenerate them with \
+             `cd python && python -m compile.nvfp4` and re-run",
+            path.display()
+        )
+    });
+    let j = quartet::util::json::Json::parse(&text).unwrap();
+    let cases = j.req("cases").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    let mut rng = Rng::new(0);
+    for (ci, case) in cases.iter().enumerate() {
+        let rows = case.req("rows").unwrap().as_f64().unwrap() as usize;
+        let cols = case.req("cols").unwrap().as_f64().unwrap() as usize;
+        let x: Vec<f32> = case.req("x").unwrap().as_arr().unwrap()
+            .iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        assert_eq!(x.len(), rows * cols, "case {ci} shape");
+        let t = ScalarBackend.quantize_group(&x, rows, cols, &NVFP4, QuantMode::Rtn, &mut rng);
+        let ts_want = case.req("tensor_scale").unwrap().as_f64().unwrap();
+        assert_eq!(
+            t.tensor_scale as f64, ts_want,
+            "case {ci}: tensor scale rust {} vs python {ts_want}",
+            t.tensor_scale
+        );
+        let scales_want: Vec<f64> = case.req("group_scales").unwrap().as_arr().unwrap()
+            .iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(scales_want.len(), t.scales.len(), "case {ci} scale count");
+        for (g, (byte, w)) in t.scales.iter().zip(&scales_want).enumerate() {
+            let s = NVFP4.decode_scale(*byte) as f64;
+            assert!((s - w).abs() < 1e-12, "case {ci} scale[{g}]: rust {s} vs python {w}");
+        }
+        let dq_want: Vec<f32> = case.req("nvfp4_rtn").unwrap().as_arr().unwrap()
+            .iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        let dq = t.dequantize();
+        for (i, (g, w)) in dq.iter().zip(&dq_want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-6 * (1.0 + w.abs()),
+                "case {ci} value[{i}]: rust {g} vs python {w}"
+            );
+        }
     }
 }
