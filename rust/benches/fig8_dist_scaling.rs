@@ -1,160 +1,208 @@
-//! Fig 8 (distributed leg): data-parallel native training scaling —
-//! worker counts × gradient-reduce modes × methods, per kernel backend.
+//! Fig 8 (distributed leg): 3D-topology native transformer training —
+//! (data, tensor, pipeline) parallelism × wire formats × methods, per
+//! kernel backend.
 //!
-//! For every point the bench trains the same model through
-//! `train::dist`'s sharded trainer and records throughput plus the
-//! modeled ring all-reduce volume per step, making the wire story
-//! concrete: an `mxfp4` reduce ships 4.25 bits/value against f32's 32 —
-//! a 7.5× comms cut from exactly the unbiased-SR machinery the paper
-//! builds for the backward pass.
+//! Every point trains the same transformer through the topology-aware
+//! trainer (`train::topo`): the global batch is cut into fixed logical
+//! gradient shards (the data axis), every block matmul is cut into fixed
+//! logical tensor shards whose partial sums cross the wire through
+//! reduce-scatter/all-gather collectives (the tensor axis), and the
+//! block stack is cut into pipeline stages running a 1F1B microbatch
+//! schedule with activations crossing stage boundaries (the pipeline
+//! axis). With `--wire mxfp4` every one of those crossings ships 4.25
+//! bits/value against f32's 32 — the paper's unbiased-SR machinery
+//! applied to the collectives themselves.
 //!
-//! Two invariants are *asserted*, not just printed, so the CI dist-smoke
-//! (`--steps 5 --workers 1,4`) is a real gate:
-//!
-//! * under `--reduce f32`, loss curves are bit-identical at every worker
-//!   count (the logical-shard determinism contract of `train::dist`);
-//! * under `--reduce mxfp4`, repeated runs at one worker count are
-//!   bit-identical (SR streams are keyed by seed/step/shard/tensor).
+//! The headline invariant is *asserted*, not just printed, so the CI
+//! topology smoke (`--steps 5 --workers 1,2 --tp 1,2 --pp 1,2`) is a
+//! real gate: for a fixed (seed, shards, ts, wire, reduce, method), the
+//! loss curve is bit-identical at every requested physical topology
+//! (workers, tp, pp) — placement never leaks into the bits. The
+//! per-collective accounting is asserted consistent as well: an active
+//! axis must carry traffic, an inactive one must carry none, and the
+//! total must be the sum of its parts.
 //!
 //! Flags: `--backend scalar|parallel|both` (falls back to the
-//! `QUARTET_BACKEND` env var), `--workers 1,2,4`, `--reduce f32,mxfp4`,
-//! `--methods f32,quartet`, `--shards 4`, `--steps N`, `--batch N`,
-//! `--d-hidden N`, `--out DIR` (save the RunRecords).
+//! `QUARTET_BACKEND` env var), `--workers 1,2`, `--tp 1,2`, `--pp 1,2`,
+//! `--wire f32,mxfp4`, `--methods f32,quartet`, `--shards 4`, `--ts 2`,
+//! `--steps N`, `--batch N`, `--d-model N`, `--n-layers N`,
+//! `--out DIR` (save the RunRecords).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use quartet::coordinator::runrecord::RunRecord;
 use quartet::train::{
-    train_native, DistOptions, ModelConfig, NativeTrainOptions, ReduceMode, TrainMethod,
-    DEFAULT_GRAD_SHARDS,
+    train_native_transformer, DistOptions, NativeTrainOptions, ReduceMode, Topology,
+    TrainMethod, TransformerConfig, DEFAULT_GRAD_SHARDS,
 };
 use quartet::util::cli::{backends_flag, usize_list_or, Args};
 
 fn main() {
     quartet::util::bench::print_header(
-        "Fig 8 — data-parallel scaling (workers x reduce mode x method)",
+        "Fig 8 — 3D topology scaling (workers x tp x pp x wire x method)",
     );
     let mut args = Args::from_env().unwrap_or_default();
     let _ = args.flag("bench");
     let backends = backends_flag(&mut args).expect("--backend");
-    let workers = usize_list_or(&mut args, "workers", &[1, 2, 4]).expect("--workers");
-    let reduces: Vec<ReduceMode> = args
-        .list_or("reduce", &["f32", "mxfp4"])
+    let workers = usize_list_or(&mut args, "workers", &[1, 2]).expect("--workers");
+    let tps = usize_list_or(&mut args, "tp", &[1, 2]).expect("--tp");
+    let pps = usize_list_or(&mut args, "pp", &[1, 2]).expect("--pp");
+    let wires: Vec<ReduceMode> = args
+        .list_or("wire", &["f32", "mxfp4"])
         .iter()
-        .map(|s| ReduceMode::parse(s).expect("--reduce"))
+        .map(|s| ReduceMode::parse(s).expect("--wire"))
         .collect();
     let methods: Vec<TrainMethod> = args
         .list_or("methods", &["f32", "quartet"])
         .iter()
         .map(|s| TrainMethod::parse(s).expect("--methods"))
         .collect();
-    let steps = args.parse_or("steps", 60usize).expect("--steps");
-    let batch = args.parse_or("batch", 32usize).expect("--batch");
+    let steps = args.parse_or("steps", 20usize).expect("--steps");
+    let batch = args.parse_or("batch", 8usize).expect("--batch");
     let shards = args.parse_or("shards", DEFAULT_GRAD_SHARDS).expect("--shards");
-    let d_hidden = args.parse_or("d-hidden", 128usize).expect("--d-hidden");
+    let ts = args.parse_or("ts", 2usize).expect("--ts");
+    let d_model = args.parse_or("d-model", 64usize).expect("--d-model");
+    let n_layers = args.parse_or("n-layers", 2usize).expect("--n-layers");
     let seed = args.parse_or("seed", 1u64).expect("--seed");
     let out = args.get("out").map(PathBuf::from);
     args.finish().expect("unknown flag");
 
     let mut records: Vec<RunRecord> = Vec::new();
-    // (backend, method) -> the f32-reduce loss curve seen at the first
-    // worker count; every other worker count must reproduce it bit-exactly
-    let mut f32_curves: BTreeMap<(String, String), (Vec<(usize, f64)>, f64)> = BTreeMap::new();
-    // (backend, method, reduce) -> tokens/sec at the first worker count,
-    // the scaling-efficiency denominator
+    // (backend, method, wire) -> the loss curve seen at the first
+    // physical topology; every other (workers, tp, pp) must reproduce it
+    // bit-exactly — the logical axes (seed, shards, ts, wire) are fixed
+    let mut curves: BTreeMap<(String, String, String), (Vec<(usize, f64)>, f64)> =
+        BTreeMap::new();
+    // (backend, method, wire) -> tokens/sec at the first topology, the
+    // scaling-efficiency denominator
     let mut base_tps: BTreeMap<(String, String, String), f64> = BTreeMap::new();
 
     println!(
-        "\n{:<10} {:>9} {:>7} {:>8} {:>10} {:>10} {:>9} {:>14}",
-        "backend", "method", "reduce", "workers", "final", "tok/s", "scaling", "comms/step"
+        "\n{:<10} {:>9} {:>6} {:>3} {:>3} {:>3} {:>10} {:>10} {:>9} {:>10} {:>10} {:>9}",
+        "backend", "method", "wire", "w", "tp", "pp", "final", "tok/s", "scaling",
+        "rs+ag/step", "p2p/step", "ar/step"
     );
     for be in &backends {
         for &method in &methods {
-            for &reduce in &reduces {
+            for &wire in &wires {
                 for &w in &workers {
-                    let cfg = ModelConfig {
-                        vocab: 128,
-                        d_emb: 32,
-                        d_hidden,
-                        n_hidden: 1,
-                        method,
-                    };
-                    let opts = NativeTrainOptions {
-                        steps,
-                        batch,
-                        seed,
-                        dist: Some(DistOptions { workers: w, shards, reduce }),
-                        ..NativeTrainOptions::default()
-                    };
-                    let (mut rec, _model) =
-                        train_native(&cfg, &opts, be.as_ref()).expect("dist training");
+                    for &tp in &tps {
+                        for &pp in &pps {
+                            let cfg = TransformerConfig {
+                                vocab: 64,
+                                d_model,
+                                n_heads: 2,
+                                n_layers,
+                                d_ff: d_model,
+                                seq: 8,
+                                method,
+                            };
+                            let opts = NativeTrainOptions {
+                                steps,
+                                batch,
+                                seed,
+                                // the DP gradient reduce rides the same
+                                // wire format as the activations
+                                dist: Some(DistOptions { workers: w, shards, reduce: wire }),
+                                topo: Some(Topology { ts, tp, pp, wire }),
+                                ..NativeTrainOptions::default()
+                            };
+                            let (mut rec, _model) =
+                                train_native_transformer(&cfg, &opts, be.as_ref())
+                                    .expect("topology training");
 
-                    let bkey = be.name().to_string();
-                    let mkey = method.name().to_string();
-                    match reduce {
-                        ReduceMode::F32 if !rec.diverged => {
-                            let ckey = (bkey.clone(), mkey.clone());
-                            if let Some((curve, final_l)) = f32_curves.get(&ckey) {
-                                assert_eq!(
-                                    &rec.train_curve, curve,
-                                    "[{bkey}/{mkey}] f32-reduce loss curve changed at \
-                                     workers={w} — the worker count leaked into the bits"
-                                );
-                                assert_eq!(
-                                    rec.final_val_loss, *final_l,
-                                    "[{bkey}/{mkey}] f32-reduce final loss changed at \
-                                     workers={w}"
-                                );
-                            } else {
-                                f32_curves
-                                    .insert(ckey, (rec.train_curve.clone(), rec.final_val_loss));
+                            let bkey = be.name().to_string();
+                            let mkey = method.name().to_string();
+                            let wkey = wire.name().to_string();
+                            let ckey = (bkey.clone(), mkey.clone(), wkey.clone());
+                            if !rec.diverged {
+                                if let Some((curve, final_l)) = curves.get(&ckey) {
+                                    assert_eq!(
+                                        &rec.train_curve, curve,
+                                        "[{bkey}/{mkey}/{wkey}] loss curve changed at \
+                                         workers={w} tp={tp} pp={pp} — the physical \
+                                         placement leaked into the bits"
+                                    );
+                                    assert_eq!(
+                                        rec.final_val_loss, *final_l,
+                                        "[{bkey}/{mkey}/{wkey}] final loss changed at \
+                                         workers={w} tp={tp} pp={pp}"
+                                    );
+                                } else {
+                                    curves.insert(
+                                        ckey.clone(),
+                                        (rec.train_curve.clone(), rec.final_val_loss),
+                                    );
+                                }
                             }
-                        }
-                        ReduceMode::Mxfp4 if !rec.diverged => {
-                            // repeatability at this exact worker count
-                            let (rec2, _) = train_native(&cfg, &opts, be.as_ref())
-                                .expect("dist training (repeat)");
-                            assert_eq!(
-                                rec.train_curve, rec2.train_curve,
-                                "[{bkey}/{mkey}] mxfp4 reduce is not deterministic at \
-                                 workers={w}"
-                            );
-                        }
-                        _ => {}
-                    }
 
-                    let key = (bkey.clone(), mkey.clone(), reduce.name().to_string());
-                    let scaling = match base_tps.get(&key).copied() {
-                        None => {
-                            base_tps.insert(key, rec.tokens_per_sec);
-                            1.0
+                            // the accounting must agree with the topology
+                            let rs = rec.comms_reduce_scatter_bytes_per_step;
+                            let ag = rec.comms_all_gather_bytes_per_step;
+                            let p2p = rec.comms_p2p_bytes_per_step;
+                            let ar = rec.comms_allreduce_bytes_per_step;
+                            let tp_eff = tp.max(1).min(ts.max(1));
+                            assert_eq!(
+                                tp_eff > 1,
+                                rs > 0.0 && ag > 0.0,
+                                "[{bkey}/{mkey}/{wkey}] tp={tp} (effective {tp_eff}) but \
+                                 rs={rs} ag={ag}"
+                            );
+                            assert_eq!(
+                                pp > 1,
+                                p2p > 0.0,
+                                "[{bkey}/{mkey}/{wkey}] pp={pp} but p2p={p2p}"
+                            );
+                            assert_eq!(
+                                w > 1,
+                                ar > 0.0,
+                                "[{bkey}/{mkey}/{wkey}] workers={w} but allreduce={ar}"
+                            );
+                            let total = rec.comms_bytes_per_step;
+                            assert!(
+                                (total - (ar + rs + ag + p2p)).abs() <= 1e-6 * (1.0 + total),
+                                "[{bkey}/{mkey}/{wkey}] total {total} != {ar}+{rs}+{ag}+{p2p}"
+                            );
+
+                            let scaling = match base_tps.get(&ckey).copied() {
+                                None => {
+                                    base_tps.insert(ckey, rec.tokens_per_sec);
+                                    1.0
+                                }
+                                Some(base) => rec.tokens_per_sec / base.max(1e-9),
+                            };
+                            println!(
+                                "{:<10} {:>9} {:>6} {:>3} {:>3} {:>3} {:>10.4} {:>10.0} \
+                                 {:>8.2}x {:>6.1} KiB {:>6.1} KiB {:>5.1} KiB{}",
+                                bkey,
+                                mkey,
+                                wkey,
+                                rec.workers,
+                                rec.tp,
+                                rec.pp,
+                                rec.final_val_loss,
+                                rec.tokens_per_sec,
+                                scaling,
+                                (rs + ag) / 1024.0,
+                                p2p / 1024.0,
+                                ar / 1024.0,
+                                if rec.diverged { "  [DIVERGED]" } else { "" }
+                            );
+                            rec.artifact = format!("fig8-{}-{}", rec.artifact, bkey);
+                            records.push(rec);
                         }
-                        Some(base) => rec.tokens_per_sec / base.max(1e-9),
-                    };
-                    println!(
-                        "{:<10} {:>9} {:>7} {:>8} {:>10.4} {:>10.0} {:>8.2}x {:>11.1} KiB{}",
-                        bkey,
-                        mkey,
-                        reduce.name(),
-                        rec.workers,
-                        rec.final_val_loss,
-                        rec.tokens_per_sec,
-                        scaling,
-                        rec.comms_bytes_per_step / 1024.0,
-                        if rec.diverged { "  [DIVERGED]" } else { "" }
-                    );
-                    rec.artifact = format!("{}-{}", rec.artifact, bkey);
-                    records.push(rec);
+                    }
                 }
             }
         }
     }
 
     println!(
-        "\nf32 reduce: loss curves bit-identical across all requested worker counts \
-         (asserted). mxfp4 reduce: 4.25 bits/value on the wire vs f32's 32 — the comms \
-         column shrinks 7.5x at equal worker count; SR keeps the reduced gradient unbiased."
+        "\ntopology invariant: for fixed (seed, shards, ts, wire, reduce), loss curves \
+         are bit-identical at every (workers, tp, pp) placement (asserted). mxfp4 wire: \
+         4.25 bits/value on every collective vs f32's 32 — reduce-scatter, all-gather, \
+         stage point-to-point and the gradient all-reduce all shrink 7.5x."
     );
     if let Some(dir) = out {
         for rec in &records {

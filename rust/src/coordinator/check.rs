@@ -52,6 +52,11 @@ pub struct Baselines {
     /// serve records: minimum concurrent-request multiple over the dense
     /// baseline required of the `kv_capacity` record
     pub kv_min_concurrency_vs_dense: f64,
+    /// run records: minimum bytes a collective that the topology says is
+    /// active must carry per step — tp>1 runs must show reduce-scatter
+    /// and all-gather traffic, pp>1 runs point-to-point traffic
+    /// (0.0 when the baselines file has no "dist" section)
+    pub dist_min_collective_bytes: f64,
     /// cross-record accuracy-ordering floors over the native method
     /// sweep (`None` when the baselines file has no "ordering" section)
     pub ordering: Option<OrderingFloors>,
@@ -96,6 +101,12 @@ impl Baselines {
             Some(kv) => (num(kv, "min_prefix_hit_rate")?, num(kv, "min_concurrency_vs_dense")?),
             None => (0.0, 0.0),
         };
+        // "dist" is optional for the same reason: pre-topology baseline
+        // files keep loading, with the per-collective floors at 0.0.
+        let dist_min_collective_bytes = match j.get("dist") {
+            Some(d) => num(d, "min_collective_bytes")?,
+            None => 0.0,
+        };
         // "ordering" is optional too: without it the cross-record
         // accuracy gate is off entirely (pre-native-sweep baseline files
         // keep loading, and perf-only record trees stay ungated).
@@ -116,6 +127,7 @@ impl Baselines {
             kernel_min_predec_speedup,
             kv_min_prefix_hit_rate,
             kv_min_concurrency_vs_dense,
+            dist_min_collective_bytes,
             ordering,
         })
     }
@@ -440,6 +452,102 @@ fn check_run(j: &Json, name: &str, b: &Baselines, violations: &mut Vec<String>) 
         }
     }
 
+    // topology fields (written by every current record; absent only in
+    // pre-topology archives). When the per-collective schema is present,
+    // the topology and the accounting must agree: an active tensor or
+    // pipeline axis must carry traffic, an inactive one must carry none,
+    // and the total must be the sum of its parts.
+    let tp = j.get("tp").and_then(|v| v.as_f64());
+    let pp = j.get("pp").and_then(|v| v.as_f64());
+    if let Some(t) = tp {
+        if t < 1.0 {
+            fail(format!("tp {t} < 1"));
+        }
+    }
+    if let Some(p) = pp {
+        if p < 1.0 {
+            fail(format!("pp {p} < 1"));
+        }
+    }
+    if let Some(w) = j.get("wire").and_then(|v| v.as_str()) {
+        if !matches!(w, "none" | "f32" | "mxfp4") {
+            fail(format!("unknown wire format {w:?}"));
+        }
+    }
+    let coll = |key: &str| j.get(key).and_then(|v| v.as_f64());
+    let ar = coll("comms_allreduce_bytes_per_step");
+    let rs = coll("comms_reduce_scatter_bytes_per_step");
+    let ag = coll("comms_all_gather_bytes_per_step");
+    let p2p = coll("comms_p2p_bytes_per_step");
+    for (key, v) in [
+        ("comms_allreduce_bytes_per_step", ar),
+        ("comms_reduce_scatter_bytes_per_step", rs),
+        ("comms_all_gather_bytes_per_step", ag),
+        ("comms_p2p_bytes_per_step", p2p),
+    ] {
+        if let Some(x) = v {
+            if !x.is_finite() || x < 0.0 {
+                fail(format!("{key} {x} is negative or not finite"));
+            }
+        }
+    }
+    if let (Some(rs), Some(ag)) = (rs, ag) {
+        match tp {
+            Some(t) if t > 1.0 => {
+                if rs < b.dist_min_collective_bytes || ag < b.dist_min_collective_bytes {
+                    fail(format!(
+                        "tp {t} run carries reduce-scatter {rs} / all-gather {ag} bytes \
+                         per step, below the required {} — the tensor axis moved no \
+                         partial sums",
+                        b.dist_min_collective_bytes
+                    ));
+                }
+            }
+            Some(_) => {
+                if rs != 0.0 || ag != 0.0 {
+                    fail(format!(
+                        "tp 1 run reports reduce-scatter {rs} / all-gather {ag} bytes \
+                         per step — an unsharded run has no tensor collectives"
+                    ));
+                }
+            }
+            None => {}
+        }
+    }
+    if let Some(x) = p2p {
+        match pp {
+            Some(p) if p > 1.0 => {
+                if x < b.dist_min_collective_bytes {
+                    fail(format!(
+                        "pp {p} run carries point-to-point {x} bytes per step, below the \
+                         required {} — the pipeline moved no activations",
+                        b.dist_min_collective_bytes
+                    ));
+                }
+            }
+            Some(_) => {
+                if x != 0.0 {
+                    fail(format!(
+                        "pp 1 run reports point-to-point {x} bytes per step — an \
+                         unstaged run has no stage boundaries"
+                    ));
+                }
+            }
+            None => {}
+        }
+    }
+    if let (Some(ar), Some(rs), Some(ag), Some(p2p)) = (ar, rs, ag, p2p) {
+        if let Some(total) = coll("comms_bytes_per_step") {
+            let sum = ar + rs + ag + p2p;
+            if (total - sum).abs() > 1e-6 * (1.0 + total.abs()) {
+                fail(format!(
+                    "comms_bytes_per_step {total} is not the sum of its per-collective \
+                     parts ({ar} + {rs} + {ag} + {p2p} = {sum})"
+                ));
+            }
+        }
+    }
+
     // perf floor: only meaningful for completed, non-diverged runs
     match (req_num(j, "tokens_per_sec"), req_num(j, "steps")) {
         (Ok(tps), Ok(steps)) => {
@@ -645,6 +753,7 @@ mod tests {
             kernel_min_predec_speedup: 2.0,
             kv_min_prefix_hit_rate: 0.25,
             kv_min_concurrency_vs_dense: 2.0,
+            dist_min_collective_bytes: 1.0,
             ordering: Some(OrderingFloors {
                 slack: 0.08,
                 min_rtn_margin: 0.05,
@@ -672,7 +781,14 @@ mod tests {
             workers: 4,
             grad_shards: 4,
             reduce: "mxfp4".into(),
+            tp: 1,
+            pp: 1,
+            wire: "none".into(),
             comms_bytes_per_step: 1234.5,
+            comms_allreduce_bytes_per_step: 1234.5,
+            comms_reduce_scatter_bytes_per_step: 0.0,
+            comms_all_gather_bytes_per_step: 0.0,
+            comms_p2p_bytes_per_step: 0.0,
         };
         Json::parse(&r.to_json().to_string()).unwrap()
     }
@@ -805,6 +921,7 @@ mod tests {
         assert_eq!(b.kernel_min_predec_speedup, 0.0);
         assert_eq!(b.kv_min_prefix_hit_rate, 0.0);
         assert_eq!(b.kv_min_concurrency_vs_dense, 0.0);
+        assert_eq!(b.dist_min_collective_bytes, 0.0);
         assert!(b.ordering.is_none());
 
         let j = Json::parse(
@@ -813,6 +930,7 @@ mod tests {
                          "max_ttft_p99_s":300.0},
                 "kernel":{"min_gflops":0.05,"min_predec_speedup":2.0},
                 "kv":{"min_prefix_hit_rate":0.25,"min_concurrency_vs_dense":2.0},
+                "dist":{"min_collective_bytes":1.0},
                 "ordering":{"slack":0.08,"min_rtn_margin":0.05,"min_steps":300}}"#,
         )
         .unwrap();
@@ -820,6 +938,7 @@ mod tests {
         assert_eq!(b.kernel_min_predec_speedup, 2.0);
         assert_eq!(b.kv_min_prefix_hit_rate, 0.25);
         assert_eq!(b.kv_min_concurrency_vs_dense, 2.0);
+        assert_eq!(b.dist_min_collective_bytes, 1.0);
         let o = b.ordering.unwrap();
         assert_eq!(o.slack, 0.08);
         assert_eq!(o.min_rtn_margin, 0.05);
@@ -886,6 +1005,93 @@ mod tests {
         let mut rep = CheckReport::default();
         check_one(&u, "util.json", &b, &mut rep);
         assert!(rep.violations.iter().any(|v| v.contains("page_utilization")));
+    }
+
+    /// Rewrite a run record's topology + per-collective fields in place.
+    fn set_topo(j: &mut Json, tp: f64, pp: f64, ar: f64, rs: f64, ag: f64, p2p: f64) {
+        j.set("tp", Json::num(tp));
+        j.set("pp", Json::num(pp));
+        j.set("wire", Json::str("mxfp4"));
+        j.set("comms_bytes_per_step", Json::num(ar + rs + ag + p2p));
+        j.set("comms_allreduce_bytes_per_step", Json::num(ar));
+        j.set("comms_reduce_scatter_bytes_per_step", Json::num(rs));
+        j.set("comms_all_gather_bytes_per_step", Json::num(ag));
+        j.set("comms_p2p_bytes_per_step", Json::num(p2p));
+    }
+
+    #[test]
+    fn dist_gate_checks_topology_against_collective_accounting() {
+        let b = baselines();
+
+        // a healthy tp=2, pp=2 record passes
+        let mut j = run_json(5000.0);
+        set_topo(&mut j, 2.0, 2.0, 1000.0, 500.0, 400.0, 100.0);
+        let mut rep = CheckReport::default();
+        check_one(&j, "ok.json", &b, &mut rep);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+
+        // tp>1 with zero tensor collectives trips the floor
+        let mut j = run_json(5000.0);
+        set_topo(&mut j, 2.0, 1.0, 1000.0, 0.0, 0.0, 0.0);
+        let mut rep = CheckReport::default();
+        check_one(&j, "dead_tp.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("no partial sums")), "{:?}", rep.violations);
+
+        // tp=1 with nonzero tensor collectives is inconsistent
+        let mut j = run_json(5000.0);
+        set_topo(&mut j, 1.0, 1.0, 1000.0, 500.0, 400.0, 0.0);
+        let mut rep = CheckReport::default();
+        check_one(&j, "ghost_tp.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("no tensor collectives")), "{:?}", rep.violations);
+
+        // pp>1 with zero p2p trips, pp=1 with nonzero p2p trips
+        let mut j = run_json(5000.0);
+        set_topo(&mut j, 1.0, 2.0, 1000.0, 0.0, 0.0, 0.0);
+        let mut rep = CheckReport::default();
+        check_one(&j, "dead_pp.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("no activations")), "{:?}", rep.violations);
+        let mut j = run_json(5000.0);
+        set_topo(&mut j, 1.0, 1.0, 1000.0, 0.0, 0.0, 64.0);
+        let mut rep = CheckReport::default();
+        check_one(&j, "ghost_pp.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("no stage boundaries")), "{:?}", rep.violations);
+
+        // total must equal the sum of its parts
+        let mut j = run_json(5000.0);
+        set_topo(&mut j, 2.0, 2.0, 1000.0, 500.0, 400.0, 100.0);
+        j.set("comms_bytes_per_step", Json::num(9999.0));
+        let mut rep = CheckReport::default();
+        check_one(&j, "bad_sum.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("sum of its per-collective")), "{:?}", rep.violations);
+
+        // tp/pp below 1 and an unknown wire format are schema violations
+        let mut j = run_json(5000.0);
+        set_topo(&mut j, 0.0, 0.0, 1000.0, 0.0, 0.0, 0.0);
+        j.set("wire", Json::str("fp8"));
+        let mut rep = CheckReport::default();
+        check_one(&j, "bad_topo.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("tp 0")), "{:?}", rep.violations);
+        assert!(rep.violations.iter().any(|v| v.contains("pp 0")), "{:?}", rep.violations);
+        assert!(rep.violations.iter().any(|v| v.contains("unknown wire format")), "{:?}", rep.violations);
+
+        // pre-topology archives (no tp/pp/per-collective keys) stay legal
+        let mut j = run_json(5000.0);
+        if let Json::Obj(m) = &mut j {
+            for k in [
+                "tp",
+                "pp",
+                "wire",
+                "comms_allreduce_bytes_per_step",
+                "comms_reduce_scatter_bytes_per_step",
+                "comms_all_gather_bytes_per_step",
+                "comms_p2p_bytes_per_step",
+            ] {
+                m.remove(k);
+            }
+        }
+        let mut rep = CheckReport::default();
+        check_one(&j, "old.json", &b, &mut rep);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
     }
 
     #[test]

@@ -33,9 +33,25 @@ pub struct RunRecord {
     pub grad_shards: usize,
     /// gradient all-reduce wire format: `none` | `f32` | `mxfp4`
     pub reduce: String,
-    /// modeled ring all-reduce traffic per optimizer step, bytes
-    /// (0 when `workers` is 1 — nothing crosses a wire)
+    /// tensor-parallel rank count (1 for unsharded runs)
+    pub tp: usize,
+    /// pipeline-parallel stage count (1 for unstaged runs)
+    pub pp: usize,
+    /// activation wire format under tensor/pipeline sharding:
+    /// `none` | `f32` | `mxfp4`
+    pub wire: String,
+    /// modeled total wire traffic per optimizer step, bytes — the sum of
+    /// the four per-collective fields below (0 when nothing crosses a
+    /// wire)
     pub comms_bytes_per_step: f64,
+    /// gradient ring all-reduce bytes per step (the data-parallel axis)
+    pub comms_allreduce_bytes_per_step: f64,
+    /// partial-sum reduce-scatter bytes per step (the tensor axis)
+    pub comms_reduce_scatter_bytes_per_step: f64,
+    /// activation all-gather bytes per step (the tensor axis)
+    pub comms_all_gather_bytes_per_step: f64,
+    /// stage-boundary point-to-point bytes per step (the pipeline axis)
+    pub comms_p2p_bytes_per_step: f64,
 }
 
 impl RunRecord {
@@ -61,7 +77,23 @@ impl RunRecord {
             ("workers", Json::num(self.workers as f64)),
             ("grad_shards", Json::num(self.grad_shards as f64)),
             ("reduce", Json::str(&self.reduce)),
+            ("tp", Json::num(self.tp as f64)),
+            ("pp", Json::num(self.pp as f64)),
+            ("wire", Json::str(&self.wire)),
             ("comms_bytes_per_step", Json::num(self.comms_bytes_per_step)),
+            (
+                "comms_allreduce_bytes_per_step",
+                Json::num(self.comms_allreduce_bytes_per_step),
+            ),
+            (
+                "comms_reduce_scatter_bytes_per_step",
+                Json::num(self.comms_reduce_scatter_bytes_per_step),
+            ),
+            (
+                "comms_all_gather_bytes_per_step",
+                Json::num(self.comms_all_gather_bytes_per_step),
+            ),
+            ("comms_p2p_bytes_per_step", Json::num(self.comms_p2p_bytes_per_step)),
         ])
     }
 
@@ -101,8 +133,35 @@ impl RunRecord {
                 .and_then(|v| v.as_str())
                 .unwrap_or("none")
                 .to_string(),
+            tp: j.get("tp").and_then(|v| v.as_usize()).unwrap_or(1),
+            pp: j.get("pp").and_then(|v| v.as_usize()).unwrap_or(1),
+            wire: j
+                .get("wire")
+                .and_then(|v| v.as_str())
+                .unwrap_or("none")
+                .to_string(),
             comms_bytes_per_step: j
                 .get("comms_bytes_per_step")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            // pre-topology records carried a single total that was purely
+            // the gradient all-reduce; attribute it there
+            comms_allreduce_bytes_per_step: j
+                .get("comms_allreduce_bytes_per_step")
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| {
+                    j.get("comms_bytes_per_step").and_then(|v| v.as_f64()).unwrap_or(0.0)
+                }),
+            comms_reduce_scatter_bytes_per_step: j
+                .get("comms_reduce_scatter_bytes_per_step")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            comms_all_gather_bytes_per_step: j
+                .get("comms_all_gather_bytes_per_step")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            comms_p2p_bytes_per_step: j
+                .get("comms_p2p_bytes_per_step")
                 .and_then(|v| v.as_f64())
                 .unwrap_or(0.0),
         })
@@ -172,7 +231,14 @@ mod tests {
             workers: 4,
             grad_shards: 4,
             reduce: "mxfp4".into(),
-            comms_bytes_per_step: 65_280.0,
+            tp: 2,
+            pp: 2,
+            wire: "mxfp4".into(),
+            comms_bytes_per_step: 66_304.0,
+            comms_allreduce_bytes_per_step: 65_280.0,
+            comms_reduce_scatter_bytes_per_step: 512.0,
+            comms_all_gather_bytes_per_step: 384.0,
+            comms_p2p_bytes_per_step: 128.0,
         }
     }
 
@@ -188,7 +254,14 @@ mod tests {
         assert_eq!(r2.workers, 4);
         assert_eq!(r2.grad_shards, 4);
         assert_eq!(r2.reduce, "mxfp4");
-        assert_eq!(r2.comms_bytes_per_step, 65_280.0);
+        assert_eq!(r2.tp, 2);
+        assert_eq!(r2.pp, 2);
+        assert_eq!(r2.wire, "mxfp4");
+        assert_eq!(r2.comms_bytes_per_step, 66_304.0);
+        assert_eq!(r2.comms_allreduce_bytes_per_step, 65_280.0);
+        assert_eq!(r2.comms_reduce_scatter_bytes_per_step, 512.0);
+        assert_eq!(r2.comms_all_gather_bytes_per_step, 384.0);
+        assert_eq!(r2.comms_p2p_bytes_per_step, 128.0);
     }
 
     #[test]
@@ -200,13 +273,47 @@ mod tests {
             m.remove("workers");
             m.remove("grad_shards");
             m.remove("reduce");
+            m.remove("tp");
+            m.remove("pp");
+            m.remove("wire");
             m.remove("comms_bytes_per_step");
+            m.remove("comms_allreduce_bytes_per_step");
+            m.remove("comms_reduce_scatter_bytes_per_step");
+            m.remove("comms_all_gather_bytes_per_step");
+            m.remove("comms_p2p_bytes_per_step");
         }
         let r = RunRecord::from_json(&j).unwrap();
         assert_eq!(r.workers, 1);
         assert_eq!(r.grad_shards, 1);
         assert_eq!(r.reduce, "none");
+        assert_eq!(r.tp, 1);
+        assert_eq!(r.pp, 1);
+        assert_eq!(r.wire, "none");
         assert_eq!(r.comms_bytes_per_step, 0.0);
+        assert_eq!(r.comms_allreduce_bytes_per_step, 0.0);
+        assert_eq!(r.comms_reduce_scatter_bytes_per_step, 0.0);
+        assert_eq!(r.comms_all_gather_bytes_per_step, 0.0);
+        assert_eq!(r.comms_p2p_bytes_per_step, 0.0);
+    }
+
+    #[test]
+    fn pre_topology_total_is_attributed_to_allreduce() {
+        // records from the data-parallel-only era carried one total;
+        // loading them must attribute it to the all-reduce collective so
+        // the per-collective sum invariant still holds
+        let mut j = sample().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("tp");
+            m.remove("pp");
+            m.remove("wire");
+            m.remove("comms_allreduce_bytes_per_step");
+            m.remove("comms_reduce_scatter_bytes_per_step");
+            m.remove("comms_all_gather_bytes_per_step");
+            m.remove("comms_p2p_bytes_per_step");
+        }
+        let r = RunRecord::from_json(&j).unwrap();
+        assert_eq!(r.comms_allreduce_bytes_per_step, r.comms_bytes_per_step);
+        assert_eq!(r.comms_reduce_scatter_bytes_per_step, 0.0);
     }
 
     #[test]

@@ -183,7 +183,14 @@ impl<'a> Trainer<'a> {
             workers: 1,
             grad_shards: 1,
             reduce: "none".to_string(),
+            tp: 1,
+            pp: 1,
+            wire: "none".to_string(),
             comms_bytes_per_step: 0.0,
+            comms_allreduce_bytes_per_step: 0.0,
+            comms_reduce_scatter_bytes_per_step: 0.0,
+            comms_all_gather_bytes_per_step: 0.0,
+            comms_p2p_bytes_per_step: 0.0,
         };
         Ok((rec, params))
     }

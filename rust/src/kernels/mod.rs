@@ -286,6 +286,81 @@ pub trait Backend: Send + Sync {
         acc
     }
 
+    /// Reduce-scatter hook for the tensor-parallel wire: the summed
+    /// tensor is produced chunk by chunk — `chunks` balanced row-ranges
+    /// (range `c` holds `rows/chunks + (c < rows % chunks)` rows), each
+    /// contribution's chunk MXFP4-quantized with unbiased stochastic
+    /// rounding on its own stream (`salts[p * chunks + c]`), decoded, and
+    /// accumulated in part order. Returns the full `[rows, cols]` sum —
+    /// the logical concatenation of the chunks the ranks own after the
+    /// scatter. With `chunks == 1` this is exactly
+    /// [`Backend::reduce_mxfp4`].
+    ///
+    /// Same determinism contract as `reduce_mxfp4`: a pure function of
+    /// `(parts, rows, cols, chunks, salts)` at any thread count; the SR
+    /// stream discipline may differ between backends, but within one
+    /// backend the default body and any fused override must agree
+    /// exactly.
+    fn reduce_scatter_mxfp4(
+        &self,
+        parts: &[&[f32]],
+        rows: usize,
+        cols: usize,
+        chunks: usize,
+        salts: &[u64],
+    ) -> Vec<f32> {
+        assert!(chunks >= 1, "at least one chunk");
+        assert_eq!(parts.len() * chunks, salts.len(), "one salt per (part, chunk)");
+        let mut acc = vec![0.0f32; rows * cols];
+        let mut r0 = 0usize;
+        for c in 0..chunks {
+            let n = rows / chunks + usize::from(c < rows % chunks);
+            if n == 0 {
+                continue;
+            }
+            let span = r0 * cols..(r0 + n) * cols;
+            for (p, part) in parts.iter().enumerate() {
+                assert_eq!(part.len(), rows * cols, "part shape mismatch");
+                let t = self.quantize_mxfp4(
+                    &part[span.clone()],
+                    n,
+                    cols,
+                    QuantMode::Sr,
+                    &mut Rng::new(salts[p * chunks + c]),
+                );
+                let dec = self.decode_mxfp4(&t);
+                for (a, v) in acc[span.clone()].iter_mut().zip(&dec) {
+                    *a += *v;
+                }
+            }
+            r0 += n;
+        }
+        acc
+    }
+
+    /// All-gather hook for the tensor-parallel wire: every rank's chunk
+    /// (`parts[p]`, `parts[p].len() / cols` rows of width `cols`) crosses
+    /// the wire MXFP4-quantized with unbiased stochastic rounding on its
+    /// own stream (`salts[p]`), is decoded on arrival, and the chunks are
+    /// concatenated in part order into one
+    /// `[sum(rows_p), cols]` tensor. Same determinism contract as
+    /// [`Backend::reduce_mxfp4`].
+    fn all_gather_mxfp4(&self, parts: &[&[f32]], cols: usize, salts: &[u64]) -> Vec<f32> {
+        assert_eq!(parts.len(), salts.len(), "one salt per part");
+        assert!(cols > 0, "cols must be positive");
+        let mut out = Vec::new();
+        for (part, &salt) in parts.iter().zip(salts) {
+            assert_eq!(part.len() % cols, 0, "part not row-aligned");
+            let n = part.len() / cols;
+            if n == 0 {
+                continue;
+            }
+            let t = self.quantize_mxfp4(part, n, cols, QuantMode::Sr, &mut Rng::new(salt));
+            out.extend_from_slice(&self.decode_mxfp4(&t));
+        }
+        out
+    }
+
     /// Quantize a dense `[rows, cols]` tensor under an arbitrary
     /// [`GroupFormat`] descriptor (`cols % fmt.group == 0`). This is the
     /// descriptor-parameterized generalization of

@@ -604,6 +604,160 @@ impl Backend for ParallelBackend {
         acc
     }
 
+    fn reduce_scatter_mxfp4(
+        &self,
+        parts: &[&[f32]],
+        rows: usize,
+        cols: usize,
+        chunks: usize,
+        salts: &[u64],
+    ) -> Vec<f32> {
+        assert!(chunks >= 1, "at least one chunk");
+        assert_eq!(parts.len() * chunks, salts.len(), "one salt per (part, chunk)");
+        assert_eq!(cols % GROUP, 0, "cols must be a multiple of 32");
+        for part in parts {
+            assert_eq!(part.len(), rows * cols, "part shape mismatch");
+        }
+        let mut acc = vec![0.0f32; rows * cols];
+        if parts.is_empty() || rows == 0 || cols == 0 {
+            return acc;
+        }
+        // Fused QDQ-accumulate like `reduce_mxfp4`, except the SR stream
+        // of a row is keyed on its (part, chunk) salt and its LOCAL row
+        // index within the chunk — exactly what the trait default's
+        // per-chunk `quantize_mxfp4` call would draw on this backend —
+        // so the override is bit-identical to the default at any thread
+        // count. Chunk boundaries come from the balanced split.
+        let mut starts = Vec::with_capacity(chunks + 1);
+        let mut r0 = 0usize;
+        starts.push(0);
+        for c in 0..chunks {
+            r0 += rows / chunks + usize::from(c < rows % chunks);
+            starts.push(r0);
+        }
+        let salt_pc: Vec<u64> = salts.iter().map(|&s| Rng::new(s).next_u64()).collect();
+        let threads = self.pool_size().min(rows);
+        let lanes = self.lanes();
+        let gpr = cols / GROUP;
+        let lut = byte_decode_lut();
+        let rows_per = (rows + threads - 1) / threads;
+        std::thread::scope(|s| {
+            for (ci, chunk_out) in acc.chunks_mut(rows_per * cols).enumerate() {
+                let w0 = ci * rows_per;
+                let lut = &lut;
+                let salt_pc = &salt_pc;
+                let starts = &starts;
+                s.spawn(move || {
+                    let mut t = Mxfp4Tensor {
+                        rows: 1,
+                        cols,
+                        codes: vec![0u8; cols / 2],
+                        scales: vec![E8m0(0); gpr],
+                        mask: None,
+                    };
+                    let mut dec = vec![0.0f32; cols];
+                    // rows ascend within a worker, so the containing
+                    // chunk index only ever moves forward
+                    let mut c = 0usize;
+                    for (i, out_row) in chunk_out.chunks_mut(cols).enumerate() {
+                        let r = w0 + i;
+                        while starts[c + 1] <= r {
+                            c += 1;
+                        }
+                        let lr = r - starts[c];
+                        for (p, part) in parts.iter().enumerate() {
+                            let mut row_rng = row_stream(salt_pc[p * chunks + c], lr);
+                            simd::quantize_rows(
+                                lanes,
+                                &part[r * cols..(r + 1) * cols],
+                                1,
+                                cols,
+                                QuantMode::Sr,
+                                &mut row_rng,
+                                &mut t.codes,
+                                &mut t.scales,
+                                None,
+                            );
+                            simd::decode_row(lanes, &t, 0, lut, &mut dec);
+                            for (a, v) in out_row.iter_mut().zip(&dec) {
+                                *a += *v;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        acc
+    }
+
+    fn all_gather_mxfp4(&self, parts: &[&[f32]], cols: usize, salts: &[u64]) -> Vec<f32> {
+        assert_eq!(parts.len(), salts.len(), "one salt per part");
+        assert!(cols > 0, "cols must be positive");
+        assert_eq!(cols % GROUP, 0, "cols must be a multiple of 32");
+        let mut starts = Vec::with_capacity(parts.len() + 1);
+        let mut r0 = 0usize;
+        starts.push(0);
+        for part in parts {
+            assert_eq!(part.len() % cols, 0, "part not row-aligned");
+            r0 += part.len() / cols;
+            starts.push(r0);
+        }
+        let rows_total = r0;
+        let mut out = vec![0.0f32; rows_total * cols];
+        if rows_total == 0 {
+            return out;
+        }
+        // Fused QDQ copy: each output row is its source part's local row
+        // quantized on `row_stream(part salt, local row)` — the stream
+        // the trait default's per-part `quantize_mxfp4` call would use —
+        // so this is bit-identical to the default at any thread count.
+        let salt_p: Vec<u64> = salts.iter().map(|&s| Rng::new(s).next_u64()).collect();
+        let threads = self.pool_size().min(rows_total);
+        let lanes = self.lanes();
+        let gpr = cols / GROUP;
+        let lut = byte_decode_lut();
+        let rows_per = (rows_total + threads - 1) / threads;
+        std::thread::scope(|s| {
+            for (ci, chunk_out) in out.chunks_mut(rows_per * cols).enumerate() {
+                let w0 = ci * rows_per;
+                let lut = &lut;
+                let salt_p = &salt_p;
+                let starts = &starts;
+                s.spawn(move || {
+                    let mut t = Mxfp4Tensor {
+                        rows: 1,
+                        cols,
+                        codes: vec![0u8; cols / 2],
+                        scales: vec![E8m0(0); gpr],
+                        mask: None,
+                    };
+                    let mut p = 0usize;
+                    for (i, out_row) in chunk_out.chunks_mut(cols).enumerate() {
+                        let r = w0 + i;
+                        while starts[p + 1] <= r {
+                            p += 1;
+                        }
+                        let lr = r - starts[p];
+                        let mut row_rng = row_stream(salt_p[p], lr);
+                        simd::quantize_rows(
+                            lanes,
+                            &parts[p][lr * cols..(lr + 1) * cols],
+                            1,
+                            cols,
+                            QuantMode::Sr,
+                            &mut row_rng,
+                            &mut t.codes,
+                            &mut t.scales,
+                            None,
+                        );
+                        simd::decode_row(lanes, &t, 0, lut, out_row);
+                    }
+                });
+            }
+        });
+        out
+    }
+
     fn block_hadamard(&self, data: &mut [f32], g: usize) {
         assert_eq!(data.len() % g, 0);
         let n_groups = data.len() / g;

@@ -6,6 +6,7 @@
 //!               [--steps 400] [--d-hidden 128 | --d-model 64 --n-heads 4
 //!               --n-layers 2 --d-ff 128 --seq 32]
 //!               [--workers 4] [--reduce f32|mxfp4] [--shards 4]
+//!               [--tp 2] [--pp 2] [--ts 2] [--wire f32|mxfp4]
 //!               [--checkpoint ckpt.json] [--out runs]    # pure Rust
 //! repro train   --artifact n80k-quartet --steps 200 [--lr 2e-3] [--seed 0]
 //! repro sweep   --native [--preset smoke|native] [--out runs]  # pure Rust
@@ -74,7 +75,8 @@ fn main() -> Result<()> {
             let axis = quartet::quant::format::Method::axis_help();
             println!("       repro train --native --method {axis}");
             println!("                   [--arch mlp|transformer]");
-            println!("                   [--workers N --reduce f32|mxfp4 --shards S]  (pure Rust)");
+            println!("                   [--workers N --reduce f32|mxfp4 --shards S]");
+            println!("                   [--tp T --pp P --ts S --wire f32|mxfp4]  (pure Rust)");
             println!("       repro sweep --native [--preset smoke|native] [--out DIR] (pure Rust)");
             println!("       repro serve --method {axis} [--checkpoint ckpt.json]");
             println!("                   [--arch mlp|transformer] [--recompute]");
@@ -153,7 +155,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
 fn cmd_train_native(args: &mut Args) -> Result<()> {
     use quartet::train::{
         train_native, train_native_transformer, DistOptions, ModelConfig,
-        NativeTrainOptions, ReduceMode, TrainMethod, TransformerConfig,
+        NativeTrainOptions, ReduceMode, Topology, TrainMethod, TransformerConfig,
         DEFAULT_GRAD_SHARDS,
     };
 
@@ -178,6 +180,27 @@ fn cmd_train_native(args: &mut Args) -> Result<()> {
     } else {
         None
     };
+    // tensor/pipeline axes: engaged by any of --tp/--pp/--ts/--wire.
+    // --ts fixes the logical tensor-shard count (loss bits depend on ts
+    // and the wire format, never on the tp/pp placement); it defaults to
+    // the requested --tp so the common case needs one flag.
+    let tp = args.parse_opt::<usize>("tp")?;
+    let pp = args.parse_opt::<usize>("pp")?;
+    let ts = args.parse_opt::<usize>("ts")?;
+    let wire = args.get("wire");
+    let topo = if tp.is_some() || pp.is_some() || ts.is_some() || wire.is_some() {
+        Some(Topology {
+            ts: ts.or(tp).unwrap_or(1).max(1),
+            tp: tp.unwrap_or(1).max(1),
+            pp: pp.unwrap_or(1).max(1),
+            wire: match wire.as_deref() {
+                None => ReduceMode::F32,
+                Some(s) => ReduceMode::parse(s)?,
+            },
+        })
+    } else {
+        None
+    };
     let opts = NativeTrainOptions {
         steps: args.parse_or("steps", 400usize)?,
         batch: args.parse_or("batch", 32usize)?,
@@ -188,6 +211,7 @@ fn cmd_train_native(args: &mut Args) -> Result<()> {
         log_every: args.parse_or("log-every", 50usize)?,
         verbose: true,
         dist,
+        topo,
         ..NativeTrainOptions::default()
     };
     let out = args.get("out").map(PathBuf::from);
@@ -243,8 +267,21 @@ fn cmd_train_native(args: &mut Args) -> Result<()> {
             rec.workers,
             rec.grad_shards,
             rec.reduce,
-            rec.comms_bytes_per_step / 1024.0,
+            rec.comms_allreduce_bytes_per_step / 1024.0,
             if rec.reduce == "mxfp4" { "4.25" } else { "32" }
+        );
+    }
+    if rec.tp > 1 || rec.pp > 1 || rec.wire != "none" {
+        println!(
+            "topo: tp={} pp={} wire={} rs={:.1} ag={:.1} p2p={:.1} KiB/step \
+             (total {:.1} KiB/step across all collectives)",
+            rec.tp,
+            rec.pp,
+            rec.wire,
+            rec.comms_reduce_scatter_bytes_per_step / 1024.0,
+            rec.comms_all_gather_bytes_per_step / 1024.0,
+            rec.comms_p2p_bytes_per_step / 1024.0,
+            rec.comms_bytes_per_step / 1024.0
         );
     }
     if let Some(dir) = out {

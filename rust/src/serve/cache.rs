@@ -528,9 +528,31 @@ impl PackedWeightCache {
         be: &dyn Backend,
         rng: &mut Rng,
     ) -> Vec<f32> {
+        let n_hidden = self.mlp_layers().1.len() - 1;
+        self.hidden_forward_range(feats, rows, 0, n_hidden, be, rng)
+    }
+
+    /// A contiguous slice `[lo, hi)` of the MLP hidden stack (ReLU after
+    /// every layer, exactly as [`PackedWeightCache::hidden_forward`] runs
+    /// it) — the unit a pipelined prefill stage owns. Chaining the ranges
+    /// of a partition reproduces `hidden_forward` bit for bit.
+    pub fn hidden_forward_range(
+        &self,
+        feats: Vec<f32>,
+        rows: usize,
+        lo: usize,
+        hi: usize,
+        be: &dyn Backend,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
         let (_, layers) = self.mlp_layers();
+        let n_hidden = layers.len() - 1;
+        assert!(
+            lo <= hi && hi <= n_hidden,
+            "hidden range {lo}..{hi} outside the {n_hidden}-layer hidden stack"
+        );
         let mut x = feats;
-        for layer in &layers[..layers.len() - 1] {
+        for layer in &layers[lo..hi] {
             x = layer.apply(x, rows, be, rng);
             relu(&mut x);
         }

@@ -284,6 +284,15 @@ impl ServeEngine {
         if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t >= vocab) {
             bail!("request {}: prompt token {t} outside vocab 0..{vocab}", req.id);
         }
+        // paged admission reserves ceil((prompt + max_new) / page_tokens)
+        // pages; reject a request whose token total overflows here so the
+        // page arithmetic downstream can never wrap
+        if req.prompt.len().max(1).checked_add(req.max_new_tokens).is_none() {
+            bail!(
+                "request {}: prompt_len + max_new_tokens overflows usize",
+                req.id
+            );
+        }
         if req.arrival_s <= self.clock_s {
             self.waiting.push_back(req);
         } else {
@@ -370,7 +379,9 @@ impl ServeEngine {
                 // effective history: an empty prompt decodes from the
                 // zero-token pad, mirroring `new_state`
                 let len = req.prompt.len().max(1);
-                let n_pages = (len + req.max_new_tokens + pt - 1) / pt;
+                // len + max_new is overflow-guarded at submit(); div_ceil
+                // avoids the classic `+ pt - 1` wrap near usize::MAX
+                let n_pages = (len + req.max_new_tokens).div_ceil(pt);
                 // prefix sharing: full pages covered by the prefill
                 // positions 0..len-1, keyed on the prompt tokens
                 let shared = if self.kv_opts.share && len > 1 {

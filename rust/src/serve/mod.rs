@@ -297,6 +297,150 @@ impl CpuPrefillEngine {
         let tokens = all.len() * self.cfg.seq;
         Ok((all, wall, tokens as f64 / wall.max(1e-12)))
     }
+
+    /// Drain the whole queue through a `stages`-deep prefill pipeline:
+    /// the hidden stack is split into contiguous layer ranges, one scoped
+    /// thread per stage, and batches stream between stages over channels
+    /// so different batches occupy different stages concurrently — the
+    /// serving-side twin of the trainer's pipeline axis. Completions are
+    /// token-for-token identical to [`CpuPrefillEngine::drain`] (stage
+    /// placement is physical, never logical); `stages <= 1`, an empty
+    /// queue, or a hidden stack too shallow to split fall back to the
+    /// sequential drain.
+    pub fn drain_pipelined(&mut self, stages: usize) -> Result<(Vec<Completion>, f64, f64)> {
+        let n_hidden = self.cache.n_layers() - 1;
+        let p = stages.max(1).min(n_hidden.max(1));
+        if p <= 1 || self.queue.is_empty() {
+            return self.drain();
+        }
+        let (d_emb, seq, vocab, d_h) = (
+            self.cfg.d_emb,
+            self.cfg.seq,
+            self.cfg.vocab,
+            self.cfg.d_hidden,
+        );
+        let d_in = 2 * d_emb;
+        // validate everything up front: the pipeline owns the whole queue
+        for r in self.queue.iter() {
+            if r.tokens.len() != seq {
+                bail!(
+                    "request {} has {} tokens, engine seq is {}",
+                    r.id,
+                    r.tokens.len(),
+                    seq
+                );
+            }
+        }
+        let t0 = Instant::now();
+        // the same batch composition drain() produces, features built once
+        let mut batches: Vec<(Vec<Request>, Vec<f32>)> = Vec::new();
+        while !self.queue.is_empty() {
+            let take = self.queue.len().min(self.cfg.batch);
+            let reqs: Vec<Request> = self.queue.drain(..take).collect();
+            let mut x = vec![0.0f32; take * seq * d_in];
+            for (i, r) in reqs.iter().enumerate() {
+                for pos in 0..seq {
+                    let prev2 = if pos == 0 { 0 } else { r.tokens[pos - 1] };
+                    self.cache.write_features(
+                        prev2,
+                        r.tokens[pos],
+                        &mut x[(i * seq + pos) * d_in..(i * seq + pos + 1) * d_in],
+                    );
+                }
+            }
+            batches.push((reqs, x));
+        }
+        let nb = batches.len();
+        // contiguous balanced layer ranges, the remainder on the early
+        // stages (same convention as the trainer's stage_ranges)
+        let (base, extra) = (n_hidden / p, n_hidden % p);
+        let mut ranges = Vec::with_capacity(p);
+        let mut lo = 0;
+        for si in 0..p {
+            let hi = lo + base + usize::from(si < extra);
+            ranges.push((lo, hi));
+            lo = hi;
+        }
+        let cache = &self.cache;
+        let be = &*self.backend;
+
+        type Packet = (usize, Vec<f32>, usize);
+        let mut outs: Vec<Option<(Vec<f32>, usize, f64)>> = (0..nb).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let mut txs: Vec<Option<std::sync::mpsc::Sender<Packet>>> = Vec::new();
+            let mut rxs: Vec<Option<std::sync::mpsc::Receiver<Packet>>> = Vec::new();
+            for _ in 0..p {
+                let (tx, rx) = std::sync::mpsc::channel::<Packet>();
+                txs.push(Some(tx));
+                rxs.push(Some(rx));
+            }
+            let (out_tx, out_rx) = std::sync::mpsc::channel::<Packet>();
+            for (si, &(llo, lhi)) in ranges.iter().enumerate() {
+                let rx = rxs[si].take().expect("stage input channel");
+                let tx = if si + 1 < p {
+                    txs[si + 1].as_ref().expect("stage output channel").clone()
+                } else {
+                    out_tx.clone()
+                };
+                s.spawn(move || {
+                    // the deployed forward draws nothing from the RNG —
+                    // each stage's fresh stream is inert by construction
+                    let mut rng = Rng::new(0);
+                    while let Ok((k, x, rows)) = rx.recv() {
+                        let y = cache.hidden_forward_range(x, rows, llo, lhi, be, &mut rng);
+                        tx.send((k, y, rows)).expect("pipeline successor hung up");
+                    }
+                });
+            }
+            let first_tx = txs[0].take().expect("pipeline entry channel");
+            for (k, (reqs, feats)) in batches.iter_mut().enumerate() {
+                let rows = reqs.len() * seq;
+                first_tx
+                    .send((k, std::mem::take(feats), rows))
+                    .expect("pipeline entry hung up");
+            }
+            // close the chain: threads exit when their input drains
+            drop(first_tx);
+            drop(txs);
+            drop(out_tx);
+            for _ in 0..nb {
+                let (k, x, rows) = out_rx.recv().expect("pipeline exit hung up");
+                outs[k] = Some((x, rows, t0.elapsed().as_secs_f64()));
+            }
+        });
+
+        // vocab readout per batch, in submission order
+        let mut rtn_rng = Rng::new(0);
+        let mut all = Vec::with_capacity(batches.iter().map(|(r, _)| r.len()).sum());
+        for (k, (reqs, _)) in batches.iter().enumerate() {
+            let (x, rows, done_s) = outs[k].take().expect("pipeline dropped a batch");
+            let take = reqs.len();
+            debug_assert_eq!(rows, take * seq);
+            let mut last = vec![0.0f32; take * d_h];
+            for i in 0..take {
+                let src = ((i * seq) + seq - 1) * d_h;
+                last[i * d_h..(i + 1) * d_h].copy_from_slice(&x[src..src + d_h]);
+            }
+            let logits = self.cache.layer_forward(
+                self.cache.n_layers() - 1,
+                last,
+                take,
+                be,
+                &mut rtn_rng,
+            );
+            for (i, r) in reqs.iter().enumerate() {
+                all.push(Completion {
+                    id: r.id,
+                    next_token: argmax_logit(&logits[i * vocab..(i + 1) * vocab]),
+                    batch_latency_s: done_s,
+                    batch_size: take,
+                });
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens = all.len() * seq;
+        Ok((all, wall, tokens as f64 / wall.max(1e-12)))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -484,6 +628,61 @@ mod tests {
             outs.push(done.iter().map(|c| c.next_token).collect::<Vec<_>>());
         }
         assert_eq!(outs[0], outs[1]);
+    }
+
+    #[test]
+    fn pipelined_drain_matches_sequential_token_for_token() {
+        // Stage placement is a physical axis: splitting the hidden stack
+        // across 1, 2 or 4 pipeline stages (and over-asking, which clamps)
+        // must serve the exact tokens the sequential drain serves, in the
+        // same submission order — on both backends.
+        let cfg = CpuServeConfig { batch: 3, seq: 16, n_hidden: 3, ..small_cfg() };
+        let factories: [fn() -> Box<dyn Backend>; 2] = [
+            || Box::new(ScalarBackend),
+            || Box::new(ParallelBackend::with_threads(3)),
+        ];
+        for make_be in factories {
+            let base = CpuPrefillEngine::new(cfg.clone(), make_be(), 13);
+            let cache = base.shared_cache();
+            let serve = |stages: Option<usize>| {
+                let mut eng =
+                    CpuPrefillEngine::from_cache(cache.clone(), cfg.seq, cfg.batch, make_be());
+                for r in requests(8, cfg.seq, cfg.vocab, 41) {
+                    eng.submit(r);
+                }
+                let (done, _, _) = match stages {
+                    None => eng.drain().unwrap(),
+                    Some(p) => eng.drain_pipelined(p).unwrap(),
+                };
+                assert_eq!(eng.pending(), 0);
+                done.iter().map(|c| (c.id, c.next_token)).collect::<Vec<_>>()
+            };
+            let sequential = serve(None);
+            assert_eq!(sequential.len(), 8);
+            for stages in [1usize, 2, 4, 9] {
+                assert_eq!(
+                    serve(Some(stages)),
+                    sequential,
+                    "{stages}-stage pipeline changed the served tokens"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_drain_validates_and_handles_empty_queue() {
+        let cfg = CpuServeConfig { batch: 2, seq: 8, n_hidden: 2, ..small_cfg() };
+        let mut eng = CpuPrefillEngine::new(cfg, Box::new(ScalarBackend), 3);
+        let (done, _, _) = eng.drain_pipelined(3).unwrap();
+        assert!(done.is_empty());
+        // a malformed request anywhere in the queue fails the whole
+        // pipelined drain up front, before any batch is consumed
+        for r in requests(3, 8, 128, 4) {
+            eng.submit(r);
+        }
+        eng.submit(Request { id: 99, tokens: vec![1, 2] });
+        assert!(eng.drain_pipelined(2).is_err());
+        assert_eq!(eng.pending(), 4, "failed validation must not drain the queue");
     }
 
     #[test]

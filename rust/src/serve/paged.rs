@@ -87,6 +87,42 @@ impl KvPoolConfig {
     pub fn d(&self) -> usize {
         self.n_heads * self.head_dim
     }
+
+    /// Reject degenerate geometry before any page math runs: a zero
+    /// dimension makes `page_bytes` 0 (division by zero in the page-count
+    /// cap) and admission's `ceil((prompt+max_new)/page_tokens)` page
+    /// arithmetic meaningless, and a geometry whose per-page byte count
+    /// overflows `usize` would wrap into a tiny bogus page instead of
+    /// failing loudly.
+    pub fn validate(&self) -> Result<()> {
+        if self.page_tokens == 0 {
+            return Err(anyhow!("kv pool: page_tokens must be positive"));
+        }
+        if self.n_layers == 0 || self.n_heads == 0 || self.head_dim == 0 {
+            return Err(anyhow!(
+                "kv pool: n_layers/n_heads/head_dim must all be positive \
+                 (got {}/{}/{})",
+                self.n_layers,
+                self.n_heads,
+                self.head_dim
+            ));
+        }
+        let d = self
+            .n_heads
+            .checked_mul(self.head_dim)
+            .ok_or_else(|| anyhow!("kv pool: n_heads*head_dim overflows usize"))?;
+        if self.quant == KvQuant::Mxfp4 && d % GROUP != 0 {
+            return Err(anyhow!(
+                "mxfp4 KV needs n_heads*head_dim % {GROUP} == 0 (got d={d})"
+            ));
+        }
+        self.n_layers
+            .checked_mul(self.page_tokens)
+            .and_then(|rows| rows.checked_mul(d))
+            .and_then(|elems| elems.checked_mul(2 * std::mem::size_of::<f32>()))
+            .ok_or_else(|| anyhow!("kv pool: page geometry overflows usize"))?;
+        Ok(())
+    }
 }
 
 /// One page's backing storage across all layers: K and V planes of
@@ -142,13 +178,8 @@ pub struct KvPool {
 
 impl KvPool {
     pub fn new(cfg: KvPoolConfig) -> KvPool {
-        assert!(cfg.page_tokens > 0, "page_tokens must be positive");
-        if cfg.quant == KvQuant::Mxfp4 {
-            assert_eq!(
-                cfg.d() % GROUP,
-                0,
-                "mxfp4 KV needs n_heads*head_dim % 32 == 0"
-            );
+        if let Err(e) = cfg.validate() {
+            panic!("invalid KvPoolConfig: {e}");
         }
         KvPool { cfg, pages: Vec::new(), free: Vec::new() }
     }
@@ -466,6 +497,22 @@ mod tests {
             quant,
             max_bytes,
         }
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_geometry() {
+        let base = cfg(KvQuant::F32, 0);
+        assert!(base.validate().is_ok());
+        assert!(KvPoolConfig { page_tokens: 0, ..base }.validate().is_err());
+        assert!(KvPoolConfig { n_layers: 0, ..base }.validate().is_err());
+        assert!(KvPoolConfig { n_heads: 0, ..base }.validate().is_err());
+        assert!(KvPoolConfig { head_dim: 0, ..base }.validate().is_err());
+        // mxfp4 storage needs MX-aligned rows
+        let ragged = KvPoolConfig { quant: KvQuant::Mxfp4, head_dim: 31, ..base };
+        assert!(ragged.validate().is_err());
+        // page byte count must fit usize instead of wrapping
+        let huge = KvPoolConfig { page_tokens: usize::MAX / 2, ..base };
+        assert!(huge.validate().is_err());
     }
 
     #[test]

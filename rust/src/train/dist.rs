@@ -143,10 +143,84 @@ impl DistOptions {
     }
 }
 
+/// The tensor/pipeline axes of a native training run, layered on the same
+/// logical/physical split as [`DistOptions`]: `ts` (tensor shards) is
+/// **logical** — it fixes where weights/activations are sliced and where
+/// the wire QDQ happens, and therefore the loss bits — while `tp` and
+/// `pp` are **physical** — they choose thread placement and drive the
+/// per-collective comms accounting, and must never change a bit of the
+/// loss curve ([`crate::train::topo`] pins this).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Logical tensor shards: Megatron-style column/row splits of QKV, O
+    /// and gate/up/down (transformer) or the hidden stack (MLP). Fixes
+    /// the determinism granularity of the TP axis.
+    pub ts: usize,
+    /// Physical TP ranks (threads picking tensor shards up); clamped to
+    /// `ts` like `workers` is to `shards`. Only affects placement and the
+    /// reduce-scatter/all-gather byte accounting.
+    pub tp: usize,
+    /// Pipeline stages — contiguous balanced block ranges with 1F1B
+    /// microbatching (one microbatch per gradient shard). `pp == 1` runs
+    /// the same boundary math sequentially; stage placement never changes
+    /// bits.
+    pub pp: usize,
+    /// How TP partial sums / gathered activations and PP boundary
+    /// activations/gradients cross the wire when `ts > 1` (TP sites) or
+    /// between blocks (PP boundary QDQ, applied at every interior
+    /// boundary regardless of `pp` so stage placement stays logical).
+    pub wire: ReduceMode,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology { ts: 1, tp: 1, pp: 1, wire: ReduceMode::F32 }
+    }
+}
+
+impl Topology {
+    /// Effective physical TP rank count.
+    pub fn effective_tp(&self) -> usize {
+        self.tp.max(1).min(self.ts.max(1))
+    }
+
+    /// Axis sanity independent of any model shape (shape-dependent checks
+    /// live with the architectures in `train::topo`).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.ts >= 1, "need at least one tensor shard");
+        ensure!(self.tp >= 1, "need at least one TP rank");
+        ensure!(self.pp >= 1, "need at least one pipeline stage");
+        Ok(())
+    }
+}
+
+/// Per-collective wire bytes of one training step under a [`Topology`]:
+/// the DP gradient ring all-reduce, the two halves of every TP wire
+/// all-reduce (reduce-scatter + all-gather), and the PP stage-boundary
+/// point-to-point sends. Physical accounting only — `tp == 1` or
+/// `pp == 1` contribute exactly zero bytes on their axis even though the
+/// logical QDQ still runs (the same convention `workers == 1` uses for
+/// the ring).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommsBytes {
+    pub allreduce: f64,
+    pub reduce_scatter: f64,
+    pub all_gather: f64,
+    pub p2p: f64,
+}
+
+impl CommsBytes {
+    pub fn total(&self) -> f64 {
+        self.allreduce + self.reduce_scatter + self.all_gather + self.p2p
+    }
+}
+
 /// Splitmix-style fold of the run seed, step, shard and tensor labels
 /// into one 64-bit salt; shared by the model-backward streams
-/// (`tensor = MODEL_STREAM`) and the reducer's compression streams.
-fn fold_salt(seed: u64, step: u64, shard: u64, tensor: u64) -> u64 {
+/// (`tensor = MODEL_STREAM`), the reducer's compression streams, and the
+/// topology wire-collective streams (`train::topo`, which offsets its
+/// tensor labels past every reducer id).
+pub(crate) fn fold_salt(seed: u64, step: u64, shard: u64, tensor: u64) -> u64 {
     let mut h = seed ^ 0x9e37_79b9_7f4a_7c15;
     for v in [step, shard, tensor] {
         h = (h ^ v.wrapping_mul(0xa076_1d64_78bd_642f))
@@ -275,7 +349,7 @@ impl<'a> GradReducer<'a> {
 /// (contiguous balanced shard ranges) and return the per-shard results in
 /// shard order. Which worker ran a shard never affects its result, so
 /// the output is worker-count invariant by construction.
-fn run_sharded<T, F>(shards: usize, workers: usize, f: F) -> Vec<T>
+pub(crate) fn run_sharded<T, F>(shards: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,

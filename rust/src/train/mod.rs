@@ -26,6 +26,14 @@
 //!   MXFP4-compressed (unbiased SR through
 //!   `Backend::reduce_mxfp4`, 4.25 vs 32 bits/value on the wire), with
 //!   loss curves bit-identical at any worker count.
+//! * [`topo`] — the other two axes of a 3D topology: Megatron-style
+//!   tensor-sharded block matmuls (`ts` logical shards on `tp` physical
+//!   ranks) whose partial sums cross the wire through
+//!   reduce-scatter/all-gather collectives, and a 1F1B pipeline schedule
+//!   (`pp` stages over contiguous block ranges, gradient shards as
+//!   microbatches) with activations QDQ'd at every block boundary — loss
+//!   curves bit-identical at any `(workers, tp, pp)` placement of a fixed
+//!   `(seed, shards, ts, wire)`.
 //! * [`trainer`] — [`train_native`] / [`train_native_transformer`]: the
 //!   loops (batching, eval, divergence detection, the optional
 //!   [`DistOptions`] axis) emitting
@@ -43,6 +51,7 @@ pub mod dist;
 pub mod layer;
 pub mod model;
 pub mod optim;
+pub mod topo;
 pub mod trainer;
 pub mod transformer;
 
@@ -50,10 +59,11 @@ use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
-pub use dist::{DistOptions, GradReducer, ReduceMode, DEFAULT_GRAD_SHARDS};
+pub use dist::{CommsBytes, DistOptions, GradReducer, ReduceMode, Topology, DEFAULT_GRAD_SHARDS};
 pub use layer::QuantLinear;
 pub use model::MlpLm;
 pub use optim::Adam;
+pub use topo::{dist_loss_and_grads_topo_mlp, dist_loss_and_grads_topo_transformer};
 pub use trainer::{train_native, train_native_transformer, NativeTrainOptions};
 pub use transformer::{TransformerConfig, TransformerLm};
 

@@ -1,0 +1,1419 @@
+//! Tensor- and pipeline-parallel training over the MXFP4 wire format.
+//!
+//! [`dist`](crate::train::dist) gave the trainer a data-parallel axis:
+//! logical gradient shards, physical workers, and a [`GradReducer`] whose
+//! loss bits are a pure function of the *logical* configuration. This
+//! module extends the same discipline to the other two axes of a 3D
+//! topology, [`Topology`] `{ts, tp, pp, wire}`:
+//!
+//! * **Tensor sharding** (`ts`, logical) — every block matmul splits
+//!   Megatron-style: `wq/wk/wv` and `w_gate/w_up` column-parallel (weight
+//!   *rows*, since weights are `[d_out, d_in]` row-major), `wo/w_down`
+//!   row-parallel (weight *columns*). Attention is slice-local per head
+//!   group; SwiGLU is slice-local per `d_ff` range. Partial outputs meet
+//!   in four all-reduce sites per block (fwd `wo`/`w_down` partials, bwd
+//!   `da`/`dm` partials), each modeled as reduce-scatter + all-gather
+//!   through [`Backend::reduce_scatter_mxfp4`] /
+//!   [`Backend::all_gather_mxfp4`] when `wire = mxfp4`.
+//! * **TP ranks** (`tp`, physical) — how many threads evaluate the `ts`
+//!   slices; clamped to `ts`, never touches the bits.
+//! * **Pipeline stages** (`pp`, physical) — contiguous block ranges run
+//!   1F1B over the gradient shards as microbatches. Activations and
+//!   backward gradients are pushed through the wire format at *every*
+//!   interior block boundary regardless of `pp`, so stage placement is
+//!   free to change without changing the loss.
+//!
+//! The dist invariant therefore generalizes: loss curves are bit-identical
+//! at any `(workers, tp, pp)` placement of a fixed logical configuration
+//! `(seed, shards, ts, wire)`. All SR draws are keyed by
+//! [`fold_salt`]`(seed, step, shard, site-label)` — never by thread or
+//! stage identity — with site labels offset by [`TOPO_SALT_OFFSET`] so
+//! they cannot collide with the [`GradReducer`] tensor ids.
+//!
+//! Comms accounting is analytic (the topology determines it exactly):
+//! per block and microbatch, each TP all-reduce moves
+//! `(tp−1)·payload` bytes in its reduce-scatter and again in its
+//! all-gather; each physical stage boundary moves one activation forward
+//! and one gradient backward (`p2p`); the DP gradient ring is unchanged.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{ensure, Result};
+
+use crate::kernels::Backend;
+use crate::train::dist::{
+    fold_salt, ring_allreduce_bytes, run_sharded, CommsBytes, DistOptions, GradReducer,
+    ReduceMode, Topology,
+};
+use crate::train::layer::{backward_with, forward_with, LinearCache};
+use crate::train::model::{relu, softmax_xent, Grads, MlpLm};
+use crate::train::transformer::{
+    add_assign, attention_backward, merge_heads, rmsnorm_backward, rmsnorm_rows, rope_row,
+    sigmoid, silu, split_heads, split_windows, TfBlockGrads, TfGrads, TransformerConfig,
+    TransformerLm,
+};
+use crate::train::{ModelConfig, TrainMethod};
+use crate::util::rng::Rng;
+
+use super::GROUP;
+
+/// Offset of every topology SR-stream label, far above the
+/// `1 + 9·n_layers + 1` tensor ids the [`GradReducer`] uses for the DP
+/// reduction, so the two label spaces can never alias.
+pub const TOPO_SALT_OFFSET: u64 = 0x1000_0000;
+
+/// Site labels within one block (< [`SITE_STRIDE`]).
+const SITE_FWD_O: u64 = 0;
+const SITE_FWD_DOWN: u64 = 1;
+const SITE_BWD_DA: u64 = 2;
+const SITE_BWD_DM: u64 = 3;
+const SITE_FWD_BOUNDARY: u64 = 4;
+const SITE_BWD_BOUNDARY: u64 = 5;
+const SITE_ATTN_STREAM: u64 = 6;
+const SITE_MLP_STREAM: u64 = 7;
+const SITE_HEAD_STREAM: u64 = 8;
+// MLP-architecture sites (block label = layer index)
+const SITE_MLP_FWD_AG: u64 = 9;
+const SITE_MLP_BWD_AR: u64 = 10;
+const SITE_MLP_LAYER_STREAM: u64 = 11;
+const SITE_MLP_OUT_STREAM: u64 = 12;
+
+const SITE_STRIDE: u64 = 16;
+const SLICE_STRIDE: u64 = 4096;
+
+/// Derive the i-th sub-salt of a collective site (one fresh stream per
+/// `(participant, chunk)` pair, splitmix-spaced off the site base).
+fn sub_salt(base: u64, i: u64) -> u64 {
+    base.wrapping_add((i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+// ---- validation ----------------------------------------------------------
+
+/// Shape constraints the transformer imposes on a topology: head groups
+/// must tile the heads, and every slice-local contraction axis must still
+/// tile into MX groups (the slices quantize independently).
+pub fn validate_topo_transformer(cfg: &TransformerConfig, t: &Topology) -> Result<()> {
+    t.validate()?;
+    ensure!(
+        t.pp <= cfg.n_layers,
+        "pp {} exceeds the {} transformer blocks available",
+        t.pp,
+        cfg.n_layers
+    );
+    if t.ts > 1 {
+        ensure!(
+            cfg.n_heads % t.ts == 0,
+            "ts {} must divide n_heads {} (attention shards by head groups)",
+            t.ts,
+            cfg.n_heads
+        );
+        ensure!(
+            (cfg.d_model / t.ts) % GROUP == 0,
+            "d_model/ts = {}/{} must stay a multiple of {GROUP} (slices quantize \
+             their own contraction axis)",
+            cfg.d_model,
+            t.ts
+        );
+        ensure!(
+            cfg.d_ff % t.ts == 0 && (cfg.d_ff / t.ts) % GROUP == 0,
+            "d_ff/ts = {}/{} must stay a multiple of {GROUP}",
+            cfg.d_ff,
+            t.ts
+        );
+    }
+    Ok(())
+}
+
+/// Shape constraints the MLP stack imposes: only the hidden layers shard
+/// (the vocab projection stays replicated), and there is no block
+/// structure to pipeline over.
+pub fn validate_topo_mlp(cfg: &ModelConfig, t: &Topology) -> Result<()> {
+    t.validate()?;
+    ensure!(
+        t.pp == 1,
+        "pipeline parallelism needs the transformer's block structure; the MLP \
+         stack supports the tensor axis only (pp {})",
+        t.pp
+    );
+    if t.ts > 1 {
+        ensure!(
+            cfg.d_hidden % t.ts == 0 && (cfg.d_hidden / t.ts) % GROUP == 0,
+            "d_hidden/ts = {}/{} must stay a multiple of {GROUP}",
+            cfg.d_hidden,
+            t.ts
+        );
+    }
+    Ok(())
+}
+
+// ---- TP slicing helpers --------------------------------------------------
+
+/// Contiguous row range `[r0, r1)` of a row-major `[rows, width]` matrix.
+fn row_slice(w: &[f32], width: usize, r0: usize, r1: usize) -> Vec<f32> {
+    w[r0 * width..r1 * width].to_vec()
+}
+
+/// Column range `[c0, c1)` of a row-major `[rows, width]` matrix as a
+/// dense `[rows, c1-c0]` copy.
+fn col_slice(w: &[f32], rows: usize, width: usize, c0: usize, c1: usize) -> Vec<f32> {
+    let ww = c1 - c0;
+    let mut out = Vec::with_capacity(rows * ww);
+    for r in 0..rows {
+        out.extend_from_slice(&w[r * width + c0..r * width + c1]);
+    }
+    out
+}
+
+/// Scatter a dense `[rows, w_src]` block back into columns `[c0, c0+w_src)`
+/// of a row-major matrix with row width `width`.
+fn col_scatter(dst: &mut [f32], width: usize, c0: usize, src: &[f32], w_src: usize) {
+    let rows = src.len() / w_src;
+    for r in 0..rows {
+        dst[r * width + c0..r * width + c0 + w_src]
+            .copy_from_slice(&src[r * w_src..(r + 1) * w_src]);
+    }
+}
+
+/// Balanced contiguous block ranges for `pp` pipeline stages.
+fn stage_ranges(n_blocks: usize, pp: usize) -> Vec<(usize, usize)> {
+    let p = pp.clamp(1, n_blocks.max(1));
+    let per = n_blocks / p;
+    let rem = n_blocks % p;
+    let mut out = Vec::with_capacity(p);
+    let mut lo = 0;
+    for i in 0..p {
+        let n = per + usize::from(i < rem);
+        out.push((lo, lo + n));
+        lo += n;
+    }
+    out
+}
+
+// ---- the shared wire machinery -------------------------------------------
+
+/// Everything a shard's topology-aware step needs besides the model:
+/// backend, logical axes, and the salt keys. `tp` is the *effective*
+/// physical rank count (already clamped to `ts`).
+struct TopoCtx<'a> {
+    be: &'a dyn Backend,
+    ts: usize,
+    tp: usize,
+    wire: ReduceMode,
+    seed: u64,
+    step: u64,
+}
+
+impl TopoCtx<'_> {
+    /// Salt of one SR stream, keyed purely by logical identity:
+    /// `(seed, step, shard)` plus a `(block, site, slice)` label.
+    fn site_salt(&self, shard: u64, block: u64, site: u64, slice: u64) -> u64 {
+        debug_assert!(site < SITE_STRIDE && slice < SLICE_STRIDE);
+        fold_salt(
+            self.seed,
+            self.step,
+            shard,
+            TOPO_SALT_OFFSET + (block * SITE_STRIDE + site) * SLICE_STRIDE + slice,
+        )
+    }
+
+    /// All-reduce `ts` partial `[rows, cols]` tensors at a TP meeting
+    /// point. `f32` wire sums exactly in slice order; `mxfp4` wire models
+    /// ring reduce-scatter (every partial crosses the wire per chunk) then
+    /// all-gather (every summed chunk crosses again, fresh streams).
+    fn wire_allreduce(
+        &self,
+        shard: u64,
+        block: u64,
+        site: u64,
+        parts: Vec<Vec<f32>>,
+        rows: usize,
+        cols: usize,
+    ) -> Vec<f32> {
+        if parts.len() == 1 {
+            return parts.into_iter().next().unwrap();
+        }
+        match self.wire {
+            ReduceMode::F32 => {
+                let mut it = parts.into_iter();
+                let mut acc = it.next().unwrap();
+                for p in it {
+                    add_assign(&mut acc, &p);
+                }
+                acc
+            }
+            ReduceMode::Mxfp4 => {
+                let base = self.site_salt(shard, block, site, 0);
+                let chunks = self.ts;
+                let n_parts = parts.len();
+                let rs_salts: Vec<u64> =
+                    (0..n_parts * chunks).map(|i| sub_salt(base, i as u64)).collect();
+                let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+                let sum = self.be.reduce_scatter_mxfp4(&refs, rows, cols, chunks, &rs_salts);
+                let mut chunk_refs: Vec<&[f32]> = Vec::with_capacity(chunks);
+                let mut r0 = 0;
+                for c in 0..chunks {
+                    let n = rows / chunks + usize::from(c < rows % chunks);
+                    chunk_refs.push(&sum[r0 * cols..(r0 + n) * cols]);
+                    r0 += n;
+                }
+                let ag_salts: Vec<u64> = (0..chunks)
+                    .map(|c| sub_salt(base, (n_parts * chunks + c) as u64))
+                    .collect();
+                self.be.all_gather_mxfp4(&chunk_refs, cols, &ag_salts)
+            }
+        }
+    }
+
+    /// Push a tensor through the wire format at a block boundary (the
+    /// pipeline's p2p hop). Applied at every interior boundary whatever
+    /// `pp` is, so stage placement stays a physical choice.
+    fn boundary_qdq(&self, shard: u64, boundary: u64, site: u64, x: Vec<f32>, cols: usize) -> Vec<f32> {
+        if self.wire != ReduceMode::Mxfp4 {
+            return x;
+        }
+        let salt = self.site_salt(shard, boundary, site, 0);
+        self.be.all_gather_mxfp4(&[&x], cols, &[salt])
+    }
+}
+
+// ---- transformer ---------------------------------------------------------
+
+/// Per-slice attention residue (everything downstream of the head-group
+/// split, including the `wo` column-slice cache).
+struct AttnSlice {
+    lq: LinearCache,
+    lk: LinearCache,
+    lv: LinearCache,
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    probs: Vec<f32>,
+    lo: LinearCache,
+}
+
+/// Per-slice SwiGLU residue for one `d_ff` range.
+struct MlpSlice {
+    lg: LinearCache,
+    lu: LinearCache,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    ld: LinearCache,
+}
+
+/// Forward residue of one block under tensor sharding: the shared
+/// residual-stream tensors plus one slice struct per tensor shard.
+struct TopoBlockCache {
+    x_in: Vec<f32>,
+    attn_inv: Vec<f32>,
+    attn: Vec<AttnSlice>,
+    x_mid: Vec<f32>,
+    mlp_inv: Vec<f32>,
+    mlp: Vec<MlpSlice>,
+}
+
+/// One microbatch's worth of topology-aware transformer compute. Cheap to
+/// construct (all refs); built per `(shard)` so the salts key correctly.
+struct TfShard<'a> {
+    ctx: &'a TopoCtx<'a>,
+    model: &'a TransformerLm,
+    b_sh: usize,
+    shard: u64,
+}
+
+impl TfShard<'_> {
+    fn rows(&self) -> usize {
+        self.b_sh * self.model.cfg.seq
+    }
+
+    /// Token embedding gather (stage 0 owns this).
+    fn embed(&self, inputs: &[u32]) -> Vec<f32> {
+        let d = self.model.cfg.d_model;
+        let vocab = self.model.cfg.vocab;
+        let mut x = vec![0.0f32; inputs.len() * d];
+        for (r, &t) in inputs.iter().enumerate() {
+            let src = (t as usize % vocab) * d;
+            x[r * d..(r + 1) * d].copy_from_slice(&self.model.tok_emb[src..src + d]);
+        }
+        x
+    }
+
+    /// Forward one block with `ts`-way tensor sharding. The norm/residual
+    /// path is computed once; the matmuls fan out over [`run_sharded`]
+    /// with `tp` physical ranks.
+    fn block_forward(&self, bi: usize, x_in: Vec<f32>) -> (Vec<f32>, TopoBlockCache) {
+        let cfg = &self.model.cfg;
+        let (d, h, hd, s) = (cfg.d_model, cfg.n_heads, cfg.head_dim(), cfg.seq);
+        let method = cfg.method;
+        let be = self.ctx.be;
+        let rows = self.rows();
+        let ts = self.ctx.ts;
+        let hpr = h / ts; // heads per slice
+        let dpr = hpr * hd; // attention columns per slice
+        let fpr = cfg.d_ff / ts; // d_ff rows per slice
+        let scale = 1.0 / (hd as f32).sqrt();
+        let block = &self.model.blocks[bi];
+
+        let (a, attn_inv) = rmsnorm_rows(&x_in, &block.attn_norm, d);
+        let attn_out_parts = run_sharded(ts, self.ctx.tp, |sl| {
+            let (r0, r1) = (sl * dpr, (sl + 1) * dpr);
+            let wq = row_slice(&block.wq.w, d, r0, r1);
+            let wk = row_slice(&block.wk.w, d, r0, r1);
+            let wv = row_slice(&block.wv.w, d, r0, r1);
+            // every method's forward is deterministic — the stream is inert
+            let mut rng = Rng::new(0);
+            let (mut q, lq) = forward_with(&wq, dpr, d, &a, rows, method, be, &mut rng);
+            let (mut k, lk) = forward_with(&wk, dpr, d, &a, rows, method, be, &mut rng);
+            let (v, lv) = forward_with(&wv, dpr, d, &a, rows, method, be, &mut rng);
+            for r in 0..rows {
+                let pos = r % s;
+                rope_row(&mut q[r * dpr..(r + 1) * dpr], hpr, hd, pos, false);
+                rope_row(&mut k[r * dpr..(r + 1) * dpr], hpr, hd, pos, false);
+            }
+            let qh = split_heads(&q, self.b_sh, s, hpr, hd);
+            let kh = split_heads(&k, self.b_sh, s, hpr, hd);
+            let vh = split_heads(&v, self.b_sh, s, hpr, hd);
+            let (ctxh, probs) =
+                be.attention_causal(&qh, &kh, &vh, self.b_sh * hpr, s, s, hd, 0, scale);
+            let ctx = merge_heads(&ctxh, self.b_sh, s, hpr, hd);
+            let wo = col_slice(&block.wo.w, d, d, r0, r1);
+            let (o_part, lo) = forward_with(&wo, d, dpr, &ctx, rows, method, be, &mut rng);
+            (o_part, AttnSlice { lq, lk, lv, qh, kh, vh, probs, lo })
+        });
+        let (o_parts, attn): (Vec<_>, Vec<_>) = attn_out_parts.into_iter().unzip();
+        let attn_out = self
+            .ctx
+            .wire_allreduce(self.shard, bi as u64, SITE_FWD_O, o_parts, rows, d);
+        let mut x_mid = x_in.clone();
+        add_assign(&mut x_mid, &attn_out);
+
+        let (m, mlp_inv) = rmsnorm_rows(&x_mid, &block.mlp_norm, d);
+        let mlp_out_parts = run_sharded(ts, self.ctx.tp, |sl| {
+            let (r0, r1) = (sl * fpr, (sl + 1) * fpr);
+            let wg = row_slice(&block.w_gate.w, d, r0, r1);
+            let wu = row_slice(&block.w_up.w, d, r0, r1);
+            let mut rng = Rng::new(0);
+            let (gate, lg) = forward_with(&wg, fpr, d, &m, rows, method, be, &mut rng);
+            let (up, lu) = forward_with(&wu, fpr, d, &m, rows, method, be, &mut rng);
+            let hsw: Vec<f32> =
+                gate.iter().zip(&up).map(|(&g0, &u0)| silu(g0) * u0).collect();
+            let wd = col_slice(&block.w_down.w, d, cfg.d_ff, r0, r1);
+            let (down_part, ld) = forward_with(&wd, d, fpr, &hsw, rows, method, be, &mut rng);
+            (down_part, MlpSlice { lg, lu, gate, up, ld })
+        });
+        let (d_parts, mlp): (Vec<_>, Vec<_>) = mlp_out_parts.into_iter().unzip();
+        let down =
+            self.ctx
+                .wire_allreduce(self.shard, bi as u64, SITE_FWD_DOWN, d_parts, rows, d);
+        let mut x_out = x_mid.clone();
+        add_assign(&mut x_out, &down);
+        (x_out, TopoBlockCache { x_in, attn_inv, attn, x_mid, mlp_inv, mlp })
+    }
+
+    /// Backward one block. SR streams are keyed per `(shard, block,
+    /// slice)` so slice evaluation order — and thread placement — cannot
+    /// change the bits.
+    fn block_backward(
+        &self,
+        bi: usize,
+        mut dx: Vec<f32>,
+        c: TopoBlockCache,
+    ) -> (Vec<f32>, TfBlockGrads) {
+        let cfg = &self.model.cfg;
+        let (d, h, hd, s) = (cfg.d_model, cfg.n_heads, cfg.head_dim(), cfg.seq);
+        let method = cfg.method;
+        let be = self.ctx.be;
+        let rows = self.rows();
+        let ts = self.ctx.ts;
+        let hpr = h / ts;
+        let dpr = hpr * hd;
+        let fpr = cfg.d_ff / ts;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let block = &self.model.blocks[bi];
+
+        // MLP branch: x_out = x_mid + down(silu(gate(m))·up(m))
+        let mlp_parts = run_sharded(ts, self.ctx.tp, |sl| {
+            let (r0, r1) = (sl * fpr, (sl + 1) * fpr);
+            let slice = &c.mlp[sl];
+            let mut rng =
+                Rng::new(self.ctx.site_salt(self.shard, bi as u64, SITE_MLP_STREAM, sl as u64));
+            let wd = col_slice(&block.w_down.w, d, cfg.d_ff, r0, r1);
+            let (dh, dwd) = backward_with(&wd, d, fpr, &dx, &slice.ld, rows, method, be, &mut rng);
+            let mut dgate = vec![0.0f32; rows * fpr];
+            let mut dup = vec![0.0f32; rows * fpr];
+            for i in 0..rows * fpr {
+                let g0 = slice.gate[i];
+                let sg = sigmoid(g0);
+                dgate[i] = dh[i] * slice.up[i] * (sg * (1.0 + g0 * (1.0 - sg)));
+                dup[i] = dh[i] * (g0 * sg);
+            }
+            let wg = row_slice(&block.w_gate.w, d, r0, r1);
+            let (dm1, dwg) =
+                backward_with(&wg, fpr, d, &dgate, &slice.lg, rows, method, be, &mut rng);
+            let wu = row_slice(&block.w_up.w, d, r0, r1);
+            let (dm2, dwu) =
+                backward_with(&wu, fpr, d, &dup, &slice.lu, rows, method, be, &mut rng);
+            let mut dm = dm1;
+            add_assign(&mut dm, &dm2);
+            (dm, dwg, dwu, dwd)
+        });
+        let mut w_gate = Vec::with_capacity(cfg.d_ff * d);
+        let mut w_up = Vec::with_capacity(cfg.d_ff * d);
+        let mut w_down = vec![0.0f32; d * cfg.d_ff];
+        let mut dm_parts = Vec::with_capacity(ts);
+        for (sl, (dm, dwg, dwu, dwd)) in mlp_parts.into_iter().enumerate() {
+            dm_parts.push(dm);
+            w_gate.extend_from_slice(&dwg);
+            w_up.extend_from_slice(&dwu);
+            col_scatter(&mut w_down, cfg.d_ff, sl * fpr, &dwd, fpr);
+        }
+        let dm = self
+            .ctx
+            .wire_allreduce(self.shard, bi as u64, SITE_BWD_DM, dm_parts, rows, d);
+        let (dxm, mlp_norm) = rmsnorm_backward(&dm, &c.x_mid, &block.mlp_norm, &c.mlp_inv, d);
+        add_assign(&mut dx, &dxm);
+
+        // attention branch: x_mid = x_in + wo(attn(q,k,v))
+        let attn_parts = run_sharded(ts, self.ctx.tp, |sl| {
+            let (r0, r1) = (sl * dpr, (sl + 1) * dpr);
+            let slice = &c.attn[sl];
+            let mut rng =
+                Rng::new(self.ctx.site_salt(self.shard, bi as u64, SITE_ATTN_STREAM, sl as u64));
+            let wo = col_slice(&block.wo.w, d, d, r0, r1);
+            let (dctx, dwo) =
+                backward_with(&wo, d, dpr, &dx, &slice.lo, rows, method, be, &mut rng);
+            let dctxh = split_heads(&dctx, self.b_sh, s, hpr, hd);
+            let (dqh, dkh, dvh) = attention_backward(
+                &slice.qh,
+                &slice.kh,
+                &slice.vh,
+                &slice.probs,
+                &dctxh,
+                self.b_sh * hpr,
+                s,
+                s,
+                hd,
+                0,
+                scale,
+            );
+            let mut dq = merge_heads(&dqh, self.b_sh, s, hpr, hd);
+            let mut dk = merge_heads(&dkh, self.b_sh, s, hpr, hd);
+            let dv = merge_heads(&dvh, self.b_sh, s, hpr, hd);
+            for r in 0..rows {
+                let pos = r % s;
+                rope_row(&mut dq[r * dpr..(r + 1) * dpr], hpr, hd, pos, true);
+                rope_row(&mut dk[r * dpr..(r + 1) * dpr], hpr, hd, pos, true);
+            }
+            let wq = row_slice(&block.wq.w, d, r0, r1);
+            let (da1, dwq) = backward_with(&wq, dpr, d, &dq, &slice.lq, rows, method, be, &mut rng);
+            let wk = row_slice(&block.wk.w, d, r0, r1);
+            let (da2, dwk) = backward_with(&wk, dpr, d, &dk, &slice.lk, rows, method, be, &mut rng);
+            let wv = row_slice(&block.wv.w, d, r0, r1);
+            let (da3, dwv) = backward_with(&wv, dpr, d, &dv, &slice.lv, rows, method, be, &mut rng);
+            let mut da = da1;
+            add_assign(&mut da, &da2);
+            add_assign(&mut da, &da3);
+            (da, dwq, dwk, dwv, dwo)
+        });
+        let mut wq_g = Vec::with_capacity(d * d);
+        let mut wk_g = Vec::with_capacity(d * d);
+        let mut wv_g = Vec::with_capacity(d * d);
+        let mut wo_g = vec![0.0f32; d * d];
+        let mut da_parts = Vec::with_capacity(ts);
+        for (sl, (da, dwq, dwk, dwv, dwo)) in attn_parts.into_iter().enumerate() {
+            da_parts.push(da);
+            wq_g.extend_from_slice(&dwq);
+            wk_g.extend_from_slice(&dwk);
+            wv_g.extend_from_slice(&dwv);
+            col_scatter(&mut wo_g, d, sl * dpr, &dwo, dpr);
+        }
+        let da = self
+            .ctx
+            .wire_allreduce(self.shard, bi as u64, SITE_BWD_DA, da_parts, rows, d);
+        let (dxa, attn_norm) = rmsnorm_backward(&da, &c.x_in, &block.attn_norm, &c.attn_inv, d);
+        add_assign(&mut dx, &dxa);
+
+        (
+            dx,
+            TfBlockGrads {
+                attn_norm,
+                wq: wq_g,
+                wk: wk_g,
+                wv: wv_g,
+                wo: wo_g,
+                mlp_norm,
+                w_gate,
+                w_up,
+                w_down,
+            },
+        )
+    }
+
+    /// Forward blocks `[lo, hi)`, applying the boundary wire crossing
+    /// before every interior block.
+    fn stage_forward(
+        &self,
+        lo: usize,
+        hi: usize,
+        mut x: Vec<f32>,
+    ) -> (Vec<f32>, Vec<TopoBlockCache>) {
+        let d = self.model.cfg.d_model;
+        let mut caches = Vec::with_capacity(hi - lo);
+        for bi in lo..hi {
+            if bi > 0 {
+                x = self
+                    .ctx
+                    .boundary_qdq(self.shard, bi as u64, SITE_FWD_BOUNDARY, x, d);
+            }
+            let (x_out, c) = self.block_forward(bi, x);
+            x = x_out;
+            caches.push(c);
+        }
+        (x, caches)
+    }
+
+    /// Backward blocks `[lo, hi)` in reverse; returns the gradient flowing
+    /// out of block `lo` and the per-block grads in block order.
+    fn stage_backward(
+        &self,
+        lo: usize,
+        hi: usize,
+        mut dx: Vec<f32>,
+        caches: Vec<TopoBlockCache>,
+    ) -> (Vec<f32>, Vec<TfBlockGrads>) {
+        let d = self.model.cfg.d_model;
+        let mut grads = Vec::with_capacity(hi - lo);
+        for (i, c) in caches.into_iter().enumerate().rev() {
+            let bi = lo + i;
+            let (dx_out, g) = self.block_backward(bi, dx, c);
+            dx = dx_out;
+            grads.push(g);
+            if bi > 0 {
+                dx = self
+                    .ctx
+                    .boundary_qdq(self.shard, bi as u64, SITE_BWD_BOUNDARY, dx, d);
+            }
+        }
+        grads.reverse();
+        (dx, grads)
+    }
+
+    /// Final norm + tied vocab head, forward and backward (the last
+    /// stage owns this). Returns `(loss, dx into the top block, dW of the
+    /// tied embedding from the head, final-norm grad)`.
+    fn head_forward_backward(
+        &self,
+        x: &[f32],
+        targets: &[u32],
+    ) -> (f64, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let cfg = &self.model.cfg;
+        let d = cfg.d_model;
+        let rows = self.rows();
+        let be = self.ctx.be;
+        let (hn, final_inv) = rmsnorm_rows(x, &self.model.final_norm, d);
+        let mut fwd_rng = Rng::new(0);
+        let (logits, head) =
+            forward_with(&self.model.tok_emb, cfg.vocab, d, &hn, rows, cfg.method, be, &mut fwd_rng);
+        let (loss, dlogits) = softmax_xent(&logits, targets, cfg.vocab, true);
+        let dlogits = dlogits.expect("grad requested");
+        let l = self.model.blocks.len() as u64;
+        let mut rng = Rng::new(self.ctx.site_salt(self.shard, l, SITE_HEAD_STREAM, 0));
+        let (dhn, de) = backward_with(
+            &self.model.tok_emb,
+            cfg.vocab,
+            d,
+            &dlogits,
+            &head,
+            rows,
+            cfg.method,
+            be,
+            &mut rng,
+        );
+        let (dx, fng) = rmsnorm_backward(&dhn, x, &self.model.final_norm, &final_inv, d);
+        (loss, dx, de, fng)
+    }
+
+    /// Scatter the embedding-output gradient into the tied table, in the
+    /// same row order the sequential path uses.
+    fn scatter_embedding(&self, de: &mut [f32], inputs: &[u32], dx: &[f32]) {
+        let d = self.model.cfg.d_model;
+        let vocab = self.model.cfg.vocab;
+        for (r, &t) in inputs.iter().enumerate() {
+            let dst = (t as usize % vocab) * d;
+            for j in 0..d {
+                de[dst + j] += dx[r * d + j];
+            }
+        }
+    }
+
+    /// One full microbatch, sequential over all blocks (the `pp = 1`
+    /// executor; also the reference the pipeline must bit-match).
+    fn run(&self, toks_sh: &[u32]) -> (f64, TfGrads) {
+        let cfg = &self.model.cfg;
+        let l = self.model.blocks.len();
+        let (inputs, targets) = split_windows(toks_sh, self.b_sh, cfg.seq);
+        let x = self.embed(&inputs);
+        let (x, caches) = self.stage_forward(0, l, x);
+        let (loss, dx, mut de, final_norm) = self.head_forward_backward(&x, &targets);
+        let (dx, blocks) = self.stage_backward(0, l, dx, caches);
+        self.scatter_embedding(&mut de, &inputs, &dx);
+        (loss, TfGrads { tok_emb: de, blocks, final_norm })
+    }
+}
+
+// ---- the 1F1B pipeline executor ------------------------------------------
+
+/// What one stage hands back for one microbatch.
+struct StageK {
+    blocks: Vec<TfBlockGrads>,
+    /// stage 0 only: gradient w.r.t. the embedding output
+    dx_emb: Option<Vec<f32>>,
+    /// last stage only: (loss, tied-head dW, final-norm grad)
+    head: Option<(f64, Vec<f32>, Vec<f32>)>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Op {
+    Fwd,
+    Bwd,
+}
+
+/// The deterministic 1F1B schedule for one stage: `warm` forwards, then
+/// strict backward/forward alternation, then the backward drain. The last
+/// stage couples each forward to its backward directly.
+fn stage_ops(si: usize, p: usize, f: usize) -> Vec<Op> {
+    let mut ops = Vec::with_capacity(2 * f);
+    if si == p - 1 {
+        for _ in 0..f {
+            ops.push(Op::Fwd);
+            ops.push(Op::Bwd);
+        }
+    } else {
+        let warm = (p - 1 - si).min(f);
+        for _ in 0..warm {
+            ops.push(Op::Fwd);
+        }
+        for _ in warm..f {
+            ops.push(Op::Bwd);
+            ops.push(Op::Fwd);
+        }
+        for _ in 0..warm {
+            ops.push(Op::Bwd);
+        }
+    }
+    ops
+}
+
+/// Run every gradient shard as a pipeline microbatch across `pp` stage
+/// threads (1F1B), returning per-shard `(loss, grads)` in shard order —
+/// bit-identical to the sequential executor because all state is keyed by
+/// `(shard, block, site)`, never by stage or schedule position.
+fn run_pipeline_transformer(
+    ctx: &TopoCtx<'_>,
+    model: &TransformerLm,
+    toks: &[u32],
+    b_sh: usize,
+    shards: usize,
+    pp: usize,
+) -> Vec<(f64, TfGrads)> {
+    let cfg = &model.cfg;
+    let l = model.blocks.len();
+    let win = cfg.seq + 1;
+    let ranges = stage_ranges(l, pp);
+    let p = ranges.len();
+    let f = shards;
+
+    type Msg = (usize, Vec<f32>);
+    let mut fwd_txs: Vec<Option<Sender<Msg>>> = (0..p).map(|_| None).collect();
+    let mut fwd_rxs: Vec<Option<Receiver<Msg>>> = (0..p).map(|_| None).collect();
+    let mut bwd_txs: Vec<Option<Sender<Msg>>> = (0..p).map(|_| None).collect();
+    let mut bwd_rxs: Vec<Option<Receiver<Msg>>> = (0..p).map(|_| None).collect();
+    for i in 0..p - 1 {
+        let (t, r) = channel();
+        fwd_txs[i] = Some(t);
+        fwd_rxs[i + 1] = Some(r);
+        let (t, r) = channel();
+        bwd_txs[i + 1] = Some(t);
+        bwd_rxs[i] = Some(r);
+    }
+
+    let mut stage_outs: Vec<Vec<StageK>> = Vec::with_capacity(p);
+    std::thread::scope(|sc| {
+        let mut handles = Vec::with_capacity(p);
+        for si in 0..p {
+            let (lo, hi) = ranges[si];
+            let fwd_rx = fwd_rxs[si].take();
+            let fwd_tx = fwd_txs[si].take();
+            let bwd_rx = bwd_rxs[si].take();
+            let bwd_tx = bwd_txs[si].take();
+            handles.push(sc.spawn(move || {
+                let first = si == 0;
+                let last = si == p - 1;
+                let mut caches: VecDeque<(usize, Vec<TopoBlockCache>, Option<Vec<f32>>)> =
+                    VecDeque::new();
+                let mut outs: Vec<StageK> = (0..f)
+                    .map(|_| StageK { blocks: Vec::new(), dx_emb: None, head: None })
+                    .collect();
+                let (mut next_f, mut next_b) = (0usize, 0usize);
+                for op in stage_ops(si, p, f) {
+                    match op {
+                        Op::Fwd => {
+                            let k = next_f;
+                            next_f += 1;
+                            let run = TfShard { ctx, model, b_sh, shard: k as u64 };
+                            let x = if first {
+                                let lo_t = k * b_sh * win;
+                                let (inputs, _) =
+                                    split_windows(&toks[lo_t..lo_t + b_sh * win], b_sh, cfg.seq);
+                                run.embed(&inputs)
+                            } else {
+                                let (kk, x) =
+                                    fwd_rx.as_ref().unwrap().recv().expect("pipeline fwd recv");
+                                assert_eq!(kk, k, "microbatches must arrive in order");
+                                x
+                            };
+                            let (x, cs) = run.stage_forward(lo, hi, x);
+                            if last {
+                                caches.push_back((k, cs, Some(x)));
+                            } else {
+                                caches.push_back((k, cs, None));
+                                fwd_tx.as_ref().unwrap().send((k, x)).expect("pipeline fwd send");
+                            }
+                        }
+                        Op::Bwd => {
+                            let k = next_b;
+                            next_b += 1;
+                            let (kk, cs, x_last) = caches.pop_front().expect("cache underflow");
+                            assert_eq!(kk, k, "1F1B consumes microbatches in order");
+                            let run = TfShard { ctx, model, b_sh, shard: k as u64 };
+                            let dx = if last {
+                                let lo_t = k * b_sh * win;
+                                let (_, targets) =
+                                    split_windows(&toks[lo_t..lo_t + b_sh * win], b_sh, cfg.seq);
+                                let (loss, dx, de, fng) =
+                                    run.head_forward_backward(&x_last.unwrap(), &targets);
+                                outs[k].head = Some((loss, de, fng));
+                                dx
+                            } else {
+                                let (kk2, dx) =
+                                    bwd_rx.as_ref().unwrap().recv().expect("pipeline bwd recv");
+                                assert_eq!(kk2, k, "gradients must arrive in order");
+                                dx
+                            };
+                            let (dx, blocks) = run.stage_backward(lo, hi, dx, cs);
+                            outs[k].blocks = blocks;
+                            if first {
+                                outs[k].dx_emb = Some(dx);
+                            } else {
+                                bwd_tx.as_ref().unwrap().send((k, dx)).expect("pipeline bwd send");
+                            }
+                        }
+                    }
+                }
+                outs
+            }));
+        }
+        for h in handles {
+            stage_outs.push(h.join().expect("pipeline stage panicked"));
+        }
+    });
+
+    // stitch each microbatch's stage outputs back into one TfGrads
+    let mut results = Vec::with_capacity(f);
+    for k in 0..f {
+        let (loss, mut de, final_norm) =
+            stage_outs[p - 1][k].head.take().expect("last stage output");
+        let dx = stage_outs[0][k].dx_emb.take().expect("stage 0 output");
+        let lo_t = k * b_sh * win;
+        let (inputs, _) = split_windows(&toks[lo_t..lo_t + b_sh * win], b_sh, cfg.seq);
+        let run = TfShard { ctx, model, b_sh, shard: k as u64 };
+        run.scatter_embedding(&mut de, &inputs, &dx);
+        let mut blocks = Vec::with_capacity(l);
+        for so in stage_outs.iter_mut() {
+            blocks.append(&mut so[k].blocks);
+        }
+        results.push((loss, TfGrads { tok_emb: de, blocks, final_norm }));
+    }
+    results
+}
+
+// ---- entry points --------------------------------------------------------
+
+/// One topology-aware transformer step: TP-sharded block matmuls, the
+/// boundary wire crossings, the (optional) 1F1B pipeline, then the usual
+/// DP gradient reduction. Loss bits depend only on
+/// `(seed, step, shards, ts, wire)`; `workers`, `tp` and `pp` are pure
+/// placement. Returns `(loss, grads, per-collective comms bytes)`.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_loss_and_grads_topo_transformer(
+    model: &TransformerLm,
+    toks: &[u32],
+    b: usize,
+    d: &DistOptions,
+    topo: &Topology,
+    be: &dyn Backend,
+    seed: u64,
+    step: usize,
+) -> (f64, TfGrads, CommsBytes) {
+    validate_topo_transformer(&model.cfg, topo).expect("topology validated by caller");
+    let shards = d.shards.max(1);
+    assert_eq!(b % shards, 0, "batch must tile into shards (DistOptions::validate)");
+    let win = model.cfg.seq + 1;
+    assert_eq!(toks.len(), b * win);
+    let b_sh = b / shards;
+    let l = model.blocks.len();
+    let ctx = TopoCtx {
+        be,
+        ts: topo.ts.max(1),
+        tp: topo.effective_tp(),
+        wire: topo.wire,
+        seed,
+        step: step as u64,
+    };
+    let pp_eff = topo.pp.clamp(1, l);
+
+    let results: Vec<(f64, TfGrads)> = if pp_eff > 1 {
+        run_pipeline_transformer(&ctx, model, toks, b_sh, shards, pp_eff)
+    } else {
+        run_sharded(shards, d.effective_workers(), |sh| {
+            let lo = sh * b_sh * win;
+            TfShard { ctx: &ctx, model, b_sh, shard: sh as u64 }
+                .run(&toks[lo..lo + b_sh * win])
+        })
+    };
+
+    let (loss, grads, dp_payload) = reduce_tf_shards(model, &results, d, be, seed, step);
+    let comms = topo_comms_transformer(&model.cfg, b, d, topo, dp_payload);
+    (loss, grads, comms)
+}
+
+/// DP-reduce per-shard transformer grads — same tensor ids and fold order
+/// as `dist_loss_and_grads_transformer`, so the DP wire streams are shared
+/// between the plain and topology-aware paths.
+fn reduce_tf_shards(
+    model: &TransformerLm,
+    results: &[(f64, TfGrads)],
+    d: &DistOptions,
+    be: &dyn Backend,
+    seed: u64,
+    step: usize,
+) -> (f64, TfGrads, f64) {
+    let shards = results.len();
+    let loss = results.iter().map(|(l, _)| *l).sum::<f64>() / shards as f64;
+    let weight = 1.0 / shards as f32;
+    let cfg = &model.cfg;
+    let mut reducer = GradReducer::new(be, d.reduce, seed, step);
+
+    let emb_parts: Vec<&[f32]> = results.iter().map(|(_, g)| g.tok_emb.as_slice()).collect();
+    let tok_emb = reducer.reduce(&emb_parts, weight, cfg.vocab, cfg.d_model, 0);
+    let mut blocks = Vec::with_capacity(model.blocks.len());
+    for bi in 0..model.blocks.len() {
+        let base = 1 + bi as u64 * 9;
+        let pick = |sel: fn(&TfBlockGrads) -> &Vec<f32>| -> Vec<&[f32]> {
+            results.iter().map(|(_, g)| sel(&g.blocks[bi]).as_slice()).collect()
+        };
+        blocks.push(TfBlockGrads {
+            attn_norm: reducer.reduce(&pick(|g| &g.attn_norm), weight, 1, cfg.d_model, base),
+            wq: reducer.reduce(&pick(|g| &g.wq), weight, cfg.d_model, cfg.d_model, base + 1),
+            wk: reducer.reduce(&pick(|g| &g.wk), weight, cfg.d_model, cfg.d_model, base + 2),
+            wv: reducer.reduce(&pick(|g| &g.wv), weight, cfg.d_model, cfg.d_model, base + 3),
+            wo: reducer.reduce(&pick(|g| &g.wo), weight, cfg.d_model, cfg.d_model, base + 4),
+            mlp_norm: reducer.reduce(&pick(|g| &g.mlp_norm), weight, 1, cfg.d_model, base + 5),
+            w_gate: reducer.reduce(&pick(|g| &g.w_gate), weight, cfg.d_ff, cfg.d_model, base + 6),
+            w_up: reducer.reduce(&pick(|g| &g.w_up), weight, cfg.d_ff, cfg.d_model, base + 7),
+            w_down: reducer.reduce(&pick(|g| &g.w_down), weight, cfg.d_model, cfg.d_ff, base + 8),
+        });
+    }
+    let fin_parts: Vec<&[f32]> = results.iter().map(|(_, g)| g.final_norm.as_slice()).collect();
+    let final_norm =
+        reducer.reduce(&fin_parts, weight, 1, cfg.d_model, 1 + model.blocks.len() as u64 * 9);
+    (loss, TfGrads { tok_emb, blocks, final_norm }, reducer.payload_bytes)
+}
+
+/// Analytic per-collective volume of one topology-aware transformer step.
+/// Per block and microbatch there are four TP all-reduces of a
+/// `[rows, d_model]` tensor, each a reduce-scatter plus an all-gather of
+/// `(tp−1)·payload` bytes at wire precision; each physical stage boundary
+/// moves one activation forward and one gradient backward per microbatch;
+/// the DP ring is the same `2·(W−1)·payload` as the plain dist path.
+pub fn topo_comms_transformer(
+    cfg: &TransformerConfig,
+    b: usize,
+    d: &DistOptions,
+    topo: &Topology,
+    dp_payload_bytes: f64,
+) -> CommsBytes {
+    let shards = d.shards.max(1);
+    let rows = (b / shards.max(1)).max(1) * cfg.seq;
+    let tp = topo.effective_tp();
+    let pp = topo.pp.clamp(1, cfg.n_layers.max(1));
+    let act = topo.wire.payload_bytes(rows * cfg.d_model);
+    let per_site = (tp - 1) as f64 * act;
+    let sites = (shards * cfg.n_layers * 4) as f64;
+    CommsBytes {
+        allreduce: ring_allreduce_bytes(d.effective_workers(), dp_payload_bytes),
+        reduce_scatter: sites * per_site,
+        all_gather: sites * per_site,
+        p2p: (shards * 2 * (pp - 1)) as f64 * act,
+    }
+}
+
+// ---- MLP architecture ----------------------------------------------------
+
+/// One microbatch of the TP-sharded MLP stack: hidden layers
+/// column-parallel over `d_hidden` row ranges (slice-local ReLU, then an
+/// all-gather reassembles the activation), vocab projection replicated.
+struct MlpShard<'a> {
+    ctx: &'a TopoCtx<'a>,
+    model: &'a MlpLm,
+    shard: u64,
+}
+
+impl MlpShard<'_> {
+    /// Reassemble column-parallel slice outputs `[rows, w]` each into the
+    /// full `[rows, ts·w]` activation, QDQing every slice through the wire
+    /// on the way (the forward all-gather).
+    fn wire_gather_cols(&self, parts: Vec<Vec<f32>>, rows: usize, w: usize, li: usize) -> Vec<f32> {
+        let ts = self.ctx.ts;
+        if ts == 1 {
+            return parts.into_iter().next().unwrap();
+        }
+        let parts: Vec<Vec<f32>> = if self.ctx.wire == ReduceMode::Mxfp4 {
+            let base = self.ctx.site_salt(self.shard, li as u64, SITE_MLP_FWD_AG, 0);
+            let salts: Vec<u64> = (0..ts).map(|p| sub_salt(base, p as u64)).collect();
+            let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+            let cat = self.ctx.be.all_gather_mxfp4(&refs, w, &salts);
+            (0..ts).map(|p| cat[p * rows * w..(p + 1) * rows * w].to_vec()).collect()
+        } else {
+            parts
+        };
+        let d = ts * w;
+        let mut out = vec![0.0f32; rows * d];
+        for (p, part) in parts.iter().enumerate() {
+            for r in 0..rows {
+                out[r * d + p * w..r * d + (p + 1) * w]
+                    .copy_from_slice(&part[r * w..(r + 1) * w]);
+            }
+        }
+        out
+    }
+
+    fn run(&self, ctx_pairs: &[(u32, u32)], targets: &[u32]) -> (f64, Grads) {
+        let b = ctx_pairs.len();
+        let cfg = &self.model.cfg;
+        let method: TrainMethod = cfg.method;
+        let be = self.ctx.be;
+        let ts = self.ctx.ts;
+        let last = self.model.layers.len() - 1;
+        let fpr = cfg.d_hidden / ts;
+
+        // forward: sliced hidden stack, slice-local ReLU, wire all-gather
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(last + 1);
+        let mut slice_caches: Vec<Vec<LinearCache>> = Vec::with_capacity(last);
+        let mut x = self.model.features(ctx_pairs);
+        for li in 0..last {
+            let layer = &self.model.layers[li];
+            let d_in = layer.d_in;
+            let parts = run_sharded(ts, self.ctx.tp, |sl| {
+                let ws = row_slice(&layer.w, d_in, sl * fpr, (sl + 1) * fpr);
+                let mut rng = Rng::new(0); // forward is deterministic
+                let (mut y, c) = forward_with(&ws, fpr, d_in, &x, b, method, be, &mut rng);
+                relu(&mut y);
+                (y, c)
+            });
+            let (ys, cs): (Vec<_>, Vec<_>) = parts.into_iter().unzip();
+            slice_caches.push(cs);
+            acts.push(x);
+            x = self.wire_gather_cols(ys, b, fpr, li);
+        }
+        acts.push(x.clone());
+
+        // replicated vocab projection + loss on the shared path
+        let out_layer = &self.model.layers[last];
+        let mut fwd_rng = Rng::new(0);
+        let (logits, out_cache) = out_layer.forward(&x, b, method, be, &mut fwd_rng);
+        let (loss, dlogits) = softmax_xent(&logits, targets, cfg.vocab, true);
+        let mut dcur = dlogits.expect("grad requested");
+
+        let mut grads = Grads {
+            tok_emb: vec![0.0f32; self.model.tok_emb.len()],
+            layers: vec![Vec::new(); self.model.layers.len()],
+        };
+        let mut orng =
+            Rng::new(self.ctx.site_salt(self.shard, last as u64, SITE_MLP_OUT_STREAM, 0));
+        let (dx, dw) = out_layer.backward(&dcur, &out_cache, b, method, be, &mut orng);
+        grads.layers[last] = dw;
+        dcur = dx
+            .iter()
+            .zip(&out_cache.x)
+            .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
+            .collect();
+
+        // backward through the sliced stack: per-slice dy column ranges,
+        // partial dx all-reduced through the wire
+        for li in (0..last).rev() {
+            let layer = &self.model.layers[li];
+            let d_in = layer.d_in;
+            let dy = dcur;
+            let cs = &slice_caches[li];
+            let out = run_sharded(ts, self.ctx.tp, |sl| {
+                let ws = row_slice(&layer.w, d_in, sl * fpr, (sl + 1) * fpr);
+                let dy_s = col_slice(&dy, b, cfg.d_hidden, sl * fpr, (sl + 1) * fpr);
+                let mut rng = Rng::new(self.ctx.site_salt(
+                    self.shard,
+                    li as u64,
+                    SITE_MLP_LAYER_STREAM,
+                    sl as u64,
+                ));
+                backward_with(&ws, fpr, d_in, &dy_s, &cs[sl], b, method, be, &mut rng)
+            });
+            let (dxs, dws): (Vec<_>, Vec<_>) = out.into_iter().unzip();
+            let dx = self
+                .ctx
+                .wire_allreduce(self.shard, li as u64, SITE_MLP_BWD_AR, dxs, b, d_in);
+            let mut dw = Vec::with_capacity(layer.w.len());
+            for w in dws {
+                dw.extend_from_slice(&w);
+            }
+            grads.layers[li] = dw;
+            if li > 0 {
+                dcur = dx
+                    .iter()
+                    .zip(&acts[li])
+                    .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
+                    .collect();
+            } else {
+                let d = cfg.d_emb;
+                let v = cfg.vocab;
+                for (s, &(a, p)) in ctx_pairs.iter().enumerate() {
+                    let row = &dx[s * 2 * d..(s + 1) * 2 * d];
+                    let ea = (a as usize % v) * d;
+                    let ep = (p as usize % v) * d;
+                    for i in 0..d {
+                        grads.tok_emb[ea + i] += row[i];
+                        grads.tok_emb[ep + i] += row[d + i];
+                    }
+                }
+            }
+        }
+        (loss, grads)
+    }
+}
+
+/// One topology-aware MLP step (TP only; `pp` must be 1 — validated).
+/// The MLP twin of [`dist_loss_and_grads_topo_transformer`].
+#[allow(clippy::too_many_arguments)]
+pub fn dist_loss_and_grads_topo_mlp(
+    model: &MlpLm,
+    ctx_pairs: &[(u32, u32)],
+    tgt: &[u32],
+    d: &DistOptions,
+    topo: &Topology,
+    be: &dyn Backend,
+    seed: u64,
+    step: usize,
+) -> (f64, Grads, CommsBytes) {
+    validate_topo_mlp(&model.cfg, topo).expect("topology validated by caller");
+    let b = ctx_pairs.len();
+    let shards = d.shards.max(1);
+    assert_eq!(b % shards, 0, "batch must tile into shards (DistOptions::validate)");
+    assert_eq!(tgt.len(), b);
+    let per = b / shards;
+    let ctx = TopoCtx {
+        be,
+        ts: topo.ts.max(1),
+        tp: topo.effective_tp(),
+        wire: topo.wire,
+        seed,
+        step: step as u64,
+    };
+
+    let results = run_sharded(shards, d.effective_workers(), |sh| {
+        let lo = sh * per;
+        MlpShard { ctx: &ctx, model, shard: sh as u64 }
+            .run(&ctx_pairs[lo..lo + per], &tgt[lo..lo + per])
+    });
+
+    let loss = results.iter().map(|(l, _)| *l).sum::<f64>() / shards as f64;
+    let weight = 1.0 / shards as f32;
+    let mut reducer = GradReducer::new(be, d.reduce, seed, step);
+    let emb_parts: Vec<&[f32]> = results.iter().map(|(_, g)| g.tok_emb.as_slice()).collect();
+    let tok_emb = reducer.reduce(&emb_parts, weight, model.cfg.vocab, model.cfg.d_emb, 0);
+    let mut layers = Vec::with_capacity(model.layers.len());
+    for (li, layer) in model.layers.iter().enumerate() {
+        let parts: Vec<&[f32]> = results.iter().map(|(_, g)| g.layers[li].as_slice()).collect();
+        layers.push(reducer.reduce(&parts, weight, layer.d_out, layer.d_in, (li + 1) as u64));
+    }
+    let comms = topo_comms_mlp(&model.cfg, b, d, topo, reducer.payload_bytes);
+    (loss, Grads { tok_emb, layers }, comms)
+}
+
+/// Analytic per-collective volume of one topology-aware MLP step: per
+/// sliced layer and microbatch, the forward all-gathers the sliced
+/// activation and the backward all-reduces (reduce-scatter + all-gather)
+/// the partial input gradient. No pipeline axis.
+pub fn topo_comms_mlp(
+    cfg: &ModelConfig,
+    b: usize,
+    d: &DistOptions,
+    topo: &Topology,
+    dp_payload_bytes: f64,
+) -> CommsBytes {
+    let shards = d.shards.max(1);
+    let rows = b / shards.max(1);
+    let tp = topo.effective_tp();
+    let dims = cfg.layer_dims();
+    let (mut rs, mut ag) = (0.0f64, 0.0f64);
+    for &(d_out, d_in) in &dims[..dims.len() - 1] {
+        ag += (tp - 1) as f64
+            * (topo.wire.payload_bytes(rows * d_out) + topo.wire.payload_bytes(rows * d_in));
+        rs += (tp - 1) as f64 * topo.wire.payload_bytes(rows * d_in);
+    }
+    CommsBytes {
+        allreduce: ring_allreduce_bytes(d.effective_workers(), dp_payload_bytes),
+        reduce_scatter: shards as f64 * rs,
+        all_gather: shards as f64 * ag,
+        p2p: 0.0,
+    }
+}
+
+// ---- tests ---------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ScalarBackend;
+
+    fn tf_cfg() -> TransformerConfig {
+        TransformerConfig {
+            vocab: 64,
+            d_model: 64,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            seq: 4,
+            method: TrainMethod::Quartet,
+        }
+    }
+
+    fn mlp_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 64,
+            d_emb: 16,
+            d_hidden: 64,
+            n_hidden: 1,
+            method: TrainMethod::Quartet,
+        }
+    }
+
+    #[test]
+    fn slice_helpers_roundtrip() {
+        // [3, 4] matrix; carve columns [1, 3) out and scatter them back
+        let w: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let rs = row_slice(&w, 4, 1, 3);
+        assert_eq!(rs, &w[4..12]);
+        let cs = col_slice(&w, 3, 4, 1, 3);
+        assert_eq!(cs, vec![1.0, 2.0, 5.0, 6.0, 9.0, 10.0]);
+        let mut back = vec![0.0f32; 12];
+        col_scatter(&mut back, 4, 1, &cs, 2);
+        for r in 0..3 {
+            assert_eq!(back[r * 4 + 1], w[r * 4 + 1]);
+            assert_eq!(back[r * 4 + 2], w[r * 4 + 2]);
+            assert_eq!(back[r * 4], 0.0);
+            assert_eq!(back[r * 4 + 3], 0.0);
+        }
+    }
+
+    #[test]
+    fn stage_ranges_are_balanced_and_contiguous() {
+        assert_eq!(stage_ranges(2, 1), vec![(0, 2)]);
+        assert_eq!(stage_ranges(2, 2), vec![(0, 1), (1, 2)]);
+        assert_eq!(stage_ranges(5, 2), vec![(0, 3), (3, 5)]);
+        assert_eq!(stage_ranges(3, 8), vec![(0, 1), (1, 2), (2, 3)]); // pp clamps to L
+        let r = stage_ranges(7, 3);
+        assert_eq!(r, vec![(0, 3), (3, 5), (5, 7)]);
+    }
+
+    #[test]
+    fn stage_ops_conserve_microbatches() {
+        for p in 1..=4 {
+            for f in 1..=5 {
+                for si in 0..p {
+                    let ops = stage_ops(si, p, f);
+                    assert_eq!(ops.iter().filter(|&&o| o == Op::Fwd).count(), f);
+                    assert_eq!(ops.iter().filter(|&&o| o == Op::Bwd).count(), f);
+                    // a backward can never outpace its own forward
+                    let (mut fs, mut bs) = (0, 0);
+                    for op in ops {
+                        match op {
+                            Op::Fwd => fs += 1,
+                            Op::Bwd => {
+                                bs += 1;
+                                assert!(bs <= fs);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        let cfg = tf_cfg();
+        let ok = Topology { ts: 2, tp: 2, pp: 2, wire: ReduceMode::Mxfp4 };
+        validate_topo_transformer(&cfg, &ok).unwrap();
+        // ts must divide heads
+        let t = Topology { ts: 3, ..ok };
+        assert!(validate_topo_transformer(&cfg, &t).is_err());
+        // slices must stay MX-aligned: d_model/4 = 16 < GROUP
+        let wide = TransformerConfig { n_heads: 4, ..cfg.clone() };
+        let t = Topology { ts: 4, ..ok };
+        assert!(validate_topo_transformer(&wide, &t).is_err());
+        // pp can't exceed the block count
+        let t = Topology { pp: 3, ..ok };
+        assert!(validate_topo_transformer(&cfg, &t).is_err());
+        // MLP: no pipeline axis, and d_hidden slices must stay aligned
+        let m = mlp_cfg();
+        validate_topo_mlp(&m, &Topology { ts: 2, tp: 1, pp: 1, wire: ReduceMode::Mxfp4 }).unwrap();
+        assert!(validate_topo_mlp(&m, &Topology { pp: 2, ..ok }).is_err());
+        assert!(validate_topo_mlp(&m, &Topology { ts: 4, pp: 1, ..ok }).is_err());
+    }
+
+    #[test]
+    fn comms_formulas_match_hand_computation() {
+        let cfg = tf_cfg();
+        let d = DistOptions { workers: 2, shards: 4, reduce: ReduceMode::F32 };
+        // trivial topology: everything but the DP ring is zero
+        let t1 = Topology::default();
+        let c1 = topo_comms_transformer(&cfg, 8, &d, &t1, 1000.0);
+        assert_eq!(c1.reduce_scatter, 0.0);
+        assert_eq!(c1.all_gather, 0.0);
+        assert_eq!(c1.p2p, 0.0);
+        assert_eq!(c1.allreduce, ring_allreduce_bytes(2, 1000.0));
+        // ts=tp=2, pp=2, mxfp4 wire: rows = (8/4)*4 = 8, act = 8*64 values
+        let t2 = Topology { ts: 2, tp: 2, pp: 2, wire: ReduceMode::Mxfp4 };
+        let c2 = topo_comms_transformer(&cfg, 8, &d, &t2, 1000.0);
+        let act = ReduceMode::Mxfp4.payload_bytes(8 * 64);
+        // 4 shards × 2 blocks × 4 sites × (tp−1)·act
+        assert_eq!(c2.reduce_scatter, 32.0 * act);
+        assert_eq!(c2.all_gather, 32.0 * act);
+        // 4 shards × 2 directions × (pp−1) boundaries
+        assert_eq!(c2.p2p, 8.0 * act);
+        assert!((c2.total() - (c2.allreduce + 64.0 * act + 8.0 * act)).abs() < 1e-9);
+        // tp clamps to ts: tp=4 at ts=2 moves the same bytes as tp=2
+        let t3 = Topology { tp: 4, ..t2 };
+        assert_eq!(topo_comms_transformer(&cfg, 8, &d, &t3, 1000.0), c2);
+
+        // MLP: layers [(64, 32), (64, 64)] sliced, vocab layer free
+        let m = mlp_cfg();
+        let tm = Topology { ts: 2, tp: 2, pp: 1, wire: ReduceMode::Mxfp4 };
+        let cm = topo_comms_mlp(&m, 8, &d, &tm, 500.0);
+        let rows = 2; // 8 / 4 shards
+        let pay = |v: usize| ReduceMode::Mxfp4.payload_bytes(v);
+        let want_ag = 4.0 * ((pay(rows * 64) + pay(rows * 32)) + (pay(rows * 64) + pay(rows * 64)));
+        let want_rs = 4.0 * (pay(rows * 32) + pay(rows * 64));
+        assert_eq!(cm.all_gather, want_ag);
+        assert_eq!(cm.reduce_scatter, want_rs);
+        assert_eq!(cm.p2p, 0.0);
+    }
+
+    fn tf_fixture() -> (TransformerLm, Vec<u32>) {
+        let model = TransformerLm::init(tf_cfg(), 21).unwrap();
+        let mut rng = Rng::new(77);
+        let toks: Vec<u32> =
+            (0..8 * (tf_cfg().seq + 1)).map(|_| rng.below(tf_cfg().vocab) as u32).collect();
+        (model, toks)
+    }
+
+    #[test]
+    fn transformer_loss_is_invariant_under_physical_axes() {
+        let (model, toks) = tf_fixture();
+        let be = ScalarBackend;
+        let d = |workers: usize| DistOptions { workers, shards: 4, reduce: ReduceMode::Mxfp4 };
+        // fixed logical axes (shards=4, ts=2, mxfp4 wire); vary placement
+        let topo = |tp: usize, pp: usize| Topology { ts: 2, tp, pp, wire: ReduceMode::Mxfp4 };
+        let (l0, g0, c0) =
+            dist_loss_and_grads_topo_transformer(&model, &toks, 8, &d(1), &topo(1, 1), &be, 9, 0);
+        for (w, tp, pp) in [(2, 1, 1), (1, 2, 1), (1, 1, 2), (2, 2, 2)] {
+            let (l, g, c) = dist_loss_and_grads_topo_transformer(
+                &model, &toks, 8, &d(w), &topo(tp, pp), &be, 9, 0,
+            );
+            assert_eq!(l.to_bits(), l0.to_bits(), "loss must not depend on placement");
+            assert_eq!(g.tok_emb, g0.tok_emb);
+            assert_eq!(g.final_norm, g0.final_norm);
+            for (bg, bg0) in g.blocks.iter().zip(&g0.blocks) {
+                assert_eq!(bg.wq, bg0.wq);
+                assert_eq!(bg.wo, bg0.wo);
+                assert_eq!(bg.w_gate, bg0.w_gate);
+                assert_eq!(bg.w_down, bg0.w_down);
+                assert_eq!(bg.attn_norm, bg0.attn_norm);
+            }
+            // placement does change the physical accounting
+            assert_eq!(c.p2p == 0.0, pp == 1);
+            assert_eq!(c.reduce_scatter == 0.0, tp == 1);
+            assert_eq!(c.allreduce == 0.0, w == 1);
+            let _ = c0;
+        }
+    }
+
+    #[test]
+    fn transformer_ts_and_wire_are_logical_axes() {
+        // changing ts or the wire format is *supposed* to change the bits
+        let (model, toks) = tf_fixture();
+        let be = ScalarBackend;
+        let d = DistOptions { workers: 1, shards: 4, reduce: ReduceMode::F32 };
+        let base = Topology { ts: 2, tp: 1, pp: 1, wire: ReduceMode::Mxfp4 };
+        let (l0, _, _) =
+            dist_loss_and_grads_topo_transformer(&model, &toks, 8, &d, &base, &be, 9, 0);
+        let (l1, _, _) = dist_loss_and_grads_topo_transformer(
+            &model,
+            &toks,
+            8,
+            &d,
+            &Topology { ts: 1, ..base },
+            &be,
+            9,
+            0,
+        );
+        let (l2, _, _) = dist_loss_and_grads_topo_transformer(
+            &model,
+            &toks,
+            8,
+            &d,
+            &Topology { wire: ReduceMode::F32, ..base },
+            &be,
+            9,
+            0,
+        );
+        assert_ne!(l0.to_bits(), l1.to_bits(), "ts is logical");
+        assert_ne!(l0.to_bits(), l2.to_bits(), "wire is logical");
+    }
+
+    #[test]
+    fn mlp_loss_is_invariant_under_physical_axes() {
+        let cfg = mlp_cfg();
+        let model = MlpLm::init(cfg.clone(), 13).unwrap();
+        let mut rng = Rng::new(31);
+        let ctx_pairs: Vec<(u32, u32)> = (0..8)
+            .map(|_| (rng.below(cfg.vocab) as u32, rng.below(cfg.vocab) as u32))
+            .collect();
+        let tgt: Vec<u32> = (0..8).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let be = ScalarBackend;
+        let d = |workers: usize| DistOptions { workers, shards: 4, reduce: ReduceMode::Mxfp4 };
+        let topo = |tp: usize| Topology { ts: 2, tp, pp: 1, wire: ReduceMode::Mxfp4 };
+        let (l0, g0, _) =
+            dist_loss_and_grads_topo_mlp(&model, &ctx_pairs, &tgt, &d(1), &topo(1), &be, 5, 3);
+        for (w, tp) in [(2, 1), (1, 2), (4, 2)] {
+            let (l, g, c) =
+                dist_loss_and_grads_topo_mlp(&model, &ctx_pairs, &tgt, &d(w), &topo(tp), &be, 5, 3);
+            assert_eq!(l.to_bits(), l0.to_bits());
+            assert_eq!(g.tok_emb, g0.tok_emb);
+            for (lw, lw0) in g.layers.iter().zip(&g0.layers) {
+                assert_eq!(lw, lw0);
+            }
+            assert_eq!(c.reduce_scatter == 0.0, tp == 1);
+            assert_eq!(c.p2p, 0.0);
+        }
+    }
+}

@@ -11,9 +11,14 @@ use crate::coordinator::runrecord::RunRecord;
 use crate::data::corpus::{Corpus, CorpusConfig, CorpusStream, Split};
 use crate::kernels::Backend;
 use crate::train::dist::{
-    dist_loss_and_grads_mlp, dist_loss_and_grads_transformer, ring_allreduce_bytes, DistOptions,
+    dist_loss_and_grads_mlp, dist_loss_and_grads_transformer, ring_allreduce_bytes, CommsBytes,
+    DistOptions, Topology,
 };
 use crate::train::model::MlpLm;
+use crate::train::topo::{
+    dist_loss_and_grads_topo_mlp, dist_loss_and_grads_topo_transformer, validate_topo_mlp,
+    validate_topo_transformer,
+};
 use crate::train::optim::Adam;
 use crate::train::transformer::{TransformerConfig, TransformerLm};
 use crate::train::ModelConfig;
@@ -40,6 +45,15 @@ pub struct NativeTrainOptions {
     /// by [`DistOptions::workers`] threads and all-reduced per
     /// [`DistOptions::reduce`] (see [`crate::train::dist`]).
     pub dist: Option<DistOptions>,
+    /// tensor/pipeline axes: `None` keeps the plain (data-parallel or
+    /// single-worker) step; `Some` routes every step through
+    /// [`crate::train::topo`] — `ts`-way tensor-sharded matmuls on `tp`
+    /// ranks, `pp` 1F1B pipeline stages, activations crossing block
+    /// boundaries and TP collectives in [`Topology::wire`] precision.
+    /// Combines with `dist` (which keeps its DP meaning); without an
+    /// explicit `dist` the topology runs over [`DistOptions::default`]
+    /// shards.
+    pub topo: Option<Topology>,
 }
 
 impl Default for NativeTrainOptions {
@@ -55,24 +69,54 @@ impl Default for NativeTrainOptions {
             verbose: false,
             corpus: CorpusConfig::default(),
             dist: None,
+            topo: None,
         }
     }
 }
 
-/// Distilled record metadata of the (optional) data-parallel axis:
-/// `(workers, grad_shards, reduce name, ring comms bytes/step)`.
+/// The DistOptions a topology-aware run actually uses: the explicit DP
+/// axis if one was given, else the default shard structure.
+fn topo_dist(opts: &NativeTrainOptions) -> DistOptions {
+    opts.dist.clone().unwrap_or_default()
+}
+
+/// Distilled record metadata of the distribution axes:
+/// `(workers, grad_shards, reduce name, tp, pp, wire name)`.
 fn dist_record_fields(
     dist: &Option<DistOptions>,
-    payload_bytes: f64,
-) -> (usize, usize, String, f64) {
-    match dist {
-        None => (1, 1, "none".to_string(), 0.0),
-        Some(d) => (
-            d.effective_workers(),
-            d.shards,
-            d.reduce.name().to_string(),
-            ring_allreduce_bytes(d.effective_workers(), payload_bytes),
-        ),
+    topo: &Option<Topology>,
+) -> (usize, usize, String, usize, usize, String) {
+    let (workers, shards, reduce) = match (dist, topo) {
+        (None, None) => (1, 1, "none".to_string()),
+        (None, Some(_)) => {
+            let d = DistOptions::default();
+            (d.effective_workers(), d.shards, d.reduce.name().to_string())
+        }
+        (Some(d), _) => (d.effective_workers(), d.shards, d.reduce.name().to_string()),
+    };
+    let (tp, pp, wire) = match topo {
+        None => (1, 1, "none".to_string()),
+        Some(t) => (t.effective_tp(), t.pp.max(1), t.wire.name().to_string()),
+    };
+    (workers, shards, reduce, tp, pp, wire)
+}
+
+/// Fold the per-step comms accounting of whichever distribution path ran:
+/// the topology path reports per-collective volumes directly; the plain
+/// DP path only rings the gradient payload.
+fn step_comms(
+    dist: &Option<DistOptions>,
+    topo: &Option<Topology>,
+    topo_comms: CommsBytes,
+    dp_payload: f64,
+) -> CommsBytes {
+    match (dist, topo) {
+        (_, Some(_)) => topo_comms,
+        (Some(d), None) => CommsBytes {
+            allreduce: ring_allreduce_bytes(d.effective_workers(), dp_payload),
+            ..CommsBytes::default()
+        },
+        (None, None) => CommsBytes::default(),
     }
 }
 
@@ -133,7 +177,10 @@ pub fn train_native(
     be: &dyn Backend,
 ) -> Result<(RunRecord, MlpLm)> {
     cfg.validate_for_training()?;
-    if let Some(d) = &opts.dist {
+    if let Some(t) = &opts.topo {
+        validate_topo_mlp(cfg, t)?;
+        topo_dist(opts).validate(opts.batch)?;
+    } else if let Some(d) = &opts.dist {
         d.validate(opts.batch)?;
     }
     let corpus = Corpus::new(CorpusConfig { vocab: cfg.vocab, ..opts.corpus.clone() });
@@ -144,14 +191,23 @@ pub fn train_native(
     let mut rng = Rng::new(opts.seed ^ 0xD1CE_5EED);
     let mut triples = Triples::new(&corpus, Split::Train);
 
-    let name = match &opts.dist {
-        None => format!("native-h{}-{}", cfg.d_hidden, cfg.method.name()),
-        Some(d) => format!(
+    let name = match (&opts.dist, &opts.topo) {
+        (None, None) => format!("native-h{}-{}", cfg.d_hidden, cfg.method.name()),
+        (Some(d), None) => format!(
             "native-h{}-{}-w{}-{}",
             cfg.d_hidden,
             cfg.method.name(),
             d.effective_workers(),
             d.reduce.name()
+        ),
+        (_, Some(t)) => format!(
+            "native-h{}-{}-w{}-tp{}-pp{}-{}",
+            cfg.d_hidden,
+            cfg.method.name(),
+            topo_dist(opts).effective_workers(),
+            t.effective_tp(),
+            t.pp.max(1),
+            t.wire.name()
         ),
     };
     let mut train_curve = Vec::new();
@@ -170,15 +226,32 @@ pub fn train_native(
     let mut diverged = false;
     let mut steps_done = 0usize;
     let mut comms_payload = 0.0f64;
+    let mut topo_comms = CommsBytes::default();
+    let topo_d = opts.topo.as_ref().map(|_| topo_dist(opts));
     for step in 1..=opts.steps {
         let (ctx, tgt) = triples.next_batch(opts.batch);
-        let (loss, grads) = match &opts.dist {
-            None => model.loss_and_grads(&ctx, &tgt, be, &mut rng),
-            Some(d) => {
-                let (l, g, payload) =
-                    dist_loss_and_grads_mlp(&model, &ctx, &tgt, d, be, opts.seed, step);
-                comms_payload = payload;
-                (l, g)
+        let (loss, grads) = if let Some(t) = &opts.topo {
+            let (l, g, c) = dist_loss_and_grads_topo_mlp(
+                &model,
+                &ctx,
+                &tgt,
+                topo_d.as_ref().unwrap(),
+                t,
+                be,
+                opts.seed,
+                step,
+            );
+            topo_comms = c;
+            (l, g)
+        } else {
+            match &opts.dist {
+                None => model.loss_and_grads(&ctx, &tgt, be, &mut rng),
+                Some(d) => {
+                    let (l, g, payload) =
+                        dist_loss_and_grads_mlp(&model, &ctx, &tgt, d, be, opts.seed, step);
+                    comms_payload = payload;
+                    (l, g)
+                }
             }
         };
         // the diverged step still consumed its batch: count it, so the
@@ -226,8 +299,9 @@ pub fn train_native(
     val_curve.push((steps_done, final_val));
     let tokens = steps_done * opts.batch;
     let params = cfg.non_embedding_params();
-    let (workers, grad_shards, reduce, comms_bytes_per_step) =
-        dist_record_fields(&opts.dist, comms_payload);
+    let (workers, grad_shards, reduce, tp, pp, wire) =
+        dist_record_fields(&opts.dist, &opts.topo);
+    let comms = step_comms(&opts.dist, &opts.topo, topo_comms, comms_payload);
 
     let rec = RunRecord {
         artifact: name,
@@ -247,7 +321,14 @@ pub fn train_native(
         workers,
         grad_shards,
         reduce,
-        comms_bytes_per_step,
+        tp,
+        pp,
+        wire,
+        comms_bytes_per_step: comms.total(),
+        comms_allreduce_bytes_per_step: comms.allreduce,
+        comms_reduce_scatter_bytes_per_step: comms.reduce_scatter,
+        comms_all_gather_bytes_per_step: comms.all_gather,
+        comms_p2p_bytes_per_step: comms.p2p,
     };
     Ok((rec, model))
 }
@@ -297,7 +378,10 @@ pub fn train_native_transformer(
     be: &dyn Backend,
 ) -> Result<(RunRecord, TransformerLm)> {
     cfg.validate_for_training()?;
-    if let Some(d) = &opts.dist {
+    if let Some(t) = &opts.topo {
+        validate_topo_transformer(cfg, t)?;
+        topo_dist(opts).validate(opts.batch)?;
+    } else if let Some(d) = &opts.dist {
         d.validate(opts.batch)?;
     }
     let corpus = Corpus::new(CorpusConfig { vocab: cfg.vocab, ..opts.corpus.clone() });
@@ -307,15 +391,27 @@ pub fn train_native_transformer(
     let mut rng = Rng::new(opts.seed ^ 0xD1CE_5EED);
     let mut windows = SeqWindows::new(&corpus, Split::Train);
 
-    let name = match &opts.dist {
-        None => format!("native-tf-d{}L{}-{}", cfg.d_model, cfg.n_layers, cfg.method.name()),
-        Some(d) => format!(
+    let name = match (&opts.dist, &opts.topo) {
+        (None, None) => {
+            format!("native-tf-d{}L{}-{}", cfg.d_model, cfg.n_layers, cfg.method.name())
+        }
+        (Some(d), None) => format!(
             "native-tf-d{}L{}-{}-w{}-{}",
             cfg.d_model,
             cfg.n_layers,
             cfg.method.name(),
             d.effective_workers(),
             d.reduce.name()
+        ),
+        (_, Some(t)) => format!(
+            "native-tf-d{}L{}-{}-w{}-tp{}-pp{}-{}",
+            cfg.d_model,
+            cfg.n_layers,
+            cfg.method.name(),
+            topo_dist(opts).effective_workers(),
+            t.effective_tp(),
+            t.pp.max(1),
+            t.wire.name()
         ),
     };
     let mut train_curve = Vec::new();
@@ -331,16 +427,33 @@ pub fn train_native_transformer(
     let mut diverged = false;
     let mut steps_done = 0usize;
     let mut comms_payload = 0.0f64;
+    let mut topo_comms = CommsBytes::default();
+    let topo_d = opts.topo.as_ref().map(|_| topo_dist(opts));
     for step in 1..=opts.steps {
         let toks = windows.next_batch(opts.batch, cfg.seq);
-        let (loss, grads) = match &opts.dist {
-            None => model.loss_and_grads(&toks, opts.batch, be, &mut rng),
-            Some(d) => {
-                let (l, g, payload) = dist_loss_and_grads_transformer(
-                    &model, &toks, opts.batch, d, be, opts.seed, step,
-                );
-                comms_payload = payload;
-                (l, g)
+        let (loss, grads) = if let Some(t) = &opts.topo {
+            let (l, g, c) = dist_loss_and_grads_topo_transformer(
+                &model,
+                &toks,
+                opts.batch,
+                topo_d.as_ref().unwrap(),
+                t,
+                be,
+                opts.seed,
+                step,
+            );
+            topo_comms = c;
+            (l, g)
+        } else {
+            match &opts.dist {
+                None => model.loss_and_grads(&toks, opts.batch, be, &mut rng),
+                Some(d) => {
+                    let (l, g, payload) = dist_loss_and_grads_transformer(
+                        &model, &toks, opts.batch, d, be, opts.seed, step,
+                    );
+                    comms_payload = payload;
+                    (l, g)
+                }
             }
         };
         steps_done = step;
@@ -399,8 +512,9 @@ pub fn train_native_transformer(
     // each window predicts seq tokens
     let tokens = steps_done * opts.batch * cfg.seq;
     let params = cfg.non_embedding_params();
-    let (workers, grad_shards, reduce, comms_bytes_per_step) =
-        dist_record_fields(&opts.dist, comms_payload);
+    let (workers, grad_shards, reduce, tp, pp, wire) =
+        dist_record_fields(&opts.dist, &opts.topo);
+    let comms = step_comms(&opts.dist, &opts.topo, topo_comms, comms_payload);
 
     let rec = RunRecord {
         artifact: name,
@@ -420,7 +534,14 @@ pub fn train_native_transformer(
         workers,
         grad_shards,
         reduce,
-        comms_bytes_per_step,
+        tp,
+        pp,
+        wire,
+        comms_bytes_per_step: comms.total(),
+        comms_allreduce_bytes_per_step: comms.allreduce,
+        comms_reduce_scatter_bytes_per_step: comms.reduce_scatter,
+        comms_all_gather_bytes_per_step: comms.all_gather,
+        comms_p2p_bytes_per_step: comms.p2p,
     };
     Ok((rec, model))
 }

@@ -579,7 +579,7 @@ impl TransformerLm {
 
 /// Split `[b, s+1]` token windows into inputs `[b, s]` and next-token
 /// targets `[b, s]`.
-fn split_windows(tokens: &[u32], b: usize, s: usize) -> (Vec<u32>, Vec<u32>) {
+pub(crate) fn split_windows(tokens: &[u32], b: usize, s: usize) -> (Vec<u32>, Vec<u32>) {
     assert_eq!(tokens.len(), b * (s + 1), "window batch shape");
     let mut inputs = Vec::with_capacity(b * s);
     let mut targets = Vec::with_capacity(b * s);
@@ -592,7 +592,7 @@ fn split_windows(tokens: &[u32], b: usize, s: usize) -> (Vec<u32>, Vec<u32>) {
 }
 
 #[inline]
-fn sigmoid(x: f32) -> f32 {
+pub(crate) fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 

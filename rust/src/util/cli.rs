@@ -30,14 +30,14 @@ impl Args {
                 let (key, val) = match body.split_once('=') {
                     Some((k, v)) => (k.to_string(), Some(v.to_string())),
                     None => {
-                        // value is the next token unless it is another flag
+                        // value is the next token unless it is another flag;
+                        // a trailing `--key` with no value degrades to a
+                        // boolean (typed accessors then yield a usage Err) —
+                        // never an unwrap on an exhausted iterator
                         let next_is_val =
                             it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
-                        if next_is_val {
-                            (body.to_string(), Some(it.next().unwrap()))
-                        } else {
-                            (body.to_string(), None)
-                        }
+                        let val = if next_is_val { it.next() } else { None };
+                        (body.to_string(), val)
                     }
                 };
                 args.flags
@@ -252,6 +252,21 @@ mod tests {
         let a = Args::parse(argv("--check run")).unwrap();
         // "run" becomes the flag value (documented --key value behaviour)
         assert_eq!(a.positional.len(), 0);
+    }
+
+    #[test]
+    fn trailing_flag_without_value_does_not_panic() {
+        // regression: a trailing `--key` used to reach for `it.next()`;
+        // it must parse as a boolean flag and surface a usage Err from
+        // typed accessors, never panic
+        let mut a = Args::parse(argv("train --steps")).unwrap();
+        assert_eq!(a.get("steps").as_deref(), Some("true"));
+        let mut b = Args::parse(argv("train --steps")).unwrap();
+        assert!(b.parse_or("steps", 0usize).is_err());
+        let mut c = Args::parse(argv("train --out --verbose")).unwrap();
+        assert_eq!(c.get("out").as_deref(), Some("true"));
+        assert!(c.flag("verbose"));
+        c.finish().unwrap();
     }
 
     #[test]

@@ -274,6 +274,18 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Four hex digits of a `\uXXXX` escape (the cursor sits just past
+    /// the `u`).
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            bail!("truncated \\u escape");
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        let code = u32::from_str_radix(hex, 16)?;
+        self.i += 4;
+        Ok(code)
+    }
+
     fn string(&mut self) -> Result<String> {
         self.eat(b'"')?;
         let mut s = String::new();
@@ -295,13 +307,40 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                bail!("truncated \\u escape");
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
-                            let code = u32::from_str_radix(hex, 16)?;
-                            self.i += 4;
-                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            let code = self.hex4()?;
+                            let ch = match code {
+                                // JSON encodes astral-plane chars as a
+                                // UTF-16 surrogate pair of \u escapes;
+                                // demand the low half and recombine —
+                                // lone halves are invalid JSON, not U+FFFD
+                                0xD800..=0xDBFF => {
+                                    if self.b.get(self.i) != Some(&b'\\')
+                                        || self.b.get(self.i + 1) != Some(&b'u')
+                                    {
+                                        bail!(
+                                            "lone high surrogate \\u{code:04x} \
+                                             (expected a \\u low-surrogate escape)"
+                                        );
+                                    }
+                                    self.i += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..=0xDFFF).contains(&lo) {
+                                        bail!(
+                                            "invalid low surrogate \\u{lo:04x} \
+                                             after \\u{code:04x}"
+                                        );
+                                    }
+                                    let c = 0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(c)
+                                        .ok_or_else(|| anyhow!("bad surrogate pair"))?
+                                }
+                                0xDC00..=0xDFFF => {
+                                    bail!("lone low surrogate \\u{code:04x}")
+                                }
+                                c => char::from_u32(c)
+                                    .ok_or_else(|| anyhow!("bad \\u escape {c:04x}"))?,
+                            };
+                            s.push(ch);
                         }
                         other => bail!("bad escape \\{}", other as char),
                     }
@@ -317,8 +356,14 @@ impl<'a> Parser<'a> {
                         2
                     };
                     let start = self.i - 1;
-                    self.i = start + len;
-                    s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                    let end = start + len;
+                    // a truncated sequence must be a parse Err, never an
+                    // out-of-bounds slice panic
+                    if end > self.b.len() {
+                        bail!("truncated UTF-8 sequence at byte {start}");
+                    }
+                    self.i = end;
+                    s.push_str(std::str::from_utf8(&self.b[start..end])?);
                 }
             }
         }
@@ -409,6 +454,29 @@ mod tests {
         assert_eq!(v.req("s").unwrap().as_str(), Some("a\"b\\c\ndAé"));
         let re = Json::parse(&v.to_string()).unwrap();
         assert_eq!(re, v);
+    }
+
+    #[test]
+    fn non_bmp_roundtrip() {
+        // raw astral-plane chars survive write → parse bit-exactly
+        let v = Json::from_pairs(vec![("s", Json::str("tok 🦀𝄞 end"))]);
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(re.req("s").unwrap().as_str(), Some("tok 🦀𝄞 end"));
+        // the escaped surrogate-pair spelling decodes to the same char
+        let e = Json::parse(r#"{"s":"🦀"}"#).unwrap();
+        assert_eq!(e.req("s").unwrap().as_str(), Some("🦀"));
+    }
+
+    #[test]
+    fn surrogate_and_utf8_errors_not_panics() {
+        // lone high surrogate, lone low surrogate, high followed by a
+        // non-surrogate: all clear Errs
+        assert!(Json::parse(r#"{"s":"\ud83e"}"#).is_err());
+        assert!(Json::parse(r#"{"s":"\udd80"}"#).is_err());
+        assert!(Json::parse(r#"{"s":"\ud83eA"}"#).is_err());
+        // truncated \u escapes at end of input: Err, not a slice panic
+        assert!(Json::parse(r#"{"s":"\u12"#).is_err());
+        assert!(Json::parse(r#"{"s":"\ud83e\udd"#).is_err());
     }
 
     #[test]

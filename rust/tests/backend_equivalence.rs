@@ -623,6 +623,116 @@ fn simd_reduce_bit_identical() {
 }
 
 #[test]
+fn collective_hooks_bit_identical_across_simd_backends() {
+    // the TP wire collectives: simd backends share the scalar SR stream,
+    // so both hooks must reproduce ScalarBackend exactly, and chunks=1
+    // reduce-scatter must degenerate to reduce_mxfp4 on every backend
+    let scalar = ScalarBackend;
+    let (rows, cols) = (9, 160);
+    let mut rng = Rng::new(53);
+    let a = rng.gaussian_vec(rows * cols, 1e-2);
+    let b = rng.gaussian_vec(rows * cols, 1e-2);
+    let parts: [&[f32]; 2] = [&a, &b];
+    let rs_salts = [3u64, 5, 8, 13, 21, 34];
+    let want_rs = scalar.reduce_scatter_mxfp4(&parts, rows, cols, 3, &rs_salts);
+    let want_ag = scalar.all_gather_mxfp4(&parts, cols, &[3, 5]);
+    assert_eq!(want_rs.len(), rows * cols);
+    assert_eq!(want_ag.len(), 2 * rows * cols);
+    for be in simd_variants() {
+        assert_eq!(
+            want_rs,
+            be.reduce_scatter_mxfp4(&parts, rows, cols, 3, &rs_salts),
+            "reduce_scatter [{}]",
+            be.describe()
+        );
+        assert_eq!(
+            want_ag,
+            be.all_gather_mxfp4(&parts, cols, &[3, 5]),
+            "all_gather [{}]",
+            be.describe()
+        );
+    }
+    assert_eq!(
+        scalar.reduce_mxfp4(&parts, rows, cols, &[3, 5]),
+        scalar.reduce_scatter_mxfp4(&parts, rows, cols, 1, &[3, 5]),
+        "chunks=1 reduce-scatter vs reduce [scalar]"
+    );
+}
+
+#[test]
+fn parallel_collective_overrides_match_trait_default_at_any_thread_count() {
+    // the fused ParallelBackend overrides must be bit-identical to the
+    // trait-default body executed on the same backend (per-chunk
+    // quantize_mxfp4 + decode_mxfp4), at every thread count — ragged
+    // chunk splits and uneven all-gather parts included
+    let (rows, cols) = (11, 96);
+    let mut rng = Rng::new(71);
+    let a = rng.gaussian_vec(rows * cols, 1e-2);
+    let b = rng.gaussian_vec(rows * cols, 1e-2);
+    let c = rng.gaussian_vec(rows * cols, 1e-2);
+    let parts: [&[f32]; 3] = [&a, &b, &c];
+    let chunks = 4; // 11 rows over 4 chunks: 3/3/3/2
+    let salts: Vec<u64> = (0..parts.len() * chunks).map(|i| 1000 + i as u64).collect();
+    // trait-default reference, hand-evaluated with the backend's own
+    // quantize/decode entry points
+    let reference = |be: &ParallelBackend| -> Vec<f32> {
+        let mut acc = vec![0.0f32; rows * cols];
+        let mut r0 = 0usize;
+        for ch in 0..chunks {
+            let n = rows / chunks + usize::from(ch < rows % chunks);
+            let span = r0 * cols..(r0 + n) * cols;
+            for (p, part) in parts.iter().enumerate() {
+                let t = be.quantize_mxfp4(
+                    &part[span.clone()],
+                    n,
+                    cols,
+                    QuantMode::Sr,
+                    &mut Rng::new(salts[p * chunks + ch]),
+                );
+                let dec = be.decode_mxfp4(&t);
+                for (x, v) in acc[span.clone()].iter_mut().zip(&dec) {
+                    *x += *v;
+                }
+            }
+            r0 += n;
+        }
+        acc
+    };
+    let want = reference(&ParallelBackend::with_threads(1));
+    for t in THREAD_COUNTS {
+        let be = ParallelBackend::with_threads(t);
+        assert_eq!(want, reference(&be), "reference itself thread-variant t={t}");
+        assert_eq!(
+            want,
+            be.reduce_scatter_mxfp4(&parts, rows, cols, chunks, &salts),
+            "reduce_scatter override t={t}"
+        );
+    }
+    // all-gather: parts of different row counts (5 and 11 rows)
+    let short = &a[..5 * cols];
+    let ag_parts: [&[f32]; 2] = [short, &b];
+    let ag_salts = [7u64, 9];
+    let ag_want: Vec<f32> = {
+        let be = ParallelBackend::with_threads(1);
+        let mut out = Vec::new();
+        for (part, &salt) in ag_parts.iter().zip(&ag_salts) {
+            let n = part.len() / cols;
+            let t = be.quantize_mxfp4(part, n, cols, QuantMode::Sr, &mut Rng::new(salt));
+            out.extend_from_slice(&be.decode_mxfp4(&t));
+        }
+        out
+    };
+    for t in THREAD_COUNTS {
+        let be = ParallelBackend::with_threads(t);
+        assert_eq!(
+            ag_want,
+            be.all_gather_mxfp4(&ag_parts, cols, &ag_salts),
+            "all_gather override t={t}"
+        );
+    }
+}
+
+#[test]
 fn parallel_simd_composition_matches_scalar_and_plain_parallel() {
     // threads × lanes: the composed backend must stay bit-identical to
     // ScalarBackend on deterministic entry points at every thread count,

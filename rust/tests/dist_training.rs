@@ -1,7 +1,10 @@
-//! End-to-end tests of the data-parallel native trainer (`train::dist`):
-//! worker-count invariance under f32 reduce, per-(seed, worker-count)
-//! determinism under MXFP4 reduce, the fused `reduce_mxfp4` backend hook,
-//! and the comms accounting the fig8 bench records.
+//! End-to-end tests of the distributed native trainers: worker-count
+//! invariance under f32 reduce, per-(seed, worker-count) determinism
+//! under MXFP4 reduce, the fused `reduce_mxfp4` backend hook, the comms
+//! accounting the fig8 bench records, and the 3D-topology contract of
+//! `train::topo` — loss bits are a pure function of the logical axes
+//! (seed, shards, ts, wire) at any (workers, tp, pp) placement, with
+//! per-collective accounting matching the analytic formulas.
 //!
 //! The CI matrix runs the whole suite under `QUARTET_DIST_WORKERS=1` and
 //! `=4`, so both the degenerate and the genuinely threaded reducer paths
@@ -11,8 +14,9 @@ use quartet::coordinator::runrecord::RunRecord;
 use quartet::kernels::{Backend, ParallelBackend, ScalarBackend};
 use quartet::quant::mxfp4::QuantMode;
 use quartet::train::{
-    dist::ring_allreduce_bytes, train_native, train_native_transformer, DistOptions,
-    ModelConfig, NativeTrainOptions, ReduceMode, TrainMethod, TransformerConfig,
+    dist::ring_allreduce_bytes, topo::topo_comms_transformer, train_native,
+    train_native_transformer, DistOptions, ModelConfig, NativeTrainOptions, ReduceMode,
+    Topology, TrainMethod, TransformerConfig,
 };
 use quartet::util::rng::Rng;
 
@@ -268,4 +272,246 @@ fn batch_must_tile_into_shards() {
     let d = DistOptions { workers: 2, shards: 5, reduce: ReduceMode::F32 };
     let bad = NativeTrainOptions { dist: Some(d), ..opts(2, DistOptions::default()) };
     assert!(train_native(&mlp_cfg(TrainMethod::F32), &bad, &ScalarBackend).is_err());
+}
+
+// ---- 3D topology (train::topo) end to end --------------------------------
+
+/// Smallest transformer satisfying the ts=2 slice constraints: even head
+/// count, d_model/2 and d_ff/2 still MX-group-aligned, two blocks to
+/// pipeline over.
+fn topo_tf_cfg(method: TrainMethod) -> TransformerConfig {
+    TransformerConfig {
+        vocab: 64,
+        d_model: 64,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        seq: 4,
+        method,
+    }
+}
+
+fn topo_opts(
+    steps: usize,
+    workers: usize,
+    tp: usize,
+    pp: usize,
+    wire: ReduceMode,
+) -> NativeTrainOptions {
+    NativeTrainOptions {
+        steps,
+        batch: 8,
+        lr: 1e-2,
+        seed: 5,
+        eval_batches: 2,
+        log_every: 4,
+        dist: Some(DistOptions { workers, shards: 4, reduce: ReduceMode::F32 }),
+        topo: Some(Topology { ts: 2, tp, pp, wire }),
+        ..NativeTrainOptions::default()
+    }
+}
+
+/// The headline topology invariant, end to end through the trainer: with
+/// the logical axes pinned (seed, shards=4, ts=2, wire=mxfp4), the loss
+/// bits are identical at every physical (workers, tp, pp) placement — on
+/// both kernel backends.
+#[test]
+fn transformer_loss_bits_survive_any_topology_placement() {
+    for be in [
+        Box::new(ScalarBackend) as Box<dyn Backend>,
+        Box::new(ParallelBackend::with_threads(2)),
+    ] {
+        let run = |w, tp, pp| {
+            let (rec, _) = train_native_transformer(
+                &topo_tf_cfg(TrainMethod::Quartet),
+                &topo_opts(5, w, tp, pp, ReduceMode::Mxfp4),
+                be.as_ref(),
+            )
+            .unwrap();
+            assert!(!rec.diverged, "topology smoke diverged");
+            rec
+        };
+        let base = run(1, 1, 1);
+        for (w, tp, pp) in [(2, 1, 1), (1, 2, 1), (1, 1, 2), (2, 2, 2)] {
+            let other = run(w, tp, pp);
+            assert_eq!(
+                base.train_curve,
+                other.train_curve,
+                "[{}] workers={w} tp={tp} pp={pp} changed the loss bits — physical \
+                 placement leaked into the math",
+                be.name()
+            );
+            assert_eq!(
+                base.final_val_loss,
+                other.final_val_loss,
+                "[{}] final loss at workers={w} tp={tp} pp={pp}",
+                be.name()
+            );
+        }
+    }
+}
+
+/// The logical axes DO change the bits: a different tensor-shard count or
+/// wire format is a different (deterministic) computation.
+#[test]
+fn transformer_ts_and_wire_are_logical_axes() {
+    let cfg = topo_tf_cfg(TrainMethod::Quartet);
+    let run = |ts, wire| {
+        let mut o = topo_opts(4, 1, 1, 1, wire);
+        o.topo = Some(Topology { ts, tp: 1, pp: 1, wire });
+        train_native_transformer(&cfg, &o, &ScalarBackend).unwrap().0
+    };
+    let ts1 = run(1, ReduceMode::Mxfp4);
+    let ts2 = run(2, ReduceMode::Mxfp4);
+    let ts2_f32 = run(2, ReduceMode::F32);
+    assert_ne!(ts1.train_curve, ts2.train_curve, "ts must be a logical axis");
+    assert_ne!(ts2.train_curve, ts2_f32.train_curve, "wire must be a logical axis");
+    // ...and each is reproducible
+    assert_eq!(run(2, ReduceMode::Mxfp4).train_curve, ts2.train_curve);
+}
+
+/// Same invariant on the MLP architecture (tensor axis only — the MLP
+/// stack has no blocks to pipeline).
+#[test]
+fn mlp_loss_bits_survive_any_topology_placement() {
+    let cfg = ModelConfig {
+        vocab: 32,
+        d_emb: 16,
+        d_hidden: 64,
+        n_hidden: 1,
+        method: TrainMethod::Quartet,
+    };
+    let run = |w, tp| {
+        let o = NativeTrainOptions {
+            dist: Some(DistOptions { workers: w, shards: 4, reduce: ReduceMode::F32 }),
+            topo: Some(Topology { ts: 2, tp, pp: 1, wire: ReduceMode::Mxfp4 }),
+            ..opts(6, DistOptions::default())
+        };
+        let (rec, _) = train_native(&cfg, &o, &ScalarBackend).unwrap();
+        rec
+    };
+    let base = run(1, 1);
+    for (w, tp) in [(2, 1), (1, 2), (4, 2)] {
+        let other = run(w, tp);
+        assert_eq!(
+            base.train_curve, other.train_curve,
+            "workers={w} tp={tp} changed the MLP loss bits"
+        );
+    }
+}
+
+/// Per-collective accounting: the record carries the topology axes, the
+/// fields match the analytic formulas exactly, inactive axes report
+/// exactly zero, and everything survives the JSON roundtrip.
+#[test]
+fn records_carry_per_collective_comms() {
+    let cfg = topo_tf_cfg(TrainMethod::F32);
+    let run = |w, tp, pp, wire| {
+        train_native_transformer(&cfg, &topo_opts(2, w, tp, pp, wire), &ScalarBackend)
+            .unwrap()
+            .0
+    };
+
+    let full = run(2, 2, 2, ReduceMode::Mxfp4);
+    assert_eq!(full.workers, 2);
+    assert_eq!(full.grad_shards, 4);
+    assert_eq!(full.tp, 2);
+    assert_eq!(full.pp, 2);
+    assert_eq!(full.wire, "mxfp4");
+    // hand computation: rows = (batch/shards)·seq = 2·4 = 8, so one
+    // activation is 8·64 = 512 values = 8 MX groups of 64 → 272 bytes at
+    // 4.25 bits/value. 4 shards × 2 blocks × 4 all-reduce sites, each
+    // (tp−1)=1 payload on both collectives; p2p = shards·2·(pp−1)
+    // boundary activations.
+    let act = 272.0;
+    assert_eq!(full.comms_reduce_scatter_bytes_per_step, 32.0 * act);
+    assert_eq!(full.comms_all_gather_bytes_per_step, 32.0 * act);
+    assert_eq!(full.comms_p2p_bytes_per_step, 8.0 * act);
+    assert!(full.comms_allreduce_bytes_per_step > 0.0, "2 DP workers ring a payload");
+    let total = full.comms_allreduce_bytes_per_step
+        + full.comms_reduce_scatter_bytes_per_step
+        + full.comms_all_gather_bytes_per_step
+        + full.comms_p2p_bytes_per_step;
+    assert_eq!(full.comms_bytes_per_step, total, "total must be the sum of its parts");
+
+    // the analytic helper agrees field-for-field (dp payload irrelevant
+    // to the tensor/pipeline collectives)
+    let want = topo_comms_transformer(
+        &cfg,
+        8,
+        &DistOptions { workers: 2, shards: 4, reduce: ReduceMode::F32 },
+        &Topology { ts: 2, tp: 2, pp: 2, wire: ReduceMode::Mxfp4 },
+        0.0,
+    );
+    assert_eq!(full.comms_reduce_scatter_bytes_per_step, want.reduce_scatter);
+    assert_eq!(full.comms_all_gather_bytes_per_step, want.all_gather);
+    assert_eq!(full.comms_p2p_bytes_per_step, want.p2p);
+
+    // inactive axes carry exactly nothing: tp=1 has no tensor
+    // collectives, pp=1 no stage boundaries, one worker no ring
+    let quiet = run(1, 1, 1, ReduceMode::Mxfp4);
+    assert_eq!(quiet.comms_reduce_scatter_bytes_per_step, 0.0);
+    assert_eq!(quiet.comms_all_gather_bytes_per_step, 0.0);
+    assert_eq!(quiet.comms_p2p_bytes_per_step, 0.0);
+    assert_eq!(quiet.comms_allreduce_bytes_per_step, 0.0);
+    assert_eq!(quiet.comms_bytes_per_step, 0.0);
+
+    // f32 wire ships 32 bits/value against mxfp4's 4.25
+    let wide = run(1, 2, 2, ReduceMode::F32);
+    let ratio = wide.comms_reduce_scatter_bytes_per_step
+        / full.comms_reduce_scatter_bytes_per_step;
+    assert!((ratio - 32.0 / 4.25).abs() < 1e-6, "wire ratio {ratio} != 32/4.25");
+
+    // JSON roundtrip through the record store
+    let dir = std::env::temp_dir().join(format!("qr_topo_rec_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    full.save(&dir).unwrap();
+    let loaded = RunRecord::load_dir(&dir).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+    assert_eq!(loaded.len(), 1);
+    assert_eq!(loaded[0].tp, 2);
+    assert_eq!(loaded[0].pp, 2);
+    assert_eq!(loaded[0].wire, "mxfp4");
+    assert_eq!(
+        loaded[0].comms_reduce_scatter_bytes_per_step,
+        full.comms_reduce_scatter_bytes_per_step
+    );
+    assert_eq!(loaded[0].comms_p2p_bytes_per_step, full.comms_p2p_bytes_per_step);
+}
+
+/// Topology misconfiguration must fail loudly before any training step.
+#[test]
+fn topology_misconfiguration_fails_loudly() {
+    let mk = |topo| NativeTrainOptions {
+        topo: Some(topo),
+        ..topo_opts(2, 1, 1, 1, ReduceMode::F32)
+    };
+    // head groups must tile the heads
+    let bad_ts = Topology { ts: 3, tp: 3, pp: 1, wire: ReduceMode::F32 };
+    assert!(train_native_transformer(
+        &topo_tf_cfg(TrainMethod::F32),
+        &mk(bad_ts.clone()),
+        &ScalarBackend
+    )
+    .is_err());
+    // pipeline deeper than the block stack
+    let bad_pp = Topology { ts: 1, tp: 1, pp: 3, wire: ReduceMode::F32 };
+    assert!(train_native_transformer(
+        &topo_tf_cfg(TrainMethod::F32),
+        &mk(bad_pp),
+        &ScalarBackend
+    )
+    .is_err());
+    // the MLP stack has no pipeline axis at all
+    let mlp = ModelConfig {
+        vocab: 32,
+        d_emb: 16,
+        d_hidden: 64,
+        n_hidden: 1,
+        method: TrainMethod::F32,
+    };
+    let mlp_pp = Topology { ts: 1, tp: 1, pp: 2, wire: ReduceMode::F32 };
+    assert!(train_native(&mlp, &mk(mlp_pp), &ScalarBackend).is_err());
+    // ...and unsliceable hidden widths are rejected
+    assert!(train_native(&mlp, &mk(bad_ts), &ScalarBackend).is_err());
 }

@@ -66,7 +66,14 @@ fn prop_runrecord_roundtrip() {
             workers: 1 + ctx.rng.below(8),
             grad_shards: 1 + ctx.rng.below(8),
             reduce: ["none", "f32", "mxfp4"][ctx.rng.below(3)].to_string(),
+            tp: 1 + ctx.rng.below(4),
+            pp: 1 + ctx.rng.below(4),
+            wire: ["none", "f32", "mxfp4"][ctx.rng.below(3)].to_string(),
             comms_bytes_per_step: ctx.rng.uniform() * 1e8,
+            comms_allreduce_bytes_per_step: ctx.rng.uniform() * 1e8,
+            comms_reduce_scatter_bytes_per_step: ctx.rng.uniform() * 1e7,
+            comms_all_gather_bytes_per_step: ctx.rng.uniform() * 1e7,
+            comms_p2p_bytes_per_step: ctx.rng.uniform() * 1e6,
         };
         let j = Json::parse(&rec.to_json().to_string()).map_err(|e| e.to_string())?;
         let back = RunRecord::from_json(&j).map_err(|e| e.to_string())?;
@@ -76,6 +83,14 @@ fn prop_runrecord_roundtrip() {
         ensure(back.workers == rec.workers, "workers")?;
         ensure(back.grad_shards == rec.grad_shards, "grad_shards")?;
         ensure(back.reduce == rec.reduce, "reduce")?;
+        ensure(back.tp == rec.tp, "tp")?;
+        ensure(back.pp == rec.pp, "pp")?;
+        ensure(back.wire == rec.wire, "wire")?;
+        ensure(
+            (back.comms_p2p_bytes_per_step - rec.comms_p2p_bytes_per_step).abs()
+                < 1e-6 * (1.0 + rec.comms_p2p_bytes_per_step),
+            "p2p comms",
+        )?;
         ensure(
             (back.comms_bytes_per_step - rec.comms_bytes_per_step).abs()
                 < 1e-6 * (1.0 + rec.comms_bytes_per_step),

@@ -79,6 +79,19 @@ fn streams(engine: &mut ServeEngine) -> BTreeMap<u64, Vec<i32>> {
 }
 
 #[test]
+fn submit_rejects_token_total_overflow() {
+    // regression: paged admission reserves ceil((prompt+max_new)/page)
+    // pages — an absurd max_new_tokens must fail loudly at submit(),
+    // never wrap the page arithmetic downstream
+    let mut eng = engine(4, Sampling::greedy());
+    let req = GenRequest::new(0, vec![1, 2, 3], usize::MAX - 1);
+    assert!(eng.submit(req).is_err());
+    // a sane request still goes through
+    eng.submit(GenRequest::new(1, vec![1, 2, 3], 4)).unwrap();
+    assert_eq!(eng.waiting_len(), 1);
+}
+
+#[test]
 fn admission_waits_for_a_free_slot_under_a_full_batch() {
     let mut eng = engine(4, Sampling::greedy());
     for r in fixed_requests(6, 8) {
