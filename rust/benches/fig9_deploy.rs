@@ -1,0 +1,269 @@
+//! Fig 9 (deployment leg): multi-tenant SLO serving from binary
+//! packed-MXFP4 checkpoints.
+//!
+//! For every (method, backend) point the bench builds two tenant models,
+//! saves them as JSON checkpoints, converts each to the binary packed
+//! format (`serve::ckpt`), and measures three deployment modes:
+//!
+//! * **cold_start** — REAL wall time from `PackedWeightCache::load_packed`
+//!   through engine construction to the first generated token. The binary
+//!   path slices codes/scales zero-copy and skips the prep pass entirely,
+//!   so this is dominated by file I/O, not quantization.
+//! * **solo** — each tenant's mixed-Poisson trace served alone on the
+//!   virtual clock: the isolation baseline for latency percentiles.
+//! * **fleet** — both tenants co-scheduled in one `ServeFleet` under the
+//!   same traces; each tenant's record carries `p99_vs_solo`, its fleet
+//!   p99 latency over its solo p99 (head-of-line-blocking ratio).
+//!
+//! Each mode emits a JSON `DeployRecord` under `--out` (default
+//! `runs/fig9_deploy`); CI uploads them and gates on the `deploy` floors
+//! in `bench_baselines.json` (SLO attainment, goodput, cold-start ceiling,
+//! isolation ceiling). Token streams stay bit-identical between solo and
+//! fleet runs — co-tenancy costs wall time, never outputs — which
+//! `tests/serve_ckpt.rs` pins exactly.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use quartet::serve::{
+    ckpt, synth_mixed_poisson, DeployRecord, GenRequest, PackedWeightCache, Sampling, ServeFleet,
+    ServeMethod, SynthOptions, TenantSpec,
+};
+use quartet::train::{MlpLm, ModelConfig, TrainMethod};
+use quartet::util::cli::{backends_flag, Args};
+
+const VOCAB: usize = 512;
+const SLO_LATENCY_S: f64 = 60.0;
+const SLO_TTFT_S: f64 = 60.0;
+
+fn spec(name: &str, quota: usize) -> TenantSpec {
+    TenantSpec {
+        name: name.to_string(),
+        quota,
+        slo_latency_s: SLO_LATENCY_S,
+        slo_ttft_s: SLO_TTFT_S,
+        sampling: Sampling::greedy(),
+    }
+}
+
+fn tenant_opts(n: usize, decode: usize, rate: f64) -> [SynthOptions; 2] {
+    [
+        SynthOptions {
+            n,
+            vocab: VOCAB,
+            prompt_len: 8,
+            max_new_tokens: decode,
+            vary_lengths: true,
+            rate,
+            stop_token: None,
+            seed: 0xF9A,
+            shared_prefix_len: 0,
+        },
+        SynthOptions {
+            n,
+            vocab: VOCAB,
+            prompt_len: 6,
+            max_new_tokens: decode,
+            vary_lengths: true,
+            rate,
+            stop_token: None,
+            seed: 0xF9B,
+            shared_prefix_len: 0,
+        },
+    ]
+}
+
+fn main() {
+    quartet::util::bench::print_header(
+        "Fig 9 — multi-tenant SLO serving from binary packed checkpoints",
+    );
+    let mut args = Args::from_env().unwrap_or_default();
+    let _ = args.flag("bench");
+    let backends = backends_flag(&mut args).expect("--backend");
+    let fast = std::env::var("QUARTET_BENCH_FAST").is_ok();
+    let methods: Vec<ServeMethod> = args
+        .list_or("methods", &["quartet"])
+        .iter()
+        .map(|s| ServeMethod::parse(s).expect("--methods"))
+        .collect();
+    let decode = args
+        .parse_or("decode", if fast { 8usize } else { 24 })
+        .expect("--decode");
+    let n_requests = args
+        .parse_or("requests", if fast { 6usize } else { 16 })
+        .expect("--requests");
+    let quota = args.parse_or("quota", 4usize).expect("--quota");
+    let rate = args.parse_or("rate", 64.0f64).expect("--rate");
+    let out = PathBuf::from(args.str_or("out", "runs/fig9_deploy"));
+    args.finish().expect("unknown flag");
+
+    // Two tenant models with distinct shapes, written as JSON checkpoints
+    // once and converted per (method, backend) below. The checkpoints live
+    // in a scratch dir OUTSIDE `--out` so the record dir stays pure JSON
+    // DeployRecords for check-records.
+    let scratch = std::env::temp_dir().join(format!("quartet_fig9_{}", std::process::id()));
+    std::fs::create_dir_all(&scratch).expect("scratch dir");
+    let shapes = [
+        ("alpha", 64usize, 256usize, 2usize, 1u64),
+        ("beta", 32, 128, 1, 2),
+    ];
+    let mut json_paths = Vec::new();
+    for (name, d_emb, d_hidden, n_hidden, seed) in shapes {
+        let model = MlpLm::init(
+            ModelConfig {
+                vocab: VOCAB,
+                d_emb,
+                d_hidden,
+                n_hidden,
+                method: TrainMethod::Quartet,
+            },
+            seed,
+        )
+        .expect("model shape");
+        let path = scratch.join(format!("{name}.json"));
+        model.save(&path).expect("save checkpoint");
+        json_paths.push((name, path));
+    }
+
+    let mut records = 0usize;
+    for method in &methods {
+        for be in &backends {
+            // JSON -> binary conversion, one packed file per tenant
+            let mut bin_paths = Vec::new();
+            for (name, json_path) in &json_paths {
+                let bin = scratch.join(format!("{name}_{}.qckpt", method.name()));
+                let (json_b, packed_b) =
+                    ckpt::convert(json_path, &bin, Some(*method), &**be).expect("convert");
+                println!(
+                    "[method={} backend={}] {name}: {json_b} B json -> {packed_b} B packed \
+                     ({:.2}x)",
+                    method.name(),
+                    be.name(),
+                    json_b as f64 / packed_b.max(1) as f64
+                );
+                bin_paths.push(bin);
+            }
+
+            // cold start: timed load -> engine -> first token (tenant alpha)
+            let t0 = Instant::now();
+            let cache = PackedWeightCache::load_packed(&bin_paths[0], &**be).expect("load packed");
+            let backend = quartet::kernels::backend_from_name(be.name()).expect("backend");
+            let mut cold_fleet = ServeFleet::new();
+            let id = cold_fleet.add_tenant(spec(json_paths[0].0, quota), cache, backend);
+            cold_fleet
+                .submit(id, GenRequest::new(1, vec![1, 2, 3, 4], 1))
+                .expect("submit");
+            let cold_report = cold_fleet.run(None).expect("cold run");
+            let cold_s = t0.elapsed().as_secs_f64().max(1e-9);
+            assert_eq!(
+                cold_report.tenants[0].completions.len(),
+                1,
+                "cold-start request did not complete"
+            );
+            let mut rec = DeployRecord::from_tenant(
+                "fig9_deploy",
+                "cold_start",
+                method.name(),
+                be.name(),
+                1,
+                &cold_report.tenants[0],
+            );
+            rec.cold_start_s = Some(cold_s);
+            rec.save(&out).expect("write record");
+            records += 1;
+
+            // shared zero-prep caches for the solo + fleet runs
+            let caches: Vec<_> = bin_paths
+                .iter()
+                .map(|p| PackedWeightCache::load_packed(p, &**be).expect("load packed"))
+                .collect();
+            let opts = tenant_opts(n_requests, decode, rate);
+
+            // solo baseline: each tenant's trace served alone
+            let mut solo_p99 = [0.0f64; 2];
+            for (i, (name, _)) in json_paths.iter().enumerate() {
+                let backend = quartet::kernels::backend_from_name(be.name()).expect("backend");
+                let mut fleet = ServeFleet::new();
+                let id = fleet.add_tenant(spec(name, quota), caches[i].clone(), backend);
+                for r in synth_mixed_poisson(&opts[i..=i]).remove(0) {
+                    fleet.submit(id, r).expect("submit");
+                }
+                let report = fleet.run(None).expect("solo run");
+                solo_p99[i] = report.tenants[0].latency_s[2];
+                let rec = DeployRecord::from_tenant(
+                    "fig9_deploy",
+                    "solo",
+                    method.name(),
+                    be.name(),
+                    1,
+                    &report.tenants[0],
+                );
+                rec.save(&out).expect("write record");
+                records += 1;
+            }
+
+            // fleet: both tenants co-scheduled on one virtual clock
+            let mut fleet = ServeFleet::new();
+            let ids: Vec<usize> = json_paths
+                .iter()
+                .enumerate()
+                .map(|(i, (name, _))| {
+                    let backend =
+                        quartet::kernels::backend_from_name(be.name()).expect("backend");
+                    fleet.add_tenant(spec(name, quota), caches[i].clone(), backend)
+                })
+                .collect();
+            for (i, trace) in synth_mixed_poisson(&opts).into_iter().enumerate() {
+                for r in trace {
+                    fleet.submit(ids[i], r).expect("submit");
+                }
+            }
+            let report = fleet.run(None).expect("fleet run");
+            println!(
+                "{:>8} {:>14} {:>12} {:>12} {:>10} {:>12} {:>14}",
+                "tenant", "cold start", "solo p99", "fleet p99", "p99 ratio", "SLO attain",
+                "goodput tok/s"
+            );
+            for (i, t) in report.tenants.iter().enumerate() {
+                let fleet_p99 = t.latency_s[2];
+                let ratio = if solo_p99[i] > 0.0 {
+                    (fleet_p99 / solo_p99[i]).max(1e-9)
+                } else {
+                    1.0
+                };
+                let mut rec = DeployRecord::from_tenant(
+                    "fig9_deploy",
+                    "fleet",
+                    method.name(),
+                    be.name(),
+                    report.tenants.len(),
+                    t,
+                );
+                rec.p99_vs_solo = Some(ratio);
+                rec.save(&out).expect("write record");
+                records += 1;
+                println!(
+                    "{:>8} {:>14} {:>12.4} {:>12.4} {:>9.2}x {:>12.2} {:>14.0}",
+                    t.name,
+                    if i == 0 {
+                        format!("{cold_s:.4}s")
+                    } else {
+                        "-".to_string()
+                    },
+                    solo_p99[i],
+                    fleet_p99,
+                    ratio,
+                    t.slo_attainment,
+                    t.goodput_tokens_per_sec
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&scratch);
+    println!(
+        "\nexpected: cold start well under the baseline ceiling (the packed loader \
+         does zero prep passes), SLO attainment ~1.0 under the generous smoke SLOs, \
+         and fleet p99 within the isolation ceiling of solo p99."
+    );
+    println!("{records} records -> {}", out.display());
+}

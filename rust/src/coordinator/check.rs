@@ -1,10 +1,12 @@
 //! `repro check-records` — the CI perf-regression gate over bench-record
 //! JSON.
 //!
-//! Every figure bench emits one of three record schemas: **run** records
+//! Every figure bench emits one of four record schemas: **run** records
 //! ([`crate::coordinator::runrecord::RunRecord`] — fig1 training sweeps,
 //! fig8 distributed scaling), **serve** records (`serve::ServeRecord`
-//! — fig6 continuous batching, fig7 KV decode), and **kernel** records
+//! — fig6 continuous batching, fig7 KV decode), **deploy** records
+//! (`serve::DeployRecord` — fig9 multi-tenant SLO serving: cold-start,
+//! per-tenant isolation, goodput-at-SLO), and **kernel** records
 //! ([`crate::bench::KernelRecord`] — fig3 per-backend kernel
 //! throughput, which carries the decode-once GEMM speedup the simd
 //! backend is gated on). This module walks a
@@ -57,6 +59,18 @@ pub struct Baselines {
     /// and all-gather traffic, pp>1 runs point-to-point traffic
     /// (0.0 when the baselines file has no "dist" section)
     pub dist_min_collective_bytes: f64,
+    /// deploy records: minimum fraction of completions inside SLO
+    /// (0.0 when the baselines file has no "deploy" section)
+    pub deploy_min_slo_attainment: f64,
+    /// deploy records: minimum goodput (SLO-met tokens/sec over wall)
+    /// on solo and fleet records that generated tokens
+    pub deploy_min_goodput_tokens_per_sec: f64,
+    /// deploy records: ceiling on checkpoint-load → first-token seconds
+    /// for `cold_start` records (+inf when the section is absent)
+    pub deploy_max_cold_start_s: f64,
+    /// deploy records: ceiling on the fleet-p99-over-solo-p99 isolation
+    /// ratio for `fleet` records (+inf when the section is absent)
+    pub deploy_max_p99_vs_solo: f64,
     /// cross-record accuracy-ordering floors over the native method
     /// sweep (`None` when the baselines file has no "ordering" section)
     pub ordering: Option<OrderingFloors>,
@@ -107,6 +121,22 @@ impl Baselines {
             Some(d) => num(d, "min_collective_bytes")?,
             None => 0.0,
         };
+        // "deploy" is optional for the same reason: pre-fleet baseline
+        // files keep loading, with floors at 0.0 and ceilings at +inf.
+        let (
+            deploy_min_slo_attainment,
+            deploy_min_goodput_tokens_per_sec,
+            deploy_max_cold_start_s,
+            deploy_max_p99_vs_solo,
+        ) = match j.get("deploy") {
+            Some(d) => (
+                num(d, "min_slo_attainment")?,
+                num(d, "min_goodput_tokens_per_sec")?,
+                num(d, "max_cold_start_s")?,
+                num(d, "max_p99_vs_solo")?,
+            ),
+            None => (0.0, 0.0, f64::INFINITY, f64::INFINITY),
+        };
         // "ordering" is optional too: without it the cross-record
         // accuracy gate is off entirely (pre-native-sweep baseline files
         // keep loading, and perf-only record trees stay ungated).
@@ -128,6 +158,10 @@ impl Baselines {
             kv_min_prefix_hit_rate,
             kv_min_concurrency_vs_dense,
             dist_min_collective_bytes,
+            deploy_min_slo_attainment,
+            deploy_min_goodput_tokens_per_sec,
+            deploy_max_cold_start_s,
+            deploy_max_p99_vs_solo,
             ordering,
         })
     }
@@ -166,6 +200,7 @@ pub struct CheckReport {
     pub checked: usize,
     pub run_records: usize,
     pub serve_records: usize,
+    pub deploy_records: usize,
     pub kernel_records: usize,
     pub violations: Vec<String>,
 }
@@ -173,10 +208,12 @@ pub struct CheckReport {
 impl CheckReport {
     pub fn summary(&self) -> String {
         format!(
-            "check-records: {} record(s) checked ({} run, {} serve, {} kernel), {} violation(s)",
+            "check-records: {} record(s) checked ({} run, {} serve, {} deploy, {} kernel), \
+             {} violation(s)",
             self.checked,
             self.run_records,
             self.serve_records,
+            self.deploy_records,
             self.kernel_records,
             self.violations.len()
         )
@@ -329,12 +366,17 @@ fn check_ordering(runs: &[NativeRun], b: &Baselines, violations: &mut Vec<String
     }
 }
 
-/// Classify and gate one parsed record.
+/// Classify and gate one parsed record. Deploy records carry latency
+/// percentiles too, so the `deploy` key is tested BEFORE the serve
+/// schema's percentile key.
 pub fn check_one(j: &Json, name: &str, b: &Baselines, report: &mut CheckReport) {
     report.checked += 1;
     if j.get("train_curve").is_some() {
         report.run_records += 1;
         check_run(j, name, b, &mut report.violations);
+    } else if j.get("deploy").is_some() {
+        report.deploy_records += 1;
+        check_deploy(j, name, b, &mut report.violations);
     } else if j.get("latency_p50_p90_p99_s").is_some() {
         report.serve_records += 1;
         check_serve(j, name, b, &mut report.violations);
@@ -343,8 +385,9 @@ pub fn check_one(j: &Json, name: &str, b: &Baselines, report: &mut CheckReport) 
         check_kernel(j, name, b, &mut report.violations);
     } else {
         report.violations.push(format!(
-            "{name}: unknown record schema (not a run record with train_curve, a serve \
-             record with latency percentiles, or a kernel record with a kernel axis)"
+            "{name}: unknown record schema (not a run record with train_curve, a deploy \
+             record with a deploy mode, a serve record with latency percentiles, or a \
+             kernel record with a kernel axis)"
         ));
     }
 }
@@ -682,6 +725,135 @@ fn check_serve(j: &Json, name: &str, b: &Baselines, violations: &mut Vec<String>
     }
 }
 
+/// Gate one fig9 deploy record. Schema checks apply to every mode;
+/// the perf floors bind per mode: SLO attainment and goodput on
+/// solo/fleet records that actually completed work, the cold-start
+/// ceiling on `cold_start` records, the isolation ceiling on `fleet`
+/// records (both of which REQUIRE their field — a fleet record without
+/// `p99_vs_solo` means the bench stopped measuring isolation).
+fn check_deploy(j: &Json, name: &str, b: &Baselines, violations: &mut Vec<String>) {
+    let mut fail = |msg: String| violations.push(format!("{name}: {msg}"));
+
+    for key in ["bench", "method", "backend", "tenant"] {
+        if let Err(e) = req_str(j, key) {
+            fail(e);
+        }
+    }
+    let deploy = j.get("deploy").and_then(|v| v.as_str()).unwrap_or("").to_string();
+    if !matches!(deploy.as_str(), "cold_start" | "solo" | "fleet") {
+        fail(format!("unknown deploy mode {deploy:?} (expected cold_start|solo|fleet)"));
+    }
+    for key in [
+        "tenants",
+        "quota",
+        "slo_latency_s",
+        "slo_ttft_s",
+        "requests",
+        "completed",
+        "generated_tokens",
+        "wall_s",
+    ] {
+        if let Err(e) = req_num(j, key) {
+            fail(e);
+        }
+    }
+    if let (Ok(req), Ok(done)) = (req_num(j, "requests"), req_num(j, "completed")) {
+        if done > req {
+            fail(format!("completed {done} exceeds submitted requests {req}"));
+        }
+    }
+
+    // percentile arrays: finite, non-negative, ordered (no absolute
+    // ceiling — the SLO floors below are the deploy gate's latency axis)
+    for key in ["latency_p50_p90_p99_s", "ttft_p50_p90_p99_s"] {
+        let arr = match j.get(key).and_then(|v| v.as_arr()) {
+            Some(a) => a,
+            None => {
+                fail(format!("missing percentile field {key}"));
+                continue;
+            }
+        };
+        if arr.len() != 3 {
+            fail(format!("{key} has {} entries, wants [p50, p90, p99]", arr.len()));
+            continue;
+        }
+        let vals: Vec<f64> = arr.iter().map(|v| v.as_f64().unwrap_or(f64::NAN)).collect();
+        if vals.iter().any(|v| !v.is_finite() || *v < 0.0) {
+            fail(format!("{key} has a non-finite or negative entry"));
+        } else if vals[0] > vals[1] || vals[1] > vals[2] {
+            fail(format!("{key} percentiles are not ordered: {vals:?}"));
+        }
+    }
+
+    let completed = j.get("completed").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    match req_num(j, "slo_attainment") {
+        Ok(a) if !(0.0..=1.0).contains(&a) => {
+            fail(format!("slo_attainment {a} is not a ratio in [0, 1]"));
+        }
+        Ok(a) => {
+            if completed > 0.0 && a < b.deploy_min_slo_attainment {
+                fail(format!(
+                    "slo_attainment {a:.3} is below the required {} — the fleet blew its \
+                     SLOs (the committed targets carry order-of-magnitude headroom on a \
+                     CI runner)",
+                    b.deploy_min_slo_attainment
+                ));
+            }
+        }
+        Err(e) => fail(e),
+    }
+    match req_num(j, "goodput_tokens_per_sec") {
+        Ok(g) if g < 0.0 => fail(format!("goodput_tokens_per_sec {g} is negative")),
+        Ok(g) => {
+            let toks = j.get("generated_tokens").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            // cold-start records exist for cold_start_s; their goodput
+            // over a load-dominated wall is not a serving-rate claim
+            if deploy != "cold_start" && toks > 0.0 && g < b.deploy_min_goodput_tokens_per_sec
+            {
+                fail(format!(
+                    "goodput {g:.2} SLO-met tok/s is below the required {} — either \
+                     throughput collapsed or completions stopped meeting SLO",
+                    b.deploy_min_goodput_tokens_per_sec
+                ));
+            }
+        }
+        Err(e) => fail(e),
+    }
+
+    if deploy == "cold_start" {
+        match req_num(j, "cold_start_s") {
+            Ok(s) if s <= 0.0 => fail(format!("cold_start_s {s} is not positive")),
+            Ok(s) if s > b.deploy_max_cold_start_s => fail(format!(
+                "cold start {s:.2}s exceeds the baseline ceiling {}s — the zero-prep \
+                 binary load path regressed",
+                b.deploy_max_cold_start_s
+            )),
+            Ok(_) => {}
+            Err(e) => fail(format!("{e} (required on cold_start records)")),
+        }
+    } else if let Some(v) = j.get("cold_start_s") {
+        if !v.as_f64().map(|s| s.is_finite() && s > 0.0).unwrap_or(false) {
+            fail("cold_start_s is not a finite positive number".into());
+        }
+    }
+    if deploy == "fleet" {
+        match req_num(j, "p99_vs_solo") {
+            Ok(r) if r <= 0.0 => fail(format!("p99_vs_solo {r} is not positive")),
+            Ok(r) if r > b.deploy_max_p99_vs_solo => fail(format!(
+                "fleet p99 is {r:.2}x the solo p99, above the baseline ceiling {}x — \
+                 tenant isolation collapsed",
+                b.deploy_max_p99_vs_solo
+            )),
+            Ok(_) => {}
+            Err(e) => fail(format!("{e} (required on fleet records)")),
+        }
+    } else if let Some(v) = j.get("p99_vs_solo") {
+        if !v.as_f64().map(|r| r.is_finite() && r > 0.0).unwrap_or(false) {
+            fail("p99_vs_solo is not a finite positive number".into());
+        }
+    }
+}
+
 fn check_kernel(j: &Json, name: &str, b: &Baselines, violations: &mut Vec<String>) {
     let mut fail = |msg: String| violations.push(format!("{name}: {msg}"));
 
@@ -754,6 +926,10 @@ mod tests {
             kv_min_prefix_hit_rate: 0.25,
             kv_min_concurrency_vs_dense: 2.0,
             dist_min_collective_bytes: 1.0,
+            deploy_min_slo_attainment: 0.3,
+            deploy_min_goodput_tokens_per_sec: 1.0,
+            deploy_max_cold_start_s: 120.0,
+            deploy_max_p99_vs_solo: 50.0,
             ordering: Some(OrderingFloors {
                 slack: 0.08,
                 min_rtn_margin: 0.05,
@@ -922,6 +1098,10 @@ mod tests {
         assert_eq!(b.kv_min_prefix_hit_rate, 0.0);
         assert_eq!(b.kv_min_concurrency_vs_dense, 0.0);
         assert_eq!(b.dist_min_collective_bytes, 0.0);
+        assert_eq!(b.deploy_min_slo_attainment, 0.0);
+        assert_eq!(b.deploy_min_goodput_tokens_per_sec, 0.0);
+        assert_eq!(b.deploy_max_cold_start_s, f64::INFINITY);
+        assert_eq!(b.deploy_max_p99_vs_solo, f64::INFINITY);
         assert!(b.ordering.is_none());
 
         let j = Json::parse(
@@ -931,6 +1111,8 @@ mod tests {
                 "kernel":{"min_gflops":0.05,"min_predec_speedup":2.0},
                 "kv":{"min_prefix_hit_rate":0.25,"min_concurrency_vs_dense":2.0},
                 "dist":{"min_collective_bytes":1.0},
+                "deploy":{"min_slo_attainment":0.3,"min_goodput_tokens_per_sec":1.0,
+                          "max_cold_start_s":120.0,"max_p99_vs_solo":50.0},
                 "ordering":{"slack":0.08,"min_rtn_margin":0.05,"min_steps":300}}"#,
         )
         .unwrap();
@@ -939,6 +1121,10 @@ mod tests {
         assert_eq!(b.kv_min_prefix_hit_rate, 0.25);
         assert_eq!(b.kv_min_concurrency_vs_dense, 2.0);
         assert_eq!(b.dist_min_collective_bytes, 1.0);
+        assert_eq!(b.deploy_min_slo_attainment, 0.3);
+        assert_eq!(b.deploy_min_goodput_tokens_per_sec, 1.0);
+        assert_eq!(b.deploy_max_cold_start_s, 120.0);
+        assert_eq!(b.deploy_max_p99_vs_solo, 50.0);
         let o = b.ordering.unwrap();
         assert_eq!(o.slack, 0.08);
         assert_eq!(o.min_rtn_margin, 0.05);
@@ -1005,6 +1191,114 @@ mod tests {
         let mut rep = CheckReport::default();
         check_one(&u, "util.json", &b, &mut rep);
         assert!(rep.violations.iter().any(|v| v.contains("page_utilization")));
+    }
+
+    fn deploy_json(deploy: &str) -> Json {
+        let mut j = Json::parse(
+            r#"{"bench":"fig9_deploy","deploy":"fleet","method":"quartet",
+                "backend":"scalar","tenant":"a","tenants":2,"quota":4,
+                "slo_latency_s":60.0,"slo_ttft_s":60.0,"requests":16,"completed":16,
+                "generated_tokens":128,"wall_s":0.5,"slo_attainment":1.0,
+                "goodput_tokens_per_sec":256.0,
+                "latency_p50_p90_p99_s":[0.1,0.2,0.3],
+                "ttft_p50_p90_p99_s":[0.05,0.1,0.2],"p99_vs_solo":1.4}"#,
+        )
+        .unwrap();
+        j.set("deploy", Json::str(deploy));
+        if deploy == "cold_start" {
+            if let Json::Obj(m) = &mut j {
+                m.remove("p99_vs_solo");
+            }
+            j.set("cold_start_s", Json::num(0.8));
+            j.set("tenants", Json::num(1.0));
+        } else if deploy == "solo" {
+            if let Json::Obj(m) = &mut j {
+                m.remove("p99_vs_solo");
+            }
+            j.set("tenants", Json::num(1.0));
+        }
+        j
+    }
+
+    #[test]
+    fn deploy_records_classify_before_serve_and_pass() {
+        let b = baselines();
+        let mut rep = CheckReport::default();
+        for mode in ["cold_start", "solo", "fleet"] {
+            check_one(&deploy_json(mode), &format!("{mode}.json"), &b, &mut rep);
+        }
+        // deploy records carry latency percentiles, yet must not be
+        // classified as serve records
+        assert_eq!(rep.deploy_records, 3);
+        assert_eq!(rep.serve_records, 0);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn deploy_floors_trip() {
+        let b = baselines();
+
+        // SLO attainment below the floor
+        let mut j = deploy_json("fleet");
+        j.set("slo_attainment", Json::num(0.1));
+        let mut rep = CheckReport::default();
+        check_one(&j, "slo.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("slo_attainment")), "{:?}", rep.violations);
+
+        // goodput below the floor
+        let mut j = deploy_json("solo");
+        j.set("goodput_tokens_per_sec", Json::num(0.2));
+        let mut rep = CheckReport::default();
+        check_one(&j, "goodput.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("goodput")), "{:?}", rep.violations);
+
+        // ...but a cold-start record's goodput is exempt (load-dominated)
+        let mut j = deploy_json("cold_start");
+        j.set("goodput_tokens_per_sec", Json::num(0.2));
+        let mut rep = CheckReport::default();
+        check_one(&j, "cold_goodput.json", &b, &mut rep);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+
+        // cold start over the ceiling
+        let mut j = deploy_json("cold_start");
+        j.set("cold_start_s", Json::num(500.0));
+        let mut rep = CheckReport::default();
+        check_one(&j, "slow_cold.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("cold start")), "{:?}", rep.violations);
+
+        // ...and the field is REQUIRED on cold_start records
+        let mut j = deploy_json("cold_start");
+        if let Json::Obj(m) = &mut j {
+            m.remove("cold_start_s");
+        }
+        let mut rep = CheckReport::default();
+        check_one(&j, "no_cold.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("cold_start_s")), "{:?}", rep.violations);
+
+        // isolation ratio over the ceiling
+        let mut j = deploy_json("fleet");
+        j.set("p99_vs_solo", Json::num(99.0));
+        let mut rep = CheckReport::default();
+        check_one(&j, "iso.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("isolation")), "{:?}", rep.violations);
+
+        // ...and the field is REQUIRED on fleet records
+        let mut j = deploy_json("fleet");
+        if let Json::Obj(m) = &mut j {
+            m.remove("p99_vs_solo");
+        }
+        let mut rep = CheckReport::default();
+        check_one(&j, "no_iso.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("p99_vs_solo")), "{:?}", rep.violations);
+
+        // unknown deploy mode and a non-ratio attainment are schema bugs
+        let mut j = deploy_json("fleet");
+        j.set("deploy", Json::str("canary"));
+        j.set("slo_attainment", Json::num(1.5));
+        let mut rep = CheckReport::default();
+        check_one(&j, "schema.json", &b, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.contains("unknown deploy mode")), "{:?}", rep.violations);
+        assert!(rep.violations.iter().any(|v| v.contains("not a ratio")), "{:?}", rep.violations);
     }
 
     /// Rewrite a run record's topology + per-collective fields in place.

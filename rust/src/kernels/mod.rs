@@ -41,7 +41,7 @@ use anyhow::{anyhow, Result};
 
 use crate::quant::e2m1::byte_decode_lut;
 use crate::quant::e8m0::E8m0;
-use crate::quant::format::{GroupFormat, GroupTensor};
+use crate::quant::format::{GroupFormat, GroupTensor, MXFP4};
 use crate::quant::hadamard::BlockHadamard;
 use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode};
 use crate::util::rng::Rng;
@@ -160,6 +160,39 @@ pub trait Backend: Send + Sync {
         scalar::decode_rows(t, &lut, out);
     }
 
+    /// Decode packed MXFP4 given as *borrowed* code/scale byte slices —
+    /// the decode-once hook the binary-checkpoint load path uses to
+    /// rebuild a layer's deployed rows straight from the sections of a
+    /// `serve::ckpt::PackedCheckpoint` buffer, before any owned tensor
+    /// exists. `codes` holds `rows * cols / 2` packed E2M1 nibble pairs
+    /// (low nibble = even column), `scales` one raw E8M0 byte per
+    /// 32-element group, row-major.
+    ///
+    /// Must be bit-identical to [`Backend::decode_mxfp4_into`] on the
+    /// equivalent owned tensor; the default guarantees that by
+    /// construction (it builds the tensor view once and delegates), so a
+    /// checkpoint round trip cannot change served bits.
+    fn decode_mxfp4_slices(
+        &self,
+        codes: &[u8],
+        scales: &[u8],
+        rows: usize,
+        cols: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(cols % MXFP4.group, 0, "cols must be a multiple of the MXFP4 group");
+        assert_eq!(codes.len(), rows * cols / 2, "packed code byte count mismatch");
+        assert_eq!(scales.len(), rows * (cols / MXFP4.group), "scale byte count mismatch");
+        let t = Mxfp4Tensor {
+            rows,
+            cols,
+            codes: codes.to_vec(),
+            scales: scales.iter().map(|&b| E8m0(b)).collect(),
+            mask: None,
+        };
+        self.decode_mxfp4_into(&t, out);
+    }
+
     /// C = A · Bᵀ where B (`[n, k]` row-major, k = `a.cols`) was decoded
     /// once by [`Backend::decode_mxfp4`]. Must be bit-identical to
     /// `gemm_mxfp4(a, b_packed)` whenever `b_dec == decode_mxfp4(b_packed)`
@@ -224,7 +257,7 @@ pub trait Backend: Send + Sync {
     /// The reference gathers each head's keys/values from the page walk —
     /// decoding MXFP4 pages with exactly the `decode_mxfp4` LUT+scale
     /// arithmetic — and then runs the shared scalar
-    /// [`attention_groups`](scalar::attention_groups) kernel per head, so
+    /// `scalar::attention_groups` kernel per head, so
     /// every (head, query-row) cell is self-contained. Implementations
     /// must be bit-identical to the scalar reference at any thread count,
     /// and equal to [`Backend::attention_causal`] on the same logical K/V
@@ -507,6 +540,21 @@ mod tests {
         let mut reused = vec![f32::NAN; 3 * 64];
         be.decode_mxfp4_into(&t, &mut reused);
         assert_eq!(fresh, reused);
+    }
+
+    #[test]
+    fn decode_slices_matches_owned_decode() {
+        // the borrowed-slice hook the binary checkpoint loader uses must
+        // reproduce the owned-tensor decode bit for bit
+        let be = ScalarBackend;
+        let mut rng = Rng::new(21);
+        let x = rng.gaussian_vec(4 * 64, 1.0);
+        let t = be.quantize_mxfp4(&x, 4, 64, QuantMode::Rtn, &mut rng);
+        let want = be.decode_mxfp4(&t);
+        let scale_bytes: Vec<u8> = t.scales.iter().map(|s| s.0).collect();
+        let mut got = vec![f32::NAN; 4 * 64];
+        be.decode_mxfp4_slices(&t.codes, &scale_bytes, 4, 64, &mut got);
+        assert_eq!(want, got);
     }
 
     #[test]

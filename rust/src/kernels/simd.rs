@@ -6,7 +6,7 @@
 //! microkernel: packed-MXFP4 nibbles are decoded with in-register table
 //! shuffles and multiplied straight into the MAC registers, so a K-panel
 //! of A is decoded once per 32-group and reused across a register tile of
-//! B rows ([`NB`] accumulators). Group quantization vectorizes the absmax
+//! B rows (`NB` accumulators). Group quantization vectorizes the absmax
 //! reduce and the scale broadcast-multiply; block-Hadamard butterflies
 //! vectorize every stage whose stride covers a full vector.
 //!

@@ -11,7 +11,9 @@
 //! repro train   --artifact n80k-quartet --steps 200 [--lr 2e-3] [--seed 0]
 //! repro sweep   --native [--preset smoke|native] [--out runs]  # pure Rust
 //! repro sweep   --preset reduced --out runs [--max-steps 4000]   # PJRT
-//! repro serve   [--checkpoint ckpt.json] --method quartet [--max-batch 8]
+//! repro convert-ckpt --checkpoint ckpt.json --out ckpt.qckpt
+//!               [--method quartet]          # JSON -> binary packed-MXFP4
+//! repro serve   [--checkpoint ckpt.json|ckpt.qckpt] --method quartet [--max-batch 8]
 //!               [--arch mlp|transformer] [--recompute]
 //!               [--kv-page-size 16] [--kv-quant f32|mxfp4]
 //!               [--prefill-chunk 8] [--kv-pool-bytes N]
@@ -30,7 +32,11 @@
 //! env var) selecting the kernels backend.
 //! `train --native` runs the pure-Rust Quartet trainer and `serve`
 //! without `--artifact` runs the native continuous-batching engine; both
-//! share one method axis
+//! share one method axis.
+//! `convert-ckpt` packs a JSON checkpoint into the versioned binary
+//! format (`docs/CHECKPOINT_FORMAT.md`); `serve --checkpoint` sniffs the
+//! magic and loads binary checkpoints with zero weight-prep passes.
+//! The axis is
 //! (`f32|mxfp8|quartet|rtn|nvfp4|fp4-clamp`, see
 //! [`quartet::quant::format::Method`]). `sweep --native` trains that
 //! axis across MLP widths and refits the scaling law from the records.
@@ -63,6 +69,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&mut args),
         Some("sweep") => cmd_sweep(&mut args),
         Some("serve") => cmd_serve(&mut args),
+        Some("convert-ckpt") => cmd_convert_ckpt(&mut args),
         Some("regions") => cmd_regions(&mut args),
         Some("table2") => cmd_table2(&mut args),
         Some("kernels") => cmd_kernels(&mut args),
@@ -70,7 +77,8 @@ fn main() -> Result<()> {
         Some(other) => bail!("unknown subcommand {other:?} (see --help in README)"),
         None => {
             println!(
-                "usage: repro <info|train|sweep|serve|regions|table2|kernels|check-records> [flags]"
+                "usage: repro <info|train|sweep|serve|convert-ckpt|regions|table2|kernels|\
+                 check-records> [flags]"
             );
             let axis = quartet::quant::format::Method::axis_help();
             println!("       repro train --native --method {axis}");
@@ -83,6 +91,8 @@ fn main() -> Result<()> {
             println!("                   [--kv-page-size 16 --kv-quant f32|mxfp4]");
             println!("                   [--prefill-chunk C --kv-pool-bytes N --no-prefix-share]");
             println!("                   [--trace t.json | --requests N --rate r]  (pure Rust)");
+            println!("       repro convert-ckpt --checkpoint ckpt.json --out ckpt.qckpt");
+            println!("                   [--method {axis}]  (JSON -> binary packed)");
             println!(
                 "global: --backend scalar|parallel|simd|parallel+simd (or QUARTET_BACKEND env)"
             );
@@ -464,19 +474,22 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
 }
 
 /// Native serving: checkpoint → [`quartet::serve::PackedWeightCache`]
-/// (weights prepared exactly once) → `ServeEngine` autoregressive decode
-/// with admission/eviction between steps. Requests come from a JSON trace
-/// (`--trace`) or a synthetic Poisson workload (`--requests`/`--rate`).
+/// (weights prepared exactly once — or ZERO times when `--checkpoint` is
+/// a binary packed checkpoint, sniffed by magic and sliced directly) →
+/// `ServeEngine` autoregressive decode with admission/eviction between
+/// steps. Requests come from a JSON trace (`--trace`) or a synthetic
+/// Poisson workload (`--requests`/`--rate`).
 fn cmd_serve_native(args: &mut Args) -> Result<()> {
     use quartet::serve::{
-        load_trace, synth_requests, KvQuant, KvServeOptions, PackedWeightCache, Sampling,
-        ServeEngine, ServeMethod, ServeRecord, SynthOptions,
+        load_trace, synth_requests, KvQuant, KvServeOptions, PackedCheckpoint,
+        PackedWeightCache, Sampling, ServeEngine, ServeMethod, ServeRecord, SynthOptions,
     };
     use quartet::train::{
         MlpLm, ModelConfig, NativeModel, TrainMethod, TransformerConfig, TransformerLm,
     };
 
-    let method = ServeMethod::parse(&args.str_or("method", "quartet"))?;
+    let method_flag = args.get("method");
+    let method = ServeMethod::parse(method_flag.as_deref().unwrap_or("quartet"))?;
     let max_batch = args.parse_or("max-batch", 8usize)?;
     if max_batch == 0 {
         bail!("--max-batch must be positive");
@@ -516,30 +529,56 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
     let d_ff = args.parse_or("d-ff", 128usize)?;
     args.finish()?;
 
-    let model = match &ckpt {
-        Some(p) => NativeModel::load(p)?,
-        None => match arch.as_str() {
-            "mlp" => NativeModel::Mlp(MlpLm::init(
-                ModelConfig { vocab, d_emb, d_hidden, n_hidden, method: TrainMethod::Quartet },
-                seed,
-            )?),
-            "transformer" => NativeModel::Transformer(TransformerLm::init(
-                TransformerConfig {
-                    vocab,
-                    d_model,
-                    n_heads,
-                    n_layers,
-                    d_ff,
-                    seq: 32,
-                    method: TrainMethod::Quartet,
-                },
-                seed,
-            )?),
-            other => bail!("unknown --arch {other:?} (expected mlp|transformer)"),
-        },
-    };
     let backend = quartet::kernels::backend_from_name(quartet::kernels::active().name())?;
-    let cache = PackedWeightCache::build_model(&model, method, &*backend);
+    let cache = match &ckpt {
+        // binary packed checkpoint (magic-sniffed): weights arrive
+        // pre-prepared and pre-packed, so the load path runs zero prep
+        // passes; the serving method is the one stored in the file
+        Some(p) if PackedCheckpoint::sniff(p) => {
+            let cache = PackedWeightCache::load_packed(p, &*backend)?;
+            if method_flag.is_some() && method != cache.method() {
+                bail!(
+                    "--method {} conflicts with the packed checkpoint's stored method {} \
+                     ({}); drop the flag or re-convert with `repro convert-ckpt --method`",
+                    method.name(),
+                    cache.method().name(),
+                    p.display()
+                );
+            }
+            cache
+        }
+        Some(p) => PackedWeightCache::build_model(&NativeModel::load(p)?, method, &*backend),
+        None => {
+            let model = match arch.as_str() {
+                "mlp" => NativeModel::Mlp(MlpLm::init(
+                    ModelConfig {
+                        vocab,
+                        d_emb,
+                        d_hidden,
+                        n_hidden,
+                        method: TrainMethod::Quartet,
+                    },
+                    seed,
+                )?),
+                "transformer" => NativeModel::Transformer(TransformerLm::init(
+                    TransformerConfig {
+                        vocab,
+                        d_model,
+                        n_heads,
+                        n_layers,
+                        d_ff,
+                        seq: 32,
+                        method: TrainMethod::Quartet,
+                    },
+                    seed,
+                )?),
+                other => bail!("unknown --arch {other:?} (expected mlp|transformer)"),
+            };
+            PackedWeightCache::build_model(&model, method, &*backend)
+        }
+    };
+    let method = cache.method();
+    let vocab = cache.vocab;
     let arch_name = cache.arch_name();
     let mut eng = ServeEngine::new(cache, backend, max_batch, Sampling { temperature, seed });
     if recompute {
@@ -557,7 +596,7 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
         Some(p) => load_trace(p)?,
         None => synth_requests(&SynthOptions {
             n: n_requests,
-            vocab: model.vocab(),
+            vocab,
             prompt_len,
             max_new_tokens: max_new,
             vary_lengths: true,
@@ -619,6 +658,32 @@ fn cmd_serve_native(args: &mut Args) -> Result<()> {
         let path = rec.save(&dir)?;
         println!("record: {}", path.display());
     }
+    Ok(())
+}
+
+/// Convert a JSON `kind:` checkpoint into the versioned binary
+/// packed-MXFP4 format (`docs/CHECKPOINT_FORMAT.md`): weight prep runs
+/// ONCE here, at conversion time, and `repro serve` then loads the
+/// result with zero prep passes. `--method` picks the deployed serving
+/// method (defaults to the method the checkpoint was trained with).
+fn cmd_convert_ckpt(args: &mut Args) -> Result<()> {
+    use quartet::serve::{ckpt, ServeMethod};
+
+    let input = PathBuf::from(args.required("checkpoint")?);
+    let out = PathBuf::from(args.required("out")?);
+    let method = args.get("method").map(|m| ServeMethod::parse(&m)).transpose()?;
+    args.finish()?;
+
+    let backend = quartet::kernels::active();
+    let (json_bytes, packed_bytes) = ckpt::convert(&input, &out, method, backend)?;
+    println!(
+        "converted {} ({json_bytes} bytes JSON) -> {} ({packed_bytes} bytes packed, \
+         {:.2}x smaller); serve it with `repro serve --checkpoint {}`",
+        input.display(),
+        out.display(),
+        json_bytes as f64 / (packed_bytes as f64).max(1.0),
+        out.display()
+    );
     Ok(())
 }
 

@@ -1,7 +1,7 @@
 //! PJRT runtime: loads the HLO-text artifacts `python/compile/aot.py`
 //! emitted and executes them on the XLA CPU client. The only place in the
 //! crate that talks to the `xla` crate — everything above works with
-//! [`manifest::Manifest`] metadata and host tensors. The [`engine`]
+//! [`manifest::Manifest`] metadata and host tensors. The `engine`
 //! half needs the `xla` feature (PJRT client + native XLA libs); the
 //! manifest half is pure Rust and always available.
 

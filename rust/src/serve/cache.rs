@@ -27,6 +27,18 @@
 //!   paths run the identical per-row kernels, so their token streams are
 //!   bit-identical — pinned in `tests/serve_engine.rs`.
 //!
+//! The cache also IS the binary checkpoint: [`PackedWeightCache::
+//! save_packed`] serializes the deployed forms (packed codes, raw scale
+//! bytes, f32 tails) through [`crate::serve::ckpt`], and
+//! [`PackedWeightCache::load_packed`] rebuilds a cache from such a file
+//! *without ever running prep* — the stored bytes are exactly what prep
+//! would have produced, so the load path slices them out of the
+//! checkpoint buffer, rebuilds the decode-once rows via
+//! [`Backend::decode_mxfp4_slices`] / [`Backend::decode_group`], and the
+//! prep-pass counter stays 0 (pinned in `tests/serve_ckpt.rs`). Token
+//! streams served from a converted checkpoint are bit-identical to the
+//! JSON path's for the same reason.
+//!
 //! Transformer KV storage comes in two shapes. The original *dense* form
 //! (`[n_heads, cap, head_dim]` buffers owned by the state) remains the
 //! recompute scratch and the direct `new_state`/`decode_forward` API; the
@@ -41,8 +53,11 @@
 //! dense and recompute token streams stay bit-identical per
 //! `tests/serve_engine.rs`.
 
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::kernels::Backend;
 use crate::quant::e2m1::byte_decode_lut;
@@ -50,10 +65,11 @@ use crate::quant::e8m0::E8m0;
 use crate::quant::format::{GroupTensor, MXFP4, NVFP4};
 use crate::quant::fp8::mxfp8_rtn;
 use crate::quant::mxfp4::{Mxfp4Tensor, QuantMode};
+use crate::serve::ckpt::{self, CkptArch, PackedCheckpoint, SectionKind};
 use crate::serve::paged::{BlockTable, KvPool, KvQuant};
 use crate::train::model::{relu, write_pair_features};
-use crate::train::transformer::{add_assign, rmsnorm_rows, rope_row, silu};
-use crate::train::{MlpLm, NativeModel, TransformerLm};
+use crate::train::transformer::{add_assign, rmsnorm_rows, rope_row, silu, TransformerConfig};
+use crate::train::{MlpLm, ModelConfig, NativeModel, TransformerLm};
 use crate::util::rng::Rng;
 
 /// Serving precision — the method axis of `repro serve` and the fig6/fig7
@@ -430,6 +446,218 @@ impl PackedWeightCache {
             NativeModel::Mlp(m) => Self::build(m, method, be),
             NativeModel::Transformer(m) => Self::build_transformer(m, method, be),
         }
+    }
+
+    /// Serialize the deployed cache as a packed binary checkpoint image
+    /// (the format of [`crate::serve::ckpt`], specified byte-for-byte in
+    /// `docs/CHECKPOINT_FORMAT.md`). Deterministic: the same cache always
+    /// produces the same bytes, which is what makes `repro convert-ckpt`
+    /// idempotent.
+    pub fn to_packed_bytes(&self) -> Vec<u8> {
+        let (arch_code, dims) = match &self.arch {
+            PreparedArch::Mlp { .. } => (
+                CkptArch::Mlp,
+                [
+                    self.vocab as u64,
+                    self.d_emb as u64,
+                    self.d_hidden as u64,
+                    self.n_hidden as u64,
+                    0,
+                    0,
+                    0,
+                    0,
+                ],
+            ),
+            PreparedArch::Transformer(tf) => (
+                CkptArch::Transformer,
+                [
+                    self.vocab as u64,
+                    tf.d_model as u64,
+                    tf.n_heads as u64,
+                    tf.blocks.len() as u64,
+                    self.d_hidden as u64,
+                    0,
+                    0,
+                    0,
+                ],
+            ),
+        };
+        let mut w = ckpt::CkptWriter::new(arch_code, self.method, dims);
+        match &self.arch {
+            PreparedArch::Mlp { tok_emb, layers } => {
+                w.section(SectionKind::F32, ckpt::f32s_to_le(tok_emb));
+                for l in layers {
+                    push_form(&mut w, &l.form);
+                }
+            }
+            PreparedArch::Transformer(tf) => {
+                w.section(SectionKind::F32, ckpt::f32s_to_le(&tf.tok_emb));
+                w.section(SectionKind::F32, ckpt::f32s_to_le(&tf.final_norm));
+                for b in &tf.blocks {
+                    w.section(SectionKind::F32, ckpt::f32s_to_le(&b.attn_norm));
+                    for l in [&b.wq, &b.wk, &b.wv, &b.wo] {
+                        push_form(&mut w, &l.form);
+                    }
+                    w.section(SectionKind::F32, ckpt::f32s_to_le(&b.mlp_norm));
+                    for l in [&b.w_gate, &b.w_up, &b.w_down] {
+                        push_form(&mut w, &l.form);
+                    }
+                }
+                push_form(&mut w, &tf.head.form);
+            }
+        }
+        w.finish()
+    }
+
+    /// [`PackedWeightCache::to_packed_bytes`] to a file, creating parent
+    /// directories.
+    pub fn save_packed(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_packed_bytes())
+            .with_context(|| format!("writing packed checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a packed binary checkpoint and serve from it — the zero-prep
+    /// path: no JSON parse, no quantization pass. See
+    /// [`PackedWeightCache::from_packed`].
+    pub fn load_packed(path: &Path, be: &dyn Backend) -> Result<Arc<PackedWeightCache>> {
+        let ck = PackedCheckpoint::load(path)?;
+        Self::from_packed(&ck, be)
+            .with_context(|| format!("loading packed checkpoint {}", path.display()))
+    }
+
+    /// Rebuild a deployed cache from a validated [`PackedCheckpoint`]
+    /// without running weight prep: each tensor's sections are sliced
+    /// straight out of the checkpoint buffer (zero-copy borrows), the
+    /// packed codes/scales are adopted as the deployed form, and the
+    /// decode-once rows are rebuilt from the *borrowed* slices via
+    /// [`Backend::decode_mxfp4_slices`] / [`Backend::decode_group`] —
+    /// deterministic decodes of the stored bytes, so they are
+    /// bit-identical to what [`PackedWeightCache::build_model`] would
+    /// have produced from the source JSON checkpoint. The prep-pass
+    /// counter therefore stays 0 on this path, pinned in
+    /// `tests/serve_ckpt.rs`.
+    ///
+    /// Every dimension/length mismatch between the header and the section
+    /// payloads is a descriptive error, never a panic mid-slice.
+    pub fn from_packed(ck: &PackedCheckpoint, be: &dyn Backend) -> Result<Arc<PackedWeightCache>> {
+        let h = &ck.header;
+        let method = h.method;
+        let dim = |i: usize, what: &str| -> Result<usize> {
+            usize::try_from(h.dims[i])
+                .map_err(|_| anyhow!("{what} {} overflows usize", h.dims[i]))
+        };
+        let mut rd = SecReader { ck, i: 0 };
+        let cache = match h.arch {
+            CkptArch::Mlp => {
+                let cfg = ModelConfig {
+                    vocab: dim(0, "vocab")?,
+                    d_emb: dim(1, "d_emb")?,
+                    d_hidden: dim(2, "d_hidden")?,
+                    n_hidden: dim(3, "n_hidden")?,
+                    method,
+                };
+                cfg.validate()?;
+                let emb_len = cfg
+                    .vocab
+                    .checked_mul(cfg.d_emb)
+                    .ok_or_else(|| anyhow!("embedding dims {}x{} overflow", cfg.vocab, cfg.d_emb))?;
+                let tok_emb = rd.f32s("tok_emb", emb_len)?;
+                let layers = cfg
+                    .layer_dims()
+                    .iter()
+                    .enumerate()
+                    .map(|(li, &(o, i))| rd.layer(&format!("layer {li}"), o, i, method, be))
+                    .collect::<Result<Vec<_>>>()?;
+                PackedWeightCache {
+                    method,
+                    vocab: cfg.vocab,
+                    d_emb: cfg.d_emb,
+                    d_hidden: cfg.d_hidden,
+                    n_hidden: cfg.n_hidden,
+                    arch: PreparedArch::Mlp { tok_emb, layers },
+                    prep_passes: AtomicUsize::new(0),
+                }
+            }
+            CkptArch::Transformer => {
+                let cfg = TransformerConfig {
+                    vocab: dim(0, "vocab")?,
+                    d_model: dim(1, "d_model")?,
+                    n_heads: dim(2, "n_heads")?,
+                    n_layers: dim(3, "n_layers")?,
+                    d_ff: dim(4, "d_ff")?,
+                    // not stored: a deployed cache has no fixed sequence
+                    // budget (capacity comes from each request)
+                    seq: 1,
+                    method,
+                };
+                cfg.validate()?;
+                let d = cfg.d_model;
+                let emb_len = cfg
+                    .vocab
+                    .checked_mul(d)
+                    .ok_or_else(|| anyhow!("embedding dims {}x{} overflow", cfg.vocab, d))?;
+                let tok_emb = rd.f32s("tok_emb", emb_len)?;
+                let final_norm = rd.f32s("final_norm", d)?;
+                let mut blocks = Vec::with_capacity(cfg.n_layers);
+                for bi in 0..cfg.n_layers {
+                    let attn_norm = rd.f32s(&format!("block {bi} attn_norm"), d)?;
+                    let wq = rd.layer(&format!("block {bi} wq"), d, d, method, be)?;
+                    let wk = rd.layer(&format!("block {bi} wk"), d, d, method, be)?;
+                    let wv = rd.layer(&format!("block {bi} wv"), d, d, method, be)?;
+                    let wo = rd.layer(&format!("block {bi} wo"), d, d, method, be)?;
+                    let mlp_norm = rd.f32s(&format!("block {bi} mlp_norm"), d)?;
+                    let w_gate =
+                        rd.layer(&format!("block {bi} w_gate"), cfg.d_ff, d, method, be)?;
+                    let w_up = rd.layer(&format!("block {bi} w_up"), cfg.d_ff, d, method, be)?;
+                    let w_down =
+                        rd.layer(&format!("block {bi} w_down"), d, cfg.d_ff, method, be)?;
+                    blocks.push(PreparedBlock {
+                        attn_norm,
+                        wq,
+                        wk,
+                        wv,
+                        wo,
+                        mlp_norm,
+                        w_gate,
+                        w_up,
+                        w_down,
+                    });
+                }
+                let head = rd.layer("head", cfg.vocab, d, method, be)?;
+                PackedWeightCache {
+                    method,
+                    vocab: cfg.vocab,
+                    d_emb: cfg.d_model,
+                    d_hidden: cfg.d_ff,
+                    n_hidden: cfg.n_layers,
+                    arch: PreparedArch::Transformer(PreparedTransformer {
+                        tok_emb,
+                        blocks,
+                        final_norm,
+                        head,
+                        d_model: d,
+                        n_heads: cfg.n_heads,
+                        head_dim: cfg.head_dim(),
+                    }),
+                    prep_passes: AtomicUsize::new(0),
+                }
+            }
+        };
+        ensure!(
+            rd.i == h.sections.len(),
+            "checkpoint carries {} trailing section(s) beyond the {} the {} walk consumes",
+            h.sections.len() - rd.i,
+            rd.i,
+            h.arch.name()
+        );
+        Ok(Arc::new(cache))
     }
 
     pub fn method(&self) -> ServeMethod {
@@ -1062,6 +1290,176 @@ impl PackedWeightCache {
     }
 }
 
+/// Emit one prepared layer's checkpoint sections in the walk order the
+/// loader ([`SecReader::layer`]) reconstructs from the header: dense
+/// forms one `F32` section, mxfp4-family forms `Codes` + `Scales`, NVFP4
+/// `Codes` + `Scales` + `TensorScale`. The stored bytes are the deployed
+/// bytes — nothing is re-encoded, so a write→load round trip is exact.
+fn push_form(w: &mut ckpt::CkptWriter, form: &PreparedForm) {
+    match form {
+        PreparedForm::F32 { w: rows } | PreparedForm::Mxfp8 { w: rows } => {
+            w.section(SectionKind::F32, ckpt::f32s_to_le(rows));
+        }
+        PreparedForm::Quartet { packed, .. }
+        | PreparedForm::Rtn { packed, .. }
+        | PreparedForm::WeightOnly { packed, .. } => {
+            w.section(SectionKind::Codes, packed.codes.clone());
+            w.section(SectionKind::Scales, packed.scales.iter().map(|s| s.0).collect());
+        }
+        PreparedForm::Nvfp4 { packed, .. } => {
+            w.section(SectionKind::Codes, packed.codes.clone());
+            w.section(SectionKind::Scales, packed.scales.clone());
+            w.section(
+                SectionKind::TensorScale,
+                packed.tensor_scale.to_le_bytes().to_vec(),
+            );
+        }
+    }
+}
+
+/// Walks a [`PackedCheckpoint`]'s sections in the deterministic tensor
+/// order, validating kind and length at every step. `next` hands out
+/// *borrowed* slices of the checkpoint buffer; only the bytes a deployed
+/// form must own are copied out.
+struct SecReader<'a> {
+    ck: &'a PackedCheckpoint,
+    i: usize,
+}
+
+impl<'a> SecReader<'a> {
+    fn next(&mut self, want: SectionKind) -> Result<&'a [u8]> {
+        let secs = &self.ck.header.sections;
+        ensure!(
+            self.i < secs.len(),
+            "checkpoint ends early: wanted a {} section at index {}, file has {} section(s)",
+            want.name(),
+            self.i,
+            secs.len()
+        );
+        let s = secs[self.i];
+        ensure!(
+            s.kind == want,
+            "section {}: expected kind {}, found {}",
+            self.i,
+            want.name(),
+            s.kind.name()
+        );
+        let bytes = self.ck.section_bytes(self.i);
+        self.i += 1;
+        Ok(bytes)
+    }
+
+    fn f32s(&mut self, what: &str, want_len: usize) -> Result<Vec<f32>> {
+        let bytes = self.next(SectionKind::F32)?;
+        let vals = ckpt::le_to_f32s(bytes).with_context(|| what.to_string())?;
+        ensure!(
+            vals.len() == want_len,
+            "{what}: expected {want_len} f32 values, section holds {}",
+            vals.len()
+        );
+        Ok(vals)
+    }
+
+    /// Rebuild one `[d_out, d_in]` deployed layer. The decode-once rows
+    /// come from the borrowed section slices (never from re-quantizing),
+    /// which is what keeps this path prep-free AND bit-identical to the
+    /// JSON build.
+    fn layer(
+        &mut self,
+        what: &str,
+        d_out: usize,
+        d_in: usize,
+        method: ServeMethod,
+        be: &dyn Backend,
+    ) -> Result<PreparedLayer> {
+        let n = d_out
+            .checked_mul(d_in)
+            .ok_or_else(|| anyhow!("{what}: {d_out}x{d_in} overflows usize"))?;
+        let form = match method {
+            ServeMethod::F32 => PreparedForm::F32 { w: self.f32s(what, n)? },
+            ServeMethod::Mxfp8 => PreparedForm::Mxfp8 { w: self.f32s(what, n)? },
+            ServeMethod::Quartet | ServeMethod::Rtn | ServeMethod::Fp4Clamp => {
+                ensure!(
+                    d_in % MXFP4.group == 0,
+                    "{what}: d_in {d_in} is not a multiple of the MXFP4 group ({})",
+                    MXFP4.group
+                );
+                let codes = self.next(SectionKind::Codes)?;
+                ensure!(
+                    codes.len() == n / 2,
+                    "{what}: expected {} packed code bytes, section holds {}",
+                    n / 2,
+                    codes.len()
+                );
+                let scales = self.next(SectionKind::Scales)?;
+                ensure!(
+                    scales.len() == n / MXFP4.group,
+                    "{what}: expected {} E8M0 scale bytes, section holds {}",
+                    n / MXFP4.group,
+                    scales.len()
+                );
+                let mut dec = vec![0.0f32; n];
+                be.decode_mxfp4_slices(codes, scales, d_out, d_in, &mut dec);
+                let packed = Mxfp4Tensor {
+                    rows: d_out,
+                    cols: d_in,
+                    codes: codes.to_vec(),
+                    scales: scales.iter().map(|&b| E8m0(b)).collect(),
+                    mask: None,
+                };
+                match method {
+                    ServeMethod::Quartet => PreparedForm::Quartet { packed, dec },
+                    ServeMethod::Rtn => PreparedForm::Rtn { packed, dec },
+                    _ => PreparedForm::WeightOnly { packed, dec },
+                }
+            }
+            ServeMethod::Nvfp4 => {
+                ensure!(
+                    d_in % NVFP4.group == 0,
+                    "{what}: d_in {d_in} is not a multiple of the NVFP4 group ({})",
+                    NVFP4.group
+                );
+                let codes = self.next(SectionKind::Codes)?;
+                ensure!(
+                    codes.len() == n / 2,
+                    "{what}: expected {} packed code bytes, section holds {}",
+                    n / 2,
+                    codes.len()
+                );
+                let scales = self.next(SectionKind::Scales)?;
+                ensure!(
+                    scales.len() == n / NVFP4.group,
+                    "{what}: expected {} E4M3 scale bytes, section holds {}",
+                    n / NVFP4.group,
+                    scales.len()
+                );
+                let tsb = self.next(SectionKind::TensorScale)?;
+                ensure!(
+                    tsb.len() == 4,
+                    "{what}: tensor-scale section must be 4 bytes, holds {}",
+                    tsb.len()
+                );
+                let tensor_scale = f32::from_le_bytes([tsb[0], tsb[1], tsb[2], tsb[3]]);
+                ensure!(
+                    tensor_scale.is_finite(),
+                    "{what}: tensor scale {tensor_scale} is not finite"
+                );
+                let packed = GroupTensor {
+                    fmt: &NVFP4,
+                    rows: d_out,
+                    cols: d_in,
+                    codes: codes.to_vec(),
+                    scales: scales.to_vec(),
+                    tensor_scale,
+                };
+                let dec = be.decode_group(&packed);
+                PreparedForm::Nvfp4 { packed, dec }
+            }
+        };
+        Ok(PreparedLayer { d_out, d_in, form })
+    }
+}
+
 /// Quantize-dequantize one full-width `[d]` row through deterministic RTN
 /// MXFP4 in place — the exact arithmetic [`KvPool::write_row`] applies when
 /// storing and [`crate::kernels::KvPageData::Mxfp4`] pages apply when read,
@@ -1409,5 +1807,53 @@ mod tests {
             }
         }
         assert_eq!(logits, x, "weight-only serving must be plain f32 GEMM");
+    }
+
+    #[test]
+    fn packed_roundtrip_is_prep_free_and_bit_identical() {
+        let m = model();
+        let tfm = tf_model();
+        let be = ScalarBackend;
+        for method in ServeMethod::ALL {
+            for built in [
+                PackedWeightCache::build(&m, method, &be),
+                PackedWeightCache::build_transformer(&tfm, method, &be),
+            ] {
+                let bytes = built.to_packed_bytes();
+                // serialization is deterministic (converter idempotence)
+                assert_eq!(bytes, built.to_packed_bytes(), "{}", method.name());
+                let ck = PackedCheckpoint::from_bytes(bytes).unwrap();
+                let loaded = PackedWeightCache::from_packed(&ck, &be).unwrap();
+                assert_eq!(
+                    loaded.prep_passes(),
+                    0,
+                    "{}: the binary path must never prep",
+                    method.name()
+                );
+                assert_eq!(loaded.n_layers(), built.n_layers());
+                assert_eq!(loaded.weight_bytes(), built.weight_bytes());
+                assert_eq!(loaded.method(), built.method());
+                if built.arch_name() == "mlp" {
+                    let rows = 3;
+                    let mut feats = vec![0.0f32; rows * 2 * built.d_emb];
+                    for (r, chunk) in feats.chunks_mut(2 * built.d_emb).enumerate() {
+                        built.write_features(r as i32, (r + 1) as i32, chunk);
+                    }
+                    let a = built.forward(feats.clone(), rows, &be, &mut Rng::new(4));
+                    let b = loaded.forward(feats, rows, &be, &mut Rng::new(4));
+                    assert_eq!(a, b, "{}: packed load diverged", method.name());
+                } else {
+                    let logits = |c: &PackedWeightCache| {
+                        let mut s = c.new_state(&[1, 2, 3], 4, &be, false);
+                        let mut states = vec![&mut s];
+                        c.decode_forward(&mut states, &be, false)
+                    };
+                    assert_eq!(logits(&built), logits(&loaded), "{}", method.name());
+                }
+                // zero-prep is an invariant, not a build artifact: the
+                // forwards above must not have bumped the counter either
+                assert_eq!(loaded.prep_passes(), 0);
+            }
+        }
     }
 }

@@ -1,0 +1,568 @@
+//! Versioned binary packed-weight checkpoints: the deployment wire format
+//! for [`PackedWeightCache`](crate::serve::cache::PackedWeightCache).
+//!
+//! JSON checkpoints (`kind: "native-mlp-lm"` / `"native-llama-lm"`) store
+//! raw f32 weights, so every engine that loads one pays a full JSON parse
+//! *and* a quantization pass ("prep") before it can serve. The packed
+//! format stores what prep *produces* — packed E2M1 nibble codes, raw
+//! scale bytes, and the f32 tails (embeddings, norm gains) — so the load
+//! path reads one buffer, slices each tensor's sections out of it
+//! in place, and never quantizes: the cache's prep-pass counter reads 0
+//! on this path (pinned in `tests/serve_ckpt.rs`), and the served token
+//! streams are bit-identical to the JSON path because the stored codes
+//! and scales are exactly the bytes prep would have computed.
+//!
+//! File layout (all integers little-endian; the full byte-level spec
+//! lives in `docs/CHECKPOINT_FORMAT.md`, precise enough to reimplement a
+//! reader without this source file):
+//!
+//! ```text
+//! [0..8)    magic "QRTPCKP1"
+//! [8..12)   u32 format version (= 1)
+//! [12..16)  u32 arch code      (0 = mlp, 1 = transformer)
+//! [16..20)  u32 method code    (0 f32, 1 mxfp8, 2 quartet, 3 rtn,
+//!                               4 nvfp4, 5 fp4-clamp)
+//! [20..24)  u32 section count N
+//! [24..88)  u64 dims[8]        (arch-specific; unused slots 0)
+//! [88..88+24N)  section table: {u64 offset, u64 len, u32 crc32, u32 kind}
+//! [..+4)    u32 header CRC-32 over every byte before this field
+//! then zero padding; each section payload starts 64-byte aligned
+//! ```
+//!
+//! Section *order* is not self-describing: it is the deterministic tensor
+//! walk of the architecture named in the header (embedding first, then
+//! each layer's sections in model order), which the spec also pins. The
+//! checksum is stock CRC-32 (IEEE 802.3, the gzip/PNG polynomial) so an
+//! external reader can call any standard crc32 and match.
+//!
+//! Everything here is deterministic — no timestamps, no randomness — so
+//! converting the same JSON checkpoint twice yields byte-identical files
+//! (converter idempotence, also pinned in tests).
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::kernels::Backend;
+use crate::quant::format::Method;
+use crate::serve::cache::PackedWeightCache;
+use crate::train::NativeModel;
+
+/// File magic: "QRTPCKP1" — QuaRTet Packed ChecKPoint, layout 1.
+pub const CKPT_MAGIC: [u8; 8] = *b"QRTPCKP1";
+
+/// Format version this writer emits and this reader understands.
+pub const CKPT_VERSION: u32 = 1;
+
+/// Every section payload starts at a multiple of this (cache-line /
+/// typical mmap-friendly alignment); the gaps are zero bytes.
+pub const SECTION_ALIGN: usize = 64;
+
+/// Fixed header bytes before the section table.
+pub const HEADER_FIXED: usize = 88;
+
+/// Bytes per section-table entry.
+pub const SECTION_ENTRY: usize = 24;
+
+/// Parser sanity cap on the section count (a real checkpoint has
+/// `O(layers)` sections; this only exists so a corrupt count cannot
+/// drive a huge allocation).
+const MAX_SECTIONS: usize = 1 << 20;
+
+/// Architecture selector carried in the header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptArch {
+    /// `dims = [vocab, d_emb, d_hidden, n_hidden, 0, 0, 0, 0]`
+    Mlp,
+    /// `dims = [vocab, d_model, n_heads, n_layers, d_ff, 0, 0, 0]`
+    Transformer,
+}
+
+impl CkptArch {
+    pub fn name(self) -> &'static str {
+        match self {
+            CkptArch::Mlp => "mlp",
+            CkptArch::Transformer => "transformer",
+        }
+    }
+
+    fn code(self) -> u32 {
+        match self {
+            CkptArch::Mlp => 0,
+            CkptArch::Transformer => 1,
+        }
+    }
+
+    fn from_code(c: u32) -> Result<CkptArch> {
+        match c {
+            0 => Ok(CkptArch::Mlp),
+            1 => Ok(CkptArch::Transformer),
+            other => Err(anyhow!("unknown arch code {other} (expected 0=mlp or 1=transformer)")),
+        }
+    }
+}
+
+/// What a payload section holds. The walk order (which tensor a section
+/// belongs to) is fixed by the header's arch + method, not stored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SectionKind {
+    /// Little-endian f32 array (embeddings, norm gains, QDQ'd mxfp8/f32
+    /// weight rows).
+    F32 = 0,
+    /// Packed element codes (E2M1 nibbles, low nibble = even column).
+    Codes = 1,
+    /// Raw per-group scale bytes (E8M0 for mxfp4-family tensors, E4M3
+    /// for nvfp4).
+    Scales = 2,
+    /// A single little-endian f32: the NVFP4 two-level tensor scale.
+    TensorScale = 3,
+}
+
+impl SectionKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SectionKind::F32 => "f32",
+            SectionKind::Codes => "codes",
+            SectionKind::Scales => "scales",
+            SectionKind::TensorScale => "tensor_scale",
+        }
+    }
+
+    fn code(self) -> u32 {
+        self as u32
+    }
+
+    fn from_code(c: u32) -> Result<SectionKind> {
+        match c {
+            0 => Ok(SectionKind::F32),
+            1 => Ok(SectionKind::Codes),
+            2 => Ok(SectionKind::Scales),
+            3 => Ok(SectionKind::TensorScale),
+            other => Err(anyhow!("unknown section kind {other} (expected 0..=3)")),
+        }
+    }
+}
+
+/// Method ↔ header code. A fixed table (NOT the enum's declaration
+/// order) so the on-disk encoding can never drift if the Rust enum is
+/// reordered.
+fn method_code(m: Method) -> u32 {
+    match m {
+        Method::F32 => 0,
+        Method::Mxfp8 => 1,
+        Method::Quartet => 2,
+        Method::Rtn => 3,
+        Method::Nvfp4 => 4,
+        Method::Fp4Clamp => 5,
+    }
+}
+
+fn method_from_code(c: u32) -> Result<Method> {
+    Ok(match c {
+        0 => Method::F32,
+        1 => Method::Mxfp8,
+        2 => Method::Quartet,
+        3 => Method::Rtn,
+        4 => Method::Nvfp4,
+        5 => Method::Fp4Clamp,
+        other => return Err(anyhow!("unknown method code {other} (expected 0..=5)")),
+    })
+}
+
+/// One entry of the section table, parsed and checksum-verified.
+#[derive(Debug, Clone, Copy)]
+pub struct Section {
+    pub kind: SectionKind,
+    /// Absolute byte offset in the file (a multiple of [`SECTION_ALIGN`]).
+    pub offset: usize,
+    /// Payload length in bytes.
+    pub len: usize,
+    /// CRC-32 of the payload bytes.
+    pub crc: u32,
+}
+
+/// The parsed, validated header of a packed checkpoint.
+#[derive(Debug, Clone)]
+pub struct CkptHeader {
+    pub version: u32,
+    pub arch: CkptArch,
+    pub method: Method,
+    /// Arch-specific dimensions; see [`CkptArch`] for the slot layout.
+    pub dims: [u64; 8],
+    pub sections: Vec<Section>,
+}
+
+/// CRC-32 (IEEE 802.3): reflected polynomial `0xEDB88320`, init and
+/// final-XOR `0xFFFFFFFF` — the checksum gzip/zlib/PNG use, chosen so an
+/// external reimplementation can call any stock `crc32` and match.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, e) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *e = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+fn align_up(x: usize) -> usize {
+    x.div_ceil(SECTION_ALIGN) * SECTION_ALIGN
+}
+
+/// Serialize an f32 slice to little-endian bytes (the `F32` section
+/// payload encoding).
+pub fn f32s_to_le(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode an `F32` section payload back to f32s. Errors on a length that
+/// is not a multiple of 4.
+pub fn le_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    ensure!(
+        bytes.len() % 4 == 0,
+        "f32 section length {} is not a multiple of 4",
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Assembles a packed checkpoint: collect sections in tensor-walk order,
+/// then [`CkptWriter::finish`] lays out the aligned payload, fills the
+/// section table, and stamps both checksum levels. Deterministic: the
+/// output is a pure function of `(arch, method, dims, sections)`.
+pub struct CkptWriter {
+    arch: CkptArch,
+    method: Method,
+    dims: [u64; 8],
+    entries: Vec<(SectionKind, Vec<u8>)>,
+}
+
+impl CkptWriter {
+    pub fn new(arch: CkptArch, method: Method, dims: [u64; 8]) -> CkptWriter {
+        CkptWriter { arch, method, dims, entries: Vec::new() }
+    }
+
+    /// Append one payload section (walk order = call order).
+    pub fn section(&mut self, kind: SectionKind, bytes: Vec<u8>) {
+        self.entries.push((kind, bytes));
+    }
+
+    /// Lay out and emit the complete file image.
+    pub fn finish(self) -> Vec<u8> {
+        let n = self.entries.len();
+        let meta_len = HEADER_FIXED + n * SECTION_ENTRY + 4;
+        let mut offsets = Vec::with_capacity(n);
+        let mut cursor = align_up(meta_len);
+        for (_, bytes) in &self.entries {
+            offsets.push(cursor);
+            cursor = align_up(cursor + bytes.len());
+        }
+        let total = match self.entries.last() {
+            // the file ends at the last payload byte (no trailing pad)
+            Some((_, bytes)) => offsets[n - 1] + bytes.len(),
+            None => meta_len,
+        };
+        let mut out = vec![0u8; total];
+        out[0..8].copy_from_slice(&CKPT_MAGIC);
+        out[8..12].copy_from_slice(&CKPT_VERSION.to_le_bytes());
+        out[12..16].copy_from_slice(&self.arch.code().to_le_bytes());
+        out[16..20].copy_from_slice(&method_code(self.method).to_le_bytes());
+        out[20..24].copy_from_slice(&(n as u32).to_le_bytes());
+        for (i, d) in self.dims.iter().enumerate() {
+            out[24 + i * 8..32 + i * 8].copy_from_slice(&d.to_le_bytes());
+        }
+        for (i, ((kind, bytes), off)) in self.entries.iter().zip(&offsets).enumerate() {
+            let e = HEADER_FIXED + i * SECTION_ENTRY;
+            out[e..e + 8].copy_from_slice(&(*off as u64).to_le_bytes());
+            out[e + 8..e + 16].copy_from_slice(&(bytes.len() as u64).to_le_bytes());
+            out[e + 16..e + 20].copy_from_slice(&crc32(bytes).to_le_bytes());
+            out[e + 20..e + 24].copy_from_slice(&kind.code().to_le_bytes());
+        }
+        let crc = crc32(&out[..meta_len - 4]);
+        out[meta_len - 4..meta_len].copy_from_slice(&crc.to_le_bytes());
+        for ((_, bytes), off) in self.entries.iter().zip(&offsets) {
+            out[*off..*off + bytes.len()].copy_from_slice(bytes);
+        }
+        out
+    }
+}
+
+/// A loaded packed checkpoint: the parsed header plus the whole file as
+/// one owned buffer. Section payloads are *borrowed slices into that
+/// buffer* ([`PackedCheckpoint::section_bytes`]) — the zero-copy surface
+/// the cache's binary load path consumes.
+///
+/// Every structural invariant is verified up front, with descriptive
+/// errors instead of panics mid-slice: magic, version, arch/method/kind
+/// codes, header checksum, and per-section bounds + alignment +
+/// payload checksums.
+pub struct PackedCheckpoint {
+    pub header: CkptHeader,
+    buf: Vec<u8>,
+}
+
+impl PackedCheckpoint {
+    /// Read and validate a packed checkpoint file.
+    pub fn load(path: &Path) -> Result<PackedCheckpoint> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading packed checkpoint {}", path.display()))?;
+        Self::from_bytes(buf).with_context(|| format!("loading {}", path.display()))
+    }
+
+    /// Parse and validate a full in-memory file image.
+    pub fn from_bytes(buf: Vec<u8>) -> Result<PackedCheckpoint> {
+        ensure!(
+            buf.len() >= HEADER_FIXED + 4,
+            "truncated: {} bytes is smaller than the {}-byte fixed header",
+            buf.len(),
+            HEADER_FIXED + 4
+        );
+        ensure!(
+            buf[0..8] == CKPT_MAGIC,
+            "bad magic {:02x?} (expected {:02x?} — not a packed checkpoint)",
+            &buf[0..8],
+            &CKPT_MAGIC[..]
+        );
+        let u32_at = |off: usize| u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+        let u64_at = |off: usize| u64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+        let version = u32_at(8);
+        ensure!(
+            version == CKPT_VERSION,
+            "unsupported version {version} (this reader understands version {CKPT_VERSION})"
+        );
+        let arch = CkptArch::from_code(u32_at(12))?;
+        let method = method_from_code(u32_at(16))?;
+        let n = u32_at(20) as usize;
+        ensure!(n <= MAX_SECTIONS, "unreasonable section count {n}");
+        let meta_len = HEADER_FIXED + n * SECTION_ENTRY + 4;
+        ensure!(
+            buf.len() >= meta_len,
+            "truncated: the {n}-entry section table needs {meta_len} bytes, file has {}",
+            buf.len()
+        );
+        let mut dims = [0u64; 8];
+        for (i, d) in dims.iter_mut().enumerate() {
+            *d = u64_at(24 + i * 8);
+        }
+        let stored = u32_at(meta_len - 4);
+        let computed = crc32(&buf[..meta_len - 4]);
+        ensure!(
+            stored == computed,
+            "header checksum mismatch (stored {stored:#010x}, computed {computed:#010x}) \
+             — the header or section table is corrupt"
+        );
+        let mut sections = Vec::with_capacity(n);
+        for i in 0..n {
+            let e = HEADER_FIXED + i * SECTION_ENTRY;
+            let offset = usize::try_from(u64_at(e))
+                .map_err(|_| anyhow!("section {i}: offset overflows usize"))?;
+            let len = usize::try_from(u64_at(e + 8))
+                .map_err(|_| anyhow!("section {i}: length overflows usize"))?;
+            let crc = u32_at(e + 16);
+            let kind = SectionKind::from_code(u32_at(e + 20))
+                .with_context(|| format!("section {i}"))?;
+            let end = offset
+                .checked_add(len)
+                .ok_or_else(|| anyhow!("section {i}: offset+len overflows usize"))?;
+            ensure!(
+                offset % SECTION_ALIGN == 0,
+                "section {i}: offset {offset} is not {SECTION_ALIGN}-byte aligned"
+            );
+            ensure!(
+                offset >= meta_len && end <= buf.len(),
+                "section {i}: byte range {offset}..{end} escapes the {}-byte file \
+                 (truncated payload?)",
+                buf.len()
+            );
+            let computed = crc32(&buf[offset..end]);
+            ensure!(
+                crc == computed,
+                "section {i} ({}): payload checksum mismatch \
+                 (stored {crc:#010x}, computed {computed:#010x})",
+                kind.name()
+            );
+            sections.push(Section { kind, offset, len, crc });
+        }
+        Ok(PackedCheckpoint {
+            header: CkptHeader { version, arch, method, dims, sections },
+            buf,
+        })
+    }
+
+    /// Borrow section `i`'s payload straight out of the file buffer.
+    pub fn section_bytes(&self, i: usize) -> &[u8] {
+        let s = &self.header.sections[i];
+        &self.buf[s.offset..s.offset + s.len]
+    }
+
+    /// Total file size in bytes.
+    pub fn file_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Cheap binary-vs-JSON detection (for `repro serve --checkpoint`,
+    /// which accepts either format): does the file start with the packed
+    /// magic? Never errors — unreadable files are simply "not packed".
+    pub fn sniff(path: &Path) -> bool {
+        use std::io::Read;
+        let mut head = [0u8; 8];
+        match std::fs::File::open(path) {
+            Ok(mut f) => f.read_exact(&mut head).is_ok() && head == CKPT_MAGIC,
+            Err(_) => false,
+        }
+    }
+}
+
+/// The `repro convert-ckpt` entry point: load a JSON `kind:` checkpoint,
+/// run weight prep exactly once (this is the one place the quantization
+/// cost is paid), and write the packed file. Returns
+/// `(json_bytes, packed_bytes)` for the CLI's compression report.
+///
+/// `method: None` keeps the method the checkpoint was trained with.
+pub fn convert(
+    json_path: &Path,
+    out_path: &Path,
+    method: Option<Method>,
+    be: &dyn Backend,
+) -> Result<(u64, u64)> {
+    let model = NativeModel::load(json_path)?;
+    let method = method.unwrap_or(match &model {
+        NativeModel::Mlp(m) => m.cfg.method,
+        NativeModel::Transformer(m) => m.cfg.method,
+    });
+    let cache = PackedWeightCache::build_model(&model, method, be);
+    cache.save_packed(out_path)?;
+    let json_bytes = std::fs::metadata(json_path)
+        .with_context(|| format!("stat {}", json_path.display()))?
+        .len();
+    let packed_bytes = std::fs::metadata(out_path)
+        .with_context(|| format!("stat {}", out_path.display()))?
+        .len();
+    Ok((json_bytes, packed_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_standard_check_value() {
+        // the canonical CRC-32 test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn tiny_file() -> Vec<u8> {
+        let mut w = CkptWriter::new(
+            CkptArch::Mlp,
+            Method::Quartet,
+            [96, 16, 64, 1, 0, 0, 0, 0],
+        );
+        w.section(SectionKind::F32, f32s_to_le(&[1.0, -2.5, 0.0]));
+        w.section(SectionKind::Codes, vec![0xAB; 32]);
+        w.section(SectionKind::Scales, vec![127u8; 2]);
+        w.finish()
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let bytes = tiny_file();
+        let ck = PackedCheckpoint::from_bytes(bytes.clone()).unwrap();
+        assert_eq!(ck.header.version, CKPT_VERSION);
+        assert_eq!(ck.header.arch, CkptArch::Mlp);
+        assert_eq!(ck.header.method, Method::Quartet);
+        assert_eq!(ck.header.dims[..4], [96, 16, 64, 1]);
+        assert_eq!(ck.header.sections.len(), 3);
+        assert_eq!(ck.section_bytes(1), &[0xAB; 32][..]);
+        assert_eq!(le_to_f32s(ck.section_bytes(0)).unwrap(), vec![1.0, -2.5, 0.0]);
+        // sections are aligned
+        for s in &ck.header.sections {
+            assert_eq!(s.offset % SECTION_ALIGN, 0);
+        }
+        // deterministic: a second identical write is byte-identical
+        assert_eq!(bytes, tiny_file());
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_codes() {
+        let good = tiny_file();
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let e = PackedCheckpoint::from_bytes(bad).unwrap_err();
+        assert!(format!("{e:#}").contains("magic"), "{e:#}");
+
+        let mut bad = good.clone();
+        bad[8] = 99; // version
+        let e = PackedCheckpoint::from_bytes(bad).unwrap_err();
+        assert!(format!("{e:#}").contains("version"), "{e:#}");
+
+        let mut bad = good.clone();
+        bad[12] = 7; // arch code — also breaks the header crc, so refresh it
+        let n = 3;
+        let meta_len = HEADER_FIXED + n * SECTION_ENTRY + 4;
+        let crc = crc32(&bad[..meta_len - 4]);
+        bad[meta_len - 4..meta_len].copy_from_slice(&crc.to_le_bytes());
+        let e = PackedCheckpoint::from_bytes(bad).unwrap_err();
+        assert!(format!("{e:#}").contains("arch"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_corrupt_header_and_payload() {
+        let good = tiny_file();
+        // flip a dims byte without refreshing the header crc
+        let mut bad = good.clone();
+        bad[30] ^= 0xFF;
+        let e = PackedCheckpoint::from_bytes(bad).unwrap_err();
+        assert!(format!("{e:#}").contains("header checksum"), "{e:#}");
+
+        // flip a payload byte: the section crc catches it
+        let ck = PackedCheckpoint::from_bytes(good.clone()).unwrap();
+        let off = ck.header.sections[1].offset;
+        let mut bad = good.clone();
+        bad[off] ^= 0x01;
+        let e = PackedCheckpoint::from_bytes(bad).unwrap_err();
+        assert!(format!("{e:#}").contains("payload checksum"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_level() {
+        let good = tiny_file();
+        // below the fixed header
+        let e = PackedCheckpoint::from_bytes(good[..40].to_vec()).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+        // below the section table
+        let e = PackedCheckpoint::from_bytes(good[..HEADER_FIXED + 10].to_vec()).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+        // payload chopped off
+        let e = PackedCheckpoint::from_bytes(good[..good.len() - 1].to_vec()).unwrap_err();
+        assert!(format!("{e:#}").contains("escapes"), "{e:#}");
+    }
+
+    #[test]
+    fn le_f32_codec_roundtrips_and_rejects_ragged() {
+        let vals = [0.0f32, -1.5, f32::MIN_POSITIVE, 3.25e7];
+        assert_eq!(le_to_f32s(&f32s_to_le(&vals)).unwrap(), vals.to_vec());
+        assert!(le_to_f32s(&[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn method_codes_roundtrip_the_whole_axis() {
+        for m in Method::ALL {
+            assert_eq!(method_from_code(method_code(m)).unwrap(), m);
+        }
+        assert!(method_from_code(42).is_err());
+    }
+}

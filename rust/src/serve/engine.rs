@@ -326,6 +326,25 @@ impl ServeEngine {
         self.clock_s
     }
 
+    /// Fast-forward the virtual clock to `t` (a no-op when already past).
+    /// The multi-tenant [`crate::serve::fleet::ServeFleet`] uses this to
+    /// charge a tenant for wall time other tenants spent computing on the
+    /// shared host: before a tenant's step, its clock jumps to the fleet
+    /// clock, so its requests age (and its latency percentiles pay) for
+    /// the head-of-line interference co-tenancy creates.
+    pub fn advance_clock(&mut self, t: f64) {
+        if t > self.clock_s {
+            self.clock_s = t;
+        }
+    }
+
+    /// Arrival time of the earliest not-yet-arrived request, if any —
+    /// what a multi-engine scheduler needs to jump a shared clock across
+    /// a fleet-wide idle gap.
+    pub fn next_arrival_s(&self) -> Option<f64> {
+        self.future.front().map(|r| r.arrival_s)
+    }
+
     /// Move matured arrivals into the waiting queue and fill free slots.
     /// Returns completions produced *at admission* (zero-budget requests).
     ///

@@ -1,0 +1,386 @@
+//! `ServeFleet` — multi-tenant serving: several [`ServeEngine`]s (one per
+//! tenant, each with its own checkpoint, admission quota and SLO targets)
+//! time-share one host under a single fleet-wide virtual clock.
+//!
+//! The fleet models the co-tenancy cost structure of a real deployment:
+//! every decode step the host runs for tenant A is wall time tenant B's
+//! queued requests age through. Concretely, the scheduler round-robins
+//! over *runnable* tenants (active slots, arrived waiters, or an arrival
+//! that has matured on the fleet clock); before a tenant steps, its
+//! engine clock is fast-forwarded to the fleet clock
+//! ([`ServeEngine::advance_clock`]), and after the step the fleet clock
+//! adopts the engine clock. A tenant therefore pays — in queue time, TTFT
+//! and end-to-end latency — for the head-of-line interference its
+//! co-tenants create, which is exactly what the `fig9_deploy` bench's
+//! per-tenant isolation records (`p99_vs_solo`) measure. When no tenant
+//! is runnable but arrivals remain, the clock jumps to the earliest one
+//! across the fleet (the same idle-jump a solo engine performs).
+//!
+//! Per-tenant SLO accounting happens at report time: a completion *meets
+//! SLO* when its end-to-end latency is within [`TenantSpec::slo_latency_s`]
+//! AND its first token arrived within [`TenantSpec::slo_ttft_s`].
+//! [`TenantReport::slo_attainment`] is the fraction of completions meeting
+//! SLO and [`TenantReport::goodput_tokens_per_sec`] counts only the tokens
+//! of SLO-met completions over fleet wall time — throughput that blew its
+//! deadline is not goodput.
+//!
+//! Determinism: the fleet adds scheduling, not arithmetic. Each engine's
+//! token streams keep the per-request determinism contract (a pure
+//! function of checkpoint, method and sampling seed — see
+//! [`crate::serve::engine`]), so a tenant's streams are bit-identical to
+//! the same trace served solo; only the virtual latency accounting
+//! changes. `tests/serve_ckpt.rs` pins this.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::kernels::Backend;
+use crate::serve::cache::PackedWeightCache;
+use crate::serve::engine::{GenCompletion, GenRequest, Sampling, ServeEngine};
+use crate::util::stats::percentile;
+
+/// One tenant's identity, capacity and service-level objectives.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// tenant name — record files and report rows key on it
+    pub name: String,
+    /// admission quota: at most this many of the tenant's requests decode
+    /// concurrently (the tenant engine's `max_batch`)
+    pub quota: usize,
+    /// end-to-end (arrival → completion) latency target, seconds
+    pub slo_latency_s: f64,
+    /// arrival → first token target, seconds
+    pub slo_ttft_s: f64,
+    pub sampling: Sampling,
+}
+
+struct Tenant {
+    spec: TenantSpec,
+    engine: ServeEngine,
+    completions: Vec<GenCompletion>,
+    requests: usize,
+    busy_s: f64,
+    decode_steps: usize,
+    generated_tokens: usize,
+}
+
+/// Multi-tenant scheduler over per-tenant [`ServeEngine`]s sharing one
+/// virtual clock.
+pub struct ServeFleet {
+    tenants: Vec<Tenant>,
+    /// fleet-wide virtual clock, seconds
+    now: f64,
+}
+
+impl Default for ServeFleet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeFleet {
+    pub fn new() -> ServeFleet {
+        ServeFleet { tenants: Vec::new(), now: 0.0 }
+    }
+
+    /// Register a tenant; returns its index for [`Self::submit`]. Each
+    /// tenant owns its engine (checkpoint + backend + quota), so tenants
+    /// may serve different checkpoints, methods and backends in one
+    /// process.
+    pub fn add_tenant(
+        &mut self,
+        spec: TenantSpec,
+        cache: Arc<PackedWeightCache>,
+        backend: Box<dyn Backend>,
+    ) -> usize {
+        let engine = ServeEngine::new(cache, backend, spec.quota, spec.sampling);
+        self.tenants.push(Tenant {
+            spec,
+            engine,
+            completions: Vec::new(),
+            requests: 0,
+            busy_s: 0.0,
+            decode_steps: 0,
+            generated_tokens: 0,
+        });
+        self.tenants.len() - 1
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Queue a request with tenant `tenant` (an `add_tenant` index).
+    pub fn submit(&mut self, tenant: usize, req: GenRequest) -> Result<()> {
+        let t = &mut self.tenants[tenant];
+        t.engine.submit(req)?;
+        t.requests += 1;
+        Ok(())
+    }
+
+    /// Fleet virtual clock (seconds since the fleet started).
+    pub fn clock_s(&self) -> f64 {
+        self.now
+    }
+
+    /// Any tenant with anything left to do?
+    pub fn has_work(&self) -> bool {
+        self.tenants.iter().any(|t| t.engine.has_work())
+    }
+
+    /// A tenant is *runnable* when stepping its engine right now makes
+    /// progress: active decode slots, arrived waiters, or a future
+    /// arrival that has matured on the fleet clock.
+    fn runnable(&self, i: usize) -> bool {
+        let e = &self.tenants[i].engine;
+        e.active_len() > 0
+            || e.waiting_len() > 0
+            || e.next_arrival_s().is_some_and(|t| t <= self.now)
+    }
+
+    /// Drive the fleet until every submitted request of every tenant
+    /// completes, or `max_steps` tenant decode steps have run (the CI
+    /// smoke cap). Returns per-tenant reports; a capped run reports
+    /// whatever finished.
+    pub fn run(&mut self, max_steps: Option<usize>) -> Result<FleetReport> {
+        let mut left = max_steps.unwrap_or(usize::MAX);
+        let mut cursor = 0usize;
+        let n = self.tenants.len();
+        while n > 0 && left > 0 {
+            let mut picked = None;
+            for k in 0..n {
+                let i = (cursor + k) % n;
+                if self.runnable(i) {
+                    picked = Some(i);
+                    break;
+                }
+            }
+            let Some(i) = picked else {
+                // fleet-wide idle: jump to the earliest arrival, or stop
+                let next = self
+                    .tenants
+                    .iter()
+                    .filter_map(|t| t.engine.next_arrival_s())
+                    .fold(f64::INFINITY, f64::min);
+                if !next.is_finite() {
+                    break;
+                }
+                self.now = self.now.max(next);
+                continue;
+            };
+            cursor = (i + 1) % n;
+            let t = &mut self.tenants[i];
+            // charge this tenant for the wall time co-tenants spent
+            t.engine.advance_clock(self.now);
+            let rep = t.engine.run(Some(1))?;
+            t.completions.extend(rep.completions);
+            t.busy_s += rep.busy_s;
+            t.decode_steps += rep.decode_steps;
+            t.generated_tokens += rep.generated_tokens;
+            self.now = self.now.max(t.engine.clock_s());
+            left -= 1;
+        }
+        Ok(self.report())
+    }
+
+    /// Snapshot the per-tenant reports at the current fleet clock.
+    pub fn report(&self) -> FleetReport {
+        let wall_s = self.now;
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| TenantReport::new(&t.spec, t, wall_s))
+            .collect();
+        FleetReport { wall_s, tenants }
+    }
+}
+
+/// One tenant's end-of-run accounting.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    pub quota: usize,
+    pub slo_latency_s: f64,
+    pub slo_ttft_s: f64,
+    /// requests submitted for this tenant
+    pub requests: usize,
+    /// this tenant's finished generations (token streams included — solo
+    /// bit-identity tests compare them)
+    pub completions: Vec<GenCompletion>,
+    pub generated_tokens: usize,
+    pub decode_steps: usize,
+    /// wall time spent inside this tenant's decode steps
+    pub busy_s: f64,
+    /// fleet clock at report time (shared across tenants)
+    pub wall_s: f64,
+    /// `[p50, p90, p99]` of arrival → completion, seconds
+    pub latency_s: [f64; 3],
+    /// `[p50, p90, p99]` of arrival → first token, seconds
+    pub ttft_s: [f64; 3],
+    /// fraction of completions meeting BOTH SLO targets (0 when nothing
+    /// completed)
+    pub slo_attainment: f64,
+    /// tokens of SLO-met completions over fleet wall time
+    pub goodput_tokens_per_sec: f64,
+}
+
+impl TenantReport {
+    fn new(spec: &TenantSpec, t: &Tenant, wall_s: f64) -> TenantReport {
+        let met: Vec<&GenCompletion> = t
+            .completions
+            .iter()
+            .filter(|c| c.latency_s <= spec.slo_latency_s && c.ttft_s <= spec.slo_ttft_s)
+            .collect();
+        let slo_attainment = if t.completions.is_empty() {
+            0.0
+        } else {
+            met.len() as f64 / t.completions.len() as f64
+        };
+        let good_tokens: usize = met.iter().map(|c| c.tokens.len()).sum();
+        let pcts = |f: fn(&GenCompletion) -> f64| -> [f64; 3] {
+            let xs: Vec<f64> = t.completions.iter().map(f).collect();
+            [50.0, 90.0, 99.0].map(|p| percentile(&xs, p))
+        };
+        TenantReport {
+            name: spec.name.clone(),
+            quota: spec.quota,
+            slo_latency_s: spec.slo_latency_s,
+            slo_ttft_s: spec.slo_ttft_s,
+            requests: t.requests,
+            completions: t.completions.clone(),
+            generated_tokens: t.generated_tokens,
+            decode_steps: t.decode_steps,
+            busy_s: t.busy_s,
+            wall_s,
+            latency_s: pcts(|c| c.latency_s),
+            ttft_s: pcts(|c| c.ttft_s),
+            slo_attainment,
+            goodput_tokens_per_sec: good_tokens as f64 / wall_s.max(1e-12),
+        }
+    }
+}
+
+/// Fleet-wide end-of-run accounting: the shared clock plus one
+/// [`TenantReport`] per registered tenant, in registration order.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub wall_s: f64,
+    pub tenants: Vec<TenantReport>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ScalarBackend;
+    use crate::quant::format::Method;
+    use crate::serve::cache::PackedWeightCache;
+    use crate::train::{MlpLm, ModelConfig};
+
+    fn tiny_cache(method: Method) -> Arc<PackedWeightCache> {
+        let model = MlpLm::init(
+            ModelConfig { vocab: 96, d_emb: 16, d_hidden: 64, n_hidden: 1, method },
+            11,
+        )
+        .unwrap();
+        PackedWeightCache::build(&model, method, &ScalarBackend)
+    }
+
+    fn spec(name: &str, quota: usize) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            quota,
+            slo_latency_s: 60.0,
+            slo_ttft_s: 60.0,
+            sampling: Sampling::greedy(),
+        }
+    }
+
+    #[test]
+    fn fleet_serves_all_tenants_to_completion() {
+        let cache = tiny_cache(Method::Quartet);
+        let mut fleet = ServeFleet::new();
+        let a = fleet.add_tenant(spec("a", 2), Arc::clone(&cache), Box::new(ScalarBackend));
+        let b = fleet.add_tenant(spec("b", 1), Arc::clone(&cache), Box::new(ScalarBackend));
+        for i in 0..4u64 {
+            fleet.submit(a, GenRequest::new(i, vec![1, 2, 3], 5)).unwrap();
+            fleet
+                .submit(b, GenRequest { arrival_s: 0.001 * i as f64, ..GenRequest::new(i, vec![4, 5], 3) })
+                .unwrap();
+        }
+        let rep = fleet.run(None).unwrap();
+        assert!(!fleet.has_work());
+        assert_eq!(rep.tenants.len(), 2);
+        assert_eq!(rep.tenants[a].completions.len(), 4);
+        assert_eq!(rep.tenants[b].completions.len(), 4);
+        assert_eq!(rep.tenants[a].generated_tokens, 20);
+        assert_eq!(rep.tenants[b].generated_tokens, 12);
+        // generous SLOs: everything counts as goodput
+        assert_eq!(rep.tenants[a].slo_attainment, 1.0);
+        assert!(rep.tenants[a].goodput_tokens_per_sec > 0.0);
+        assert!(rep.wall_s > 0.0);
+    }
+
+    #[test]
+    fn fleet_token_streams_match_solo_engine() {
+        let cache = tiny_cache(Method::Rtn);
+        // solo: one engine, same trace
+        let mut solo =
+            ServeEngine::new(Arc::clone(&cache), Box::new(ScalarBackend), 2, Sampling::greedy());
+        for i in 0..3u64 {
+            solo.submit(GenRequest::new(i, vec![7, 8, 9], 4)).unwrap();
+        }
+        let solo_rep = solo.run(None).unwrap();
+        // fleet: same trace for tenant 0, plus a noisy co-tenant
+        let mut fleet = ServeFleet::new();
+        let t0 = fleet.add_tenant(spec("t0", 2), Arc::clone(&cache), Box::new(ScalarBackend));
+        let t1 = fleet.add_tenant(spec("t1", 1), Arc::clone(&cache), Box::new(ScalarBackend));
+        for i in 0..3u64 {
+            fleet.submit(t0, GenRequest::new(i, vec![7, 8, 9], 4)).unwrap();
+            fleet.submit(t1, GenRequest::new(100 + i, vec![1], 6)).unwrap();
+        }
+        let rep = fleet.run(None).unwrap();
+        let mut solo_c = solo_rep.completions.clone();
+        let mut fleet_c = rep.tenants[t0].completions.clone();
+        solo_c.sort_by_key(|c| c.id);
+        fleet_c.sort_by_key(|c| c.id);
+        assert_eq!(solo_c.len(), fleet_c.len());
+        for (s, f) in solo_c.iter().zip(&fleet_c) {
+            assert_eq!(s.id, f.id);
+            assert_eq!(s.tokens, f.tokens, "co-tenancy must not change token streams");
+        }
+        assert!(rep.tenants[t1].completions.len() == 3);
+    }
+
+    #[test]
+    fn fleet_respects_quota_and_capped_runs_resume() {
+        let cache = tiny_cache(Method::F32);
+        let mut fleet = ServeFleet::new();
+        let a = fleet.add_tenant(spec("a", 1), Arc::clone(&cache), Box::new(ScalarBackend));
+        for i in 0..3u64 {
+            fleet.submit(a, GenRequest::new(i, vec![2, 3], 4)).unwrap();
+        }
+        let rep1 = fleet.run(Some(2)).unwrap();
+        assert!(rep1.tenants[a].completions.len() <= 1);
+        let rep2 = fleet.run(None).unwrap();
+        assert_eq!(rep2.tenants[a].completions.len(), 3);
+        // quota 1: never more than one active; the engine enforces it and
+        // the report's decode_steps reflect fully serialized decoding
+        assert!(rep2.tenants[a].decode_steps >= 12);
+    }
+
+    #[test]
+    fn idle_gaps_jump_to_the_next_arrival() {
+        let cache = tiny_cache(Method::F32);
+        let mut fleet = ServeFleet::new();
+        let a = fleet.add_tenant(spec("a", 1), Arc::clone(&cache), Box::new(ScalarBackend));
+        fleet
+            .submit(a, GenRequest { arrival_s: 5.0, ..GenRequest::new(0, vec![1], 2) })
+            .unwrap();
+        let rep = fleet.run(None).unwrap();
+        assert_eq!(rep.tenants[a].completions.len(), 1);
+        assert!(rep.wall_s >= 5.0, "clock must jump across the idle gap");
+        // but latency is measured from arrival, not from t=0
+        assert!(rep.tenants[a].completions[0].latency_s < 5.0);
+    }
+}

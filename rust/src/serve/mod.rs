@@ -27,20 +27,35 @@
 //! * [`paged`] — the page pool itself: refcounted fixed-size KV pages
 //!   (f32 or packed MXFP4), block tables, and the token-keyed radix tree
 //!   behind prefix sharing.
+//! * [`ckpt`] — the versioned binary packed-MXFP4 checkpoint format
+//!   (`QRTPCKP1`): aligned per-tensor sections (codes, scales, f32
+//!   tails), CRC-32-checksummed header and payloads, a converter from
+//!   JSON checkpoints (`repro convert-ckpt`), and the zero-prep load
+//!   path ([`cache::PackedWeightCache::load_packed`]) that slices the
+//!   buffer without re-running weight prep (`prep_passes == 0`,
+//!   test-pinned). Byte-level spec: `docs/CHECKPOINT_FORMAT.md`.
+//! * [`fleet::ServeFleet`] — multi-tenant serving: per-tenant engines
+//!   (own checkpoint, admission quota, latency/TTFT SLO targets)
+//!   time-sharing one host under a fleet-wide virtual clock, with
+//!   per-tenant SLO attainment and goodput reporting (the `fig9_deploy`
+//!   bench).
 //! * [`trace`] — JSON request traces, synthetic Poisson workloads (with
-//!   shared-prefix mixes), and the [`trace::ServeRecord`] JSON the
-//!   fig6/fig7 benches emit.
+//!   shared-prefix mixes, and per-tenant mixed-Poisson superpositions via
+//!   [`trace::synth_mixed_poisson`]), and the JSON records the benches
+//!   emit ([`trace::ServeRecord`], [`trace::DeployRecord`]).
 //! * [`CpuPrefillEngine`] — batched single-shot prefill over the same
 //!   cache (the Fig 6 prefill leg); serves trained checkpoints via
 //!   [`CpuPrefillEngine::from_checkpoint`].
-//! * [`PrefillEngine`] (`xla` feature) — the PJRT prefill front: FIFO
+//! * `PrefillEngine` (`xla` feature) — the PJRT prefill front: FIFO
 //!   batches up to the artifact's compiled batch size.
 //!
 //! Weight prep happens once per cache build, never per step — a counted,
 //! test-pinned invariant (`prep_passes`).
 
 pub mod cache;
+pub mod ckpt;
 pub mod engine;
+pub mod fleet;
 pub mod paged;
 pub mod trace;
 
@@ -56,9 +71,14 @@ use crate::train::{MlpLm, ModelConfig, TrainMethod};
 use crate::util::rng::Rng;
 
 pub use cache::{DecodeState, LayerKv, PackedWeightCache, ServeMethod, TfDecodeState};
+pub use ckpt::PackedCheckpoint;
 pub use engine::{FinishReason, GenCompletion, GenRequest, Sampling, ServeEngine, ServeReport};
+pub use fleet::{FleetReport, ServeFleet, TenantReport, TenantSpec};
 pub use paged::{BlockTable, KvPool, KvPoolConfig, KvQuant, KvServeOptions, PrefixTree};
-pub use trace::{load_trace, parse_trace, synth_requests, ServeRecord, SynthOptions};
+pub use trace::{
+    load_trace, parse_trace, synth_mixed_poisson, synth_requests, DeployRecord, ServeRecord,
+    SynthOptions,
+};
 
 #[cfg(feature = "xla")]
 use crate::coordinator::init::init_state;

@@ -1,13 +1,17 @@
-//! Request sources for `repro serve` — JSON trace replay and synthetic
-//! Poisson arrivals — plus [`ServeRecord`], the JSON measurement schema
-//! the `fig6_continuous_batching` bench emits (and CI uploads as a
-//! workflow artifact).
+//! Request sources for `repro serve` — JSON trace replay, synthetic
+//! Poisson arrivals, and the multi-tenant mixed-Poisson generator
+//! ([`synth_mixed_poisson`]) the fleet benches drive saturation with —
+//! plus the JSON measurement schemas the benches emit (and CI uploads as
+//! workflow artifacts): [`ServeRecord`] for single-engine serving runs
+//! and [`DeployRecord`] for `fig9_deploy`'s cold-start / solo / fleet
+//! measurements.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::serve::engine::{GenRequest, ServeReport};
+use crate::serve::fleet::TenantReport;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -117,6 +121,27 @@ pub fn synth_requests(opts: &SynthOptions) -> Vec<GenRequest> {
                 stop_token: opts.stop_token,
                 arrival_s: t,
             }
+        })
+        .collect()
+}
+
+/// Synthesize one trace per tenant — a *mixed-Poisson* workload: each
+/// tenant draws its own Poisson process from its own [`SynthOptions`]
+/// (rate, lengths, seed), so the superposed fleet arrival stream mixes
+/// heterogeneous rates the way co-tenancy does in production. Request
+/// ids are remapped to `(tenant_index << 32) | id` so they stay unique
+/// across the whole fleet (per-request sampling streams are seeded by
+/// id, so colliding ids would alias streams across tenants).
+pub fn synth_mixed_poisson(per_tenant: &[SynthOptions]) -> Vec<Vec<GenRequest>> {
+    per_tenant
+        .iter()
+        .enumerate()
+        .map(|(i, opts)| {
+            let mut reqs = synth_requests(opts);
+            for r in &mut reqs {
+                r.id += (i as u64) << 32;
+            }
+            reqs
         })
         .collect()
 }
@@ -245,6 +270,129 @@ impl ServeRecord {
         let path = dir.join(format!(
             "{}_{}_{}_b{}_{}.json",
             self.bench, self.method, self.backend, self.batch_point, self.mode
+        ));
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// One `fig9_deploy` measurement: a tenant's SLO accounting under one
+/// deployment mode. The `deploy` field is the record classifier
+/// `check-records` keys on — `"cold_start"` (binary checkpoint load →
+/// engine build → first token, with `cold_start_s` set), `"solo"` (the
+/// tenant's trace served alone, the isolation baseline), or `"fleet"`
+/// (served under co-tenancy, with `p99_vs_solo` set to the fleet p99
+/// latency over the solo p99).
+#[derive(Debug, Clone)]
+pub struct DeployRecord {
+    /// emitting bench/tool, e.g. `fig9_deploy`
+    pub bench: String,
+    /// `cold_start` | `solo` | `fleet`
+    pub deploy: String,
+    pub method: String,
+    pub backend: String,
+    /// tenant name this record describes
+    pub tenant: String,
+    /// tenants co-resident in the process for this measurement (1 for
+    /// solo/cold-start runs)
+    pub tenants: usize,
+    /// the tenant's admission quota (its engine's `max_batch`)
+    pub quota: usize,
+    pub slo_latency_s: f64,
+    pub slo_ttft_s: f64,
+    pub requests: usize,
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub wall_s: f64,
+    /// fraction of completions inside BOTH SLO targets
+    pub slo_attainment: f64,
+    /// tokens of SLO-met completions over wall time
+    pub goodput_tokens_per_sec: f64,
+    /// `[p50, p90, p99]`, seconds
+    pub latency_s: [f64; 3],
+    /// `[p50, p90, p99]`, seconds
+    pub ttft_s: [f64; 3],
+    /// cold-start records only: packed-checkpoint load → engine build →
+    /// first generated token, REAL wall seconds (omitted otherwise)
+    pub cold_start_s: Option<f64>,
+    /// fleet records only: this tenant's fleet p99 latency over its solo
+    /// p99 — the isolation ratio (omitted otherwise)
+    pub p99_vs_solo: Option<f64>,
+}
+
+impl DeployRecord {
+    /// Build a record from a fleet/solo [`TenantReport`]. `cold_start_s`
+    /// and `p99_vs_solo` start `None`; the bench fills whichever its
+    /// deploy mode defines.
+    pub fn from_tenant(
+        bench: &str,
+        deploy: &str,
+        method: &str,
+        backend: &str,
+        tenants: usize,
+        t: &TenantReport,
+    ) -> DeployRecord {
+        DeployRecord {
+            bench: bench.to_string(),
+            deploy: deploy.to_string(),
+            method: method.to_string(),
+            backend: backend.to_string(),
+            tenant: t.name.clone(),
+            tenants,
+            quota: t.quota,
+            slo_latency_s: t.slo_latency_s,
+            slo_ttft_s: t.slo_ttft_s,
+            requests: t.requests,
+            completed: t.completions.len(),
+            generated_tokens: t.generated_tokens,
+            wall_s: t.wall_s,
+            slo_attainment: t.slo_attainment,
+            goodput_tokens_per_sec: t.goodput_tokens_per_sec,
+            latency_s: t.latency_s,
+            ttft_s: t.ttft_s,
+            cold_start_s: None,
+            p99_vs_solo: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("bench", Json::str(&self.bench)),
+            ("deploy", Json::str(&self.deploy)),
+            ("method", Json::str(&self.method)),
+            ("backend", Json::str(&self.backend)),
+            ("tenant", Json::str(&self.tenant)),
+            ("tenants", Json::num(self.tenants as f64)),
+            ("quota", Json::num(self.quota as f64)),
+            ("slo_latency_s", Json::num(self.slo_latency_s)),
+            ("slo_ttft_s", Json::num(self.slo_ttft_s)),
+            ("requests", Json::num(self.requests as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("generated_tokens", Json::num(self.generated_tokens as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("slo_attainment", Json::num(self.slo_attainment)),
+            ("goodput_tokens_per_sec", Json::num(self.goodput_tokens_per_sec)),
+            ("latency_p50_p90_p99_s", Json::f64s(&self.latency_s)),
+            ("ttft_p50_p90_p99_s", Json::f64s(&self.ttft_s)),
+        ];
+        if let Some(s) = self.cold_start_s {
+            pairs.push(("cold_start_s", Json::num(s)));
+        }
+        if let Some(r) = self.p99_vs_solo {
+            pairs.push(("p99_vs_solo", Json::num(r)));
+        }
+        Json::from_pairs(pairs)
+    }
+
+    /// Write `{bench}_{tenant}_{method}_{backend}_{deploy}.json` into
+    /// `dir` (created if missing); returns the path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(format!(
+            "{}_{}_{}_{}_{}.json",
+            self.bench, self.tenant, self.method, self.backend, self.deploy
         ));
         std::fs::write(&path, self.to_json().to_string_pretty())
             .with_context(|| format!("writing {}", path.display()))?;
@@ -383,5 +531,82 @@ mod tests {
         rec2.concurrency_vs_dense = Some(8.0);
         let j2 = Json::parse(&rec2.to_json().to_string()).unwrap();
         assert_eq!(j2.req("concurrency_vs_dense").unwrap().as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn mixed_poisson_remaps_ids_per_tenant() {
+        let base = SynthOptions {
+            n: 6,
+            vocab: 32,
+            prompt_len: 3,
+            max_new_tokens: 4,
+            vary_lengths: false,
+            rate: 50.0,
+            stop_token: None,
+            seed: 1,
+            shared_prefix_len: 0,
+        };
+        let traces = synth_mixed_poisson(&[
+            base.clone(),
+            SynthOptions { rate: 500.0, seed: 2, ..base.clone() },
+        ]);
+        assert_eq!(traces.len(), 2);
+        let mut ids = std::collections::BTreeSet::new();
+        for (i, trace) in traces.iter().enumerate() {
+            assert_eq!(trace.len(), 6);
+            for r in trace {
+                assert_eq!(r.id >> 32, i as u64, "tenant tag in the high bits");
+                assert!(ids.insert(r.id), "ids must be fleet-unique");
+            }
+        }
+        // tenant 0's stream is byte-identical to a plain synth at the
+        // same seed, modulo the id tag
+        let plain = synth_requests(&base);
+        for (a, b) in traces[0].iter().zip(&plain) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.id, b.id);
+        }
+    }
+
+    #[test]
+    fn deploy_record_json_has_the_artifact_schema() {
+        let t = TenantReport {
+            name: "acme".to_string(),
+            quota: 4,
+            slo_latency_s: 2.0,
+            slo_ttft_s: 1.0,
+            requests: 16,
+            completions: Vec::new(),
+            generated_tokens: 128,
+            decode_steps: 40,
+            busy_s: 0.5,
+            wall_s: 1.0,
+            latency_s: [0.1, 0.2, 0.3],
+            ttft_s: [0.05, 0.1, 0.15],
+            slo_attainment: 0.875,
+            goodput_tokens_per_sec: 112.0,
+        };
+        let rec = DeployRecord::from_tenant("fig9_deploy", "fleet", "quartet", "scalar", 2, &t);
+        let j = Json::parse(&rec.to_json().to_string()).unwrap();
+        assert_eq!(j.req("deploy").unwrap().as_str(), Some("fleet"));
+        assert_eq!(j.req("tenant").unwrap().as_str(), Some("acme"));
+        assert_eq!(j.req("tenants").unwrap().as_usize(), Some(2));
+        assert_eq!(j.req("quota").unwrap().as_usize(), Some(4));
+        assert_eq!(j.req("slo_attainment").unwrap().as_f64(), Some(0.875));
+        assert_eq!(j.req("goodput_tokens_per_sec").unwrap().as_f64(), Some(112.0));
+        assert_eq!(
+            j.req("latency_p50_p90_p99_s").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        // optional fields are emitted only when set
+        assert!(j.get("cold_start_s").is_none());
+        assert!(j.get("p99_vs_solo").is_none());
+        let mut rec2 = rec;
+        rec2.cold_start_s = Some(0.25);
+        rec2.p99_vs_solo = Some(1.5);
+        let j2 = Json::parse(&rec2.to_json().to_string()).unwrap();
+        assert_eq!(j2.req("cold_start_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j2.req("p99_vs_solo").unwrap().as_f64(), Some(1.5));
     }
 }

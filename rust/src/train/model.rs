@@ -213,9 +213,15 @@ impl MlpLm {
                 .collect()
         };
         let tok_emb = f32s(j.req("tok_emb")?, "tok_emb")?;
-        if tok_emb.len() != cfg.vocab * cfg.d_emb {
-            bail!("tok_emb has {} values, config wants {}", tok_emb.len(),
-                  cfg.vocab * cfg.d_emb);
+        let want_emb = cfg.vocab.checked_mul(cfg.d_emb).ok_or_else(|| {
+            anyhow!(
+                "embedding shape {}x{} overflows usize — corrupt or hostile dims",
+                cfg.vocab,
+                cfg.d_emb
+            )
+        })?;
+        if tok_emb.len() != want_emb {
+            bail!("tok_emb has {} values, config wants {}", tok_emb.len(), want_emb);
         }
         let raw = j.req("layers")?.as_arr().ok_or_else(|| anyhow!("layers not an array"))?;
         let dims = cfg.layer_dims();
@@ -225,7 +231,10 @@ impl MlpLm {
         let mut layers = Vec::with_capacity(dims.len());
         for (li, ((o, i), v)) in dims.into_iter().zip(raw).enumerate() {
             let w = f32s(v, "layer weight")?;
-            if w.len() != o * i {
+            let want = o.checked_mul(i).ok_or_else(|| {
+                anyhow!("layer {li} shape {o}x{i} overflows usize — corrupt or hostile dims")
+            })?;
+            if w.len() != want {
                 bail!("layer {li} has {} values, wants {}x{}", w.len(), o, i);
             }
             layers.push(QuantLinear::from_weights(o, i, w));
@@ -397,5 +406,23 @@ mod tests {
         std::fs::write(&path, bad).unwrap();
         assert!(MlpLm::load(&path).is_err());
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn from_json_rejects_overflowing_dims() {
+        // vocab * d_emb == 2^64: a hostile header must die in checked_mul
+        // with a descriptive error, never wrap and "pass" the shape check
+        let j = Json::from_pairs(vec![
+            ("kind", Json::str("native-mlp-lm")),
+            ("method", Json::str("quartet")),
+            ("vocab", Json::num((1u64 << 59) as f64)),
+            ("d_emb", Json::num(32.0)),
+            ("d_hidden", Json::num(64.0)),
+            ("n_hidden", Json::num(1.0)),
+            ("tok_emb", Json::f32s(&[0.0; 4])),
+            ("layers", Json::array(std::iter::empty())),
+        ]);
+        let err = MlpLm::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("overflows"), "got: {err}");
     }
 }

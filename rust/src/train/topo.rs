@@ -26,7 +26,7 @@
 //! The dist invariant therefore generalizes: loss curves are bit-identical
 //! at any `(workers, tp, pp)` placement of a fixed logical configuration
 //! `(seed, shards, ts, wire)`. All SR draws are keyed by
-//! [`fold_salt`]`(seed, step, shard, site-label)` — never by thread or
+//! `fold_salt(seed, step, shard, site-label)` — never by thread or
 //! stage identity — with site labels offset by [`TOPO_SALT_OFFSET`] so
 //! they cannot collide with the [`GradReducer`] tensor ids.
 //!

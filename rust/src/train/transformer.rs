@@ -536,8 +536,15 @@ impl TransformerLm {
             }
             Ok(out)
         };
+        let dim2 = |a: usize, b: usize, what: &str| -> Result<usize> {
+            a.checked_mul(b).ok_or_else(|| {
+                anyhow!("{what} shape {a}x{b} overflows usize — corrupt or hostile dims")
+            })
+        };
         let d = cfg.d_model;
-        let tok_emb = f32s(j.req("tok_emb")?, "tok_emb", cfg.vocab * d)?;
+        let dd = dim2(d, d, "attention weight")?;
+        let ffd = dim2(cfg.d_ff, d, "mlp weight")?;
+        let tok_emb = f32s(j.req("tok_emb")?, "tok_emb", dim2(cfg.vocab, d, "tok_emb")?)?;
         let final_norm = f32s(j.req("final_norm")?, "final_norm", d)?;
         let raw = j
             .req("blocks")?
@@ -551,25 +558,25 @@ impl TransformerLm {
             let ctx = |f: &str| format!("block {li} {f}");
             blocks.push(TransformerBlock {
                 attn_norm: f32s(bj.req("attn_norm")?, &ctx("attn_norm"), d)?,
-                wq: QuantLinear::from_weights(d, d, f32s(bj.req("wq")?, &ctx("wq"), d * d)?),
-                wk: QuantLinear::from_weights(d, d, f32s(bj.req("wk")?, &ctx("wk"), d * d)?),
-                wv: QuantLinear::from_weights(d, d, f32s(bj.req("wv")?, &ctx("wv"), d * d)?),
-                wo: QuantLinear::from_weights(d, d, f32s(bj.req("wo")?, &ctx("wo"), d * d)?),
+                wq: QuantLinear::from_weights(d, d, f32s(bj.req("wq")?, &ctx("wq"), dd)?),
+                wk: QuantLinear::from_weights(d, d, f32s(bj.req("wk")?, &ctx("wk"), dd)?),
+                wv: QuantLinear::from_weights(d, d, f32s(bj.req("wv")?, &ctx("wv"), dd)?),
+                wo: QuantLinear::from_weights(d, d, f32s(bj.req("wo")?, &ctx("wo"), dd)?),
                 mlp_norm: f32s(bj.req("mlp_norm")?, &ctx("mlp_norm"), d)?,
                 w_gate: QuantLinear::from_weights(
                     cfg.d_ff,
                     d,
-                    f32s(bj.req("w_gate")?, &ctx("w_gate"), cfg.d_ff * d)?,
+                    f32s(bj.req("w_gate")?, &ctx("w_gate"), ffd)?,
                 ),
                 w_up: QuantLinear::from_weights(
                     cfg.d_ff,
                     d,
-                    f32s(bj.req("w_up")?, &ctx("w_up"), cfg.d_ff * d)?,
+                    f32s(bj.req("w_up")?, &ctx("w_up"), ffd)?,
                 ),
                 w_down: QuantLinear::from_weights(
                     d,
                     cfg.d_ff,
-                    f32s(bj.req("w_down")?, &ctx("w_down"), d * cfg.d_ff)?,
+                    f32s(bj.req("w_down")?, &ctx("w_down"), ffd)?,
                 ),
             });
         }
@@ -1023,5 +1030,23 @@ mod tests {
         mlp.save(&path2).unwrap();
         assert!(TransformerLm::load(&path2).is_err());
         std::fs::remove_file(&path2).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_overflowing_dims() {
+        // vocab * d_model == 2^64: the hostile header must die in
+        // checked_mul, never wrap to a small "expected" length
+        let m = TransformerLm::init(tiny_cfg(TrainMethod::F32), 21).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("native_tf_overflow_{}.json", std::process::id()));
+        m.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let huge = (1u64 << 59).to_string();
+        let bad = text.replace("\"vocab\":32", &format!("\"vocab\":{huge}"));
+        assert_ne!(bad, text, "fixture vocab moved; update the replace");
+        std::fs::write(&path, bad).unwrap();
+        let err = format!("{:#}", TransformerLm::load(&path).unwrap_err());
+        std::fs::remove_file(&path).unwrap();
+        assert!(err.contains("overflows"), "got: {err}");
     }
 }

@@ -1,0 +1,234 @@
+//! End-to-end suite for the binary packed-MXFP4 checkpoint path and the
+//! multi-tenant fleet on top of it:
+//!
+//! * JSON -> binary conversion round-trips — the binary path serves
+//!   bit-identical token streams to the JSON path across every method and
+//!   backend, with ZERO prep passes (the deploy-once invariant: all
+//!   quantization happened at convert time, the loader only slices);
+//! * converter determinism — converting the same JSON twice yields
+//!   byte-identical files, and re-serializing a loaded cache reproduces
+//!   the file image exactly;
+//! * malformed-input rejection — truncation, bad magic, and payload bit
+//!   flips all fail loudly with descriptive errors, never a panic or a
+//!   silently wrong model;
+//! * co-tenancy isolation — a tenant served from a binary checkpoint
+//!   inside a `ServeFleet` emits the same token streams as a solo engine
+//!   (scheduling shifts wall time, never outputs).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use quartet::kernels::ScalarBackend;
+use quartet::serve::{
+    ckpt, synth_requests, GenRequest, PackedCheckpoint, PackedWeightCache, Sampling, ServeEngine,
+    ServeFleet, ServeMethod, SynthOptions, TenantSpec,
+};
+use quartet::train::{
+    MlpLm, ModelConfig, NativeModel, TrainMethod, TransformerConfig, TransformerLm,
+};
+
+const VOCAB: usize = 128;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("quartet_ckpt_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn save_mlp(dir: &Path) -> PathBuf {
+    let m = MlpLm::init(
+        ModelConfig {
+            vocab: VOCAB,
+            d_emb: 16,
+            d_hidden: 64,
+            n_hidden: 1,
+            method: TrainMethod::Quartet,
+        },
+        7,
+    )
+    .unwrap();
+    let p = dir.join("mlp.json");
+    m.save(&p).unwrap();
+    p
+}
+
+fn save_tf(dir: &Path) -> PathBuf {
+    let m = TransformerLm::init(
+        TransformerConfig {
+            vocab: VOCAB,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 32,
+            seq: 8,
+            method: TrainMethod::Quartet,
+        },
+        23,
+    )
+    .unwrap();
+    let p = dir.join("tf.json");
+    m.save(&p).unwrap();
+    p
+}
+
+fn requests(n: usize, seed: u64) -> Vec<GenRequest> {
+    synth_requests(&SynthOptions {
+        n,
+        vocab: VOCAB,
+        prompt_len: 4,
+        max_new_tokens: 6,
+        vary_lengths: true,
+        rate: 0.0,
+        stop_token: None,
+        seed,
+        shared_prefix_len: 0,
+    })
+}
+
+/// id -> generated tokens after serving `n` synthetic requests.
+fn streams(
+    cache: Arc<PackedWeightCache>,
+    backend: &str,
+    max_batch: usize,
+) -> BTreeMap<u64, Vec<i32>> {
+    let be = quartet::kernels::backend_from_name(backend).unwrap();
+    let mut eng = ServeEngine::new(cache, be, max_batch, Sampling::greedy());
+    for r in requests(6, 3) {
+        eng.submit(r).unwrap();
+    }
+    let report = eng.run(None).unwrap();
+    report
+        .completions
+        .iter()
+        .map(|c| (c.id, c.tokens.clone()))
+        .collect()
+}
+
+#[test]
+fn binary_path_matches_json_path_with_zero_prep() {
+    let dir = scratch("roundtrip");
+    for json in [save_mlp(&dir), save_tf(&dir)] {
+        for method in ServeMethod::ALL {
+            let bin = dir.join(format!(
+                "{}_{}.qckpt",
+                json.file_stem().unwrap().to_string_lossy(),
+                method.name()
+            ));
+            ckpt::convert(&json, &bin, Some(method), &ScalarBackend).unwrap();
+            let native = NativeModel::load(&json).unwrap();
+            let jcache = PackedWeightCache::build_model(&native, method, &ScalarBackend);
+            let bcache = PackedWeightCache::load_packed(&bin, &ScalarBackend).unwrap();
+            assert_eq!(bcache.method(), method);
+            assert_eq!(bcache.prep_passes(), 0, "loading a packed checkpoint must not prep");
+            let a = streams(jcache, "scalar", 4);
+            let b = streams(bcache.clone(), "scalar", 4);
+            assert_eq!(a, b, "binary vs JSON streams diverged ({method:?})");
+            // backend + batching invariance of the binary path
+            let c = streams(bcache.clone(), "parallel", 2);
+            assert_eq!(a, c, "binary path not backend-invariant ({method:?})");
+            assert_eq!(bcache.prep_passes(), 0, "serving re-prepped packed weights");
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn converter_is_idempotent_and_deterministic() {
+    let dir = scratch("idem");
+    let json = save_mlp(&dir);
+    let (a, b) = (dir.join("a.qckpt"), dir.join("b.qckpt"));
+    ckpt::convert(&json, &a, Some(ServeMethod::Quartet), &ScalarBackend).unwrap();
+    ckpt::convert(&json, &b, Some(ServeMethod::Quartet), &ScalarBackend).unwrap();
+    let (ba, bb) = (std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+    assert_eq!(ba, bb, "two converts of the same JSON produced different bytes");
+    // a loaded cache re-serializes to the exact file image: nothing in the
+    // format depends on load-time state
+    let cache = PackedWeightCache::load_packed(&a, &ScalarBackend).unwrap();
+    assert_eq!(cache.to_packed_bytes(), ba, "re-serialization drifted from the file");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn malformed_binary_checkpoints_are_rejected_loudly() {
+    let dir = scratch("bad");
+    let json = save_mlp(&dir);
+    let bin = dir.join("good.qckpt");
+    ckpt::convert(&json, &bin, Some(ServeMethod::Quartet), &ScalarBackend).unwrap();
+    let bytes = std::fs::read(&bin).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // sanity: the pristine image parses
+    PackedCheckpoint::from_bytes(bytes.clone()).unwrap();
+
+    // truncation — both inside the header and inside the last payload
+    let err = PackedCheckpoint::from_bytes(bytes[..40].to_vec()).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated"), "got: {err:#}");
+    assert!(PackedCheckpoint::from_bytes(bytes[..bytes.len() - 3].to_vec()).is_err());
+
+    // bad magic
+    let mut magic = bytes.clone();
+    magic[0] ^= 0xFF;
+    let err = PackedCheckpoint::from_bytes(magic).unwrap_err();
+    assert!(format!("{err:#}").contains("magic"), "got: {err:#}");
+
+    // a single flipped payload bit must trip a section CRC
+    let mut flip = bytes.clone();
+    let last = flip.len() - 1;
+    flip[last] ^= 0x01;
+    let err = PackedCheckpoint::from_bytes(flip).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "got: {err:#}");
+
+    // a corrupted header field must trip the header CRC
+    let mut hdr = bytes.clone();
+    hdr[16] ^= 0x01; // method code byte
+    let err = PackedCheckpoint::from_bytes(hdr).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "got: {err:#}");
+}
+
+#[test]
+fn fleet_cotenancy_preserves_binary_path_streams() {
+    let dir = scratch("fleet");
+    let (mlp_json, tf_json) = (save_mlp(&dir), save_tf(&dir));
+    let (mlp_bin, tf_bin) = (dir.join("mlp.qckpt"), dir.join("tf.qckpt"));
+    ckpt::convert(&mlp_json, &mlp_bin, Some(ServeMethod::Quartet), &ScalarBackend).unwrap();
+    ckpt::convert(&tf_json, &tf_bin, Some(ServeMethod::Quartet), &ScalarBackend).unwrap();
+    let mlp_cache = PackedWeightCache::load_packed(&mlp_bin, &ScalarBackend).unwrap();
+    let tf_cache = PackedWeightCache::load_packed(&tf_bin, &ScalarBackend).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    let solo = streams(mlp_cache.clone(), "scalar", 4);
+
+    let spec = |name: &str| TenantSpec {
+        name: name.to_string(),
+        quota: 4,
+        slo_latency_s: 60.0,
+        slo_ttft_s: 60.0,
+        sampling: Sampling::greedy(),
+    };
+    let mut fleet = ServeFleet::new();
+    let t0 = fleet.add_tenant(
+        spec("mlp"),
+        mlp_cache,
+        quartet::kernels::backend_from_name("scalar").unwrap(),
+    );
+    let t1 = fleet.add_tenant(
+        spec("tf"),
+        tf_cache,
+        quartet::kernels::backend_from_name("scalar").unwrap(),
+    );
+    for r in requests(6, 3) {
+        fleet.submit(t0, r).unwrap();
+    }
+    for r in requests(4, 99) {
+        fleet.submit(t1, r).unwrap();
+    }
+    let report = fleet.run(None).unwrap();
+    assert_eq!(report.tenants[t1].completions.len(), 4);
+    let fleet_streams: BTreeMap<u64, Vec<i32>> = report.tenants[t0]
+        .completions
+        .iter()
+        .map(|c| (c.id, c.tokens.clone()))
+        .collect();
+    assert_eq!(solo, fleet_streams, "co-tenancy changed a tenant's token streams");
+}
